@@ -1,0 +1,120 @@
+//! Micro-benchmarks of the coordinator hot paths (§Perf, L3):
+//! artifact execution round-trip, host tensor ops in the per-cell loop,
+//! all-reduce, BLEU, BPE encoding, and beam-search decode.
+//!
+//! Run: `cargo bench --bench micro` (needs `make artifacts`).
+
+use hybridnmt::config::{DataConfig, Experiment, HwConfig, Strategy, TrainConfig};
+use hybridnmt::decode::{BeamConfig, Decoder, LengthNorm};
+use hybridnmt::metrics::corpus_bleu;
+use hybridnmt::report::{make_batcher, make_corpus};
+use hybridnmt::runtime::{keys, Arg, Engine};
+use hybridnmt::tensor::Tensor;
+use hybridnmt::train::{init_params, Trainer};
+use std::time::Instant;
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let unit = if per < 1e-3 {
+        format!("{:.2} µs", per * 1e6)
+    } else if per < 1.0 {
+        format!("{:.2} ms", per * 1e3)
+    } else {
+        format!("{:.2} s ", per)
+    };
+    println!("  {name:<44} {unit:>12} /iter  ({iters} iters)");
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts", "tiny")?;
+    let d = engine.dims().clone();
+    let exp = Experiment {
+        model: d.clone(),
+        strategy: Strategy::Hybrid,
+        hw: HwConfig::default(),
+        train: TrainConfig::default(),
+        data: DataConfig::wmt14_sim(1200),
+        artifacts_dir: "artifacts".into(),
+    };
+    let params = init_params(&exp, false);
+    println!("L3 micro benches (tiny artifact set):");
+
+    // --- PJRT round trip: the innermost hot path -------------------------
+    let w = &params["enc_l0_W"];
+    let bias = &params["enc_l0_b"];
+    let x = Tensor::zeros(&[d.batch, d.d]);
+    let h = Tensor::zeros(&[d.batch, d.h]);
+    let key = keys::lstm_cell_fwd(d.d, d.batch);
+    engine.exec(&key, &[Arg::F(w), Arg::F(bias), Arg::F(&x), Arg::F(&h), Arg::F(&h)])?;
+    bench("engine.exec lstm_cell_fwd (round trip)", 200, || {
+        engine
+            .exec(&key, &[Arg::F(w), Arg::F(bias), Arg::F(&x), Arg::F(&h), Arg::F(&h)])
+            .unwrap();
+    });
+
+    // --- host tensor ops in the per-cell loop ----------------------------
+    let big = Tensor::zeros(&[d.batch, d.max_src, d.h]);
+    bench("Tensor::time_slice [B,M,h]", 2000, || {
+        std::hint::black_box(big.time_slice(3));
+    });
+    let rows: Vec<Tensor> = (0..d.max_src).map(|_| Tensor::zeros(&[d.batch, d.h])).collect();
+    bench("Tensor::stack_time M x [B,h]", 2000, || {
+        let refs: Vec<&Tensor> = rows.iter().collect();
+        std::hint::black_box(Tensor::stack_time(&refs));
+    });
+    let mut acc = Tensor::zeros(&[d.vocab, d.d]);
+    let g = Tensor::zeros(&[d.vocab, d.d]);
+    bench("Tensor::add_assign [V,d] (grad accumulate)", 5000, || {
+        acc.add_assign(&g);
+    });
+
+    // --- one full training step ------------------------------------------
+    let corpus = make_corpus(&exp.data, &exp.model);
+    let mut batcher = make_batcher(&exp, &corpus);
+    let mut trainer = Trainer::new(&engine, &exp)?;
+    let batch = batcher.next_train();
+    bench("Trainer::train_step (hybrid, tiny)", 10, || {
+        trainer.train_step(&batch).unwrap();
+    });
+
+    // --- decode ------------------------------------------------------------
+    let decoder = Decoder::new(&engine, &params, false);
+    let cfg = BeamConfig { beam: 3, max_len: 12, norm: LengthNorm::Marian { alpha: 1.0 } };
+    let src: Vec<i32> = (4..12).collect();
+    bench("Decoder::translate beam=3", 10, || {
+        decoder.translate(&src, &cfg).unwrap();
+    });
+
+    // --- metrics / data --------------------------------------------------
+    let pairs: Vec<(String, String)> = batcher
+        .test
+        .iter()
+        .take(100)
+        .map(|e| (batcher.vocab.decode(&e.src), batcher.vocab.decode(&e.tgt)))
+        .collect();
+    bench("corpus_bleu over 100 pairs", 200, || {
+        std::hint::black_box(corpus_bleu(&pairs));
+    });
+    bench("BPE encode sentence", 2000, || {
+        std::hint::black_box(batcher.bpe.encode("mizo katelu bado pesu rilo"));
+    });
+    bench("Batcher::next_train (pad + mask)", 500, || {
+        std::hint::black_box(batcher.next_train());
+    });
+
+    let st = engine.stats();
+    println!(
+        "\nengine totals: {} executions, exec {:.2}s, convert {:.2}s ({:.0} µs/exec round trip)",
+        st.executions,
+        st.exec_nanos as f64 / 1e9,
+        st.convert_nanos as f64 / 1e9,
+        (st.exec_nanos + st.convert_nanos) as f64 / 1e3 / st.executions as f64
+    );
+    Ok(())
+}

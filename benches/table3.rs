@@ -1,0 +1,61 @@
+//! Bench: regenerate paper Table 3 (training speed + scaling factors)
+//! and time the machinery that produces it (plan construction + DES).
+//!
+//! Hand-rolled harness (`harness = false`; the offline build has no
+//! criterion): medians over repeated runs, same report format.
+//!
+//! Run: `cargo bench --bench table3`
+
+use hybridnmt::config::{HwConfig, ModelDims, Strategy};
+use hybridnmt::parallel::build_plan;
+use hybridnmt::report;
+use hybridnmt::sim::simulate;
+use std::time::Instant;
+
+fn median_time(mut f: impl FnMut(), iters: usize) -> f64 {
+    let mut times: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.total_cmp(b));
+    times[times.len() / 2]
+}
+
+fn main() {
+    let hw = HwConfig::default();
+
+    // The deliverable: the table itself.
+    println!("{}", report::table3(&hw));
+
+    // Bench the planner + simulator per strategy (paper scale).
+    println!("planner + DES cost per strategy (median of 5, paper scale):");
+    for st in Strategy::ALL {
+        let dims = ModelDims::paper().with_batch(st.paper_batch());
+        let t_plan = median_time(
+            || {
+                let p = build_plan(&dims, st, hw.dp_host_staged);
+                std::hint::black_box(p.steps.len());
+            },
+            5,
+        );
+        let plan = build_plan(&dims, st, hw.dp_host_staged);
+        let t_sim = median_time(
+            || {
+                let r = simulate(&plan, &hw);
+                std::hint::black_box(r.makespan);
+            },
+            5,
+        );
+        println!(
+            "  {:<22} plan {:>8.2} ms ({:>5} steps)   sim {:>8.2} ms ({:>7.0} steps/s)",
+            st.label(),
+            t_plan * 1e3,
+            plan.steps.len(),
+            t_sim * 1e3,
+            plan.steps.len() as f64 / t_sim
+        );
+    }
+}

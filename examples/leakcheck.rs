@@ -1,0 +1,27 @@
+//! Debug: RSS growth per engine.exec (leak bisection).
+use hybridnmt::runtime::{keys, Arg, Engine};
+use hybridnmt::tensor::Tensor;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts", "small")?;
+    let d = engine.dims().clone();
+    let w = Tensor::zeros(&[d.d + d.h + d.h, 4 * d.h]);
+    let bias = Tensor::zeros(&[4 * d.h]);
+    let x = Tensor::zeros(&[d.batch, d.d + d.h]);
+    let h = Tensor::zeros(&[d.batch, d.h]);
+    let key = keys::lstm_cell_fwd(d.d + d.h, d.batch);
+    println!("start rss {:.1} MB", rss_mb());
+    for i in 0..2000 {
+        engine.exec(&key, &[Arg::F(&w), Arg::F(&bias), Arg::F(&x), Arg::F(&h), Arg::F(&h)])?;
+        if i % 500 == 499 {
+            println!("after {} execs: rss {:.1} MB", i + 1, rss_mb());
+        }
+    }
+    Ok(())
+}

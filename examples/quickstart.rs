@@ -1,0 +1,70 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Loads the `tiny` artifact set, builds the HybridNMT plan, runs a few
+//! real training steps on a synthetic corpus, shows the simulated
+//! 4-GPU timing, and decodes one sentence.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use hybridnmt::config::{DataConfig, Experiment, HwConfig, Strategy, TrainConfig};
+use hybridnmt::decode::{BeamConfig, Decoder, LengthNorm};
+use hybridnmt::report::{make_batcher, make_corpus};
+use hybridnmt::runtime::Engine;
+use hybridnmt::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The runtime: AOT-compiled HLO artifacts behind a PJRT client.
+    let engine = Engine::load("artifacts", "tiny")?;
+    println!(
+        "loaded `{}` artifact set: {} artifacts, {} params",
+        engine.dims().name,
+        engine.manifest.artifacts.len(),
+        engine.manifest.param_count.total
+    );
+
+    // 2. An experiment: model dims come from the manifest; strategy is
+    //    the paper's hybrid data-model parallelism.
+    let exp = Experiment {
+        model: engine.dims().clone(),
+        strategy: Strategy::Hybrid,
+        hw: HwConfig::default(),
+        train: TrainConfig { steps: 30, eval_interval: 10, ..Default::default() },
+        data: DataConfig::wmt14_sim(800),
+        artifacts_dir: "artifacts".into(),
+    };
+
+    // 3. Data: synthetic corpus -> BPE -> padded batches.
+    let corpus = make_corpus(&exp.data, &exp.model);
+    let mut batcher = make_batcher(&exp, &corpus);
+    println!(
+        "corpus `{}`: {} train batches, vocab {}",
+        corpus.name,
+        batcher.n_train_batches(),
+        batcher.vocab.len()
+    );
+
+    // 4. The trainer: one plan (task DAG), real numerics via PJRT,
+    //    simulated multi-GPU clock.
+    let mut trainer = Trainer::new(&engine, &exp)?;
+    println!(
+        "plan: {} steps; simulated step time {:.2} ms on a {}xV100 node",
+        trainer.plan.steps.len(),
+        trainer.step_sim.makespan * 1e3,
+        exp.hw.gpus
+    );
+    trainer.run(&mut batcher, |line| println!("{line}"))?;
+
+    // 5. Decode a test sentence with beam search.
+    let decoder = Decoder::new(&engine, &trainer.params, false);
+    let cfg = BeamConfig {
+        beam: 3,
+        max_len: decoder.max_len(),
+        norm: LengthNorm::Marian { alpha: 1.0 },
+    };
+    let example = &batcher.test[0];
+    let hyp = decoder.translate(&example.src, &cfg)?;
+    println!("SRC: {}", batcher.vocab.decode(&example.src));
+    println!("HYP: {}", batcher.vocab.decode(&hyp));
+    println!("REF: {}", batcher.vocab.decode(&example.tgt));
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Translation demo: trains a small HybridNMT model briefly, then walks
+//! through beam search settings (beam width, Marian vs GNMT
+//! normalization, coverage penalty) on a handful of test sentences —
+//! the qualitative counterpart of Table 4.
+//!
+//! Run: `cargo run --release --example translate_demo`
+
+use hybridnmt::config::{DataConfig, Experiment, HwConfig, Strategy, TrainConfig};
+use hybridnmt::decode::{BeamConfig, Decoder, LengthNorm};
+use hybridnmt::metrics::sentence_bleu;
+use hybridnmt::report::{make_batcher, make_corpus};
+use hybridnmt::runtime::Engine;
+use hybridnmt::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts", "small")?;
+    let exp = Experiment {
+        model: engine.dims().clone(),
+        strategy: Strategy::Hybrid,
+        hw: HwConfig::default(),
+        train: TrainConfig { steps: 150, eval_interval: 50, ..Default::default() },
+        data: DataConfig::wmt14_sim(3000),
+        artifacts_dir: "artifacts".into(),
+    };
+    let corpus = make_corpus(&exp.data, &exp.model);
+    let mut batcher = make_batcher(&exp, &corpus);
+    println!("training HybridNMT for {} steps ...", exp.train.steps);
+    let mut trainer = Trainer::new(&engine, &exp)?;
+    trainer.run(&mut batcher, |line| println!("{line}"))?;
+
+    let decoder = Decoder::new(&engine, &trainer.params, false);
+    let norms: [(&str, LengthNorm); 3] = [
+        ("marian a=1.0", LengthNorm::Marian { alpha: 1.0 }),
+        ("gnmt   a=1.0", LengthNorm::Gnmt { alpha: 1.0, beta: 0.0 }),
+        ("gnmt   a=0.2 cov=0.2", LengthNorm::Gnmt { alpha: 0.2, beta: 0.2 }),
+    ];
+    for e in batcher.test.iter().take(5) {
+        println!("\nSRC: {}", batcher.vocab.decode(&e.src));
+        let reference = batcher.vocab.decode(&e.tgt);
+        println!("REF: {reference}");
+        for beam in [1, 6, 12] {
+            for (label, norm) in norms {
+                let cfg = BeamConfig { beam, max_len: decoder.max_len(), norm };
+                let hyp = batcher.vocab.decode(&decoder.translate(&e.src, &cfg)?);
+                println!(
+                    "  beam {beam:>2} {label:<22} ({:5.1} sBLEU)  {hyp}",
+                    sentence_bleu(&hyp, &reference)
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT driver: lower every L2 stage function to HLO text + manifest.
+
+Run once at build time (``make artifacts``); rust loads the results and
+python is never on the training/request path.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` rust crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/load_hlo).
+
+Output layout:
+
+    artifacts/<config>/<key>.hlo.txt
+    artifacts/<config>/manifest.json   # dims + per-artifact I/O signatures
+
+Artifact keys encode the shape variant, e.g. ``lstm_cell_fwd.din32.b16``:
+the rust runtime resolves (semantic op, din, batch) -> executable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref  # noqa: F401  (imported for doc parity)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_table(cfg: model.ModelConfig):
+    """(key, fn, example_specs) for every artifact of one config."""
+    d, h, V = cfg.d, cfg.h, cfg.vocab
+    M, N = cfg.max_src, cfg.max_tgt
+    B, Bs, Bm = cfg.batch, cfg.shard, cfg.beam
+    train_batches = sorted({B, Bs})
+    all_batches = sorted({B, Bs, Bm})
+    dins = sorted({d, h, d + h})  # first layer / upper layers / input-feeding
+
+    table = []
+
+    for b in all_batches:
+        table.append((f"embed_fwd.b{b}", model.embed_fwd,
+                      [spec([V, d]), spec([b], I32)]))
+    for b in train_batches:
+        table.append((f"embed_bwd.b{b}",
+                      functools.partial(model.embed_bwd, vocab=V),
+                      [spec([b], I32), spec([b, d])]))
+
+    for din in dins:
+        cell_in = lambda b, din=din: [
+            spec([din + h, 4 * h]), spec([4 * h]),
+            spec([b, din]), spec([b, h]), spec([b, h]),
+        ]
+        for b in all_batches:
+            table.append((f"lstm_cell_fwd.din{din}.b{b}",
+                          model.lstm_cell_fwd, cell_in(b)))
+        for b in train_batches:
+            table.append((f"lstm_cell_bwd.din{din}.b{b}",
+                          model.lstm_cell_bwd,
+                          cell_in(b) + [spec([b, h]), spec([b, h])]))
+
+    attn_theta = [spec([h, h]), spec([2 * h, h]), spec([h, V]), spec([V])]
+    for b in train_batches:
+        table.append((f"attn_block.b{b}", model.attn_block,
+                      attn_theta + [spec([b, M, h]), spec([b, N, h]),
+                                    spec([b], I32), spec([b, N], I32),
+                                    spec([b, N])]))
+        step_in = attn_theta + [spec([b, M, h]), spec([b], I32),
+                                spec([b, h]), spec([b], I32), spec([b])]
+        table.append((f"attn_step_fwd.b{b}", model.attn_step_fwd, step_in))
+        table.append((f"attn_step_bwd.b{b}", model.attn_step_bwd,
+                      step_in + [spec([b, h])]))
+        # Split per-step attention: ctx on the IF critical path, out
+        # (the h x V projection + softmax) schedulable off it.
+        ctx_in = [spec([h, h]), spec([2 * h, h]), spec([b, M, h]),
+                  spec([b], I32), spec([b, h])]
+        table.append((f"attn_ctx_fwd.b{b}", model.attn_ctx_fwd, ctx_in))
+        table.append((f"attn_ctx_bwd.b{b}", model.attn_ctx_bwd,
+                      ctx_in + [spec([b, h])]))
+        out_in = [spec([h, V]), spec([V]), spec([b, h]),
+                  spec([b], I32), spec([b])]
+        table.append((f"attn_out_fwd.b{b}", model.attn_out_fwd, out_in))
+        table.append((f"attn_out_bwd.b{b}", model.attn_out_bwd, out_in))
+    for b in sorted({Bm, B}):
+        table.append((f"attn_step_logits.b{b}", model.attn_step_logits,
+                      attn_theta + [spec([b, M, h]), spec([b], I32),
+                                    spec([b, h])]))
+    return table
+
+
+def dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def lower_config(cfg: model.ModelConfig, outdir: str) -> dict:
+    cdir = os.path.join(outdir, cfg.name)
+    os.makedirs(cdir, exist_ok=True)
+    artifacts = {}
+    for key, fn, in_specs in artifact_table(cfg):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = key + ".hlo.txt"
+        with open(os.path.join(cdir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *in_specs)
+        outs = jax.tree_util.tree_leaves(out_tree)
+        artifacts[key] = {
+            "file": fname,
+            "inputs": [{"shape": list(s.shape), "dtype": dtype_name(s.dtype)}
+                       for s in in_specs],
+            "outputs": [{"shape": list(o.shape), "dtype": dtype_name(o.dtype)}
+                        for o in outs],
+        }
+    manifest = {
+        "config": {
+            "name": cfg.name, "d": cfg.d, "h": cfg.h, "layers": cfg.layers,
+            "vocab": cfg.vocab, "batch": cfg.batch, "gpus": cfg.gpus,
+            "shard": cfg.shard, "max_src": cfg.max_src,
+            "max_tgt": cfg.max_tgt, "beam": cfg.beam,
+        },
+        "param_count": model.param_count(cfg),
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(cdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--configs", nargs="*", default=sorted(model.CONFIGS))
+    args = ap.parse_args()
+    for name in args.configs:
+        cfg = model.CONFIGS[name]
+        manifest = lower_config(cfg, args.outdir)
+        n = len(manifest["artifacts"])
+        print(f"[aot] {name}: {n} artifacts -> {args.outdir}/{name}/")
+    # Stamp for make's dependency tracking.
+    with open(os.path.join(args.outdir, ".stamp"), "w") as f:
+        f.write(",".join(args.configs) + "\n")
+
+
+if __name__ == "__main__":
+    main()

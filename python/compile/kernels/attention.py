@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: the attention-softmax hot spot (paper eqs. 1-3).
+
+HybridNMT's enabling observation is that with input-feeding removed, the
+attention scores / context vectors for *all* decoder steps can be
+computed at once after the wavefront. This kernel is that computation:
+
+    scores = (H Wa) S^T + mask ;  alpha = softmax(scores) ;  C = alpha S
+
+TPU mapping (DESIGN.md #Hardware-Adaptation): the paper keeps all hidden
+states on one GPU (Fig. 3, "GPU 3 stores the hidden states") and runs
+batched cuBLAS GEMMs. On TPU we tile the *decoder* axis with the Pallas
+grid: each grid step loads one (batch, N-block) slab of H into VMEM
+while S[b], Wa and mask[b] stay resident across the inner grid axis --
+the BlockSpec index maps below are the HBM<->VMEM schedule that the
+threadblock decomposition played on the GPU. Both GEMMs
+([nblk,h]x[h,h] -> MXU, [nblk,M]x[M,h] -> MXU) and the masked softmax
+(VPU) run on the same VMEM-resident slab.
+
+``interpret=True`` is mandatory on the CPU PJRT plugin.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(wa_ref, s_ref, h_ref, m_ref, c_out):
+    """One (batch b, decoder block n) tile of attention."""
+    h = h_ref[0]          # [nblk, h]
+    s = s_ref[0]          # [M, h]  (resident across the n-grid axis)
+    wa = wa_ref[...]      # [h, h]
+    mask = m_ref[0]       # [M]
+    # MXU GEMM 1: bilinear score left product, then scores against S^T.
+    scores = (h @ wa) @ s.T + mask[None, :]          # [nblk, M]
+    # VPU: numerically-stable masked softmax on the resident tile.
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    alpha = e / jnp.sum(e, axis=-1, keepdims=True)
+    # MXU GEMM 2: context vectors, reusing the already-resident S.
+    c_out[0] = alpha @ s                              # [nblk, h]
+
+
+def attention_core(Wa, S, H, mask, *, n_block=None, interpret=True):
+    """Pallas attention with the same semantics as ref.attention_core.
+
+    Wa: [h,h]; S: [B,M,h]; H: [B,N,h]; mask: [B,M] additive.
+    Returns C: [B,N,h]. ``n_block`` tiles the decoder axis (must divide N).
+    """
+    B, M, h = S.shape
+    N = H.shape[1]
+    if n_block is None:
+        n_block = N
+    assert N % n_block == 0, (N, n_block)
+    grid = (B, N // n_block)
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((h, h), lambda b, n: (0, 0)),          # Wa resident
+            pl.BlockSpec((1, M, h), lambda b, n: (b, 0, 0)),    # S[b] resident over n
+            pl.BlockSpec((1, n_block, h), lambda b, n: (b, n, 0)),
+            pl.BlockSpec((1, M), lambda b, n: (b, 0)),          # mask[b]
+        ],
+        out_specs=pl.BlockSpec((1, n_block, h), lambda b, n: (b, n, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, h), S.dtype),
+        interpret=interpret,
+    )(Wa, S, H, mask)
+
+
+def vmem_bytes(B, M, N, h, n_block, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step (perf model, see §Perf).
+
+    Counted: Wa + S[b] + H-block + mask[b] + scores tile + C-block.
+    """
+    return dtype_bytes * (
+        h * h            # Wa
+        + M * h          # S[b]
+        + n_block * h    # H block
+        + M              # mask
+        + n_block * M    # scores/alpha tile
+        + n_block * h    # C out block
+    )
+
+
+def mxu_flops(B, M, N, h):
+    """Total MXU FLOPs for the block: 2 GEMMs per decoder position."""
+    return 2 * B * N * h * h + 2 * B * N * M * h + 2 * B * N * M * h

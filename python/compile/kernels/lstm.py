@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: fused LSTM cell.
+
+One (layer, timestep) wavefront cell = one kernel: the fused
+``[x ; h] @ W`` GEMM plus the gate nonlinearities and state update in a
+single Pallas invocation, so the per-cell critical path the rust
+scheduler reasons about is one MXU GEMM + a VPU epilogue rather than
+four separate launches.
+
+TPU mapping (see DESIGN.md #Hardware-Adaptation): the paper's V100 runs
+this as a cuDNN fused cell; on TPU the GEMM ``[B, din+h] x [din+h, 4h]``
+is the MXU op and the sigmoid/tanh epilogue is VPU work on the
+VMEM-resident ``[B, 4h]`` gate block. At paper scale
+(B<=224, h=1024, din<=1536) the operands are
+x:[224,1536] + W:[2560,4096] + gates:[224,4096] ~= 20 MiB fp32 -- within
+a v4/v5 VMEM budget when W is tiled over the 4h axis; we keep a single
+block here because correctness runs under ``interpret=True`` on CPU.
+
+Kernels MUST be lowered with ``interpret=True``: real TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(w_ref, b_ref, x_ref, h_ref, c_ref, h_out, c_out, *, din):
+    """Fused gate GEMM + epilogue for one cell step."""
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    # MXU: one fused GEMM over the concatenated [x; h] input.
+    gates = x @ w[:din] + h @ w[din:] + b
+    hdim = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, 0 * hdim : 1 * hdim])
+    f = jax.nn.sigmoid(gates[:, 1 * hdim : 2 * hdim])
+    g = jnp.tanh(gates[:, 2 * hdim : 3 * hdim])
+    o = jax.nn.sigmoid(gates[:, 3 * hdim : 4 * hdim])
+    c_new = f * c + i * g
+    h_out[...] = o * jnp.tanh(c_new)
+    c_out[...] = c_new
+
+
+def lstm_cell(W, b, x, h, c, *, interpret=True):
+    """Pallas LSTM cell with the same signature/semantics as ref.lstm_cell.
+
+    W: [din+h, 4h], b: [4h], x: [B, din], h/c: [B, h] -> (h', c').
+    """
+    B, din = x.shape
+    hdim = h.shape[-1]
+    kernel = functools.partial(_lstm_kernel, din=din)
+    out_shape = (
+        jax.ShapeDtypeStruct((B, hdim), x.dtype),
+        jax.ShapeDtypeStruct((B, hdim), x.dtype),
+    )
+    return pl.pallas_call(kernel, out_shape=out_shape, interpret=interpret)(
+        W, b, x, h, c
+    )

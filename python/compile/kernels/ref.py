@@ -1,0 +1,153 @@
+"""Pure-jnp reference oracle for every kernel in the compile stack.
+
+These functions are the *semantic ground truth*: the Pallas kernels in
+``lstm.py`` / ``attention.py`` are tested against them (pytest +
+hypothesis), and the backward-pass artifacts are derived from them with
+``jax.vjp`` (recompute-style -- mathematically identical to differentiating
+the Pallas forward, which matches the oracle to float tolerance).
+
+Conventions
+-----------
+* LSTM gate order is ``i, f, g, o`` in the fused ``4h`` dimension.
+* The fused weight ``W`` has shape ``[din + h, 4h]``: rows ``[:din]``
+  multiply the input ``x``, rows ``[din:]`` multiply the hidden state.
+* Attention is Luong *global* attention with the "general" score
+  ``score(H_i, S_j) = H_i^T  Wa  S_j`` (paper eq. 2).
+* Source padding is expressed as an additive mask ``[B, M]`` holding
+  ``0`` on valid positions and a large negative value on padding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def lstm_cell(W, b, x, h, c):
+    """One LSTM cell step.
+
+    Args:
+      W: [din + h, 4h] fused input+recurrent weights (gate order i,f,g,o).
+      b: [4h] bias.
+      x: [B, din] input.
+      h: [B, h] previous hidden state.
+      c: [B, h] previous cell state.
+
+    Returns:
+      (h', c'): both [B, h].
+    """
+    din = x.shape[-1]
+    gates = x @ W[:din] + h @ W[din:] + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def src_mask_from_len(srclen, M):
+    """Additive attention mask [B, M]: 0 on j < srclen[b], NEG_INF after."""
+    pos = jnp.arange(M, dtype=jnp.int32)[None, :]
+    return jnp.where(pos < srclen[:, None], 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_core(Wa, S, H, mask):
+    """Batched global attention over *all* decoder steps at once.
+
+    This is the paper's eqs. (1)-(3): the hot spot that HybridNMT computes
+    once per mini-batch (after the wavefront) instead of once per decoder
+    step.
+
+    Args:
+      Wa:   [h, h] score bilinear form.
+      S:    [B, M, h] all encoder hidden states (top layer).
+      H:    [B, N, h] all decoder hidden states (top layer).
+      mask: [B, M] additive source mask.
+
+    Returns:
+      C: [B, N, h] context vectors.
+    """
+    scores = jnp.einsum("bnh,hk,bmk->bnm", H, Wa, S)
+    scores = scores + mask[:, None, :]
+    alpha = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bnm,bmh->bnh", alpha, S)
+
+
+def attention_scores(Wa, S, H, mask):
+    """Normalized attention coefficients alpha [B, N, M] (for inspection)."""
+    scores = jnp.einsum("bnh,hk,bmk->bnm", H, Wa, S) + mask[:, None, :]
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def context_decode(Wc, H, C):
+    """Paper eq. (4): Hc = tanh(Wc [H; C]).
+
+    Wc: [2h, h]; H, C: [..., h]. Returns [..., h].
+    """
+    return jnp.tanh(jnp.concatenate([H, C], axis=-1) @ Wc)
+
+
+def softmax_xent(logits, tgt, tmask):
+    """Masked token-summed cross entropy.
+
+    logits: [..., V]; tgt: [...] int32; tmask: [...] float32 in {0,1}.
+    Returns (loss_sum, ntok) -- both scalars; per-shard additive so the
+    data-parallel coordinator can sum across shards before normalizing.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * tmask), jnp.sum(tmask)
+
+
+def attn_block_loss(Wa, Wc, Wout, bout, S, H, mask, tgt, tmask):
+    """The full attention-softmax block over all decoder steps (eqs. 1-6).
+
+    Returns (loss_sum, ntok). Differentiable in (Wa, Wc, Wout, bout, S, H):
+    exactly the quantities the hybrid strategy all-reduces (params) or
+    sends back to the wavefront (dS, dH).
+    """
+    C = attention_core(Wa, S, H, mask)
+    Hc = context_decode(Wc, H, C)
+    logits = Hc @ Wout + bout
+    return softmax_xent(logits, tgt, tmask)
+
+
+def attn_step(Wa, Wc, Wout, bout, S, mask, h_top, tgt_t, tmask_t):
+    """Single-decoder-step attention + softmax (the input-feeding path).
+
+    h_top: [B, h] the decoder top-layer state at this step.
+    Returns (loss_sum, Hc) where Hc [B, h] is the attentional hidden state
+    fed back into the first decoder layer at the next step (input-feeding).
+    """
+    C = attention_core(Wa, S, h_top[:, None, :], mask)[:, 0, :]
+    Hc = context_decode(Wc, h_top, C)
+    logits = Hc @ Wout + bout
+    loss_sum, _ = softmax_xent(logits, tgt_t, tmask_t)
+    return loss_sum, Hc
+
+
+def attn_step_logits(Wa, Wc, Wout, bout, S, mask, h_top):
+    """Beam-search scoring step.
+
+    Returns (logp [B, V], Hc [B, h], alpha [B, M]) -- alpha feeds the
+    GNMT coverage penalty in the rust beam search (Table 4).
+    """
+    alpha = attention_scores(Wa, S, h_top[:, None, :], mask)[:, 0, :]
+    C = jnp.einsum("bm,bmh->bh", alpha, S)
+    Hc = context_decode(Wc, h_top, C)
+    logits = Hc @ Wout + bout
+    return jax.nn.log_softmax(logits, axis=-1), Hc, alpha
+
+
+def embed(E, ids):
+    """Embedding lookup: E [V, d], ids [...] int32 -> [..., d]."""
+    return jnp.take(E, ids, axis=0)
+
+
+def embed_grad(ids, dX, V):
+    """Scatter-add embedding gradient: ids [...], dX [..., d] -> dE [V, d]."""
+    d = dX.shape[-1]
+    flat_ids = ids.reshape(-1)
+    flat_dX = dX.reshape(-1, d)
+    return jnp.zeros((V, d), dtype=dX.dtype).at[flat_ids].add(flat_dX)

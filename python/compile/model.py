@@ -1,0 +1,318 @@
+"""L2: the Seq2Seq RNN MT model as *stage functions* for AOT lowering.
+
+The rust coordinator (L3) owns the training loop and the schedule; this
+module owns the math. Every function below is a pure jax function with
+static shapes that ``aot.py`` lowers to one HLO-text artifact. Forward
+paths call the L1 Pallas kernels (``kernels.lstm``, ``kernels.attention``);
+backward paths differentiate the jnp oracle (``kernels.ref``) -- a
+recompute-style VJP, so no residual tensors cross the FFI boundary and the
+Pallas forward still appears in the lowered forward artifacts.
+
+Artifact inventory (shapes fixed per config, see ``aot.py``):
+
+  embed_fwd        (E[V,d], ids[B])                       -> X[B,d]
+  embed_bwd        (ids[B], dX[B,d])                      -> dE[V,d]
+  lstm_cell_fwd    (W, b, x[B,din], h, c)                 -> (h', c')
+  lstm_cell_bwd    (W, b, x, h, c, dh', dc')              -> (dW, db, dx, dh, dc)
+  attn_block       (theta, S, H, srclen, tgt, tmask)      -> (loss, ntok, dtheta, dS, dH)
+  attn_step_fwd    (theta, S, srclen, h_top, tgt_t, tm_t) -> (loss, Hc)
+  attn_step_bwd    (... , dHc)                            -> (dtheta, dS, dh_top)
+  attn_step_logits (theta, S, srclen, h_top)              -> (logp, Hc)
+
+where theta = (Wa[h,h], Wc[2h,h], Wout[h,V], bout[V]) -- the 4U of
+parameters the hybrid strategy data-parallelizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as pallas_attn
+from .kernels import lstm as pallas_lstm
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Configs. Must stay in sync with rust/src/config (the manifest carries the
+# resolved dims, so rust never re-derives them).
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static dimensions of one artifact set."""
+
+    name: str
+    d: int          # word embedding size        (paper: 512)
+    h: int          # LSTM hidden state size     (paper: 1024)
+    layers: int     # encoder = decoder depth    (paper: 4)
+    vocab: int      # joint BPE vocab            (paper: 32000)
+    batch: int      # full mini-batch B
+    gpus: int       # simulated device count G
+    max_src: int    # M: padded source length for the attention block
+    max_tgt: int    # N: padded target length
+    beam: int       # decode batch (= max beam width)
+
+    @property
+    def shard(self) -> int:
+        """Per-device batch shard Bs for the data-parallel attention part."""
+        assert self.batch % self.gpus == 0
+        return self.batch // self.gpus
+
+
+CONFIGS = {
+    # pytest / cargo-test scale.
+    "tiny": ModelConfig("tiny", d=32, h=64, layers=2, vocab=96, batch=16,
+                        gpus=4, max_src=12, max_tgt=12, beam=6),
+    # examples / Figure 4 / BLEU tables: real training runs.
+    "small": ModelConfig("small", d=64, h=128, layers=4, vocab=512, batch=32,
+                         gpus=4, max_src=24, max_tgt=24, beam=18),
+}
+
+
+def param_count(cfg: ModelConfig) -> dict:
+    """Analytic parameter inventory (paper §3.1: 2U+32U+4U structure)."""
+    emb = 2 * cfg.vocab * cfg.d
+    cells = 0
+    for side_first_din in (cfg.d, cfg.d):  # encoder, decoder first layers
+        cells += (side_first_din + cfg.h) * 4 * cfg.h + 4 * cfg.h
+        cells += (cfg.layers - 1) * ((cfg.h + cfg.h) * 4 * cfg.h + 4 * cfg.h)
+    attn = cfg.h * cfg.h + 2 * cfg.h * cfg.h + cfg.h * cfg.vocab + cfg.vocab
+    return {"embedding": emb, "lstm": cells, "attention_softmax": attn,
+            "total": emb + cells + attn}
+
+
+# --------------------------------------------------------------------------
+# Pallas forward + oracle backward, tied with custom_vjp so jax.value_and_grad
+# over the attention block differentiates cleanly through the Pallas call.
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def attention_core(Wa, S, H, mask):
+    return pallas_attn.attention_core(Wa, S, H, mask)
+
+
+def _attn_core_fwd(Wa, S, H, mask):
+    return pallas_attn.attention_core(Wa, S, H, mask), (Wa, S, H, mask)
+
+
+def _attn_core_bwd(res, dC):
+    Wa, S, H, mask = res
+    _, vjp = jax.vjp(ref.attention_core, Wa, S, H, mask)
+    dWa, dS, dH, _ = vjp(dC)
+    return dWa, dS, dH, None
+
+
+attention_core.defvjp(_attn_core_fwd, _attn_core_bwd)
+
+
+def lstm_cell(W, b, x, h, c):
+    """Pallas LSTM cell (forward artifacts only; bwd differentiates ref)."""
+    return pallas_lstm.lstm_cell(W, b, x, h, c)
+
+
+# --------------------------------------------------------------------------
+# Artifact entry functions. Each returns a flat tuple of arrays.
+# --------------------------------------------------------------------------
+
+
+def embed_fwd(E, ids):
+    return (ref.embed(E, ids),)
+
+
+def embed_bwd(ids, dX, *, vocab):
+    return (ref.embed_grad(ids, dX, vocab),)
+
+
+def lstm_cell_fwd(W, b, x, h, c):
+    return lstm_cell(W, b, x, h, c)
+
+
+def lstm_cell_bwd(W, b, x, h, c, dh_new, dc_new):
+    """Recompute-style VJP of the cell: returns (dW, db, dx, dh, dc)."""
+    _, vjp = jax.vjp(ref.lstm_cell, W, b, x, h, c)
+    return vjp((dh_new, dc_new))
+
+
+def _block_loss(Wa, Wc, Wout, bout, S, H, mask, tgt, tmask):
+    C = attention_core(Wa, S, H, mask)
+    Hc = ref.context_decode(Wc, H, C)
+    logits = Hc @ Wout + bout
+    return ref.softmax_xent(logits, tgt, tmask)
+
+
+def attn_block(Wa, Wc, Wout, bout, S, H, srclen, tgt, tmask):
+    """Fused value-and-grad of the whole attention-softmax block.
+
+    The data-parallel unit of HybridNMT: each simulated device runs this on
+    its batch shard; the coordinator all-reduces (dWa,dWc,dWout,dbout) and
+    routes (dS,dH) back into the model-parallel backward wavefront.
+
+    Returns (loss_sum, ntok, dWa, dWc, dWout, dbout, dS, dH).
+    """
+    mask = ref.src_mask_from_len(srclen, S.shape[1])
+
+    def lf(Wa, Wc, Wout, bout, S, H):
+        loss, ntok = _block_loss(Wa, Wc, Wout, bout, S, H, mask, tgt, tmask)
+        return loss, ntok
+
+    (loss, ntok), grads = jax.value_and_grad(
+        lf, argnums=(0, 1, 2, 3, 4, 5), has_aux=True
+    )(Wa, Wc, Wout, bout, S, H)
+    return (loss, ntok) + tuple(grads)
+
+
+def attn_step_fwd(Wa, Wc, Wout, bout, S, srclen, h_top, tgt_t, tmask_t):
+    """One decoder step of attention+softmax (input-feeding path).
+
+    Forward uses the Pallas attention core with N=1. Returns (loss_sum, Hc).
+    """
+    mask = ref.src_mask_from_len(srclen, S.shape[1])
+    C = attention_core(Wa, S, h_top[:, None, :], mask)[:, 0, :]
+    Hc = ref.context_decode(Wc, h_top, C)
+    logits = Hc @ Wout + bout
+    loss, _ = ref.softmax_xent(logits, tgt_t, tmask_t)
+    return loss, Hc
+
+
+def attn_step_bwd(Wa, Wc, Wout, bout, S, srclen, h_top, tgt_t, tmask_t, dHc):
+    """VJP of attn_step with cotangents (1.0 on loss, dHc on Hc).
+
+    dHc carries the input-feeding gradient arriving from the *next* step's
+    first decoder layer. Returns (dWa, dWc, dWout, dbout, dS, dh_top).
+    """
+    mask = ref.src_mask_from_len(srclen, S.shape[1])
+
+    def f(Wa, Wc, Wout, bout, S, h_top):
+        loss, Hc = ref.attn_step(Wa, Wc, Wout, bout, S, mask, h_top,
+                                 tgt_t, tmask_t)
+        return loss, Hc
+
+    _, vjp = jax.vjp(f, Wa, Wc, Wout, bout, S, h_top)
+    return vjp((jnp.float32(1.0), dHc))
+
+
+def attn_ctx_fwd(Wa, Wc, S, srclen, h_top):
+    """Critical-path half of one attention step: context + Hc only.
+
+    The input-feeding recurrence needs *only* Hc; splitting the bulky
+    output projection into `attn_out_*` lets the coordinator overlap it
+    off the serial decoder chain (the scheduling effect behind
+    HybridNMTIF's Table 3 position between MP and HybridNMT).
+    """
+    mask = ref.src_mask_from_len(srclen, S.shape[1])
+    C = attention_core(Wa, S, h_top[:, None, :], mask)[:, 0, :]
+    Hc = ref.context_decode(Wc, h_top, C)
+    return (Hc,)
+
+
+def attn_ctx_bwd(Wa, Wc, S, srclen, h_top, dHc):
+    """VJP of attn_ctx: (dWa, dWc, dS, dh_top). dHc is the total
+    cotangent (loss-side + input-feeding side, summed by the caller)."""
+    mask = ref.src_mask_from_len(srclen, S.shape[1])
+
+    def f(Wa, Wc, S, h_top):
+        C = ref.attention_core(Wa, S, h_top[:, None, :], mask)[:, 0, :]
+        return ref.context_decode(Wc, h_top, C)
+
+    _, vjp = jax.vjp(f, Wa, Wc, S, h_top)
+    return vjp(dHc)
+
+
+def attn_out_fwd(Wout, bout, Hc, tgt_t, tmask_t):
+    """Off-critical-path half: output projection + softmax xent."""
+    logits = Hc @ Wout + bout
+    loss, _ = ref.softmax_xent(logits, tgt_t, tmask_t)
+    return (loss,)
+
+
+def attn_out_bwd(Wout, bout, Hc, tgt_t, tmask_t):
+    """Grads of the step loss w.r.t. (Wout, bout, Hc). Depends only on
+    forward values, so every step's out_bwd is schedulable as soon as
+    the forward finishes — fully parallel across steps and shards."""
+
+    def f(Wout, bout, Hc):
+        logits = Hc @ Wout + bout
+        return ref.softmax_xent(logits, tgt_t, tmask_t)[0]
+
+    return jax.grad(f, argnums=(0, 1, 2))(Wout, bout, Hc)
+
+
+def attn_step_logits(Wa, Wc, Wout, bout, S, srclen, h_top):
+    """Beam-search scoring: (logp [B,V], Hc [B,h], alpha [B,M])."""
+    mask = ref.src_mask_from_len(srclen, S.shape[1])
+    return ref.attn_step_logits(Wa, Wc, Wout, bout, S, mask, h_top)
+
+
+# --------------------------------------------------------------------------
+# Whole-model reference (used by tests and by aot's self-check): a plain
+# jax implementation of HybridNMT's forward loss, against which the rust
+# coordinator's composed-from-artifacts loss is validated bit-for-bit-ish.
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Initialize the full parameter set as a flat dict of arrays.
+
+    Layout mirrors rust/src/model_spec.rs; uniform(-0.08, 0.08) like
+    classic seq2seq inits.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = {}
+
+    def mk(name, shape):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        params[name] = jax.random.uniform(
+            sub, shape, jnp.float32, -0.08, 0.08
+        )
+
+    mk("src_emb", (cfg.vocab, cfg.d))
+    mk("tgt_emb", (cfg.vocab, cfg.d))
+    for side in ("enc", "dec"):
+        for l in range(cfg.layers):
+            din = cfg.d if l == 0 else cfg.h
+            mk(f"{side}_l{l}_W", (din + cfg.h, 4 * cfg.h))
+            mk(f"{side}_l{l}_b", (4 * cfg.h,))
+    mk("attn_Wa", (cfg.h, cfg.h))
+    mk("attn_Wc", (2 * cfg.h, cfg.h))
+    mk("attn_Wout", (cfg.h, cfg.vocab))
+    mk("attn_bout", (cfg.vocab,))
+    return params
+
+
+def _run_stack(params, side, X, cfg):
+    """Run the stacked LSTM over time with jnp (reference only)."""
+    B, T, _ = X.shape
+    h = [jnp.zeros((B, cfg.h)) for _ in range(cfg.layers)]
+    c = [jnp.zeros((B, cfg.h)) for _ in range(cfg.layers)]
+    tops = []
+    for t in range(T):
+        x = X[:, t, :]
+        for l in range(cfg.layers):
+            W = params[f"{side}_l{l}_W"]
+            b = params[f"{side}_l{l}_b"]
+            h[l], c[l] = ref.lstm_cell(W, b, x, h[l], c[l])
+            x = h[l]
+        tops.append(x)
+    return jnp.stack(tops, axis=1)  # [B, T, h]
+
+
+def hybrid_forward_loss(params, src, srclen, tgt_in, tgt_out, tmask, cfg):
+    """Full HybridNMT (no input-feeding) forward loss, pure jnp.
+
+    src [B,M] int32, tgt_in/tgt_out [B,N] int32, tmask [B,N] f32.
+    Returns (loss_sum, ntok).
+    """
+    S = _run_stack(params, "enc", ref.embed(params["src_emb"], src), cfg)
+    H = _run_stack(params, "dec", ref.embed(params["tgt_emb"], tgt_in), cfg)
+    mask = ref.src_mask_from_len(srclen, cfg.max_src)
+    return ref.attn_block_loss(
+        params["attn_Wa"], params["attn_Wc"], params["attn_Wout"],
+        params["attn_bout"], S, H, mask, tgt_out, tmask,
+    )

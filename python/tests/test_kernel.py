@@ -1,0 +1,139 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/seeds; assert_allclose against kernels.ref is
+THE correctness signal for the compute hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import attention as pattn
+from compile.kernels import lstm as plstm
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng_arrays(seed, *shapes, scale=0.5):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(rng.uniform(-scale, scale, s).astype(np.float32))
+            for s in shapes]
+
+
+# ---------------------------------------------------------------- LSTM cell
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 9),
+    din=st.sampled_from([8, 32, 96]),
+    h=st.sampled_from([16, 64]),
+)
+def test_lstm_cell_matches_ref(seed, b, din, h):
+    W, bias, x, h0, c0 = rng_arrays(
+        seed, (din + h, 4 * h), (4 * h,), (b, din), (b, h), (b, h))
+    h1, c1 = plstm.lstm_cell(W, bias, x, h0, c0)
+    h1r, c1r = ref.lstm_cell(W, bias, x, h0, c0)
+    assert_allclose(np.asarray(h1), np.asarray(h1r), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(c1), np.asarray(c1r), rtol=1e-5, atol=1e-6)
+
+
+def test_lstm_cell_gate_saturation():
+    """Large-magnitude inputs must saturate, not NaN."""
+    W, bias, x, h0, c0 = rng_arrays(0, (24, 32), (32,), (4, 16), (4, 8), (4, 8))
+    h1, c1 = plstm.lstm_cell(W * 100, bias, x * 100, h0, c0)
+    assert np.isfinite(np.asarray(h1)).all()
+    assert np.abs(np.asarray(h1)).max() <= 1.0 + 1e-6
+
+
+def test_lstm_cell_zero_state_identity():
+    """With zero weights, c' = sigmoid(0)*c = c/2 and h' = tanh(c')/2."""
+    h = 8
+    W = jnp.zeros((12 + h, 4 * h))
+    bias = jnp.zeros((4 * h,))
+    x = jnp.ones((3, 12))
+    c0 = jnp.full((3, h), 0.6)
+    h1, c1 = plstm.lstm_cell(W, bias, x, jnp.zeros((3, h)), c0)
+    assert_allclose(np.asarray(c1), 0.3 * np.ones((3, h)), rtol=1e-6)
+    assert_allclose(np.asarray(h1), 0.5 * np.tanh(0.3) * np.ones((3, h)),
+                    rtol=1e-6)
+
+
+# ---------------------------------------------------------- attention core
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 5),
+    m=st.integers(1, 12),
+    n=st.integers(1, 12),
+    h=st.sampled_from([8, 32]),
+)
+def test_attention_core_matches_ref(seed, b, m, n, h):
+    Wa, S, H = rng_arrays(seed, (h, h), (b, m, h), (b, n, h))
+    rng = np.random.RandomState(seed + 1)
+    srclen = jnp.asarray(rng.randint(1, m + 1, size=b).astype(np.int32))
+    mask = ref.src_mask_from_len(srclen, m)
+    C = pattn.attention_core(Wa, S, H, mask)
+    Cr = ref.attention_core(Wa, S, H, mask)
+    assert_allclose(np.asarray(C), np.asarray(Cr), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n_block", [1, 2, 4, 8])
+def test_attention_core_block_tiling_invariant(n_block):
+    """The decoder-axis grid tiling must not change the numerics."""
+    Wa, S, H = rng_arrays(7, (16, 16), (3, 10, 16), (3, 8, 16))
+    mask = ref.src_mask_from_len(jnp.asarray([10, 5, 1], jnp.int32), 10)
+    full = pattn.attention_core(Wa, S, H, mask, n_block=8)
+    tiled = pattn.attention_core(Wa, S, H, mask, n_block=n_block)
+    # Different tile shapes vectorize differently on CPU: allow float
+    # accumulation-order noise, nothing more.
+    assert_allclose(np.asarray(tiled), np.asarray(full), rtol=1e-4, atol=1e-6)
+
+
+def test_attention_mask_blocks_padding():
+    """Fully-masked source positions must get ~zero attention weight."""
+    Wa, S, H = rng_arrays(3, (8, 8), (2, 6, 8), (2, 4, 8))
+    srclen = jnp.asarray([2, 6], jnp.int32)
+    mask = ref.src_mask_from_len(srclen, 6)
+    alpha = ref.attention_scores(Wa, S, H, mask)
+    a = np.asarray(alpha)
+    assert a[0, :, 2:].max() < 1e-8          # positions >= srclen masked out
+    assert_allclose(a.sum(-1), np.ones((2, 4)), rtol=1e-6)
+
+
+def test_attention_softmax_rows_normalized():
+    Wa, S, H = rng_arrays(11, (8, 8), (1, 5, 8), (1, 3, 8))
+    mask = jnp.zeros((1, 5))
+    C = pattn.attention_core(Wa, S, H, mask)
+    # alpha rows sum to 1 => every context vector is a convex combination of
+    # S rows => within the per-dim min/max envelope of S.
+    s = np.asarray(S)[0]
+    c = np.asarray(C)[0]
+    assert (c <= s.max(0) + 1e-5).all() and (c >= s.min(0) - 1e-5).all()
+
+
+def test_attention_extreme_logits_stable():
+    """Score magnitudes in the hundreds must not overflow the softmax."""
+    Wa = jnp.eye(8) * 50.0
+    _, S, H = rng_arrays(5, (1,), (2, 7, 8), (2, 4, 8))
+    mask = jnp.zeros((2, 7))
+    C = pattn.attention_core(Wa, S, H, mask)
+    assert np.isfinite(np.asarray(C)).all()
+
+
+# ----------------------------------------------------------- perf model
+
+def test_vmem_model_monotone_in_block():
+    small = pattn.vmem_bytes(B=4, M=24, N=24, h=128, n_block=4)
+    big = pattn.vmem_bytes(B=4, M=24, N=24, h=128, n_block=24)
+    assert small < big
+
+
+def test_mxu_flops_counts_both_gemms():
+    f = pattn.mxu_flops(B=2, M=3, N=5, h=7)
+    assert f == 2 * 2 * 5 * 7 * 7 + 2 * (2 * 2 * 3 * 5 * 7)

@@ -1,0 +1,249 @@
+"""L2 correctness: stage functions, gradients, and composition.
+
+The critical invariant: composing the per-cell / per-block artifacts the
+way the rust coordinator does must equal the monolithic jnp model -- in
+value AND in gradient.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+CFG = model.CONFIGS["tiny"]
+
+
+def make_batch(cfg, b, seed=0):
+    rng = np.random.RandomState(seed)
+    src = rng.randint(3, cfg.vocab, (b, cfg.max_src)).astype(np.int32)
+    srclen = rng.randint(2, cfg.max_src + 1, (b,)).astype(np.int32)
+    tgt_in = rng.randint(3, cfg.vocab, (b, cfg.max_tgt)).astype(np.int32)
+    tgt_out = rng.randint(3, cfg.vocab, (b, cfg.max_tgt)).astype(np.int32)
+    tlen = rng.randint(1, cfg.max_tgt + 1, (b,))
+    tmask = (np.arange(cfg.max_tgt)[None, :] < tlen[:, None]).astype(np.float32)
+    return (jnp.asarray(src), jnp.asarray(srclen), jnp.asarray(tgt_in),
+            jnp.asarray(tgt_out), jnp.asarray(tmask))
+
+
+# -------------------------------------------------------------- gradients
+
+def test_lstm_cell_bwd_matches_autodiff():
+    rng = np.random.RandomState(1)
+    din, h, b = CFG.d, CFG.h, 5
+    W = jnp.asarray(rng.randn(din + h, 4 * h).astype(np.float32) * 0.1)
+    bias = jnp.asarray(rng.randn(4 * h).astype(np.float32) * 0.1)
+    x = jnp.asarray(rng.randn(b, din).astype(np.float32))
+    h0 = jnp.asarray(rng.randn(b, h).astype(np.float32))
+    c0 = jnp.asarray(rng.randn(b, h).astype(np.float32))
+    dh = jnp.asarray(rng.randn(b, h).astype(np.float32))
+    dc = jnp.asarray(rng.randn(b, h).astype(np.float32))
+
+    got = model.lstm_cell_bwd(W, bias, x, h0, c0, dh, dc)
+
+    def scalarized(W, bias, x, h0, c0):
+        h1, c1 = ref.lstm_cell(W, bias, x, h0, c0)
+        return jnp.sum(h1 * dh) + jnp.sum(c1 * dc)
+
+    want = jax.grad(scalarized, argnums=(0, 1, 2, 3, 4))(W, bias, x, h0, c0)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-5)
+
+
+def test_attn_block_grads_match_autodiff():
+    cfg = CFG
+    b = cfg.shard
+    rng = np.random.RandomState(2)
+    p = model.init_params(cfg, seed=3)
+    S = jnp.asarray(rng.randn(b, cfg.max_src, cfg.h).astype(np.float32) * 0.3)
+    H = jnp.asarray(rng.randn(b, cfg.max_tgt, cfg.h).astype(np.float32) * 0.3)
+    _, srclen, _, tgt, tmask = make_batch(cfg, b, seed=2)
+
+    out = model.attn_block(p["attn_Wa"], p["attn_Wc"], p["attn_Wout"],
+                           p["attn_bout"], S, H, srclen, tgt, tmask)
+    loss, ntok, dWa, dWc, dWout, dbout, dS, dH = out
+
+    mask = ref.src_mask_from_len(srclen, cfg.max_src)
+
+    def lf(Wa, Wc, Wout, bout, S, H):
+        return ref.attn_block_loss(Wa, Wc, Wout, bout, S, H, mask, tgt,
+                                   tmask)[0]
+
+    want_loss = lf(p["attn_Wa"], p["attn_Wc"], p["attn_Wout"], p["attn_bout"],
+                   S, H)
+    want = jax.grad(lf, argnums=(0, 1, 2, 3, 4, 5))(
+        p["attn_Wa"], p["attn_Wc"], p["attn_Wout"], p["attn_bout"], S, H)
+    assert_allclose(float(loss), float(want_loss), rtol=1e-5)
+    assert float(ntok) == float(np.asarray(tmask).sum())
+    for g, w in zip((dWa, dWc, dWout, dbout, dS, dH), want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-4, atol=1e-5)
+
+
+def test_attn_step_bwd_input_feeding_cotangent():
+    """dHc must flow: zero vs nonzero dHc give different dS/dh_top."""
+    cfg = CFG
+    b = 4
+    rng = np.random.RandomState(5)
+    p = model.init_params(cfg, seed=1)
+    S = jnp.asarray(rng.randn(b, cfg.max_src, cfg.h).astype(np.float32) * 0.3)
+    h_top = jnp.asarray(rng.randn(b, cfg.h).astype(np.float32) * 0.3)
+    srclen = jnp.full((b,), cfg.max_src, jnp.int32)
+    tgt_t = jnp.asarray(rng.randint(0, cfg.vocab, (b,)).astype(np.int32))
+    tmask_t = jnp.ones((b,))
+    args = (p["attn_Wa"], p["attn_Wc"], p["attn_Wout"], p["attn_bout"],
+            S, srclen, h_top, tgt_t, tmask_t)
+    z = model.attn_step_bwd(*args, jnp.zeros((b, cfg.h)))
+    nz = model.attn_step_bwd(*args, jnp.ones((b, cfg.h)))
+    assert not np.allclose(np.asarray(z[5]), np.asarray(nz[5]))
+    # And with zero cotangent it equals the plain loss gradient.
+    mask = ref.src_mask_from_len(srclen, cfg.max_src)
+
+    def lf(Wa, Wc, Wout, bout, S, h_top):
+        return ref.attn_step(Wa, Wc, Wout, bout, S, mask, h_top, tgt_t,
+                             tmask_t)[0]
+
+    want = jax.grad(lf, argnums=(0, 1, 2, 3, 4, 5))(
+        p["attn_Wa"], p["attn_Wc"], p["attn_Wout"], p["attn_bout"], S, h_top)
+    for g, w in zip(z, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-4, atol=1e-5)
+
+
+def test_embed_bwd_scatter_add():
+    ids = jnp.asarray([1, 3, 1], jnp.int32)
+    dX = jnp.asarray(np.eye(3, 4, dtype=np.float32))
+    (dE,) = model.embed_bwd(ids, dX, vocab=5)
+    want = np.zeros((5, 4), np.float32)
+    want[1] += np.eye(3, 4)[0] + np.eye(3, 4)[2]
+    want[3] += np.eye(3, 4)[1]
+    assert_allclose(np.asarray(dE), want)
+
+
+# ----------------------------------------------------------- composition
+
+def test_composed_stages_equal_monolithic_loss():
+    """Chain embed/cell/attn_block per-timestep exactly as rust does."""
+    cfg = CFG
+    b = cfg.batch
+    p = model.init_params(cfg, seed=7)
+    src, srclen, tgt_in, tgt_out, tmask = make_batch(cfg, b, seed=9)
+
+    def run_side(side, ids):
+        h = [jnp.zeros((b, cfg.h)) for _ in range(cfg.layers)]
+        c = [jnp.zeros((b, cfg.h)) for _ in range(cfg.layers)]
+        tops = []
+        emb = p["src_emb"] if side == "enc" else p["tgt_emb"]
+        for t in range(ids.shape[1]):
+            (x,) = model.embed_fwd(emb, ids[:, t])
+            for l in range(cfg.layers):
+                h[l], c[l] = model.lstm_cell_fwd(
+                    p[f"{side}_l{l}_W"], p[f"{side}_l{l}_b"], x, h[l], c[l])
+                x = h[l]
+            tops.append(x)
+        return jnp.stack(tops, axis=1)
+
+    S = run_side("enc", src)
+    H = run_side("dec", tgt_in)
+    out = model.attn_block(p["attn_Wa"], p["attn_Wc"], p["attn_Wout"],
+                           p["attn_bout"], S, H, srclen, tgt_out, tmask)
+    loss, ntok = out[0], out[1]
+    want_loss, want_ntok = model.hybrid_forward_loss(
+        p, src, srclen, tgt_in, tgt_out, tmask, cfg)
+    assert_allclose(float(loss), float(want_loss), rtol=1e-5)
+    assert float(ntok) == float(want_ntok)
+
+
+def test_shard_sum_equals_full_batch_loss():
+    """Data-parallel invariant: sum of shard losses == full-batch loss."""
+    cfg = CFG
+    p = model.init_params(cfg, seed=11)
+    src, srclen, tgt_in, tgt_out, tmask = make_batch(cfg, cfg.batch, seed=4)
+    full, ntok_full = model.hybrid_forward_loss(
+        p, src, srclen, tgt_in, tgt_out, tmask, cfg)
+    # Forward states once, then shard the attention block like HybridNMT.
+    S = model._run_stack(p, "enc", ref.embed(p["src_emb"], src), cfg)
+    H = model._run_stack(p, "dec", ref.embed(p["tgt_emb"], tgt_in), cfg)
+    tot, ntok = 0.0, 0.0
+    for g in range(cfg.gpus):
+        sl = slice(g * cfg.shard, (g + 1) * cfg.shard)
+        out = model.attn_block(p["attn_Wa"], p["attn_Wc"], p["attn_Wout"],
+                               p["attn_bout"], S[sl], H[sl], srclen[sl],
+                               tgt_out[sl], tmask[sl])
+        tot += float(out[0])
+        ntok += float(out[1])
+    assert_allclose(tot, float(full), rtol=1e-5)
+    assert ntok == float(ntok_full)
+
+
+def test_param_count_structure():
+    """Paper §3.1: embedding 2U, LSTM 32U-ish, attention-softmax small."""
+    pc = model.param_count(model.CONFIGS["small"])
+    assert pc["total"] == sum(v for k, v in pc.items() if k != "total")
+    # LSTM part dominates embeddings+attention for small vocab configs.
+    assert pc["lstm"] > pc["attention_softmax"]
+
+
+def test_init_params_shapes_cover_manifest_dims():
+    p = model.init_params(CFG)
+    assert p["src_emb"].shape == (CFG.vocab, CFG.d)
+    assert p["enc_l0_W"].shape == (CFG.d + CFG.h, 4 * CFG.h)
+    assert p["enc_l1_W"].shape == (2 * CFG.h, 4 * CFG.h)
+    assert p["attn_Wout"].shape == (CFG.h, CFG.vocab)
+
+
+def test_decode_logits_are_log_probs():
+    cfg = CFG
+    b = cfg.beam
+    rng = np.random.RandomState(3)
+    p = model.init_params(cfg)
+    S = jnp.asarray(rng.randn(b, cfg.max_src, cfg.h).astype(np.float32) * 0.2)
+    h_top = jnp.asarray(rng.randn(b, cfg.h).astype(np.float32) * 0.2)
+    srclen = jnp.full((b,), cfg.max_src, jnp.int32)
+    logp, Hc, alpha = model.attn_step_logits(
+        p["attn_Wa"], p["attn_Wc"], p["attn_Wout"], p["attn_bout"],
+        S, srclen, h_top)
+    assert_allclose(np.exp(np.asarray(logp)).sum(-1), np.ones(b), rtol=1e-4)
+    assert Hc.shape == (b, cfg.h)
+    # attention rows are a distribution over the source
+    assert alpha.shape == (b, cfg.max_src)
+    assert_allclose(np.asarray(alpha).sum(-1), np.ones(b), rtol=1e-4)
+
+
+def test_split_attention_step_equals_fused():
+    """ctx/out split must compose to exactly the fused attn_step math
+    (value AND gradients via the chain rule the rust planner applies)."""
+    cfg = CFG
+    b = 4
+    rng = np.random.RandomState(13)
+    p = model.init_params(cfg, seed=2)
+    S = jnp.asarray(rng.randn(b, cfg.max_src, cfg.h).astype(np.float32) * 0.3)
+    h_top = jnp.asarray(rng.randn(b, cfg.h).astype(np.float32) * 0.3)
+    srclen = jnp.asarray(rng.randint(1, cfg.max_src + 1, (b,)).astype(np.int32))
+    tgt_t = jnp.asarray(rng.randint(0, cfg.vocab, (b,)).astype(np.int32))
+    tmask_t = jnp.ones((b,))
+    dhc_if = jnp.asarray(rng.randn(b, cfg.h).astype(np.float32) * 0.1)
+
+    # Fused reference.
+    loss_f, hc_f = model.attn_step_fwd(
+        p["attn_Wa"], p["attn_Wc"], p["attn_Wout"], p["attn_bout"],
+        S, srclen, h_top, tgt_t, tmask_t)
+    grads_f = model.attn_step_bwd(
+        p["attn_Wa"], p["attn_Wc"], p["attn_Wout"], p["attn_bout"],
+        S, srclen, h_top, tgt_t, tmask_t, dhc_if)
+
+    # Split composition (what the rust planner emits).
+    (hc_s,) = model.attn_ctx_fwd(p["attn_Wa"], p["attn_Wc"], S, srclen, h_top)
+    (loss_s,) = model.attn_out_fwd(p["attn_Wout"], p["attn_bout"], hc_s,
+                                   tgt_t, tmask_t)
+    dWout, dbout, dHc_loss = model.attn_out_bwd(
+        p["attn_Wout"], p["attn_bout"], hc_s, tgt_t, tmask_t)
+    dWa, dWc, dS, dh_top = model.attn_ctx_bwd(
+        p["attn_Wa"], p["attn_Wc"], S, srclen, h_top, dHc_loss + dhc_if)
+
+    assert_allclose(float(loss_s), float(loss_f), rtol=1e-5)
+    assert_allclose(np.asarray(hc_s), np.asarray(hc_f), rtol=1e-5, atol=1e-6)
+    for got, want in zip((dWa, dWc, dWout, dbout, dS, dh_top), grads_f):
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=1e-5)

@@ -1,0 +1,550 @@
+//! Configuration system: model dimensions, parallelization strategy,
+//! simulated-hardware description, and training hyperparameters.
+//!
+//! Experiments are fully described by JSON files in `configs/` (see
+//! `configs/paper.json` for the paper's Table 2 settings) plus CLI
+//! overrides. The artifact manifest written by `python/compile/aot.py`
+//! carries the same `ModelDims`, so the two sides can never drift.
+//! (Serialization is hand-rolled on `util::json` — the build is fully
+//! offline, so there is no serde.)
+
+use crate::util::json::{num, obj, s, Json};
+use anyhow::{anyhow, Context, Result};
+
+/// Static model dimensions — one artifact set.
+///
+/// Mirrors `python/compile/model.py::ModelConfig`; for `real` execution
+/// it is *read from the manifest*, for `sim-only` (paper-scale) runs it
+/// comes from JSON config.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelDims {
+    pub name: String,
+    /// Word embedding size (paper Table 2: 512).
+    pub d: usize,
+    /// LSTM hidden state size (paper: 1024).
+    pub h: usize,
+    /// Encoder/decoder depth (paper: 4).
+    pub layers: usize,
+    /// Joint BPE vocabulary (paper: 32K).
+    pub vocab: usize,
+    /// Full mini-batch B.
+    pub batch: usize,
+    /// Simulated GPU count G (paper: 4).
+    pub gpus: usize,
+    /// Per-device batch shard Bs = B / G.
+    pub shard: usize,
+    /// Padded source length M for the attention block.
+    pub max_src: usize,
+    /// Padded target length N.
+    pub max_tgt: usize,
+    /// Decode batch (= widest beam).
+    pub beam: usize,
+}
+
+impl ModelDims {
+    /// The paper's Table 2 model at WMT scale (sim-only: no artifacts).
+    pub fn paper() -> Self {
+        ModelDims {
+            name: "paper".into(),
+            d: 512,
+            h: 1024,
+            layers: 4,
+            vocab: 32000,
+            batch: 224,
+            gpus: 4,
+            shard: 56,
+            max_src: 25,
+            max_tgt: 25,
+            beam: 18,
+        }
+    }
+
+    /// Rescale the batch (per Table 3 row: 64 / 224 / 256), keeping
+    /// `shard = batch / gpus` consistent.
+    pub fn with_batch(&self, batch: usize) -> Self {
+        let mut d = self.clone();
+        assert!(batch % self.gpus == 0, "batch {batch} % gpus {}", self.gpus);
+        d.batch = batch;
+        d.shard = batch / self.gpus;
+        d
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelDims {
+            name: j.req_str("name")?.to_string(),
+            d: j.req_usize("d")?,
+            h: j.req_usize("h")?,
+            layers: j.req_usize("layers")?,
+            vocab: j.req_usize("vocab")?,
+            batch: j.req_usize("batch")?,
+            gpus: j.req_usize("gpus")?,
+            shard: j.req_usize("shard")?,
+            max_src: j.req_usize("max_src")?,
+            max_tgt: j.req_usize("max_tgt")?,
+            beam: j.req_usize("beam")?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("d", num(self.d as f64)),
+            ("h", num(self.h as f64)),
+            ("layers", num(self.layers as f64)),
+            ("vocab", num(self.vocab as f64)),
+            ("batch", num(self.batch as f64)),
+            ("gpus", num(self.gpus as f64)),
+            ("shard", num(self.shard as f64)),
+            ("max_src", num(self.max_src as f64)),
+            ("max_tgt", num(self.max_tgt as f64)),
+            ("beam", num(self.beam as f64)),
+        ])
+    }
+}
+
+/// The five parallelization strategies of Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Baseline model (input-feeding) on one device.
+    Single,
+    /// Baseline replicated on G devices, batch sharded, full-gradient sync.
+    Data,
+    /// Baseline layers spread over devices (paper Fig. 2), wavefront
+    /// encoder, input-feeding-serialized decoder.
+    Model,
+    /// The paper's contribution (Fig. 3): model-parallel wavefront for the
+    /// encoder-decoder, data-parallel attention-softmax, no input-feeding.
+    Hybrid,
+    /// Ablation: hybrid placement but input-feeding kept (HybridNMTIF).
+    HybridIf,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 5] = [
+        Strategy::Single,
+        Strategy::Data,
+        Strategy::Model,
+        Strategy::Hybrid,
+        Strategy::HybridIf,
+    ];
+
+    pub fn uses_input_feeding(self) -> bool {
+        !matches!(self, Strategy::Hybrid)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Strategy::Single => "baseline (1GPU)",
+            Strategy::Data => "w/ data parallelism",
+            Strategy::Model => "w/ model parallelism",
+            Strategy::Hybrid => "HybridNMT",
+            Strategy::HybridIf => "HybridNMTIF",
+        }
+    }
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Strategy::Single => "single",
+            Strategy::Data => "data",
+            Strategy::Model => "model",
+            Strategy::Hybrid => "hybrid",
+            Strategy::HybridIf => "hybrid_if",
+        }
+    }
+
+    /// Paper Table 3 mini-batch per strategy: 64 (1 GPU), 256 (DP),
+    /// 224 (MP / hybrid) — "determined by the available GPU memories".
+    pub fn paper_batch(self) -> usize {
+        match self {
+            Strategy::Single => 64,
+            Strategy::Data => 256,
+            _ => 224,
+        }
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = anyhow::Error;
+    fn from_str(txt: &str) -> Result<Self> {
+        match txt {
+            "single" | "baseline" => Ok(Strategy::Single),
+            "data" => Ok(Strategy::Data),
+            "model" => Ok(Strategy::Model),
+            "hybrid" => Ok(Strategy::Hybrid),
+            "hybrid_if" | "hybridif" => Ok(Strategy::HybridIf),
+            _ => Err(anyhow!("unknown strategy `{txt}` (single|data|model|hybrid|hybrid_if)")),
+        }
+    }
+}
+
+/// Simulated hardware: a 4×V100 NVLink node by default.
+///
+/// These constants are *calibrated once* (EXPERIMENTS.md §Calibration) so
+/// the single-GPU baseline lands near the paper's ~2800-3000 src-tok/s;
+/// the relative scaling factors then emerge from the schedules, not from
+/// per-strategy fudge factors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    pub gpus: usize,
+    /// Peak fp32 GEMM throughput per device (TFLOP/s). V100: 15.7.
+    pub gemm_tflops: f64,
+    /// Asymptotic (large-batch) efficiency for RNN-sized GEMMs under a
+    /// 2018-era framework's per-step kernels (calibrated).
+    pub gemm_efficiency: f64,
+    /// Batch at which GEMM efficiency reaches half its asymptote:
+    /// eff(b) = gemm_efficiency * b / (b + gemm_sat_batch). Captures the
+    /// V100's poor utilization at mini-batch 64 vs 224 (Table 3's
+    /// super-linear hybrid scaling).
+    pub gemm_sat_batch: f64,
+    /// Device HBM bandwidth (GB/s). V100: 900.
+    pub mem_bw_gbps: f64,
+    /// Fixed per-kernel-launch overhead (µs): dominates small per-cell
+    /// kernels exactly as it did the paper's per-timestep LSTM steps.
+    pub launch_overhead_us: f64,
+    /// NVLink per-direction bandwidth between any device pair (GB/s).
+    pub nvlink_gbps: f64,
+    /// NVLink transfer latency (µs).
+    pub nvlink_latency_us: f64,
+    /// Host PCIe bandwidth (GB/s) — the data-parallel kvstore path.
+    pub pcie_gbps: f64,
+    /// Host-side reduction bandwidth (GB/s).
+    pub host_reduce_gbps: f64,
+    /// Per-parameter-array synchronization latency (µs): framework
+    /// bookkeeping per tensor in the DP sync path.
+    pub per_array_latency_us: f64,
+    /// If true, full-model data-parallel sync is staged through the host
+    /// (the MXNet-kvstore behaviour the paper measured); the hybrid
+    /// strategies' small attention all-reduce always rides NVLink rings.
+    pub dp_host_staged: bool,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig {
+            gpus: 4,
+            gemm_tflops: 15.7,
+            gemm_efficiency: 0.42,
+            gemm_sat_batch: 110.0,
+            mem_bw_gbps: 900.0,
+            launch_overhead_us: 9.0,
+            nvlink_gbps: 60.0,
+            nvlink_latency_us: 5.0,
+            pcie_gbps: 9.5,
+            host_reduce_gbps: 18.0,
+            per_array_latency_us: 160.0,
+            dp_host_staged: true,
+        }
+    }
+}
+
+impl HwConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = HwConfig::default();
+        let f = |key: &str, dv: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dv);
+        Ok(HwConfig {
+            gpus: j.get("gpus").and_then(Json::as_usize).unwrap_or(d.gpus),
+            gemm_tflops: f("gemm_tflops", d.gemm_tflops),
+            gemm_efficiency: f("gemm_efficiency", d.gemm_efficiency),
+            gemm_sat_batch: f("gemm_sat_batch", d.gemm_sat_batch),
+            mem_bw_gbps: f("mem_bw_gbps", d.mem_bw_gbps),
+            launch_overhead_us: f("launch_overhead_us", d.launch_overhead_us),
+            nvlink_gbps: f("nvlink_gbps", d.nvlink_gbps),
+            nvlink_latency_us: f("nvlink_latency_us", d.nvlink_latency_us),
+            pcie_gbps: f("pcie_gbps", d.pcie_gbps),
+            host_reduce_gbps: f("host_reduce_gbps", d.host_reduce_gbps),
+            per_array_latency_us: f("per_array_latency_us", d.per_array_latency_us),
+            dp_host_staged: j.get("dp_host_staged").and_then(Json::as_bool).unwrap_or(d.dp_host_staged),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("gpus", num(self.gpus as f64)),
+            ("gemm_tflops", num(self.gemm_tflops)),
+            ("gemm_efficiency", num(self.gemm_efficiency)),
+            ("gemm_sat_batch", num(self.gemm_sat_batch)),
+            ("mem_bw_gbps", num(self.mem_bw_gbps)),
+            ("launch_overhead_us", num(self.launch_overhead_us)),
+            ("nvlink_gbps", num(self.nvlink_gbps)),
+            ("nvlink_latency_us", num(self.nvlink_latency_us)),
+            ("pcie_gbps", num(self.pcie_gbps)),
+            ("host_reduce_gbps", num(self.host_reduce_gbps)),
+            ("per_array_latency_us", num(self.per_array_latency_us)),
+            ("dp_host_staged", Json::Bool(self.dp_host_staged)),
+        ])
+    }
+}
+
+/// Training hyperparameters (paper Table 2 + §4.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Adam initial learning rate (paper: 1e-3).
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    /// Multiply LR by this when dev perplexity increases (paper: 0.7).
+    pub lr_decay: f64,
+    /// Check dev perplexity every this many optimizer steps (paper:
+    /// 5000 / 20000 batches for WMT14 / WMT17; scaled to corpus size).
+    pub decay_interval: usize,
+    /// Total optimizer steps for this run.
+    pub steps: usize,
+    /// Evaluate dev perplexity every this many steps.
+    pub eval_interval: usize,
+    /// Uniform init half-width.
+    pub init_scale: f64,
+    /// Global gradient-norm clip (0 disables).
+    pub clip_norm: f64,
+    /// RNG seed for init + data order.
+    pub seed: u64,
+    /// Plain SGD instead of Adam (the OpenNMT-lua comparator default).
+    pub sgd: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            lr_decay: 0.7,
+            decay_interval: 200,
+            steps: 400,
+            eval_interval: 25,
+            init_scale: 0.08,
+            clip_norm: 5.0,
+            seed: 0,
+            sgd: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = TrainConfig::default();
+        let f = |key: &str, dv: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dv);
+        let u = |key: &str, dv: usize| j.get(key).and_then(Json::as_usize).unwrap_or(dv);
+        Ok(TrainConfig {
+            lr: f("lr", d.lr),
+            beta1: f("beta1", d.beta1),
+            beta2: f("beta2", d.beta2),
+            eps: f("eps", d.eps),
+            lr_decay: f("lr_decay", d.lr_decay),
+            decay_interval: u("decay_interval", d.decay_interval),
+            steps: u("steps", d.steps),
+            eval_interval: u("eval_interval", d.eval_interval),
+            init_scale: f("init_scale", d.init_scale),
+            clip_norm: f("clip_norm", d.clip_norm),
+            seed: u("seed", d.seed as usize) as u64,
+            sgd: j.get("sgd").and_then(Json::as_bool).unwrap_or(d.sgd),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("lr", num(self.lr)),
+            ("beta1", num(self.beta1)),
+            ("beta2", num(self.beta2)),
+            ("eps", num(self.eps)),
+            ("lr_decay", num(self.lr_decay)),
+            ("decay_interval", num(self.decay_interval as f64)),
+            ("steps", num(self.steps as f64)),
+            ("eval_interval", num(self.eval_interval as f64)),
+            ("init_scale", num(self.init_scale)),
+            ("clip_norm", num(self.clip_norm)),
+            ("seed", num(self.seed as f64)),
+            ("sgd", Json::Bool(self.sgd)),
+        ])
+    }
+}
+
+/// Synthetic-corpus parameters (the WMT14/17 stand-ins; DESIGN.md §2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataConfig {
+    /// `wmt14-sim` or `wmt17-sim`.
+    pub dataset: String,
+    pub train_sentences: usize,
+    pub dev_sentences: usize,
+    pub test_sentences: usize,
+    /// Fraction of synthetic "back-translated" (noisier) pairs — 0 for
+    /// wmt14-sim; the 10M/19.1M proportion for wmt17-sim.
+    pub backtranslated_frac: f64,
+    pub seed: u64,
+}
+
+impl DataConfig {
+    pub fn wmt14_sim(train: usize) -> Self {
+        DataConfig {
+            dataset: "wmt14-sim".into(),
+            train_sentences: train,
+            dev_sentences: 300,
+            test_sentences: 300,
+            backtranslated_frac: 0.0,
+            seed: 14,
+        }
+    }
+
+    pub fn wmt17_sim(train: usize) -> Self {
+        DataConfig {
+            dataset: "wmt17-sim".into(),
+            train_sentences: train,
+            dev_sentences: 300,
+            test_sentences: 300,
+            backtranslated_frac: 10_000.0 / 19_122.0,
+            seed: 17,
+        }
+    }
+
+    pub fn by_name(name: &str, train: usize) -> Result<Self> {
+        match name {
+            "wmt14-sim" | "wmt14" => Ok(Self::wmt14_sim(train)),
+            "wmt17-sim" | "wmt17" => Ok(Self::wmt17_sim(train)),
+            _ => Err(anyhow!("unknown dataset `{name}`")),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let base = Self::by_name(j.req_str("dataset")?, 2000)?;
+        Ok(DataConfig {
+            train_sentences: j.get("train_sentences").and_then(Json::as_usize).unwrap_or(base.train_sentences),
+            dev_sentences: j.get("dev_sentences").and_then(Json::as_usize).unwrap_or(base.dev_sentences),
+            test_sentences: j.get("test_sentences").and_then(Json::as_usize).unwrap_or(base.test_sentences),
+            backtranslated_frac: j
+                .get("backtranslated_frac")
+                .and_then(Json::as_f64)
+                .unwrap_or(base.backtranslated_frac),
+            seed: j.get("seed").and_then(Json::as_usize).map(|x| x as u64).unwrap_or(base.seed),
+            dataset: base.dataset,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset", s(&self.dataset)),
+            ("train_sentences", num(self.train_sentences as f64)),
+            ("dev_sentences", num(self.dev_sentences as f64)),
+            ("test_sentences", num(self.test_sentences as f64)),
+            ("backtranslated_frac", num(self.backtranslated_frac)),
+            ("seed", num(self.seed as f64)),
+        ])
+    }
+}
+
+/// Top-level experiment config (one JSON file in `configs/`).
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub model: ModelDims,
+    pub strategy: Strategy,
+    pub hw: HwConfig,
+    pub train: TrainConfig,
+    pub data: DataConfig,
+    /// Artifact directory for `real` execution.
+    pub artifacts_dir: String,
+}
+
+impl Experiment {
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let strategy: Strategy = j.req_str("strategy")?.parse()?;
+        Ok(Experiment {
+            model: ModelDims::from_json(
+                j.get("model").ok_or_else(|| anyhow!("missing `model`"))?,
+            )?,
+            strategy,
+            hw: HwConfig::from_json(j.get("hw").unwrap_or(&Json::Null))?,
+            train: TrainConfig::from_json(j.get("train").unwrap_or(&Json::Null))?,
+            data: DataConfig::from_json(
+                j.get("data").ok_or_else(|| anyhow!("missing `data`"))?,
+            )?,
+            artifacts_dir: j
+                .get("artifacts_dir")
+                .and_then(Json::as_str)
+                .unwrap_or("artifacts")
+                .to_string(),
+        })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_json_text(&text).with_context(|| format!("parsing {path}"))
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", self.model.to_json()),
+            ("strategy", s(self.strategy.key())),
+            ("hw", self.hw.to_json()),
+            ("train", self.train.to_json()),
+            ("data", self.data.to_json()),
+            ("artifacts_dir", s(&self.artifacts_dir)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for st in Strategy::ALL {
+            assert_eq!(st.key().parse::<Strategy>().unwrap(), st);
+        }
+    }
+
+    #[test]
+    fn paper_batches_match_table3() {
+        assert_eq!(Strategy::Single.paper_batch(), 64);
+        assert_eq!(Strategy::Data.paper_batch(), 256);
+        assert_eq!(Strategy::Model.paper_batch(), 224);
+        assert_eq!(Strategy::Hybrid.paper_batch(), 224);
+        assert_eq!(Strategy::HybridIf.paper_batch(), 224);
+    }
+
+    #[test]
+    fn with_batch_keeps_shard_consistent() {
+        let d = ModelDims::paper().with_batch(256);
+        assert_eq!(d.shard, 64);
+    }
+
+    #[test]
+    fn only_hybrid_drops_input_feeding() {
+        assert!(!Strategy::Hybrid.uses_input_feeding());
+        assert!(Strategy::HybridIf.uses_input_feeding());
+        assert!(Strategy::Single.uses_input_feeding());
+    }
+
+    #[test]
+    fn experiment_json_roundtrip() {
+        let e = Experiment {
+            model: ModelDims::paper(),
+            strategy: Strategy::Hybrid,
+            hw: HwConfig::default(),
+            train: TrainConfig::default(),
+            data: DataConfig::wmt14_sim(1000),
+            artifacts_dir: "artifacts".into(),
+        };
+        let text = e.to_json().to_string();
+        let back = Experiment::from_json_text(&text).unwrap();
+        assert_eq!(back.model, e.model);
+        assert_eq!(back.strategy, e.strategy);
+        assert_eq!(back.hw, e.hw);
+        assert_eq!(back.train, e.train);
+        assert_eq!(back.data, e.data);
+    }
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let e = Experiment::from_json_text(
+            r#"{"model": {"name":"t","d":8,"h":16,"layers":2,"vocab":32,
+                 "batch":8,"gpus":4,"shard":2,"max_src":6,"max_tgt":6,"beam":3},
+                "strategy": "hybrid",
+                "data": {"dataset": "wmt14-sim"}}"#,
+        )
+        .unwrap();
+        assert_eq!(e.hw, HwConfig::default());
+        assert_eq!(e.train.lr, 1e-3);
+    }
+}

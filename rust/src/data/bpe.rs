@@ -1,0 +1,228 @@
+//! Byte-pair encoding, from scratch (paper §4.1 uses joint-BPE 32K).
+//!
+//! Trained on the joint source+target word-frequency table; merges are
+//! learned greedily on the most frequent adjacent symbol pair, exactly
+//! the Sennrich et al. (2016) algorithm. Word-internal pieces carry an
+//! `@@` suffix (the Marian/subword-nmt convention the paper's pipeline
+//! used), so detokenization is `"@@ " -> ""`.
+
+use std::collections::HashMap;
+
+/// A trained BPE model: ordered merge list + (derived) symbol set.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// Merge rules in training order: (left, right) -> joined.
+    merges: Vec<(String, String)>,
+    /// Rank lookup for fast encoding.
+    rank: HashMap<(String, String), usize>,
+}
+
+/// Split a word into initial symbols: chars, all but the last carrying
+/// the continuation marker.
+fn word_symbols(word: &str) -> Vec<String> {
+    let chars: Vec<char> = word.chars().collect();
+    let n = chars.len();
+    chars
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            if i + 1 < n {
+                format!("{c}@@")
+            } else {
+                c.to_string()
+            }
+        })
+        .collect()
+}
+
+/// Join two symbols respecting the continuation marker.
+fn join(a: &str, b: &str) -> String {
+    let core = a.strip_suffix("@@").unwrap_or(a);
+    format!("{core}{b}")
+}
+
+impl Bpe {
+    /// Train `n_merges` merges on a word -> frequency table.
+    pub fn train(word_freq: &HashMap<String, u64>, n_merges: usize) -> Self {
+        let mut words: Vec<(Vec<String>, u64)> = word_freq
+            .iter()
+            .map(|(w, &f)| (word_symbols(w), f))
+            .collect();
+        words.sort_by(|a, b| a.0.cmp(&b.0)); // determinism
+        let mut merges = Vec::new();
+        for _ in 0..n_merges {
+            let mut pair_freq: HashMap<(String, String), u64> = HashMap::new();
+            for (syms, f) in &words {
+                for win in syms.windows(2) {
+                    *pair_freq
+                        .entry((win[0].clone(), win[1].clone()))
+                        .or_insert(0) += f;
+                }
+            }
+            // Most frequent pair; ties broken lexicographically for
+            // reproducibility.
+            let best = pair_freq
+                .into_iter()
+                .max_by(|a, b| a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0)));
+            let Some(((a, b), f)) = best else { break };
+            if f < 2 {
+                break;
+            }
+            let joined = join(&a, &b);
+            for (syms, _) in &mut words {
+                let mut i = 0;
+                while i + 1 < syms.len() {
+                    if syms[i] == a && syms[i + 1] == b {
+                        syms[i] = joined.clone();
+                        syms.remove(i + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            merges.push((a, b));
+        }
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.clone(), i))
+            .collect();
+        Bpe { merges, rank }
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// All symbols the model can emit (for vocabulary construction):
+    /// single chars (with/without `@@`) + every merge product, in
+    /// frequency-ish (training) order.
+    pub fn symbols(&self, word_freq: &HashMap<String, u64>) -> Vec<String> {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut out = Vec::new();
+        let mut push = |s: String, out: &mut Vec<String>| {
+            if seen.insert(s.clone()) {
+                out.push(s);
+            }
+        };
+        let mut base: Vec<String> = word_freq
+            .keys()
+            .flat_map(|w| word_symbols(w))
+            .collect();
+        base.sort();
+        for s in base {
+            push(s, &mut out);
+        }
+        for (a, b) in &self.merges {
+            push(join(a, b), &mut out);
+        }
+        out
+    }
+
+    /// Encode one word into BPE symbols.
+    pub fn encode_word(&self, word: &str) -> Vec<String> {
+        let mut syms = word_symbols(word);
+        loop {
+            // Lowest-rank applicable merge.
+            let mut best: Option<(usize, usize)> = None; // (rank, position)
+            for i in 0..syms.len().saturating_sub(1) {
+                if let Some(&r) = self
+                    .rank
+                    .get(&(syms[i].clone(), syms[i + 1].clone()))
+                {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            match best {
+                None => break,
+                Some((_, i)) => {
+                    syms[i] = join(&syms[i].clone(), &syms[i + 1].clone());
+                    syms.remove(i + 1);
+                }
+            }
+        }
+        syms
+    }
+
+    /// Encode a whitespace-tokenized sentence.
+    pub fn encode(&self, sentence: &str) -> Vec<String> {
+        sentence
+            .split_whitespace()
+            .flat_map(|w| self.encode_word(w))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn freq(pairs: &[(&str, u64)]) -> HashMap<String, u64> {
+        pairs.iter().map(|(w, f)| (w.to_string(), *f)).collect()
+    }
+
+    #[test]
+    fn learns_frequent_pairs_first() {
+        let wf = freq(&[("aaab", 10), ("aab", 5)]);
+        let bpe = Bpe::train(&wf, 1);
+        assert_eq!(bpe.merges[0], ("a@@".to_string(), "a@@".to_string()));
+    }
+
+    #[test]
+    fn encode_applies_merges_in_rank_order() {
+        let wf = freq(&[("abab", 20), ("ab", 10)]);
+        let bpe = Bpe::train(&wf, 10);
+        let syms = bpe.encode_word("abab");
+        // Fully merged after enough merges.
+        assert_eq!(syms, vec!["abab".to_string()]);
+    }
+
+    #[test]
+    fn continuation_markers_consistent() {
+        let wf = freq(&[("hello", 5), ("help", 5)]);
+        let bpe = Bpe::train(&wf, 3);
+        let syms = bpe.encode_word("hello");
+        // Rejoining pieces reproduces the word.
+        let mut word = String::new();
+        for s in &syms {
+            word.push_str(s.strip_suffix("@@").unwrap_or(s));
+        }
+        assert_eq!(word, "hello");
+        // All but the last piece carry @@.
+        for s in &syms[..syms.len() - 1] {
+            assert!(s.ends_with("@@"), "{s}");
+        }
+        assert!(!syms.last().unwrap().ends_with("@@"));
+    }
+
+    #[test]
+    fn unseen_word_falls_back_to_chars() {
+        let wf = freq(&[("abc", 5)]);
+        let bpe = Bpe::train(&wf, 2);
+        let syms = bpe.encode_word("xyz");
+        assert_eq!(syms, vec!["x@@", "y@@", "z"]);
+    }
+
+    #[test]
+    fn symbols_cover_all_encodings() {
+        let wf = freq(&[("abc", 9), ("abd", 7), ("cd", 3)]);
+        let bpe = Bpe::train(&wf, 5);
+        let symbols: std::collections::HashSet<String> =
+            bpe.symbols(&wf).into_iter().collect();
+        for w in wf.keys() {
+            for s in bpe.encode_word(w) {
+                assert!(symbols.contains(&s), "missing {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let wf = freq(&[("abab", 4), ("baba", 4), ("aabb", 4)]);
+        let a = Bpe::train(&wf, 6);
+        let b = Bpe::train(&wf, 6);
+        assert_eq!(a.merges, b.merges);
+    }
+}

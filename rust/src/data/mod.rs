@@ -1,0 +1,13 @@
+//! Data pipeline: synthetic parallel corpora (the WMT14/WMT17 En-De
+//! stand-ins — DESIGN.md §2), a from-scratch BPE subword tokenizer, and
+//! length-bucketed batch assembly padded to the artifact shapes.
+
+pub mod batcher;
+pub mod bpe;
+pub mod synthetic;
+pub mod vocab;
+
+pub use batcher::{Batcher, Example};
+pub use bpe::Bpe;
+pub use synthetic::{Corpus, SentencePair};
+pub use vocab::{Vocab, BOS, EOS, PAD, UNK};

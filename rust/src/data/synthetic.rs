@@ -1,0 +1,308 @@
+//! Synthetic parallel corpora: the WMT14 / WMT17 En-De stand-ins.
+//!
+//! Requirements (DESIGN.md §2): realistic token-frequency shape (Zipf),
+//! realistic length distribution, a *learnable* deterministic
+//! translation relation (so convergence/BLEU comparisons between
+//! strategies are meaningful), and — for `wmt17-sim` — a noisy
+//! "back-translated" portion mirroring the paper's 10M pseudo-parallel
+//! sentences.
+//!
+//! Construction:
+//! * a lexicon of CV-patterned source word forms ("mizo", "katelu", …)
+//!   sampled Zipf — BPE finds real structure in them;
+//! * target language = bijective lexeme mapping (suffix-marked forms)
+//!   + a deterministic local reorder (adjacent pairs swap) — a toy but
+//!   genuinely sequence-to-sequence transduction with reordering, the
+//!   thing attention has to learn;
+//! * back-translated pairs additionally drop/duplicate target words at
+//!   random (source-side clean, target-side noisy — like real BT data).
+
+use crate::rng::Rng;
+
+/// One parallel sentence (whitespace-tokenized words, not yet BPE).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SentencePair {
+    pub src: String,
+    pub tgt: String,
+    /// True for the synthetic back-translated portion (wmt17-sim).
+    pub backtranslated: bool,
+}
+
+/// A generated corpus with train/dev/test splits.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub name: String,
+    pub train: Vec<SentencePair>,
+    pub dev: Vec<SentencePair>,
+    pub test: Vec<SentencePair>,
+    pub lexicon: Lexicon,
+}
+
+/// The source/target word-form tables.
+#[derive(Debug, Clone)]
+pub struct Lexicon {
+    pub src_words: Vec<String>,
+    pub tgt_words: Vec<String>,
+}
+
+const CONSONANTS: &[u8] = b"ptkbdgmnszrlvf";
+const VOWELS: &[u8] = b"aeiou";
+
+fn make_word(rng: &mut Rng, syllables: usize) -> String {
+    let mut w = String::new();
+    for _ in 0..syllables {
+        w.push(CONSONANTS[rng.below(CONSONANTS.len())] as char);
+        w.push(VOWELS[rng.below(VOWELS.len())] as char);
+    }
+    w
+}
+
+impl Lexicon {
+    /// `n` lexemes; the target form of lexeme i is a deterministic
+    /// transform of the source form (reversed syllables + case suffix),
+    /// giving the two "languages" related but distinct subword
+    /// statistics — what joint BPE is for.
+    pub fn generate(n: usize, rng: &mut Rng) -> Self {
+        let mut src_words = Vec::with_capacity(n);
+        let mut seen = std::collections::HashSet::new();
+        while src_words.len() < n {
+            let syllables = rng.range(1, 4);
+            let w = make_word(rng, syllables);
+            if seen.insert(w.clone()) {
+                src_words.push(w);
+            }
+        }
+        let tgt_words = src_words
+            .iter()
+            .map(|w| {
+                // Target form = shared stem + "declension" suffix keyed on
+                // word length. Cognate-style vocabulary: joint BPE shares
+                // the stems across languages, so the model learns
+                // attention-copy + a morphological rule — learnable to
+                // near-perfect BLEU at this testbed's training budgets
+                // (the point of Tables 4-5 is decoder-hyperparameter and
+                // baseline-vs-hybrid *parity* structure, not task
+                // difficulty).
+                let suffix = match w.len() % 3 {
+                    0 => "en",
+                    1 => "a",
+                    _ => "os",
+                };
+                format!("{w}{suffix}")
+            })
+            .collect();
+        Lexicon { src_words, tgt_words }
+    }
+}
+
+/// Deterministic reorder: swap each adjacent pair (positions 0<->1,
+/// 2<->3, ...). A fixed, learnable word-order divergence.
+fn reorder<T: Clone>(xs: &[T]) -> Vec<T> {
+    let mut out = xs.to_vec();
+    let mut i = 0;
+    while i + 1 < out.len() {
+        out.swap(i, i + 1);
+        i += 2;
+    }
+    out
+}
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    pub n_lexemes: usize,
+    /// Word-length (not subword) bounds per sentence.
+    pub min_len: usize,
+    pub max_len: usize,
+    pub backtranslated_frac: f64,
+    pub seed: u64,
+}
+
+impl GenConfig {
+    /// Defaults sized for a model config: sentences must BPE-encode to
+    /// <= max_src / max_tgt subwords, so word lengths stay conservative.
+    pub fn for_dims(max_src: usize, backtranslated_frac: f64, seed: u64) -> Self {
+        GenConfig {
+            // 200 lexemes: dense Zipf coverage at the few-thousand-sentence
+            // corpus sizes this testbed trains on (600 left an unlearnable
+            // tail that capped BLEU for every system equally).
+            n_lexemes: 200,
+            min_len: 2,
+            max_len: (max_src / 3).max(3),
+            backtranslated_frac,
+            seed,
+        }
+    }
+}
+
+fn gen_pair(lex: &Lexicon, cfg: &GenConfig, rng: &mut Rng, backtranslated: bool) -> SentencePair {
+    let len = rng.range(cfg.min_len, cfg.max_len + 1);
+    let idxs: Vec<usize> = (0..len).map(|_| rng.zipf(lex.src_words.len())).collect();
+    let src_words: Vec<&str> = idxs.iter().map(|&i| lex.src_words[i].as_str()).collect();
+    let mut tgt_idx = reorder(&idxs);
+    if backtranslated {
+        // Back-translation noise: drop or duplicate a word (target side
+        // only — the "MT output" side of synthetic BT pairs).
+        if tgt_idx.len() > 2 && rng.chance(0.3) {
+            let pos = rng.below(tgt_idx.len());
+            if rng.chance(0.5) {
+                tgt_idx.remove(pos);
+            } else {
+                let w = tgt_idx[pos];
+                tgt_idx.insert(pos, w);
+            }
+        }
+        // ... or substitute with a random lexeme.
+        if rng.chance(0.2) {
+            let pos = rng.below(tgt_idx.len());
+            tgt_idx[pos] = rng.zipf(lex.src_words.len());
+        }
+    }
+    let tgt_words: Vec<&str> = tgt_idx.iter().map(|&i| lex.tgt_words[i].as_str()).collect();
+    SentencePair {
+        src: src_words.join(" "),
+        tgt: tgt_words.join(" "),
+        backtranslated,
+    }
+}
+
+impl Corpus {
+    /// Generate a full corpus. Dev/test are always clean (real WMT dev
+    /// sets are genuine parallel text even when training data is
+    /// augmented).
+    pub fn generate(
+        name: &str,
+        train: usize,
+        dev: usize,
+        test: usize,
+        gen: &GenConfig,
+    ) -> Corpus {
+        let mut rng = Rng::new(gen.seed);
+        let lexicon = Lexicon::generate(gen.n_lexemes, &mut rng);
+        let n_bt = (train as f64 * gen.backtranslated_frac).round() as usize;
+        let mut trainset = Vec::with_capacity(train);
+        for i in 0..train {
+            trainset.push(gen_pair(&lexicon, gen, &mut rng, i < n_bt));
+        }
+        rng.shuffle(&mut trainset);
+        let devset = (0..dev).map(|_| gen_pair(&lexicon, gen, &mut rng, false)).collect();
+        let testset = (0..test).map(|_| gen_pair(&lexicon, gen, &mut rng, false)).collect();
+        Corpus {
+            name: name.to_string(),
+            train: trainset,
+            dev: devset,
+            test: testset,
+            lexicon,
+        }
+    }
+
+    /// Table 1-style stats: (split, sentences, of which back-translated).
+    pub fn stats(&self) -> Vec<(&'static str, usize, usize)> {
+        let bt = self.train.iter().filter(|p| p.backtranslated).count();
+        vec![
+            ("train", self.train.len(), bt),
+            ("dev", self.dev.len(), 0),
+            ("test", self.test.len(), 0),
+        ]
+    }
+
+    /// Word-frequency table over both sides (joint BPE input).
+    pub fn word_freq(&self) -> std::collections::HashMap<String, u64> {
+        let mut wf = std::collections::HashMap::new();
+        for p in self.train.iter().chain(&self.dev) {
+            for w in p.src.split_whitespace().chain(p.tgt.split_whitespace()) {
+                *wf.entry(w.to_string()).or_insert(0) += 1;
+            }
+        }
+        wf
+    }
+
+    /// The oracle translation of a source sentence (for diagnostics and
+    /// BLEU upper-bound checks): clean mapping + reorder.
+    pub fn oracle_translate(&self, src: &str) -> String {
+        let idx: Vec<usize> = src
+            .split_whitespace()
+            .map(|w| {
+                self.lexicon
+                    .src_words
+                    .iter()
+                    .position(|x| x == w)
+                    .unwrap_or(0)
+            })
+            .collect();
+        reorder(&idx)
+            .iter()
+            .map(|&i| self.lexicon.tgt_words[i].as_str())
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Corpus {
+        Corpus::generate("t", 200, 20, 20, &GenConfig::for_dims(24, 0.5, 1))
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = small();
+        let b = small();
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+    }
+
+    #[test]
+    fn translation_is_learnable_mapping() {
+        let c = small();
+        // Clean pairs obey the oracle exactly.
+        for p in c.train.iter().filter(|p| !p.backtranslated).take(20) {
+            assert_eq!(p.tgt, c.oracle_translate(&p.src), "src: {}", p.src);
+        }
+    }
+
+    #[test]
+    fn reorder_swaps_adjacent_pairs() {
+        assert_eq!(reorder(&[1, 2, 3, 4, 5]), vec![2, 1, 4, 3, 5]);
+        assert_eq!(reorder(&[1]), vec![1]);
+    }
+
+    #[test]
+    fn backtranslated_fraction_respected() {
+        let c = small();
+        let bt = c.train.iter().filter(|p| p.backtranslated).count();
+        assert!((bt as f64 - 100.0).abs() < 2.0, "bt = {bt}");
+        // Dev/test clean.
+        assert!(c.dev.iter().all(|p| !p.backtranslated));
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let c = small();
+        for p in &c.train {
+            let n = p.src.split_whitespace().count();
+            assert!((2..=8).contains(&n), "len {n}");
+        }
+    }
+
+    #[test]
+    fn zipf_vocabulary_head_dominates() {
+        let c = Corpus::generate("t", 2000, 0, 0, &GenConfig::for_dims(24, 0.0, 2));
+        let wf = c.word_freq();
+        let mut freqs: Vec<u64> = wf.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u64 = freqs.iter().sum();
+        let head: u64 = freqs.iter().take(freqs.len() / 10).sum();
+        assert!(head as f64 > 0.4 * total as f64);
+    }
+
+    #[test]
+    fn lexicon_is_bijective() {
+        let mut rng = Rng::new(5);
+        let lex = Lexicon::generate(300, &mut rng);
+        let uniq: std::collections::HashSet<&String> = lex.tgt_words.iter().collect();
+        assert_eq!(uniq.len(), lex.tgt_words.len());
+    }
+}

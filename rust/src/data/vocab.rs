@@ -1,0 +1,124 @@
+//! Token vocabulary with fixed special ids.
+//!
+//! The artifact shapes bake in `vocab` exactly, so the vocabulary is
+//! always padded/truncated to that size; ids 0-3 are reserved.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+
+/// Bidirectional token table of exactly `size` entries.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    tokens: Vec<String>,
+    index: HashMap<String, i32>,
+}
+
+impl Vocab {
+    /// Build from a token list (specials prepended, padded to `size`).
+    pub fn new(mut tokens: Vec<String>, size: usize) -> Self {
+        let specials = ["<pad>", "<s>", "</s>", "<unk>"];
+        assert!(size > specials.len(), "vocab size too small");
+        tokens.truncate(size - specials.len());
+        let mut all: Vec<String> = specials.iter().map(|s| s.to_string()).collect();
+        all.extend(tokens);
+        while all.len() < size {
+            all.push(format!("<unused{}>", all.len()));
+        }
+        let index = all
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as i32))
+            .collect();
+        Vocab { tokens: all, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn id(&self, token: &str) -> i32 {
+        *self.index.get(token).unwrap_or(&UNK)
+    }
+
+    pub fn token(&self, id: i32) -> &str {
+        self.tokens
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    /// Detokenize subword ids back to space-joined words, dropping
+    /// specials and rejoining BPE continuation pieces (`@@` suffix).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        let mut joining = false;
+        for &id in ids {
+            if id == PAD || id == BOS {
+                continue;
+            }
+            if id == EOS {
+                break;
+            }
+            let tok = self.token(id);
+            let (piece, cont) = match tok.strip_suffix("@@") {
+                Some(p) => (p, true),
+                None => (tok, false),
+            };
+            if !joining && !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(piece);
+            joining = cont;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let v = Vocab::new(vec!["a".into(), "b".into()], 8);
+        assert_eq!(v.id("<pad>"), PAD);
+        assert_eq!(v.id("<s>"), BOS);
+        assert_eq!(v.id("</s>"), EOS);
+        assert_eq!(v.id("<unk>"), UNK);
+        assert_eq!(v.id("a"), 4);
+    }
+
+    #[test]
+    fn pads_to_exact_size() {
+        let v = Vocab::new(vec!["a".into()], 10);
+        assert_eq!(v.len(), 10);
+        assert_eq!(v.token(9), "<unused9>");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = Vocab::new(vec![], 6);
+        assert_eq!(v.id("zzz"), UNK);
+    }
+
+    #[test]
+    fn decode_joins_bpe_pieces() {
+        let v = Vocab::new(vec!["he@@".into(), "llo".into(), "world".into()], 10);
+        let ids = vec![BOS, v.id("he@@"), v.id("llo"), v.id("world"), EOS, PAD];
+        assert_eq!(v.decode(&ids), "hello world");
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let v = Vocab::new(vec!["x".into()], 8);
+        assert_eq!(v.decode(&[v.id("x"), EOS, v.id("x")]), "x");
+    }
+}

@@ -1,0 +1,338 @@
+//! Beam-search decoder over the AOT artifacts (Tables 4-5).
+//!
+//! Drives the same per-cell / per-step artifacts the trainer uses, at
+//! the decode batch size (= widest beam, smaller beams padded with dead
+//! rows), entirely from rust — python is never on the decode path.
+//!
+//! Two score-normalization families, matching the paper's Table 4:
+//! * **Marian** (used for HybridNMT rows): score = logp / len^α;
+//! * **GNMT** (used for the OpenNMT-lua rows): Wu et al. (2016)
+//!   length normalization `((5+len)^α)/(6^α)` plus the coverage penalty
+//!   `β · Σ_j log(min(Σ_i α_ij, 1))` computed from the attention
+//!   weights the `attn_step_logits` artifact emits.
+
+use crate::config::ModelDims;
+use crate::data::vocab::{BOS, EOS, PAD};
+use crate::model_spec::cell_din;
+use crate::runtime::{keys, Arg, Engine};
+use crate::tensor::{ITensor, Tensor};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Score normalization (Table 4 hyperparameters).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthNorm {
+    /// Marian: divide the model score by `len^alpha`.
+    Marian { alpha: f64 },
+    /// GNMT: length normalization `((5+len)/6)^alpha` + coverage `beta`.
+    Gnmt { alpha: f64, beta: f64 },
+}
+
+impl LengthNorm {
+    fn score(&self, logp: f64, len: usize, coverage: &[f32]) -> f64 {
+        match *self {
+            LengthNorm::Marian { alpha } => logp / (len as f64).powf(alpha),
+            LengthNorm::Gnmt { alpha, beta } => {
+                let lp = ((5.0 + len as f64) / 6.0).powf(alpha);
+                let cp: f64 = if beta != 0.0 {
+                    beta * coverage
+                        .iter()
+                        .filter(|&&c| c > 0.0)
+                        .map(|&c| (c as f64).min(1.0).ln())
+                        .sum::<f64>()
+                } else {
+                    0.0
+                };
+                logp / lp + cp
+            }
+        }
+    }
+}
+
+/// Beam-search settings.
+#[derive(Debug, Clone, Copy)]
+pub struct BeamConfig {
+    pub beam: usize,
+    pub max_len: usize,
+    pub norm: LengthNorm,
+}
+
+/// One hypothesis.
+#[derive(Debug, Clone)]
+struct Hyp {
+    tokens: Vec<i32>,
+    logp: f64,
+    /// Accumulated attention mass per source position (coverage).
+    coverage: Vec<f32>,
+    alive: bool,
+}
+
+/// A finished candidate with its normalized score.
+#[derive(Debug, Clone)]
+struct Finished {
+    tokens: Vec<i32>,
+    score: f64,
+}
+
+/// Artifact-driven decoder for one trained model.
+pub struct Decoder<'a> {
+    engine: &'a Engine,
+    params: &'a BTreeMap<String, Tensor>,
+    dims: ModelDims,
+    pub input_feeding: bool,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        params: &'a BTreeMap<String, Tensor>,
+        input_feeding: bool,
+    ) -> Self {
+        Decoder { engine, params, dims: engine.dims().clone(), input_feeding }
+    }
+
+    /// Longest target the artifact shapes allow.
+    pub fn max_len(&self) -> usize {
+        self.dims.max_tgt
+    }
+
+    fn p(&self, name: &str) -> &Tensor {
+        &self.params[name]
+    }
+
+    /// Encode `src_ids` once at the decode batch width (rows identical).
+    fn encode(&self, src_ids: &[i32]) -> Result<(Tensor, ITensor)> {
+        let d = &self.dims;
+        let bw = d.beam;
+        let m = d.max_src;
+        assert!(src_ids.len() <= m, "source too long for artifact shape");
+        let mut padded = vec![PAD; m];
+        padded[..src_ids.len()].copy_from_slice(src_ids);
+        let srclen = ITensor::new(vec![bw], vec![src_ids.len() as i32; bw]);
+
+        let mut h: Vec<Tensor> = (0..d.layers).map(|_| Tensor::zeros(&[bw, d.h])).collect();
+        let mut c: Vec<Tensor> = (0..d.layers).map(|_| Tensor::zeros(&[bw, d.h])).collect();
+        let mut tops: Vec<Tensor> = Vec::with_capacity(m);
+        for t in 0..m {
+            let ids = ITensor::new(vec![bw], vec![padded[t]; bw]);
+            let x0 = self
+                .engine
+                .exec(&keys::embed_fwd(bw), &[Arg::F(self.p("src_emb")), Arg::I(&ids)])?
+                .remove(0);
+            let mut x = x0;
+            for l in 0..d.layers {
+                let din = cell_din(d, false, l, self.input_feeding);
+                let mut out = self.engine.exec(
+                    &keys::lstm_cell_fwd(din, bw),
+                    &[
+                        Arg::F(self.p(&format!("enc_l{l}_W"))),
+                        Arg::F(self.p(&format!("enc_l{l}_b"))),
+                        Arg::F(&x),
+                        Arg::F(&h[l]),
+                        Arg::F(&c[l]),
+                    ],
+                )?;
+                c[l] = out.remove(1);
+                h[l] = out.remove(0);
+                x = h[l].clone();
+            }
+            tops.push(x);
+        }
+        let refs: Vec<&Tensor> = tops.iter().collect();
+        Ok((Tensor::stack_time(&refs), srclen))
+    }
+
+    /// Translate one source sentence; returns target token ids (no BOS/EOS).
+    pub fn translate(&self, src_ids: &[i32], cfg: &BeamConfig) -> Result<Vec<i32>> {
+        let d = &self.dims;
+        let bw = d.beam;
+        assert!(cfg.beam <= bw, "beam {} exceeds artifact width {bw}", cfg.beam);
+        // Standard relative length cap: targets longer than ~2x the
+        // source never win after normalization; skipping those steps
+        // halves decode latency on short inputs.
+        let max_len = cfg.max_len.min(d.max_tgt).min(2 * src_ids.len() + 3);
+        let (s_block, srclen) = self.encode(src_ids)?;
+
+        let mut h: Vec<Tensor> = (0..d.layers).map(|_| Tensor::zeros(&[bw, d.h])).collect();
+        let mut c: Vec<Tensor> = (0..d.layers).map(|_| Tensor::zeros(&[bw, d.h])).collect();
+        let mut hc_prev = Tensor::zeros(&[bw, d.h]);
+
+        // Row 0 starts live; the rest are dead until the first expansion.
+        let mut hyps: Vec<Hyp> = (0..bw)
+            .map(|i| Hyp {
+                tokens: vec![BOS],
+                logp: if i == 0 { 0.0 } else { f64::NEG_INFINITY },
+                coverage: vec![0.0; d.max_src],
+                alive: i == 0,
+            })
+            .collect();
+        let mut finished: Vec<Finished> = Vec::new();
+
+        for _step in 0..max_len {
+            if hyps.iter().all(|x| !x.alive) {
+                break;
+            }
+            // Feed last tokens.
+            let last: Vec<i32> = hyps.iter().map(|x| *x.tokens.last().unwrap()).collect();
+            let ids = ITensor::new(vec![bw], last);
+            let emb = self
+                .engine
+                .exec(&keys::embed_fwd(bw), &[Arg::F(self.p("tgt_emb")), Arg::I(&ids)])?
+                .remove(0);
+            let mut x = if self.input_feeding {
+                Tensor::concat1(&emb, &hc_prev)
+            } else {
+                emb
+            };
+            for l in 0..d.layers {
+                let din = cell_din(d, true, l, self.input_feeding);
+                let mut out = self.engine.exec(
+                    &keys::lstm_cell_fwd(din, bw),
+                    &[
+                        Arg::F(self.p(&format!("dec_l{l}_W"))),
+                        Arg::F(self.p(&format!("dec_l{l}_b"))),
+                        Arg::F(&x),
+                        Arg::F(&h[l]),
+                        Arg::F(&c[l]),
+                    ],
+                )?;
+                c[l] = out.remove(1);
+                h[l] = out.remove(0);
+                x = h[l].clone();
+            }
+            let mut out = self.engine.exec(
+                &keys::attn_step_logits(bw),
+                &[
+                    Arg::F(self.p("attn_Wa")),
+                    Arg::F(self.p("attn_Wc")),
+                    Arg::F(self.p("attn_Wout")),
+                    Arg::F(self.p("attn_bout")),
+                    Arg::F(&s_block),
+                    Arg::I(&srclen),
+                    Arg::F(&x),
+                ],
+            )?;
+            let alpha = out.remove(2);
+            let hc = out.remove(1);
+            let logp = out.remove(0);
+            hc_prev = hc;
+
+            // Expand: all (row, token) candidates from live rows.
+            let v = d.vocab;
+            let mut cands: Vec<(f64, usize, i32)> = Vec::new();
+            for (row, hyp) in hyps.iter().enumerate() {
+                if !hyp.alive {
+                    continue;
+                }
+                let lp_row = &logp.data()[row * v..(row + 1) * v];
+                // Top-(beam) per row is plenty (global top-beam ⊆ union).
+                let mut idx: Vec<usize> = (0..v).collect();
+                idx.sort_unstable_by(|&a, &b| {
+                    lp_row[b].partial_cmp(&lp_row[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                for &tok in idx.iter().take(cfg.beam) {
+                    cands.push((hyp.logp + lp_row[tok] as f64, row, tok as i32));
+                }
+            }
+            cands.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+            cands.truncate(cfg.beam);
+
+            // Rebuild hypotheses + reorder the recurrent state rows.
+            let mut new_hyps: Vec<Hyp> = Vec::with_capacity(bw);
+            let mut src_rows: Vec<usize> = Vec::with_capacity(bw);
+            for &(score, row, tok) in &cands {
+                let parent = &hyps[row];
+                let mut coverage = parent.coverage.clone();
+                for (j, cv) in coverage.iter_mut().enumerate() {
+                    *cv += alpha.data()[row * d.max_src + j];
+                }
+                let mut tokens = parent.tokens.clone();
+                tokens.push(tok);
+                if tok == EOS {
+                    let hyp_len = tokens.len() - 2; // minus BOS, EOS
+                    finished.push(Finished {
+                        tokens: tokens[1..tokens.len() - 1].to_vec(),
+                        score: cfg.norm.score(score, hyp_len.max(1), &coverage),
+                    });
+                    // Dead row placeholder keeps the batch rectangular.
+                    new_hyps.push(Hyp {
+                        tokens,
+                        logp: f64::NEG_INFINITY,
+                        coverage,
+                        alive: false,
+                    });
+                } else {
+                    new_hyps.push(Hyp { tokens, logp: score, coverage, alive: true });
+                }
+                src_rows.push(row);
+            }
+            while new_hyps.len() < bw {
+                new_hyps.push(Hyp {
+                    tokens: vec![BOS, EOS],
+                    logp: f64::NEG_INFINITY,
+                    coverage: vec![0.0; d.max_src],
+                    alive: false,
+                });
+                src_rows.push(0);
+            }
+            hyps = new_hyps;
+            for l in 0..d.layers {
+                h[l] = h[l].gather_rows(&src_rows);
+                c[l] = c[l].gather_rows(&src_rows);
+            }
+            hc_prev = hc_prev.gather_rows(&src_rows);
+        }
+
+        // Unfinished survivors compete too (forced-EOS at max length).
+        for hyp in &hyps {
+            if hyp.alive {
+                let toks = hyp.tokens[1..].to_vec();
+                finished.push(Finished {
+                    score: cfg.norm.score(hyp.logp, toks.len().max(1), &hyp.coverage),
+                    tokens: toks,
+                });
+            }
+        }
+        finished.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+        Ok(finished.first().map(|f| f.tokens.clone()).unwrap_or_default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marian_norm_divides_by_len() {
+        let n = LengthNorm::Marian { alpha: 1.0 };
+        assert!((n.score(-10.0, 5, &[]) - (-2.0)).abs() < 1e-12);
+        let n0 = LengthNorm::Marian { alpha: 0.0 };
+        assert_eq!(n0.score(-10.0, 5, &[]), -10.0);
+    }
+
+    #[test]
+    fn gnmt_norm_prefers_longer_at_same_logp() {
+        let n = LengthNorm::Gnmt { alpha: 1.0, beta: 0.0 };
+        assert!(n.score(-10.0, 10, &[]) > n.score(-10.0, 5, &[]));
+    }
+
+    #[test]
+    fn coverage_penalizes_ignored_source() {
+        let n = LengthNorm::Gnmt { alpha: 0.0, beta: 0.2 };
+        let full = vec![1.0f32; 4];
+        let partial = vec![1.0f32, 1.0, 0.1, 0.1];
+        assert!(n.score(-5.0, 4, &full) > n.score(-5.0, 4, &partial));
+    }
+
+    #[test]
+    fn longer_beam_orderings_stable() {
+        // score() must be monotone in logp for fixed len/coverage.
+        for norm in [
+            LengthNorm::Marian { alpha: 0.6 },
+            LengthNorm::Gnmt { alpha: 0.8, beta: 0.2 },
+        ] {
+            let cov = vec![0.5f32; 3];
+            assert!(norm.score(-3.0, 4, &cov) > norm.score(-4.0, 4, &cov));
+        }
+    }
+}

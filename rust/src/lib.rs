@@ -1,0 +1,26 @@
+//! HybridNMT: hybrid data-model parallel training for Seq2Seq RNN MT.
+//!
+//! A full-system reproduction of Ono, Utiyama & Sumita (2019): a rust
+//! coordinator (this crate) schedules a Luong-attention seq2seq LSTM
+//! model whose compute is AOT-compiled from JAX/Pallas to HLO artifacts
+//! and executed via PJRT. A discrete-event simulator of a 4×V100 NVLink
+//! node times the schedules; the five parallelization strategies of the
+//! paper's Table 3 are planners over one task-graph IR.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod config;
+pub mod data;
+pub mod decode;
+pub mod metrics;
+pub mod model_spec;
+pub mod parallel;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod train;
+pub mod util;
+pub mod optim;

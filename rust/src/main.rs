@@ -1,0 +1,366 @@
+//! hybridnmt — leader entrypoint / CLI.
+//!
+//! Subcommands (see README):
+//!   train      train one strategy on a synthetic corpus (real numerics)
+//!   translate  beam-search decode a checkpoint on the test set
+//!   sim        simulate one strategy's step schedule, print breakdown
+//!   table1..5  regenerate the paper's tables
+//!   figure4    regenerate the convergence-speed figure
+//!
+//! Flag parsing is hand-rolled (fully-offline build: no clap).
+
+use anyhow::{anyhow, Context, Result};
+use hybridnmt::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig};
+use hybridnmt::decode::{BeamConfig, Decoder, LengthNorm};
+use hybridnmt::metrics::corpus_bleu;
+use hybridnmt::parallel::build_plan;
+use hybridnmt::report;
+use hybridnmt::runtime::Engine;
+use hybridnmt::sim::simulate;
+use hybridnmt::train::{checkpoint, Trainer};
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = std::collections::HashMap::new();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got `{a}`"))?
+                .to_string();
+            let val = it.next().unwrap_or_else(|| "true".to_string());
+            flags.insert(key, val);
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+const HELP: &str = "\
+hybridnmt — hybrid data-model parallel Seq2Seq RNN MT (Ono et al., 2019)
+
+USAGE: hybridnmt <command> [--flag value]...
+
+COMMANDS
+  train      --strategy S --dataset D [--steps N] [--model tiny|small]
+             [--sentences N] [--seed N] [--ckpt out.bin] [--config file.json]
+  translate  --ckpt file.bin [--model small] [--beam B] [--alpha A]
+             [--dataset D] [--strategy S (sets input-feeding)]
+  sim        --strategy S [--batch B] [--trace out.csv] (schedule breakdown)
+  table1     [--sentences14 N] [--sentences17 N]
+  table2     [--model tiny|small|paper]
+  table3
+  table4     --ckpt file.bin [--model small] [--dataset D] [--gnmt]
+  table5     [--steps N] [--model small] (trains baseline+hybrid, decodes both test sets)
+  figure4    --dataset D [--steps N] [--model small]
+
+Strategies: single | data | model | hybrid | hybrid_if
+Datasets:   wmt14-sim | wmt17-sim
+Artifacts:  --artifacts DIR (default ./artifacts); run `make artifacts` first.
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_experiment(args: &Args, engine: &Engine) -> Result<Experiment> {
+    if let Some(path) = args.get("config") {
+        return Experiment::load(path);
+    }
+    let strategy: Strategy = args.str_or("strategy", "hybrid").parse()?;
+    let dims = engine.dims().clone();
+    let sentences = args.usize("sentences", 3000)?;
+    let mut train = TrainConfig {
+        steps: args.usize("steps", 300)?,
+        eval_interval: args.usize("eval-interval", 25)?,
+        seed: args.usize("seed", 0)? as u64,
+        ..Default::default()
+    };
+    train.decay_interval = args.usize("decay-interval", 100)?;
+    if args.get("sgd").is_some() {
+        train.sgd = true;
+        // OpenNMT-lua's default SGD learning rate.
+        train.lr = 1.0;
+    }
+    if let Some(lr) = args.get("lr") {
+        train.lr = lr.parse().with_context(|| format!("--lr {lr}"))?;
+    }
+    Ok(Experiment {
+        model: dims,
+        strategy,
+        hw: HwConfig::default(),
+        train,
+        data: DataConfig::by_name(args.str_or("dataset", "wmt14-sim"), sentences)?,
+        artifacts_dir: args.str_or("artifacts", "artifacts").to_string(),
+    })
+}
+
+fn load_engine(args: &Args) -> Result<Engine> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let cfg = args.str_or("model", "small");
+    let cfg = if cfg == "auto" || cfg == "paper" { "small" } else { cfg };
+    Engine::load(dir, cfg)
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "train" => cmd_train(&args),
+        "translate" => cmd_translate(&args),
+        "sim" => cmd_sim(&args),
+        "table1" => {
+            let dims = ModelDims::paper();
+            print!(
+                "{}",
+                report::table1(
+                    args.usize("sentences14", 4000)?,
+                    args.usize("sentences17", 8000)?,
+                    &dims
+                )
+            );
+            Ok(())
+        }
+        "table2" => {
+            let exp = match args.str_or("model", "paper") {
+                "paper" => Experiment {
+                    model: ModelDims::paper(),
+                    strategy: Strategy::Hybrid,
+                    hw: HwConfig::default(),
+                    train: TrainConfig::default(),
+                    data: DataConfig::wmt14_sim(0),
+                    artifacts_dir: "artifacts".into(),
+                },
+                _ => {
+                    let engine = load_engine(&args)?;
+                    build_experiment(&args, &engine)?
+                }
+            };
+            print!("{}", report::table2(&exp));
+            Ok(())
+        }
+        "table3" => {
+            print!("{}", report::table3(&HwConfig::default()));
+            Ok(())
+        }
+        "table4" => cmd_table4(&args),
+        "table5" => cmd_table5(&args),
+        "figure4" => cmd_figure4(&args),
+        other => Err(anyhow!("unknown command `{other}`\n\n{HELP}")),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let exp = build_experiment(args, &engine)?;
+    println!(
+        "training {} on {} ({} steps, batch {}, model `{}`)",
+        exp.strategy.label(),
+        exp.data.dataset,
+        exp.train.steps,
+        exp.model.batch,
+        exp.model.name
+    );
+    let corpus = report::make_corpus(&exp.data, &exp.model);
+    let mut batcher = report::make_batcher(&exp, &corpus);
+    println!(
+        "corpus: {} train batches, vocab {}, avg src len {:.1}, dropped {}",
+        batcher.n_train_batches(),
+        batcher.vocab.len(),
+        batcher.avg_src_len(),
+        batcher.dropped
+    );
+    let mut trainer = Trainer::new(&engine, &exp)?;
+    println!(
+        "plan: {} steps, sim step time {:.4}s, sim {:.0} src-tok/s",
+        trainer.plan.steps.len(),
+        trainer.step_sim.makespan,
+        trainer.sim_tokens_per_sec(batcher.avg_src_len())
+    );
+    trainer.run(&mut batcher, |line| println!("{line}"))?;
+    if let Some(ckpt) = args.get("ckpt") {
+        checkpoint::save(std::path::Path::new(ckpt), &trainer.params)?;
+        println!("checkpoint written to {ckpt}");
+    }
+    let st = engine.stats();
+    println!(
+        "engine: {} executions, {} compiled artifacts, {:.1}s exec, {:.1}s convert",
+        st.executions,
+        st.compile_count,
+        st.exec_nanos as f64 / 1e9,
+        st.convert_nanos as f64 / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_translate(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+    let params = checkpoint::load(std::path::Path::new(ckpt))?;
+    let strategy: Strategy = args.str_or("strategy", "hybrid").parse()?;
+    let exp = build_experiment(args, &engine)?;
+    let corpus = report::make_corpus(&exp.data, &exp.model);
+    let batcher = report::make_batcher(&exp, &corpus);
+    let decoder = Decoder::new(&engine, &params, strategy.uses_input_feeding());
+    let alpha: f64 = args.str_or("alpha", "1.0").parse()?;
+    let cfg = BeamConfig {
+        beam: args.usize("beam", 6)?,
+        max_len: decoder.max_len(),
+        norm: LengthNorm::Marian { alpha },
+    };
+    let n = args.usize("n", 50)?.min(batcher.test.len());
+    let mut pairs = Vec::new();
+    for e in &batcher.test[..n] {
+        let hyp = decoder.translate(&e.src, &cfg)?;
+        let hyp_s = batcher.vocab.decode(&hyp);
+        let ref_s = batcher.vocab.decode(&e.tgt);
+        println!("SRC: {}", batcher.vocab.decode(&e.src));
+        println!("HYP: {hyp_s}");
+        println!("REF: {ref_s}\n");
+        pairs.push((hyp_s, ref_s));
+    }
+    println!("test BLEU over {n} sentences: {:.2}", corpus_bleu(&pairs));
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let strategy: Strategy = args.str_or("strategy", "hybrid").parse()?;
+    let batch = args.usize("batch", strategy.paper_batch())?;
+    let dims = ModelDims::paper().with_batch(batch);
+    let hw = HwConfig::default();
+    let plan = build_plan(&dims, strategy, hw.dp_host_staged);
+    // Optional schedule trace (CSV: step,device,start,end,kind) for
+    // timeline inspection — the simulator's flamegraph equivalent.
+    if let Some(path) = args.get("trace") {
+        let (_, events) = hybridnmt::sim::simulate_traced(&plan, &hw, true);
+        let mut csv = String::from("step,device,start,end,kind\n");
+        for e in &events {
+            csv.push_str(&format!("{},{},{:.9},{:.9},{}\n", e.step, e.device, e.start, e.end, e.kind));
+        }
+        std::fs::write(path, csv)?;
+        println!("schedule trace ({} events) written to {path}", events.len());
+    }
+    let sim = simulate(&plan, &hw);
+    println!("strategy:       {}", strategy.label());
+    println!("plan steps:     {}", plan.steps.len());
+    println!("plan GFLOPs:    {:.1}", plan.total_flops() / 1e9);
+    println!("comm MB:        {:.1}", plan.comm_bytes() / 1e6);
+    println!("sim makespan:   {:.4} s", sim.makespan);
+    println!("sync time:      {:.4} s", sim.sync_time);
+    println!("transfer busy:  {:.4} s", sim.transfer_time);
+    println!("utilization:    {:.1} %", 100.0 * sim.utilization());
+    for (d, busy) in sim.device_busy.iter().enumerate() {
+        println!("  device {d}: busy {:.4} s ({:.0} %)", busy, 100.0 * busy / sim.makespan);
+    }
+    Ok(())
+}
+
+fn cmd_figure4(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let data = DataConfig::by_name(
+        args.str_or("dataset", "wmt14-sim"),
+        args.usize("sentences", 3000)?,
+    )?;
+    let train = TrainConfig {
+        steps: args.usize("steps", 200)?,
+        eval_interval: args.usize("eval-interval", 20)?,
+        decay_interval: args.usize("decay-interval", 100)?,
+        ..Default::default()
+    };
+    let out = report::figure4(&engine, &data, &train, &HwConfig::default(), &Strategy::ALL)?;
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_table4(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required (train one first)"))?;
+    let params = checkpoint::load(std::path::Path::new(ckpt))?;
+    let gnmt = args.get("gnmt").is_some();
+    let exp = build_experiment(args, &engine)?;
+    let corpus = report::make_corpus(&exp.data, &exp.model);
+    let batcher = report::make_batcher(&exp, &corpus);
+    // Input-feeding follows the model the checkpoint was trained with:
+    // the GNMT half of Table 4 is the baseline (IF), the Marian half is
+    // HybridNMT (no IF).
+    let decoder = Decoder::new(&engine, &params, gnmt);
+    let beams: Vec<usize> = [3, 6, 9, 12, 15, 18]
+        .into_iter()
+        .filter(|&b| b <= engine.dims().beam)
+        .collect();
+    let norms = [1.0, 0.8, 0.6, 0.4, 0.2, 0.0];
+    let out = report::table4(&engine, &batcher, &decoder, &corpus, gnmt, &beams, &norms)?;
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_table5(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let steps = args.usize("steps", 300)?;
+    let mut rows: Vec<(String, f64, f64)> = vec![
+        ("Luong et al. (2015) [paper ref]".into(), 20.9, f64::NAN),
+        ("GNMT / Wu et al. (2016) [paper ref]".into(), 24.61, f64::NAN),
+    ];
+    for (label, strategy) in [
+        ("OpenNMT-lua-like baseline (ours)", Strategy::Single),
+        ("HybridNMT (ours)", Strategy::Hybrid),
+    ] {
+        let mut bleus = [0.0f64; 2];
+        for (di, ds) in ["wmt14-sim", "wmt17-sim"].iter().enumerate() {
+            let mut sub = Args { cmd: "train".into(), flags: args.flags.clone() };
+            sub.flags.insert("strategy".into(), strategy.key().into());
+            sub.flags.insert("dataset".into(), ds.to_string());
+            sub.flags.insert("steps".into(), steps.to_string());
+            if strategy == Strategy::Single {
+                sub.flags.insert("sgd".into(), "true".into());
+            }
+            let exp = build_experiment(&sub, &engine)?;
+            let corpus = report::make_corpus(&exp.data, &exp.model);
+            let mut batcher = report::make_batcher(&exp, &corpus);
+            let mut trainer = Trainer::new(&engine, &exp)?;
+            trainer.run(&mut batcher, |_| {})?;
+            let decoder =
+                Decoder::new(&engine, &trainer.params, strategy.uses_input_feeding());
+            let cfg = BeamConfig {
+                beam: 6.min(engine.dims().beam),
+                max_len: decoder.max_len(),
+                norm: LengthNorm::Marian { alpha: 1.0 },
+            };
+            let mut pairs = Vec::new();
+            for e in batcher.test.iter().take(120) {
+                let hyp = decoder.translate(&e.src, &cfg)?;
+                pairs.push((batcher.vocab.decode(&hyp), batcher.vocab.decode(&e.tgt)));
+            }
+            bleus[di] = corpus_bleu(&pairs);
+        }
+        rows.push((label.to_string(), bleus[0], bleus[1]));
+    }
+    print!("{}", report::table5(&rows));
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! BLEU-4 with brevity penalty (Papineni et al., 2002), implemented from
+//! scratch for Tables 4 and 5. `sentence_bleu` uses add-1 smoothing on
+//! n>1 precisions (the standard "smooth-1" variant); `corpus_bleu` is
+//! the unsmoothed corpus statistic the paper reports.
+
+use std::collections::HashMap;
+
+fn ngram_counts<'a>(tokens: &[&'a str], n: usize) -> HashMap<Vec<&'a str>, usize> {
+    let mut m = HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *m.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Clipped n-gram matches + candidate n-gram count for one sentence.
+fn matches(hyp: &[&str], refr: &[&str], n: usize) -> (usize, usize) {
+    let h = ngram_counts(hyp, n);
+    let r = ngram_counts(refr, n);
+    let mut hit = 0;
+    let mut total = 0;
+    for (g, c) in h {
+        total += c;
+        hit += c.min(*r.get(&g).unwrap_or(&0));
+    }
+    (hit, total)
+}
+
+/// Corpus BLEU over (hypothesis, reference) pairs, in percent.
+pub fn corpus_bleu(pairs: &[(String, String)]) -> f64 {
+    let mut hits = [0usize; 4];
+    let mut totals = [0usize; 4];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (h, r) in pairs {
+        let ht: Vec<&str> = h.split_whitespace().collect();
+        let rt: Vec<&str> = r.split_whitespace().collect();
+        hyp_len += ht.len();
+        ref_len += rt.len();
+        for n in 1..=4 {
+            let (hit, tot) = matches(&ht, &rt, n);
+            hits[n - 1] += hit;
+            totals[n - 1] += tot;
+        }
+    }
+    bleu_from_stats(&hits, &totals, hyp_len, ref_len, false)
+}
+
+/// Smoothed sentence BLEU, in percent.
+pub fn sentence_bleu(hyp: &str, refr: &str) -> f64 {
+    let ht: Vec<&str> = hyp.split_whitespace().collect();
+    let rt: Vec<&str> = refr.split_whitespace().collect();
+    let mut hits = [0usize; 4];
+    let mut totals = [0usize; 4];
+    for n in 1..=4 {
+        let (hit, tot) = matches(&ht, &rt, n);
+        hits[n - 1] = hit;
+        totals[n - 1] = tot;
+    }
+    bleu_from_stats(&hits, &totals, ht.len(), rt.len(), true)
+}
+
+fn bleu_from_stats(
+    hits: &[usize; 4],
+    totals: &[usize; 4],
+    hyp_len: usize,
+    ref_len: usize,
+    smooth: bool,
+) -> f64 {
+    if hyp_len == 0 {
+        return 0.0;
+    }
+    let mut logp = 0.0f64;
+    for n in 0..4 {
+        let (mut h, mut t) = (hits[n] as f64, totals[n] as f64);
+        if smooth && n > 0 {
+            h += 1.0;
+            t += 1.0;
+        }
+        if h == 0.0 || t == 0.0 {
+            return 0.0;
+        }
+        logp += (h / t).ln();
+    }
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * (logp / 4.0).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let pairs = vec![("the cat sat on the mat".into(), "the cat sat on the mat".into())];
+        assert!((corpus_bleu(&pairs) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_is_0() {
+        let pairs = vec![("a b c d e".into(), "v w x y z".into())];
+        assert_eq!(corpus_bleu(&pairs), 0.0);
+    }
+
+    #[test]
+    fn brevity_penalty_applies() {
+        // Hypothesis is a perfect prefix but half the length.
+        let long = "a b c d e f g h";
+        let pairs = vec![("a b c d".to_string(), long.to_string())];
+        let b = corpus_bleu(&pairs);
+        assert!(b < 40.0, "bp should bite: {b}");
+        // Same content, full length: higher.
+        let full = vec![(long.to_string(), long.to_string())];
+        assert!(corpus_bleu(&full) > b);
+    }
+
+    #[test]
+    fn clipping_punishes_repetition() {
+        let pairs = vec![("the the the the".to_string(), "the cat".to_string())];
+        let b = corpus_bleu(&pairs);
+        assert!(b < 30.0, "{b}");
+    }
+
+    #[test]
+    fn partial_overlap_between_0_and_100() {
+        // Shares 4-grams with the reference but not all of them.
+        let pairs = vec![(
+            "the cat sat on the mat today".to_string(),
+            "the cat sat on the mat".to_string(),
+        )];
+        let b = corpus_bleu(&pairs);
+        assert!(b > 20.0 && b < 95.0, "{b}");
+        // And a pair with no 4-gram overlap is exactly 0 unsmoothed.
+        assert_eq!(
+            corpus_bleu(&[("the cat sat".into(), "the cat lay".into())]),
+            0.0
+        );
+    }
+
+    #[test]
+    fn corpus_aggregates_not_averages() {
+        // One perfect + one empty-overlap sentence: corpus BLEU pools
+        // counts (nonzero), rather than averaging 100 and 0.
+        let pairs = vec![
+            ("a b c d e".to_string(), "a b c d e".to_string()),
+            ("q r s t u".to_string(), "v w x y z".to_string()),
+        ];
+        let b = corpus_bleu(&pairs);
+        assert!(b > 10.0 && b < 60.0, "{b}");
+    }
+
+    #[test]
+    fn sentence_smoothing_gives_nonzero_for_unigram_only() {
+        let b = sentence_bleu("the dog", "the cat");
+        // Nonzero thanks to smoothing, but well below a perfect match.
+        assert!(b > 0.0 && b < 90.0, "{b}");
+        assert!(b < sentence_bleu("the cat", "the cat"));
+    }
+
+    #[test]
+    fn order_matters_beyond_unigrams() {
+        let good = corpus_bleu(&[("a b c d".into(), "a b c d".into())]);
+        let scrambled = corpus_bleu(&[("d c b a".into(), "a b c d".into())]);
+        assert!(good > scrambled);
+        assert_eq!(scrambled, 0.0); // no bigram survives full reversal
+    }
+}

@@ -1,0 +1,59 @@
+//! Evaluation metrics: corpus BLEU (Table 4/5), perplexity (Figure 4),
+//! and throughput bookkeeping (Table 3).
+
+pub mod bleu;
+
+pub use bleu::{corpus_bleu, sentence_bleu};
+
+/// Perplexity from summed token NLL.
+pub fn perplexity(loss_sum: f64, ntok: f64) -> f64 {
+    if ntok <= 0.0 {
+        return f64::INFINITY;
+    }
+    (loss_sum / ntok).exp()
+}
+
+/// Source tokens/sec + scaling factor bookkeeping for Table 3 rows.
+#[derive(Debug, Clone)]
+pub struct Throughput {
+    pub src_tokens: f64,
+    pub seconds: f64,
+}
+
+impl Throughput {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.seconds == 0.0 {
+            return 0.0;
+        }
+        self.src_tokens / self.seconds
+    }
+
+    pub fn scaling_vs(&self, baseline: &Throughput) -> f64 {
+        self.tokens_per_sec() / baseline.tokens_per_sec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform_model() {
+        // NLL = ln V per token -> ppl = V.
+        let v: f64 = 64.0;
+        let ppl = perplexity(v.ln() * 10.0, 10.0);
+        assert!((ppl - v).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perplexity_empty_is_inf() {
+        assert!(perplexity(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn scaling_factor() {
+        let base = Throughput { src_tokens: 1000.0, seconds: 1.0 };
+        let fast = Throughput { src_tokens: 4000.0, seconds: 1.0 };
+        assert!((fast.scaling_vs(&base) - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,162 @@
+//! Optimizers + LR schedule (paper Table 2 / §4.2): Adam with
+//! plateau-decay (×0.7 when dev perplexity increases), plus plain SGD
+//! for the OpenNMT-lua comparator rows.
+
+use crate::config::TrainConfig;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+/// Adam / SGD state over a named parameter set.
+pub struct Optimizer {
+    pub lr: f64,
+    cfg: TrainConfig,
+    /// First/second moment per parameter (Adam only).
+    m: BTreeMap<String, Vec<f32>>,
+    v: BTreeMap<String, Vec<f32>>,
+    /// Step count (bias correction).
+    pub t: u64,
+}
+
+impl Optimizer {
+    pub fn new(cfg: &TrainConfig) -> Self {
+        Optimizer { lr: cfg.lr, cfg: cfg.clone(), m: BTreeMap::new(), v: BTreeMap::new(), t: 0 }
+    }
+
+    /// Apply one update. `grads` are *mean* gradients (already scaled by
+    /// 1/ntok by the caller). Returns the global grad norm (pre-clip).
+    pub fn step(
+        &mut self,
+        params: &mut BTreeMap<String, Tensor>,
+        grads: &BTreeMap<String, Tensor>,
+    ) -> f64 {
+        self.t += 1;
+        // Global-norm clipping (OpenNMT-style).
+        let mut sq = 0.0f64;
+        for g in grads.values() {
+            sq += g.sq_norm() as f64;
+        }
+        let norm = sq.sqrt();
+        let clip = if self.cfg.clip_norm > 0.0 && norm > self.cfg.clip_norm {
+            self.cfg.clip_norm / norm
+        } else {
+            1.0
+        };
+
+        if self.cfg.sgd {
+            for (name, g) in grads {
+                let p = params.get_mut(name).expect("param for grad");
+                for (w, &gi) in p.data_mut().iter_mut().zip(g.data()) {
+                    *w -= (self.lr * clip * gi as f64) as f32;
+                }
+            }
+            return norm;
+        }
+
+        let (b1, b2, eps) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for (name, g) in grads {
+            let p = params.get_mut(name).expect("param for grad");
+            let m = self.m.entry(name.clone()).or_insert_with(|| vec![0.0; g.numel()]);
+            let v = self.v.entry(name.clone()).or_insert_with(|| vec![0.0; g.numel()]);
+            for i in 0..g.numel() {
+                let gi = (g.data()[i] as f64) * clip;
+                m[i] = (b1 * m[i] as f64 + (1.0 - b1) * gi) as f32;
+                v[i] = (b2 * v[i] as f64 + (1.0 - b2) * gi * gi) as f32;
+                let mhat = m[i] as f64 / bc1;
+                let vhat = v[i] as f64 / bc2;
+                p.data_mut()[i] -= (self.lr * mhat / (vhat.sqrt() + eps)) as f32;
+            }
+        }
+        norm
+    }
+
+    /// Plateau decay (paper §4.2): multiply LR by `lr_decay` when the
+    /// dev perplexity did not improve. Returns true if decayed.
+    pub fn maybe_decay(&mut self, prev_dev_ppl: Option<f64>, dev_ppl: f64) -> bool {
+        if let Some(prev) = prev_dev_ppl {
+            if dev_ppl > prev {
+                self.lr *= self.cfg.lr_decay;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_setup(sgd: bool) -> (Optimizer, BTreeMap<String, Tensor>) {
+        let cfg = TrainConfig { sgd, lr: 0.1, clip_norm: 0.0, ..Default::default() };
+        let mut params = BTreeMap::new();
+        params.insert("w".to_string(), Tensor::new(vec![2], vec![1.0, -2.0]));
+        (Optimizer::new(&cfg), params)
+    }
+
+    fn grad_of(params: &BTreeMap<String, Tensor>) -> BTreeMap<String, Tensor> {
+        // f(w) = 0.5 ||w||^2, grad = w.
+        let w = &params["w"];
+        let mut g = BTreeMap::new();
+        g.insert("w".to_string(), w.clone());
+        g
+    }
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        let (mut opt, mut params) = quad_setup(true);
+        for _ in 0..50 {
+            let g = grad_of(&params);
+            opt.step(&mut params, &g);
+        }
+        assert!(params["w"].sq_norm() < 1e-3);
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let (mut opt, mut params) = quad_setup(false);
+        for _ in 0..200 {
+            let g = grad_of(&params);
+            opt.step(&mut params, &g);
+        }
+        assert!(params["w"].sq_norm() < 1e-2, "{}", params["w"].sq_norm());
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // Bias correction makes |Δw| ≈ lr on step 1 regardless of grad scale.
+        let (mut opt, mut params) = quad_setup(false);
+        let before = params["w"].data()[0];
+        let g = grad_of(&params);
+        opt.step(&mut params, &g);
+        let delta = (params["w"].data()[0] - before).abs();
+        assert!((delta - 0.1).abs() < 1e-3, "delta {delta}");
+    }
+
+    #[test]
+    fn clipping_bounds_update() {
+        let cfg = TrainConfig { sgd: true, lr: 1.0, clip_norm: 1.0, ..Default::default() };
+        let mut opt = Optimizer::new(&cfg);
+        let mut params = BTreeMap::new();
+        params.insert("w".to_string(), Tensor::new(vec![1], vec![0.0]));
+        let mut g = BTreeMap::new();
+        g.insert("w".to_string(), Tensor::new(vec![1], vec![100.0]));
+        let norm = opt.step(&mut params, &g);
+        assert_eq!(norm, 100.0);
+        // Clipped to norm 1 -> step of exactly lr * 1.
+        assert!((params["w"].data()[0] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn plateau_decay_fires_only_on_increase() {
+        let cfg = TrainConfig::default();
+        let mut opt = Optimizer::new(&cfg);
+        let lr0 = opt.lr;
+        assert!(!opt.maybe_decay(None, 10.0));
+        assert!(!opt.maybe_decay(Some(10.0), 9.0));
+        assert_eq!(opt.lr, lr0);
+        assert!(opt.maybe_decay(Some(9.0), 9.5));
+        assert!((opt.lr - lr0 * 0.7).abs() < 1e-12);
+    }
+}

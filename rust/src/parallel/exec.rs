@@ -1,0 +1,243 @@
+//! Real-numerics plan executor.
+//!
+//! Walks a [`Plan`] in emission order (builders emit topologically),
+//! executing artifact steps on the PJRT engine and host ops on the
+//! coordinator. Produces the actual loss / token count / gradients the
+//! training loop feeds to the optimizer.
+//!
+//! Values are reference-counted so `Transfer` (a pure timing construct)
+//! and fan-out reads are free; slots are reclaimed after their last use
+//! so peak memory tracks live activations, not the whole plan.
+
+use super::plan::{BindKind, Op, Plan};
+use crate::runtime::{Arg, Engine};
+use crate::tensor::{ITensor, Tensor};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// A slot value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F(Rc<Tensor>),
+    I(Rc<ITensor>),
+}
+
+impl Value {
+    fn f(&self) -> Result<&Tensor> {
+        match self {
+            Value::F(t) => Ok(t),
+            Value::I(_) => Err(anyhow!("expected f32 value, got i32")),
+        }
+    }
+
+    fn i(&self) -> Result<&ITensor> {
+        match self {
+            Value::I(t) => Ok(t),
+            Value::F(_) => Err(anyhow!("expected i32 value, got f32")),
+        }
+    }
+}
+
+/// One mini-batch, padded to the artifact shapes.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// `[B, M]` source ids (PAD after srclen).
+    pub src: ITensor,
+    /// `[B]` true source lengths.
+    pub srclen: ITensor,
+    /// `[B, N]` decoder inputs (BOS-shifted).
+    pub tgt_in: ITensor,
+    /// `[B, N]` decoder targets (EOS-terminated).
+    pub tgt_out: ITensor,
+    /// `[B, N]` 1.0 on real target positions.
+    pub tmask: Tensor,
+}
+
+impl Batch {
+    pub fn tokens(&self) -> f64 {
+        self.srclen.data().iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn target_tokens(&self) -> f64 {
+        self.tmask.data().iter().map(|&x| x as f64).sum()
+    }
+}
+
+/// Result of one executed training step.
+pub struct StepOut {
+    /// Summed token NLL over the batch.
+    pub loss_sum: f64,
+    /// Number of target tokens.
+    pub ntok: f64,
+    /// Parameter name -> summed gradient (unnormalized).
+    pub grads: BTreeMap<String, Tensor>,
+}
+
+/// Execute `plan` against `engine` with the given parameters and batch.
+pub fn execute(
+    plan: &Plan,
+    engine: &Engine,
+    params: &BTreeMap<String, Tensor>,
+    batch: &Batch,
+) -> Result<StepOut> {
+    let mut slots: Vec<Option<Value>> = vec![None; plan.n_slots];
+
+    for (name, &slot) in &plan.param_in {
+        let p = params
+            .get(name)
+            .ok_or_else(|| anyhow!("missing parameter `{name}`"))?;
+        slots[slot] = Some(Value::F(Rc::new(p.clone())));
+    }
+    for (name, &(slot, kind)) in &plan.data_in {
+        let v = match (name.as_str(), kind) {
+            ("src", BindKind::I32) => Value::I(Rc::new(batch.src.clone())),
+            ("srclen", BindKind::I32) => Value::I(Rc::new(batch.srclen.clone())),
+            ("tgt_in", BindKind::I32) => Value::I(Rc::new(batch.tgt_in.clone())),
+            ("tgt_out", BindKind::I32) => Value::I(Rc::new(batch.tgt_out.clone())),
+            ("tmask", BindKind::F32) => Value::F(Rc::new(batch.tmask.clone())),
+            other => return Err(anyhow!("unknown data binding {other:?}")),
+        };
+        slots[slot] = Some(v);
+    }
+
+    let get = |slots: &[Option<Value>], s: usize| -> Result<Value> {
+        slots[s]
+            .clone()
+            .ok_or_else(|| anyhow!("slot {s} read before write"))
+    };
+
+    for (i, step) in plan.steps.iter().enumerate() {
+        let out: Vec<Value> = match &step.op {
+            Op::Exec { key } => {
+                let vals: Vec<Value> = step
+                    .reads
+                    .iter()
+                    .map(|&r| get(&slots, r))
+                    .collect::<Result<_>>()?;
+                let args: Vec<Arg> = vals
+                    .iter()
+                    .map(|v| match v {
+                        Value::F(t) => Arg::F(t),
+                        Value::I(t) => Arg::I(t),
+                    })
+                    .collect();
+                engine
+                    .exec(key, &args)?
+                    .into_iter()
+                    .map(|t| Value::F(Rc::new(t)))
+                    .collect()
+            }
+            Op::Transfer { .. } => vec![get(&slots, step.reads[0])?],
+            Op::AllReduce { .. } => {
+                let mut acc = get(&slots, step.reads[0])?.f()?.clone();
+                for &r in &step.reads[1..] {
+                    acc.add_assign(get(&slots, r)?.f()?);
+                }
+                vec![Value::F(Rc::new(acc))]
+            }
+            Op::Zeros { shape } => vec![Value::F(Rc::new(Tensor::zeros(shape)))],
+            Op::ColI { t } => {
+                let v = get(&slots, step.reads[0])?;
+                vec![Value::I(Rc::new(v.i()?.col(*t)))]
+            }
+            Op::ColF { t } => {
+                let v = get(&slots, step.reads[0])?;
+                let m = v.f()?;
+                let (bt, tt) = (m.shape()[0], m.shape()[1]);
+                let data = (0..bt).map(|b| m.data()[b * tt + t]).collect();
+                vec![Value::F(Rc::new(Tensor::new(vec![bt], data)))]
+            }
+            Op::Slice0 { lo, hi } => {
+                let v = get(&slots, step.reads[0])?;
+                vec![Value::F(Rc::new(v.f()?.slice0(*lo, *hi)))]
+            }
+            Op::SliceI0 { lo, hi } => {
+                let v = get(&slots, step.reads[0])?;
+                vec![Value::I(Rc::new(v.i()?.slice0(*lo, *hi)))]
+            }
+            Op::Concat0 => {
+                let vals: Vec<Value> = step
+                    .reads
+                    .iter()
+                    .map(|&r| get(&slots, r))
+                    .collect::<Result<_>>()?;
+                let parts: Vec<&Tensor> =
+                    vals.iter().map(|v| v.f()).collect::<Result<_>>()?;
+                vec![Value::F(Rc::new(Tensor::concat0(&parts)))]
+            }
+            Op::Concat1 => {
+                let a = get(&slots, step.reads[0])?;
+                let b = get(&slots, step.reads[1])?;
+                vec![Value::F(Rc::new(Tensor::concat1(a.f()?, b.f()?)))]
+            }
+            Op::Split1 { col } => {
+                let v = get(&slots, step.reads[0])?;
+                let (a, b) = v.f()?.split1(*col);
+                vec![Value::F(Rc::new(a)), Value::F(Rc::new(b))]
+            }
+            Op::StackTime => {
+                let vals: Vec<Value> = step
+                    .reads
+                    .iter()
+                    .map(|&r| get(&slots, r))
+                    .collect::<Result<_>>()?;
+                let parts: Vec<&Tensor> =
+                    vals.iter().map(|v| v.f()).collect::<Result<_>>()?;
+                vec![Value::F(Rc::new(Tensor::stack_time(&parts)))]
+            }
+            Op::TimeSlice { t } => {
+                let v = get(&slots, step.reads[0])?;
+                vec![Value::F(Rc::new(v.f()?.time_slice(*t)))]
+            }
+            Op::Add => {
+                let mut acc = get(&slots, step.reads[0])?.f()?.clone();
+                for &r in &step.reads[1..] {
+                    acc.add_assign(get(&slots, r)?.f()?);
+                }
+                vec![Value::F(Rc::new(acc))]
+            }
+            Op::Gate => vec![get(&slots, step.reads[0])?],
+            Op::SumAll => {
+                let v = get(&slots, step.reads[0])?;
+                let s: f32 = v.f()?.data().iter().sum();
+                vec![Value::F(Rc::new(Tensor::new(vec![1], vec![s])))]
+            }
+        };
+        if out.len() != step.writes.len() {
+            return Err(anyhow!(
+                "step {i} {:?}: {} outputs for {} writes",
+                step.op,
+                out.len(),
+                step.writes.len()
+            ));
+        }
+        for (&w, v) in step.writes.iter().zip(out) {
+            slots[w] = Some(v);
+        }
+        // Reclaim slots whose last reader was this step.
+        for &r in &step.reads {
+            if plan.last_use[r] == i {
+                slots[r] = None;
+            }
+        }
+    }
+
+    let scalar = |slots: &[Option<Value>], s: usize| -> Result<f64> {
+        Ok(slots[s]
+            .as_ref()
+            .ok_or_else(|| anyhow!("output slot {s} empty"))?
+            .f()?
+            .item() as f64)
+    };
+    let loss_sum = scalar(&slots, plan.loss_out)?;
+    let ntok = scalar(&slots, plan.ntok_out)?;
+    let mut grads = BTreeMap::new();
+    for (name, &slot) in &plan.grad_out {
+        let v = slots[slot]
+            .as_ref()
+            .ok_or_else(|| anyhow!("grad `{name}` slot empty"))?;
+        grads.insert(name.clone(), v.f()?.clone());
+    }
+    Ok(StepOut { loss_sum, ntok, grads })
+}

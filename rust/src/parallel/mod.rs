@@ -1,0 +1,12 @@
+//! Parallelization strategies: plan IR, replica graph construction, the
+//! five strategy planners (Table 3), and the real-numerics executor.
+
+pub mod exec;
+pub mod plan;
+pub mod replica;
+pub mod strategies;
+
+pub use exec::{execute, Batch, StepOut};
+pub use plan::{Op, Plan, PlanBuilder, ReduceAlgo, Slot};
+pub use replica::{AttnMode, ReplicaSpec};
+pub use strategies::build_plan;

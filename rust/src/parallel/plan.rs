@@ -1,0 +1,457 @@
+//! The plan IR: one training step as a device-placed task DAG.
+//!
+//! Every parallelization strategy (`strategies.rs`) compiles to this IR.
+//! Two consumers interpret a plan:
+//!
+//! * `sim::Engine` — timing: each step has a device, a cost annotation,
+//!   and dependencies; the discrete-event simulator schedules it on the
+//!   modeled 4-GPU node and reports the makespan (Table 3, Figure 4's
+//!   wall clock).
+//! * `parallel::exec::Executor` — numerics: steps run in emission order
+//!   (builders emit in topological order by construction) against the
+//!   PJRT artifact engine, producing real losses and gradients.
+//!
+//! Values flow through SSA-style *slots*. Activation slots have a home
+//! device; when a step on another device reads one, the builder
+//! auto-inserts a `Transfer` step — this is how the paper's Fig. 2/3
+//! communication patterns arise mechanically from placement. Parameter
+//! and input-data slots are *resident* (pre-distributed; no per-read
+//! transfer cost), matching how frameworks keep weights on-device.
+
+use crate::model_spec::OpCost;
+use std::collections::BTreeMap;
+
+pub type Slot = usize;
+pub type StepId = usize;
+
+/// Pseudo-device for free host-side bookkeeping ops.
+pub const HOST: usize = usize::MAX;
+
+/// All-reduce algorithm — the cost difference between these two is the
+/// paper's data-parallel bottleneck (§2.1) vs the hybrid strategy's cheap
+/// attention-gradient sync (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceAlgo {
+    /// NVLink ring among the participating devices.
+    Ring,
+    /// Staged through host memory (the MXNet-kvstore-like path the
+    /// paper's data-parallel baseline pays for the full 142M parameters).
+    HostStaged,
+}
+
+/// One operation. Reads/writes live on the owning [`Step`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Execute artifact `key` (reads = inputs in order, writes = outputs).
+    Exec { key: String },
+    /// Move one value `from` -> step.device over the link.
+    Transfer { from: usize, bytes: f64 },
+    /// Sum k replica slots into one result slot, synchronizing `devices`.
+    AllReduce { devices: Vec<usize>, bytes: f64, n_arrays: usize, algo: ReduceAlgo },
+    /// Fresh zero tensor of `shape`.
+    Zeros { shape: Vec<usize> },
+    /// Column `t` of an i32 `[B, T]` matrix -> `[B]`.
+    ColI { t: usize },
+    /// Column `t` of an f32 `[B, T]` matrix -> `[B]`.
+    ColF { t: usize },
+    /// Rows `[lo, hi)` of an f32 tensor (batch sharding).
+    Slice0 { lo: usize, hi: usize },
+    /// Rows `[lo, hi)` of an i32 tensor.
+    SliceI0 { lo: usize, hi: usize },
+    /// Concatenate f32 tensors along axis 0 (shard re-gather).
+    Concat0,
+    /// Concatenate two matrices along axis 1 (input-feeding `[emb ; Hc]`).
+    Concat1,
+    /// Split a matrix along axis 1 at `col` (two outputs).
+    Split1 { col: usize },
+    /// Stack `[B,h]` states over a new time axis -> `[B,T,h]`.
+    StackTime,
+    /// Time slice `t` of `[B,T,h]` -> `[B,h]`.
+    TimeSlice { t: usize },
+    /// Elementwise sum of the read slots (gradient accumulation).
+    Add,
+    /// Scalar sum of all elements (token counting).
+    SumAll,
+    /// Pass-through of reads[0] that additionally depends on the other
+    /// reads — models a framework-level synchronization point (e.g. the
+    /// vanilla per-step decoder loop of paper Fig. 2, where step t+1
+    /// starts only after *all* of step t including the softmax).
+    Gate,
+}
+
+/// One scheduled operation.
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub op: Op,
+    pub device: usize,
+    pub reads: Vec<Slot>,
+    pub writes: Vec<Slot>,
+    /// Compute cost (Exec / Add); comm ops are costed from their own
+    /// fields by `sim::cost`.
+    pub cost: OpCost,
+    /// Dependencies: producer steps of every read slot.
+    pub deps: Vec<StepId>,
+}
+
+/// Expected binding kind of an external input slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BindKind {
+    F32,
+    I32,
+}
+
+/// A complete one-training-step program.
+#[derive(Debug, Clone, Default)]
+pub struct Plan {
+    pub steps: Vec<Step>,
+    pub n_slots: usize,
+    /// Parameter name -> input slot.
+    pub param_in: BTreeMap<String, Slot>,
+    /// Data name ("src", "srclen", "tgt_in", "tgt_out", "tmask") -> slot.
+    pub data_in: BTreeMap<String, (Slot, BindKind)>,
+    /// Parameter name -> final summed-gradient slot.
+    pub grad_out: BTreeMap<String, Slot>,
+    pub loss_out: Slot,
+    pub ntok_out: Slot,
+    /// Last step index reading each slot (for executor memory reclaim).
+    pub last_use: Vec<StepId>,
+}
+
+impl Plan {
+    /// Total FLOPs across Exec steps (sanity checks, roofline reports).
+    pub fn total_flops(&self) -> f64 {
+        self.steps.iter().map(|s| s.cost.flops).sum()
+    }
+
+    /// Bytes crossing device links (transfers + all-reduce payloads).
+    pub fn comm_bytes(&self) -> f64 {
+        self.steps
+            .iter()
+            .map(|s| match &s.op {
+                Op::Transfer { bytes, .. } => *bytes,
+                Op::AllReduce { bytes, .. } => *bytes,
+                _ => 0.0,
+            })
+            .sum()
+    }
+
+    pub fn count_ops(&self, pred: impl Fn(&Op) -> bool) -> usize {
+        self.steps.iter().filter(|s| pred(&s.op)).count()
+    }
+
+    /// Validate SSA discipline + topological emission order.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut written = vec![false; self.n_slots];
+        for (s, _) in self.param_in.values().map(|s| (*s, ())) {
+            written[s] = true;
+        }
+        for (s, _) in self.data_in.values() {
+            written[*s] = true;
+        }
+        for (i, step) in self.steps.iter().enumerate() {
+            for &r in &step.reads {
+                if !written[r] {
+                    return Err(format!("step {i} {:?} reads unwritten slot {r}", step.op));
+                }
+            }
+            for &w in &step.writes {
+                if written[w] {
+                    return Err(format!("step {i} {:?} rewrites slot {w}", step.op));
+                }
+                written[w] = true;
+            }
+            for &d in &step.deps {
+                if d >= i {
+                    return Err(format!("step {i} depends on later step {d}"));
+                }
+            }
+        }
+        for (name, &g) in &self.grad_out {
+            if !written[g] {
+                return Err(format!("grad_out `{name}` slot {g} never written"));
+            }
+        }
+        if !written[self.loss_out] || !written[self.ntok_out] {
+            return Err("loss/ntok slot never written".into());
+        }
+        Ok(())
+    }
+}
+
+/// Incremental plan builder with slot home-tracking and auto-transfers.
+pub struct PlanBuilder {
+    plan: Plan,
+    /// Producer step of each slot (usize::MAX for external inputs).
+    producer: Vec<StepId>,
+    /// Home device of each slot; `HOST` for unplaced host data.
+    home: Vec<usize>,
+    /// Resident slots (params / input data): readable anywhere for free.
+    resident: Vec<bool>,
+    /// Per-device cache of already-transferred copies: (slot, dev) -> local slot.
+    moved: BTreeMap<(Slot, usize), Slot>,
+    /// Element count per slot when known (sizes transfers).
+    pub numel: Vec<usize>,
+}
+
+impl PlanBuilder {
+    pub fn new() -> Self {
+        PlanBuilder {
+            plan: Plan::default(),
+            producer: Vec::new(),
+            home: Vec::new(),
+            resident: Vec::new(),
+            moved: BTreeMap::new(),
+            numel: Vec::new(),
+        }
+    }
+
+    fn new_slot(&mut self, home: usize, resident: bool, numel: usize) -> Slot {
+        let s = self.plan.n_slots;
+        self.plan.n_slots += 1;
+        self.producer.push(usize::MAX);
+        self.home.push(home);
+        self.resident.push(resident);
+        self.numel.push(numel);
+        s
+    }
+
+    /// Declare a parameter input (resident everywhere).
+    pub fn param(&mut self, name: &str, numel: usize) -> Slot {
+        if let Some(&s) = self.plan.param_in.get(name) {
+            return s;
+        }
+        let s = self.new_slot(HOST, true, numel);
+        self.plan.param_in.insert(name.to_string(), s);
+        s
+    }
+
+    /// Declare a data input (resident: the loader pre-distributes it).
+    pub fn data(&mut self, name: &str, kind: BindKind, numel: usize) -> Slot {
+        if let Some(&(s, _)) = self.plan.data_in.get(name) {
+            return s;
+        }
+        let s = self.new_slot(HOST, true, numel);
+        self.plan.data_in.insert(name.to_string(), (s, kind));
+        s
+    }
+
+    /// Resolve `slot` for a read on `dev`, inserting a Transfer if the
+    /// value lives on another device (and caching the copy).
+    fn use_on(&mut self, slot: Slot, dev: usize) -> Slot {
+        if self.resident[slot] || dev == HOST || self.home[slot] == dev || self.home[slot] == HOST
+        {
+            return slot;
+        }
+        if let Some(&local) = self.moved.get(&(slot, dev)) {
+            return local;
+        }
+        let bytes = self.numel[slot] as f64 * 4.0;
+        let from = self.home[slot];
+        let out = self.new_slot(dev, false, self.numel[slot]);
+        self.push_raw(
+            Op::Transfer { from, bytes },
+            dev,
+            vec![slot],
+            vec![out],
+            OpCost::ZERO,
+        );
+        self.moved.insert((slot, dev), out);
+        out
+    }
+
+    fn push_raw(
+        &mut self,
+        op: Op,
+        device: usize,
+        reads: Vec<Slot>,
+        writes: Vec<Slot>,
+        cost: OpCost,
+    ) -> StepId {
+        let id = self.plan.steps.len();
+        let deps: Vec<StepId> = reads
+            .iter()
+            .map(|&r| self.producer[r])
+            .filter(|&p| p != usize::MAX)
+            .collect();
+        for &w in &writes {
+            self.producer[w] = id;
+        }
+        self.plan.steps.push(Step { op, device, reads, writes, cost, deps });
+        id
+    }
+
+    /// Emit a step whose reads are auto-localized to `device`; returns
+    /// `n_out` fresh output slots homed on `device`.
+    pub fn push(
+        &mut self,
+        op: Op,
+        device: usize,
+        reads: &[Slot],
+        out_numels: &[usize],
+        cost: OpCost,
+    ) -> Vec<Slot> {
+        let localized: Vec<Slot> = reads.iter().map(|&r| self.use_on(r, device)).collect();
+        let writes: Vec<Slot> = out_numels
+            .iter()
+            .map(|&n| self.new_slot(device, false, n))
+            .collect();
+        self.push_raw(op, device, localized, writes.clone(), cost);
+        writes
+    }
+
+    /// Exec helper: one output per manifest output.
+    pub fn exec(
+        &mut self,
+        key: String,
+        device: usize,
+        reads: &[Slot],
+        out_numels: &[usize],
+        cost: OpCost,
+    ) -> Vec<Slot> {
+        self.push(Op::Exec { key }, device, reads, out_numels, cost)
+    }
+
+    /// Zero tensor (free, resident so it never needs transfers).
+    pub fn zeros(&mut self, shape: &[usize]) -> Slot {
+        let numel = shape.iter().product();
+        let s = self.new_slot(HOST, true, numel);
+        self.push_raw(Op::Zeros { shape: shape.to_vec() }, HOST, vec![], vec![s], OpCost::ZERO);
+        s
+    }
+
+    /// Elementwise accumulate: `acc + x` on `device` (memory-bound cost).
+    pub fn add(&mut self, acc: Slot, x: Slot, device: usize) -> Slot {
+        let n = self.numel[acc].max(self.numel[x]);
+        let cost = OpCost { flops: n as f64, bytes: 3.0 * n as f64 * 4.0, batch: 0 };
+        self.push(Op::Add, device, &[acc, x], &[n], cost)[0]
+    }
+
+    /// All-reduce (sum) one gradient array across replicas.
+    pub fn allreduce(
+        &mut self,
+        parts: &[Slot],
+        devices: Vec<usize>,
+        algo: ReduceAlgo,
+    ) -> Slot {
+        let numel = self.numel[parts[0]];
+        let bytes = numel as f64 * 4.0;
+        let dev0 = devices[0];
+        let out = self.new_slot(HOST, true, numel); // result broadcast everywhere
+        let localized: Vec<Slot> = parts.to_vec();
+        self.push_raw(
+            Op::AllReduce { devices, bytes, n_arrays: 1, algo },
+            dev0,
+            localized,
+            vec![out],
+            OpCost::ZERO,
+        );
+        out
+    }
+
+    pub fn numel_of(&self, s: Slot) -> usize {
+        self.numel[s]
+    }
+
+    /// Finish: record outputs, compute last-use, validate.
+    pub fn finish(
+        mut self,
+        grad_out: BTreeMap<String, Slot>,
+        loss_out: Slot,
+        ntok_out: Slot,
+    ) -> Plan {
+        self.plan.grad_out = grad_out;
+        self.plan.loss_out = loss_out;
+        self.plan.ntok_out = ntok_out;
+        let mut last_use = vec![usize::MAX; self.plan.n_slots];
+        for (i, step) in self.plan.steps.iter().enumerate() {
+            for &r in &step.reads {
+                last_use[r] = i;
+            }
+        }
+        // Outputs survive to the end.
+        let end = self.plan.steps.len();
+        for &s in self
+            .plan
+            .grad_out
+            .values()
+            .chain([&self.plan.loss_out, &self.plan.ntok_out])
+        {
+            last_use[s] = end;
+        }
+        self.plan.last_use = last_use;
+        debug_assert_eq!(self.plan.validate(), Ok(()));
+        self.plan
+    }
+}
+
+impl Default for PlanBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_transfer_inserted_once_per_device() {
+        let mut b = PlanBuilder::new();
+        let p = b.param("w", 4);
+        let x = b.exec("f".into(), 0, &[p], &[4], OpCost::ZERO)[0];
+        // Two consumers on device 1: only one transfer.
+        b.exec("g".into(), 1, &[x], &[4], OpCost::ZERO);
+        b.exec("h".into(), 1, &[x], &[4], OpCost::ZERO);
+        let plan = b.finish(BTreeMap::new(), p, p);
+        let transfers = plan.count_ops(|o| matches!(o, Op::Transfer { .. }));
+        assert_eq!(transfers, 1);
+    }
+
+    #[test]
+    fn same_device_read_needs_no_transfer() {
+        let mut b = PlanBuilder::new();
+        let p = b.param("w", 4);
+        let x = b.exec("f".into(), 0, &[p], &[4], OpCost::ZERO)[0];
+        b.exec("g".into(), 0, &[x], &[4], OpCost::ZERO);
+        let plan = b.finish(BTreeMap::new(), p, p);
+        assert_eq!(plan.count_ops(|o| matches!(o, Op::Transfer { .. })), 0);
+    }
+
+    #[test]
+    fn deps_follow_slot_producers() {
+        let mut b = PlanBuilder::new();
+        let p = b.param("w", 1);
+        let a = b.exec("f".into(), 0, &[p], &[1], OpCost::ZERO)[0];
+        let c = b.exec("g".into(), 0, &[a], &[1], OpCost::ZERO)[0];
+        let plan = b.finish(BTreeMap::new(), c, c);
+        assert_eq!(plan.steps[1].deps, vec![0]);
+        assert!(plan.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_use_before_def() {
+        let plan = Plan {
+            steps: vec![Step {
+                op: Op::Add,
+                device: 0,
+                reads: vec![0],
+                writes: vec![1],
+                cost: OpCost::ZERO,
+                deps: vec![],
+            }],
+            n_slots: 2,
+            ..Default::default()
+        };
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn resident_params_never_transfer() {
+        let mut b = PlanBuilder::new();
+        let p = b.param("w", 1000);
+        b.exec("f".into(), 0, &[p], &[1], OpCost::ZERO);
+        b.exec("g".into(), 3, &[p], &[1], OpCost::ZERO);
+        let plan = b.finish(BTreeMap::new(), p, p);
+        assert_eq!(plan.count_ops(|o| matches!(o, Op::Transfer { .. })), 0);
+    }
+}

@@ -1,0 +1,239 @@
+//! The five parallelization strategies of Table 3, as plan factories.
+//!
+//! Each strategy composes [`build_replica`] with a placement and an
+//! attention mode; `Data` additionally replicates the whole model and
+//! pays the full-parameter synchronization the paper identifies as its
+//! bottleneck (§2.1).
+
+use super::plan::{Plan, PlanBuilder, ReduceAlgo, Slot};
+use super::replica::{build_replica, AttnMode, ReplicaSpec};
+use crate::config::{ModelDims, Strategy};
+use crate::model_spec::Placement;
+use std::collections::BTreeMap;
+
+/// Build the one-training-step plan for `strategy` at `dims.batch`.
+///
+/// `dp_host_staged` selects the data-parallel gradient-sync path
+/// (host-staged kvstore vs NVLink ring); it only affects `Data`.
+pub fn build_plan(dims: &ModelDims, strategy: Strategy, dp_host_staged: bool) -> Plan {
+    let mut b = PlanBuilder::new();
+    let (loss, ntok, grads) = match strategy {
+        Strategy::Single => {
+            let spec = ReplicaSpec {
+                dims: dims.clone(),
+                batch: dims.batch,
+                batch_range: (0, dims.batch),
+                placement: Placement::single(0),
+                input_feeding: true,
+                attn: AttnMode::StepLocal { device: 0 },
+            };
+            let out = build_replica(&mut b, &spec, dims.batch);
+            (out.loss, out.ntok, out.grads)
+        }
+        Strategy::Model => {
+            let placement = Placement::spread(dims, Strategy::Model);
+            let attn_dev = match placement.attn {
+                crate::model_spec::AttnPlacement::Device(d) => d,
+                _ => unreachable!(),
+            };
+            let spec = ReplicaSpec {
+                dims: dims.clone(),
+                batch: dims.batch,
+                batch_range: (0, dims.batch),
+                placement,
+                input_feeding: true,
+                attn: AttnMode::StepLocal { device: attn_dev },
+            };
+            let out = build_replica(&mut b, &spec, dims.batch);
+            (out.loss, out.ntok, out.grads)
+        }
+        Strategy::Hybrid => {
+            let spec = ReplicaSpec {
+                dims: dims.clone(),
+                batch: dims.batch,
+                batch_range: (0, dims.batch),
+                placement: Placement::spread(dims, Strategy::Hybrid),
+                input_feeding: false,
+                attn: AttnMode::BlockSharded { devices: (0..dims.gpus).collect() },
+            };
+            let out = build_replica(&mut b, &spec, dims.batch);
+            (out.loss, out.ntok, out.grads)
+        }
+        Strategy::HybridIf => {
+            let spec = ReplicaSpec {
+                dims: dims.clone(),
+                batch: dims.batch,
+                batch_range: (0, dims.batch),
+                placement: Placement::spread(dims, Strategy::HybridIf),
+                input_feeding: true,
+                attn: AttnMode::StepSharded { devices: (0..dims.gpus).collect() },
+            };
+            let out = build_replica(&mut b, &spec, dims.batch);
+            (out.loss, out.ntok, out.grads)
+        }
+        Strategy::Data => {
+            // G full replicas on batch shards; every parameter gradient is
+            // synchronized — the cost data parallelism pays for model-
+            // structure independence (paper §2.1).
+            let g = dims.gpus;
+            let bs = dims.shard;
+            let mut outs = Vec::new();
+            for gi in 0..g {
+                let spec = ReplicaSpec {
+                    dims: dims.clone(),
+                    batch: bs,
+                    batch_range: (gi * bs, (gi + 1) * bs),
+                    placement: Placement::single(gi),
+                    input_feeding: true,
+                    attn: AttnMode::StepLocal { device: gi },
+                };
+                outs.push(build_replica(&mut b, &spec, dims.batch));
+            }
+            let algo = if dp_host_staged { ReduceAlgo::HostStaged } else { ReduceAlgo::Ring };
+            let devices: Vec<usize> = (0..g).collect();
+            let mut grads: BTreeMap<String, Slot> = BTreeMap::new();
+            let names: Vec<String> = outs[0].grads.keys().cloned().collect();
+            for name in names {
+                let parts: Vec<Slot> = outs.iter().map(|o| o.grads[&name]).collect();
+                grads.insert(name, b.allreduce(&parts, devices.clone(), algo));
+            }
+            let mut loss = outs[0].loss;
+            let mut ntok = outs[0].ntok;
+            for o in &outs[1..] {
+                loss = b.add(loss, o.loss, super::plan::HOST);
+                ntok = b.add(ntok, o.ntok, super::plan::HOST);
+            }
+            (loss, ntok, grads)
+        }
+    };
+    b.finish(grads, loss, ntok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::plan::Op;
+
+    fn tiny() -> ModelDims {
+        ModelDims {
+            name: "tiny".into(),
+            d: 32,
+            h: 64,
+            layers: 2,
+            vocab: 96,
+            batch: 16,
+            gpus: 4,
+            shard: 4,
+            max_src: 12,
+            max_tgt: 12,
+            beam: 6,
+        }
+    }
+
+    #[test]
+    fn all_strategies_build_valid_plans() {
+        for s in Strategy::ALL {
+            let p = build_plan(&tiny(), s, true);
+            p.validate().unwrap_or_else(|e| panic!("{s:?}: {e}"));
+            assert!(p.steps.len() > 50, "{s:?} suspiciously small");
+        }
+    }
+
+    #[test]
+    fn grads_cover_every_param() {
+        use crate::model_spec::param_specs;
+        for s in Strategy::ALL {
+            let p = build_plan(&tiny(), s, true);
+            let specs = param_specs(&tiny(), s.uses_input_feeding());
+            for spec in &specs {
+                assert!(
+                    p.grad_out.contains_key(&spec.name),
+                    "{s:?} missing grad for {}",
+                    spec.name
+                );
+                assert!(p.param_in.contains_key(&spec.name));
+            }
+            assert_eq!(p.grad_out.len(), specs.len(), "{s:?} extra grads");
+        }
+    }
+
+    #[test]
+    fn single_strategy_uses_one_device_and_no_comm() {
+        let p = build_plan(&tiny(), Strategy::Single, true);
+        assert_eq!(p.comm_bytes(), 0.0);
+        for step in &p.steps {
+            assert!(step.device == 0 || step.device == super::super::plan::HOST);
+        }
+    }
+
+    #[test]
+    fn data_parallel_allreduces_every_param() {
+        let d = tiny();
+        let p = build_plan(&d, Strategy::Data, true);
+        let n_params = crate::model_spec::param_specs(&d, true).len();
+        let reduces = p.count_ops(|o| matches!(o, Op::AllReduce { .. }));
+        assert_eq!(reduces, n_params);
+        // Host-staged algo selected.
+        assert!(p.steps.iter().any(|s| matches!(
+            &s.op,
+            Op::AllReduce { algo: ReduceAlgo::HostStaged, .. }
+        )));
+    }
+
+    #[test]
+    fn hybrid_allreduces_only_attention_params() {
+        let p = build_plan(&tiny(), Strategy::Hybrid, true);
+        let reduces = p.count_ops(|o| matches!(o, Op::AllReduce { .. }));
+        assert_eq!(reduces, 4); // Wa, Wc, Wout, bout — the 4U part only
+        // ... and they're rings, not host-staged.
+        for s in &p.steps {
+            if let Op::AllReduce { algo, .. } = &s.op {
+                assert_eq!(*algo, ReduceAlgo::Ring);
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_syncs_far_fewer_bytes_than_data() {
+        let hybrid = build_plan(&tiny(), Strategy::Hybrid, true);
+        let data = build_plan(&tiny(), Strategy::Data, true);
+        let ar_bytes = |p: &Plan| -> f64 {
+            p.steps
+                .iter()
+                .map(|s| match &s.op {
+                    Op::AllReduce { bytes, .. } => *bytes,
+                    _ => 0.0,
+                })
+                .sum()
+        };
+        assert!(ar_bytes(&hybrid) < 0.5 * ar_bytes(&data));
+    }
+
+    #[test]
+    fn hybrid_uses_block_attention_not_steps() {
+        let p = build_plan(&tiny(), Strategy::Hybrid, true);
+        let blocks = p.count_ops(|o| matches!(o, Op::Exec { key } if key.starts_with("attn_block")));
+        let steps = p.count_ops(|o| matches!(o, Op::Exec { key } if key.starts_with("attn_step")));
+        assert_eq!(blocks, 4); // one per shard device
+        assert_eq!(steps, 0);
+    }
+
+    #[test]
+    fn model_parallel_transfers_activations() {
+        let p = build_plan(&tiny(), Strategy::Model, true);
+        let transfers = p.count_ops(|o| matches!(o, Op::Transfer { .. }));
+        assert!(transfers > 0, "spread placement must move activations");
+    }
+
+    #[test]
+    fn if_strategies_have_if_cell_shapes() {
+        // dec l0 cells in IF plans use din = d + h artifacts.
+        let d = tiny();
+        let p = build_plan(&d, Strategy::Model, true);
+        let key = format!("lstm_cell_fwd.din{}.b{}", d.d + d.h, d.batch);
+        assert!(p.count_ops(|o| matches!(o, Op::Exec { key: k } if *k == key)) > 0);
+        // ... and hybrid plans don't.
+        let p = build_plan(&d, Strategy::Hybrid, true);
+        assert_eq!(p.count_ops(|o| matches!(o, Op::Exec { key: k } if k.contains(&format!("din{}", d.d + d.h)))), 0);
+    }
+}

@@ -1,0 +1,375 @@
+//! Experiment drivers: one function per paper table/figure
+//! (DESIGN.md §5 experiment index). Each returns the formatted report
+//! and writes machine-readable CSV/JSON next to it under `results/`.
+
+use crate::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig};
+use crate::data::synthetic::{Corpus, GenConfig};
+use crate::data::Batcher;
+use crate::decode::{BeamConfig, Decoder, LengthNorm};
+use crate::metrics::corpus_bleu;
+use crate::model_spec::param_count;
+use crate::parallel::build_plan;
+use crate::runtime::Engine;
+use crate::sim::simulate;
+use crate::train::Trainer;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Make the corpus for a data config, sized to the model dims.
+pub fn make_corpus(data: &DataConfig, dims: &ModelDims) -> Corpus {
+    let gen = GenConfig::for_dims(dims.max_src, data.backtranslated_frac, data.seed);
+    Corpus::generate(
+        &data.dataset,
+        data.train_sentences,
+        data.dev_sentences,
+        data.test_sentences,
+        &gen,
+    )
+}
+
+pub fn make_batcher(exp: &Experiment, corpus: &Corpus) -> Batcher {
+    Batcher::new(
+        corpus,
+        exp.model.vocab,
+        exp.model.batch,
+        exp.model.max_src,
+        exp.model.max_tgt,
+        exp.train.seed,
+    )
+}
+
+fn write_results(name: &str, content: &str) {
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write(format!("results/{name}"), content);
+}
+
+// ---------------------------------------------------------------- Table 1
+
+/// Dataset statistics (paper Table 1), for both synthetic corpora.
+pub fn table1(train14: usize, train17: usize, dims: &ModelDims) -> String {
+    let mut out = String::new();
+    let c14 = make_corpus(&DataConfig::wmt14_sim(train14), dims);
+    let c17 = make_corpus(&DataConfig::wmt17_sim(train17), dims);
+    writeln!(out, "Table 1. Datasets (synthetic stand-ins for WMT14/WMT17 En-De).").unwrap();
+    writeln!(out, "{:<28}{:>12}{:>12}", "", "wmt14-sim", "wmt17-sim").unwrap();
+    let bt14 = c14.train.iter().filter(|p| p.backtranslated).count();
+    let bt17 = c17.train.iter().filter(|p| p.backtranslated).count();
+    writeln!(out, "{:<28}{:>12}{:>12}", "Training (original)", c14.train.len() - bt14, c17.train.len() - bt17).unwrap();
+    writeln!(out, "{:<28}{:>12}{:>12}", "Training (back-translated)", bt14, bt17).unwrap();
+    writeln!(out, "{:<28}{:>12}{:>12}", "Training (all)", c14.train.len(), c17.train.len()).unwrap();
+    writeln!(out, "{:<28}{:>12}{:>12}", "Development", c14.dev.len(), c17.dev.len()).unwrap();
+    writeln!(out, "{:<28}{:>12}{:>12}", "Test", c14.test.len(), c17.test.len()).unwrap();
+    write_results("table1.txt", &out);
+    out
+}
+
+// ---------------------------------------------------------------- Table 2
+
+/// Model hyperparameters + the §4.3 parameter-count check.
+pub fn table2(exp: &Experiment) -> String {
+    let mut out = String::new();
+    let d = &exp.model;
+    writeln!(out, "Table 2. Model parameters ({}).", d.name).unwrap();
+    for (k, v) in [
+        ("word embedding size", d.d.to_string()),
+        ("RNN cell type", "Stacked-LSTMs".into()),
+        ("hidden state size", d.h.to_string()),
+        ("encoder/decoder depth", d.layers.to_string()),
+        ("attention type", "global (Luong general)".into()),
+        ("optimizer", if exp.train.sgd { "SGD".into() } else { "Adam".into() }),
+        ("initial learning rate", format!("{}", exp.train.lr)),
+        ("learning rate decay", format!("{}", exp.train.lr_decay)),
+        ("vocabulary (joint BPE)", d.vocab.to_string()),
+        ("mini-batch", d.batch.to_string()),
+    ] {
+        writeln!(out, "  {k:<24} {v}").unwrap();
+    }
+    let with_if = param_count(d, true);
+    let without = param_count(d, false);
+    writeln!(out, "  parameters (baseline, input-feeding): {:.1}M", with_if as f64 / 1e6).unwrap();
+    writeln!(out, "  parameters (HybridNMT):               {:.1}M", without as f64 / 1e6).unwrap();
+    writeln!(out, "  paper §4.3 reference:                 142M / 138M (Δ = h·4h = {:.1}M)",
+        (d.h * 4 * d.h) as f64 / 1e6).unwrap();
+    write_results("table2.txt", &out);
+    out
+}
+
+// ---------------------------------------------------------------- Table 3
+
+/// One Table 3 row.
+#[derive(Debug, Clone)]
+pub struct SpeedRow {
+    pub label: String,
+    pub tok_s: [f64; 2],
+    pub scaling: [Option<f64>; 2],
+    pub batch: usize,
+}
+
+/// Training-speed comparison at paper scale (sim-only): the headline
+/// table. The two datasets differ in sequence-length profile (WMT14
+/// batches are slightly shorter than WMT17's after BPE).
+pub fn table3_rows(hw: &HwConfig) -> Vec<SpeedRow> {
+    // Padded / average source lengths per dataset (BPE-token scale,
+    // matching the paper's ~8% throughput gap between the datasets).
+    let datasets = [(23usize, 21.0f64), (25usize, 22.6f64)];
+    let mut rows = Vec::new();
+
+    // OpenNMT-lua comparator: same planner, a LuaTorch-flavoured device
+    // profile (heavier per-kernel dispatch, slightly leaner optimizer
+    // host work). Modeled, not measured — see EXPERIMENTS.md.
+    let mut lua_hw = hw.clone();
+    lua_hw.launch_overhead_us *= 0.9;
+    lua_hw.per_array_latency_us *= 0.85;
+    for (impl_label, hwc, strategies) in [
+        ("OpenNMT-lua (modeled)", &lua_hw, &[Strategy::Single, Strategy::Data][..]),
+        ("Our implementation", hw, &Strategy::ALL[..]),
+    ] {
+        let mut base: [f64; 2] = [0.0, 0.0];
+        for &st in strategies {
+            let mut tok_s = [0.0f64; 2];
+            for (di, &(pad_len, avg_len)) in datasets.iter().enumerate() {
+                let mut dims = ModelDims::paper().with_batch(st.paper_batch());
+                dims.max_src = pad_len;
+                dims.max_tgt = pad_len;
+                let plan = build_plan(&dims, st, hwc.dp_host_staged);
+                let sim = simulate(&plan, hwc);
+                tok_s[di] = dims.batch as f64 * avg_len / sim.makespan;
+            }
+            if st == Strategy::Single {
+                base = tok_s;
+            }
+            let scaling = if st == Strategy::Single {
+                [None, None]
+            } else {
+                [Some(tok_s[0] / base[0]), Some(tok_s[1] / base[1])]
+            };
+            rows.push(SpeedRow {
+                label: format!("{impl_label}: {}", st.label()),
+                tok_s,
+                scaling,
+                batch: st.paper_batch(),
+            });
+        }
+    }
+    rows
+}
+
+pub fn table3(hw: &HwConfig) -> String {
+    let rows = table3_rows(hw);
+    let mut out = String::new();
+    writeln!(out, "Table 3. Training speed and scaling factors (simulated 4xV100 NVLink).").unwrap();
+    writeln!(
+        out,
+        "{:<44} {:>9} {:>9}  {:>7} {:>7}  {:>6}",
+        "", "tok/s 14", "tok/s 17", "scale14", "scale17", "batch"
+    )
+    .unwrap();
+    let mut csv = String::from("system,tok_s_wmt14,tok_s_wmt17,scaling_wmt14,scaling_wmt17,batch\n");
+    for r in &rows {
+        let s = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into());
+        writeln!(
+            out,
+            "{:<44} {:>9.0} {:>9.0}  {:>7} {:>7}  {:>6}",
+            r.label,
+            r.tok_s[0],
+            r.tok_s[1],
+            s(r.scaling[0]),
+            s(r.scaling[1]),
+            r.batch
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{},{:.0},{:.0},{},{},{}",
+            r.label, r.tok_s[0], r.tok_s[1], s(r.scaling[0]), s(r.scaling[1]), r.batch
+        )
+        .unwrap();
+    }
+    writeln!(out, "\nPaper reference: DP 1.60-1.71x, MP 2.32-2.51x, HybridNMTIF 3.43-3.57x, HybridNMT 4.13-4.20x.").unwrap();
+    write_results("table3.txt", &out);
+    write_results("table3.csv", &csv);
+    out
+}
+
+// --------------------------------------------------------------- Figure 4
+
+/// Convergence curves: dev perplexity vs *simulated* wall-clock for all
+/// five strategies on one dataset (real training at artifact scale).
+pub fn figure4(
+    engine: &Engine,
+    data: &DataConfig,
+    train_cfg: &TrainConfig,
+    hw: &HwConfig,
+    strategies: &[Strategy],
+) -> Result<String> {
+    let dims = engine.dims().clone();
+    let corpus = make_corpus(data, &dims);
+    let mut out = String::new();
+    writeln!(out, "Figure 4. Convergence on {} (dev ppl vs simulated hours).", data.dataset).unwrap();
+    let mut csv = String::from("strategy,step,sim_hours,dev_ppl,lr\n");
+    let mut curves: Vec<(Strategy, Vec<(f64, f64)>)> = Vec::new();
+
+    for &st in strategies {
+        let exp = Experiment {
+            model: dims.clone(),
+            strategy: st,
+            hw: hw.clone(),
+            train: train_cfg.clone(),
+            data: data.clone(),
+            artifacts_dir: String::new(),
+        };
+        let mut batcher = make_batcher(&exp, &corpus);
+        let mut trainer = Trainer::new(engine, &exp)?;
+        trainer.run(&mut batcher, |_| {})?;
+        for p in &trainer.history {
+            writeln!(csv, "{},{},{:.6},{:.4},{:.6}", st.key(), p.step, p.sim_hours, p.dev_ppl, p.lr).unwrap();
+        }
+        let curve: Vec<(f64, f64)> =
+            trainer.history.iter().map(|p| (p.sim_hours, p.dev_ppl)).collect();
+        let final_ppl = curve.last().map(|x| x.1).unwrap_or(f64::NAN);
+        writeln!(
+            out,
+            "  {:<22} final dev-ppl {:>8.2} after {:>8.2} sim-s ({} steps @ {:.1} ms/step)",
+            st.label(),
+            final_ppl,
+            curve.last().map(|x| x.0 * 3600.0).unwrap_or(0.0),
+            trainer.steps_done,
+            trainer.step_sim.makespan * 1e3,
+        )
+        .unwrap();
+        curves.push((st, curve));
+    }
+    out.push_str(&ascii_curves(&curves));
+    write_results(&format!("figure4_{}.csv", data.dataset), &csv);
+    write_results(&format!("figure4_{}.txt", data.dataset), &out);
+    Ok(out)
+}
+
+/// Minimal ASCII multi-curve plot (x = sim hours, y = dev ppl, log-ish).
+fn ascii_curves(curves: &[(Strategy, Vec<(f64, f64)>)]) -> String {
+    let (w, h) = (72usize, 18usize);
+    let mut pts: Vec<(f64, f64, char)> = Vec::new();
+    for (st, c) in curves {
+        let ch = match st {
+            Strategy::Single => 'S',
+            Strategy::Data => 'D',
+            Strategy::Model => 'M',
+            Strategy::Hybrid => 'H',
+            Strategy::HybridIf => 'I',
+        };
+        for &(x, y) in c {
+            if y.is_finite() {
+                pts.push((x, y.ln(), ch));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return String::new();
+    }
+    let xmax = pts.iter().map(|p| p.0).fold(0.0, f64::max).max(1e-9);
+    let ymin = pts.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let ymax = pts.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max).max(ymin + 1e-9);
+    let mut grid = vec![vec![' '; w]; h];
+    for (x, y, ch) in pts {
+        let xi = ((x / xmax) * (w - 1) as f64) as usize;
+        let yi = (((ymax - y) / (ymax - ymin)) * (h - 1) as f64) as usize;
+        grid[yi][xi] = ch;
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "\n  ln(dev ppl): {ymax:.2} (top) .. {ymin:.2} (bottom); x: 0 .. {:.2} sim-seconds\n",
+        xmax * 3600.0
+    ));
+    out.push_str(
+        "  NOTE: single/data/model/hybrid_if share identical math (the integration\n  suite asserts equal gradients), so their per-step ppl coincides and the\n  separation on this plot is purely the simulated time axis -- the paper's point.\n",
+    );
+    out.push_str("  S=baseline D=data M=model H=HybridNMT I=HybridNMTIF\n");
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(w));
+    out.push('\n');
+    out
+}
+
+// ---------------------------------------------------------------- Table 4
+
+/// BLEU sweep over beam size x normalization (paper Table 4), on the
+/// dev set, for a trained model.
+pub fn table4(
+    engine: &Engine,
+    batcher: &Batcher,
+    decoder: &Decoder,
+    corpus: &Corpus,
+    gnmt: bool,
+    beams: &[usize],
+    norm_values: &[f64],
+) -> Result<String> {
+    let _ = engine;
+    let mut out = String::new();
+    let family = if gnmt { "GNMT normalization (OpenNMT-lua comparator)" } else { "Marian length normalization (HybridNMT)" };
+    writeln!(out, "Table 4 ({family}), dev BLEU:").unwrap();
+    write!(out, "{:<18}", "norm \\ beam").unwrap();
+    for b in beams {
+        write!(out, "{b:>8}").unwrap();
+    }
+    writeln!(out).unwrap();
+    let mut csv = String::from("norm,beam,bleu\n");
+
+    // Dev examples -> (src ids, reference string). Capped: the sweep is
+    // 36 (beam, norm) grid cells; 48 sentences keep the full grid under
+    // a few minutes on this single-CPU testbed while preserving the
+    // relative BLEU structure the paper's Table 4 shows.
+    let refs: Vec<(Vec<i32>, String)> = batcher
+        .dev
+        .iter()
+        .take(48)
+        .map(|e| (e.src.clone(), batcher.vocab.decode(&e.tgt)))
+        .collect();
+
+    for &nv in norm_values {
+        let label = if gnmt { format!("({nv:.1}, 0.0)") } else { format!("{nv:.1}") };
+        write!(out, "{label:<18}").unwrap();
+        for &beam in beams {
+            let norm = if gnmt {
+                LengthNorm::Gnmt { alpha: nv, beta: 0.0 }
+            } else {
+                LengthNorm::Marian { alpha: nv }
+            };
+            let cfg = BeamConfig { beam, max_len: decoder.max_len(), norm };
+            let mut pairs = Vec::new();
+            for (src, r) in &refs {
+                let hyp = decoder.translate(src, &cfg)?;
+                pairs.push((batcher.vocab.decode(&hyp), r.clone()));
+            }
+            let bleu = corpus_bleu(&pairs);
+            write!(out, "{bleu:>8.2}").unwrap();
+            writeln!(csv, "{nv},{beam},{bleu:.2}").unwrap();
+        }
+        writeln!(out).unwrap();
+    }
+    let _ = corpus;
+    write_results(&format!("table4_{}.csv", if gnmt { "gnmt" } else { "marian" }), &csv);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- Table 5
+
+/// Test BLEU comparison (paper Table 5): our baseline vs HybridNMT on
+/// both test sets, with the paper's published rows quoted for context.
+pub fn table5(rows: &[(String, f64, f64)]) -> String {
+    let mut out = String::new();
+    writeln!(out, "Table 5. Test BLEU.").unwrap();
+    writeln!(out, "{:<36}{:>10}{:>10}", "System", "wmt14-sim", "wmt17-sim").unwrap();
+    for (label, b14, b17) in rows {
+        let f = |x: f64| if x.is_nan() { "-".to_string() } else { format!("{x:.2}") };
+        writeln!(out, "{:<36}{:>10}{:>10}", label, f(*b14), f(*b17)).unwrap();
+    }
+    writeln!(out, "\nPaper reference (real WMT test sets): OpenNMT-lua 21.85/25.92, HybridNMT 22.71/26.91;").unwrap();
+    writeln!(out, "the reproduction claim is *parity or better for HybridNMT vs baseline*, not absolute BLEU.").unwrap();
+    write_results("table5.txt", &out);
+    out
+}

@@ -1,0 +1,123 @@
+//! Small deterministic RNG (SplitMix64): parameter init, synthetic data,
+//! batch shuffling. Self-contained so every run is reproducible from a
+//! single seed and the crate carries no RNG dependency.
+
+/// SplitMix64 — tiny, fast, statistically fine for simulation workloads.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [-scale, scale).
+    pub fn uniform(&mut self, scale: f32) -> f32 {
+        (self.f64() as f32 * 2.0 - 1.0) * scale
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Zipf-ish rank sample over [0, n): P(k) ∝ 1/(k+2) — a cheap heavy
+    /// tail matching natural-language token frequency shape.
+    pub fn zipf(&mut self, n: usize) -> usize {
+        // Inverse-CDF on the harmonic-ish weights via rejection-free trick:
+        // draw u, return floor(exp(u * ln(n+1))) - 1 clamped. This gives a
+        // log-uniform (Zipf exponent ~1) distribution.
+        let u = self.f64();
+        let x = ((n as f64 + 1.0).powf(u)) - 1.0;
+        (x as usize).min(n - 1)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_is_heavy_headed() {
+        let mut r = Rng::new(3);
+        let n = 1000;
+        let mut head = 0;
+        for _ in 0..10_000 {
+            if r.zipf(n) < 10 {
+                head += 1;
+            }
+        }
+        // Log-uniform: P(k < 10) = ln(11)/ln(1001) ≈ 0.35.
+        assert!(head > 2500, "head mass {head}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(1);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uniform_respects_scale() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let x = r.uniform(0.08);
+            assert!(x.abs() <= 0.08);
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. Parsed from `artifacts/<config>/manifest.json` with
+//! the in-tree JSON parser (offline build — no serde).
+
+use crate::config::ModelDims;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSig {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(IoSig { shape, dtype: j.req_str("dtype")?.to_string() })
+    }
+}
+
+/// One artifact: HLO file + I/O signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<IoSig>,
+    pub outputs: Vec<IoSig>,
+}
+
+/// Parameter-count sidecar (paper §3.1 / §4.3 checks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParamCount {
+    pub embedding: usize,
+    pub lstm: usize,
+    pub attention_softmax: usize,
+    pub total: usize,
+}
+
+/// `manifest.json` as written by aot.py.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelDims,
+    pub param_count: ParamCount,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+impl Manifest {
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let config = ModelDims::from_json(
+            j.get("config").ok_or_else(|| anyhow!("missing `config`"))?,
+        )?;
+        let pc = j.get("param_count").ok_or_else(|| anyhow!("missing `param_count`"))?;
+        let param_count = ParamCount {
+            embedding: pc.req_usize("embedding")?,
+            lstm: pc.req_usize("lstm")?,
+            attention_softmax: pc.req_usize("attention_softmax")?,
+            total: pc.req_usize("total")?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (key, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing `artifacts`"))?
+        {
+            let sigs = |field: &str| -> Result<Vec<IoSig>> {
+                a.get(field)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact `{key}` missing {field}"))?
+                    .iter()
+                    .map(IoSig::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                key.clone(),
+                ArtifactSig {
+                    file: a.req_str("file")?.to_string(),
+                    inputs: sigs("inputs")?,
+                    outputs: sigs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { config, param_count, artifacts })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_json_text(&text).with_context(|| format!("parsing {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_aot_manifest_format() {
+        let json = r#"{
+          "config": {"name":"t","d":8,"h":16,"layers":2,"vocab":32,
+                     "batch":4,"gpus":4,"shard":1,"max_src":6,"max_tgt":6,
+                     "beam":3},
+          "param_count": {"embedding":512,"lstm":1000,
+                          "attention_softmax":600,"total":2112},
+          "artifacts": {
+            "embed_fwd.b4": {
+              "file": "embed_fwd.b4.hlo.txt",
+              "inputs": [{"shape":[32,8],"dtype":"f32"},
+                         {"shape":[4],"dtype":"i32"}],
+              "outputs": [{"shape":[4,8],"dtype":"f32"}]
+            }
+          }
+        }"#;
+        let m = Manifest::from_json_text(json).unwrap();
+        assert_eq!(m.config.h, 16);
+        assert_eq!(m.artifacts["embed_fwd.b4"].inputs[1].dtype, "i32");
+        assert_eq!(m.artifacts["embed_fwd.b4"].outputs[0].shape, vec![4, 8]);
+        assert_eq!(m.param_count.total, 2112);
+    }
+
+    #[test]
+    fn missing_sections_error_cleanly() {
+        assert!(Manifest::from_json_text("{}").is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place rust touches the `xla` crate. The interchange
+//! format is HLO *text* (see `python/compile/aot.py` for why text and not
+//! a serialized proto), one file per artifact, described by a
+//! `manifest.json` carrying the model dims and per-artifact signatures.
+//!
+//! Executables are compiled lazily on first use and cached for the life
+//! of the engine — the hot path is `Engine::exec`, which converts host
+//! tensors to literals, runs the computation on the PJRT CPU client, and
+//! unpacks the result tuple.
+
+mod manifest;
+
+pub use manifest::{ArtifactSig, IoSig, Manifest};
+
+use crate::config::ModelDims;
+use crate::tensor::{ITensor, Tensor};
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One argument to an artifact call.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    F(&'a Tensor),
+    I(&'a ITensor),
+}
+
+impl<'a> Arg<'a> {
+    fn shape(&self) -> Vec<usize> {
+        match self {
+            Arg::F(t) => t.shape().to_vec(),
+            Arg::I(t) => t.shape().to_vec(),
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            Arg::F(_) => "f32",
+            Arg::I(_) => "i32",
+        }
+    }
+
+    /// Upload to a device buffer we own.
+    ///
+    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
+    /// (literal args): the vendored C wrapper `release()`s the input
+    /// buffers it creates for that path and never frees them — ~0.7 MB
+    /// leaked per call, unbounded over a training run. `execute_b`
+    /// borrows caller-owned buffers, which Drop correctly.
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            Arg::F(t) => client
+                .buffer_from_host_buffer(t.data(), t.shape(), None)
+                .map_err(|e| anyhow!("upload f32 {:?}: {e:?}", t.shape())),
+            Arg::I(t) => client
+                .buffer_from_host_buffer(t.data(), t.shape(), None)
+                .map_err(|e| anyhow!("upload i32 {:?}: {e:?}", t.shape())),
+        }
+    }
+}
+
+/// Execution statistics (feeds §Perf and the throughput reports).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub compile_count: u64,
+    pub exec_nanos: u128,
+    pub convert_nanos: u128,
+}
+
+/// The artifact engine: PJRT client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+    /// When false, skip manifest signature validation on every call
+    /// (the hot loop calls exec thousands of times per step; tests run
+    /// with validation on).
+    pub validate: bool,
+}
+
+impl Engine {
+    /// Load the artifact set of one model config, e.g.
+    /// `Engine::load("artifacts", "tiny")`.
+    pub fn load(artifacts_dir: impl AsRef<Path>, config: &str) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().join(config);
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+            validate: true,
+        })
+    }
+
+    pub fn dims(&self) -> &ModelDims {
+        &self.manifest.config
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Number of distinct artifacts compiled so far.
+    pub fn compiled(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    fn executable(&self, key: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let sig = self
+            .manifest
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact `{key}` not in manifest"))?;
+        let path = self.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile `{key}`: {e:?}"))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
+        self.stats.borrow_mut().compile_count += 1;
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (pulls compilation out of the
+    /// timed training loop).
+    pub fn warmup(&self, keys: &[&str]) -> Result<()> {
+        for k in keys {
+            self.executable(k)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `key` with `args`, returning the output tensors.
+    pub fn exec(&self, key: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let sig = self
+            .manifest
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact `{key}` not in manifest"))?;
+        if self.validate {
+            validate_args(key, sig, args)?;
+        }
+        let exe = self.executable(key)?;
+
+        let t0 = std::time::Instant::now();
+        let buffers: Vec<xla::PjRtBuffer> =
+            args.iter().map(|a| a.to_buffer(&self.client)).collect::<Result<_>>()?;
+        let t1 = std::time::Instant::now();
+        let bufs = exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow!("execute `{key}`: {e:?}"))?;
+        // Synchronize before `buffers` drops (execute_b borrows them).
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch `{key}`: {e:?}"))?;
+        let t2 = std::time::Instant::now();
+
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple `{key}`: {e:?}"))?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            outs.push(literal_to_tensor(&p).with_context(|| format!("`{key}` output {i}"))?);
+        }
+        if self.validate {
+            validate_outputs(key, sig, &outs)?;
+        }
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.exec_nanos += (t2 - t1).as_nanos();
+        st.convert_nanos += (t1 - t0).as_nanos() + t2.elapsed().as_nanos();
+        Ok(outs)
+    }
+}
+
+fn validate_args(key: &str, sig: &ArtifactSig, args: &[Arg]) -> Result<()> {
+    if sig.inputs.len() != args.len() {
+        return Err(anyhow!(
+            "`{key}` expects {} inputs, got {}",
+            sig.inputs.len(),
+            args.len()
+        ));
+    }
+    for (i, (want, got)) in sig.inputs.iter().zip(args).enumerate() {
+        if want.shape != got.shape() || want.dtype != got.dtype() {
+            return Err(anyhow!(
+                "`{key}` input {i}: want {:?}{:?}, got {:?}{:?}",
+                want.dtype, want.shape, got.dtype(), got.shape()
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn validate_outputs(key: &str, sig: &ArtifactSig, outs: &[Tensor]) -> Result<()> {
+    if sig.outputs.len() != outs.len() {
+        return Err(anyhow!(
+            "`{key}` produced {} outputs, manifest says {}",
+            outs.len(),
+            sig.outputs.len()
+        ));
+    }
+    for (i, (want, got)) in sig.outputs.iter().zip(outs).enumerate() {
+        if want.shape != got.shape() {
+            return Err(anyhow!(
+                "`{key}` output {i}: want {:?}, got {:?}",
+                want.shape,
+                got.shape()
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = match &shape {
+        xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+        other => return Err(anyhow!("non-array output shape {other:?}")),
+    };
+    let et = lit.element_type().map_err(|e| anyhow!("element type: {e:?}"))?;
+    let data: Vec<f32> = match et {
+        xla::ElementType::F32 => lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        // Token counts and similar integer outputs get widened to f32 so
+        // everything downstream (metrics, optimizer scaling) is uniform.
+        xla::ElementType::S32 => lit
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect(),
+        other => return Err(anyhow!("unsupported output element type {other:?}")),
+    };
+    Ok(Tensor::new(dims, data))
+}
+
+/// Artifact key helpers — must mirror `python/compile/aot.py` naming.
+pub mod keys {
+    pub fn embed_fwd(b: usize) -> String {
+        format!("embed_fwd.b{b}")
+    }
+    pub fn embed_bwd(b: usize) -> String {
+        format!("embed_bwd.b{b}")
+    }
+    pub fn lstm_cell_fwd(din: usize, b: usize) -> String {
+        format!("lstm_cell_fwd.din{din}.b{b}")
+    }
+    pub fn lstm_cell_bwd(din: usize, b: usize) -> String {
+        format!("lstm_cell_bwd.din{din}.b{b}")
+    }
+    pub fn attn_block(b: usize) -> String {
+        format!("attn_block.b{b}")
+    }
+    pub fn attn_step_fwd(b: usize) -> String {
+        format!("attn_step_fwd.b{b}")
+    }
+    pub fn attn_step_bwd(b: usize) -> String {
+        format!("attn_step_bwd.b{b}")
+    }
+    pub fn attn_ctx_fwd(b: usize) -> String {
+        format!("attn_ctx_fwd.b{b}")
+    }
+    pub fn attn_ctx_bwd(b: usize) -> String {
+        format!("attn_ctx_bwd.b{b}")
+    }
+    pub fn attn_out_fwd(b: usize) -> String {
+        format!("attn_out_fwd.b{b}")
+    }
+    pub fn attn_out_bwd(b: usize) -> String {
+        format!("attn_out_bwd.b{b}")
+    }
+    pub fn attn_step_logits(b: usize) -> String {
+        format!("attn_step_logits.b{b}")
+    }
+}

@@ -1,0 +1,317 @@
+//! Minimal dense host tensors for the coordinator.
+//!
+//! The rust side never does heavy math — the artifacts do — but it moves,
+//! slices, concatenates, accumulates and all-reduces activations and
+//! gradients between (simulated) devices. These types are that substrate.
+//!
+//! Two element types cover everything the artifacts exchange: `f32`
+//! (activations, gradients, parameters) and `i32` (token ids, lengths).
+
+use std::fmt;
+
+/// Dense row-major `f32` tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+/// Dense row-major `i32` tensor (token ids, lengths).
+#[derive(Clone, PartialEq)]
+pub struct ITensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(numel(&shape), data.len(), "shape {shape:?} vs {} elems", data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; numel(shape)] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar extraction (shape [] or [1]).
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on shape {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// `self += other` elementwise (gradient accumulation).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
+    /// `self *= s` (gradient scaling, e.g. 1/ntok).
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Slice along axis 0: rows `[lo, hi)`. Used for batch sharding.
+    pub fn slice0(&self, lo: usize, hi: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && lo <= hi && hi <= self.shape[0]);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor::new(shape, self.data[lo * row..hi * row].to_vec())
+    }
+
+    /// Concatenate along axis 0 (batch re-gather after data parallelism).
+    pub fn concat0(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let tail = &parts[0].shape[1..];
+        let mut n0 = 0;
+        let mut data = Vec::new();
+        for p in parts {
+            assert_eq!(&p.shape[1..], tail, "concat0 tail mismatch");
+            n0 += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![n0];
+        shape.extend_from_slice(tail);
+        Tensor::new(shape, data)
+    }
+
+    /// Concatenate two matrices along axis 1 (input-feeding `[emb ; Hc]`).
+    pub fn concat1(a: &Tensor, b: &Tensor) -> Tensor {
+        assert_eq!(a.shape.len(), 2);
+        assert_eq!(b.shape.len(), 2);
+        assert_eq!(a.shape[0], b.shape[0]);
+        let (n, ca, cb) = (a.shape[0], a.shape[1], b.shape[1]);
+        let mut data = Vec::with_capacity(n * (ca + cb));
+        for i in 0..n {
+            data.extend_from_slice(&a.data[i * ca..(i + 1) * ca]);
+            data.extend_from_slice(&b.data[i * cb..(i + 1) * cb]);
+        }
+        Tensor::new(vec![n, ca + cb], data)
+    }
+
+    /// Split a matrix along axis 1 at `col` (undo input-feeding concat).
+    pub fn split1(&self, col: usize) -> (Tensor, Tensor) {
+        assert_eq!(self.shape.len(), 2);
+        let (n, c) = (self.shape[0], self.shape[1]);
+        assert!(col <= c);
+        let mut a = Vec::with_capacity(n * col);
+        let mut b = Vec::with_capacity(n * (c - col));
+        for i in 0..n {
+            a.extend_from_slice(&self.data[i * c..i * c + col]);
+            b.extend_from_slice(&self.data[i * c + col..(i + 1) * c]);
+        }
+        (
+            Tensor::new(vec![n, col], a),
+            Tensor::new(vec![n, c - col], b),
+        )
+    }
+
+    /// Stack `[B, h]` matrices over a new time axis -> `[B, T, h]`.
+    ///
+    /// This materializes the `S` / `H` state blocks the attention part
+    /// consumes (paper Fig. 3: "GPU 3 stores the hidden states").
+    pub fn stack_time(steps: &[&Tensor]) -> Tensor {
+        assert!(!steps.is_empty());
+        let (b, h) = (steps[0].shape[0], steps[0].shape[1]);
+        let t = steps.len();
+        let mut data = vec![0.0f32; b * t * h];
+        for (ti, s) in steps.iter().enumerate() {
+            assert_eq!(s.shape, vec![b, h]);
+            for bi in 0..b {
+                let dst = bi * t * h + ti * h;
+                data[dst..dst + h].copy_from_slice(&s.data[bi * h..(bi + 1) * h]);
+            }
+        }
+        Tensor::new(vec![b, t, h], data)
+    }
+
+    /// Extract time slice `t` of a `[B, T, h]` block -> `[B, h]`.
+    pub fn time_slice(&self, t: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 3);
+        let (b, tt, h) = (self.shape[0], self.shape[1], self.shape[2]);
+        assert!(t < tt);
+        let mut data = Vec::with_capacity(b * h);
+        for bi in 0..b {
+            let src = bi * tt * h + t * h;
+            data.extend_from_slice(&self.data[src..src + h]);
+        }
+        Tensor::new(vec![b, h], data)
+    }
+
+    /// Gather rows of a matrix by index (beam-search state reorder).
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        let mut data = Vec::with_capacity(idx.len() * c);
+        for &i in idx {
+            data.extend_from_slice(&self.data[i * c..(i + 1) * c]);
+        }
+        Tensor::new(vec![idx.len(), c], data)
+    }
+
+    /// Sum of squares (grad-norm diagnostics, test assertions).
+    pub fn sq_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl ITensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(numel(&shape), data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    pub fn slice0(&self, lo: usize, hi: usize) -> ITensor {
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        ITensor::new(shape, self.data[lo * row..hi * row].to_vec())
+    }
+
+    /// Column `t` of a `[B, T]` id matrix -> `[B]`.
+    pub fn col(&self, t: usize) -> ITensor {
+        assert_eq!(self.shape.len(), 2);
+        let (b, tt) = (self.shape[0], self.shape[1]);
+        let data = (0..b).map(|bi| self.data[bi * tt + t]).collect();
+        ITensor::new(vec![b], data)
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, "{:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for ITensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ITensor{:?}", self.shape)
+    }
+}
+
+/// Sum-reduce the same-named tensors from several replicas in place into
+/// the first one: the semantic core of all-reduce (the *cost* of the
+/// collective lives in `sim::cost`, not here).
+pub fn allreduce_sum(parts: Vec<Tensor>) -> Tensor {
+    let mut it = parts.into_iter();
+    let mut acc = it.next().expect("allreduce of 0 tensors");
+    for p in it {
+        acc.add_assign(&p);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_concat_roundtrip() {
+        let t = Tensor::new(vec![4, 3], (0..12).map(|x| x as f32).collect());
+        let a = t.slice0(0, 2);
+        let b = t.slice0(2, 4);
+        assert_eq!(Tensor::concat0(&[&a, &b]), t);
+    }
+
+    #[test]
+    fn concat1_split1_roundtrip() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 3], vec![5., 6., 7., 8., 9., 10.]);
+        let c = Tensor::concat1(&a, &b);
+        assert_eq!(c.shape(), &[2, 5]);
+        assert_eq!(c.data()[..5], [1., 2., 5., 6., 7.]);
+        let (a2, b2) = c.split1(2);
+        assert_eq!(a2, a);
+        assert_eq!(b2, b);
+    }
+
+    #[test]
+    fn stack_time_slice_roundtrip() {
+        let s0 = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let s1 = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]);
+        let st = Tensor::stack_time(&[&s0, &s1]);
+        assert_eq!(st.shape(), &[2, 2, 2]);
+        assert_eq!(st.time_slice(0), s0);
+        assert_eq!(st.time_slice(1), s1);
+    }
+
+    #[test]
+    fn allreduce_sums() {
+        let a = Tensor::full(&[3], 1.0);
+        let b = Tensor::full(&[3], 2.0);
+        let c = allreduce_sum(vec![a, b]);
+        assert_eq!(c.data(), &[3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn itensor_col() {
+        let ids = ITensor::new(vec![2, 3], vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(ids.col(1).data(), &[2, 5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+}

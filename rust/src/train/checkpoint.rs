@@ -1,0 +1,101 @@
+//! Parameter checkpointing: a tiny self-describing binary format
+//! (magic, version, per-tensor name/shape/f32 data, little-endian).
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"HYNMTCK1";
+
+/// Write all parameters to `path`.
+pub fn save(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for (name, t) in params {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &x in t.data() {
+            f.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load parameters from `path`.
+pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(anyhow!("{path:?}: not a hybridnmt checkpoint"));
+    }
+    let mut params = BTreeMap::new();
+    let n = read_u32(&mut f)? as usize;
+    for _ in 0..n {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|_| anyhow!("bad name"))?;
+        let rank = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        let mut buf = [0u8; 4];
+        for x in &mut data {
+            f.read_exact(&mut buf)?;
+            *x = f32::from_le_bytes(buf);
+        }
+        params.insert(name, Tensor::new(shape, data));
+    }
+    Ok(params)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut params = BTreeMap::new();
+        params.insert("w".to_string(), Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        params.insert("b".to_string(), Tensor::new(vec![1], vec![-0.5]));
+        let dir = std::env::temp_dir().join("hynmt_ck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        save(&path, &params).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, params);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("hynmt_ck_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

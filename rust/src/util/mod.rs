@@ -1,0 +1,4 @@
+//! Dependency-free utility substrates (the environment builds fully
+//! offline, so JSON et al. are implemented here rather than imported).
+
+pub mod json;

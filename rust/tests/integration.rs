@@ -1,0 +1,309 @@
+//! End-to-end integration: real PJRT execution of the planned graphs
+//! against the `tiny` artifact set (requires `make artifacts`).
+//!
+//! The load-bearing invariant: `Single`, `Data`, `Model` and `HybridIf`
+//! all implement the *same* mathematical model (input-feeding baseline),
+//! just scheduled differently — so for identical parameters and batch
+//! they must produce identical losses and gradients to float tolerance.
+//! That single assertion exercises the whole stack: plan construction,
+//! auto-transfers, sharding/scatter/gather, per-step attention, the
+//! backward wavefront, and gradient all-reduce.
+
+use hybridnmt::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig};
+use hybridnmt::data::vocab::{BOS, EOS, PAD};
+use hybridnmt::decode::{BeamConfig, Decoder, LengthNorm};
+use hybridnmt::parallel::{build_plan, execute, Batch};
+use hybridnmt::rng::Rng;
+use hybridnmt::runtime::Engine;
+use hybridnmt::tensor::{ITensor, Tensor};
+use hybridnmt::train::{init_params, Trainer};
+use std::collections::BTreeMap;
+
+fn engine() -> Engine {
+    Engine::load("artifacts", "tiny").expect("run `make artifacts` first")
+}
+
+fn dims(e: &Engine) -> ModelDims {
+    e.dims().clone()
+}
+
+/// A deterministic random batch padded to the artifact shapes.
+fn random_batch(d: &ModelDims, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (b, m, n) = (d.batch, d.max_src, d.max_tgt);
+    let mut src = vec![PAD; b * m];
+    let mut srclen = vec![0i32; b];
+    let mut tgt_in = vec![PAD; b * n];
+    let mut tgt_out = vec![PAD; b * n];
+    let mut tmask = vec![0.0f32; b * n];
+    for bi in 0..b {
+        let sl = rng.range(2, m + 1);
+        srclen[bi] = sl as i32;
+        for t in 0..sl {
+            src[bi * m + t] = rng.range(4, d.vocab) as i32;
+        }
+        let tl = rng.range(1, n); // + EOS fits in n
+        tgt_in[bi * n] = BOS;
+        for t in 0..tl {
+            let tok = rng.range(4, d.vocab) as i32;
+            tgt_in[bi * n + t + 1] = tok;
+            tgt_out[bi * n + t] = tok;
+        }
+        tgt_out[bi * n + tl] = EOS;
+        for t in 0..=tl {
+            tmask[bi * n + t] = 1.0;
+        }
+    }
+    Batch {
+        src: ITensor::new(vec![b, m], src),
+        srclen: ITensor::new(vec![b], srclen),
+        tgt_in: ITensor::new(vec![b, n], tgt_in),
+        tgt_out: ITensor::new(vec![b, n], tgt_out),
+        tmask: Tensor::new(vec![b, n], tmask),
+    }
+}
+
+fn test_exp(e: &Engine, strategy: Strategy) -> Experiment {
+    Experiment {
+        model: dims(e),
+        strategy,
+        hw: HwConfig::default(),
+        train: TrainConfig { seed: 3, steps: 8, eval_interval: 4, ..Default::default() },
+        data: DataConfig::wmt14_sim(600),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn rel_close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+#[test]
+fn input_feeding_strategies_agree_exactly() {
+    let e = engine();
+    let d = dims(&e);
+    let batch = random_batch(&d, 11);
+    let exp = test_exp(&e, Strategy::Single);
+    let params = init_params(&exp, true);
+
+    let mut results = Vec::new();
+    for st in [Strategy::Single, Strategy::Data, Strategy::Model, Strategy::HybridIf] {
+        let plan = build_plan(&d, st, true);
+        plan.validate().unwrap();
+        let out = execute(&plan, &e, &params, &batch)
+            .unwrap_or_else(|err| panic!("{st:?}: {err:#}"));
+        assert!(out.loss_sum.is_finite(), "{st:?} loss");
+        results.push((st, out));
+    }
+    let (_, base) = &results[0];
+    for (st, out) in &results[1..] {
+        let rel = (out.loss_sum - base.loss_sum).abs() / base.loss_sum.abs();
+        assert!(rel < 1e-4, "{st:?} loss {} vs {}", out.loss_sum, base.loss_sum);
+        assert_eq!(out.ntok, base.ntok, "{st:?} ntok");
+        assert_eq!(out.grads.len(), base.grads.len(), "{st:?} grad count");
+        for (name, g) in &out.grads {
+            let bg = &base.grads[name];
+            assert!(g.is_finite(), "{st:?} {name} non-finite");
+            let (gd, bd) = (g.data(), bg.data());
+            let mut worst = 0.0f32;
+            for (x, y) in gd.iter().zip(bd) {
+                if !rel_close(*x, *y, 2e-3, 2e-4) {
+                    worst = worst.max((x - y).abs());
+                }
+            }
+            assert_eq!(worst, 0.0, "{st:?} grad `{name}` max abs diff {worst}");
+        }
+    }
+}
+
+#[test]
+fn hybrid_executes_and_differs_from_baseline_model() {
+    let e = engine();
+    let d = dims(&e);
+    let batch = random_batch(&d, 5);
+    let exp = test_exp(&e, Strategy::Hybrid);
+    // Hybrid uses the no-input-feeding parameter set.
+    let params = init_params(&exp, false);
+    let plan = build_plan(&d, Strategy::Hybrid, true);
+    let out = execute(&plan, &e, &params, &batch).unwrap();
+    assert!(out.loss_sum.is_finite() && out.loss_sum > 0.0);
+    assert_eq!(out.ntok, batch.target_tokens());
+    // Near-uniform init: loss/token ≈ ln V.
+    let per_tok = out.loss_sum / out.ntok;
+    let lnv = (d.vocab as f64).ln();
+    assert!((per_tok - lnv).abs() < 1.0, "per-tok {per_tok} vs ln V {lnv}");
+    // Every parameter has a gradient and at least the attention ones are
+    // nonzero.
+    assert!(out.grads["attn_Wout"].sq_norm() > 0.0);
+    assert!(out.grads["src_emb"].sq_norm() > 0.0);
+    assert!(out.grads["enc_l0_W"].sq_norm() > 0.0);
+}
+
+#[test]
+fn gradients_match_finite_difference_on_loss() {
+    // Spot-check the full composed gradient against a central finite
+    // difference through the executed forward pass (hybrid strategy).
+    let e = engine();
+    let d = dims(&e);
+    let batch = random_batch(&d, 7);
+    let exp = test_exp(&e, Strategy::Hybrid);
+    let params = init_params(&exp, false);
+    let plan = build_plan(&d, Strategy::Hybrid, true);
+    let out = execute(&plan, &e, &params, &batch).unwrap();
+
+    let mut rng = Rng::new(99);
+    for name in ["attn_Wa", "dec_l0_W", "enc_l1_W", "tgt_emb"] {
+        let idx = rng.below(params[name].numel());
+        let eps = 2e-2f32;
+        let mut plus = params.clone();
+        plus.get_mut(name).unwrap().data_mut()[idx] += eps;
+        let mut minus = params.clone();
+        minus.get_mut(name).unwrap().data_mut()[idx] -= eps;
+        let lp = execute(&plan, &e, &plus, &batch).unwrap().loss_sum;
+        let lm = execute(&plan, &e, &minus, &batch).unwrap().loss_sum;
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        let an = out.grads[name].data()[idx] as f64;
+        assert!(
+            (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+            "{name}[{idx}]: fd {fd} vs analytic {an}"
+        );
+    }
+}
+
+#[test]
+fn training_reduces_loss_all_strategies() {
+    let e = engine();
+    for st in Strategy::ALL {
+        let exp = test_exp(&e, st);
+        let corpus = hybridnmt::report::make_corpus(&exp.data, &exp.model);
+        let mut batcher = hybridnmt::report::make_batcher(&exp, &corpus);
+        let mut trainer = Trainer::new(&e, &exp).unwrap();
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for i in 0..8 {
+            let b = batcher.next_train();
+            let stats = trainer.train_step(&b).unwrap();
+            assert!(stats.loss_per_tok.is_finite(), "{st:?} step {i}");
+            if i == 0 {
+                first = stats.loss_per_tok;
+            }
+            last = stats.loss_per_tok;
+        }
+        assert!(
+            last < first,
+            "{st:?}: loss did not decrease ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn simulated_clock_orders_strategies_like_table3() {
+    // Even at tiny scale, the schedule ordering must hold:
+    // hybrid is the fastest multi-GPU strategy.
+    let e = engine();
+    let d = dims(&e);
+    let hw = HwConfig::default();
+    let time = |st: Strategy| {
+        let plan = build_plan(&d, st, hw.dp_host_staged);
+        hybridnmt::sim::simulate(&plan, &hw).makespan
+    };
+    let hybrid = time(Strategy::Hybrid);
+    let hybrid_if = time(Strategy::HybridIf);
+    let model = time(Strategy::Model);
+    assert!(hybrid < hybrid_if, "hybrid {hybrid} vs IF {hybrid_if}");
+    assert!(hybrid < model, "hybrid {hybrid} vs model {model}");
+}
+
+#[test]
+fn decoder_translates_and_beams_monotone() {
+    let e = engine();
+    let d = dims(&e);
+    let exp = test_exp(&e, Strategy::Hybrid);
+    let params = init_params(&exp, false);
+    let decoder = Decoder::new(&e, &params, false);
+    let src: Vec<i32> = (4..10).collect();
+    for beam in [1, 3, d.beam] {
+        let cfg = BeamConfig {
+            beam,
+            max_len: decoder.max_len(),
+            norm: LengthNorm::Marian { alpha: 1.0 },
+        };
+        let out = decoder.translate(&src, &cfg).unwrap();
+        assert!(out.len() <= d.max_tgt);
+        assert!(out.iter().all(|&t| t != BOS && t != EOS && (t as usize) < d.vocab));
+    }
+    // GNMT normalization path also runs.
+    let cfg = BeamConfig {
+        beam: 3,
+        max_len: decoder.max_len(),
+        norm: LengthNorm::Gnmt { alpha: 1.0, beta: 0.2 },
+    };
+    decoder.translate(&src, &cfg).unwrap();
+}
+
+#[test]
+fn manifest_param_counts_match_model_spec() {
+    let e = engine();
+    let d = dims(&e);
+    // aot.py counts the *hybrid* (no-IF) variant.
+    let expect = hybridnmt::model_spec::param_count(&d, false);
+    assert_eq!(e.manifest.param_count.total, expect);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_training_state() {
+    let e = engine();
+    let exp = test_exp(&e, Strategy::Hybrid);
+    let corpus = hybridnmt::report::make_corpus(&exp.data, &exp.model);
+    let mut batcher = hybridnmt::report::make_batcher(&exp, &corpus);
+    let mut trainer = Trainer::new(&e, &exp).unwrap();
+    for _ in 0..3 {
+        let b = batcher.next_train();
+        trainer.train_step(&b).unwrap();
+    }
+    let dir = std::env::temp_dir().join("hynmt_int_ck");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.bin");
+    hybridnmt::train::checkpoint::save(&path, &trainer.params).unwrap();
+    let back = hybridnmt::train::checkpoint::load(&path).unwrap();
+    assert_eq!(back, trainer.params);
+    // The reloaded params drive the same forward loss.
+    let batch = random_batch(&exp.model, 21);
+    let plan = build_plan(&exp.model, Strategy::Hybrid, true);
+    let a = execute(&plan, &e, &trainer.params, &batch).unwrap().loss_sum;
+    let b = execute(&plan, &e, &back, &batch).unwrap().loss_sum;
+    assert_eq!(a, b);
+}
+
+#[test]
+fn dev_eval_is_deterministic() {
+    let e = engine();
+    let exp = test_exp(&e, Strategy::Hybrid);
+    let corpus = hybridnmt::report::make_corpus(&exp.data, &exp.model);
+    let batcher = hybridnmt::report::make_batcher(&exp, &corpus);
+    let trainer = Trainer::new(&e, &exp).unwrap();
+    let dev = batcher.dev_batches();
+    assert!(!dev.is_empty());
+    let a = trainer.eval_ppl(&dev).unwrap();
+    let b = trainer.eval_ppl(&dev).unwrap();
+    assert_eq!(a, b);
+    assert!(a.is_finite() && a > 1.0);
+}
+
+#[test]
+fn engine_rejects_bad_shapes() {
+    let e = engine();
+    let d = dims(&e);
+    let bad = Tensor::zeros(&[1, 2]);
+    let err = e.exec(
+        &hybridnmt::runtime::keys::embed_fwd(d.batch),
+        &[hybridnmt::runtime::Arg::F(&bad), hybridnmt::runtime::Arg::F(&bad)],
+    );
+    assert!(err.is_err());
+}
+
+/// Keep a param map clone helper honest (used by finite-difference test).
+#[allow(dead_code)]
+fn clone_params(p: &BTreeMap<String, Tensor>) -> BTreeMap<String, Tensor> {
+    p.clone()
+}

@@ -1,0 +1,256 @@
+//! Property-based tests (hand-rolled generators on `rng::Rng`; the
+//! offline build has no proptest). Each property sweeps many random
+//! instances of the coordinator invariants: plan well-formedness across
+//! random model shapes, simulator conservation laws, tokenizer
+//! round-trips, JSON round-trips, and batching/masking structure.
+
+use hybridnmt::config::{HwConfig, ModelDims, Strategy};
+use hybridnmt::data::bpe::Bpe;
+use hybridnmt::data::synthetic::{Corpus, GenConfig};
+use hybridnmt::data::Batcher;
+use hybridnmt::model_spec::param_specs;
+use hybridnmt::parallel::{build_plan, Op};
+use hybridnmt::rng::Rng;
+use hybridnmt::sim::{cost, simulate};
+use hybridnmt::tensor::Tensor;
+use hybridnmt::util::json::Json;
+
+fn random_dims(rng: &mut Rng) -> ModelDims {
+    let gpus = 4;
+    let batch = 4 * rng.range(1, 5); // 4..16, divisible by gpus
+    ModelDims {
+        name: "prop".into(),
+        d: 8 * rng.range(1, 4),
+        h: 8 * rng.range(1, 5),
+        layers: rng.range(1, 5),
+        vocab: 32 * rng.range(1, 4),
+        batch,
+        gpus,
+        shard: batch / gpus,
+        max_src: rng.range(2, 10),
+        max_tgt: rng.range(2, 10),
+        beam: 4,
+    }
+}
+
+/// Every strategy builds a valid SSA/topological plan for random dims,
+/// and its gradient outputs exactly cover the parameter inventory.
+#[test]
+fn prop_plans_valid_and_grads_complete() {
+    let mut rng = Rng::new(0xA11CE);
+    for trial in 0..40 {
+        let dims = random_dims(&mut rng);
+        for st in Strategy::ALL {
+            let plan = build_plan(&dims, st, rng.chance(0.5));
+            plan.validate()
+                .unwrap_or_else(|e| panic!("trial {trial} {st:?} dims {dims:?}: {e}"));
+            let specs = param_specs(&dims, st.uses_input_feeding());
+            assert_eq!(plan.grad_out.len(), specs.len(), "trial {trial} {st:?}");
+            for sp in &specs {
+                assert!(plan.param_in.contains_key(&sp.name));
+                assert!(plan.grad_out.contains_key(&sp.name));
+            }
+        }
+    }
+}
+
+/// Simulator conservation laws: makespan bounded below by the busiest
+/// device and by the single-device critical work / G, and bounded above
+/// by fully-serial execution; busy time never exceeds G * makespan.
+#[test]
+fn prop_sim_conservation() {
+    let mut rng = Rng::new(0xBEEF);
+    let hw = HwConfig::default();
+    for _ in 0..25 {
+        let dims = random_dims(&mut rng);
+        for st in Strategy::ALL {
+            let plan = build_plan(&dims, st, true);
+            let r = simulate(&plan, &hw);
+            let busiest = r.device_busy.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                r.makespan + 1e-12 >= busiest,
+                "{st:?}: makespan {} < busiest {}",
+                r.makespan,
+                busiest
+            );
+            let serial: f64 = plan
+                .steps
+                .iter()
+                .map(|s| match &s.op {
+                    Op::Exec { .. } | Op::Add if s.device != hybridnmt::parallel::plan::HOST => {
+                        cost::compute_time(&s.cost, &hw)
+                    }
+                    _ => 0.0,
+                })
+                .sum();
+            assert!(r.makespan <= serial + r.sync_time + r.transfer_time + 1e-9);
+            let total_busy: f64 = r.device_busy.iter().sum();
+            assert!(total_busy <= hw.gpus as f64 * r.makespan + 1e-9);
+        }
+    }
+}
+
+/// The simulator is a pure function of (plan, hw).
+#[test]
+fn prop_sim_deterministic() {
+    let mut rng = Rng::new(7);
+    let hw = HwConfig::default();
+    for _ in 0..10 {
+        let dims = random_dims(&mut rng);
+        let plan = build_plan(&dims, Strategy::Hybrid, true);
+        let a = simulate(&plan, &hw);
+        let b = simulate(&plan, &hw);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.device_busy, b.device_busy);
+    }
+}
+
+/// Hybrid's synchronized bytes are exactly the attention parameters —
+/// independent of model size (the paper's central cost argument).
+#[test]
+fn prop_hybrid_sync_bytes_equal_attention_params() {
+    let mut rng = Rng::new(11);
+    for _ in 0..20 {
+        let dims = random_dims(&mut rng);
+        let plan = build_plan(&dims, Strategy::Hybrid, true);
+        let ar_bytes: f64 = plan
+            .steps
+            .iter()
+            .map(|s| match &s.op {
+                Op::AllReduce { bytes, .. } => *bytes,
+                _ => 0.0,
+            })
+            .sum();
+        let attn_bytes = 4.0
+            * (dims.h * dims.h + 2 * dims.h * dims.h + dims.h * dims.vocab + dims.vocab) as f64;
+        assert!((ar_bytes - attn_bytes).abs() < 1.0, "{ar_bytes} vs {attn_bytes}");
+    }
+}
+
+/// BPE: encoding any word from the training distribution and rejoining
+/// the pieces reproduces the word; all emitted symbols are in symbols().
+#[test]
+fn prop_bpe_roundtrip() {
+    let mut rng = Rng::new(0xB9E);
+    for trial in 0..15 {
+        let corpus = Corpus::generate(
+            "p",
+            300,
+            0,
+            0,
+            &GenConfig::for_dims(24, 0.0, rng.next_u64()),
+        );
+        let wf = corpus.word_freq();
+        let bpe = Bpe::train(&wf, rng.range(10, 200));
+        let symbols: std::collections::HashSet<String> =
+            bpe.symbols(&wf).into_iter().collect();
+        for w in wf.keys().take(50) {
+            let pieces = bpe.encode_word(w);
+            let rejoined: String = pieces
+                .iter()
+                .map(|p| p.strip_suffix("@@").unwrap_or(p))
+                .collect();
+            assert_eq!(&rejoined, w, "trial {trial}");
+            for p in &pieces {
+                assert!(symbols.contains(p), "trial {trial}: `{p}` not in symbol set");
+            }
+        }
+    }
+}
+
+/// Batches always respect the mask discipline: tmask is a prefix,
+/// tgt_out under the mask is non-PAD and ends with EOS, src is PAD
+/// exactly after srclen.
+#[test]
+fn prop_batch_mask_discipline() {
+    let mut rng = Rng::new(0xDA7A);
+    for _ in 0..8 {
+        let m = rng.range(12, 25);
+        let corpus =
+            Corpus::generate("p", 600, 30, 30, &GenConfig::for_dims(m, 0.3, rng.next_u64()));
+        let bsz = 4 * rng.range(1, 3);
+        let mut batcher = Batcher::new(&corpus, 256, bsz, m, m, rng.next_u64());
+        for _ in 0..5 {
+            let batch = batcher.next_train();
+            for bi in 0..bsz {
+                let len = batch.srclen.data()[bi] as usize;
+                assert!(len >= 1 && len <= m);
+                assert!(batch.src.data()[bi * m + len..(bi + 1) * m].iter().all(|&x| x == 0));
+                let mask = &batch.tmask.data()[bi * m..(bi + 1) * m];
+                let tlen = mask.iter().filter(|&&x| x > 0.0).count();
+                assert!(tlen >= 1);
+                // Prefix property.
+                assert!(mask[..tlen].iter().all(|&x| x == 1.0));
+                assert!(mask[tlen..].iter().all(|&x| x == 0.0));
+                assert_eq!(batch.tgt_out.data()[bi * m + tlen - 1], 2 /* EOS */);
+            }
+        }
+    }
+}
+
+/// Tensor shard/gather round trips for random shapes.
+#[test]
+fn prop_tensor_shard_roundtrip() {
+    let mut rng = Rng::new(5);
+    for _ in 0..50 {
+        let rows = 4 * rng.range(1, 6);
+        let cols = rng.range(1, 12);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(1.0)).collect();
+        let t = Tensor::new(vec![rows, cols], data);
+        let g = 4;
+        let per = rows / g;
+        let shards: Vec<Tensor> = (0..g).map(|i| t.slice0(i * per, (i + 1) * per)).collect();
+        let refs: Vec<&Tensor> = shards.iter().collect();
+        assert_eq!(Tensor::concat0(&refs), t);
+        // gather_rows with identity is the identity.
+        let idx: Vec<usize> = (0..rows).collect();
+        assert_eq!(t.gather_rows(&idx), t);
+    }
+}
+
+/// JSON parser round-trips random documents generated from the writer.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.f64() * 2e6).round() / 2.0 - 5e5),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| char::from_u32(rng.range(32, 1200) as u32).unwrap_or('x'))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(0x1503);
+    for _ in 0..200 {
+        let doc = gen(&mut rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(back, doc, "{text}");
+    }
+}
+
+/// Input-feeding plans contain strictly more serial structure: for the
+/// same dims, the simulated hybrid makespan never exceeds hybrid_if.
+#[test]
+fn prop_removing_input_feeding_never_slower() {
+    let mut rng = Rng::new(42);
+    let hw = HwConfig::default();
+    for _ in 0..15 {
+        let dims = random_dims(&mut rng);
+        let hybrid = simulate(&build_plan(&dims, Strategy::Hybrid, true), &hw).makespan;
+        let hybrid_if = simulate(&build_plan(&dims, Strategy::HybridIf, true), &hw).makespan;
+        assert!(
+            hybrid <= hybrid_if * 1.02,
+            "dims {dims:?}: hybrid {hybrid} vs IF {hybrid_if}"
+        );
+    }
+}
