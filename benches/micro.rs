@@ -1,6 +1,10 @@
 //! Micro-benchmarks of the coordinator hot paths (§Perf, L3):
-//! artifact execution round-trip, host tensor ops in the per-cell loop,
-//! all-reduce, BLEU, BPE encoding, and beam-search decode.
+//! artifact execution round-trip (cold vs device-resident args), host
+//! tensor ops in the per-cell loop, the sequential vs parallel plan
+//! executor, all-reduce, BLEU, BPE encoding, and beam-search decode.
+//!
+//! Emits `BENCH_micro.json` (name → ns/iter) so the perf trajectory is
+//! tracked across PRs instead of lost in stdout.
 //!
 //! Run: `cargo bench --bench micro` (needs `make artifacts`).
 
@@ -11,9 +15,13 @@ use hybridnmt::report::{make_batcher, make_corpus};
 use hybridnmt::runtime::{keys, Arg, Engine};
 use hybridnmt::tensor::Tensor;
 use hybridnmt::train::{init_params, Trainer};
+use hybridnmt::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+/// Run `f` `iters` times (after one warmup call), print the per-iter
+/// time and record it (ns/iter) under `name`.
+fn bench(results: &mut BTreeMap<String, Json>, name: &str, iters: usize, mut f: impl FnMut()) {
     // Warmup.
     f();
     let t0 = Instant::now();
@@ -29,6 +37,7 @@ fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
         format!("{:.2} s ", per)
     };
     println!("  {name:<44} {unit:>12} /iter  ({iters} iters)");
+    results.insert(name.to_string(), Json::Num(per * 1e9));
 }
 
 fn main() -> anyhow::Result<()> {
@@ -43,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         artifacts_dir: "artifacts".into(),
     };
     let params = init_params(&exp, false);
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
     println!("L3 micro benches (tiny artifact set):");
 
     // --- PJRT round trip: the innermost hot path -------------------------
@@ -52,42 +62,86 @@ fn main() -> anyhow::Result<()> {
     let h = Tensor::zeros(&[d.batch, d.h]);
     let key = keys::lstm_cell_fwd(d.d, d.batch);
     engine.exec(&key, &[Arg::F(w), Arg::F(bias), Arg::F(&x), Arg::F(&h), Arg::F(&h)])?;
-    bench("engine.exec lstm_cell_fwd (round trip)", 200, || {
+    bench(&mut results, "engine.exec lstm_cell_fwd (host args)", 200, || {
         engine
             .exec(&key, &[Arg::F(w), Arg::F(bias), Arg::F(&x), Arg::F(&h), Arg::F(&h)])
+            .unwrap();
+    });
+    // Same call with every argument device-resident: isolates the
+    // host→device upload cost the buffer cache removes.
+    let bw = engine.upload_f(w)?;
+    let bb = engine.upload_f(bias)?;
+    let bx = engine.upload_f(&x)?;
+    let bh = engine.upload_f(&h)?;
+    bench(&mut results, "engine.exec lstm_cell_fwd (resident args)", 200, || {
+        engine
+            .exec(&key, &[Arg::Buf(&bw), Arg::Buf(&bb), Arg::Buf(&bx), Arg::Buf(&bh), Arg::Buf(&bh)])
             .unwrap();
     });
 
     // --- host tensor ops in the per-cell loop ----------------------------
     let big = Tensor::zeros(&[d.batch, d.max_src, d.h]);
-    bench("Tensor::time_slice [B,M,h]", 2000, || {
+    bench(&mut results, "Tensor::time_slice [B,M,h]", 2000, || {
         std::hint::black_box(big.time_slice(3));
     });
     let rows: Vec<Tensor> = (0..d.max_src).map(|_| Tensor::zeros(&[d.batch, d.h])).collect();
-    bench("Tensor::stack_time M x [B,h]", 2000, || {
+    bench(&mut results, "Tensor::stack_time M x [B,h]", 2000, || {
         let refs: Vec<&Tensor> = rows.iter().collect();
         std::hint::black_box(Tensor::stack_time(&refs));
     });
+    bench(&mut results, "Tensor::concat0 M x [B,h]", 2000, || {
+        let refs: Vec<&Tensor> = rows.iter().collect();
+        std::hint::black_box(Tensor::concat0(&refs));
+    });
     let mut acc = Tensor::zeros(&[d.vocab, d.d]);
     let g = Tensor::zeros(&[d.vocab, d.d]);
-    bench("Tensor::add_assign [V,d] (grad accumulate)", 5000, || {
+    bench(&mut results, "Tensor::add_assign [V,d] (grad accumulate)", 5000, || {
         acc.add_assign(&g);
     });
 
-    // --- one full training step ------------------------------------------
+    // --- one full training step: sequential vs parallel executor --------
     let corpus = make_corpus(&exp.data, &exp.model);
     let mut batcher = make_batcher(&exp, &corpus);
     let mut trainer = Trainer::new(&engine, &exp)?;
     let batch = batcher.next_train();
-    bench("Trainer::train_step (hybrid, tiny)", 10, || {
+    trainer.sequential = true;
+    bench(&mut results, "Trainer::train_step (hybrid, sequential)", 10, || {
         trainer.train_step(&batch).unwrap();
     });
+    trainer.sequential = false;
+    let steps_before = trainer.steps_done;
+    let bank_uploads_before = trainer.bank.upload_count();
+    bench(&mut results, "Trainer::train_step (hybrid, parallel)", 10, || {
+        trainer.train_step(&batch).unwrap();
+    });
+    // Acceptance: exactly one upload per parameter per step — the bank
+    // invalidates once per optimizer step and every artifact call hits
+    // the resident copy. Zero means the bank is unwired (the regression
+    // this gate exists to catch); more means redundant re-uploads.
+    let steps = (trainer.steps_done - steps_before) as f64;
+    let per_step = (trainer.bank.upload_count() - bank_uploads_before) as f64 / steps;
+    let n_params = trainer.params.len() as f64;
+    println!(
+        "  param uploads/step: {per_step:.1} for {n_params} parameters ({})",
+        if (per_step - n_params).abs() < 0.5 {
+            "OK: exactly 1 per parameter"
+        } else if per_step == 0.0 {
+            "REGRESSION: bank unwired"
+        } else {
+            "REGRESSION: redundant re-uploads"
+        }
+    );
+    results.insert("param_uploads_per_step".into(), Json::Num(per_step));
+    let seq = results["Trainer::train_step (hybrid, sequential)"].as_f64().unwrap();
+    let par = results["Trainer::train_step (hybrid, parallel)"].as_f64().unwrap();
+    println!("  parallel/sequential step-time ratio: {:.2}x speedup", seq / par);
+    results.insert("train_step_parallel_speedup".into(), Json::Num(seq / par));
 
     // --- decode ------------------------------------------------------------
     let decoder = Decoder::new(&engine, &params, false);
     let cfg = BeamConfig { beam: 3, max_len: 12, norm: LengthNorm::Marian { alpha: 1.0 } };
     let src: Vec<i32> = (4..12).collect();
-    bench("Decoder::translate beam=3", 10, || {
+    bench(&mut results, "Decoder::translate beam=3", 10, || {
         decoder.translate(&src, &cfg).unwrap();
     });
 
@@ -98,13 +152,13 @@ fn main() -> anyhow::Result<()> {
         .take(100)
         .map(|e| (batcher.vocab.decode(&e.src), batcher.vocab.decode(&e.tgt)))
         .collect();
-    bench("corpus_bleu over 100 pairs", 200, || {
+    bench(&mut results, "corpus_bleu over 100 pairs", 200, || {
         std::hint::black_box(corpus_bleu(&pairs));
     });
-    bench("BPE encode sentence", 2000, || {
+    bench(&mut results, "BPE encode sentence", 2000, || {
         std::hint::black_box(batcher.bpe.encode("mizo katelu bado pesu rilo"));
     });
-    bench("Batcher::next_train (pad + mask)", 500, || {
+    bench(&mut results, "Batcher::next_train (pad + mask)", 500, || {
         std::hint::black_box(batcher.next_train());
     });
 
@@ -114,7 +168,30 @@ fn main() -> anyhow::Result<()> {
         st.executions,
         st.exec_nanos as f64 / 1e9,
         st.convert_nanos as f64 / 1e9,
-        (st.exec_nanos + st.convert_nanos) as f64 / 1e3 / st.executions as f64
+        (st.exec_nanos + st.convert_nanos) as f64 / 1e3 / st.executions.max(1) as f64
     );
+    println!(
+        "uploads: {} ({:.1} MB); buffer reuse: {} hits, {:.1} MB re-upload avoided",
+        st.uploads,
+        st.upload_bytes as f64 / 1e6,
+        st.buffer_hits,
+        st.upload_bytes_saved as f64 / 1e6
+    );
+    // Top artifact keys by device time.
+    let mut by_time: Vec<_> = st.per_key.iter().collect();
+    by_time.sort_by(|a, b| b.1.exec_nanos.cmp(&a.1.exec_nanos));
+    println!("top artifact keys by device time:");
+    for (k, ks) in by_time.iter().take(5) {
+        println!(
+            "  {k:<28} {:>7} calls  exec {:>8.2} ms  convert {:>8.2} ms",
+            ks.calls,
+            ks.exec_nanos as f64 / 1e6,
+            ks.convert_nanos as f64 / 1e6
+        );
+    }
+
+    let json = Json::Obj(results).to_string();
+    std::fs::write("BENCH_micro.json", &json)?;
+    println!("\nwrote BENCH_micro.json ({} bytes)", json.len());
     Ok(())
 }

@@ -2,7 +2,8 @@
 //! and time the machinery that produces it (plan construction + DES).
 //!
 //! Hand-rolled harness (`harness = false`; the offline build has no
-//! criterion): medians over repeated runs, same report format.
+//! criterion): medians over repeated runs, same report format. Emits
+//! `BENCH_table3.json` (name → ns/iter) for cross-PR perf tracking.
 //!
 //! Run: `cargo bench --bench table3`
 
@@ -10,6 +11,8 @@ use hybridnmt::config::{HwConfig, ModelDims, Strategy};
 use hybridnmt::parallel::build_plan;
 use hybridnmt::report;
 use hybridnmt::sim::simulate;
+use hybridnmt::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 fn median_time(mut f: impl FnMut(), iters: usize) -> f64 {
@@ -31,6 +34,7 @@ fn main() {
     println!("{}", report::table3(&hw));
 
     // Bench the planner + simulator per strategy (paper scale).
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
     println!("planner + DES cost per strategy (median of 5, paper scale):");
     for st in Strategy::ALL {
         let dims = ModelDims::paper().with_batch(st.paper_batch());
@@ -57,5 +61,13 @@ fn main() {
             t_sim * 1e3,
             plan.steps.len() as f64 / t_sim
         );
+        results.insert(format!("plan.{}", st.key()), Json::Num(t_plan * 1e9));
+        results.insert(format!("sim.{}", st.key()), Json::Num(t_sim * 1e9));
+    }
+    let json = Json::Obj(results).to_string();
+    if let Err(e) = std::fs::write("BENCH_table3.json", &json) {
+        eprintln!("could not write BENCH_table3.json: {e}");
+    } else {
+        println!("\nwrote BENCH_table3.json ({} bytes)", json.len());
     }
 }

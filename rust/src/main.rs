@@ -26,7 +26,7 @@ struct Args {
 
 impl Args {
     fn parse() -> Result<Args> {
-        let mut it = std::env::args().skip(1);
+        let mut it = std::env::args().skip(1).peekable();
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
         let mut flags = std::collections::HashMap::new();
         while let Some(a) = it.next() {
@@ -34,7 +34,13 @@ impl Args {
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got `{a}`"))?
                 .to_string();
-            let val = it.next().unwrap_or_else(|| "true".to_string());
+            // Boolean flags (--sequential, --real, --sgd, ...) may be
+            // followed by another flag: a `--`-prefixed token is never a
+            // value, so leave it for the next iteration.
+            let val = match it.peek() {
+                Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(),
+            };
             flags.insert(key, val);
         }
         Ok(Args { cmd, flags })
@@ -64,12 +70,13 @@ USAGE: hybridnmt <command> [--flag value]...
 COMMANDS
   train      --strategy S --dataset D [--steps N] [--model tiny|small]
              [--sentences N] [--seed N] [--ckpt out.bin] [--config file.json]
+             [--sequential (disable the parallel plan executor)]
   translate  --ckpt file.bin [--model small] [--beam B] [--alpha A]
              [--dataset D] [--strategy S (sets input-feeding)]
   sim        --strategy S [--batch B] [--trace out.csv] (schedule breakdown)
   table1     [--sentences14 N] [--sentences17 N]
   table2     [--model tiny|small|paper]
-  table3
+  table3     [--real [--steps N] (adds measured wall-clock columns; needs artifacts)]
   table4     --ckpt file.bin [--model small] [--dataset D] [--gnmt]
   table5     [--steps N] [--model small] (trains baseline+hybrid, decodes both test sets)
   figure4    --dataset D [--steps N] [--model small]
@@ -167,6 +174,14 @@ fn run() -> Result<()> {
         }
         "table3" => {
             print!("{}", report::table3(&HwConfig::default()));
+            if args.get("real").is_some() {
+                let engine = load_engine(&args)?;
+                let steps = args.usize("steps", 5)?;
+                print!(
+                    "\n{}",
+                    report::table3_wallclock(&engine, &HwConfig::default(), steps)?
+                );
+            }
             Ok(())
         }
         "table4" => cmd_table4(&args),
@@ -197,9 +212,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         batcher.dropped
     );
     let mut trainer = Trainer::new(&engine, &exp)?;
+    trainer.sequential = args.get("sequential").is_some();
     println!(
-        "plan: {} steps, sim step time {:.4}s, sim {:.0} src-tok/s",
+        "plan: {} steps on {} devices ({} executor), sim step time {:.4}s, sim {:.0} src-tok/s",
         trainer.plan.steps.len(),
+        trainer.plan.distinct_devices().len(),
+        if trainer.sequential { "sequential" } else { "parallel" },
         trainer.step_sim.makespan,
         trainer.sim_tokens_per_sec(batcher.avg_src_len())
     );
@@ -215,6 +233,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         st.compile_count,
         st.exec_nanos as f64 / 1e9,
         st.convert_nanos as f64 / 1e9
+    );
+    println!(
+        "uploads: {} ({:.1} MB); buffer reuse: {} hits, {:.1} MB re-upload avoided; param uploads/step: {:.1}",
+        st.uploads,
+        st.upload_bytes as f64 / 1e6,
+        st.buffer_hits,
+        st.upload_bytes_saved as f64 / 1e6,
+        trainer.bank.upload_count() as f64 / trainer.steps_done.max(1) as f64
     );
     Ok(())
 }

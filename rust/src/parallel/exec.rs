@@ -1,41 +1,103 @@
-//! Real-numerics plan executor.
+//! Real-numerics plan executor: sequential walk and dependency-driven
+//! parallel scheduling over the same per-op interpreter.
 //!
-//! Walks a [`Plan`] in emission order (builders emit topologically),
-//! executing artifact steps on the PJRT engine and host ops on the
-//! coordinator. Produces the actual loss / token count / gradients the
-//! training loop feeds to the optimizer.
+//! Two modes (see `docs/PERF.md`):
+//!
+//! * [`ExecMode::Sequential`] — walks the plan in emission order
+//!   (builders emit topologically) on the calling thread. The escape
+//!   hatch (`--sequential`) and the reference semantics.
+//! * [`ExecMode::Parallel`] — computes per-step indegrees from the
+//!   plan's dependency edges and dispatches ready steps to a worker
+//!   pool keyed by the step's assigned device, so the model-parallel
+//!   encoder-decoder wavefront genuinely overlaps the data-parallel
+//!   attention shards in wall-clock, not just in the simulated clock.
+//!
+//! Determinism: both modes are bitwise-identical. Every step is a pure
+//! function of its input slots, and every reduction (`Add`,
+//! `AllReduce`, loss summation) folds its reads in the fixed slot order
+//! the plan records — scheduling reorders *when* steps run, never what
+//! they compute. The equivalence test suite asserts this across all
+//! strategies and placements.
 //!
 //! Values are reference-counted so `Transfer` (a pure timing construct)
-//! and fan-out reads are free; slots are reclaimed after their last use
-//! so peak memory tracks live activations, not the whole plan.
+//! and fan-out reads are free; each value lazily caches its uploaded
+//! device buffer, so an activation read by several artifact calls is
+//! uploaded once. Parameters resolve through an optional
+//! [`ParamBank`], uploading once per optimizer step. Slots are
+//! reclaimed after their last reader finishes, so peak memory tracks
+//! live activations, not the whole plan.
 
-use super::plan::{BindKind, Op, Plan};
-use crate::runtime::{Arg, Engine};
+use super::plan::{BindKind, Op, Plan, Slot, Step};
+use crate::runtime::{Arg, DeviceBuf, Engine, ParamBank};
 use crate::tensor::{ITensor, Tensor};
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// A slot value.
+/// An f32 value plus its lazily-uploaded device buffer.
+#[derive(Debug)]
+pub struct FVal {
+    t: Tensor,
+    buf: OnceLock<Arc<DeviceBuf>>,
+}
+
+/// An i32 value plus its lazily-uploaded device buffer.
+#[derive(Debug)]
+pub struct IVal {
+    t: ITensor,
+    buf: OnceLock<Arc<DeviceBuf>>,
+}
+
+/// A slot value. Cloning shares the payload (and its buffer cache).
 #[derive(Debug, Clone)]
 pub enum Value {
-    F(Rc<Tensor>),
-    I(Rc<ITensor>),
+    F(Arc<FVal>),
+    I(Arc<IVal>),
 }
 
 impl Value {
+    pub fn from_f(t: Tensor) -> Value {
+        Value::F(Arc::new(FVal { t, buf: OnceLock::new() }))
+    }
+
+    pub fn from_i(t: ITensor) -> Value {
+        Value::I(Arc::new(IVal { t, buf: OnceLock::new() }))
+    }
+
     fn f(&self) -> Result<&Tensor> {
         match self {
-            Value::F(t) => Ok(t),
+            Value::F(v) => Ok(&v.t),
             Value::I(_) => Err(anyhow!("expected f32 value, got i32")),
         }
     }
 
     fn i(&self) -> Result<&ITensor> {
         match self {
-            Value::I(t) => Ok(t),
+            Value::I(v) => Ok(&v.t),
             Value::F(_) => Err(anyhow!("expected i32 value, got f32")),
         }
+    }
+
+    /// Device buffer for this value, uploading on first use. Later uses
+    /// (fan-out consumers, transfers) reuse the resident copy.
+    fn device_buf(&self, engine: &Engine) -> Result<Arc<DeviceBuf>> {
+        let cell = match self {
+            Value::F(v) => &v.buf,
+            Value::I(v) => &v.buf,
+        };
+        if let Some(b) = cell.get() {
+            engine.note_buffer_reuse(b);
+            return Ok(b.clone());
+        }
+        let b = Arc::new(match self {
+            Value::F(v) => engine.upload_f(&v.t)?,
+            Value::I(v) => engine.upload_i(&v.t)?,
+        });
+        // A concurrent consumer may have won the race; keep the stored
+        // buffer so every later use shares one copy.
+        let _ = cell.set(b);
+        Ok(cell.get().expect("just set").clone())
     }
 }
 
@@ -74,136 +136,218 @@ pub struct StepOut {
     pub grads: BTreeMap<String, Tensor>,
 }
 
-/// Execute `plan` against `engine` with the given parameters and batch.
+/// Which executor walks the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Emission-order walk on the calling thread.
+    Sequential,
+    /// Dependency-driven worker pool, one worker per plan device.
+    #[default]
+    Parallel,
+}
+
+/// Executor configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecOptions<'a> {
+    pub mode: ExecMode,
+    /// Device-resident parameter buffers (upload once per optimizer
+    /// step). `None` uploads parameters per plan execution.
+    pub bank: Option<&'a ParamBank>,
+}
+
+/// Execute `plan` against `engine` with the default options (parallel
+/// scheduler, no parameter bank).
 pub fn execute(
     plan: &Plan,
     engine: &Engine,
     params: &BTreeMap<String, Tensor>,
     batch: &Batch,
 ) -> Result<StepOut> {
-    let mut slots: Vec<Option<Value>> = vec![None; plan.n_slots];
+    execute_with(plan, engine, params, batch, &ExecOptions::default())
+}
 
+/// Execute `plan` with explicit executor options.
+pub fn execute_with(
+    plan: &Plan,
+    engine: &Engine,
+    params: &BTreeMap<String, Tensor>,
+    batch: &Batch,
+    opts: &ExecOptions,
+) -> Result<StepOut> {
+    match opts.mode {
+        ExecMode::Sequential => execute_seq(plan, engine, params, batch, opts.bank),
+        ExecMode::Parallel => execute_par(plan, engine, params, batch, opts.bank),
+    }
+}
+
+/// Bind parameter and data inputs into their slots. Parameters resolved
+/// through `bank` arrive with their device buffer pre-seeded, so no
+/// artifact call re-uploads them this step.
+fn bind_inputs(
+    plan: &Plan,
+    engine: &Engine,
+    params: &BTreeMap<String, Tensor>,
+    batch: &Batch,
+    bank: Option<&ParamBank>,
+) -> Result<Vec<Option<Value>>> {
+    let mut slots: Vec<Option<Value>> = vec![None; plan.n_slots];
     for (name, &slot) in &plan.param_in {
         let p = params
             .get(name)
             .ok_or_else(|| anyhow!("missing parameter `{name}`"))?;
-        slots[slot] = Some(Value::F(Rc::new(p.clone())));
+        let v = Value::from_f(p.clone());
+        if let Some(bank) = bank {
+            if let Value::F(fv) = &v {
+                let buf = bank.get_or_upload(engine, name, p)?;
+                let _ = fv.buf.set(buf);
+            }
+        }
+        slots[slot] = Some(v);
     }
     for (name, &(slot, kind)) in &plan.data_in {
         let v = match (name.as_str(), kind) {
-            ("src", BindKind::I32) => Value::I(Rc::new(batch.src.clone())),
-            ("srclen", BindKind::I32) => Value::I(Rc::new(batch.srclen.clone())),
-            ("tgt_in", BindKind::I32) => Value::I(Rc::new(batch.tgt_in.clone())),
-            ("tgt_out", BindKind::I32) => Value::I(Rc::new(batch.tgt_out.clone())),
-            ("tmask", BindKind::F32) => Value::F(Rc::new(batch.tmask.clone())),
+            ("src", BindKind::I32) => Value::from_i(batch.src.clone()),
+            ("srclen", BindKind::I32) => Value::from_i(batch.srclen.clone()),
+            ("tgt_in", BindKind::I32) => Value::from_i(batch.tgt_in.clone()),
+            ("tgt_out", BindKind::I32) => Value::from_i(batch.tgt_out.clone()),
+            ("tmask", BindKind::F32) => Value::from_f(batch.tmask.clone()),
             other => return Err(anyhow!("unknown data binding {other:?}")),
         };
         slots[slot] = Some(v);
     }
+    Ok(slots)
+}
 
-    let get = |slots: &[Option<Value>], s: usize| -> Result<Value> {
-        slots[s]
-            .clone()
-            .ok_or_else(|| anyhow!("slot {s} read before write"))
+/// Interpret one step. Shared by both executors: any divergence between
+/// the modes would have to live here, so there is none.
+fn eval_step(
+    step: &Step,
+    engine: &Engine,
+    get: &mut dyn FnMut(Slot) -> Result<Value>,
+) -> Result<Vec<Value>> {
+    Ok(match &step.op {
+        Op::Exec { key } => {
+            let vals: Vec<Value> = step
+                .reads
+                .iter()
+                .map(|&r| get(r))
+                .collect::<Result<_>>()?;
+            let bufs: Vec<Arc<DeviceBuf>> = vals
+                .iter()
+                .map(|v| v.device_buf(engine))
+                .collect::<Result<_>>()?;
+            let args: Vec<Arg> = bufs.iter().map(|b| Arg::Buf(&**b)).collect();
+            engine
+                .exec(key, &args)?
+                .into_iter()
+                .map(Value::from_f)
+                .collect()
+        }
+        // Transfers are timing constructs; Gate is a pass-through whose
+        // extra reads only order the schedule.
+        Op::Transfer { .. } | Op::Gate => vec![get(step.reads[0])?],
+        Op::AllReduce { .. } | Op::Add => {
+            // Fixed fold order (slot order) — the determinism guarantee.
+            let mut acc = get(step.reads[0])?.f()?.clone();
+            for &r in &step.reads[1..] {
+                acc.add_assign(get(r)?.f()?);
+            }
+            vec![Value::from_f(acc)]
+        }
+        Op::Zeros { shape } => vec![Value::from_f(Tensor::zeros(shape))],
+        Op::ColI { t } => {
+            let v = get(step.reads[0])?;
+            vec![Value::from_i(v.i()?.col(*t))]
+        }
+        Op::ColF { t } => {
+            let v = get(step.reads[0])?;
+            let m = v.f()?;
+            let (bt, tt) = (m.shape()[0], m.shape()[1]);
+            let data = (0..bt).map(|b| m.data()[b * tt + t]).collect();
+            vec![Value::from_f(Tensor::new(vec![bt], data))]
+        }
+        Op::Slice0 { lo, hi } => {
+            let v = get(step.reads[0])?;
+            vec![Value::from_f(v.f()?.slice0(*lo, *hi))]
+        }
+        Op::SliceI0 { lo, hi } => {
+            let v = get(step.reads[0])?;
+            vec![Value::from_i(v.i()?.slice0(*lo, *hi))]
+        }
+        Op::Concat0 => {
+            let vals: Vec<Value> = step
+                .reads
+                .iter()
+                .map(|&r| get(r))
+                .collect::<Result<_>>()?;
+            let parts: Vec<&Tensor> = vals.iter().map(|v| v.f()).collect::<Result<_>>()?;
+            vec![Value::from_f(Tensor::concat0(&parts))]
+        }
+        Op::Concat1 => {
+            let a = get(step.reads[0])?;
+            let b = get(step.reads[1])?;
+            vec![Value::from_f(Tensor::concat1(a.f()?, b.f()?))]
+        }
+        Op::Split1 { col } => {
+            let v = get(step.reads[0])?;
+            let (a, b) = v.f()?.split1(*col);
+            vec![Value::from_f(a), Value::from_f(b)]
+        }
+        Op::StackTime => {
+            let vals: Vec<Value> = step
+                .reads
+                .iter()
+                .map(|&r| get(r))
+                .collect::<Result<_>>()?;
+            let parts: Vec<&Tensor> = vals.iter().map(|v| v.f()).collect::<Result<_>>()?;
+            vec![Value::from_f(Tensor::stack_time(&parts))]
+        }
+        Op::TimeSlice { t } => {
+            let v = get(step.reads[0])?;
+            vec![Value::from_f(v.f()?.time_slice(*t))]
+        }
+        Op::SumAll => {
+            let v = get(step.reads[0])?;
+            let s: f32 = v.f()?.data().iter().sum();
+            vec![Value::from_f(Tensor::new(vec![1], vec![s]))]
+        }
+    })
+}
+
+fn collect_out(plan: &Plan, mut take: impl FnMut(Slot) -> Result<Value>) -> Result<StepOut> {
+    let mut scalar = |s: Slot, what: &str| -> Result<f64> {
+        let v = take(s).map_err(|e| anyhow!("{what}: {e}"))?;
+        Ok(v.f()?.item() as f64)
     };
+    let loss_sum = scalar(plan.loss_out, "loss output")?;
+    let ntok = scalar(plan.ntok_out, "ntok output")?;
+    let mut grads = BTreeMap::new();
+    for (name, &slot) in &plan.grad_out {
+        let v = take(slot).map_err(|e| anyhow!("grad `{name}`: {e}"))?;
+        grads.insert(name.clone(), v.f()?.clone());
+    }
+    Ok(StepOut { loss_sum, ntok, grads })
+}
 
+// ------------------------------------------------------------------------
+// Sequential executor
+// ------------------------------------------------------------------------
+
+fn execute_seq(
+    plan: &Plan,
+    engine: &Engine,
+    params: &BTreeMap<String, Tensor>,
+    batch: &Batch,
+    bank: Option<&ParamBank>,
+) -> Result<StepOut> {
+    let mut slots = bind_inputs(plan, engine, params, batch, bank)?;
     for (i, step) in plan.steps.iter().enumerate() {
-        let out: Vec<Value> = match &step.op {
-            Op::Exec { key } => {
-                let vals: Vec<Value> = step
-                    .reads
-                    .iter()
-                    .map(|&r| get(&slots, r))
-                    .collect::<Result<_>>()?;
-                let args: Vec<Arg> = vals
-                    .iter()
-                    .map(|v| match v {
-                        Value::F(t) => Arg::F(t),
-                        Value::I(t) => Arg::I(t),
-                    })
-                    .collect();
-                engine
-                    .exec(key, &args)?
-                    .into_iter()
-                    .map(|t| Value::F(Rc::new(t)))
-                    .collect()
-            }
-            Op::Transfer { .. } => vec![get(&slots, step.reads[0])?],
-            Op::AllReduce { .. } => {
-                let mut acc = get(&slots, step.reads[0])?.f()?.clone();
-                for &r in &step.reads[1..] {
-                    acc.add_assign(get(&slots, r)?.f()?);
-                }
-                vec![Value::F(Rc::new(acc))]
-            }
-            Op::Zeros { shape } => vec![Value::F(Rc::new(Tensor::zeros(shape)))],
-            Op::ColI { t } => {
-                let v = get(&slots, step.reads[0])?;
-                vec![Value::I(Rc::new(v.i()?.col(*t)))]
-            }
-            Op::ColF { t } => {
-                let v = get(&slots, step.reads[0])?;
-                let m = v.f()?;
-                let (bt, tt) = (m.shape()[0], m.shape()[1]);
-                let data = (0..bt).map(|b| m.data()[b * tt + t]).collect();
-                vec![Value::F(Rc::new(Tensor::new(vec![bt], data)))]
-            }
-            Op::Slice0 { lo, hi } => {
-                let v = get(&slots, step.reads[0])?;
-                vec![Value::F(Rc::new(v.f()?.slice0(*lo, *hi)))]
-            }
-            Op::SliceI0 { lo, hi } => {
-                let v = get(&slots, step.reads[0])?;
-                vec![Value::I(Rc::new(v.i()?.slice0(*lo, *hi)))]
-            }
-            Op::Concat0 => {
-                let vals: Vec<Value> = step
-                    .reads
-                    .iter()
-                    .map(|&r| get(&slots, r))
-                    .collect::<Result<_>>()?;
-                let parts: Vec<&Tensor> =
-                    vals.iter().map(|v| v.f()).collect::<Result<_>>()?;
-                vec![Value::F(Rc::new(Tensor::concat0(&parts)))]
-            }
-            Op::Concat1 => {
-                let a = get(&slots, step.reads[0])?;
-                let b = get(&slots, step.reads[1])?;
-                vec![Value::F(Rc::new(Tensor::concat1(a.f()?, b.f()?)))]
-            }
-            Op::Split1 { col } => {
-                let v = get(&slots, step.reads[0])?;
-                let (a, b) = v.f()?.split1(*col);
-                vec![Value::F(Rc::new(a)), Value::F(Rc::new(b))]
-            }
-            Op::StackTime => {
-                let vals: Vec<Value> = step
-                    .reads
-                    .iter()
-                    .map(|&r| get(&slots, r))
-                    .collect::<Result<_>>()?;
-                let parts: Vec<&Tensor> =
-                    vals.iter().map(|v| v.f()).collect::<Result<_>>()?;
-                vec![Value::F(Rc::new(Tensor::stack_time(&parts)))]
-            }
-            Op::TimeSlice { t } => {
-                let v = get(&slots, step.reads[0])?;
-                vec![Value::F(Rc::new(v.f()?.time_slice(*t)))]
-            }
-            Op::Add => {
-                let mut acc = get(&slots, step.reads[0])?.f()?.clone();
-                for &r in &step.reads[1..] {
-                    acc.add_assign(get(&slots, r)?.f()?);
-                }
-                vec![Value::F(Rc::new(acc))]
-            }
-            Op::Gate => vec![get(&slots, step.reads[0])?],
-            Op::SumAll => {
-                let v = get(&slots, step.reads[0])?;
-                let s: f32 = v.f()?.data().iter().sum();
-                vec![Value::F(Rc::new(Tensor::new(vec![1], vec![s])))]
-            }
+        let mut get = |s: Slot| -> Result<Value> {
+            slots[s]
+                .clone()
+                .ok_or_else(|| anyhow!("slot {s} read before write"))
         };
+        let out = eval_step(step, engine, &mut get)?;
         if out.len() != step.writes.len() {
             return Err(anyhow!(
                 "step {i} {:?}: {} outputs for {} writes",
@@ -222,22 +366,278 @@ pub fn execute(
             }
         }
     }
+    collect_out(plan, |s| {
+        slots[s]
+            .clone()
+            .ok_or_else(|| anyhow!("output slot {s} empty"))
+    })
+}
 
-    let scalar = |slots: &[Option<Value>], s: usize| -> Result<f64> {
-        Ok(slots[s]
-            .as_ref()
-            .ok_or_else(|| anyhow!("output slot {s} empty"))?
-            .f()?
-            .item() as f64)
-    };
-    let loss_sum = scalar(&slots, plan.loss_out)?;
-    let ntok = scalar(&slots, plan.ntok_out)?;
-    let mut grads = BTreeMap::new();
-    for (name, &slot) in &plan.grad_out {
-        let v = slots[slot]
-            .as_ref()
-            .ok_or_else(|| anyhow!("grad `{name}` slot empty"))?;
-        grads.insert(name.clone(), v.f()?.clone());
+// ------------------------------------------------------------------------
+// Parallel executor
+// ------------------------------------------------------------------------
+
+struct WorkQueue {
+    q: Mutex<VecDeque<usize>>,
+    cv: Condvar,
+}
+
+/// Scheduler state shared by the device workers.
+struct Sched<'p> {
+    plan: &'p Plan,
+    engine: &'p Engine,
+    slots: Vec<Mutex<Option<Value>>>,
+    /// Unresolved-dependency count per step (unique producer steps).
+    indeg: Vec<AtomicUsize>,
+    /// Steps unblocked by each step's completion.
+    children: Vec<Vec<usize>>,
+    /// Pending reader-step count per slot (+1 pin on plan outputs).
+    readers: Vec<AtomicUsize>,
+    /// Deduplicated reads per step (hoisted out of `run_step`).
+    uniq_reads: Vec<Vec<Slot>>,
+    /// One queue per distinct plan device.
+    queues: Vec<WorkQueue>,
+    qindex: HashMap<usize, usize>,
+    remaining: AtomicUsize,
+    failed: AtomicBool,
+    error: Mutex<Option<anyhow::Error>>,
+}
+
+impl<'p> Sched<'p> {
+    fn queue_of(&self, device: usize) -> &WorkQueue {
+        &self.queues[self.qindex[&device]]
     }
-    Ok(StepOut { loss_sum, ntok, grads })
+
+    fn enqueue(&self, step: usize) {
+        let wq = self.queue_of(self.plan.steps[step].device);
+        wq.q.lock().unwrap().push_back(step);
+        wq.cv.notify_one();
+    }
+
+    /// Wake every worker (completion or failure). Locking each queue
+    /// before notifying closes the check-then-wait window.
+    fn wake_all(&self) {
+        for wq in &self.queues {
+            let _guard = wq.q.lock().unwrap();
+            wq.cv.notify_all();
+        }
+    }
+
+    fn fail(&self, e: anyhow::Error) {
+        {
+            let mut slot = self.error.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+        self.failed.store(true, Ordering::SeqCst);
+        self.wake_all();
+    }
+
+    fn run_worker(&self, k: usize) {
+        loop {
+            let id = {
+                let mut q = self.queues[k].q.lock().unwrap();
+                loop {
+                    if self.failed.load(Ordering::SeqCst)
+                        || self.remaining.load(Ordering::SeqCst) == 0
+                    {
+                        return;
+                    }
+                    if let Some(id) = q.pop_front() {
+                        break id;
+                    }
+                    q = self.queues[k].cv.wait(q).unwrap();
+                }
+            };
+            // A panicking step (tensor shape asserts fire inside ops)
+            // must still unblock the sibling workers, or they wait on
+            // their condvars forever and the scope join never returns.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.run_step(id)
+            }));
+            match run {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    self.fail(e);
+                    return;
+                }
+                Err(panic) => {
+                    let msg = panic
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| panic.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".into());
+                    self.fail(anyhow!(
+                        "step {id} {:?} panicked: {msg}",
+                        self.plan.steps[id].op
+                    ));
+                    return;
+                }
+            }
+        }
+    }
+
+    fn run_step(&self, i: usize) -> Result<()> {
+        let step = &self.plan.steps[i];
+        let mut get = |s: Slot| -> Result<Value> {
+            self.slots[s]
+                .lock()
+                .unwrap()
+                .clone()
+                .ok_or_else(|| anyhow!("step {i}: slot {s} read before write"))
+        };
+        let out = eval_step(step, self.engine, &mut get)?;
+        if out.len() != step.writes.len() {
+            return Err(anyhow!(
+                "step {i} {:?}: {} outputs for {} writes",
+                step.op,
+                out.len(),
+                step.writes.len()
+            ));
+        }
+        for (&w, v) in step.writes.iter().zip(out) {
+            *self.slots[w].lock().unwrap() = Some(v);
+        }
+        // Reclaim read slots once their last concurrent reader is done.
+        for &r in &self.uniq_reads[i] {
+            if self.readers[r].fetch_sub(1, Ordering::SeqCst) == 1 {
+                *self.slots[r].lock().unwrap() = None;
+            }
+        }
+        // Unblock dependents; newly-ready steps go to their device queue.
+        for &c in &self.children[i] {
+            if self.indeg[c].fetch_sub(1, Ordering::SeqCst) == 1 {
+                self.enqueue(c);
+            }
+        }
+        if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.wake_all();
+        }
+        Ok(())
+    }
+}
+
+fn execute_par(
+    plan: &Plan,
+    engine: &Engine,
+    params: &BTreeMap<String, Tensor>,
+    batch: &Batch,
+    bank: Option<&ParamBank>,
+) -> Result<StepOut> {
+    let n = plan.steps.len();
+    if n == 0 {
+        return Err(anyhow!("empty plan"));
+    }
+    let slots: Vec<Mutex<Option<Value>>> = bind_inputs(plan, engine, params, batch, bank)?
+        .into_iter()
+        .map(Mutex::new)
+        .collect();
+
+    // Dependency edges: unique producer steps per step. Deps must point
+    // strictly backward (emission order is topological) — enforced here
+    // so a malformed hand-built plan becomes an error instead of workers
+    // waiting forever on steps that can never become ready.
+    let mut indeg = vec![0usize; n];
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, step) in plan.steps.iter().enumerate() {
+        let mut ds = step.deps.clone();
+        ds.sort_unstable();
+        ds.dedup();
+        if ds.last().is_some_and(|&d| d >= i) {
+            return Err(anyhow!(
+                "step {i} depends on step {} >= itself (cyclic or non-topological plan)",
+                ds.last().unwrap()
+            ));
+        }
+        indeg[i] = ds.len();
+        for d in ds {
+            children[d].push(i);
+        }
+    }
+    // Reader counts per slot; plan outputs get a +1 pin so they survive.
+    // (Graph setup is O(plan) per call — noise next to the thousands of
+    // PJRT round-trips one execution performs.)
+    let uniq_reads: Vec<Vec<Slot>> = plan
+        .steps
+        .iter()
+        .map(|step| {
+            let mut rs = step.reads.clone();
+            rs.sort_unstable();
+            rs.dedup();
+            rs
+        })
+        .collect();
+    let mut readers = vec![0usize; plan.n_slots];
+    for rs in &uniq_reads {
+        for &r in rs {
+            readers[r] += 1;
+        }
+    }
+    for &s in plan
+        .grad_out
+        .values()
+        .chain([&plan.loss_out, &plan.ntok_out])
+    {
+        readers[s] += 1;
+    }
+
+    let devs = plan.distinct_devices();
+    let qindex: HashMap<usize, usize> =
+        devs.iter().enumerate().map(|(k, &d)| (d, k)).collect();
+    let queues: Vec<WorkQueue> = devs
+        .iter()
+        .map(|_| WorkQueue { q: Mutex::new(VecDeque::new()), cv: Condvar::new() })
+        .collect();
+
+    let sched = Sched {
+        plan,
+        engine,
+        slots,
+        indeg: indeg.into_iter().map(AtomicUsize::new).collect(),
+        children,
+        readers: readers.into_iter().map(AtomicUsize::new).collect(),
+        uniq_reads,
+        queues,
+        qindex,
+        remaining: AtomicUsize::new(n),
+        failed: AtomicBool::new(false),
+        error: Mutex::new(None),
+    };
+
+    // Seed the initially-ready steps in emission order.
+    for (i, step) in plan.steps.iter().enumerate() {
+        if sched.indeg[i].load(Ordering::SeqCst) == 0 {
+            sched
+                .queue_of(step.device)
+                .q
+                .lock()
+                .unwrap()
+                .push_back(i);
+        }
+    }
+
+    std::thread::scope(|scope| {
+        for k in 0..sched.queues.len() {
+            let s = &sched;
+            scope.spawn(move || s.run_worker(k));
+        }
+    });
+
+    if let Some(e) = sched.error.lock().unwrap().take() {
+        return Err(e);
+    }
+    let left = sched.remaining.load(Ordering::SeqCst);
+    if left != 0 {
+        return Err(anyhow!(
+            "parallel executor stalled with {left} steps pending (cyclic plan?)"
+        ));
+    }
+    collect_out(plan, |s| {
+        sched.slots[s]
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| anyhow!("output slot {s} empty"))
+    })
 }

@@ -139,6 +139,16 @@ impl Plan {
         self.steps.iter().filter(|s| pred(&s.op)).count()
     }
 
+    /// Distinct devices steps are placed on (includes [`HOST`] when any
+    /// host-side bookkeeping op exists). Sized worker pool of the
+    /// parallel executor: one worker per entry.
+    pub fn distinct_devices(&self) -> Vec<usize> {
+        let mut devs: Vec<usize> = self.steps.iter().map(|s| s.device).collect();
+        devs.sort_unstable();
+        devs.dedup();
+        devs
+    }
+
     /// Validate SSA discipline + topological emission order.
     pub fn validate(&self) -> Result<(), String> {
         let mut written = vec![false; self.n_slots];
@@ -443,6 +453,19 @@ mod tests {
             ..Default::default()
         };
         assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn distinct_devices_cover_placement() {
+        let mut b = PlanBuilder::new();
+        let p = b.param("w", 4);
+        let x = b.exec("f".into(), 0, &[p], &[4], OpCost::ZERO)[0];
+        b.exec("g".into(), 2, &[x], &[4], OpCost::ZERO);
+        let plan = b.finish(BTreeMap::new(), p, p);
+        // Device 2 plus the auto-transfer's target; sorted and deduped.
+        let devs = plan.distinct_devices();
+        assert!(devs.contains(&0) && devs.contains(&2));
+        assert!(devs.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]

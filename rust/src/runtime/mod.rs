@@ -6,9 +6,20 @@
 //! `manifest.json` carrying the model dims and per-artifact signatures.
 //!
 //! Executables are compiled lazily on first use and cached for the life
-//! of the engine — the hot path is `Engine::exec`, which converts host
-//! tensors to literals, runs the computation on the PJRT CPU client, and
-//! unpacks the result tuple.
+//! of the engine — the hot path is `Engine::exec`, which uploads (or
+//! reuses device-resident) argument buffers, runs the computation on the
+//! PJRT CPU client, and unpacks the result tuple.
+//!
+//! Device residency: [`DeviceBuf`] is an uploaded buffer the caller can
+//! hold onto and pass back via [`Arg::Buf`], skipping the host→device
+//! copy. [`ParamBank`] builds on that to keep the parameter set resident
+//! across `exec` calls within one optimizer step (invalidated by the
+//! trainer after every update). See `docs/PERF.md`.
+//!
+//! Thread safety: the engine is shared by the parallel plan executor's
+//! device workers. All rust-side interior mutability (executable cache,
+//! stats) lives behind `Mutex`es; the PJRT CPU client itself is
+//! internally synchronized, so `Engine` is declared `Send + Sync` below.
 
 mod manifest;
 
@@ -17,15 +28,54 @@ pub use manifest::{ArtifactSig, IoSig, Manifest};
 use crate::config::ModelDims;
 use crate::tensor::{ITensor, Tensor};
 use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A device-resident buffer plus the metadata needed to validate calls
+/// without touching the host copy.
+pub struct DeviceBuf {
+    buf: xla::PjRtBuffer,
+    shape: Vec<usize>,
+    dtype: &'static str,
+    bytes: u64,
+}
+
+// SAFETY: PJRT buffers are immutable once created and the CPU client is
+// internally synchronized; the vendored wrapper just never declares the
+// auto traits. All mutation goes through the PJRT C API, which is
+// thread-safe for the CPU plugin.
+unsafe impl Send for DeviceBuf {}
+unsafe impl Sync for DeviceBuf {}
+
+impl std::fmt::Debug for DeviceBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DeviceBuf<{}{:?}>", self.dtype, self.shape)
+    }
+}
+
+impl DeviceBuf {
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        self.dtype
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
 
 /// One argument to an artifact call.
 #[derive(Debug, Clone, Copy)]
 pub enum Arg<'a> {
     F(&'a Tensor),
     I(&'a ITensor),
+    /// Already device-resident (no upload on this call).
+    Buf(&'a DeviceBuf),
 }
 
 impl<'a> Arg<'a> {
@@ -33,6 +83,7 @@ impl<'a> Arg<'a> {
         match self {
             Arg::F(t) => t.shape().to_vec(),
             Arg::I(t) => t.shape().to_vec(),
+            Arg::Buf(b) => b.shape.clone(),
         }
     }
 
@@ -40,26 +91,27 @@ impl<'a> Arg<'a> {
         match self {
             Arg::F(_) => "f32",
             Arg::I(_) => "i32",
+            Arg::Buf(b) => b.dtype,
         }
     }
 
-    /// Upload to a device buffer we own.
-    ///
-    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
-    /// (literal args): the vendored C wrapper `release()`s the input
-    /// buffers it creates for that path and never frees them — ~0.7 MB
-    /// leaked per call, unbounded over a training run. `execute_b`
-    /// borrows caller-owned buffers, which Drop correctly.
-    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+    fn byte_len(&self) -> u64 {
         match self {
-            Arg::F(t) => client
-                .buffer_from_host_buffer(t.data(), t.shape(), None)
-                .map_err(|e| anyhow!("upload f32 {:?}: {e:?}", t.shape())),
-            Arg::I(t) => client
-                .buffer_from_host_buffer(t.data(), t.shape(), None)
-                .map_err(|e| anyhow!("upload i32 {:?}: {e:?}", t.shape())),
+            Arg::F(t) => 4 * t.numel() as u64,
+            Arg::I(t) => 4 * t.data().len() as u64,
+            Arg::Buf(b) => b.bytes,
         }
     }
+}
+
+/// Per-artifact-key timing breakdown.
+#[derive(Debug, Default, Clone)]
+pub struct KeyStats {
+    pub calls: u64,
+    /// Device-side execution + fetch.
+    pub exec_nanos: u128,
+    /// Host-side upload + tuple unpack.
+    pub convert_nanos: u128,
 }
 
 /// Execution statistics (feeds §Perf and the throughput reports).
@@ -69,6 +121,15 @@ pub struct EngineStats {
     pub compile_count: u64,
     pub exec_nanos: u128,
     pub convert_nanos: u128,
+    /// Host→device uploads actually performed.
+    pub uploads: u64,
+    pub upload_bytes: u64,
+    /// Arguments served from an already device-resident buffer.
+    pub buffer_hits: u64,
+    /// Bytes that would have been re-uploaded without buffer reuse.
+    pub upload_bytes_saved: u64,
+    /// Timing per artifact key.
+    pub per_key: BTreeMap<String, KeyStats>,
 }
 
 /// The artifact engine: PJRT client + compiled-executable cache.
@@ -76,13 +137,20 @@ pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<EngineStats>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<EngineStats>,
     /// When false, skip manifest signature validation on every call
     /// (the hot loop calls exec thousands of times per step; tests run
     /// with validation on).
     pub validate: bool,
 }
+
+// SAFETY: see the module docs — the PJRT CPU client/executables are
+// internally synchronized, and every rust-side mutable field is behind a
+// Mutex. This is what lets the parallel executor's per-device workers
+// share one engine.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     /// Load the artifact set of one model config, e.g.
@@ -96,8 +164,8 @@ impl Engine {
             client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(EngineStats::default()),
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(EngineStats::default()),
             validate: true,
         })
     }
@@ -107,16 +175,63 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Zero all counters (bench harness: isolate one phase).
+    pub fn reset_stats(&self) {
+        *self.stats.lock().unwrap() = EngineStats::default();
     }
 
     /// Number of distinct artifacts compiled so far.
     pub fn compiled(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 
-    fn executable(&self, key: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(key) {
+    /// Upload an f32 host tensor to a device buffer the caller owns.
+    ///
+    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
+    /// (literal args): the vendored C wrapper `release()`s the input
+    /// buffers it creates for that path and never frees them — ~0.7 MB
+    /// leaked per call, unbounded over a training run. `execute_b`
+    /// borrows caller-owned buffers, which Drop correctly.
+    pub fn upload_f(&self, t: &Tensor) -> Result<DeviceBuf> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer(t.data(), t.shape(), None)
+            .map_err(|e| anyhow!("upload f32 {:?}: {e:?}", t.shape()))?;
+        let bytes = 4 * t.numel() as u64;
+        self.note_upload(bytes);
+        Ok(DeviceBuf { buf, shape: t.shape().to_vec(), dtype: "f32", bytes })
+    }
+
+    /// Upload an i32 host tensor to a device buffer the caller owns.
+    pub fn upload_i(&self, t: &ITensor) -> Result<DeviceBuf> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer(t.data(), t.shape(), None)
+            .map_err(|e| anyhow!("upload i32 {:?}: {e:?}", t.shape()))?;
+        let bytes = 4 * t.data().len() as u64;
+        self.note_upload(bytes);
+        Ok(DeviceBuf { buf, shape: t.shape().to_vec(), dtype: "i32", bytes })
+    }
+
+    fn note_upload(&self, bytes: u64) {
+        let mut st = self.stats.lock().unwrap();
+        st.uploads += 1;
+        st.upload_bytes += bytes;
+    }
+
+    /// Record that one argument was served device-resident instead of
+    /// being re-uploaded.
+    pub fn note_buffer_reuse(&self, buf: &DeviceBuf) {
+        let mut st = self.stats.lock().unwrap();
+        st.buffer_hits += 1;
+        st.upload_bytes_saved += buf.bytes;
+    }
+
+    fn executable(&self, key: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(key) {
             return Ok(e.clone());
         }
         let sig = self
@@ -134,9 +249,12 @@ impl Engine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile `{key}`: {e:?}"))?;
-        let exe = std::rc::Rc::new(exe);
-        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
-        self.stats.borrow_mut().compile_count += 1;
+        let exe = Arc::new(exe);
+        // Two workers may race to compile the same key; first insert
+        // wins, the loser's executable is dropped.
+        let mut cache = self.cache.lock().unwrap();
+        let exe = cache.entry(key.to_string()).or_insert(exe).clone();
+        self.stats.lock().unwrap().compile_count += 1;
         Ok(exe)
     }
 
@@ -150,6 +268,10 @@ impl Engine {
     }
 
     /// Execute artifact `key` with `args`, returning the output tensors.
+    ///
+    /// `Arg::F`/`Arg::I` host tensors are uploaded for this call only;
+    /// `Arg::Buf` arguments reuse their device buffer (counted in
+    /// `EngineStats::buffer_hits` / `upload_bytes_saved`).
     pub fn exec(&self, key: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
         let sig = self
             .manifest
@@ -162,13 +284,48 @@ impl Engine {
         let exe = self.executable(key)?;
 
         let t0 = std::time::Instant::now();
-        let buffers: Vec<xla::PjRtBuffer> =
-            args.iter().map(|a| a.to_buffer(&self.client)).collect::<Result<_>>()?;
+        // Owned uploads for host args; resident args borrow their cache.
+        enum Where {
+            Owned(usize),
+            Resident,
+        }
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut places: Vec<Where> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::F(t) => {
+                    owned.push(
+                        self.client
+                            .buffer_from_host_buffer(t.data(), t.shape(), None)
+                            .map_err(|e| anyhow!("upload f32 {:?}: {e:?}", t.shape()))?,
+                    );
+                    places.push(Where::Owned(owned.len() - 1));
+                }
+                Arg::I(t) => {
+                    owned.push(
+                        self.client
+                            .buffer_from_host_buffer(t.data(), t.shape(), None)
+                            .map_err(|e| anyhow!("upload i32 {:?}: {e:?}", t.shape()))?,
+                    );
+                    places.push(Where::Owned(owned.len() - 1));
+                }
+                Arg::Buf(_) => places.push(Where::Resident),
+            }
+        }
+        let buffers: Vec<&xla::PjRtBuffer> = places
+            .iter()
+            .zip(args)
+            .map(|(w, a)| match (w, a) {
+                (Where::Owned(i), _) => &owned[*i],
+                (Where::Resident, Arg::Buf(b)) => &b.buf,
+                _ => unreachable!(),
+            })
+            .collect();
         let t1 = std::time::Instant::now();
         let bufs = exe
-            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .execute_b::<&xla::PjRtBuffer>(&buffers)
             .map_err(|e| anyhow!("execute `{key}`: {e:?}"))?;
-        // Synchronize before `buffers` drops (execute_b borrows them).
+        // Synchronize before `owned` drops (execute_b borrows the inputs).
         let lit = bufs[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("fetch `{key}`: {e:?}"))?;
@@ -183,11 +340,98 @@ impl Engine {
         if self.validate {
             validate_outputs(key, sig, &outs)?;
         }
-        let mut st = self.stats.borrow_mut();
+        let exec_ns = (t2 - t1).as_nanos();
+        let convert_ns = (t1 - t0).as_nanos() + t2.elapsed().as_nanos();
+        let mut st = self.stats.lock().unwrap();
         st.executions += 1;
-        st.exec_nanos += (t2 - t1).as_nanos();
-        st.convert_nanos += (t1 - t0).as_nanos() + t2.elapsed().as_nanos();
+        st.exec_nanos += exec_ns;
+        st.convert_nanos += convert_ns;
+        for a in args {
+            match a {
+                Arg::Buf(_) => {}
+                _ => {
+                    st.uploads += 1;
+                    st.upload_bytes += a.byte_len();
+                }
+            }
+        }
+        let ks = st.per_key.entry(key.to_string()).or_default();
+        ks.calls += 1;
+        ks.exec_nanos += exec_ns;
+        ks.convert_nanos += convert_ns;
         Ok(outs)
+    }
+}
+
+/// Device-resident parameter buffers: upload each parameter once per
+/// optimizer step instead of once per artifact call.
+///
+/// The trainer owns one bank, resolves parameter arguments through
+/// [`ParamBank::get_or_upload`], and calls [`ParamBank::invalidate`]
+/// after every optimizer update (host-side parameter data changed, so
+/// the device copies are stale). Shared by the parallel executor's
+/// workers; the map lock is held across the upload so each parameter is
+/// uploaded at most once per step even under concurrent first use.
+#[derive(Debug, Default)]
+pub struct ParamBank {
+    bufs: Mutex<HashMap<String, Arc<DeviceBuf>>>,
+    uploads: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl ParamBank {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve `name` to its device buffer, uploading `t` on first use
+    /// since the last invalidation.
+    pub fn get_or_upload(
+        &self,
+        engine: &Engine,
+        name: &str,
+        t: &Tensor,
+    ) -> Result<Arc<DeviceBuf>> {
+        let mut bufs = self.bufs.lock().unwrap();
+        if let Some(b) = bufs.get(name) {
+            // Tracked by the bank's own hit counter only: the engine's
+            // `upload_bytes_saved` is counted at each *consuming* call
+            // (per-Value cache), and counting the bind-time resolution
+            // too would inflate it by one upload per parameter per
+            // execution.
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(b.clone());
+        }
+        let b = Arc::new(engine.upload_f(t)?);
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        bufs.insert(name.to_string(), b.clone());
+        Ok(b)
+    }
+
+    /// Drop all resident buffers (host parameters changed).
+    pub fn invalidate(&self) {
+        self.bufs.lock().unwrap().clear();
+    }
+
+    /// Parameters currently resident.
+    pub fn len(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total uploads performed since construction (not reset by
+    /// `invalidate`): `uploads / steps` is the per-step re-upload count
+    /// the perf acceptance tracks.
+    pub fn upload_count(&self) -> u64 {
+        self.uploads.load(Ordering::Relaxed)
+    }
+
+    /// Total cache hits since construction.
+    pub fn hit_count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
     }
 }
 

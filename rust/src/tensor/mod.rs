@@ -88,7 +88,11 @@ impl Tensor {
 
     /// Slice along axis 0: rows `[lo, hi)`. Used for batch sharding.
     pub fn slice0(&self, lo: usize, hi: usize) -> Tensor {
-        assert!(!self.shape.is_empty() && lo <= hi && hi <= self.shape[0]);
+        assert!(
+            !self.shape.is_empty() && lo <= hi && hi <= self.shape[0],
+            "slice0 [{lo}, {hi}) out of range for shape {:?}",
+            self.shape
+        );
         let row: usize = self.shape[1..].iter().product();
         let mut shape = self.shape.clone();
         shape[0] = hi - lo;
@@ -99,11 +103,14 @@ impl Tensor {
     pub fn concat0(parts: &[&Tensor]) -> Tensor {
         assert!(!parts.is_empty());
         let tail = &parts[0].shape[1..];
+        let row: usize = tail.iter().product();
         let mut n0 = 0;
-        let mut data = Vec::new();
         for p in parts {
             assert_eq!(&p.shape[1..], tail, "concat0 tail mismatch");
             n0 += p.shape[0];
+        }
+        let mut data = Vec::with_capacity(n0 * row);
+        for p in parts {
             data.extend_from_slice(&p.data);
         }
         let mut shape = vec![n0];
@@ -150,12 +157,15 @@ impl Tensor {
         assert!(!steps.is_empty());
         let (b, h) = (steps[0].shape[0], steps[0].shape[1]);
         let t = steps.len();
-        let mut data = vec![0.0f32; b * t * h];
-        for (ti, s) in steps.iter().enumerate() {
+        for s in steps {
             assert_eq!(s.shape, vec![b, h]);
-            for bi in 0..b {
-                let dst = bi * t * h + ti * h;
-                data[dst..dst + h].copy_from_slice(&s.data[bi * h..(bi + 1) * h]);
+        }
+        // Append rows in output order so each element is written exactly
+        // once (no zero-fill pass over the whole block first).
+        let mut data = Vec::with_capacity(b * t * h);
+        for bi in 0..b {
+            for s in steps {
+                data.extend_from_slice(&s.data[bi * h..(bi + 1) * h]);
             }
         }
         Tensor::new(vec![b, t, h], data)
@@ -218,6 +228,11 @@ impl ITensor {
     }
 
     pub fn slice0(&self, lo: usize, hi: usize) -> ITensor {
+        assert!(
+            !self.shape.is_empty() && lo <= hi && hi <= self.shape[0],
+            "slice0 [{lo}, {hi}) out of range for shape {:?}",
+            self.shape
+        );
         let row: usize = self.shape[1..].iter().product();
         let mut shape = self.shape.clone();
         shape[0] = hi - lo;
@@ -313,5 +328,27 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn itensor_slice0_in_range() {
+        let ids = ITensor::new(vec![4, 2], (0..8).collect());
+        let s = ids.slice0(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2, 3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn itensor_slice0_out_of_range_panics() {
+        let ids = ITensor::new(vec![4, 2], (0..8).collect());
+        ids.slice0(2, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn tensor_slice0_out_of_range_panics() {
+        let t = Tensor::zeros(&[3, 2]);
+        t.slice0(0, 4);
     }
 }

@@ -9,9 +9,9 @@ use crate::data::Batcher;
 use crate::metrics::perplexity;
 use crate::model_spec::param_specs;
 use crate::optim::Optimizer;
-use crate::parallel::{build_plan, execute, Batch, Plan};
+use crate::parallel::{build_plan, execute_with, Batch, ExecMode, ExecOptions, Plan};
 use crate::rng::Rng;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, ParamBank};
 use crate::sim::{simulate, SimResult};
 use crate::tensor::Tensor;
 use anyhow::Result;
@@ -73,6 +73,12 @@ pub struct Trainer<'a> {
     pub steps_done: usize,
     prev_dev_ppl: Option<f64>,
     pub history: Vec<EvalPoint>,
+    /// Device-resident parameter buffers: each parameter uploads once
+    /// per optimizer step, invalidated after every update.
+    pub bank: ParamBank,
+    /// Run plans with the sequential executor (`--sequential` escape
+    /// hatch); default is the dependency-driven parallel scheduler.
+    pub sequential: bool,
 }
 
 impl<'a> Trainer<'a> {
@@ -94,13 +100,23 @@ impl<'a> Trainer<'a> {
             steps_done: 0,
             prev_dev_ppl: None,
             history: Vec::new(),
+            bank: ParamBank::new(),
+            sequential: false,
         })
+    }
+
+    fn exec_opts(&self) -> ExecOptions<'_> {
+        ExecOptions {
+            mode: if self.sequential { ExecMode::Sequential } else { ExecMode::Parallel },
+            bank: Some(&self.bank),
+        }
     }
 
     /// Execute one optimizer step on `batch`.
     pub fn train_step(&mut self, batch: &Batch) -> Result<StepStats> {
         let t0 = std::time::Instant::now();
-        let out = execute(&self.plan, self.engine, &self.params, batch)?;
+        let out =
+            execute_with(&self.plan, self.engine, &self.params, batch, &self.exec_opts())?;
         let host_seconds = t0.elapsed().as_secs_f64();
 
         // Normalize: mean token loss -> mean gradients.
@@ -110,6 +126,9 @@ impl<'a> Trainer<'a> {
             g.scale(1.0 / ntok as f32);
         }
         let grad_norm = self.opt.step(&mut self.params, &grads);
+        // The update changed the host parameters: the device-resident
+        // copies are stale until the next step's first touch.
+        self.bank.invalidate();
 
         self.steps_done += 1;
         self.sim_clock += self.step_sim.makespan;
@@ -131,11 +150,19 @@ impl<'a> Trainer<'a> {
         let mut loss = 0.0;
         let mut ntok = 0.0;
         for b in batches {
-            let out = execute(&self.plan, self.engine, &self.params, b)?;
+            let out =
+                execute_with(&self.plan, self.engine, &self.params, b, &self.exec_opts())?;
             loss += out.loss_sum;
             ntok += out.ntok;
         }
         Ok(perplexity(loss, ntok))
+    }
+
+    /// Invalidate the device-resident parameter copies after any
+    /// out-of-band mutation of `self.params` (checkpoint restore,
+    /// manual edits in tests).
+    pub fn invalidate_device_params(&self) {
+        self.bank.invalidate();
     }
 
     /// Evaluate + plateau-decay + record a Figure-4 point.

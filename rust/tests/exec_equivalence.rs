@@ -1,0 +1,191 @@
+//! Executor equivalence: the dependency-driven parallel executor must
+//! produce *bitwise-identical* results to the sequential emission-order
+//! walk — loss, token count, and every gradient — across all three
+//! attention modes and 1/2/4-device placements, with and without the
+//! device-resident parameter bank. This is the determinism guarantee
+//! `docs/PERF.md` documents: scheduling reorders when steps run, never
+//! what they compute (requires `make artifacts`).
+
+use hybridnmt::config::{ModelDims, Strategy};
+use hybridnmt::data::vocab::{BOS, EOS, PAD};
+use hybridnmt::model_spec::{AttnPlacement, Placement};
+use hybridnmt::parallel::replica::build_replica;
+use hybridnmt::parallel::{
+    build_plan, execute_with, AttnMode, Batch, ExecMode, ExecOptions, Plan, PlanBuilder,
+    ReplicaSpec, StepOut,
+};
+use hybridnmt::rng::Rng;
+use hybridnmt::runtime::{Engine, ParamBank};
+use hybridnmt::tensor::{ITensor, Tensor};
+use hybridnmt::train::init_params;
+use std::collections::BTreeMap;
+
+fn engine() -> Engine {
+    Engine::load("artifacts", "tiny").expect("run `make artifacts` first")
+}
+
+/// A deterministic random batch padded to the artifact shapes.
+fn random_batch(d: &ModelDims, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (b, m, n) = (d.batch, d.max_src, d.max_tgt);
+    let mut src = vec![PAD; b * m];
+    let mut srclen = vec![0i32; b];
+    let mut tgt_in = vec![PAD; b * n];
+    let mut tgt_out = vec![PAD; b * n];
+    let mut tmask = vec![0.0f32; b * n];
+    for bi in 0..b {
+        let sl = rng.range(2, m + 1);
+        srclen[bi] = sl as i32;
+        for t in 0..sl {
+            src[bi * m + t] = rng.range(4, d.vocab) as i32;
+        }
+        let tl = rng.range(1, n);
+        tgt_in[bi * n] = BOS;
+        for t in 0..tl {
+            let tok = rng.range(4, d.vocab) as i32;
+            tgt_in[bi * n + t + 1] = tok;
+            tgt_out[bi * n + t] = tok;
+        }
+        tgt_out[bi * n + tl] = EOS;
+        for t in 0..=tl {
+            tmask[bi * n + t] = 1.0;
+        }
+    }
+    Batch {
+        src: ITensor::new(vec![b, m], src),
+        srclen: ITensor::new(vec![b], srclen),
+        tgt_in: ITensor::new(vec![b, n], tgt_in),
+        tgt_out: ITensor::new(vec![b, n], tgt_out),
+        tmask: Tensor::new(vec![b, n], tmask),
+    }
+}
+
+fn random_params(d: &ModelDims, input_feeding: bool, seed: u64) -> BTreeMap<String, Tensor> {
+    let exp = hybridnmt::config::Experiment {
+        model: d.clone(),
+        strategy: if input_feeding { Strategy::Single } else { Strategy::Hybrid },
+        hw: hybridnmt::config::HwConfig::default(),
+        train: hybridnmt::config::TrainConfig { seed, ..Default::default() },
+        data: hybridnmt::config::DataConfig::wmt14_sim(100),
+        artifacts_dir: "artifacts".into(),
+    };
+    init_params(&exp, input_feeding)
+}
+
+/// Bitwise comparison: no tolerance. The two executors run the exact
+/// same per-step computations with fixed reduction order, so any
+/// difference at all is a scheduling bug.
+fn assert_bitwise(label: &str, a: &StepOut, b: &StepOut) {
+    assert_eq!(
+        a.loss_sum.to_bits(),
+        b.loss_sum.to_bits(),
+        "{label}: loss {} vs {}",
+        a.loss_sum,
+        b.loss_sum
+    );
+    assert_eq!(a.ntok.to_bits(), b.ntok.to_bits(), "{label}: ntok");
+    assert_eq!(a.grads.len(), b.grads.len(), "{label}: grad count");
+    for (name, g) in &a.grads {
+        let h = b.grads.get(name).unwrap_or_else(|| panic!("{label}: missing grad {name}"));
+        assert_eq!(g.shape(), h.shape(), "{label}: {name} shape");
+        for (i, (x, y)) in g.data().iter().zip(h.data()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{label}: grad `{name}`[{i}] {x} vs {y}"
+            );
+        }
+    }
+}
+
+fn run(plan: &Plan, e: &Engine, params: &BTreeMap<String, Tensor>, batch: &Batch, mode: ExecMode, bank: Option<&ParamBank>) -> StepOut {
+    execute_with(plan, e, params, batch, &ExecOptions { mode, bank })
+        .unwrap_or_else(|err| panic!("{mode:?}: {err:#}"))
+}
+
+/// All five strategies: covers AttnMode::StepLocal (Single/Data/Model),
+/// StepSharded (HybridIf) and BlockSharded (Hybrid), on 1- and
+/// 4-device placements, over several random batches.
+#[test]
+fn parallel_matches_sequential_all_strategies() {
+    let e = engine();
+    let d = e.dims().clone();
+    for st in Strategy::ALL {
+        let plan = build_plan(&d, st, true);
+        plan.validate().unwrap();
+        let params = random_params(&d, st.uses_input_feeding(), 3);
+        for seed in [5u64, 11, 23] {
+            let batch = random_batch(&d, seed);
+            let seq = run(&plan, &e, &params, &batch, ExecMode::Sequential, None);
+            let par = run(&plan, &e, &params, &batch, ExecMode::Parallel, None);
+            assert_bitwise(&format!("{st:?} seed {seed}"), &seq, &par);
+        }
+    }
+}
+
+/// A 2-device layer split (encoder/decoder stacks straddling a device
+/// boundary, attention + state home on device 1) exercises the
+/// cross-device transfer edges between the 1- and 4-device extremes.
+#[test]
+fn parallel_matches_sequential_two_device_placement() {
+    let e = engine();
+    let d = e.dims().clone();
+    let mut b = PlanBuilder::new();
+    let placement = Placement {
+        emb: 0,
+        layer_dev: (0..d.layers).map(|l| usize::from(l >= d.layers / 2)).collect(),
+        attn: AttnPlacement::Device(1),
+        state_home: 1,
+    };
+    let spec = ReplicaSpec {
+        dims: d.clone(),
+        batch: d.batch,
+        batch_range: (0, d.batch),
+        placement,
+        input_feeding: true,
+        attn: AttnMode::StepLocal { device: 1 },
+    };
+    let out = build_replica(&mut b, &spec, d.batch);
+    let plan = b.finish(out.grads, out.loss, out.ntok);
+    plan.validate().unwrap();
+    assert!(
+        plan.distinct_devices().iter().filter(|&&dv| dv < 16).count() == 2,
+        "placement should span exactly 2 compute devices"
+    );
+    let params = random_params(&d, true, 7);
+    for seed in [2u64, 19] {
+        let batch = random_batch(&d, seed);
+        let seq = run(&plan, &e, &params, &batch, ExecMode::Sequential, None);
+        let par = run(&plan, &e, &params, &batch, ExecMode::Parallel, None);
+        assert_bitwise(&format!("2-device seed {seed}"), &seq, &par);
+    }
+}
+
+/// The device-resident parameter bank must not change numerics: cold
+/// (uploading) and warm (fully resident) executions agree bitwise with
+/// the bank-less sequential reference, and the bank uploads each
+/// parameter exactly once.
+#[test]
+fn param_bank_preserves_numerics_and_uploads_once() {
+    let e = engine();
+    let d = e.dims().clone();
+    let plan = build_plan(&d, Strategy::Hybrid, true);
+    let params = random_params(&d, false, 13);
+    let batch = random_batch(&d, 17);
+
+    let reference = run(&plan, &e, &params, &batch, ExecMode::Sequential, None);
+    let bank = ParamBank::new();
+    let cold = run(&plan, &e, &params, &batch, ExecMode::Parallel, Some(&bank));
+    assert_eq!(bank.upload_count() as usize, params.len(), "one upload per parameter");
+    let warm = run(&plan, &e, &params, &batch, ExecMode::Parallel, Some(&bank));
+    assert_eq!(bank.upload_count() as usize, params.len(), "warm run re-uploaded");
+    assert!(bank.hit_count() > 0, "warm run should hit the bank");
+    assert_bitwise("bank cold", &reference, &cold);
+    assert_bitwise("bank warm", &reference, &warm);
+
+    // Invalidation forces a fresh upload set (stale-buffer protection).
+    bank.invalidate();
+    let after = run(&plan, &e, &params, &batch, ExecMode::Parallel, Some(&bank));
+    assert_eq!(bank.upload_count() as usize, 2 * params.len());
+    assert_bitwise("bank after invalidate", &reference, &after);
+}
