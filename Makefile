@@ -1,0 +1,21 @@
+# hybridnmt build/verify entry points (see README.md).
+
+.PHONY: artifacts verify doc clean-artifacts
+
+# AOT-compile the JAX model to HLO-text artifacts + manifests.
+# aot.py uses package-relative imports, so run it as a module from
+# python/ (its default --outdir already points back to ../artifacts).
+artifacts:
+	cd python && python3 -m compile.aot --outdir ../artifacts
+
+# Full verification gate: build, tests, doc build, bench-JSON sanity.
+# Degrades gracefully on machines without the rust toolchain (see
+# scripts/verify.sh) so the BENCH/doc checks still run everywhere.
+verify:
+	./scripts/verify.sh
+
+doc:
+	cargo doc --no-deps
+
+clean-artifacts:
+	rm -rf artifacts

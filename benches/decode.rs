@@ -1,0 +1,60 @@
+//! Bench: sustained translation throughput of the decode engines —
+//! the single-sentence reference path vs the batched multi-device
+//! engine at batch {1, 32} × workers {1, 2, 4} (§Perf, serving).
+//!
+//! Doubles as a correctness gate: `report::decode_bench` re-checks the
+//! batched output token-for-token against the reference before it
+//! reports a single number. Emits `BENCH_decode.json` (flat
+//! name → number) for cross-PR perf tracking, like the other
+//! `BENCH_*` files.
+//!
+//! Run: `cargo bench --bench decode` (needs `make artifacts`).
+
+use hybridnmt::config::{DataConfig, Experiment, HwConfig, Strategy, TrainConfig};
+use hybridnmt::decode::{BeamConfig, LengthNorm};
+use hybridnmt::report::{self, make_batcher, make_corpus};
+use hybridnmt::runtime::{Engine, ParamBank};
+use hybridnmt::train::init_params;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts", "tiny")?;
+    let d = engine.dims().clone();
+    let exp = Experiment {
+        model: d.clone(),
+        strategy: Strategy::Hybrid,
+        hw: HwConfig::default(),
+        train: TrainConfig::default(),
+        data: DataConfig::wmt14_sim(1200),
+        artifacts_dir: "artifacts".into(),
+    };
+    // Throughput is independent of the weight values — random init is
+    // fine and keeps the bench self-contained.
+    let params = init_params(&exp, false);
+    let bank = ParamBank::new();
+    let corpus = make_corpus(&exp.data, &exp.model);
+    let batcher = make_batcher(&exp, &corpus);
+    let n = 48.min(batcher.test.len());
+    let srcs: Vec<Vec<i32>> = batcher.test[..n].iter().map(|e| e.src.clone()).collect();
+
+    for beam in [1usize, 4] {
+        let cfg = BeamConfig {
+            beam: beam.min(d.beam),
+            max_len: d.max_tgt,
+            norm: LengthNorm::Marian { alpha: 1.0 },
+        };
+        println!("== beam {beam} ==");
+        let out = report::decode_bench(
+            &engine,
+            &params,
+            &bank,
+            false,
+            &srcs,
+            &cfg,
+            &[1, 32],
+            &[1, 2, 4],
+        )?;
+        print!("{out}\n");
+    }
+    println!("wrote BENCH_decode.json");
+    Ok(())
+}

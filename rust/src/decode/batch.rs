@@ -1,0 +1,529 @@
+//! Batched, multi-device beam-search inference.
+//!
+//! The single-sentence [`super::Decoder`] spends one full device batch
+//! (width = `dims.beam`) per sentence and re-uploads every parameter on
+//! every artifact call. This module is the serving path:
+//!
+//! * **Packing** — [`BatchDecoder`] runs at a wider artifact batch
+//!   (`width`, normally the training batch `dims.batch`, which
+//!   `python/compile/aot.py` also exports decode artifacts at) and
+//!   packs `width / beam` sentences into one device batch: sentence
+//!   `s` owns rows `[s·beam, (s+1)·beam)`. Every artifact on the
+//!   decode path is row-wise (embedding lookup, LSTM cell, per-row
+//!   attention + softmax), so each sentence computes exactly what it
+//!   would have computed alone — the decoded tokens are identical to
+//!   `N` single-sentence calls (`rust/tests/decode_equivalence.rs`).
+//! * **Device residency** — parameters resolve through a
+//!   [`ParamBank`] (upload once per checkpoint, never invalidated:
+//!   inference weights are immutable) and each group's encoder output
+//!   block + source lengths live in a [`BufCache`] for the whole
+//!   decode loop. Only the small per-step recurrent state crosses the
+//!   host boundary each step.
+//! * **Data-parallel sharding** — [`translate_corpus`] splits a
+//!   workload into `--batch`-sized chunks and fans them out over
+//!   `--devices` worker replicas with
+//!   [`crate::parallel::exec::run_sharded`], the plan scheduler's
+//!   worker pool without the dependency graph (inference jobs are
+//!   independent). Results are stitched back in input order, so the
+//!   device count never changes the output.
+
+use super::{check_src, BeamConfig, BeamState};
+use crate::config::ModelDims;
+use crate::data::vocab::{BOS, EOS, PAD};
+use crate::model_spec::cell_din;
+use crate::parallel::exec::run_sharded;
+use crate::runtime::{keys, Arg, BufCache, DeviceBuf, Engine, Manifest, ParamBank};
+use crate::tensor::{ITensor, Tensor};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Workload shape for [`translate_corpus`].
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeOptions {
+    /// Sentences per work-queue chunk (a chunk is the unit handed to
+    /// one worker; each chunk is further packed into device groups of
+    /// `width / beam` sentences).
+    pub batch: usize,
+    /// Worker replicas decoding chunks concurrently (the inference
+    /// analogue of plan devices: 1, 2 or 4 in the paper's setup).
+    pub devices: usize,
+}
+
+impl Default for DecodeOptions {
+    fn default() -> Self {
+        DecodeOptions { batch: 32, devices: 1 }
+    }
+}
+
+/// Throughput + residency counters for one [`translate_corpus`] run
+/// (feeds `serve-bench` and `BENCH_decode.json`).
+#[derive(Debug, Clone, Default)]
+pub struct DecodeStats {
+    /// Sentences translated.
+    pub sentences: usize,
+    /// Output tokens produced (best hypotheses, no BOS/EOS).
+    pub out_tokens: usize,
+    /// Batched decode-step iterations executed across all groups.
+    pub decode_steps: u64,
+    /// Wall-clock seconds for the whole workload.
+    pub wall_s: f64,
+    /// Parameters uploaded during the run (0 on a warm bank).
+    pub param_uploads: u64,
+    /// Parameter lookups served device-resident.
+    pub param_hits: u64,
+    /// Encoder-state uploads (one `s_block` + one `srclen` per group).
+    pub state_uploads: u64,
+    /// Encoder-state lookups served device-resident.
+    pub state_hits: u64,
+}
+
+impl DecodeStats {
+    /// Sustained sentences per second.
+    pub fn sentences_per_sec(&self) -> f64 {
+        self.sentences as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Sustained output tokens per second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.out_tokens as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// Artifact batch widths usable for batched decode: every decode-path
+/// key (`attn_step_logits`, `embed_fwd`, and `lstm_cell_fwd` at each
+/// required `din`) must exist at the width.
+pub fn decode_widths(manifest: &Manifest, input_feeding: bool) -> Vec<usize> {
+    let d = &manifest.config;
+    let mut dins: Vec<usize> = (0..d.layers)
+        .flat_map(|l| {
+            [cell_din(d, false, l, input_feeding), cell_din(d, true, l, input_feeding)]
+        })
+        .collect();
+    dins.sort_unstable();
+    dins.dedup();
+    let mut widths: Vec<usize> = manifest
+        .artifacts
+        .keys()
+        .filter_map(|k| k.strip_prefix("attn_step_logits.b")?.parse().ok())
+        .filter(|&w: &usize| {
+            manifest.artifacts.contains_key(&keys::embed_fwd(w))
+                && dins
+                    .iter()
+                    .all(|&din| manifest.artifacts.contains_key(&keys::lstm_cell_fwd(din, w)))
+        })
+        .collect();
+    widths.sort_unstable();
+    widths.dedup();
+    widths
+}
+
+/// Batched beam-search decoder: many sentences per device call,
+/// device-resident parameters and encoder state.
+///
+/// One instance is single-threaded per call but `Sync`-shareable; the
+/// multi-device driver [`translate_corpus`] gives each worker replica
+/// its own instance over a shared [`Engine`] + [`ParamBank`].
+pub struct BatchDecoder<'a> {
+    engine: &'a Engine,
+    params: &'a BTreeMap<String, Tensor>,
+    bank: &'a ParamBank,
+    dims: ModelDims,
+    width: usize,
+    input_feeding: bool,
+    /// Device-resident per-group encoder state (`s_block`, `srclen`).
+    cache: BufCache,
+    /// Monotone group ids keep cache keys unique across chunks.
+    group_seq: AtomicU64,
+    decode_steps: AtomicU64,
+}
+
+impl<'a> BatchDecoder<'a> {
+    /// Build a decoder at the widest artifact batch available
+    /// (normally the training batch — `aot.py` exports the decode-path
+    /// artifacts at both the beam width and the full batch).
+    pub fn new(
+        engine: &'a Engine,
+        params: &'a BTreeMap<String, Tensor>,
+        bank: &'a ParamBank,
+        input_feeding: bool,
+    ) -> Result<Self> {
+        let widths = decode_widths(&engine.manifest, input_feeding);
+        let width = *widths
+            .last()
+            .ok_or_else(|| anyhow!("no decode-capable artifact batch width in manifest"))?;
+        Self::with_width(engine, params, bank, input_feeding, width)
+    }
+
+    /// Build a decoder at an explicit artifact batch width (must be one
+    /// of [`decode_widths`]).
+    pub fn with_width(
+        engine: &'a Engine,
+        params: &'a BTreeMap<String, Tensor>,
+        bank: &'a ParamBank,
+        input_feeding: bool,
+        width: usize,
+    ) -> Result<Self> {
+        let widths = decode_widths(&engine.manifest, input_feeding);
+        if !widths.contains(&width) {
+            return Err(anyhow!(
+                "no decode artifacts at batch width {width} (available: {widths:?})"
+            ));
+        }
+        Ok(BatchDecoder {
+            engine,
+            params,
+            bank,
+            dims: engine.dims().clone(),
+            width,
+            input_feeding,
+            cache: BufCache::new(),
+            group_seq: AtomicU64::new(0),
+            decode_steps: AtomicU64::new(0),
+        })
+    }
+
+    /// Device batch width this decoder runs at.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Sentences packed into one device batch at `beam`.
+    pub fn group_capacity(&self, beam: usize) -> usize {
+        (self.width / beam.max(1)).max(1)
+    }
+
+    /// Batched decode-step iterations executed so far.
+    pub fn decode_steps(&self) -> u64 {
+        self.decode_steps.load(Ordering::Relaxed)
+    }
+
+    /// Encoder-state cache counters `(uploads, hits)`.
+    pub fn state_counts(&self) -> (u64, u64) {
+        (self.cache.upload_count(), self.cache.hit_count())
+    }
+
+    /// Device buffer of parameter `name` (uploaded at most once for the
+    /// bank's lifetime).
+    fn pbuf(&self, name: &str) -> Result<Arc<DeviceBuf>> {
+        self.bank.get_or_upload(self.engine, name, &self.params[name])
+    }
+
+    /// Translate a batch of sentences; returns one best hypothesis per
+    /// input, in order. Sentences are packed `group_capacity` at a time
+    /// into full-width device batches.
+    pub fn translate_batch(
+        &self,
+        srcs: &[Vec<i32>],
+        cfg: &BeamConfig,
+    ) -> Result<Vec<Vec<i32>>> {
+        if cfg.beam == 0 || cfg.beam > self.width {
+            return Err(anyhow!(
+                "beam {} outside the packed decode width 1..={}",
+                cfg.beam,
+                self.width
+            ));
+        }
+        for s in srcs {
+            check_src(&self.dims, s)?;
+        }
+        let cap = self.group_capacity(cfg.beam);
+        let mut out = Vec::with_capacity(srcs.len());
+        for group in srcs.chunks(cap) {
+            out.extend(self.decode_group(group, cfg)?);
+        }
+        Ok(out)
+    }
+
+    /// Encode one packed group: row `r` carries sentence `r / beam`'s
+    /// tokens (rows of a sentence are identical at encode time, exactly
+    /// like the single-sentence path replicates its one sentence over
+    /// the whole width). Unclaimed rows carry PAD with srclen 1 — their
+    /// values are never read.
+    fn encode_group(
+        &self,
+        srcs: &[Vec<i32>],
+        beam: usize,
+    ) -> Result<(Tensor, ITensor)> {
+        let d = &self.dims;
+        let (w, m) = (self.width, d.max_src);
+        let sent_of = |r: usize| {
+            let s = r / beam;
+            if s < srcs.len() {
+                Some(s)
+            } else {
+                None
+            }
+        };
+        let srclen = ITensor::new(
+            vec![w],
+            (0..w)
+                .map(|r| sent_of(r).map_or(1, |s| srcs[s].len() as i32))
+                .collect(),
+        );
+        let emb = self.pbuf("src_emb")?;
+        // Per-layer weights resolve through the bank once, outside the
+        // timestep loop — no per-step lock traffic on the shared bank.
+        let cells: Vec<(Arc<DeviceBuf>, Arc<DeviceBuf>)> = (0..d.layers)
+            .map(|l| {
+                Ok((
+                    self.pbuf(&format!("enc_l{l}_W"))?,
+                    self.pbuf(&format!("enc_l{l}_b"))?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        let mut h: Vec<Tensor> = (0..d.layers).map(|_| Tensor::zeros(&[w, d.h])).collect();
+        let mut c: Vec<Tensor> = (0..d.layers).map(|_| Tensor::zeros(&[w, d.h])).collect();
+        let mut tops: Vec<Tensor> = Vec::with_capacity(m);
+        for t in 0..m {
+            let ids = ITensor::new(
+                vec![w],
+                (0..w)
+                    .map(|r| sent_of(r).map_or(PAD, |s| *srcs[s].get(t).unwrap_or(&PAD)))
+                    .collect(),
+            );
+            let mut x = self
+                .engine
+                .exec(&keys::embed_fwd(w), &[Arg::Buf(&emb), Arg::I(&ids)])?
+                .remove(0);
+            for l in 0..d.layers {
+                let din = cell_din(d, false, l, self.input_feeding);
+                let (cw, cb) = &cells[l];
+                let mut out = self.engine.exec(
+                    &keys::lstm_cell_fwd(din, w),
+                    &[Arg::Buf(cw), Arg::Buf(cb), Arg::F(&x), Arg::F(&h[l]), Arg::F(&c[l])],
+                )?;
+                c[l] = out.remove(1);
+                h[l] = out.remove(0);
+                x = h[l].clone();
+            }
+            tops.push(x);
+        }
+        let refs: Vec<&Tensor> = tops.iter().collect();
+        Ok((Tensor::stack_time(&refs), srclen))
+    }
+
+    /// Beam-decode one packed group of ≤ `group_capacity` sentences.
+    fn decode_group(&self, srcs: &[Vec<i32>], cfg: &BeamConfig) -> Result<Vec<Vec<i32>>> {
+        let d = &self.dims;
+        let (w, k) = (self.width, cfg.beam);
+        let (s_block, srclen) = self.encode_group(srcs, k)?;
+        // The encoder block and lengths are read by every decode step:
+        // pin them device-resident for the whole group.
+        let gid = self.group_seq.fetch_add(1, Ordering::Relaxed);
+        let sb_key = format!("g{gid}.s_block");
+        let sl_key = format!("g{gid}.srclen");
+
+        let emb = self.pbuf("tgt_emb")?;
+        let (wa, wc, wout, bout) = (
+            self.pbuf("attn_Wa")?,
+            self.pbuf("attn_Wc")?,
+            self.pbuf("attn_Wout")?,
+            self.pbuf("attn_bout")?,
+        );
+        let cells: Vec<(Arc<DeviceBuf>, Arc<DeviceBuf>)> = (0..d.layers)
+            .map(|l| {
+                Ok((
+                    self.pbuf(&format!("dec_l{l}_W"))?,
+                    self.pbuf(&format!("dec_l{l}_b"))?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+
+        let mut h: Vec<Tensor> = (0..d.layers).map(|_| Tensor::zeros(&[w, d.h])).collect();
+        let mut c: Vec<Tensor> = (0..d.layers).map(|_| Tensor::zeros(&[w, d.h])).collect();
+        let mut hc_prev = Tensor::zeros(&[w, d.h]);
+        let mut states: Vec<BeamState> =
+            srcs.iter().map(|s| BeamState::new(cfg, d, s.len())).collect();
+        let mut first_step = true;
+
+        while states.iter().any(|st| !st.is_done()) {
+            self.decode_steps.fetch_add(1, Ordering::Relaxed);
+            // Resolve the group's encoder state through the cache every
+            // step: the first resolution uploads, each later one is a
+            // counted resident hit — the observable evidence (DecodeStats
+            // `state_hits`) that decode steps stopped re-uploading the
+            // `[width, max_src, h]` block.
+            let sb_buf = self.cache.get_or_upload_f(self.engine, &sb_key, &s_block)?;
+            let sl_buf = self.cache.get_or_upload_i(self.engine, &sl_key, &srclen)?;
+            // Feed last tokens: a finished sentence keeps echoing its
+            // final tokens (rows computed but unread), unclaimed rows
+            // mirror the single-path dead padding (BOS, then EOS).
+            let last: Vec<i32> = (0..w)
+                .map(|r| {
+                    let s = r / k;
+                    if s < states.len() {
+                        states[s].last_token(r % k)
+                    } else if first_step {
+                        BOS
+                    } else {
+                        EOS
+                    }
+                })
+                .collect();
+            first_step = false;
+            let ids = ITensor::new(vec![w], last);
+            let e = self
+                .engine
+                .exec(&keys::embed_fwd(w), &[Arg::Buf(&emb), Arg::I(&ids)])?
+                .remove(0);
+            let mut x = if self.input_feeding { Tensor::concat1(&e, &hc_prev) } else { e };
+            for l in 0..d.layers {
+                let din = cell_din(d, true, l, self.input_feeding);
+                let (cw, cb) = &cells[l];
+                let mut out = self.engine.exec(
+                    &keys::lstm_cell_fwd(din, w),
+                    &[Arg::Buf(cw), Arg::Buf(cb), Arg::F(&x), Arg::F(&h[l]), Arg::F(&c[l])],
+                )?;
+                c[l] = out.remove(1);
+                h[l] = out.remove(0);
+                x = h[l].clone();
+            }
+            let mut out = self.engine.exec(
+                &keys::attn_step_logits(w),
+                &[
+                    Arg::Buf(&wa),
+                    Arg::Buf(&wc),
+                    Arg::Buf(&wout),
+                    Arg::Buf(&bout),
+                    Arg::Buf(&sb_buf),
+                    Arg::Buf(&sl_buf),
+                    Arg::F(&x),
+                ],
+            )?;
+            let alpha = out.remove(2);
+            let hc = out.remove(1);
+            let logp = out.remove(0);
+            hc_prev = hc;
+
+            // Advance each live sentence on its own rows; the global
+            // reorder is identity outside the rows that advanced.
+            let mut src_rows: Vec<usize> = (0..w).collect();
+            let mut any_moved = false;
+            for (s, st) in states.iter_mut().enumerate() {
+                if st.is_done() {
+                    continue;
+                }
+                let local = st.advance(&logp, &alpha, s * k);
+                for (j, &p) in local.iter().enumerate() {
+                    if p != j {
+                        any_moved = true;
+                    }
+                    src_rows[s * k + j] = s * k + p;
+                }
+            }
+            if any_moved {
+                for l in 0..d.layers {
+                    h[l] = h[l].gather_rows(&src_rows);
+                    c[l] = c[l].gather_rows(&src_rows);
+                }
+                hc_prev = hc_prev.gather_rows(&src_rows);
+            }
+        }
+        // The group is retired: free its device-resident encoder state.
+        self.cache.remove(&sb_key);
+        self.cache.remove(&sl_key);
+        Ok(states.iter().map(|st| st.best()).collect())
+    }
+}
+
+/// Decode a whole workload: chunk `srcs` into [`DecodeOptions::batch`]
+/// sentence chunks and shard the chunks over
+/// [`DecodeOptions::devices`] worker replicas, each running its own
+/// [`BatchDecoder`] against the shared engine and parameter bank.
+///
+/// Output order equals input order and the decoded tokens are
+/// independent of `batch` and `devices` (each sentence's beam search is
+/// self-contained), so any configuration can be checked against the
+/// single-sentence reference.
+pub fn translate_corpus(
+    engine: &Engine,
+    params: &BTreeMap<String, Tensor>,
+    bank: &ParamBank,
+    input_feeding: bool,
+    srcs: &[Vec<i32>],
+    cfg: &BeamConfig,
+    opts: &DecodeOptions,
+) -> Result<(Vec<Vec<i32>>, DecodeStats)> {
+    let batch = opts.batch.max(1);
+    let n_chunks = srcs.len().div_ceil(batch).max(1);
+    let workers = opts.devices.clamp(1, n_chunks);
+    let decoders: Vec<BatchDecoder> = (0..workers)
+        .map(|_| BatchDecoder::new(engine, params, bank, input_feeding))
+        .collect::<Result<_>>()?;
+
+    let (up0, hit0) = (bank.upload_count(), bank.hit_count());
+    let t0 = std::time::Instant::now();
+    let chunks = run_sharded(workers, n_chunks, |w, j| {
+        let lo = j * batch;
+        let hi = ((j + 1) * batch).min(srcs.len());
+        decoders[w].translate_batch(&srcs[lo..hi], cfg)
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let hyps: Vec<Vec<i32>> = chunks.into_iter().flatten().collect();
+    let mut stats = DecodeStats {
+        sentences: hyps.len(),
+        out_tokens: hyps.iter().map(Vec::len).sum(),
+        wall_s,
+        param_uploads: bank.upload_count() - up0,
+        param_hits: bank.hit_count() - hit0,
+        ..Default::default()
+    };
+    for dec in &decoders {
+        let (su, sh) = dec.state_counts();
+        stats.decode_steps += dec.decode_steps();
+        stats.state_uploads += su;
+        stats.state_hits += sh;
+    }
+    Ok((hyps, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_with(widths: &[usize]) -> Manifest {
+        // Dims: d=4, h=8, layers=2, IF off → dins {4, 8}.
+        let mut artifacts = String::new();
+        for &w in widths {
+            for key in [
+                format!("attn_step_logits.b{w}"),
+                format!("embed_fwd.b{w}"),
+                format!("lstm_cell_fwd.din4.b{w}"),
+                format!("lstm_cell_fwd.din8.b{w}"),
+            ] {
+                artifacts.push_str(&format!(
+                    r#""{key}": {{"file":"x.hlo.txt","inputs":[],"outputs":[]}},"#
+                ));
+            }
+        }
+        artifacts.pop(); // trailing comma
+        let json = format!(
+            r#"{{"config": {{"name":"t","d":4,"h":8,"layers":2,"vocab":16,
+                 "batch":8,"gpus":4,"shard":2,"max_src":6,"max_tgt":6,"beam":4}},
+                "param_count": {{"embedding":0,"lstm":0,"attention_softmax":0,"total":0}},
+                "artifacts": {{{artifacts}}}}}"#
+        );
+        Manifest::from_json_text(&json).unwrap()
+    }
+
+    #[test]
+    fn decode_widths_require_all_keys() {
+        let m = manifest_with(&[4, 8]);
+        assert_eq!(decode_widths(&m, false), vec![4, 8]);
+        // Input-feeding needs din d+h=12 cells, which don't exist.
+        assert_eq!(decode_widths(&m, true), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn decode_widths_empty_without_logits() {
+        let json = r#"{"config": {"name":"t","d":4,"h":8,"layers":1,"vocab":16,
+             "batch":8,"gpus":4,"shard":2,"max_src":6,"max_tgt":6,"beam":4},
+            "param_count": {"embedding":0,"lstm":0,"attention_softmax":0,"total":0},
+            "artifacts": {}}"#;
+        let m = Manifest::from_json_text(json).unwrap();
+        assert!(decode_widths(&m, false).is_empty());
+    }
+}

@@ -1,8 +1,24 @@
-//! Beam-search decoder over the AOT artifacts (Tables 4-5).
+//! Beam-search decoding over the AOT artifacts (Tables 4-5 and the
+//! serving path).
 //!
-//! Drives the same per-cell / per-step artifacts the trainer uses, at
-//! the decode batch size (= widest beam, smaller beams padded with dead
-//! rows), entirely from rust — python is never on the decode path.
+//! Two decode engines share one per-sentence beam core (`BeamState`):
+//!
+//! * [`Decoder`] — the reference single-sentence path. One sentence
+//!   occupies the whole decode-width device batch (`dims.beam` rows;
+//!   smaller beams padded with dead rows) and every parameter is
+//!   re-uploaded per artifact call. Simple, slow, and the semantic
+//!   ground truth the batched engine is tested against.
+//! * [`batch::BatchDecoder`] — the batched, multi-device inference
+//!   engine: packs `width / beam` sentences into one device batch,
+//!   keeps parameters ([`crate::runtime::ParamBank`]) and per-group
+//!   encoder state ([`crate::runtime::BufCache`]) device-resident
+//!   across decode steps, and shards a corpus over worker replicas via
+//!   [`crate::parallel::exec::run_sharded`]. Token-identical to the
+//!   single-sentence path by construction, asserted by
+//!   `rust/tests/decode_equivalence.rs`.
+//!
+//! Both drive the same per-cell / per-step artifacts the trainer uses —
+//! python is never on the decode path.
 //!
 //! Two score-normalization families, matching the paper's Table 4:
 //! * **Marian** (used for HybridNMT rows): score = logp / len^α;
@@ -11,21 +27,33 @@
 //!   `β · Σ_j log(min(Σ_i α_ij, 1))` computed from the attention
 //!   weights the `attn_step_logits` artifact emits.
 
+pub mod batch;
+
+pub use batch::{translate_corpus, BatchDecoder, DecodeOptions, DecodeStats};
+
 use crate::config::ModelDims;
 use crate::data::vocab::{BOS, EOS, PAD};
 use crate::model_spec::cell_din;
 use crate::runtime::{keys, Arg, Engine};
 use crate::tensor::{ITensor, Tensor};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 /// Score normalization (Table 4 hyperparameters).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LengthNorm {
     /// Marian: divide the model score by `len^alpha`.
-    Marian { alpha: f64 },
+    Marian {
+        /// Length-normalization exponent.
+        alpha: f64,
+    },
     /// GNMT: length normalization `((5+len)/6)^alpha` + coverage `beta`.
-    Gnmt { alpha: f64, beta: f64 },
+    Gnmt {
+        /// Length-normalization exponent.
+        alpha: f64,
+        /// Coverage-penalty weight (0 disables the penalty).
+        beta: f64,
+    },
 }
 
 impl LengthNorm {
@@ -52,12 +80,17 @@ impl LengthNorm {
 /// Beam-search settings.
 #[derive(Debug, Clone, Copy)]
 pub struct BeamConfig {
+    /// Beam width (candidate hypotheses kept per step).
     pub beam: usize,
+    /// Requested maximum target length. Always additionally clamped to
+    /// the model's trained maximum (`ModelDims::max_tgt`) — the
+    /// artifacts cannot step past the shapes they were compiled at.
     pub max_len: usize,
+    /// Score normalization applied when comparing finished hypotheses.
     pub norm: LengthNorm,
 }
 
-/// One hypothesis.
+/// One hypothesis (one row of a sentence's beam).
 #[derive(Debug, Clone)]
 struct Hyp {
     tokens: Vec<i32>,
@@ -74,15 +107,224 @@ struct Finished {
     score: f64,
 }
 
-/// Artifact-driven decoder for one trained model.
+/// Per-sentence beam bookkeeping, shared verbatim by the
+/// single-sentence [`Decoder`] and the batched [`batch::BatchDecoder`]
+/// so the two paths cannot drift: candidate generation, sorting,
+/// EOS/coverage handling and final scoring all live here.
+///
+/// The state owns exactly `beam` hypothesis rows. Device-batch rows
+/// beyond the beam (single-sentence padding, other sentences in a
+/// packed batch) are the caller's concern — they never contribute
+/// candidates.
+pub(crate) struct BeamState {
+    beam: usize,
+    /// Effective cap for this sentence (heuristic + trained max).
+    max_len: usize,
+    max_src: usize,
+    norm: LengthNorm,
+    vocab: usize,
+    hyps: Vec<Hyp>,
+    finished: Vec<Finished>,
+    steps_taken: usize,
+    done: bool,
+}
+
+impl BeamState {
+    fn new(cfg: &BeamConfig, dims: &ModelDims, src_len: usize) -> Self {
+        // Standard relative length cap: targets longer than ~2x the
+        // source never win after normalization; skipping those steps
+        // halves decode latency on short inputs. The trained artifact
+        // shape (`max_tgt`) is a hard ceiling on top.
+        let max_len = cfg.max_len.min(dims.max_tgt).min(2 * src_len + 3);
+        let mut st = BeamState {
+            beam: cfg.beam,
+            max_len,
+            max_src: dims.max_src,
+            norm: cfg.norm,
+            vocab: dims.vocab,
+            // Row 0 starts live; the rest are dead until the first
+            // expansion fills them with real candidates.
+            hyps: (0..cfg.beam)
+                .map(|i| Hyp {
+                    tokens: vec![BOS],
+                    logp: if i == 0 { 0.0 } else { f64::NEG_INFINITY },
+                    coverage: vec![0.0; dims.max_src],
+                    alive: i == 0,
+                })
+                .collect(),
+            finished: Vec::new(),
+            steps_taken: 0,
+            done: false,
+        };
+        // A zero-length cap never steps the device: the lone BOS row
+        // force-finishes immediately (historical behavior).
+        if st.max_len == 0 {
+            st.finalize();
+        }
+        st
+    }
+
+    /// This sentence needs no further device steps.
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Last token of hypothesis row `i` — the decoder input for the
+    /// next step.
+    fn last_token(&self, i: usize) -> i32 {
+        *self.hyps[i].tokens.last().unwrap()
+    }
+
+    /// Expand one decode step from this sentence's rows of the logits /
+    /// attention blocks. `logp` and `alpha` are indexed by
+    /// `row0 + local_row`: the caller passes the full `[rows, vocab]` /
+    /// `[rows, max_src]` device outputs plus this sentence's base row.
+    ///
+    /// Returns the *local* parent-row gather indices (length `beam`)
+    /// the caller must apply to the recurrent state rows. Finalizes the
+    /// sentence (forced EOS on survivors) when the length cap is hit or
+    /// every row finished.
+    fn advance(&mut self, logp: &Tensor, alpha: &Tensor, row0: usize) -> Vec<usize> {
+        debug_assert!(!self.done);
+        let v = self.vocab;
+        // Expand: all (row, token) candidates from live rows.
+        let mut cands: Vec<(f64, usize, i32)> = Vec::new();
+        for (row, hyp) in self.hyps.iter().enumerate() {
+            if !hyp.alive {
+                continue;
+            }
+            let lp_row = &logp.data()[(row0 + row) * v..(row0 + row + 1) * v];
+            // Top-(beam) per row is plenty (global top-beam ⊆ union).
+            // Selection instead of a full vocab sort — O(V + k log k),
+            // on the serving hot path — with ties broken by token id so
+            // the order is a well-defined total order.
+            let by_score = |&a: &usize, &b: &usize| {
+                lp_row[b]
+                    .partial_cmp(&lp_row[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            };
+            let take = self.beam.min(v);
+            let mut idx: Vec<usize> = (0..v).collect();
+            if take < v {
+                idx.select_nth_unstable_by(take, by_score);
+            }
+            idx[..take].sort_unstable_by(by_score);
+            for &tok in &idx[..take] {
+                cands.push((hyp.logp + lp_row[tok] as f64, row, tok as i32));
+            }
+        }
+        cands.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        cands.truncate(self.beam);
+
+        // Rebuild hypotheses + report the state-row reorder.
+        let mut new_hyps: Vec<Hyp> = Vec::with_capacity(self.beam);
+        let mut src_rows: Vec<usize> = Vec::with_capacity(self.beam);
+        for &(score, row, tok) in &cands {
+            let parent = &self.hyps[row];
+            let mut coverage = parent.coverage.clone();
+            for (j, cv) in coverage.iter_mut().enumerate() {
+                *cv += alpha.data()[(row0 + row) * self.max_src + j];
+            }
+            let mut tokens = parent.tokens.clone();
+            tokens.push(tok);
+            if tok == EOS {
+                let hyp_len = tokens.len() - 2; // minus BOS, EOS
+                self.finished.push(Finished {
+                    tokens: tokens[1..tokens.len() - 1].to_vec(),
+                    score: self.norm.score(score, hyp_len.max(1), &coverage),
+                });
+                // Dead row placeholder keeps the batch rectangular.
+                new_hyps.push(Hyp { tokens, logp: f64::NEG_INFINITY, coverage, alive: false });
+            } else {
+                new_hyps.push(Hyp { tokens, logp: score, coverage, alive: true });
+            }
+            src_rows.push(row);
+        }
+        // Fewer candidates than rows can only happen if no row was
+        // live, and then the caller should not have stepped us.
+        while new_hyps.len() < self.beam {
+            new_hyps.push(Hyp {
+                tokens: vec![BOS, EOS],
+                logp: f64::NEG_INFINITY,
+                coverage: vec![0.0; self.max_src],
+                alive: false,
+            });
+            src_rows.push(0);
+        }
+        self.hyps = new_hyps;
+        self.steps_taken += 1;
+        if self.steps_taken >= self.max_len || self.hyps.iter().all(|h| !h.alive) {
+            self.finalize();
+        }
+        src_rows
+    }
+
+    /// Unfinished survivors compete too (forced-EOS at max length).
+    fn finalize(&mut self) {
+        for hyp in &self.hyps {
+            if hyp.alive {
+                let toks = hyp.tokens[1..].to_vec();
+                self.finished.push(Finished {
+                    score: self.norm.score(hyp.logp, toks.len().max(1), &hyp.coverage),
+                    tokens: toks,
+                });
+            }
+        }
+        self.done = true;
+    }
+
+    /// Best finished hypothesis (empty when nothing finished). Ties
+    /// keep the earliest-finished candidate (the historical stable-sort
+    /// behavior).
+    fn best(&self) -> Vec<i32> {
+        let mut best: Option<&Finished> = None;
+        for f in &self.finished {
+            if best.map_or(true, |b| f.score > b.score) {
+                best = Some(f);
+            }
+        }
+        best.map(|f| f.tokens.clone()).unwrap_or_default()
+    }
+}
+
+/// Validate a source sentence against the trained artifact shapes.
+/// Oversize inputs are an error, not a silent truncation: the encoder
+/// artifacts were compiled at `max_src` and cannot represent the tail.
+pub(crate) fn check_src(dims: &ModelDims, src_ids: &[i32]) -> Result<()> {
+    if src_ids.is_empty() {
+        return Err(anyhow!("empty source sentence"));
+    }
+    if src_ids.len() > dims.max_src {
+        return Err(anyhow!(
+            "source sentence has {} tokens but the model was trained with max_src = {} \
+             (re-export artifacts with a larger shape or split the input)",
+            src_ids.len(),
+            dims.max_src
+        ));
+    }
+    Ok(())
+}
+
+/// Artifact-driven single-sentence decoder for one trained model.
+///
+/// This is the reference path: one sentence per call, parameters
+/// re-uploaded per artifact invocation. For throughput, use
+/// [`batch::BatchDecoder`] / [`batch::translate_corpus`].
 pub struct Decoder<'a> {
     engine: &'a Engine,
     params: &'a BTreeMap<String, Tensor>,
     dims: ModelDims,
+    /// Whether the decoder cells consume `[embedding ; attention]`
+    /// (input-feeding, baseline/HybridNMTIF checkpoints) or the
+    /// embedding alone (HybridNMT checkpoints).
     pub input_feeding: bool,
 }
 
 impl<'a> Decoder<'a> {
+    /// Wrap a trained parameter set. `input_feeding` must match the
+    /// strategy the checkpoint was trained with
+    /// (`Strategy::uses_input_feeding`).
     pub fn new(
         engine: &'a Engine,
         params: &'a BTreeMap<String, Tensor>,
@@ -91,7 +333,8 @@ impl<'a> Decoder<'a> {
         Decoder { engine, params, dims: engine.dims().clone(), input_feeding }
     }
 
-    /// Longest target the artifact shapes allow.
+    /// Longest target the trained artifact shapes allow. Decoding never
+    /// steps past this, whatever `BeamConfig::max_len` asks for.
     pub fn max_len(&self) -> usize {
         self.dims.max_tgt
     }
@@ -105,7 +348,6 @@ impl<'a> Decoder<'a> {
         let d = &self.dims;
         let bw = d.beam;
         let m = d.max_src;
-        assert!(src_ids.len() <= m, "source too long for artifact shape");
         let mut padded = vec![PAD; m];
         padded[..src_ids.len()].copy_from_slice(src_ids);
         let srclen = ITensor::new(vec![bw], vec![src_ids.len() as i32; bw]);
@@ -142,38 +384,45 @@ impl<'a> Decoder<'a> {
         Ok((Tensor::stack_time(&refs), srclen))
     }
 
-    /// Translate one source sentence; returns target token ids (no BOS/EOS).
+    /// Translate one source sentence; returns target token ids (no
+    /// BOS/EOS). Errors when the source is empty or longer than the
+    /// trained `max_src`, or when `cfg.beam` exceeds the artifact
+    /// decode width.
     pub fn translate(&self, src_ids: &[i32], cfg: &BeamConfig) -> Result<Vec<i32>> {
         let d = &self.dims;
         let bw = d.beam;
-        assert!(cfg.beam <= bw, "beam {} exceeds artifact width {bw}", cfg.beam);
-        // Standard relative length cap: targets longer than ~2x the
-        // source never win after normalization; skipping those steps
-        // halves decode latency on short inputs.
-        let max_len = cfg.max_len.min(d.max_tgt).min(2 * src_ids.len() + 3);
+        check_src(d, src_ids)?;
+        if cfg.beam == 0 || cfg.beam > bw {
+            return Err(anyhow!(
+                "beam {} outside the artifact decode width 1..={bw}",
+                cfg.beam
+            ));
+        }
         let (s_block, srclen) = self.encode(src_ids)?;
 
         let mut h: Vec<Tensor> = (0..d.layers).map(|_| Tensor::zeros(&[bw, d.h])).collect();
         let mut c: Vec<Tensor> = (0..d.layers).map(|_| Tensor::zeros(&[bw, d.h])).collect();
         let mut hc_prev = Tensor::zeros(&[bw, d.h]);
 
-        // Row 0 starts live; the rest are dead until the first expansion.
-        let mut hyps: Vec<Hyp> = (0..bw)
-            .map(|i| Hyp {
-                tokens: vec![BOS],
-                logp: if i == 0 { 0.0 } else { f64::NEG_INFINITY },
-                coverage: vec![0.0; d.max_src],
-                alive: i == 0,
-            })
-            .collect();
-        let mut finished: Vec<Finished> = Vec::new();
+        let mut state = BeamState::new(cfg, d, src_ids.len());
+        let mut first_step = true;
 
-        for _step in 0..max_len {
-            if hyps.iter().all(|x| !x.alive) {
-                break;
-            }
-            // Feed last tokens.
-            let last: Vec<i32> = hyps.iter().map(|x| *x.tokens.last().unwrap()).collect();
+        while !state.is_done() {
+            // Feed last tokens; padding rows beyond the beam mirror the
+            // historical dead-row contents (BOS on the first step, EOS
+            // after) — their logits are never read.
+            let last: Vec<i32> = (0..bw)
+                .map(|r| {
+                    if r < cfg.beam {
+                        state.last_token(r)
+                    } else if first_step {
+                        BOS
+                    } else {
+                        EOS
+                    }
+                })
+                .collect();
+            first_step = false;
             let ids = ITensor::new(vec![bw], last);
             let emb = self
                 .engine
@@ -217,84 +466,18 @@ impl<'a> Decoder<'a> {
             let logp = out.remove(0);
             hc_prev = hc;
 
-            // Expand: all (row, token) candidates from live rows.
-            let v = d.vocab;
-            let mut cands: Vec<(f64, usize, i32)> = Vec::new();
-            for (row, hyp) in hyps.iter().enumerate() {
-                if !hyp.alive {
-                    continue;
-                }
-                let lp_row = &logp.data()[row * v..(row + 1) * v];
-                // Top-(beam) per row is plenty (global top-beam ⊆ union).
-                let mut idx: Vec<usize> = (0..v).collect();
-                idx.sort_unstable_by(|&a, &b| {
-                    lp_row[b].partial_cmp(&lp_row[a]).unwrap_or(std::cmp::Ordering::Equal)
-                });
-                for &tok in idx.iter().take(cfg.beam) {
-                    cands.push((hyp.logp + lp_row[tok] as f64, row, tok as i32));
-                }
-            }
-            cands.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
-            cands.truncate(cfg.beam);
-
-            // Rebuild hypotheses + reorder the recurrent state rows.
-            let mut new_hyps: Vec<Hyp> = Vec::with_capacity(bw);
-            let mut src_rows: Vec<usize> = Vec::with_capacity(bw);
-            for &(score, row, tok) in &cands {
-                let parent = &hyps[row];
-                let mut coverage = parent.coverage.clone();
-                for (j, cv) in coverage.iter_mut().enumerate() {
-                    *cv += alpha.data()[row * d.max_src + j];
-                }
-                let mut tokens = parent.tokens.clone();
-                tokens.push(tok);
-                if tok == EOS {
-                    let hyp_len = tokens.len() - 2; // minus BOS, EOS
-                    finished.push(Finished {
-                        tokens: tokens[1..tokens.len() - 1].to_vec(),
-                        score: cfg.norm.score(score, hyp_len.max(1), &coverage),
-                    });
-                    // Dead row placeholder keeps the batch rectangular.
-                    new_hyps.push(Hyp {
-                        tokens,
-                        logp: f64::NEG_INFINITY,
-                        coverage,
-                        alive: false,
-                    });
-                } else {
-                    new_hyps.push(Hyp { tokens, logp: score, coverage, alive: true });
-                }
-                src_rows.push(row);
-            }
-            while new_hyps.len() < bw {
-                new_hyps.push(Hyp {
-                    tokens: vec![BOS, EOS],
-                    logp: f64::NEG_INFINITY,
-                    coverage: vec![0.0; d.max_src],
-                    alive: false,
-                });
-                src_rows.push(0);
-            }
-            hyps = new_hyps;
+            let local = state.advance(&logp, &alpha, 0);
+            // Reorder the recurrent state rows; padding rows gather
+            // parent row 0 (dead — values unread).
+            let src_rows: Vec<usize> =
+                (0..bw).map(|r| if r < cfg.beam { local[r] } else { 0 }).collect();
             for l in 0..d.layers {
                 h[l] = h[l].gather_rows(&src_rows);
                 c[l] = c[l].gather_rows(&src_rows);
             }
             hc_prev = hc_prev.gather_rows(&src_rows);
         }
-
-        // Unfinished survivors compete too (forced-EOS at max length).
-        for hyp in &hyps {
-            if hyp.alive {
-                let toks = hyp.tokens[1..].to_vec();
-                finished.push(Finished {
-                    score: cfg.norm.score(hyp.logp, toks.len().max(1), &hyp.coverage),
-                    tokens: toks,
-                });
-            }
-        }
-        finished.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
-        Ok(finished.first().map(|f| f.tokens.clone()).unwrap_or_default())
+        Ok(state.best())
     }
 }
 
@@ -334,5 +517,81 @@ mod tests {
             let cov = vec![0.5f32; 3];
             assert!(norm.score(-3.0, 4, &cov) > norm.score(-4.0, 4, &cov));
         }
+    }
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "t".into(),
+            d: 4,
+            h: 8,
+            layers: 1,
+            vocab: 12,
+            batch: 8,
+            gpus: 4,
+            shard: 2,
+            max_src: 6,
+            max_tgt: 10,
+            beam: 4,
+        }
+    }
+
+    fn cfg(beam: usize) -> BeamConfig {
+        BeamConfig { beam, max_len: 100, norm: LengthNorm::Marian { alpha: 1.0 } }
+    }
+
+    #[test]
+    fn beam_state_clamps_to_trained_max() {
+        let d = dims();
+        // Long source: the heuristic 2*len+3 exceeds max_tgt, so the
+        // trained shape must win.
+        let st = BeamState::new(&cfg(2), &d, 6);
+        assert_eq!(st.max_len, d.max_tgt);
+        // Short source: the heuristic wins.
+        let st = BeamState::new(&cfg(2), &d, 1);
+        assert_eq!(st.max_len, 5);
+    }
+
+    #[test]
+    fn beam_state_greedy_follows_argmax() {
+        let d = dims();
+        let mut st = BeamState::new(&cfg(1), &d, 2);
+        // Uniform alpha; logits peak at token 7 then EOS.
+        let alpha = Tensor::zeros(&[1, d.max_src]);
+        let mut lp = vec![-10.0f32; d.vocab];
+        lp[7] = -0.1;
+        let logp = Tensor::new(vec![1, d.vocab], lp);
+        let rows = st.advance(&logp, &alpha, 0);
+        assert_eq!(rows, vec![0]);
+        assert!(!st.is_done());
+        let mut lp = vec![-10.0f32; d.vocab];
+        lp[EOS as usize] = -0.05;
+        let logp = Tensor::new(vec![1, d.vocab], lp);
+        st.advance(&logp, &alpha, 0);
+        assert!(st.is_done());
+        assert_eq!(st.best(), vec![7]);
+    }
+
+    #[test]
+    fn beam_state_forced_eos_at_cap() {
+        let d = dims();
+        let mut st = BeamState::new(&cfg(1), &d, 1); // cap = 5
+        let alpha = Tensor::zeros(&[1, d.max_src]);
+        let mut lp = vec![-10.0f32; d.vocab];
+        lp[5] = -0.1; // never EOS
+        let logp = Tensor::new(vec![1, d.vocab], lp);
+        for _ in 0..5 {
+            assert!(!st.is_done());
+            st.advance(&logp, &alpha, 0);
+        }
+        assert!(st.is_done());
+        assert_eq!(st.best(), vec![5; 5]);
+    }
+
+    #[test]
+    fn check_src_rejects_oversize_and_empty() {
+        let d = dims();
+        assert!(check_src(&d, &[]).is_err());
+        assert!(check_src(&d, &[4; 7]).is_err());
+        assert!(check_src(&d, &[4; 6]).is_ok());
     }
 }

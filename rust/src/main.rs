@@ -11,13 +11,13 @@
 
 use anyhow::{anyhow, Context, Result};
 use hybridnmt::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig};
-use hybridnmt::decode::{BeamConfig, Decoder, LengthNorm};
+use hybridnmt::decode::{translate_corpus, BeamConfig, DecodeOptions, Decoder, LengthNorm};
 use hybridnmt::metrics::corpus_bleu;
 use hybridnmt::parallel::build_plan;
 use hybridnmt::report;
-use hybridnmt::runtime::Engine;
+use hybridnmt::runtime::{Engine, ParamBank};
 use hybridnmt::sim::simulate;
-use hybridnmt::train::{checkpoint, Trainer};
+use hybridnmt::train::{checkpoint, init_params, Trainer};
 
 struct Args {
     cmd: String,
@@ -73,6 +73,10 @@ COMMANDS
              [--sequential (disable the parallel plan executor)]
   translate  --ckpt file.bin [--model small] [--beam B] [--alpha A]
              [--dataset D] [--strategy S (sets input-feeding)]
+             [--batch N --devices D (batched multi-device inference engine)]
+  serve-bench  [--ckpt file.bin] [--model small] [--beam B] [--batch N]
+             [--devices D] [--n sentences] (sustained decode throughput;
+             writes BENCH_decode.json + results/decode_bench.{txt,csv})
   sim        --strategy S [--batch B] [--trace out.csv] (schedule breakdown)
   table1     [--sentences14 N] [--sentences17 N]
   table2     [--model tiny|small|paper]
@@ -141,6 +145,7 @@ fn run() -> Result<()> {
         }
         "train" => cmd_train(&args),
         "translate" => cmd_translate(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "sim" => cmd_sim(&args),
         "table1" => {
             let dims = ModelDims::paper();
@@ -248,23 +253,62 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_translate(args: &Args) -> Result<()> {
     let engine = load_engine(args)?;
     let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
-    let params = checkpoint::load(std::path::Path::new(ckpt))?;
     let strategy: Strategy = args.str_or("strategy", "hybrid").parse()?;
+    let input_feeding = strategy.uses_input_feeding();
     let exp = build_experiment(args, &engine)?;
     let corpus = report::make_corpus(&exp.data, &exp.model);
     let batcher = report::make_batcher(&exp, &corpus);
-    let decoder = Decoder::new(&engine, &params, strategy.uses_input_feeding());
     let alpha: f64 = args.str_or("alpha", "1.0").parse()?;
+    let beam = args.usize("beam", 6)?;
+    // Same beam envelope on both paths: the batched engine could pack
+    // wider, but beams beyond the artifact decode width have no
+    // single-sentence reference to be checked against.
+    if beam == 0 || beam > engine.dims().beam {
+        return Err(anyhow!(
+            "--beam {beam} outside this model's decode width 1..={}",
+            engine.dims().beam
+        ));
+    }
     let cfg = BeamConfig {
-        beam: args.usize("beam", 6)?,
-        max_len: decoder.max_len(),
+        beam,
+        max_len: engine.dims().max_tgt,
         norm: LengthNorm::Marian { alpha },
     };
+    let batch = args.usize("batch", 1)?;
+    let devices = args.usize("devices", 1)?;
     let n = args.usize("n", 50)?.min(batcher.test.len());
+    let srcs: Vec<Vec<i32>> = batcher.test[..n].iter().map(|e| e.src.clone()).collect();
+
+    let hyps: Vec<Vec<i32>> = if batch > 1 || devices > 1 {
+        // Batched multi-device engine: checkpoint parameters uploaded
+        // once into a bank, encoder state device-resident per group.
+        let (params, bank) = checkpoint::load_resident(std::path::Path::new(ckpt), &engine)?;
+        let opts = DecodeOptions { batch, devices };
+        let (hyps, stats) =
+            translate_corpus(&engine, &params, &bank, input_feeding, &srcs, &cfg, &opts)?;
+        println!(
+            "batched decode: {} sentences in {:.2}s = {:.2} sent/s \
+             (batch {batch}, {devices} workers, {} decode steps; \
+             param uploads/hits {}/{}, state uploads/hits {}/{})\n",
+            stats.sentences,
+            stats.wall_s,
+            stats.sentences_per_sec(),
+            stats.decode_steps,
+            stats.param_uploads,
+            stats.param_hits,
+            stats.state_uploads,
+            stats.state_hits
+        );
+        hyps
+    } else {
+        let params = checkpoint::load(std::path::Path::new(ckpt))?;
+        let decoder = Decoder::new(&engine, &params, input_feeding);
+        srcs.iter().map(|s| decoder.translate(s, &cfg)).collect::<Result<_>>()?
+    };
+
     let mut pairs = Vec::new();
-    for e in &batcher.test[..n] {
-        let hyp = decoder.translate(&e.src, &cfg)?;
-        let hyp_s = batcher.vocab.decode(&hyp);
+    for (e, hyp) in batcher.test[..n].iter().zip(&hyps) {
+        let hyp_s = batcher.vocab.decode(hyp);
         let ref_s = batcher.vocab.decode(&e.tgt);
         println!("SRC: {}", batcher.vocab.decode(&e.src));
         println!("HYP: {hyp_s}");
@@ -272,6 +316,59 @@ fn cmd_translate(args: &Args) -> Result<()> {
         pairs.push((hyp_s, ref_s));
     }
     println!("test BLEU over {n} sentences: {:.2}", corpus_bleu(&pairs));
+    Ok(())
+}
+
+/// Sustained-translation throughput: the acceptance gate for the
+/// batched inference engine. Decodes the same sentence set with the
+/// single-sentence reference and the batched engine at batch {1, N} ×
+/// devices {1, 2, .., D}, verifies token-identity, and writes
+/// `BENCH_decode.json`.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let strategy: Strategy = args.str_or("strategy", "hybrid").parse()?;
+    let input_feeding = strategy.uses_input_feeding();
+    let exp = build_experiment(args, &engine)?;
+    let corpus = report::make_corpus(&exp.data, &exp.model);
+    let batcher = report::make_batcher(&exp, &corpus);
+    // Throughput does not depend on the weight values, so the bench
+    // runs fine without a trained checkpoint.
+    let (params, bank) = match args.get("ckpt") {
+        Some(p) => checkpoint::load_resident(std::path::Path::new(p), &engine)?,
+        None => (init_params(&exp, input_feeding), ParamBank::new()),
+    };
+    let beam = args.usize("beam", 4)?;
+    if beam == 0 || beam > engine.dims().beam {
+        return Err(anyhow!(
+            "--beam {beam} outside this model's decode width 1..={}",
+            engine.dims().beam
+        ));
+    }
+    let cfg = BeamConfig {
+        beam,
+        max_len: engine.dims().max_tgt,
+        norm: LengthNorm::Marian { alpha: args.str_or("alpha", "1.0").parse()? },
+    };
+    let n = args.usize("n", 64)?.min(batcher.test.len());
+    let srcs: Vec<Vec<i32>> = batcher.test[..n].iter().map(|e| e.src.clone()).collect();
+
+    let batch = args.usize("batch", 32)?.max(1);
+    let max_dev = args.usize("devices", 4)?.max(1);
+    let batches: Vec<usize> = if batch > 1 { vec![1, batch] } else { vec![1] };
+    let mut devices = vec![1usize];
+    let mut dv = 2;
+    while dv <= max_dev {
+        devices.push(dv);
+        dv *= 2;
+    }
+    if *devices.last().unwrap() != max_dev {
+        devices.push(max_dev);
+    }
+    let out = report::decode_bench(
+        &engine, &params, &bank, input_feeding, &srcs, &cfg, &batches, &devices,
+    )?;
+    print!("{out}");
+    println!("wrote BENCH_decode.json");
     Ok(())
 }
 
@@ -349,15 +446,16 @@ fn cmd_table4(args: &Args) -> Result<()> {
 fn cmd_table5(args: &Args) -> Result<()> {
     let engine = load_engine(args)?;
     let steps = args.usize("steps", 300)?;
-    let mut rows: Vec<(String, f64, f64)> = vec![
-        ("Luong et al. (2015) [paper ref]".into(), 20.9, f64::NAN),
-        ("GNMT / Wu et al. (2016) [paper ref]".into(), 24.61, f64::NAN),
+    let mut rows: Vec<(String, f64, f64, f64)> = vec![
+        ("Luong et al. (2015) [paper ref]".into(), 20.9, f64::NAN, f64::NAN),
+        ("GNMT / Wu et al. (2016) [paper ref]".into(), 24.61, f64::NAN, f64::NAN),
     ];
     for (label, strategy) in [
         ("OpenNMT-lua-like baseline (ours)", Strategy::Single),
         ("HybridNMT (ours)", Strategy::Hybrid),
     ] {
         let mut bleus = [0.0f64; 2];
+        let (mut dec_sents, mut dec_secs) = (0usize, 0.0f64);
         for (di, ds) in ["wmt14-sim", "wmt17-sim"].iter().enumerate() {
             let mut sub = Args { cmd: "train".into(), flags: args.flags.clone() };
             sub.flags.insert("strategy".into(), strategy.key().into());
@@ -371,21 +469,43 @@ fn cmd_table5(args: &Args) -> Result<()> {
             let mut batcher = report::make_batcher(&exp, &corpus);
             let mut trainer = Trainer::new(&engine, &exp)?;
             trainer.run(&mut batcher, |_| {})?;
-            let decoder =
-                Decoder::new(&engine, &trainer.params, strategy.uses_input_feeding());
+            // Test decode rides the batched multi-device engine (token-
+            // identical to single-sentence decoding); its wall clock
+            // feeds the table's decode-throughput column.
             let cfg = BeamConfig {
                 beam: 6.min(engine.dims().beam),
-                max_len: decoder.max_len(),
+                max_len: engine.dims().max_tgt,
                 norm: LengthNorm::Marian { alpha: 1.0 },
             };
-            let mut pairs = Vec::new();
-            for e in batcher.test.iter().take(120) {
-                let hyp = decoder.translate(&e.src, &cfg)?;
-                pairs.push((batcher.vocab.decode(&hyp), batcher.vocab.decode(&e.tgt)));
-            }
+            let srcs: Vec<Vec<i32>> =
+                batcher.test.iter().take(120).map(|e| e.src.clone()).collect();
+            let bank = ParamBank::new();
+            let opts = DecodeOptions { batch: 32, devices: engine.dims().gpus };
+            let (hyps, stats) = translate_corpus(
+                &engine,
+                &trainer.params,
+                &bank,
+                strategy.uses_input_feeding(),
+                &srcs,
+                &cfg,
+                &opts,
+            )?;
+            let pairs: Vec<(String, String)> = batcher
+                .test
+                .iter()
+                .zip(&hyps)
+                .map(|(e, hyp)| (batcher.vocab.decode(hyp), batcher.vocab.decode(&e.tgt)))
+                .collect();
             bleus[di] = corpus_bleu(&pairs);
+            dec_sents += stats.sentences;
+            dec_secs += stats.wall_s;
         }
-        rows.push((label.to_string(), bleus[0], bleus[1]));
+        rows.push((
+            label.to_string(),
+            bleus[0],
+            bleus[1],
+            dec_sents as f64 / dec_secs.max(1e-9),
+        ));
     }
     print!("{}", report::table5(&rows));
     Ok(())

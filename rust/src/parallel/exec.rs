@@ -330,6 +330,70 @@ fn collect_out(plan: &Plan, mut take: impl FnMut(Slot) -> Result<Value>) -> Resu
 }
 
 // ------------------------------------------------------------------------
+// Sharded fan-out (inference driver)
+// ------------------------------------------------------------------------
+
+/// Run `jobs` independent tasks on `workers` device-worker threads and
+/// return the per-job results in job order.
+///
+/// This is the plan scheduler's worker pool stripped of the dependency
+/// graph: inference workloads (batched decode) have no cross-job edges,
+/// so every job is ready at once and job `j` is statically assigned to
+/// worker `j % workers` — a deterministic round-robin shard, mirroring
+/// how the data-parallel strategies shard a training batch across plan
+/// devices. The shared [`Engine`] is `Sync` (PR "device-resident
+/// parameter buffers"), which is what lets the replicas run
+/// concurrently against one artifact cache.
+///
+/// `f(worker, job)` must be safe to call concurrently from different
+/// threads for different jobs. The first error aborts the remaining
+/// jobs (already-running ones finish) and is returned.
+pub fn run_sharded<T, F>(workers: usize, jobs: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize, usize) -> Result<T> + Sync,
+{
+    if jobs == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.clamp(1, jobs);
+    let results: Vec<Mutex<Option<T>>> = (0..jobs).map(|_| Mutex::new(None)).collect();
+    let failed = AtomicBool::new(false);
+    let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let (f, results, failed, error) = (&f, &results, &failed, &error);
+            scope.spawn(move || {
+                for j in (w..jobs).step_by(workers) {
+                    if failed.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    match f(w, j) {
+                        Ok(v) => *results[j].lock().unwrap() = Some(v),
+                        Err(e) => {
+                            let mut slot = error.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                            failed.store(true, Ordering::SeqCst);
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = error.lock().unwrap().take() {
+        return Err(e);
+    }
+    let out: Vec<T> = results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job completed without result"))
+        .collect();
+    Ok(out)
+}
+
+// ------------------------------------------------------------------------
 // Sequential executor
 // ------------------------------------------------------------------------
 

@@ -21,7 +21,9 @@
 use crate::model_spec::OpCost;
 use std::collections::BTreeMap;
 
+/// Index of one SSA value in a [`Plan`] (written once, read many).
 pub type Slot = usize;
+/// Index of one [`Step`] in a [`Plan`]'s emission order.
 pub type StepId = usize;
 
 /// Pseudo-device for free host-side bookkeeping ops.
@@ -82,9 +84,13 @@ pub enum Op {
 /// One scheduled operation.
 #[derive(Debug, Clone)]
 pub struct Step {
+    /// What to compute.
     pub op: Op,
+    /// Device this step is placed on ([`HOST`] for bookkeeping ops).
     pub device: usize,
+    /// Input slots, in the operand order the op expects.
     pub reads: Vec<Slot>,
+    /// Output slots (SSA: each written exactly once, by this step).
     pub writes: Vec<Slot>,
     /// Compute cost (Exec / Add); comm ops are costed from their own
     /// fields by `sim::cost`.
@@ -96,14 +102,18 @@ pub struct Step {
 /// Expected binding kind of an external input slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BindKind {
+    /// Float tensor (activations, masks).
     F32,
+    /// Integer tensor (token ids, lengths).
     I32,
 }
 
 /// A complete one-training-step program.
 #[derive(Debug, Clone, Default)]
 pub struct Plan {
+    /// Steps in emission order (topological by construction).
     pub steps: Vec<Step>,
+    /// Total slot count (externals + every step output).
     pub n_slots: usize,
     /// Parameter name -> input slot.
     pub param_in: BTreeMap<String, Slot>,
@@ -111,7 +121,9 @@ pub struct Plan {
     pub data_in: BTreeMap<String, (Slot, BindKind)>,
     /// Parameter name -> final summed-gradient slot.
     pub grad_out: BTreeMap<String, Slot>,
+    /// Slot holding the summed token NLL.
     pub loss_out: Slot,
+    /// Slot holding the target-token count.
     pub ntok_out: Slot,
     /// Last step index reading each slot (for executor memory reclaim).
     pub last_use: Vec<StepId>,

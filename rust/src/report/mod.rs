@@ -5,14 +5,19 @@
 use crate::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig};
 use crate::data::synthetic::{Corpus, GenConfig};
 use crate::data::Batcher;
-use crate::decode::{BeamConfig, Decoder, LengthNorm};
+use crate::decode::{
+    translate_corpus, BeamConfig, DecodeOptions, DecodeStats, Decoder, LengthNorm,
+};
 use crate::metrics::corpus_bleu;
 use crate::model_spec::param_count;
 use crate::parallel::build_plan;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, ParamBank};
 use crate::sim::simulate;
+use crate::tensor::Tensor;
 use crate::train::Trainer;
+use crate::util::json::Json;
 use anyhow::Result;
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Make the corpus for a data config, sized to the model dims.
@@ -457,10 +462,14 @@ pub fn table4(
         .map(|e| (e.src.clone(), batcher.vocab.decode(&e.tgt)))
         .collect();
 
+    // Wall-clock bookkeeping per beam column (decode speed is part of
+    // the serving story, so the sweep reports it alongside BLEU).
+    let mut beam_secs = vec![0.0f64; beams.len()];
+    let mut beam_sents = vec![0usize; beams.len()];
     for &nv in norm_values {
         let label = if gnmt { format!("({nv:.1}, 0.0)") } else { format!("{nv:.1}") };
         write!(out, "{label:<18}").unwrap();
-        for &beam in beams {
+        for (bi, &beam) in beams.iter().enumerate() {
             let norm = if gnmt {
                 LengthNorm::Gnmt { alpha: nv, beta: 0.0 }
             } else {
@@ -468,32 +477,229 @@ pub fn table4(
             };
             let cfg = BeamConfig { beam, max_len: decoder.max_len(), norm };
             let mut pairs = Vec::new();
+            let t0 = std::time::Instant::now();
             for (src, r) in &refs {
                 let hyp = decoder.translate(src, &cfg)?;
                 pairs.push((batcher.vocab.decode(&hyp), r.clone()));
             }
+            beam_secs[bi] += t0.elapsed().as_secs_f64();
+            beam_sents[bi] += refs.len();
             let bleu = corpus_bleu(&pairs);
             write!(out, "{bleu:>8.2}").unwrap();
             writeln!(csv, "{nv},{beam},{bleu:.2}").unwrap();
         }
         writeln!(out).unwrap();
     }
+    write!(out, "{:<18}", "sent/s (wall)").unwrap();
+    for (bi, _) in beams.iter().enumerate() {
+        write!(out, "{:>8.2}", beam_sents[bi] as f64 / beam_secs[bi].max(1e-9)).unwrap();
+    }
+    writeln!(out).unwrap();
     let _ = corpus;
     write_results(&format!("table4_{}.csv", if gnmt { "gnmt" } else { "marian" }), &csv);
     Ok(out)
+}
+
+// ------------------------------------------------------- Decode bench
+
+/// One measured decode configuration (`serve-bench` / `benches/decode`).
+#[derive(Debug, Clone)]
+pub struct DecodeRow {
+    /// `"single"` (reference `Decoder`) or `"batched"`.
+    pub engine: String,
+    /// Sentences per chunk (1 for the single path).
+    pub batch: usize,
+    /// Worker replicas (1 for the single path).
+    pub devices: usize,
+    /// Beam width.
+    pub beam: usize,
+    /// Throughput + residency counters of the run.
+    pub stats: DecodeStats,
+}
+
+/// Sustained-translation benchmark: decode `srcs` with the
+/// single-sentence reference decoder and with the batched engine at
+/// each `(batch, devices)` combination, and report wall-clock
+/// sentences/sec side by side. Writes `results/decode_bench.{txt,csv}`
+/// and `BENCH_decode.json` (flat name → number, same convention as the
+/// other `BENCH_*.json` perf-tracking files).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_bench(
+    engine: &Engine,
+    params: &BTreeMap<String, Tensor>,
+    bank: &ParamBank,
+    input_feeding: bool,
+    srcs: &[Vec<i32>],
+    cfg: &BeamConfig,
+    batches: &[usize],
+    devices: &[usize],
+) -> Result<String> {
+    let mut rows: Vec<DecodeRow> = Vec::new();
+
+    // Reference: one sentence at a time through the host path.
+    let dec = Decoder::new(engine, params, input_feeding);
+    let t0 = std::time::Instant::now();
+    let mut out_tokens = 0usize;
+    let mut ref_hyps: Vec<Vec<i32>> = Vec::with_capacity(srcs.len());
+    for s in srcs {
+        let hyp = dec.translate(s, cfg)?;
+        out_tokens += hyp.len();
+        ref_hyps.push(hyp);
+    }
+    rows.push(DecodeRow {
+        engine: "single".into(),
+        batch: 1,
+        devices: 1,
+        beam: cfg.beam,
+        stats: DecodeStats {
+            sentences: srcs.len(),
+            out_tokens,
+            wall_s: t0.elapsed().as_secs_f64(),
+            ..Default::default()
+        },
+    });
+
+    for &batch in batches {
+        for &dv in devices {
+            let opts = DecodeOptions { batch, devices: dv };
+            let (hyps, stats) =
+                translate_corpus(engine, params, bank, input_feeding, srcs, cfg, &opts)?;
+            // The bench doubles as a correctness gate: batched output
+            // must match the reference token-for-token.
+            for (i, (h, r)) in hyps.iter().zip(&ref_hyps).enumerate() {
+                if h != r {
+                    return Err(anyhow::anyhow!(
+                        "batched decode (batch {batch}, devices {dv}) diverged from the \
+                         single-sentence reference at sentence {i}"
+                    ));
+                }
+            }
+            rows.push(DecodeRow {
+                engine: "batched".into(),
+                batch,
+                devices: dv,
+                beam: cfg.beam,
+                stats,
+            });
+        }
+    }
+    Ok(decode_bench_table(&rows, srcs.len()))
+}
+
+/// Render decode-bench rows and persist them (`results/` + the
+/// `BENCH_decode.json` perf-tracking file).
+pub fn decode_bench_table(rows: &[DecodeRow], sentences: usize) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Decode throughput ({sentences} sentences/config; batched output verified \
+         token-identical to the single-sentence reference)."
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<10} {:>6} {:>8} {:>5}  {:>9} {:>9} {:>8}  {:>12} {:>12}",
+        "engine", "batch", "devices", "beam", "sent/s", "tok/s", "wall s", "param up/hit", "state up/hit"
+    )
+    .unwrap();
+    let mut csv = String::from(
+        "engine,batch,devices,beam,sent_per_s,tok_per_s,wall_s,param_uploads,param_hits,state_uploads,state_hits\n",
+    );
+    let mut bench: BTreeMap<String, Json> = BTreeMap::new();
+    let base = rows.first().map(|r| r.stats.sentences_per_sec());
+    for r in rows {
+        let st = &r.stats;
+        writeln!(
+            out,
+            "{:<10} {:>6} {:>8} {:>5}  {:>9.2} {:>9.1} {:>8.2}  {:>12} {:>12}",
+            r.engine,
+            r.batch,
+            r.devices,
+            r.beam,
+            st.sentences_per_sec(),
+            st.tokens_per_sec(),
+            st.wall_s,
+            format!("{}/{}", st.param_uploads, st.param_hits),
+            format!("{}/{}", st.state_uploads, st.state_hits),
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{},{},{},{},{:.3},{:.2},{:.4},{},{},{},{}",
+            r.engine,
+            r.batch,
+            r.devices,
+            r.beam,
+            st.sentences_per_sec(),
+            st.tokens_per_sec(),
+            st.wall_s,
+            st.param_uploads,
+            st.param_hits,
+            st.state_uploads,
+            st.state_hits
+        )
+        .unwrap();
+        let key = if r.engine == "single" {
+            format!("single.beam{}", r.beam)
+        } else {
+            format!("batch{}.devices{}.beam{}", r.batch, r.devices, r.beam)
+        };
+        bench.insert(format!("{key}.sent_per_s"), Json::Num(st.sentences_per_sec()));
+        bench.insert(format!("{key}.wall_ns"), Json::Num(st.wall_s * 1e9));
+    }
+    if let (Some(base), Some(best)) = (
+        base,
+        rows.iter()
+            .filter(|r| r.engine == "batched")
+            .map(|r| r.stats.sentences_per_sec())
+            .max_by(|a, b| a.total_cmp(b)),
+    ) {
+        writeln!(
+            out,
+            "\nbest batched config: {:.2}x the single-sentence path",
+            best / base.max(1e-9)
+        )
+        .unwrap();
+        // Beam-qualified like every other key, so multi-beam sweeps
+        // accumulate instead of overwriting each other's headline.
+        let beam = rows.first().map_or(0, |r| r.beam);
+        bench.insert(
+            format!("beam{beam}.batched_vs_single_speedup"),
+            Json::Num(best / base.max(1e-9)),
+        );
+    }
+    // Merge into an existing BENCH_decode.json so sweeps over several
+    // beams (benches/decode.rs) accumulate instead of clobbering.
+    let mut all = std::fs::read_to_string("BENCH_decode.json")
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    all.extend(bench);
+    let _ = std::fs::write("BENCH_decode.json", Json::Obj(all).to_string());
+    write_results("decode_bench.txt", &out);
+    write_results("decode_bench.csv", &csv);
+    out
 }
 
 // ---------------------------------------------------------------- Table 5
 
 /// Test BLEU comparison (paper Table 5): our baseline vs HybridNMT on
 /// both test sets, with the paper's published rows quoted for context.
-pub fn table5(rows: &[(String, f64, f64)]) -> String {
+/// The fourth column is the measured decode throughput of the batched
+/// inference engine on each system's test decode (NaN for quoted rows).
+pub fn table5(rows: &[(String, f64, f64, f64)]) -> String {
     let mut out = String::new();
     writeln!(out, "Table 5. Test BLEU.").unwrap();
-    writeln!(out, "{:<36}{:>10}{:>10}", "System", "wmt14-sim", "wmt17-sim").unwrap();
-    for (label, b14, b17) in rows {
+    writeln!(
+        out,
+        "{:<36}{:>10}{:>10}{:>12}",
+        "System", "wmt14-sim", "wmt17-sim", "dec sent/s"
+    )
+    .unwrap();
+    for (label, b14, b17, sps) in rows {
         let f = |x: f64| if x.is_nan() { "-".to_string() } else { format!("{x:.2}") };
-        writeln!(out, "{:<36}{:>10}{:>10}", label, f(*b14), f(*b17)).unwrap();
+        writeln!(out, "{:<36}{:>10}{:>10}{:>12}", label, f(*b14), f(*b17), f(*sps)).unwrap();
     }
     writeln!(out, "\nPaper reference (real WMT test sets): OpenNMT-lua 21.85/25.92, HybridNMT 22.71/26.91;").unwrap();
     writeln!(out, "the reproduction claim is *parity or better for HybridNMT vs baseline*, not absolute BLEU.").unwrap();

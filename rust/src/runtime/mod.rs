@@ -14,7 +14,11 @@
 //! hold onto and pass back via [`Arg::Buf`], skipping the host→device
 //! copy. [`ParamBank`] builds on that to keep the parameter set resident
 //! across `exec` calls within one optimizer step (invalidated by the
-//! trainer after every update). See `docs/PERF.md`.
+//! trainer after every update). [`BufCache`] is the same idea for
+//! non-parameter state that persists across many calls — the batched
+//! decoder's encoder output blocks and source lengths, which are read
+//! every decode step but written once. See `docs/PERF.md` and
+//! `docs/ARCHITECTURE.md`.
 //!
 //! Thread safety: the engine is shared by the parallel plan executor's
 //! device workers. All rust-side interior mutability (executable cache,
@@ -369,14 +373,15 @@ impl Engine {
 /// The trainer owns one bank, resolves parameter arguments through
 /// [`ParamBank::get_or_upload`], and calls [`ParamBank::invalidate`]
 /// after every optimizer update (host-side parameter data changed, so
-/// the device copies are stale). Shared by the parallel executor's
-/// workers; the map lock is held across the upload so each parameter is
-/// uploaded at most once per step even under concurrent first use.
+/// the device copies are stale). Inference drivers own one too but
+/// never invalidate it — checkpoint weights are immutable. Shared by
+/// the executor's workers; a thin name-policy wrapper over the generic
+/// [`BufCache`], which holds its map lock across the upload so each
+/// parameter uploads at most once per step even under concurrent first
+/// use.
 #[derive(Debug, Default)]
 pub struct ParamBank {
-    bufs: Mutex<HashMap<String, Arc<DeviceBuf>>>,
-    uploads: AtomicU64,
-    hits: AtomicU64,
+    bufs: BufCache,
 }
 
 impl ParamBank {
@@ -386,50 +391,142 @@ impl ParamBank {
 
     /// Resolve `name` to its device buffer, uploading `t` on first use
     /// since the last invalidation.
+    ///
+    /// Hits are tracked by the bank's own counter only: the engine's
+    /// `upload_bytes_saved` is counted at each *consuming* call
+    /// (per-Value cache), and counting the bind-time resolution too
+    /// would inflate it by one upload per parameter per execution.
     pub fn get_or_upload(
         &self,
         engine: &Engine,
         name: &str,
         t: &Tensor,
     ) -> Result<Arc<DeviceBuf>> {
-        let mut bufs = self.bufs.lock().unwrap();
-        if let Some(b) = bufs.get(name) {
-            // Tracked by the bank's own hit counter only: the engine's
-            // `upload_bytes_saved` is counted at each *consuming* call
-            // (per-Value cache), and counting the bind-time resolution
-            // too would inflate it by one upload per parameter per
-            // execution.
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(b.clone());
-        }
-        let b = Arc::new(engine.upload_f(t)?);
-        self.uploads.fetch_add(1, Ordering::Relaxed);
-        bufs.insert(name.to_string(), b.clone());
-        Ok(b)
+        self.bufs.get_or_upload_f(engine, name, t)
     }
 
     /// Drop all resident buffers (host parameters changed).
     pub fn invalidate(&self) {
-        self.bufs.lock().unwrap().clear();
+        self.bufs.clear();
     }
 
     /// Parameters currently resident.
     pub fn len(&self) -> usize {
-        self.bufs.lock().unwrap().len()
+        self.bufs.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.bufs.is_empty()
     }
 
     /// Total uploads performed since construction (not reset by
     /// `invalidate`): `uploads / steps` is the per-step re-upload count
     /// the perf acceptance tracks.
     pub fn upload_count(&self) -> u64 {
-        self.uploads.load(Ordering::Relaxed)
+        self.bufs.upload_count()
     }
 
     /// Total cache hits since construction.
+    pub fn hit_count(&self) -> u64 {
+        self.bufs.hit_count()
+    }
+}
+
+/// Named device-resident buffers for values that persist across many
+/// [`Engine::exec`] calls but are not parameters: the inference
+/// analogue of [`ParamBank`] for per-workload state.
+///
+/// The batched decoder uploads each sentence group's encoder output
+/// block (`[rows, max_src, h]` — the largest per-step argument) and
+/// source-length vector once, then serves every subsequent decode step
+/// from the resident copy. Entries are evicted explicitly with
+/// [`BufCache::remove`] when their group finishes, so peak device
+/// memory tracks in-flight groups, not the whole corpus.
+///
+/// Unlike `ParamBank` there is no global invalidation protocol: cached
+/// values are immutable for their whole lifetime (SSA-style), so the
+/// only correctness rule is "remove the key when the value dies".
+#[derive(Debug, Default)]
+pub struct BufCache {
+    bufs: Mutex<HashMap<String, Arc<DeviceBuf>>>,
+    uploads: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl BufCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Shared lookup/insert path. The map lock is held across the
+    /// upload so each key uploads at most once even under concurrent
+    /// first use.
+    fn get_or(
+        &self,
+        key: &str,
+        upload: impl FnOnce() -> Result<DeviceBuf>,
+    ) -> Result<Arc<DeviceBuf>> {
+        let mut bufs = self.bufs.lock().unwrap();
+        if let Some(b) = bufs.get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(b.clone());
+        }
+        let b = Arc::new(upload()?);
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        bufs.insert(key.to_string(), b.clone());
+        Ok(b)
+    }
+
+    /// Resolve `key` to its device buffer, uploading the f32 tensor `t`
+    /// on first use.
+    pub fn get_or_upload_f(
+        &self,
+        engine: &Engine,
+        key: &str,
+        t: &Tensor,
+    ) -> Result<Arc<DeviceBuf>> {
+        self.get_or(key, || engine.upload_f(t))
+    }
+
+    /// Resolve `key` to its device buffer, uploading the i32 tensor `t`
+    /// on first use.
+    pub fn get_or_upload_i(
+        &self,
+        engine: &Engine,
+        key: &str,
+        t: &ITensor,
+    ) -> Result<Arc<DeviceBuf>> {
+        self.get_or(key, || engine.upload_i(t))
+    }
+
+    /// Drop one entry (its value's lifetime ended — e.g. a decoded
+    /// sentence group retired its encoder block).
+    pub fn remove(&self, key: &str) {
+        self.bufs.lock().unwrap().remove(key);
+    }
+
+    /// Drop every entry.
+    pub fn clear(&self) {
+        self.bufs.lock().unwrap().clear();
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Uploads performed since construction.
+    pub fn upload_count(&self) -> u64 {
+        self.uploads.load(Ordering::Relaxed)
+    }
+
+    /// Lookups served from a resident buffer since construction.
     pub fn hit_count(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }

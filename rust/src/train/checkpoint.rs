@@ -1,6 +1,11 @@
 //! Parameter checkpointing: a tiny self-describing binary format
 //! (magic, version, per-tensor name/shape/f32 data, little-endian).
+//!
+//! For inference, [`load_resident`] additionally pre-uploads the loaded
+//! parameters into a [`ParamBank`], so the first decode step already
+//! finds every weight device-resident.
 
+use crate::runtime::{Engine, ParamBank};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -65,6 +70,23 @@ pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
         params.insert(name, Tensor::new(shape, data));
     }
     Ok(params)
+}
+
+/// Load a checkpoint and upload every parameter into a fresh
+/// [`ParamBank`] immediately, so inference never pays a first-touch
+/// upload mid-decode. The bank is never invalidated by decoding —
+/// checkpoint parameters are immutable — so each parameter crosses the
+/// host→device boundary exactly once for the life of the bank.
+pub fn load_resident(
+    path: &Path,
+    engine: &Engine,
+) -> Result<(BTreeMap<String, Tensor>, ParamBank)> {
+    let params = load(path)?;
+    let bank = ParamBank::new();
+    for (name, t) in &params {
+        bank.get_or_upload(engine, name, t)?;
+    }
+    Ok((params, bank))
 }
 
 fn read_u32(f: &mut impl Read) -> Result<u32> {

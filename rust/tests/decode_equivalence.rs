@@ -1,0 +1,190 @@
+//! Decode equivalence: the batched multi-device inference engine must
+//! produce *token-identical* translations to N single-sentence
+//! `Decoder::translate` calls — across beam widths, chunk sizes and
+//! 1/2/4-worker shardings — while uploading each parameter at most once
+//! for the life of the bank (requires `make artifacts`).
+//!
+//! This is the inference counterpart of `exec_equivalence.rs`: packing,
+//! device-resident state and sharding may reorder *how* the device is
+//! called, never what each sentence's beam search computes.
+
+use hybridnmt::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig};
+use hybridnmt::decode::{
+    translate_corpus, BatchDecoder, BeamConfig, DecodeOptions, Decoder, LengthNorm,
+};
+use hybridnmt::rng::Rng;
+use hybridnmt::runtime::{Engine, ParamBank};
+use hybridnmt::tensor::Tensor;
+use hybridnmt::train::{checkpoint, init_params};
+use std::collections::BTreeMap;
+
+fn engine() -> Engine {
+    Engine::load("artifacts", "tiny").expect("run `make artifacts` first")
+}
+
+fn random_params(
+    d: &ModelDims,
+    input_feeding: bool,
+    seed: u64,
+) -> BTreeMap<String, Tensor> {
+    let exp = Experiment {
+        model: d.clone(),
+        strategy: if input_feeding { Strategy::Single } else { Strategy::Hybrid },
+        hw: HwConfig::default(),
+        train: TrainConfig { seed, ..Default::default() },
+        data: DataConfig::wmt14_sim(100),
+        artifacts_dir: "artifacts".into(),
+    };
+    init_params(&exp, input_feeding)
+}
+
+/// Deterministic random source sentences within the artifact shape.
+fn random_srcs(d: &ModelDims, n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.range(2, d.max_src + 1);
+            (0..len).map(|_| rng.range(4, d.vocab) as i32).collect()
+        })
+        .collect()
+}
+
+fn cfg(beam: usize, max_tgt: usize) -> BeamConfig {
+    BeamConfig { beam, max_len: max_tgt, norm: LengthNorm::Marian { alpha: 1.0 } }
+}
+
+/// The acceptance criterion: batched decode at every (batch, devices)
+/// sharding equals sequential single-sentence decoding, token for
+/// token, for beams 1 and 4, with and without input-feeding.
+#[test]
+fn batched_matches_single_across_beams_and_shardings() {
+    let e = engine();
+    let d = e.dims().clone();
+    let srcs = random_srcs(&d, 10, 42);
+    for input_feeding in [false, true] {
+        let params = random_params(&d, input_feeding, 3);
+        for beam in [1usize, 4] {
+            let c = cfg(beam, d.max_tgt);
+            let dec = Decoder::new(&e, &params, input_feeding);
+            let reference: Vec<Vec<i32>> = srcs
+                .iter()
+                .map(|s| dec.translate(s, &c).unwrap())
+                .collect();
+            for (batch, devices) in [(1usize, 1usize), (4, 1), (4, 2), (32, 4)] {
+                let bank = ParamBank::new();
+                let opts = DecodeOptions { batch, devices };
+                let (hyps, stats) =
+                    translate_corpus(&e, &params, &bank, input_feeding, &srcs, &c, &opts)
+                        .unwrap_or_else(|err| {
+                            panic!("if={input_feeding} beam={beam} b={batch} d={devices}: {err:#}")
+                        });
+                assert_eq!(stats.sentences, srcs.len());
+                for (i, (h, r)) in hyps.iter().zip(&reference).enumerate() {
+                    assert_eq!(
+                        h, r,
+                        "if={input_feeding} beam={beam} batch={batch} devices={devices}: \
+                         sentence {i} diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Each parameter crosses the host→device boundary at most once per
+/// bank lifetime, however many sentences/workers the corpus run uses.
+#[test]
+fn params_upload_once_per_bank_lifetime() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, false, 7);
+    let srcs = random_srcs(&d, 8, 9);
+    let bank = ParamBank::new();
+    let c = cfg(4, d.max_tgt);
+    let opts = DecodeOptions { batch: 4, devices: 2 };
+    let (_, cold) = translate_corpus(&e, &params, &bank, false, &srcs, &c, &opts).unwrap();
+    assert_eq!(
+        bank.upload_count() as usize,
+        params.len(),
+        "cold run must upload each parameter exactly once"
+    );
+    assert!(cold.param_hits > 0, "cold run should already hit the bank");
+    // The bank is never invalidated by decoding: a second pass is free.
+    let (_, warm) = translate_corpus(&e, &params, &bank, false, &srcs, &c, &opts).unwrap();
+    assert_eq!(warm.param_uploads, 0, "warm corpus run re-uploaded parameters");
+    // Encoder state is uploaded once per group and served resident on
+    // every decode step thereafter.
+    assert!(warm.state_hits >= warm.state_uploads);
+}
+
+/// `load_resident` pre-uploads the checkpoint: the first decode step
+/// finds every weight already on device, and the loaded parameters
+/// decode identically to the in-memory set they were saved from.
+#[test]
+fn resident_checkpoint_decodes_identically_with_zero_uploads() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, false, 11);
+    let dir = std::env::temp_dir().join("hynmt_decode_eq");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.bin");
+    checkpoint::save(&path, &params).unwrap();
+    let (loaded, bank) = checkpoint::load_resident(&path, &e).unwrap();
+    assert_eq!(bank.upload_count() as usize, loaded.len());
+
+    let srcs = random_srcs(&d, 4, 13);
+    let c = cfg(4, d.max_tgt);
+    let opts = DecodeOptions { batch: 4, devices: 1 };
+    let (hyps, stats) =
+        translate_corpus(&e, &loaded, &bank, false, &srcs, &c, &opts).unwrap();
+    assert_eq!(stats.param_uploads, 0, "resident checkpoint re-uploaded parameters");
+
+    let fresh = ParamBank::new();
+    let (reference, _) =
+        translate_corpus(&e, &params, &fresh, false, &srcs, &c, &opts).unwrap();
+    assert_eq!(hyps, reference);
+}
+
+/// Oversize / empty sources and absurd beams are errors, not silent
+/// truncation or panics — on both decode paths.
+#[test]
+fn invalid_inputs_error_cleanly() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, false, 5);
+    let c = cfg(2, d.max_tgt);
+
+    let dec = Decoder::new(&e, &params, false);
+    let long = vec![5i32; d.max_src + 1];
+    assert!(dec.translate(&long, &c).is_err(), "oversize source must error");
+    assert!(dec.translate(&[], &c).is_err(), "empty source must error");
+    assert!(
+        dec.translate(&[5, 6], &cfg(d.beam + 1, d.max_tgt)).is_err(),
+        "beam wider than the artifact width must error"
+    );
+
+    let bank = ParamBank::new();
+    let bd = BatchDecoder::new(&e, &params, &bank, false).unwrap();
+    assert!(bd.translate_batch(&[long.clone()], &c).is_err());
+    assert!(bd.translate_batch(&[vec![]], &c).is_err());
+    assert!(bd
+        .translate_batch(&[vec![5, 6]], &cfg(bd.width() + 1, d.max_tgt))
+        .is_err());
+    // A good sentence after a bad one: the whole batch is rejected
+    // before any device work happens.
+    assert!(bd.translate_batch(&[vec![5, 6], long], &c).is_err());
+}
+
+/// The packed width really is wider than the single-sentence path's
+/// beam width (otherwise batching buys nothing on this artifact set).
+#[test]
+fn packed_width_exceeds_beam_width() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, false, 1);
+    let bank = ParamBank::new();
+    let bd = BatchDecoder::new(&e, &params, &bank, false).unwrap();
+    assert!(bd.width() >= d.batch, "expected the training-batch artifacts");
+    assert!(bd.group_capacity(1) > 1);
+    assert_eq!(bd.group_capacity(4), bd.width() / 4);
+}

@@ -1,0 +1,59 @@
+#!/bin/sh
+# Verification gate: build + tests + rustdoc + BENCH_*.json sanity.
+#
+#   ./scripts/verify.sh            # everything the machine can run
+#   SKIP_CARGO=1 ./scripts/verify.sh   # docs/bench-JSON checks only
+#
+# The cargo stages run `cargo build --release`, `cargo test -q` (the
+# tier-1 gate) and `cargo doc --no-deps` with warnings denied, so docs
+# can't silently rot. The JSON stage validates every BENCH_*.json perf
+# snapshot (micro/table3/decode) still parses and contains numbers, so
+# benches can't silently rot either. On machines without a rust
+# toolchain the cargo stages are reported as skipped and the script
+# still fails on malformed bench files.
+
+set -eu
+cd "$(dirname "$0")/.."
+
+fail=0
+
+if [ "${SKIP_CARGO:-0}" != "1" ] && command -v cargo >/dev/null 2>&1; then
+    echo "== cargo build --release"
+    cargo build --release
+    echo "== cargo test -q"
+    cargo test -q
+    echo "== cargo doc --no-deps (warnings are errors)"
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+else
+    echo "== cargo not available (or SKIP_CARGO=1): skipping build/test/doc stages"
+fi
+
+echo "== BENCH_*.json sanity"
+found=0
+for f in BENCH_*.json; do
+    [ -e "$f" ] || continue
+    found=1
+    if python3 - "$f" <<'EOF'
+import json, math, sys
+path = sys.argv[1]
+with open(path) as fh:
+    data = json.load(fh)
+if not isinstance(data, dict) or not data:
+    raise SystemExit(f"{path}: expected a non-empty object")
+bad = [k for k, v in data.items()
+       if not isinstance(v, (int, float)) or not math.isfinite(v)]
+if bad:
+    raise SystemExit(f"{path}: non-numeric/non-finite entries: {bad[:5]}")
+print(f"  {path}: OK ({len(data)} entries)")
+EOF
+    then :; else
+        fail=1
+    fi
+done
+[ "$found" = "1" ] || echo "  (no BENCH_*.json present yet — run the benches or serve-bench)"
+
+if [ "$fail" != "0" ]; then
+    echo "verify: FAILED"
+    exit 1
+fi
+echo "verify: OK"
