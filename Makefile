@@ -1,6 +1,6 @@
 # hybridnmt build/verify entry points (see README.md).
 
-.PHONY: artifacts verify doc clean-artifacts
+.PHONY: artifacts verify doc clean-artifacts serve-bench
 
 # AOT-compile the JAX model to HLO-text artifacts + manifests.
 # aot.py uses package-relative imports, so run it as a module from
@@ -13,6 +13,15 @@ artifacts:
 # scripts/verify.sh) so the BENCH/doc checks still run everywhere.
 verify:
 	./scripts/verify.sh
+
+# Serving benchmarks: offline decode throughput (serve-bench →
+# BENCH_decode.json) and the online scheduler under Poisson load
+# (serve-load → BENCH_serve.json), both on the tiny artifact set.
+# `make verify` then validates the emitted JSON (including the
+# serve-row schema).
+serve-bench:
+	cargo run --release -- serve-bench --model tiny --batch 32 --devices 4 --n 48
+	cargo run --release -- serve-load --model tiny --replicas 4 --requests 64 --rate 16
 
 doc:
 	cargo doc --no-deps

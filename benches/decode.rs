@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let params = init_params(&exp, false);
     let bank = ParamBank::new();
     let corpus = make_corpus(&exp.data, &exp.model);
-    let batcher = make_batcher(&exp, &corpus);
+    let batcher = make_batcher(&exp, &corpus)?;
     let n = 48.min(batcher.test.len());
     let srcs: Vec<Vec<i32>> = batcher.test[..n].iter().map(|e| e.src.clone()).collect();
 

@@ -101,7 +101,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- one full training step: sequential vs parallel executor --------
     let corpus = make_corpus(&exp.data, &exp.model);
-    let mut batcher = make_batcher(&exp, &corpus);
+    let mut batcher = make_batcher(&exp, &corpus)?;
     let mut trainer = Trainer::new(&engine, &exp)?;
     let batch = batcher.next_train();
     trainer.sequential = true;

@@ -13,6 +13,7 @@ use hybridnmt::decode::{
 use hybridnmt::report::{make_batcher, make_corpus};
 use hybridnmt::runtime::{Engine, ParamBank};
 use hybridnmt::train::Trainer;
+use hybridnmt::util::per_sec;
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::load("artifacts", "small")?;
@@ -25,11 +26,11 @@ fn main() -> anyhow::Result<()> {
         artifacts_dir: "artifacts".into(),
     };
     let corpus = make_corpus(&exp.data, &exp.model);
-    let batcher = make_batcher(&exp, &corpus);
+    let batcher = make_batcher(&exp, &corpus)?;
     println!("training HybridNMT for {} steps ...", exp.train.steps);
     let mut trainer = Trainer::new(&engine, &exp)?;
     {
-        let mut b = make_batcher(&exp, &corpus);
+        let mut b = make_batcher(&exp, &corpus)?;
         trainer.run(&mut b, |line| println!("{line}"))?;
     }
 
@@ -64,7 +65,7 @@ fn main() -> anyhow::Result<()> {
             if devices == 1 { "" } else { "s" },
             stats.wall_s,
             stats.sentences_per_sec(),
-            t_single / stats.wall_s.max(1e-9),
+            per_sec(t_single, stats.wall_s),
             stats.param_uploads,
             stats.state_hits,
         );
@@ -72,7 +73,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "single-sentence reference: {:.2}s = {:.2} sent/s",
         t_single,
-        n as f64 / t_single.max(1e-9)
+        per_sec(n as f64, t_single)
     );
 
     println!("\nsample translations (identical on every path):");

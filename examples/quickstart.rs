@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Data: synthetic corpus -> BPE -> padded batches.
     let corpus = make_corpus(&exp.data, &exp.model);
-    let mut batcher = make_batcher(&exp, &corpus);
+    let mut batcher = make_batcher(&exp, &corpus)?;
     println!(
         "corpus `{}`: {} train batches, vocab {}",
         corpus.name,

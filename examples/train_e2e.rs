@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
             artifacts_dir: "artifacts".into(),
         };
         let corpus = make_corpus(&exp.data, &exp.model);
-        let mut batcher = make_batcher(&exp, &corpus);
+        let mut batcher = make_batcher(&exp, &corpus)?;
         let mut trainer = Trainer::new(&engine, &exp)?;
         println!(
             "\n--- {} (sim {:.0} src-tok/s on the 4xV100 model) ---",

@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         artifacts_dir: "artifacts".into(),
     };
     let corpus = make_corpus(&exp.data, &exp.model);
-    let mut batcher = make_batcher(&exp, &corpus);
+    let mut batcher = make_batcher(&exp, &corpus)?;
     println!("training HybridNMT for {} steps ...", exp.train.steps);
     let mut trainer = Trainer::new(&engine, &exp)?;
     trainer.run(&mut batcher, |line| println!("{line}"))?;

@@ -12,6 +12,7 @@ use super::vocab::{Vocab, BOS, EOS, PAD};
 use crate::parallel::exec::Batch;
 use crate::rng::Rng;
 use crate::tensor::{ITensor, Tensor};
+use anyhow::{anyhow, Result};
 
 /// One encoded sentence pair.
 #[derive(Debug, Clone, PartialEq)]
@@ -40,7 +41,11 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Build the tokenizer + vocab from the corpus and encode all splits.
+    /// Build the tokenizer + vocab from the corpus and encode all
+    /// splits. Errors when the filtered training split cannot fill even
+    /// one batch — at construction, not on the first `next_train` call,
+    /// so a misconfigured run dies with a diagnosable error instead of
+    /// a panic deep inside the training loop.
     pub fn new(
         corpus: &Corpus,
         vocab_size: usize,
@@ -48,7 +53,7 @@ impl Batcher {
         max_src: usize,
         max_tgt: usize,
         seed: u64,
-    ) -> Self {
+    ) -> Result<Self> {
         let wf = corpus.word_freq();
         // Reserve room for specials + base chars; the rest is merges.
         let base_syms = 2 * (14 + 5) + 8; // generous bound on cv-alphabet pieces
@@ -83,10 +88,18 @@ impl Batcher {
         train.sort_by_key(|e| e.src.len());
 
         let n_batches = train.len() / batch;
+        if n_batches == 0 {
+            return Err(anyhow!(
+                "corpus too small for one batch of {batch}: {} usable training \
+                 sentences after BPE + length filtering ({dropped} dropped; \
+                 max_src {max_src}, max_tgt {max_tgt})",
+                train.len()
+            ));
+        }
         let mut order: Vec<usize> = (0..n_batches).collect();
         let mut rng = Rng::new(seed ^ 0x5851F42D4C957F2D);
         rng.shuffle(&mut order);
-        Batcher {
+        Ok(Batcher {
             vocab,
             bpe,
             train,
@@ -99,7 +112,7 @@ impl Batcher {
             cursor: 0,
             rng,
             dropped,
-        }
+        })
     }
 
     pub fn n_train_batches(&self) -> usize {
@@ -137,10 +150,9 @@ impl Batcher {
     }
 
     /// Next training batch (infinite shuffled stream over buckets).
+    /// `Batcher::new` guarantees at least one batch exists, so the
+    /// stream never runs dry.
     pub fn next_train(&mut self) -> Batch {
-        if self.order.is_empty() {
-            panic!("corpus too small for one batch of {}", self.batch);
-        }
         if self.cursor >= self.order.len() {
             self.cursor = 0;
             let mut order = std::mem::take(&mut self.order);
@@ -188,7 +200,14 @@ mod tests {
 
     fn batcher() -> Batcher {
         let c = Corpus::generate("t", 400, 40, 40, &GenConfig::for_dims(24, 0.0, 3));
-        Batcher::new(&c, 512, 8, 24, 24, 7)
+        Batcher::new(&c, 512, 8, 24, 24, 7).unwrap()
+    }
+
+    #[test]
+    fn undersized_corpus_errors_at_construction() {
+        let c = Corpus::generate("t", 3, 2, 2, &GenConfig::for_dims(24, 0.0, 3));
+        let err = Batcher::new(&c, 512, 64, 24, 24, 7).unwrap_err();
+        assert!(err.to_string().contains("corpus too small"), "{err}");
     }
 
     #[test]
@@ -261,7 +280,7 @@ mod tests {
     #[test]
     fn roundtrip_decode_matches_corpus() {
         let c = Corpus::generate("t", 100, 10, 10, &GenConfig::for_dims(24, 0.0, 4));
-        let b = Batcher::new(&c, 512, 4, 24, 24, 7);
+        let b = Batcher::new(&c, 512, 4, 24, 24, 7).unwrap();
         // Encode + decode a training sentence reproduces the words.
         let p = &c.train[0];
         let ids: Vec<i32> = b.bpe.encode(&p.src).iter().map(|s| b.vocab.id(s)).collect();

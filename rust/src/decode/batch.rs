@@ -82,12 +82,12 @@ pub struct DecodeStats {
 impl DecodeStats {
     /// Sustained sentences per second.
     pub fn sentences_per_sec(&self) -> f64 {
-        self.sentences as f64 / self.wall_s.max(1e-9)
+        crate::util::per_sec(self.sentences as f64, self.wall_s)
     }
 
     /// Sustained output tokens per second.
     pub fn tokens_per_sec(&self) -> f64 {
-        self.out_tokens as f64 / self.wall_s.max(1e-9)
+        crate::util::per_sec(self.out_tokens as f64, self.wall_s)
     }
 }
 

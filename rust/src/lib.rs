@@ -19,6 +19,7 @@ pub mod parallel;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tensor;
 pub mod train;

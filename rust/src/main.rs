@@ -16,8 +16,10 @@ use hybridnmt::metrics::corpus_bleu;
 use hybridnmt::parallel::build_plan;
 use hybridnmt::report;
 use hybridnmt::runtime::{Engine, ParamBank};
+use hybridnmt::serve::{drive_arrivals, poisson_arrivals, run_server, ServeOptions};
 use hybridnmt::sim::simulate;
 use hybridnmt::train::{checkpoint, init_params, Trainer};
+use hybridnmt::util::per_sec;
 
 struct Args {
     cmd: String,
@@ -77,6 +79,13 @@ COMMANDS
   serve-bench  [--ckpt file.bin] [--model small] [--beam B] [--batch N]
              [--devices D] [--n sentences] (sustained decode throughput;
              writes BENCH_decode.json + results/decode_bench.{txt,csv})
+  serve-load [--ckpt file.bin] [--model small] [--beam B] [--replicas R]
+             [--rate req/s] [--requests N] [--pool N distinct sentences]
+             [--queue CAP] [--max-wait-ms W] [--bucket-width T] [--seed S]
+             [--alpha A] [--strategy S (sets input-feeding)]
+             (online scheduler under deterministic Poisson arrivals,
+             replica sweep 1..R; writes BENCH_serve.json +
+             results/serve_bench.{txt,csv})
   sim        --strategy S [--batch B] [--trace out.csv] (schedule breakdown)
   table1     [--sentences14 N] [--sentences17 N]
   table2     [--model tiny|small|paper]
@@ -146,6 +155,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "translate" => cmd_translate(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "serve-load" => cmd_serve_load(&args),
         "sim" => cmd_sim(&args),
         "table1" => {
             let dims = ModelDims::paper();
@@ -208,7 +218,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         exp.model.name
     );
     let corpus = report::make_corpus(&exp.data, &exp.model);
-    let mut batcher = report::make_batcher(&exp, &corpus);
+    let mut batcher = report::make_batcher(&exp, &corpus)?;
     println!(
         "corpus: {} train batches, vocab {}, avg src len {:.1}, dropped {}",
         batcher.n_train_batches(),
@@ -257,7 +267,7 @@ fn cmd_translate(args: &Args) -> Result<()> {
     let input_feeding = strategy.uses_input_feeding();
     let exp = build_experiment(args, &engine)?;
     let corpus = report::make_corpus(&exp.data, &exp.model);
-    let batcher = report::make_batcher(&exp, &corpus);
+    let batcher = report::make_batcher(&exp, &corpus)?;
     let alpha: f64 = args.str_or("alpha", "1.0").parse()?;
     let beam = args.usize("beam", 6)?;
     // Same beam envelope on both paths: the batched engine could pack
@@ -319,20 +329,27 @@ fn cmd_translate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Sustained-translation throughput: the acceptance gate for the
-/// batched inference engine. Decodes the same sentence set with the
-/// single-sentence reference and the batched engine at batch {1, N} ×
-/// devices {1, 2, .., D}, verifies token-identity, and writes
-/// `BENCH_decode.json`.
-fn cmd_serve_bench(args: &Args) -> Result<()> {
+/// Shared setup of the two serving commands: engine + encoded test
+/// set, checkpoint-or-random parameters behind a resident bank, and
+/// the beam configuration (validated against the model decode width).
+struct ServeSetup {
+    engine: Engine,
+    input_feeding: bool,
+    batcher: hybridnmt::data::Batcher,
+    params: std::collections::BTreeMap<String, hybridnmt::tensor::Tensor>,
+    bank: ParamBank,
+    cfg: BeamConfig,
+}
+
+fn serve_setup(args: &Args) -> Result<ServeSetup> {
     let engine = load_engine(args)?;
     let strategy: Strategy = args.str_or("strategy", "hybrid").parse()?;
     let input_feeding = strategy.uses_input_feeding();
     let exp = build_experiment(args, &engine)?;
     let corpus = report::make_corpus(&exp.data, &exp.model);
-    let batcher = report::make_batcher(&exp, &corpus);
-    // Throughput does not depend on the weight values, so the bench
-    // runs fine without a trained checkpoint.
+    let batcher = report::make_batcher(&exp, &corpus)?;
+    // Throughput/latency do not depend on the weight values, so both
+    // serving benches run fine without a trained checkpoint.
     let (params, bank) = match args.get("ckpt") {
         Some(p) => checkpoint::load_resident(std::path::Path::new(p), &engine)?,
         None => (init_params(&exp, input_feeding), ParamBank::new()),
@@ -349,8 +366,18 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         max_len: engine.dims().max_tgt,
         norm: LengthNorm::Marian { alpha: args.str_or("alpha", "1.0").parse()? },
     };
-    let n = args.usize("n", 64)?.min(batcher.test.len());
-    let srcs: Vec<Vec<i32>> = batcher.test[..n].iter().map(|e| e.src.clone()).collect();
+    Ok(ServeSetup { engine, input_feeding, batcher, params, bank, cfg })
+}
+
+/// Sustained-translation throughput: the acceptance gate for the
+/// batched inference engine. Decodes the same sentence set with the
+/// single-sentence reference and the batched engine at batch {1, N} ×
+/// devices {1, 2, .., D}, verifies token-identity, and writes
+/// `BENCH_decode.json`.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let s = serve_setup(args)?;
+    let n = args.usize("n", 64)?.min(s.batcher.test.len());
+    let srcs: Vec<Vec<i32>> = s.batcher.test[..n].iter().map(|e| e.src.clone()).collect();
 
     let batch = args.usize("batch", 32)?.max(1);
     let max_dev = args.usize("devices", 4)?.max(1);
@@ -365,10 +392,94 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         devices.push(max_dev);
     }
     let out = report::decode_bench(
-        &engine, &params, &bank, input_feeding, &srcs, &cfg, &batches, &devices,
+        &s.engine, &s.params, &s.bank, s.input_feeding, &srcs, &s.cfg, &batches, &devices,
     )?;
     print!("{out}");
     println!("wrote BENCH_decode.json");
+    Ok(())
+}
+
+/// Online serving load test: replay one deterministic Poisson arrival
+/// schedule through the dynamic micro-batching scheduler at each
+/// replica count (1, 2, .., R), verify every response token-identical
+/// to the single-sentence reference, and report offered load vs
+/// sustained throughput vs tail latency (`BENCH_serve.json` +
+/// `results/serve_bench.{txt,csv}`).
+fn cmd_serve_load(args: &Args) -> Result<()> {
+    let su = serve_setup(args)?;
+    let pool_n = args.usize("pool", 32)?.min(su.batcher.test.len());
+    if pool_n == 0 {
+        return Err(anyhow!("no test sentences survived encoding — larger --sentences?"));
+    }
+    let pool: Vec<Vec<i32>> = su.batcher.test[..pool_n].iter().map(|e| e.src.clone()).collect();
+    let requests = args.usize("requests", 64)?;
+    let rate: f64 = args.str_or("rate", "16.0").parse().with_context(|| "--rate")?;
+    let seed = args.usize("seed", 0)? as u64;
+    let max_rep = args.usize("replicas", 4)?.max(1);
+    let mut replica_counts = vec![1usize];
+    let mut rv = 2;
+    while rv <= max_rep {
+        replica_counts.push(rv);
+        rv *= 2;
+    }
+    if *replica_counts.last().unwrap() != max_rep {
+        replica_counts.push(max_rep);
+    }
+
+    // The correctness gate: the single-sentence reference decode of the
+    // pool, compared token-for-token against every served response.
+    let decoder = Decoder::new(&su.engine, &su.params, su.input_feeding);
+    let reference: Vec<Vec<i32>> = pool
+        .iter()
+        .map(|src| decoder.translate(src, &su.cfg))
+        .collect::<Result<_>>()?;
+
+    let base = ServeOptions {
+        replicas: 1,
+        queue_capacity: args.usize("queue", 256)?,
+        max_wait_ms: args.str_or("max-wait-ms", "5.0").parse().with_context(|| "--max-wait-ms")?,
+        bucket_width: args.usize("bucket-width", 4)?,
+    };
+    // One schedule for every replica count: identical offered load.
+    let arrivals = poisson_arrivals(&pool, requests, rate, seed);
+    let mut rows = Vec::new();
+    for &replicas in &replica_counts {
+        let opts = ServeOptions { replicas, ..base };
+        let (drive, responses, stats) = run_server(
+            &su.engine, &su.params, &su.bank, su.input_feeding, &su.cfg, &opts,
+            |h| drive_arrivals(h, &arrivals),
+        )?;
+        for resp in &responses {
+            if resp.tokens != reference[resp.id as usize % pool.len()] {
+                return Err(anyhow!(
+                    "serving diverged from the single-sentence reference at \
+                     request {} ({} replicas)",
+                    resp.id,
+                    replicas
+                ));
+            }
+        }
+        let (p50, p95, p99) = stats.latency_percentiles_ms();
+        println!(
+            "replicas {replicas}: {}/{} accepted ({} shed) -> {:.2} sent/s sustained, \
+             p50/p95/p99 {p50:.1}/{p95:.1}/{p99:.1} ms, fill {:.2}, waste {:.2}, {} stolen groups",
+            drive.accepted,
+            stats.submitted,
+            drive.rejected,
+            stats.sentences_per_sec(),
+            stats.mean_fill(),
+            stats.mean_waste(),
+            stats.stolen_groups,
+        );
+        rows.push(report::ServeRow {
+            replicas,
+            beam: su.cfg.beam,
+            offered_per_s: drive.offered_per_s,
+            stats,
+        });
+    }
+    print!("\n{}", report::serve_table(&rows));
+    println!("wrote BENCH_serve.json");
     Ok(())
 }
 
@@ -428,7 +539,7 @@ fn cmd_table4(args: &Args) -> Result<()> {
     let gnmt = args.get("gnmt").is_some();
     let exp = build_experiment(args, &engine)?;
     let corpus = report::make_corpus(&exp.data, &exp.model);
-    let batcher = report::make_batcher(&exp, &corpus);
+    let batcher = report::make_batcher(&exp, &corpus)?;
     // Input-feeding follows the model the checkpoint was trained with:
     // the GNMT half of Table 4 is the baseline (IF), the Marian half is
     // HybridNMT (no IF).
@@ -466,7 +577,7 @@ fn cmd_table5(args: &Args) -> Result<()> {
             }
             let exp = build_experiment(&sub, &engine)?;
             let corpus = report::make_corpus(&exp.data, &exp.model);
-            let mut batcher = report::make_batcher(&exp, &corpus);
+            let mut batcher = report::make_batcher(&exp, &corpus)?;
             let mut trainer = Trainer::new(&engine, &exp)?;
             trainer.run(&mut batcher, |_| {})?;
             // Test decode rides the batched multi-device engine (token-
@@ -504,7 +615,7 @@ fn cmd_table5(args: &Args) -> Result<()> {
             label.to_string(),
             bleus[0],
             bleus[1],
-            dec_sents as f64 / dec_secs.max(1e-9),
+            per_sec(dec_sents as f64, dec_secs),
         ));
     }
     print!("{}", report::table5(&rows));

@@ -12,10 +12,12 @@ use crate::metrics::corpus_bleu;
 use crate::model_spec::param_count;
 use crate::parallel::build_plan;
 use crate::runtime::{Engine, ParamBank};
+use crate::serve::ServeStats;
 use crate::sim::simulate;
 use crate::tensor::Tensor;
 use crate::train::Trainer;
 use crate::util::json::Json;
+use crate::util::per_sec;
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -32,7 +34,9 @@ pub fn make_corpus(data: &DataConfig, dims: &ModelDims) -> Corpus {
     )
 }
 
-pub fn make_batcher(exp: &Experiment, corpus: &Corpus) -> Batcher {
+/// Encode + bucket the corpus for an experiment. Errors (rather than
+/// panicking later) when the corpus cannot fill one training batch.
+pub fn make_batcher(exp: &Experiment, corpus: &Corpus) -> Result<Batcher> {
     Batcher::new(
         corpus,
         exp.model.vocab,
@@ -229,7 +233,7 @@ pub fn table3_wallclock(engine: &Engine, hw: &HwConfig, steps: usize) -> Result<
             artifacts_dir: String::new(),
         };
         let corpus = make_corpus(&exp.data, &exp.model);
-        let mut batcher = make_batcher(&exp, &corpus);
+        let mut batcher = make_batcher(&exp, &corpus)?;
         let mut trainer = Trainer::new(engine, &exp)?;
         // Warmup: compile artifacts, fill the parameter bank.
         let warm = batcher.next_train();
@@ -350,7 +354,7 @@ pub fn figure4(
             data: data.clone(),
             artifacts_dir: String::new(),
         };
-        let mut batcher = make_batcher(&exp, &corpus);
+        let mut batcher = make_batcher(&exp, &corpus)?;
         let mut trainer = Trainer::new(engine, &exp)?;
         trainer.run(&mut batcher, |_| {})?;
         for p in &trainer.history {
@@ -492,7 +496,7 @@ pub fn table4(
     }
     write!(out, "{:<18}", "sent/s (wall)").unwrap();
     for (bi, _) in beams.iter().enumerate() {
-        write!(out, "{:>8.2}", beam_sents[bi] as f64 / beam_secs[bi].max(1e-9)).unwrap();
+        write!(out, "{:>8.2}", per_sec(beam_sents[bi] as f64, beam_secs[bi])).unwrap();
     }
     writeln!(out).unwrap();
     let _ = corpus;
@@ -679,6 +683,135 @@ pub fn decode_bench_table(rows: &[DecodeRow], sentences: usize) -> String {
     let _ = std::fs::write("BENCH_decode.json", Json::Obj(all).to_string());
     write_results("decode_bench.txt", &out);
     write_results("decode_bench.csv", &csv);
+    out
+}
+
+// -------------------------------------------------------- Serve bench
+
+/// One measured online-serving configuration (`serve-load`).
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    /// Decode replicas the scheduler dispatched over.
+    pub replicas: usize,
+    /// Beam width.
+    pub beam: usize,
+    /// Offered load of the (identical) arrival schedule, requests/s.
+    pub offered_per_s: f64,
+    /// Aggregated serving metrics for the run.
+    pub stats: ServeStats,
+}
+
+/// Render the serving-benchmark table — offered load vs sustained
+/// throughput vs tail latency across replica counts — and persist it
+/// (`results/serve_bench.{txt,csv}` + the `BENCH_serve.json`
+/// perf-tracking file, merged like `BENCH_decode.json` so sweeps
+/// accumulate). Every row in one call faced the same deterministic
+/// arrival schedule, so the replica column is the only variable.
+pub fn serve_table(rows: &[ServeRow]) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Online serving: offered load vs sustained throughput vs tail latency\n\
+         (dynamic micro-batching scheduler; identical Poisson arrivals per row;\n\
+         response tokens verified identical to the single-sentence reference)."
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<9} {:>6} {:>9} {:>9} {:>9}  {:>8} {:>8} {:>8}  {:>6} {:>6} {:>6} {:>7}",
+        "replicas", "beam", "offered/s", "sent/s", "tok/s", "p50 ms", "p95 ms", "p99 ms",
+        "fill", "waste", "depth", "reject"
+    )
+    .unwrap();
+    let mut csv = String::from(
+        "replicas,beam,offered_per_s,sent_per_s,tok_per_s,p50_ms,p95_ms,p99_ms,\
+         batch_fill,padding_waste,queue_depth_mean,accepted,rejected,invalid,groups,stolen\n",
+    );
+    let mut bench: BTreeMap<String, Json> = BTreeMap::new();
+    for r in rows {
+        let st = &r.stats;
+        let (p50, p95, p99) = st.latency_percentiles_ms();
+        writeln!(
+            out,
+            "{:<9} {:>6} {:>9.1} {:>9.2} {:>9.1}  {:>8.1} {:>8.1} {:>8.1}  {:>6.2} {:>6.2} {:>6.1} {:>7}",
+            r.replicas,
+            r.beam,
+            r.offered_per_s,
+            st.sentences_per_sec(),
+            st.tokens_per_sec(),
+            p50,
+            p95,
+            p99,
+            st.mean_fill(),
+            st.mean_waste(),
+            st.mean_depth(),
+            st.rejected,
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{},{},{:.3},{:.3},{:.2},{:.3},{:.3},{:.3},{:.4},{:.4},{:.2},{},{},{},{},{}",
+            r.replicas,
+            r.beam,
+            r.offered_per_s,
+            st.sentences_per_sec(),
+            st.tokens_per_sec(),
+            p50,
+            p95,
+            p99,
+            st.mean_fill(),
+            st.mean_waste(),
+            st.mean_depth(),
+            st.accepted,
+            st.rejected,
+            st.invalid,
+            st.groups,
+            st.stolen_groups,
+        )
+        .unwrap();
+        // Dots would read as nesting in the flat key namespace, so the
+        // offered rate is embedded with `p` as the decimal mark.
+        let load = format!("{:.1}", r.offered_per_s).replace('.', "p");
+        let key = format!("r{}.beam{}.load{load}", r.replicas, r.beam);
+        for (suffix, v) in [
+            ("p50_ms", p50),
+            ("p95_ms", p95),
+            ("p99_ms", p99),
+            ("sent_per_s", st.sentences_per_sec()),
+            ("tok_per_s", st.tokens_per_sec()),
+            ("batch_fill", st.mean_fill()),
+            ("padding_waste", st.mean_waste()),
+            ("queue_depth_mean", st.mean_depth()),
+            ("rejected", st.rejected as f64),
+            ("invalid", st.invalid as f64),
+        ] {
+            bench.insert(format!("{key}.{suffix}"), Json::Num(v));
+        }
+    }
+    if let (Some(base), Some(best)) = (
+        rows.iter()
+            .find(|r| r.replicas == 1)
+            .map(|r| r.stats.sentences_per_sec()),
+        rows.iter()
+            .map(|r| r.stats.sentences_per_sec())
+            .max_by(|a, b| a.total_cmp(b)),
+    ) {
+        writeln!(
+            out,
+            "\nbest replica scaling: {:.2}x the 1-replica sustained throughput",
+            best / base.max(1e-9)
+        )
+        .unwrap();
+    }
+    let mut all = std::fs::read_to_string("BENCH_serve.json")
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    all.extend(bench);
+    let _ = std::fs::write("BENCH_serve.json", Json::Obj(all).to_string());
+    write_results("serve_bench.txt", &out);
+    write_results("serve_bench.csv", &csv);
     out
 }
 

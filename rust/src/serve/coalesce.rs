@@ -1,0 +1,224 @@
+//! Dynamic micro-batcher: coalesce independently-arriving requests
+//! into well-packed device groups.
+//!
+//! The serving-side analogue of the training [`crate::data::Batcher`]'s
+//! length bucketing: requests are keyed into source-length buckets so a
+//! group's decode loop (which runs until its *longest* member finishes)
+//! wastes as few steps as possible on already-finished short sentences.
+//! A bucket flushes when it reaches the device group capacity
+//! (`width / beam` sentences) or when its oldest member has waited past
+//! the `max_wait` deadline — the classic throughput/latency knob of
+//! online batching systems.
+//!
+//! This type is pure bookkeeping: no clock, no threads, no device. The
+//! caller (the scheduler in [`super::server`]) feeds it admission
+//! timestamps and asks for expired buckets explicitly, which is what
+//! makes the permutation/fill properties testable without an engine
+//! (`rust/tests/property.rs`).
+
+use std::collections::BTreeMap;
+
+/// One admitted request waiting to be packed into a group.
+#[derive(Debug, Clone)]
+pub struct Pending {
+    /// Caller-chosen request id (responses are keyed by it).
+    pub id: u64,
+    /// Source token ids (already validated against the model shapes).
+    pub src: Vec<i32>,
+    /// Seconds since server start at admission (drives the deadline
+    /// flush and the per-request latency trace).
+    pub t_submit: f64,
+}
+
+/// One packed device group, ready for a replica to decode.
+#[derive(Debug, Clone)]
+pub struct Group {
+    /// Requests in admission order (≤ `capacity`).
+    pub reqs: Vec<Pending>,
+    /// Device group capacity the coalescer was packing toward.
+    pub capacity: usize,
+}
+
+impl Group {
+    /// Fraction of the device batch's sentence slots actually filled —
+    /// 1.0 for a full group, lower for deadline flushes.
+    pub fn fill_ratio(&self) -> f64 {
+        self.reqs.len() as f64 / self.capacity.max(1) as f64
+    }
+}
+
+/// Length-bucketed request coalescer (see module docs).
+#[derive(Debug)]
+pub struct Coalescer {
+    capacity: usize,
+    bucket_width: usize,
+    max_wait_s: f64,
+    /// Bucket key → waiting requests in admission order. BTreeMap so
+    /// every drain/expiry walk is deterministic.
+    buckets: BTreeMap<usize, Vec<Pending>>,
+}
+
+impl Coalescer {
+    /// `capacity` = sentences per device group (`width / beam`);
+    /// `bucket_width` = source-length granularity in tokens (1 buckets
+    /// exact lengths together; larger trades padding for fill);
+    /// `max_wait_s` = deadline before a partial bucket ships anyway.
+    pub fn new(capacity: usize, bucket_width: usize, max_wait_s: f64) -> Self {
+        Coalescer {
+            capacity: capacity.max(1),
+            bucket_width: bucket_width.max(1),
+            max_wait_s: max_wait_s.max(0.0),
+            buckets: BTreeMap::new(),
+        }
+    }
+
+    /// Device group capacity this coalescer packs toward.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn bucket_key(&self, src_len: usize) -> usize {
+        // src_len ≥ 1 (admission validates); key 0 is the shortest bucket.
+        (src_len.max(1) - 1) / self.bucket_width
+    }
+
+    /// Admit one request. Returns a full group the moment its bucket
+    /// reaches capacity, `None` while it is still filling.
+    pub fn push(&mut self, req: Pending) -> Option<Group> {
+        let key = self.bucket_key(req.src.len());
+        let bucket = self.buckets.entry(key).or_default();
+        bucket.push(req);
+        if bucket.len() >= self.capacity {
+            let reqs = std::mem::take(bucket);
+            self.buckets.remove(&key);
+            Some(Group { reqs, capacity: self.capacity })
+        } else {
+            None
+        }
+    }
+
+    /// Buckets whose *oldest* member has waited past `max_wait_s` as of
+    /// `now` ship immediately, partial or not — bounded queueing delay
+    /// is the admission contract.
+    pub fn flush_expired(&mut self, now: f64) -> Vec<Group> {
+        let expired: Vec<usize> = self
+            .buckets
+            .iter()
+            .filter(|(_, reqs)| {
+                reqs.first()
+                    .is_some_and(|r| now - r.t_submit >= self.max_wait_s)
+            })
+            .map(|(&k, _)| k)
+            .collect();
+        expired
+            .into_iter()
+            .map(|k| Group {
+                reqs: self.buckets.remove(&k).unwrap_or_default(),
+                capacity: self.capacity,
+            })
+            .collect()
+    }
+
+    /// Earliest deadline among waiting buckets (absolute seconds since
+    /// server start) — the scheduler's wait-timeout. `None` when empty.
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.buckets
+            .values()
+            .filter_map(|reqs| reqs.first().map(|r| r.t_submit + self.max_wait_s))
+            .fold(None, |acc: Option<f64>, d| {
+                Some(acc.map_or(d, |a| a.min(d)))
+            })
+    }
+
+    /// Ship everything still waiting (shutdown drain), shortest bucket
+    /// first. Partial groups are expected here.
+    pub fn drain(&mut self) -> Vec<Group> {
+        let buckets = std::mem::take(&mut self.buckets);
+        buckets
+            .into_values()
+            .filter(|reqs| !reqs.is_empty())
+            .map(|reqs| Group { reqs, capacity: self.capacity })
+            .collect()
+    }
+
+    /// Requests currently waiting in partial buckets.
+    pub fn pending(&self) -> usize {
+        self.buckets.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize, t: f64) -> Pending {
+        Pending { id, src: vec![5; len], t_submit: t }
+    }
+
+    #[test]
+    fn full_bucket_ships_immediately() {
+        let mut c = Coalescer::new(4, 4, 10.0);
+        for i in 0..3 {
+            assert!(c.push(req(i, 6, 0.0)).is_none());
+        }
+        let g = c.push(req(3, 6, 0.0)).expect("fourth same-length request fills the group");
+        assert_eq!(g.reqs.len(), 4);
+        assert_eq!(g.fill_ratio(), 1.0);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn lengths_separate_into_buckets() {
+        let mut c = Coalescer::new(2, 4, 10.0);
+        assert!(c.push(req(0, 2, 0.0)).is_none());
+        // 2 and 10 tokens land in different buckets: no group yet.
+        assert!(c.push(req(1, 10, 0.0)).is_none());
+        assert_eq!(c.pending(), 2);
+        // A second short request completes the short bucket only.
+        let g = c.push(req(2, 3, 0.0)).unwrap();
+        let ids: Vec<u64> = g.reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_buckets() {
+        let mut c = Coalescer::new(8, 4, 0.5);
+        c.push(req(0, 3, 0.0));
+        c.push(req(1, 9, 0.2));
+        assert!(c.flush_expired(0.4).is_empty(), "nothing expired yet");
+        let gs = c.flush_expired(0.5);
+        assert_eq!(gs.len(), 1, "only the older bucket expired");
+        assert_eq!(gs[0].reqs[0].id, 0);
+        assert!(gs[0].fill_ratio() < 1.0);
+        let gs = c.flush_expired(0.7);
+        assert_eq!(gs.len(), 1);
+        assert_eq!(gs[0].reqs[0].id, 1);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut c = Coalescer::new(8, 1, 1.0);
+        assert_eq!(c.next_deadline(), None);
+        c.push(req(0, 4, 2.0));
+        c.push(req(1, 7, 0.5));
+        assert_eq!(c.next_deadline(), Some(1.5));
+    }
+
+    #[test]
+    fn drain_partitions_everything() {
+        let mut c = Coalescer::new(4, 2, 10.0);
+        for i in 0..7 {
+            c.push(req(i, 1 + (i as usize % 5), 0.0));
+        }
+        let mut ids: Vec<u64> = c
+            .drain()
+            .iter()
+            .flat_map(|g| g.reqs.iter().map(|r| r.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+        assert_eq!(c.pending(), 0);
+        assert!(c.drain().is_empty());
+    }
+}

@@ -1,0 +1,138 @@
+//! Deterministic synthetic traffic: Poisson arrivals over a sentence
+//! pool, paced in real time against the server clock.
+//!
+//! The arrival *schedule* (which sentence, when) is a pure function of
+//! `(pool, n, rate, seed)` via [`crate::rng::Rng`], so two runs at
+//! different replica counts face byte-identical offered load — the
+//! prerequisite for the `serve-load` table to compare replica counts
+//! at all. Only the wall-clock pacing (and therefore latency) varies
+//! with the machine.
+
+use super::server::{ServerHandle, SubmitError};
+use crate::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// One scheduled request arrival.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    /// Request id (position in the schedule).
+    pub id: u64,
+    /// Source token ids.
+    pub src: Vec<i32>,
+    /// Arrival time, seconds since the schedule's start.
+    pub at_s: f64,
+}
+
+/// Build a deterministic Poisson arrival schedule: `n` requests drawn
+/// round-robin from `pool`, with exponential inter-arrival times at
+/// `rate_per_s` offered requests/second. `rate_per_s <= 0` means "all
+/// at once" (a pure burst — the admission-control stress shape).
+pub fn poisson_arrivals(
+    pool: &[Vec<i32>],
+    n: usize,
+    rate_per_s: f64,
+    seed: u64,
+) -> Vec<Arrival> {
+    assert!(!pool.is_empty(), "arrival pool must not be empty");
+    let mut rng = Rng::new(seed ^ 0xA11C_0FFE_E5E5_D00D);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            if rate_per_s > 0.0 {
+                // Inverse-CDF exponential; 1-u keeps ln's argument in
+                // (0, 1] (u is in [0, 1)).
+                t += -(1.0 - rng.f64()).ln() / rate_per_s;
+            }
+            Arrival { id: i as u64, src: pool[i % pool.len()].clone(), at_s: t }
+        })
+        .collect()
+}
+
+/// What the load generator observed while driving a schedule.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DriveReport {
+    /// Requests admitted.
+    pub accepted: u64,
+    /// Requests shed by admission control (queue full).
+    pub rejected: u64,
+    /// Offered requests per second over the driven span.
+    pub offered_per_s: f64,
+}
+
+/// Replay `arrivals` against a live server in real time: sleep until
+/// each arrival is due (on the server's own clock), submit, and shed
+/// on backpressure. Queue-full rejections are *counted*, not errors —
+/// shedding is the designed behavior under overload. An `Invalid`
+/// submission or a server failure aborts with an error.
+pub fn drive_arrivals(handle: &ServerHandle, arrivals: &[Arrival]) -> Result<DriveReport> {
+    let mut report = DriveReport::default();
+    for a in arrivals {
+        let wait = a.at_s - handle.elapsed_s();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        match handle.submit(a.id, a.src.clone()) {
+            Ok(()) => report.accepted += 1,
+            Err(SubmitError::QueueFull { .. }) => report.rejected += 1,
+            // A draining/failed server stops the generator: whatever
+            // failed will surface from run_server itself.
+            Err(SubmitError::Closed) => break,
+            Err(e @ SubmitError::Invalid(_)) => {
+                return Err(anyhow!("load generator submitted a bad request: {e}"))
+            }
+        }
+    }
+    let span = arrivals.last().map_or(0.0, |a| a.at_s);
+    report.offered_per_s = crate::util::per_sec(arrivals.len() as f64, span);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> Vec<Vec<i32>> {
+        vec![vec![5, 6, 7], vec![8, 9], vec![10, 11, 12, 13]]
+    }
+
+    #[test]
+    fn schedule_is_deterministic_in_seed() {
+        let a = poisson_arrivals(&pool(), 32, 10.0, 42);
+        let b = poisson_arrivals(&pool(), 32, 10.0, 42);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.src, y.src);
+            assert_eq!(x.at_s, y.at_s);
+        }
+        let c = poisson_arrivals(&pool(), 32, 10.0, 43);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.at_s != y.at_s), "seed must matter");
+    }
+
+    #[test]
+    fn arrival_times_are_monotone_and_rate_shaped() {
+        let a = poisson_arrivals(&pool(), 400, 50.0, 7);
+        for w in a.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+        // Mean inter-arrival ≈ 1/rate (within a loose statistical band).
+        let mean = a.last().unwrap().at_s / 400.0;
+        assert!((mean - 0.02).abs() < 0.01, "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn zero_rate_is_a_burst() {
+        let a = poisson_arrivals(&pool(), 10, 0.0, 1);
+        assert!(a.iter().all(|x| x.at_s == 0.0));
+    }
+
+    #[test]
+    fn pool_cycles_in_order() {
+        let p = pool();
+        let a = poisson_arrivals(&p, 7, 5.0, 9);
+        for (i, arr) in a.iter().enumerate() {
+            assert_eq!(arr.src, p[i % p.len()]);
+            assert_eq!(arr.id, i as u64);
+        }
+    }
+}

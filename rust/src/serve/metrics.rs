@@ -1,0 +1,206 @@
+//! Per-request tracing and aggregate serving metrics.
+//!
+//! Every admitted request carries timestamps through the pipeline
+//! (submit → dispatch → done); [`ServeStats`] aggregates them into the
+//! numbers a capacity planner actually reads: tail latency percentiles
+//! (p50/p95/p99), sustained throughput, queue depth, batch-fill ratio
+//! and padding (wasted decode-step) ratio. All rates go through
+//! [`crate::util::per_sec`] — the shared denominator guard.
+
+use crate::util::per_sec;
+
+/// Nearest-rank percentile of an already-sorted sample.
+fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize).max(1) - 1;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Nearest-rank percentile of an **unsorted** sample (`q` in [0, 1]).
+/// Returns 0.0 on an empty sample so downstream JSON stays finite.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.total_cmp(b));
+    nearest_rank(&xs, q)
+}
+
+fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+/// Aggregate metrics for one serving run (one `run_server` call).
+///
+/// Counters are exact; the sample vectors feed the percentile /
+/// mean accessors. Latency samples are in seconds; accessors convert
+/// to milliseconds because that is the unit tail latency is read in.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Submission attempts (accepted + rejected).
+    pub submitted: u64,
+    /// Requests admitted past the backpressure gate.
+    pub accepted: u64,
+    /// Requests shed by admission control (queue full) — backpressure,
+    /// distinct from malformed input.
+    pub rejected: u64,
+    /// Requests refused as undecodable (empty / oversize source).
+    pub invalid: u64,
+    /// Requests that produced a response.
+    pub completed: u64,
+    /// Output tokens across all responses.
+    pub out_tokens: usize,
+    /// Device groups decoded.
+    pub groups: u64,
+    /// Groups a replica stole from a sibling's queue while idle.
+    pub stolen_groups: u64,
+    /// Batched decode-step iterations across all replicas.
+    pub decode_steps: u64,
+    /// Wall-clock seconds from server start to full drain.
+    pub wall_s: f64,
+    /// Per-request end-to-end latency (submit → response), seconds.
+    pub latencies_s: Vec<f64>,
+    /// Per-request scheduling delay (submit → replica pickup), seconds.
+    pub queue_delays_s: Vec<f64>,
+    /// Per-group fill ratio (requests / group capacity).
+    pub fills: Vec<f64>,
+    /// Per-group padding waste: fraction of executed sentence-step
+    /// slots spent on already-finished sentences (0 = perfectly
+    /// length-matched group).
+    pub wastes: Vec<f64>,
+    /// In-flight backlog sampled at each accepted submission.
+    pub depth_samples: Vec<u64>,
+}
+
+impl ServeStats {
+    /// End-to-end latency percentile in milliseconds.
+    pub fn latency_ms(&self, q: f64) -> f64 {
+        percentile(&self.latencies_s, q) * 1e3
+    }
+
+    /// `(p50, p95, p99)` end-to-end latency in milliseconds with one
+    /// sort — what the report tables use (each individual accessor
+    /// clone-sorts the sample per call).
+    pub fn latency_percentiles_ms(&self) -> (f64, f64, f64) {
+        let mut xs = self.latencies_s.clone();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        (
+            nearest_rank(&xs, 0.50) * 1e3,
+            nearest_rank(&xs, 0.95) * 1e3,
+            nearest_rank(&xs, 0.99) * 1e3,
+        )
+    }
+
+    /// Median latency (ms).
+    pub fn p50_ms(&self) -> f64 {
+        self.latency_ms(0.50)
+    }
+
+    /// 95th-percentile latency (ms).
+    pub fn p95_ms(&self) -> f64 {
+        self.latency_ms(0.95)
+    }
+
+    /// 99th-percentile latency (ms).
+    pub fn p99_ms(&self) -> f64 {
+        self.latency_ms(0.99)
+    }
+
+    /// Mean end-to-end latency (ms).
+    pub fn mean_latency_ms(&self) -> f64 {
+        mean(&self.latencies_s) * 1e3
+    }
+
+    /// Mean scheduling delay before a replica picked the request up (ms).
+    pub fn mean_queue_delay_ms(&self) -> f64 {
+        mean(&self.queue_delays_s) * 1e3
+    }
+
+    /// Mean batch-fill ratio across dispatched groups.
+    pub fn mean_fill(&self) -> f64 {
+        mean(&self.fills)
+    }
+
+    /// Mean padding-waste ratio across dispatched groups.
+    pub fn mean_waste(&self) -> f64 {
+        mean(&self.wastes)
+    }
+
+    /// Mean in-flight backlog observed at admission.
+    pub fn mean_depth(&self) -> f64 {
+        if self.depth_samples.is_empty() {
+            return 0.0;
+        }
+        self.depth_samples.iter().sum::<u64>() as f64 / self.depth_samples.len() as f64
+    }
+
+    /// Largest in-flight backlog observed at admission.
+    pub fn max_depth(&self) -> u64 {
+        self.depth_samples.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Sustained completed-sentences per second over the whole run.
+    pub fn sentences_per_sec(&self) -> f64 {
+        per_sec(self.completed as f64, self.wall_s)
+    }
+
+    /// Sustained output tokens per second over the whole run.
+    pub fn tokens_per_sec(&self) -> f64 {
+        per_sec(self.out_tokens as f64, self.wall_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.95), 95.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_handles_small_and_unsorted() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 0.5), 2.0);
+    }
+
+    #[test]
+    fn percentile_tuple_matches_accessors() {
+        let st = ServeStats {
+            latencies_s: (1..=40).map(|i| i as f64 / 100.0).collect(),
+            ..Default::default()
+        };
+        let (p50, p95, p99) = st.latency_percentiles_ms();
+        assert_eq!(p50, st.p50_ms());
+        assert_eq!(p95, st.p95_ms());
+        assert_eq!(p99, st.p99_ms());
+    }
+
+    #[test]
+    fn stats_accessors_stay_finite_when_empty() {
+        let st = ServeStats::default();
+        assert!(st.p50_ms().is_finite());
+        assert!(st.mean_fill().is_finite());
+        assert!(st.sentences_per_sec().is_finite());
+        assert_eq!(st.max_depth(), 0);
+    }
+
+    #[test]
+    fn rates_use_the_shared_guard() {
+        let st = ServeStats { completed: 10, wall_s: 0.0, ..Default::default() };
+        assert!(st.sentences_per_sec().is_finite());
+        let st = ServeStats { completed: 10, out_tokens: 40, wall_s: 2.0, ..Default::default() };
+        assert_eq!(st.sentences_per_sec(), 5.0);
+        assert_eq!(st.tokens_per_sec(), 20.0);
+    }
+}

@@ -1,0 +1,39 @@
+//! Online translation serving: turn a stream of independently-arriving
+//! requests into well-packed device batches.
+//!
+//! PR 2's [`crate::decode::batch`] engine is an *offline* corpus
+//! decoder: the whole workload is known up front, so packing is a
+//! `chunks()` call. Serving inverts that — requests arrive one at a
+//! time at unpredictable instants, and batching efficiency (the thing
+//! the paper's hybrid parallelism buys at training time, and Ott et
+//! al., 2018 identify as the deployment bottleneck) has to be
+//! *recovered* online. This subsystem is that layer:
+//!
+//! * [`server::run_server`] — the scheduler: a bounded submission
+//!   queue with admission control ([`SubmitError::QueueFull`], never a
+//!   panic), a length-bucketed micro-batcher ([`coalesce::Coalescer`])
+//!   flushing on group-full or a `max_wait_ms` deadline, and 1/2/4
+//!   decode replicas (each a [`crate::decode::BatchDecoder`] over the
+//!   shared engine + resident [`crate::runtime::ParamBank`]) with
+//!   per-replica work queues and idle-steal.
+//! * [`metrics::ServeStats`] — per-request tracing aggregated to
+//!   p50/p95/p99 latency, queue depth, batch-fill ratio and
+//!   padding-waste — the numbers `BENCH_serve.json` tracks.
+//! * [`loadgen`] — deterministic Poisson arrival generator (seeded
+//!   from [`crate::rng::Rng`]) behind the `serve-load` CLI.
+//!
+//! Invariant: response tokens are identical to the single-sentence
+//! reference [`crate::decode::Decoder`] for every request, regardless
+//! of arrival order, coalescing, or replica count — asserted by
+//! `rust/tests/serve_equivalence.rs`, with the coalescer's permutation
+//! and fill properties covered engine-free in `rust/tests/property.rs`.
+
+pub mod coalesce;
+pub mod loadgen;
+pub mod metrics;
+pub mod server;
+
+pub use coalesce::{Coalescer, Group, Pending};
+pub use loadgen::{drive_arrivals, poisson_arrivals, Arrival, DriveReport};
+pub use metrics::{percentile, ServeStats};
+pub use server::{run_server, Response, ServeOptions, ServerHandle, SubmitError};

@@ -1,0 +1,490 @@
+//! The online scheduler: bounded admission → coalescer → multi-replica
+//! dispatch with idle-steal.
+//!
+//! Thread topology (all scoped — the server borrows the engine, the
+//! checkpoint parameters and the shared [`ParamBank`] like every other
+//! decode driver):
+//!
+//! ```text
+//!   driver (caller thread) ── submit ──► bounded queue (admission)
+//!                                             │ coalescer thread
+//!                                             ▼
+//!                              length-bucketed micro-batcher
+//!                               (group-full / max_wait flush)
+//!                                             │ round-robin
+//!                        ┌───────────────┬────┴──────────┐
+//!                        ▼               ▼               ▼
+//!                   replica 0       replica 1   ...  replica R-1
+//!                 (BatchDecoder)  (BatchDecoder)   (BatchDecoder)
+//!                        └──────── idle-steal ◄──────────┘
+//! ```
+//!
+//! Admission control bounds the **in-flight** backlog (queued +
+//! coalescing + decoding): a submission over the bound returns
+//! [`SubmitError::QueueFull`] — backpressure is an error the client
+//! sees, never a panic and never an unbounded queue. Each replica owns
+//! a work queue; an idle replica steals from the back of the longest
+//! sibling queue, so a burst round-robined onto one replica cannot
+//! strand the others.
+//!
+//! Correctness: a group decode is [`BatchDecoder::translate_batch`],
+//! whose per-sentence beam search is self-contained — so the tokens of
+//! every response are identical to the single-sentence reference
+//! [`crate::decode::Decoder`] no matter the arrival order, how requests
+//! were coalesced, or how many replicas raced
+//! (`rust/tests/serve_equivalence.rs`).
+
+use super::coalesce::{Coalescer, Group, Pending};
+use super::metrics::ServeStats;
+use crate::config::ModelDims;
+use crate::decode::{check_src, BatchDecoder, BeamConfig};
+use crate::runtime::{Engine, ParamBank};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Scheduler configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Decode replicas (each owns a [`BatchDecoder`] over the shared
+    /// engine + parameter bank; the serving analogue of plan devices).
+    pub replicas: usize,
+    /// Admission bound on in-flight requests (queued + coalescing +
+    /// decoding). Submissions beyond it get [`SubmitError::QueueFull`].
+    pub queue_capacity: usize,
+    /// Deadline (milliseconds) before a partial group ships anyway.
+    pub max_wait_ms: f64,
+    /// Source-length bucket granularity of the coalescer, in tokens.
+    pub bucket_width: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            replicas: 1,
+            queue_capacity: 256,
+            max_wait_ms: 5.0,
+            bucket_width: 4,
+        }
+    }
+}
+
+/// Why a submission was not admitted.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Backpressure: the in-flight backlog is at capacity. Retry later
+    /// or shed the request — the server never buffers unboundedly.
+    QueueFull {
+        /// The configured admission bound.
+        capacity: usize,
+    },
+    /// The server is draining (or a replica failed): no new work.
+    Closed,
+    /// The request can never decode on this model (empty or oversize
+    /// source) — rejected before it costs any device work.
+    Invalid(anyhow::Error),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { capacity } => {
+                write!(f, "queue full: {capacity} requests already in flight")
+            }
+            SubmitError::Closed => write!(f, "server is draining; submission refused"),
+            SubmitError::Invalid(e) => write!(f, "invalid request: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// The id the request was submitted under.
+    pub id: u64,
+    /// Decoded target tokens — identical to what the single-sentence
+    /// reference `Decoder` produces for the same source.
+    pub tokens: Vec<i32>,
+    /// End-to-end seconds from admission to completion.
+    pub latency_s: f64,
+    /// Seconds from admission to replica pickup (queue + coalescing).
+    pub queue_delay_s: f64,
+    /// Replica that decoded this request's group.
+    pub replica: usize,
+}
+
+struct SubQueue {
+    q: VecDeque<Pending>,
+    closed: bool,
+}
+
+struct Dispatch {
+    queues: Vec<VecDeque<Group>>,
+    /// No further groups will arrive (coalescer drained).
+    closed: bool,
+    /// Round-robin cursor.
+    next: usize,
+}
+
+#[derive(Default)]
+struct Collected {
+    responses: Vec<Response>,
+    fills: Vec<f64>,
+    wastes: Vec<f64>,
+    queue_delays: Vec<f64>,
+    groups: u64,
+}
+
+/// State shared by the driver, the coalescer thread and the replicas.
+struct Shared {
+    t0: Instant,
+    dims: ModelDims,
+    capacity: usize,
+    in_flight: AtomicU64,
+    sub: Mutex<SubQueue>,
+    sub_cv: Condvar,
+    disp: Mutex<Dispatch>,
+    disp_cv: Condvar,
+    collect: Mutex<Collected>,
+    depth_samples: Mutex<Vec<u64>>,
+    submitted: AtomicU64,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    invalid: AtomicU64,
+    stolen: AtomicU64,
+    failed: AtomicBool,
+    error: Mutex<Option<anyhow::Error>>,
+}
+
+impl Shared {
+    fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn dispatch(&self, g: Group) {
+        let mut d = self.disp.lock().unwrap();
+        let i = d.next % d.queues.len();
+        d.next += 1;
+        d.queues[i].push_back(g);
+        self.disp_cv.notify_all();
+    }
+
+    fn close_dispatch(&self) {
+        let mut d = self.disp.lock().unwrap();
+        d.closed = true;
+        self.disp_cv.notify_all();
+    }
+
+    fn close_submissions(&self) {
+        let mut sub = self.sub.lock().unwrap();
+        sub.closed = true;
+        self.sub_cv.notify_all();
+    }
+
+    fn fail(&self, e: anyhow::Error) {
+        {
+            let mut slot = self.error.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+        self.failed.store(true, Ordering::SeqCst);
+        // Unblock everyone: the driver sees Closed, the coalescer and
+        // replicas observe `failed` and exit.
+        self.close_submissions();
+        self.close_dispatch();
+    }
+}
+
+/// Submission handle the driver closure receives: the client-facing
+/// surface of the server (admission control included).
+pub struct ServerHandle<'s> {
+    shared: &'s Shared,
+}
+
+impl ServerHandle<'_> {
+    /// Submit one request. Admission is strict: a full queue, a
+    /// draining server, or an undecodable source is an `Err` — the
+    /// caller decides whether to retry, shed, or abort.
+    ///
+    /// `id` keys the eventual [`Response`]; the caller should keep ids
+    /// unique (the server passes them through untouched).
+    pub fn submit(&self, id: u64, src: Vec<i32>) -> Result<(), SubmitError> {
+        let sh = self.shared;
+        sh.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = check_src(&sh.dims, &src) {
+            sh.invalid.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Invalid(e));
+        }
+        let mut sub = sh.sub.lock().unwrap();
+        if sub.closed || sh.failed.load(Ordering::Relaxed) {
+            return Err(SubmitError::Closed);
+        }
+        // The admission check runs under the queue lock, so the bound
+        // is exact even with concurrent submitters.
+        let depth = sh.in_flight.load(Ordering::Relaxed);
+        if depth >= sh.capacity as u64 {
+            sh.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::QueueFull { capacity: sh.capacity });
+        }
+        sh.in_flight.fetch_add(1, Ordering::Relaxed);
+        sh.accepted.fetch_add(1, Ordering::Relaxed);
+        sh.depth_samples.lock().unwrap().push(depth);
+        sub.q.push_back(Pending { id, src, t_submit: sh.now_s() });
+        sh.sub_cv.notify_all();
+        Ok(())
+    }
+
+    /// Requests currently in flight (admitted, not yet completed).
+    pub fn in_flight(&self) -> u64 {
+        self.shared.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Seconds since the server started (the clock all trace
+    /// timestamps are measured on — load generators pace against it).
+    pub fn elapsed_s(&self) -> f64 {
+        self.shared.now_s()
+    }
+}
+
+/// Closes submissions when dropped, so a panicking driver still lets
+/// the coalescer and replicas drain and the thread scope join.
+struct CloseGuard<'s>(&'s Shared);
+
+impl Drop for CloseGuard<'_> {
+    fn drop(&mut self) {
+        self.0.close_submissions();
+    }
+}
+
+fn run_coalescer(shared: &Shared, mut co: Coalescer) {
+    loop {
+        let (drained, closed) = {
+            let mut sub = shared.sub.lock().unwrap();
+            loop {
+                if !sub.q.is_empty() || sub.closed || shared.failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                match co.next_deadline() {
+                    // Nothing queued, nothing waiting: sleep until a
+                    // submission (or close) wakes us.
+                    None => sub = shared.sub_cv.wait(sub).unwrap(),
+                    // A partial bucket is aging: sleep at most until
+                    // its deadline, then flush whatever expired.
+                    Some(d) => {
+                        let left = d - shared.now_s();
+                        if left <= 0.0 {
+                            break;
+                        }
+                        let (s, _) = shared
+                            .sub_cv
+                            .wait_timeout(sub, Duration::from_secs_f64(left))
+                            .unwrap();
+                        sub = s;
+                        break;
+                    }
+                }
+            }
+            (sub.q.drain(..).collect::<Vec<Pending>>(), sub.closed)
+        };
+        if shared.failed.load(Ordering::Relaxed) {
+            shared.close_dispatch();
+            return;
+        }
+        let mut groups: Vec<Group> = Vec::new();
+        for p in drained {
+            if let Some(g) = co.push(p) {
+                groups.push(g);
+            }
+        }
+        groups.extend(co.flush_expired(shared.now_s()));
+        if closed {
+            groups.extend(co.drain());
+        }
+        for g in groups {
+            shared.dispatch(g);
+        }
+        if closed && co.pending() == 0 {
+            shared.close_dispatch();
+            return;
+        }
+    }
+}
+
+fn run_replica(shared: &Shared, r: usize, decoder: &BatchDecoder, cfg: &BeamConfig) {
+    loop {
+        let (group, stolen) = {
+            let mut d = shared.disp.lock().unwrap();
+            loop {
+                if shared.failed.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some(g) = d.queues[r].pop_front() {
+                    break (g, false);
+                }
+                // Idle-steal: take from the back of the longest sibling
+                // queue, so a round-robin imbalance (or one slow group)
+                // cannot strand work while replicas sit idle.
+                let victim = (0..d.queues.len())
+                    .filter(|&i| i != r && !d.queues[i].is_empty())
+                    .max_by_key(|&i| d.queues[i].len());
+                if let Some(v) = victim {
+                    let g = d.queues[v].pop_back().unwrap();
+                    break (g, true);
+                }
+                if d.closed {
+                    return;
+                }
+                d = shared.disp_cv.wait(d).unwrap();
+            }
+        };
+        if stolen {
+            shared.stolen.fetch_add(1, Ordering::Relaxed);
+        }
+        let t_pick = shared.now_s();
+        let srcs: Vec<Vec<i32>> = group.reqs.iter().map(|p| p.src.clone()).collect();
+        let steps0 = decoder.decode_steps();
+        match decoder.translate_batch(&srcs, cfg) {
+            Ok(hyps) => {
+                let t_done = shared.now_s();
+                // Padding waste: the group's decode loop ran until its
+                // slowest sentence finished; a sentence producing L
+                // tokens needed ~L+1 steps, the rest of the executed
+                // sentence-step slots were wasted on finished rows.
+                let steps = decoder.decode_steps() - steps0;
+                let used: u64 = hyps
+                    .iter()
+                    .map(|h| (h.len() as u64 + 1).min(steps.max(1)))
+                    .sum();
+                let total = steps.max(1) * hyps.len().max(1) as u64;
+                let waste = (1.0 - used as f64 / total as f64).clamp(0.0, 1.0);
+                let n_done = group.reqs.len() as u64;
+                {
+                    let mut c = shared.collect.lock().unwrap();
+                    c.groups += 1;
+                    c.fills.push(group.fill_ratio());
+                    c.wastes.push(waste);
+                    for (p, tokens) in group.reqs.iter().zip(hyps) {
+                        c.queue_delays.push(t_pick - p.t_submit);
+                        c.responses.push(Response {
+                            id: p.id,
+                            tokens,
+                            latency_s: t_done - p.t_submit,
+                            queue_delay_s: t_pick - p.t_submit,
+                            replica: r,
+                        });
+                    }
+                }
+                shared.in_flight.fetch_sub(n_done, Ordering::Relaxed);
+            }
+            Err(e) => {
+                shared.fail(anyhow!("replica {r}: {e:#}"));
+                return;
+            }
+        }
+    }
+}
+
+/// Run the serving scheduler for the lifetime of `driver`.
+///
+/// Spawns the coalescer and `opts.replicas` decode replicas (each with
+/// its own [`BatchDecoder`] over the shared engine + bank), calls
+/// `driver` with a [`ServerHandle`] on the current thread, then drains:
+/// every admitted request completes before this returns. Responses come
+/// back sorted by request id together with the run's [`ServeStats`].
+///
+/// The first replica error aborts the run and is returned; a rejected
+/// submission is *not* an error at this level — the driver observed and
+/// handled it.
+pub fn run_server<R>(
+    engine: &Engine,
+    params: &BTreeMap<String, Tensor>,
+    bank: &ParamBank,
+    input_feeding: bool,
+    cfg: &BeamConfig,
+    opts: &ServeOptions,
+    driver: impl FnOnce(&ServerHandle) -> Result<R>,
+) -> Result<(R, Vec<Response>, ServeStats)> {
+    let replicas = opts.replicas.max(1);
+    let decoders: Vec<BatchDecoder> = (0..replicas)
+        .map(|_| BatchDecoder::new(engine, params, bank, input_feeding))
+        .collect::<Result<_>>()?;
+    let width = decoders[0].width();
+    if cfg.beam == 0 || cfg.beam > width {
+        return Err(anyhow!(
+            "beam {} outside the packed decode width 1..={width}",
+            cfg.beam
+        ));
+    }
+    let capacity = decoders[0].group_capacity(cfg.beam);
+
+    let shared = Shared {
+        t0: Instant::now(),
+        dims: engine.dims().clone(),
+        capacity: opts.queue_capacity.max(1),
+        in_flight: AtomicU64::new(0),
+        sub: Mutex::new(SubQueue { q: VecDeque::new(), closed: false }),
+        sub_cv: Condvar::new(),
+        disp: Mutex::new(Dispatch {
+            queues: (0..replicas).map(|_| VecDeque::new()).collect(),
+            closed: false,
+            next: 0,
+        }),
+        disp_cv: Condvar::new(),
+        collect: Mutex::new(Collected::default()),
+        depth_samples: Mutex::new(Vec::new()),
+        submitted: AtomicU64::new(0),
+        accepted: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        invalid: AtomicU64::new(0),
+        stolen: AtomicU64::new(0),
+        failed: AtomicBool::new(false),
+        error: Mutex::new(None),
+    };
+
+    let driver_out = std::thread::scope(|s| {
+        let sh = &shared;
+        let co = Coalescer::new(capacity, opts.bucket_width, opts.max_wait_ms.max(0.0) / 1e3);
+        s.spawn(move || run_coalescer(sh, co));
+        for (r, dec) in decoders.iter().enumerate() {
+            s.spawn(move || run_replica(sh, r, dec, cfg));
+        }
+        let _close = CloseGuard(sh);
+        driver(&ServerHandle { shared: sh })
+        // `_close` drops here: submissions close, the coalescer drains
+        // its buckets, replicas finish their queues, the scope joins.
+    });
+
+    if let Some(e) = shared.error.lock().unwrap().take() {
+        return Err(e);
+    }
+    let driver_out = driver_out?;
+
+    let wall_s = shared.now_s();
+    let collected = shared.collect.into_inner().unwrap();
+    let mut responses = collected.responses;
+    responses.sort_by_key(|r| r.id);
+    let stats = ServeStats {
+        submitted: shared.submitted.load(Ordering::Relaxed),
+        accepted: shared.accepted.load(Ordering::Relaxed),
+        rejected: shared.rejected.load(Ordering::Relaxed),
+        invalid: shared.invalid.load(Ordering::Relaxed),
+        completed: responses.len() as u64,
+        out_tokens: responses.iter().map(|r| r.tokens.len()).sum(),
+        groups: collected.groups,
+        stolen_groups: shared.stolen.load(Ordering::Relaxed),
+        decode_steps: decoders.iter().map(|d| d.decode_steps()).sum(),
+        wall_s,
+        latencies_s: responses.iter().map(|r| r.latency_s).collect(),
+        queue_delays_s: collected.queue_delays,
+        fills: collected.fills,
+        wastes: collected.wastes,
+        depth_samples: shared.depth_samples.into_inner().unwrap(),
+    };
+    Ok((driver_out, responses, stats))
+}

@@ -2,3 +2,26 @@
 //! offline, so JSON et al. are implemented here rather than imported).
 
 pub mod json;
+
+/// Guarded per-second rate: `count / secs` with a tiny floor on the
+/// denominator, so a workload that finishes faster than the clock's
+/// resolution reports a huge-but-finite rate instead of `inf`/`NaN`.
+///
+/// Every per-second figure in the codebase (decode throughput, serve
+/// metrics, report tables) funnels through this one helper so the
+/// guard cannot drift between call sites.
+pub fn per_sec(count: f64, secs: f64) -> f64 {
+    count / secs.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::per_sec;
+
+    #[test]
+    fn per_sec_guards_zero_wall() {
+        assert!(per_sec(10.0, 0.0).is_finite());
+        assert_eq!(per_sec(10.0, 2.0), 5.0);
+        assert_eq!(per_sec(0.0, 0.0), 0.0);
+    }
+}

@@ -176,7 +176,7 @@ fn training_reduces_loss_all_strategies() {
     for st in Strategy::ALL {
         let exp = test_exp(&e, st);
         let corpus = hybridnmt::report::make_corpus(&exp.data, &exp.model);
-        let mut batcher = hybridnmt::report::make_batcher(&exp, &corpus);
+        let mut batcher = hybridnmt::report::make_batcher(&exp, &corpus).unwrap();
         let mut trainer = Trainer::new(&e, &exp).unwrap();
         let mut first = f64::NAN;
         let mut last = f64::NAN;
@@ -255,7 +255,7 @@ fn checkpoint_roundtrip_preserves_training_state() {
     let e = engine();
     let exp = test_exp(&e, Strategy::Hybrid);
     let corpus = hybridnmt::report::make_corpus(&exp.data, &exp.model);
-    let mut batcher = hybridnmt::report::make_batcher(&exp, &corpus);
+    let mut batcher = hybridnmt::report::make_batcher(&exp, &corpus).unwrap();
     let mut trainer = Trainer::new(&e, &exp).unwrap();
     for _ in 0..3 {
         let b = batcher.next_train();
@@ -280,7 +280,7 @@ fn dev_eval_is_deterministic() {
     let e = engine();
     let exp = test_exp(&e, Strategy::Hybrid);
     let corpus = hybridnmt::report::make_corpus(&exp.data, &exp.model);
-    let batcher = hybridnmt::report::make_batcher(&exp, &corpus);
+    let batcher = hybridnmt::report::make_batcher(&exp, &corpus).unwrap();
     let trainer = Trainer::new(&e, &exp).unwrap();
     let dev = batcher.dev_batches();
     assert!(!dev.is_empty());

@@ -11,6 +11,7 @@ use hybridnmt::data::Batcher;
 use hybridnmt::model_spec::param_specs;
 use hybridnmt::parallel::{build_plan, Op};
 use hybridnmt::rng::Rng;
+use hybridnmt::serve::{Coalescer, Group, Pending};
 use hybridnmt::sim::{cost, simulate};
 use hybridnmt::tensor::Tensor;
 use hybridnmt::util::json::Json;
@@ -169,7 +170,7 @@ fn prop_batch_mask_discipline() {
         let corpus =
             Corpus::generate("p", 600, 30, 30, &GenConfig::for_dims(m, 0.3, rng.next_u64()));
         let bsz = 4 * rng.range(1, 3);
-        let mut batcher = Batcher::new(&corpus, 256, bsz, m, m, rng.next_u64());
+        let mut batcher = Batcher::new(&corpus, 256, bsz, m, m, rng.next_u64()).unwrap();
         for _ in 0..5 {
             let batch = batcher.next_train();
             for bi in 0..bsz {
@@ -252,5 +253,91 @@ fn prop_removing_input_feeding_never_slower() {
             hybrid <= hybrid_if * 1.02,
             "dims {dims:?}: hybrid {hybrid} vs IF {hybrid_if}"
         );
+    }
+}
+
+/// The length-bucketed coalescer is a lossless partition: for any
+/// arrival permutation of the same request set, every request ends up
+/// in exactly one group (no drop, no duplicate), groups never exceed
+/// capacity, and each group is length-homogeneous (one bucket). The
+/// served *tokens* are then permutation-independent by construction —
+/// each sentence's beam search is self-contained — which
+/// `rust/tests/serve_equivalence.rs` asserts end-to-end on the engine.
+#[test]
+fn prop_coalescer_partitions_any_arrival_order() {
+    let mut rng = Rng::new(0xC0A1);
+    for trial in 0..20 {
+        let n = rng.range(1, 60);
+        let capacity = rng.range(1, 9);
+        let bucket_width = rng.range(1, 6);
+        // One shared request set...
+        let reqs: Vec<Pending> = (0..n)
+            .map(|i| Pending {
+                id: i as u64,
+                src: vec![5; rng.range(1, 24)],
+                t_submit: 0.0,
+            })
+            .collect();
+        // ...pushed in a random order.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut co = Coalescer::new(capacity, bucket_width, 1.0);
+        let mut groups: Vec<Group> = Vec::new();
+        for &i in &order {
+            groups.extend(co.push(reqs[i].clone()));
+        }
+        groups.extend(co.drain());
+        assert_eq!(co.pending(), 0, "trial {trial}");
+        let mut seen: Vec<u64> = Vec::new();
+        for g in &groups {
+            assert!(g.reqs.len() <= capacity, "trial {trial}: oversized group");
+            assert!(!g.reqs.is_empty(), "trial {trial}: empty group");
+            // Length homogeneity: all members share a bucket.
+            let key0 = (g.reqs[0].src.len() - 1) / bucket_width;
+            for r in &g.reqs {
+                assert_eq!((r.src.len() - 1) / bucket_width, key0, "trial {trial}");
+            }
+            seen.extend(g.reqs.iter().map(|r| r.id));
+        }
+        seen.sort_unstable();
+        let want: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(seen, want, "trial {trial}: groups must partition the request set");
+    }
+}
+
+/// Uniform-length traffic packs tightly: with every request in one
+/// bucket and no deadline flushes, only the final group can be partial,
+/// so the mean batch-fill ratio is bounded below by n / (cap * ceil(n /
+/// cap)) — and in particular full groups dominate once n >> cap.
+#[test]
+fn prop_coalescer_fill_floor_for_uniform_traffic() {
+    let mut rng = Rng::new(0xF111);
+    for trial in 0..20 {
+        let capacity = rng.range(2, 9);
+        let n = rng.range(capacity, 12 * capacity);
+        let len = rng.range(1, 20);
+        let mut co = Coalescer::new(capacity, 4, 1.0);
+        let mut groups: Vec<Group> = Vec::new();
+        for i in 0..n {
+            groups.extend(co.push(Pending {
+                id: i as u64,
+                src: vec![7; len],
+                t_submit: 0.0,
+            }));
+        }
+        groups.extend(co.drain());
+        let n_groups = n.div_ceil(capacity);
+        assert_eq!(groups.len(), n_groups, "trial {trial}");
+        let mean_fill: f64 =
+            groups.iter().map(Group::fill_ratio).sum::<f64>() / groups.len() as f64;
+        let floor = n as f64 / (capacity * n_groups) as f64;
+        assert!(
+            mean_fill + 1e-12 >= floor,
+            "trial {trial}: mean fill {mean_fill} below floor {floor}"
+        );
+        // All groups but possibly the last are full.
+        for g in &groups[..groups.len() - 1] {
+            assert_eq!(g.fill_ratio(), 1.0, "trial {trial}");
+        }
     }
 }

@@ -1,0 +1,231 @@
+//! Serving equivalence: the online scheduler (bounded admission →
+//! length-bucketed coalescer → multi-replica dispatch) must return,
+//! for every request, the *exact* tokens the single-sentence reference
+//! `Decoder` produces — across beam widths, replica counts and arrival
+//! orders — while mapping every response to the right request id,
+//! shedding overload with a clean error, and reporting the serving
+//! metrics `BENCH_serve.json` tracks (requires `make artifacts`).
+//!
+//! This is the serving counterpart of `decode_equivalence.rs`: arrival
+//! timing, coalescing and replica scheduling may reorder *when* and
+//! *with whom* a sentence is decoded, never what it decodes to.
+
+use hybridnmt::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig};
+use hybridnmt::decode::{BeamConfig, Decoder, LengthNorm};
+use hybridnmt::report::{serve_table, ServeRow};
+use hybridnmt::rng::Rng;
+use hybridnmt::runtime::{Engine, ParamBank};
+use hybridnmt::serve::{
+    drive_arrivals, poisson_arrivals, run_server, ServeOptions, SubmitError,
+};
+use hybridnmt::tensor::Tensor;
+use hybridnmt::train::init_params;
+use hybridnmt::util::json::Json;
+use std::collections::BTreeMap;
+
+fn engine() -> Engine {
+    Engine::load("artifacts", "tiny").expect("run `make artifacts` first")
+}
+
+fn random_params(d: &ModelDims, seed: u64) -> BTreeMap<String, Tensor> {
+    let exp = Experiment {
+        model: d.clone(),
+        strategy: Strategy::Hybrid,
+        hw: HwConfig::default(),
+        train: TrainConfig { seed, ..Default::default() },
+        data: DataConfig::wmt14_sim(100),
+        artifacts_dir: "artifacts".into(),
+    };
+    init_params(&exp, false)
+}
+
+/// Deterministic random source sentences within the artifact shape.
+fn random_srcs(d: &ModelDims, n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.range(2, d.max_src + 1);
+            (0..len).map(|_| rng.range(4, d.vocab) as i32).collect()
+        })
+        .collect()
+}
+
+fn cfg(beam: usize, max_tgt: usize) -> BeamConfig {
+    BeamConfig { beam, max_len: max_tgt, norm: LengthNorm::Marian { alpha: 1.0 } }
+}
+
+/// The acceptance criterion: for beams {1, 4} × replicas {1, 2, 4} ×
+/// two arrival seeds, every served request's tokens equal the
+/// single-sentence reference and responses carry the right ids.
+#[test]
+fn served_tokens_match_reference_across_beams_replicas_seeds() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, 3);
+    let bank = ParamBank::new();
+    let pool = random_srcs(&d, 10, 42);
+    for beam in [1usize, 4] {
+        let c = cfg(beam, d.max_tgt);
+        let dec = Decoder::new(&e, &params, false);
+        let reference: Vec<Vec<i32>> =
+            pool.iter().map(|s| dec.translate(s, &c).unwrap()).collect();
+        for replicas in [1usize, 2, 4] {
+            for seed in [11u64, 23] {
+                // Fast Poisson arrivals: timing-noisy, token-exact.
+                let arrivals = poisson_arrivals(&pool, 16, 400.0, seed);
+                let opts = ServeOptions { replicas, queue_capacity: 64, ..Default::default() };
+                let (drive, responses, stats) =
+                    run_server(&e, &params, &bank, false, &c, &opts, |h| {
+                        drive_arrivals(h, &arrivals)
+                    })
+                    .unwrap_or_else(|err| {
+                        panic!("beam={beam} replicas={replicas} seed={seed}: {err:#}")
+                    });
+                assert_eq!(drive.rejected, 0, "capacity 64 must admit all 16");
+                assert_eq!(responses.len(), arrivals.len());
+                assert_eq!(stats.completed, arrivals.len() as u64);
+                for (resp, arr) in responses.iter().zip(&arrivals) {
+                    // Sorted by id == schedule order: ids map back to
+                    // the arrivals they were submitted under.
+                    assert_eq!(resp.id, arr.id);
+                    assert_eq!(
+                        resp.tokens,
+                        reference[resp.id as usize % pool.len()],
+                        "beam={beam} replicas={replicas} seed={seed}: request {} diverged",
+                        resp.id
+                    );
+                    assert!(resp.latency_s >= 0.0 && resp.latency_s.is_finite());
+                }
+            }
+        }
+    }
+}
+
+/// Two opposite arrival orders of the same request set produce the
+/// same id → tokens mapping: coalescing is order-insensitive where it
+/// matters.
+#[test]
+fn arrival_permutation_preserves_tokens() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, 5);
+    let bank = ParamBank::new();
+    let pool = random_srcs(&d, 8, 7);
+    let c = cfg(4, d.max_tgt);
+    let opts = ServeOptions { replicas: 2, queue_capacity: 64, ..Default::default() };
+    let mut runs: Vec<Vec<(u64, Vec<i32>)>> = Vec::new();
+    for reverse in [false, true] {
+        let mut ids: Vec<u64> = (0..pool.len() as u64).collect();
+        if reverse {
+            ids.reverse();
+        }
+        let (_, responses, _) = run_server(&e, &params, &bank, false, &c, &opts, |h| {
+            for &i in &ids {
+                h.submit(i, pool[i as usize].clone()).expect("capacity 64 admits all");
+            }
+            Ok(())
+        })
+        .unwrap();
+        runs.push(responses.into_iter().map(|r| (r.id, r.tokens)).collect());
+    }
+    assert_eq!(runs[0], runs[1], "arrival order changed some request's tokens");
+}
+
+/// Admission control: a burst far over the in-flight bound is shed
+/// with `SubmitError::QueueFull` — a clean error, not a panic and not
+/// an unbounded queue — and everything admitted still completes and
+/// matches the reference.
+#[test]
+fn queue_full_sheds_cleanly() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, 9);
+    let bank = ParamBank::new();
+    let pool = random_srcs(&d, 6, 13);
+    let c = cfg(4, d.max_tgt);
+    let dec = Decoder::new(&e, &params, false);
+    let reference: Vec<Vec<i32>> =
+        pool.iter().map(|s| dec.translate(s, &c).unwrap()).collect();
+    let opts = ServeOptions { replicas: 1, queue_capacity: 2, ..Default::default() };
+    let (shed, responses, stats) = run_server(&e, &params, &bank, false, &c, &opts, |h| {
+        // 32 instant submissions against an in-flight bound of 2: the
+        // decode of the first admissions is still running, so most of
+        // the burst must be refused.
+        let mut shed = 0u64;
+        for i in 0..32u64 {
+            match h.submit(i, pool[i as usize % pool.len()].clone()) {
+                Ok(()) => {}
+                Err(SubmitError::QueueFull { capacity }) => {
+                    assert_eq!(capacity, 2);
+                    shed += 1;
+                }
+                Err(other) => panic!("unexpected submit error: {other}"),
+            }
+        }
+        Ok(shed)
+    })
+    .unwrap();
+    assert!(shed > 0, "a 32-burst against capacity 2 must shed");
+    assert_eq!(stats.rejected, shed);
+    assert_eq!(stats.accepted + stats.rejected, stats.submitted);
+    assert_eq!(responses.len() as u64, stats.accepted, "every admitted request completes");
+    for resp in &responses {
+        assert_eq!(resp.tokens, reference[resp.id as usize % pool.len()]);
+    }
+    // Oversize and empty sources are refused at admission and counted
+    // separately from backpressure sheds — malformed input must never
+    // read as queue pressure (and never panic a replica).
+    let (_, _, stats) = run_server(&e, &params, &bank, false, &c, &opts, |h| {
+        assert!(matches!(
+            h.submit(0, vec![5; d.max_src + 1]),
+            Err(SubmitError::Invalid(_))
+        ));
+        assert!(matches!(h.submit(1, vec![]), Err(SubmitError::Invalid(_))));
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(stats.invalid, 2);
+    assert_eq!(stats.rejected, 0, "invalid input must not count as backpressure");
+    assert_eq!(stats.completed, 0);
+}
+
+/// The serving benchmark artifact: `serve_table` must emit a
+/// `BENCH_serve.json` whose rows carry p50/p95/p99 latency, batch-fill
+/// ratio and sustained sentences/sec as finite numbers.
+#[test]
+fn bench_serve_json_reports_percentiles_fill_and_throughput() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, 17);
+    let bank = ParamBank::new();
+    let pool = random_srcs(&d, 6, 19);
+    let c = cfg(4, d.max_tgt);
+    let arrivals = poisson_arrivals(&pool, 12, 300.0, 29);
+    let mut rows = Vec::new();
+    for replicas in [1usize, 2] {
+        let opts = ServeOptions { replicas, queue_capacity: 64, ..Default::default() };
+        let (drive, _, stats) = run_server(&e, &params, &bank, false, &c, &opts, |h| {
+            drive_arrivals(h, &arrivals)
+        })
+        .unwrap();
+        assert!(stats.mean_fill() > 0.0, "groups must report a fill ratio");
+        assert!(stats.sentences_per_sec() > 0.0);
+        rows.push(ServeRow { replicas, beam: 4, offered_per_s: drive.offered_per_s, stats });
+    }
+    let out = serve_table(&rows);
+    assert!(out.contains("p50"), "table must show tail latency columns");
+    let text = std::fs::read_to_string("BENCH_serve.json").unwrap();
+    let json = Json::parse(&text).unwrap();
+    let obj = json.as_obj().unwrap();
+    for suffix in ["p50_ms", "p95_ms", "p99_ms", "sent_per_s", "batch_fill"] {
+        for replicas in [1usize, 2] {
+            let prefix = format!("r{replicas}.beam4.");
+            let found = obj.iter().any(|(k, v)| {
+                k.starts_with(&prefix)
+                    && k.ends_with(suffix)
+                    && v.as_f64().is_some_and(f64::is_finite)
+            });
+            assert!(found, "BENCH_serve.json missing finite `{prefix}*.{suffix}`");
+        }
+    }
+}

@@ -44,13 +44,29 @@ bad = [k for k, v in data.items()
        if not isinstance(v, (int, float)) or not math.isfinite(v)]
 if bad:
     raise SystemExit(f"{path}: non-numeric/non-finite entries: {bad[:5]}")
+if path.endswith("BENCH_serve.json"):
+    # The serving benchmark has a fixed schema on top of the flat
+    # name->number convention: every row prefix (r<replicas>.beam<B>.
+    # load<rate>) must report tail latency, throughput and batching
+    # efficiency. A serve-load run that stopped writing any of these
+    # is a regression, not a formatting choice.
+    required = ["p50_ms", "p95_ms", "p99_ms", "sent_per_s",
+                "batch_fill", "padding_waste", "rejected"]
+    prefixes = {k.rsplit(".", 1)[0] for k in data}
+    if not prefixes:
+        raise SystemExit(f"{path}: no serve rows")
+    for p in sorted(prefixes):
+        missing = [s for s in required if f"{p}.{s}" not in data]
+        if missing:
+            raise SystemExit(f"{path}: row `{p}` missing {missing}")
+    print(f"  {path}: serve schema OK ({len(prefixes)} rows)")
 print(f"  {path}: OK ({len(data)} entries)")
 EOF
     then :; else
         fail=1
     fi
 done
-[ "$found" = "1" ] || echo "  (no BENCH_*.json present yet — run the benches or serve-bench)"
+[ "$found" = "1" ] || echo "  (no BENCH_*.json present yet — run the benches or serve-bench/serve-load)"
 
 if [ "$fail" != "0" ]; then
     echo "verify: FAILED"
