@@ -1,6 +1,6 @@
 # hybridnmt build/verify entry points (see README.md).
 
-.PHONY: artifacts verify doc clean-artifacts serve-bench
+.PHONY: artifacts verify doc clean-artifacts serve-bench train-bench
 
 # AOT-compile the JAX model to HLO-text artifacts + manifests.
 # aot.py uses package-relative imports, so run it as a module from
@@ -22,6 +22,14 @@ verify:
 serve-bench:
 	cargo run --release -- serve-bench --model tiny --batch 32 --devices 4 --n 48
 	cargo run --release -- serve-load --model tiny --replicas 4 --requests 64 --rate 16
+
+# Training throughput: the pipelined multi-replica train-step sweep
+# (replicas 1..4 x accum {1,4} → BENCH_train.json +
+# results/train_bench.{txt,csv}; includes the equal-global-batch
+# bitwise loss gate). `make verify` then validates the emitted JSON
+# (including the train-row schema).
+train-bench:
+	cargo run --release -- train-bench --model tiny --steps 8 --replicas 4 --accum 4
 
 doc:
 	cargo doc --no-deps

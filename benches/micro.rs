@@ -109,8 +109,8 @@ fn main() -> anyhow::Result<()> {
         trainer.train_step(&batch).unwrap();
     });
     trainer.sequential = false;
-    let steps_before = trainer.steps_done;
-    let bank_uploads_before = trainer.bank.upload_count();
+    let steps_before = trainer.steps_done();
+    let bank_uploads_before = trainer.pipeline.upload_count();
     bench(&mut results, "Trainer::train_step (hybrid, parallel)", 10, || {
         trainer.train_step(&batch).unwrap();
     });
@@ -118,9 +118,10 @@ fn main() -> anyhow::Result<()> {
     // invalidates once per optimizer step and every artifact call hits
     // the resident copy. Zero means the bank is unwired (the regression
     // this gate exists to catch); more means redundant re-uploads.
-    let steps = (trainer.steps_done - steps_before) as f64;
-    let per_step = (trainer.bank.upload_count() - bank_uploads_before) as f64 / steps;
-    let n_params = trainer.params.len() as f64;
+    // (Single-replica pipeline here, so the banks sum to one bank.)
+    let steps = (trainer.steps_done() - steps_before) as f64;
+    let per_step = (trainer.pipeline.upload_count() - bank_uploads_before) as f64 / steps;
+    let n_params = trainer.params().len() as f64;
     println!(
         "  param uploads/step: {per_step:.1} for {n_params} parameters ({})",
         if (per_step - n_params).abs() < 0.5 {

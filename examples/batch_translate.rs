@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     let srcs: Vec<Vec<i32>> = batcher.test[..n].iter().map(|e| e.src.clone()).collect();
 
     // 1. Reference: one sentence at a time, host path.
-    let decoder = Decoder::new(&engine, &trainer.params, false);
+    let decoder = Decoder::new(&engine, trainer.params(), false);
     let t0 = std::time::Instant::now();
     let singles: Vec<Vec<i32>> = srcs
         .iter()
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     for devices in [1usize, 4] {
         let opts = DecodeOptions { batch: 16, devices };
         let (hyps, stats) =
-            translate_corpus(&engine, &trainer.params, &bank, false, &srcs, &cfg, &opts)?;
+            translate_corpus(&engine, trainer.params(), &bank, false, &srcs, &cfg, &opts)?;
         assert_eq!(hyps, singles, "batched decode must match the reference");
         println!(
             "batched (batch 16, {devices} worker{}): {:.2}s = {:.2} sent/s \

@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     trainer.run(&mut batcher, |line| println!("{line}"))?;
 
     // 5. Decode a test sentence with beam search.
-    let decoder = Decoder::new(&engine, &trainer.params, false);
+    let decoder = Decoder::new(&engine, trainer.params(), false);
     let cfg = BeamConfig {
         beam: 3,
         max_len: decoder.max_len(),

@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
 
         // Full dev perplexity + test BLEU.
         let dev_ppl = trainer.eval_ppl(&batcher.dev_batches())?;
-        let decoder = Decoder::new(&engine, &trainer.params, strategy.uses_input_feeding());
+        let decoder = Decoder::new(&engine, trainer.params(), strategy.uses_input_feeding());
         let cfg = BeamConfig {
             beam: 6,
             max_len: decoder.max_len(),
@@ -69,10 +69,10 @@ fn main() -> anyhow::Result<()> {
             strategy.label(),
             dev_ppl,
             bleu,
-            trainer.sim_clock,
+            trainer.sim_clock(),
             host
         );
-        summary.push((strategy, dev_ppl, bleu, trainer.sim_clock));
+        summary.push((strategy, dev_ppl, bleu, trainer.sim_clock()));
     }
 
     println!("\n=== summary (same budget of {steps} optimizer steps) ===");

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     let mut trainer = Trainer::new(&engine, &exp)?;
     trainer.run(&mut batcher, |line| println!("{line}"))?;
 
-    let decoder = Decoder::new(&engine, &trainer.params, false);
+    let decoder = Decoder::new(&engine, trainer.params(), false);
     let norms: [(&str, LengthNorm); 3] = [
         ("marian a=1.0", LengthNorm::Marian { alpha: 1.0 }),
         ("gnmt   a=1.0", LengthNorm::Gnmt { alpha: 1.0, beta: 0.0 }),

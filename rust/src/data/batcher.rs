@@ -149,10 +149,10 @@ impl Batcher {
         }
     }
 
-    /// Next training batch (infinite shuffled stream over buckets).
-    /// `Batcher::new` guarantees at least one batch exists, so the
-    /// stream never runs dry.
-    pub fn next_train(&mut self) -> Batch {
+    /// Advance the shuffled stream cursor by one slot, reshuffling at
+    /// epoch boundaries, and return the bucket index now under it —
+    /// the whole RNG-visible trajectory of the training stream.
+    fn advance(&mut self) -> usize {
         if self.cursor >= self.order.len() {
             self.cursor = 0;
             let mut order = std::mem::take(&mut self.order);
@@ -161,9 +161,28 @@ impl Batcher {
         }
         let bi = self.order[self.cursor];
         self.cursor += 1;
+        bi
+    }
+
+    /// Next training batch (infinite shuffled stream over buckets).
+    /// `Batcher::new` guarantees at least one batch exists, so the
+    /// stream never runs dry.
+    pub fn next_train(&mut self) -> Batch {
+        let bi = self.advance();
         let lo = bi * self.batch;
         let examples = self.train[lo..lo + self.batch].to_vec();
         self.make_batch(&examples)
+    }
+
+    /// Skip the next `n` training batches without assembling them:
+    /// bitwise the same stream position (cursor + shuffle RNG) as `n`
+    /// `next_train` calls, at none of the padding/masking cost.
+    /// Checkpoint resume uses this to fast-forward past the shards a
+    /// previous run already consumed.
+    pub fn skip_train(&mut self, n: usize) {
+        for _ in 0..n {
+            let _ = self.advance();
+        }
     }
 
     /// Fixed-order dev batches (truncated to whole batches).
@@ -253,6 +272,24 @@ mod tests {
     }
 
     const UNKI: i32 = 3;
+
+    /// skip_train(n) + next_train == n+1 next_train calls, including
+    /// across the epoch-boundary reshuffle.
+    #[test]
+    fn skip_train_matches_consumed_stream() {
+        let mut consumed = batcher();
+        let n = consumed.n_train_batches() + 3; // crosses a reshuffle
+        for _ in 0..n {
+            let _ = consumed.next_train();
+        }
+        let expect = consumed.next_train();
+        let mut skipped = batcher();
+        skipped.skip_train(n);
+        let got = skipped.next_train();
+        assert_eq!(expect.src.data(), got.src.data());
+        assert_eq!(expect.tgt_in.data(), got.tgt_in.data());
+        assert_eq!(expect.srclen.data(), got.srclen.data());
+    }
 
     #[test]
     fn stream_cycles_and_reshuffles() {

@@ -1,13 +1,16 @@
 //! Data pipeline: synthetic parallel corpora (the WMT14/WMT17 En-De
-//! stand-ins — DESIGN.md §2), a from-scratch BPE subword tokenizer, and
-//! length-bucketed batch assembly padded to the artifact shapes.
+//! stand-ins — DESIGN.md §2), a from-scratch BPE subword tokenizer,
+//! length-bucketed batch assembly padded to the artifact shapes, and a
+//! double-buffered training-batch prefetch thread.
 
 pub mod batcher;
 pub mod bpe;
+pub mod prefetch;
 pub mod synthetic;
 pub mod vocab;
 
 pub use batcher::{Batcher, Example};
+pub use prefetch::{with_prefetch, PrefetchHandle};
 pub use bpe::Bpe;
 pub use synthetic::{Corpus, SentencePair};
 pub use vocab::{Vocab, BOS, EOS, PAD, UNK};

@@ -11,6 +11,7 @@
 
 use anyhow::{anyhow, Context, Result};
 use hybridnmt::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig};
+use hybridnmt::data::with_prefetch;
 use hybridnmt::decode::{translate_corpus, BeamConfig, DecodeOptions, Decoder, LengthNorm};
 use hybridnmt::metrics::corpus_bleu;
 use hybridnmt::parallel::build_plan;
@@ -72,7 +73,14 @@ USAGE: hybridnmt <command> [--flag value]...
 COMMANDS
   train      --strategy S --dataset D [--steps N] [--model tiny|small]
              [--sentences N] [--seed N] [--ckpt out.bin] [--config file.json]
+             [--replicas R (data-parallel train-step fan-out)]
+             [--accum K (gradient-accumulation micro-steps per replica)]
+             [--resume ck.bin (restore params + optimizer state + step count)]
              [--sequential (disable the parallel plan executor)]
+  train-bench  [--model tiny] [--steps N] [--replicas R] [--accum K]
+             [--strategy S] [--sentences N] [--sequential]
+             (training-throughput sweep over replicas 1..R x accum {1, K};
+             writes BENCH_train.json + results/train_bench.{txt,csv})
   translate  --ckpt file.bin [--model small] [--beam B] [--alpha A]
              [--dataset D] [--strategy S (sets input-feeding)]
              [--batch N --devices D (batched multi-device inference engine)]
@@ -153,6 +161,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "train" => cmd_train(&args),
+        "train-bench" => cmd_train_bench(&args),
         "translate" => cmd_translate(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "serve-load" => cmd_serve_load(&args),
@@ -228,18 +237,42 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let mut trainer = Trainer::new(&engine, &exp)?;
     trainer.sequential = args.get("sequential").is_some();
+    let replicas = args.usize("replicas", 1)?.max(1);
+    let accum = args.usize("accum", 1)?.max(1);
+    trainer.set_pipeline(replicas, accum);
+    let resumed_at = if let Some(path) = args.get("resume") {
+        trainer.resume(std::path::Path::new(path))?;
+        // Fast-forward the deterministic batch stream past the shards
+        // the checkpointed run already consumed (the checkpoint records
+        // the count, so this is correct even if this run picks a
+        // different --replicas/--accum) — with the same data flags as
+        // the original run, the continuation is bitwise-exact.
+        let consumed = trainer.micro_consumed();
+        batcher.skip_train(consumed);
+        println!(
+            "resumed from {path} at step {} (batch stream fast-forwarded {consumed} micro-batches)",
+            trainer.steps_done()
+        );
+        trainer.steps_done()
+    } else {
+        0
+    };
     println!(
-        "plan: {} steps on {} devices ({} executor), sim step time {:.4}s, sim {:.0} src-tok/s",
+        "plan: {} steps on {} devices ({} executor), {} replicas x {} accum \
+         (global batch {}), sim step time {:.4}s, sim {:.0} src-tok/s",
         trainer.plan.steps.len(),
         trainer.plan.distinct_devices().len(),
         if trainer.sequential { "sequential" } else { "parallel" },
+        replicas,
+        accum,
+        replicas * accum * exp.model.batch,
         trainer.step_sim.makespan,
         trainer.sim_tokens_per_sec(batcher.avg_src_len())
     );
     trainer.run(&mut batcher, |line| println!("{line}"))?;
     if let Some(ckpt) = args.get("ckpt") {
-        checkpoint::save(std::path::Path::new(ckpt), &trainer.params)?;
-        println!("checkpoint written to {ckpt}");
+        trainer.save_checkpoint(std::path::Path::new(ckpt))?;
+        println!("checkpoint (v2: params + optimizer state) written to {ckpt}");
     }
     let st = engine.stats();
     println!(
@@ -250,13 +283,127 @@ fn cmd_train(args: &Args) -> Result<()> {
         st.convert_nanos as f64 / 1e9
     );
     println!(
-        "uploads: {} ({:.1} MB); buffer reuse: {} hits, {:.1} MB re-upload avoided; param uploads/step: {:.1}",
+        "uploads: {} ({:.1} MB); buffer reuse: {} hits, {:.1} MB re-upload avoided; \
+         param uploads/step: {:.1} over {} replica banks ({:.1} MB total)",
         st.uploads,
         st.upload_bytes as f64 / 1e6,
         st.buffer_hits,
         st.upload_bytes_saved as f64 / 1e6,
-        trainer.bank.upload_count() as f64 / trainer.steps_done.max(1) as f64
+        // Uploads happened in this process only: divide by the steps
+        // this run executed, not the checkpoint's lifetime count.
+        trainer.pipeline.upload_count() as f64
+            / (trainer.steps_done() - resumed_at).max(1) as f64,
+        trainer.pipeline.replicas(),
+        trainer.pipeline.upload_bytes() as f64 / 1e6
     );
+    Ok(())
+}
+
+/// Training-throughput sweep (the tentpole acceptance gate for the
+/// pipelined multi-replica engine): time `--steps` optimizer steps at
+/// each replicas × accum configuration, after one untimed warmup step
+/// per config (artifact compilation + first parameter upload). Every
+/// config starts from the same seed and the same batch stream, so
+/// configurations with equal `replicas × accum` consume identical
+/// global batches — their first timed losses are asserted bitwise
+/// equal, the train-side analogue of serve-bench's token-identity
+/// gate. Writes `BENCH_train.json` + `results/train_bench.{txt,csv}`.
+fn cmd_train_bench(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let exp = build_experiment(args, &engine)?;
+    let corpus = report::make_corpus(&exp.data, &exp.model);
+    let steps = args.usize("steps", 8)?.max(1);
+    let max_rep = args.usize("replicas", 4)?.max(1);
+    let max_accum = args.usize("accum", 4)?.max(1);
+    let mut replica_counts = vec![1usize];
+    let mut rv = 2;
+    while rv <= max_rep {
+        replica_counts.push(rv);
+        rv *= 2;
+    }
+    if *replica_counts.last().unwrap() != max_rep {
+        replica_counts.push(max_rep);
+    }
+    let accums: Vec<usize> = if max_accum > 1 { vec![1, max_accum] } else { vec![1] };
+
+    let mut rows = Vec::new();
+    // First timed loss per global-batch size: equal-sized configs must
+    // agree bitwise (same shards, same fixed-order tree).
+    let mut loss_gate: std::collections::BTreeMap<usize, f64> = std::collections::BTreeMap::new();
+    for &replicas in &replica_counts {
+        for &accum in &accums {
+            let mut batcher = report::make_batcher(&exp, &corpus)?;
+            let mut trainer = Trainer::new(&engine, &exp)?;
+            trainer.sequential = args.get("sequential").is_some();
+            trainer.set_pipeline(replicas, accum);
+            let per_step = trainer.pipeline.micro_per_step();
+            // Warmup (compilation, first uploads) outside the timing.
+            let warm: Vec<_> = (0..per_step).map(|_| batcher.next_train()).collect();
+            trainer.train_step_micro(&warm)?;
+            let uploads0 = trainer.pipeline.upload_count();
+
+            let (mut reduce_s, mut apply_s, mut stall_s) = (0.0f64, 0.0f64, 0.0f64);
+            let mut tokens = 0.0f64;
+            let mut first_loss = f64::NAN;
+            let mut last_loss = f64::NAN;
+            let t0 = std::time::Instant::now();
+            with_prefetch(&mut batcher, steps * per_step, per_step, |pre| {
+                for i in 0..steps {
+                    let micro: Vec<_> =
+                        (0..per_step).map(|_| pre.next()).collect::<Result<_>>()?;
+                    let stall = pre.take_stall();
+                    let st = trainer.train_step_micro(&micro)?;
+                    reduce_s += st.reduce_seconds;
+                    apply_s += st.apply_seconds;
+                    stall_s += stall;
+                    tokens += st.src_tokens;
+                    if i == 0 {
+                        first_loss = st.loss_per_tok;
+                    }
+                    last_loss = st.loss_per_tok;
+                }
+                Ok(())
+            })?;
+            let wall = t0.elapsed().as_secs_f64();
+            match loss_gate.get(&per_step) {
+                Some(expect) if expect.to_bits() != first_loss.to_bits() => {
+                    return Err(anyhow!(
+                        "multi-replica training diverged from the equal-batch reference: \
+                         {replicas} replicas x {accum} accum got loss {first_loss}, expected {expect}"
+                    ));
+                }
+                Some(_) => {}
+                None => {
+                    loss_gate.insert(per_step, first_loss);
+                }
+            }
+            let sn = steps as f64;
+            println!(
+                "replicas {replicas} x accum {accum}: {:.1} ms/step \
+                 (reduce {:.1} apply {:.1} stall {:.1}), {:.1} src tok/s",
+                wall / sn * 1e3,
+                reduce_s / sn * 1e3,
+                apply_s / sn * 1e3,
+                stall_s / sn * 1e3,
+                per_sec(tokens, wall)
+            );
+            rows.push(report::TrainBenchRow {
+                replicas,
+                accum,
+                steps,
+                global_batch: per_step * exp.model.batch,
+                step_s: wall / sn,
+                reduce_s: reduce_s / sn,
+                apply_s: apply_s / sn,
+                stall_s: stall_s / sn,
+                src_tok_per_s: per_sec(tokens, wall),
+                loss_per_tok: last_loss,
+                uploads_per_step: (trainer.pipeline.upload_count() - uploads0) as f64 / sn,
+            });
+        }
+    }
+    print!("\n{}", report::train_table(&rows));
+    println!("wrote BENCH_train.json");
     Ok(())
 }
 
@@ -594,7 +741,7 @@ fn cmd_table5(args: &Args) -> Result<()> {
             let opts = DecodeOptions { batch: 32, devices: engine.dims().gpus };
             let (hyps, stats) = translate_corpus(
                 &engine,
-                &trainer.params,
+                trainer.params(),
                 &bank,
                 strategy.uses_input_feeding(),
                 &srcs,

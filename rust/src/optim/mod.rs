@@ -1,86 +1,404 @@
 //! Optimizers + LR schedule (paper Table 2 / §4.2): Adam with
 //! plateau-decay (×0.7 when dev perplexity increases), plus plain SGD
 //! for the OpenNMT-lua comparator rows.
+//!
+//! [`Optimizer`] is a trait since the multi-replica training engine:
+//! [`Optimizer::apply`] partitions the parameter set across `workers`
+//! threads at **per-param granularity**, so the per-element update math
+//! is exactly the seed implementation's (each parameter's update reads
+//! nothing outside that parameter) and the result is bitwise-identical
+//! at every worker count — `rust/tests/train_equivalence.rs` asserts
+//! parity against the seed numerics on the quadratic fixtures.
+//!
+//! Optimizer state is exportable ([`Optimizer::export_state`] /
+//! [`OptimState`]) so checkpoint format v2 can persist `m`, `v`, `t`
+//! and the current LR for exact training resume.
 
 use crate::config::TrainConfig;
 use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
-/// Adam / SGD state over a named parameter set.
-pub struct Optimizer {
+/// Serializable optimizer state (checkpoint format v2).
+///
+/// `m`/`v` are empty for SGD; `t` is the Adam step count driving bias
+/// correction.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OptimState {
+    /// `"adam"` or `"sgd"` — must match the optimizer it restores into.
+    pub kind: String,
+    /// Current learning rate (after any plateau decays).
     pub lr: f64,
-    cfg: TrainConfig,
-    /// First/second moment per parameter (Adam only).
-    m: BTreeMap<String, Vec<f32>>,
-    v: BTreeMap<String, Vec<f32>>,
-    /// Step count (bias correction).
+    /// Adam step count (bias correction).
     pub t: u64,
+    /// First moment per parameter (Adam only).
+    pub m: BTreeMap<String, Vec<f32>>,
+    /// Second moment per parameter (Adam only).
+    pub v: BTreeMap<String, Vec<f32>>,
 }
 
-impl Optimizer {
-    pub fn new(cfg: &TrainConfig) -> Self {
-        Optimizer { lr: cfg.lr, cfg: cfg.clone(), m: BTreeMap::new(), v: BTreeMap::new(), t: 0 }
+/// Borrowed view of the same state: what checkpoint *saving* consumes,
+/// so a save never clones the two model-sized moment maps.
+#[derive(Debug, Clone, Copy)]
+pub struct OptimStateView<'a> {
+    pub kind: &'a str,
+    pub lr: f64,
+    pub t: u64,
+    pub m: &'a BTreeMap<String, Vec<f32>>,
+    pub v: &'a BTreeMap<String, Vec<f32>>,
+}
+
+impl OptimStateView<'_> {
+    pub fn to_owned(&self) -> OptimState {
+        OptimState {
+            kind: self.kind.to_string(),
+            lr: self.lr,
+            t: self.t,
+            m: self.m.clone(),
+            v: self.v.clone(),
+        }
     }
+}
+
+/// An optimizer over a named parameter set.
+pub trait Optimizer: Send {
+    /// `"adam"` or `"sgd"` (checkpoint tag, reports).
+    fn kind(&self) -> &'static str;
+
+    /// Current learning rate.
+    fn lr(&self) -> f64;
+
+    /// Override the learning rate (checkpoint restore).
+    fn set_lr(&mut self, lr: f64);
 
     /// Apply one update. `grads` are *mean* gradients (already scaled by
-    /// 1/ntok by the caller). Returns the global grad norm (pre-clip).
-    pub fn step(
+    /// 1/ntok by the caller). The parameter set is partitioned across
+    /// `workers` threads per-param, which cannot change numerics: no
+    /// parameter's update reads another parameter. Returns the global
+    /// grad norm (pre-clip). Errors on a gradient with no matching
+    /// parameter or with a mismatched element count.
+    fn apply(
         &mut self,
         params: &mut BTreeMap<String, Tensor>,
         grads: &BTreeMap<String, Tensor>,
-    ) -> f64 {
-        self.t += 1;
-        // Global-norm clipping (OpenNMT-style).
-        let mut sq = 0.0f64;
-        for g in grads.values() {
-            sq += g.sq_norm() as f64;
-        }
-        let norm = sq.sqrt();
-        let clip = if self.cfg.clip_norm > 0.0 && norm > self.cfg.clip_norm {
-            self.cfg.clip_norm / norm
-        } else {
-            1.0
-        };
+        workers: usize,
+    ) -> Result<f64>;
 
-        if self.cfg.sgd {
-            for (name, g) in grads {
-                let p = params.get_mut(name).expect("param for grad");
-                for (w, &gi) in p.data_mut().iter_mut().zip(g.data()) {
-                    *w -= (self.lr * clip * gi as f64) as f32;
+    /// The multiplicative plateau-decay factor (`TrainConfig::lr_decay`).
+    fn lr_decay_factor(&self) -> f64;
+
+    /// Plateau decay (paper §4.2): multiply LR by the decay factor when
+    /// the dev perplexity did not improve. Returns true if decayed.
+    fn maybe_decay(&mut self, prev_dev_ppl: Option<f64>, dev_ppl: f64) -> bool {
+        if let Some(prev) = prev_dev_ppl {
+            if dev_ppl > prev {
+                self.set_lr(self.lr() * self.lr_decay_factor());
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Borrowed view of the state checkpoint v2 persists (zero-copy
+    /// save path).
+    fn state_view(&self) -> OptimStateView<'_>;
+
+    /// Owned snapshot (tests, callers that outlive the optimizer).
+    fn export_state(&self) -> OptimState {
+        self.state_view().to_owned()
+    }
+
+    /// Restore a snapshot. Errors if `state.kind` names a different
+    /// optimizer family.
+    fn import_state(&mut self, state: &OptimState) -> Result<()>;
+}
+
+/// Build the optimizer an experiment's train config asks for.
+pub fn build(cfg: &TrainConfig) -> Box<dyn Optimizer> {
+    if cfg.sgd {
+        Box::new(Sgd::new(cfg))
+    } else {
+        Box::new(Adam::new(cfg))
+    }
+}
+
+/// Global-norm clipping factor (OpenNMT-style). Folds the per-tensor
+/// square norms in `grads`' sorted name order — fixed, so the factor is
+/// deterministic regardless of how `apply` later partitions the work.
+fn clip_factor(cfg: &TrainConfig, grads: &BTreeMap<String, Tensor>) -> (f64, f64) {
+    let mut sq = 0.0f64;
+    for g in grads.values() {
+        sq += g.sq_norm() as f64;
+    }
+    let norm = sq.sqrt();
+    let clip = if cfg.clip_norm > 0.0 && norm > cfg.clip_norm {
+        cfg.clip_norm / norm
+    } else {
+        1.0
+    };
+    (norm, clip)
+}
+
+/// Every gradient names an existing parameter of the same size — the
+/// seed's `expect("param for grad")` panic is an `Err` here. Pure, so
+/// implementations can run it *before* touching any optimizer state: a
+/// rejected call must leave the optimizer exactly as it was.
+fn validate_grads(
+    params: &BTreeMap<String, Tensor>,
+    grads: &BTreeMap<String, Tensor>,
+) -> Result<()> {
+    for (name, g) in grads {
+        let p = params
+            .get(name)
+            .ok_or_else(|| anyhow!("gradient for unknown parameter `{name}`"))?;
+        if p.numel() != g.numel() {
+            return Err(anyhow!(
+                "gradient `{name}` has {} elements, parameter has {}",
+                g.numel(),
+                p.numel()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Resolve each gradient to its `&mut` parameter slice by merging the
+/// two sorted maps. Precondition: [`validate_grads`] passed (every
+/// caller runs it exactly once, before mutating any state).
+fn match_params<'a>(
+    params: &'a mut BTreeMap<String, Tensor>,
+    grads: &'a BTreeMap<String, Tensor>,
+) -> Vec<(&'a str, &'a mut Tensor, &'a Tensor)> {
+    // Both maps iterate in sorted name order and grads ⊆ params, so one
+    // forward merge pairs every gradient with its parameter.
+    let mut out = Vec::with_capacity(grads.len());
+    let mut pit = params.iter_mut();
+    for (name, g) in grads {
+        let p = loop {
+            let (pn, p) = pit.next().expect("validate_grads checked grads ⊆ params");
+            if pn == name {
+                break p;
+            }
+        };
+        out.push((name.as_str(), p, g));
+    }
+    out
+}
+
+/// Run `items` through `f` on `workers` threads, worker `w` taking
+/// items `w, w+W, w+2W, …` — the same static round-robin shard as
+/// `parallel::exec::run_sharded`. Per-item work is independent by
+/// construction (each item owns disjoint `&mut` state), so this is a
+/// pure wall-clock optimization with unchanged numerics.
+fn apply_sharded<T: Send>(items: Vec<T>, workers: usize, f: impl Fn(T) + Sync) {
+    let workers = workers.clamp(1, items.len().max(1));
+    if workers == 1 {
+        for it in items {
+            f(it);
+        }
+        return;
+    }
+    let mut shards: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
+    for (j, it) in items.into_iter().enumerate() {
+        shards[j % workers].push(it);
+    }
+    std::thread::scope(|scope| {
+        for shard in shards {
+            let f = &f;
+            scope.spawn(move || {
+                for it in shard {
+                    f(it);
+                }
+            });
+        }
+    });
+}
+
+/// Adam (paper Table 2 defaults) with the seed implementation's exact
+/// per-element math: f64 accumulate, f32 store.
+pub struct Adam {
+    lr: f64,
+    cfg: TrainConfig,
+    /// First/second moment per parameter.
+    m: BTreeMap<String, Vec<f32>>,
+    v: BTreeMap<String, Vec<f32>>,
+    /// Step count (bias correction).
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(cfg: &TrainConfig) -> Self {
+        Adam { lr: cfg.lr, cfg: cfg.clone(), m: BTreeMap::new(), v: BTreeMap::new(), t: 0 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn kind(&self) -> &'static str {
+        "adam"
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn apply(
+        &mut self,
+        params: &mut BTreeMap<String, Tensor>,
+        grads: &BTreeMap<String, Tensor>,
+        workers: usize,
+    ) -> Result<f64> {
+        // All validation happens before any state mutation, so a
+        // rejected call (unknown gradient, size mismatch, corrupt
+        // checkpoint restore) leaves `t` and the moment maps untouched
+        // and later well-formed calls still succeed.
+        validate_grads(params, grads)?;
+        for (name, g) in grads {
+            for (label, rows) in [("m", &self.m), ("v", &self.v)] {
+                if let Some(row) = rows.get(name) {
+                    if row.len() != g.numel() {
+                        return Err(anyhow!(
+                            "optimizer moment `{label}[{name}]` has {} elements, gradient has {} \
+                             (mismatched checkpoint restore?)",
+                            row.len(),
+                            g.numel()
+                        ));
+                    }
                 }
             }
-            return norm;
         }
-
-        let (b1, b2, eps) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps);
+        self.t += 1;
+        let (norm, clip) = clip_factor(&self.cfg, grads);
+        // Moment rows must exist before the borrow split below.
+        for (name, g) in grads {
+            self.m.entry(name.clone()).or_insert_with(|| vec![0.0; g.numel()]);
+            self.v.entry(name.clone()).or_insert_with(|| vec![0.0; g.numel()]);
+        }
+        let (b1, b2, eps, lr) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps, self.lr);
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
-        for (name, g) in grads {
-            let p = params.get_mut(name).expect("param for grad");
-            let m = self.m.entry(name.clone()).or_insert_with(|| vec![0.0; g.numel()]);
-            let v = self.v.entry(name.clone()).or_insert_with(|| vec![0.0; g.numel()]);
+
+        // Pair each gradient with its parameter + moment rows: three
+        // sorted maps, grads ⊆ each after the seeding above.
+        let matched = match_params(params, grads);
+        let mut mit = self.m.iter_mut();
+        let mut vit = self.v.iter_mut();
+        let mut items = Vec::with_capacity(matched.len());
+        for (name, p, g) in matched {
+            let m = loop {
+                let (mn, m) = mit.next().expect("moment row seeded above");
+                if mn == name {
+                    break m;
+                }
+            };
+            let v = loop {
+                let (vn, v) = vit.next().expect("moment row seeded above");
+                if vn == name {
+                    break v;
+                }
+            };
+            items.push((p, g, m, v));
+        }
+
+        apply_sharded(items, workers, |(p, g, m, v)| {
             for i in 0..g.numel() {
                 let gi = (g.data()[i] as f64) * clip;
                 m[i] = (b1 * m[i] as f64 + (1.0 - b1) * gi) as f32;
                 v[i] = (b2 * v[i] as f64 + (1.0 - b2) * gi * gi) as f32;
                 let mhat = m[i] as f64 / bc1;
                 let vhat = v[i] as f64 / bc2;
-                p.data_mut()[i] -= (self.lr * mhat / (vhat.sqrt() + eps)) as f32;
+                p.data_mut()[i] -= (lr * mhat / (vhat.sqrt() + eps)) as f32;
             }
-        }
-        norm
+        });
+        Ok(norm)
     }
 
-    /// Plateau decay (paper §4.2): multiply LR by `lr_decay` when the
-    /// dev perplexity did not improve. Returns true if decayed.
-    pub fn maybe_decay(&mut self, prev_dev_ppl: Option<f64>, dev_ppl: f64) -> bool {
-        if let Some(prev) = prev_dev_ppl {
-            if dev_ppl > prev {
-                self.lr *= self.cfg.lr_decay;
-                return true;
-            }
+    fn lr_decay_factor(&self) -> f64 {
+        self.cfg.lr_decay
+    }
+
+    fn state_view(&self) -> OptimStateView<'_> {
+        OptimStateView { kind: "adam", lr: self.lr, t: self.t, m: &self.m, v: &self.v }
+    }
+
+    fn import_state(&mut self, state: &OptimState) -> Result<()> {
+        if state.kind != "adam" {
+            return Err(anyhow!("checkpoint optimizer is `{}`, trainer uses adam", state.kind));
         }
-        false
+        self.lr = state.lr;
+        self.t = state.t;
+        self.m = state.m.clone();
+        self.v = state.v.clone();
+        Ok(())
+    }
+}
+
+/// The shared empty moment map SGD's state view points at.
+fn empty_rows() -> &'static BTreeMap<String, Vec<f32>> {
+    static EMPTY: std::sync::OnceLock<BTreeMap<String, Vec<f32>>> = std::sync::OnceLock::new();
+    EMPTY.get_or_init(BTreeMap::new)
+}
+
+/// Plain SGD (the OpenNMT-lua comparator default).
+pub struct Sgd {
+    lr: f64,
+    cfg: TrainConfig,
+}
+
+impl Sgd {
+    pub fn new(cfg: &TrainConfig) -> Self {
+        Sgd { lr: cfg.lr, cfg: cfg.clone() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn kind(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn apply(
+        &mut self,
+        params: &mut BTreeMap<String, Tensor>,
+        grads: &BTreeMap<String, Tensor>,
+        workers: usize,
+    ) -> Result<f64> {
+        validate_grads(params, grads)?;
+        let (norm, clip) = clip_factor(&self.cfg, grads);
+        let lr = self.lr;
+        let items = match_params(params, grads);
+        apply_sharded(items, workers, |(_, p, g)| {
+            for (w, &gi) in p.data_mut().iter_mut().zip(g.data()) {
+                *w -= (lr * clip * gi as f64) as f32;
+            }
+        });
+        Ok(norm)
+    }
+
+    fn lr_decay_factor(&self) -> f64 {
+        self.cfg.lr_decay
+    }
+
+    fn state_view(&self) -> OptimStateView<'_> {
+        OptimStateView { kind: "sgd", lr: self.lr, t: 0, m: empty_rows(), v: empty_rows() }
+    }
+
+    fn import_state(&mut self, state: &OptimState) -> Result<()> {
+        if state.kind != "sgd" {
+            return Err(anyhow!("checkpoint optimizer is `{}`, trainer uses sgd", state.kind));
+        }
+        self.lr = state.lr;
+        Ok(())
     }
 }
 
@@ -88,11 +406,11 @@ impl Optimizer {
 mod tests {
     use super::*;
 
-    fn quad_setup(sgd: bool) -> (Optimizer, BTreeMap<String, Tensor>) {
+    fn quad_setup(sgd: bool) -> (Box<dyn Optimizer>, BTreeMap<String, Tensor>) {
         let cfg = TrainConfig { sgd, lr: 0.1, clip_norm: 0.0, ..Default::default() };
         let mut params = BTreeMap::new();
         params.insert("w".to_string(), Tensor::new(vec![2], vec![1.0, -2.0]));
-        (Optimizer::new(&cfg), params)
+        (build(&cfg), params)
     }
 
     fn grad_of(params: &BTreeMap<String, Tensor>) -> BTreeMap<String, Tensor> {
@@ -108,7 +426,7 @@ mod tests {
         let (mut opt, mut params) = quad_setup(true);
         for _ in 0..50 {
             let g = grad_of(&params);
-            opt.step(&mut params, &g);
+            opt.apply(&mut params, &g, 1).unwrap();
         }
         assert!(params["w"].sq_norm() < 1e-3);
     }
@@ -118,7 +436,7 @@ mod tests {
         let (mut opt, mut params) = quad_setup(false);
         for _ in 0..200 {
             let g = grad_of(&params);
-            opt.step(&mut params, &g);
+            opt.apply(&mut params, &g, 1).unwrap();
         }
         assert!(params["w"].sq_norm() < 1e-2, "{}", params["w"].sq_norm());
     }
@@ -129,7 +447,7 @@ mod tests {
         let (mut opt, mut params) = quad_setup(false);
         let before = params["w"].data()[0];
         let g = grad_of(&params);
-        opt.step(&mut params, &g);
+        opt.apply(&mut params, &g, 1).unwrap();
         let delta = (params["w"].data()[0] - before).abs();
         assert!((delta - 0.1).abs() < 1e-3, "delta {delta}");
     }
@@ -137,12 +455,12 @@ mod tests {
     #[test]
     fn clipping_bounds_update() {
         let cfg = TrainConfig { sgd: true, lr: 1.0, clip_norm: 1.0, ..Default::default() };
-        let mut opt = Optimizer::new(&cfg);
+        let mut opt = Sgd::new(&cfg);
         let mut params = BTreeMap::new();
         params.insert("w".to_string(), Tensor::new(vec![1], vec![0.0]));
         let mut g = BTreeMap::new();
         g.insert("w".to_string(), Tensor::new(vec![1], vec![100.0]));
-        let norm = opt.step(&mut params, &g);
+        let norm = opt.apply(&mut params, &g, 1).unwrap();
         assert_eq!(norm, 100.0);
         // Clipped to norm 1 -> step of exactly lr * 1.
         assert!((params["w"].data()[0] + 1.0).abs() < 1e-6);
@@ -151,12 +469,111 @@ mod tests {
     #[test]
     fn plateau_decay_fires_only_on_increase() {
         let cfg = TrainConfig::default();
-        let mut opt = Optimizer::new(&cfg);
-        let lr0 = opt.lr;
+        let mut opt = Adam::new(&cfg);
+        let lr0 = opt.lr();
         assert!(!opt.maybe_decay(None, 10.0));
         assert!(!opt.maybe_decay(Some(10.0), 9.0));
-        assert_eq!(opt.lr, lr0);
+        assert_eq!(opt.lr(), lr0);
         assert!(opt.maybe_decay(Some(9.0), 9.5));
-        assert!((opt.lr - lr0 * 0.7).abs() < 1e-12);
+        assert!((opt.lr() - lr0 * 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_grad_errors_not_panics() {
+        for sgd in [true, false] {
+            let (mut opt, mut params) = quad_setup(sgd);
+            let mut g = BTreeMap::new();
+            g.insert("nope".to_string(), Tensor::new(vec![1], vec![1.0]));
+            let err = opt.apply(&mut params, &g, 1).unwrap_err();
+            assert!(err.to_string().contains("unknown parameter"), "{err}");
+        }
+    }
+
+    /// A restored moment row of the wrong length (corrupt/mismatched
+    /// checkpoint) must surface as an error on the next step, not an
+    /// index-out-of-bounds panic inside the update loop.
+    #[test]
+    fn mismatched_restored_moments_error_not_panic() {
+        let cfg = TrainConfig { sgd: false, lr: 0.1, ..Default::default() };
+        let mut opt = Adam::new(&cfg);
+        let mut st = OptimState { kind: "adam".into(), lr: 0.1, t: 1, ..Default::default() };
+        st.m.insert("w".to_string(), vec![0.0; 5]); // `w` has 2 elements
+        st.v.insert("w".to_string(), vec![0.0; 5]);
+        opt.import_state(&st).unwrap();
+        let mut params = BTreeMap::new();
+        params.insert("w".to_string(), Tensor::new(vec![2], vec![1.0, -2.0]));
+        let g = grad_of(&params);
+        let err = opt.apply(&mut params, &g, 1).unwrap_err();
+        assert!(err.to_string().contains("moment"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_grad_size_errors() {
+        let (mut opt, mut params) = quad_setup(false);
+        let mut g = BTreeMap::new();
+        g.insert("w".to_string(), Tensor::new(vec![3], vec![1.0; 3]));
+        assert!(opt.apply(&mut params, &g, 1).is_err());
+    }
+
+    /// Worker count is a pure scheduling knob: per-param partitioning
+    /// must leave every updated bit identical.
+    #[test]
+    fn worker_count_does_not_change_bits() {
+        for sgd in [true, false] {
+            let cfg = TrainConfig { sgd, lr: 0.05, ..Default::default() };
+            let mut rng = crate::rng::Rng::new(41);
+            let mk_params = |rng: &mut crate::rng::Rng| {
+                let mut p = BTreeMap::new();
+                for (name, n) in [("a", 7usize), ("b", 3), ("c", 12), ("d", 1)] {
+                    let data: Vec<f32> = (0..n).map(|_| rng.uniform(0.5)).collect();
+                    p.insert(name.to_string(), Tensor::new(vec![n], data));
+                }
+                p
+            };
+            let init = mk_params(&mut rng);
+            let grads = mk_params(&mut rng);
+            let mut reference: Option<BTreeMap<String, Tensor>> = None;
+            for workers in [1usize, 2, 3, 8] {
+                let mut opt = build(&cfg);
+                let mut params = init.clone();
+                for _ in 0..5 {
+                    opt.apply(&mut params, &grads, workers).unwrap();
+                }
+                match &reference {
+                    None => reference = Some(params),
+                    Some(r) => {
+                        for (name, p) in r {
+                            for (x, y) in p.data().iter().zip(params[name].data()) {
+                                assert_eq!(x.to_bits(), y.to_bits(), "sgd={sgd} workers={workers} {name}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_restores_trajectory() {
+        let (mut opt, mut params) = quad_setup(false);
+        for _ in 0..3 {
+            let g = grad_of(&params);
+            opt.apply(&mut params, &g, 1).unwrap();
+        }
+        let snap = opt.export_state();
+        assert_eq!(snap.kind, "adam");
+        assert_eq!(snap.t, 3);
+        // A fresh optimizer restored from the snapshot continues bitwise
+        // identically to the original.
+        let cfg = TrainConfig { sgd: false, lr: 0.1, clip_norm: 0.0, ..Default::default() };
+        let mut fresh = Adam::new(&cfg);
+        fresh.import_state(&snap).unwrap();
+        let mut p2 = params.clone();
+        let g = grad_of(&params);
+        opt.apply(&mut params, &g, 1).unwrap();
+        fresh.apply(&mut p2, &g, 1).unwrap();
+        assert_eq!(params["w"].data(), p2["w"].data());
+        // Kind mismatch is an error.
+        assert!(Sgd::new(&cfg).import_state(&snap).is_err());
     }
 }

@@ -357,11 +357,11 @@ pub fn figure4(
         let mut batcher = make_batcher(&exp, &corpus)?;
         let mut trainer = Trainer::new(engine, &exp)?;
         trainer.run(&mut batcher, |_| {})?;
-        for p in &trainer.history {
+        for p in trainer.history() {
             writeln!(csv, "{},{},{:.6},{:.4},{:.6}", st.key(), p.step, p.sim_hours, p.dev_ppl, p.lr).unwrap();
         }
         let curve: Vec<(f64, f64)> =
-            trainer.history.iter().map(|p| (p.sim_hours, p.dev_ppl)).collect();
+            trainer.history().iter().map(|p| (p.sim_hours, p.dev_ppl)).collect();
         let final_ppl = curve.last().map(|x| x.1).unwrap_or(f64::NAN);
         writeln!(
             out,
@@ -369,7 +369,7 @@ pub fn figure4(
             st.label(),
             final_ppl,
             curve.last().map(|x| x.0 * 3600.0).unwrap_or(0.0),
-            trainer.steps_done,
+            trainer.steps_done(),
             trainer.step_sim.makespan * 1e3,
         )
         .unwrap();
@@ -812,6 +812,138 @@ pub fn serve_table(rows: &[ServeRow]) -> String {
     let _ = std::fs::write("BENCH_serve.json", Json::Obj(all).to_string());
     write_results("serve_bench.txt", &out);
     write_results("serve_bench.csv", &csv);
+    out
+}
+
+// -------------------------------------------------------- Train bench
+
+/// One measured training configuration (`train-bench`).
+#[derive(Debug, Clone)]
+pub struct TrainBenchRow {
+    /// Data-parallel replica workers.
+    pub replicas: usize,
+    /// Gradient-accumulation micro-steps per replica.
+    pub accum: usize,
+    /// Timed optimizer steps.
+    pub steps: usize,
+    /// Rows per global batch (`replicas × accum × artifact batch`).
+    pub global_batch: usize,
+    /// Mean wall seconds per optimizer step, and its phase breakdown.
+    pub step_s: f64,
+    /// Mean seconds in the fixed-order gradient tree reduce.
+    pub reduce_s: f64,
+    /// Mean seconds in the sharded optimizer apply.
+    pub apply_s: f64,
+    /// Mean seconds stalled waiting on the batch prefetch thread.
+    pub stall_s: f64,
+    /// Measured source-token throughput (real src tokens / wall).
+    pub src_tok_per_s: f64,
+    /// Final training loss per token (sanity column: finite, and
+    /// comparable across configs with equal global batch).
+    pub loss_per_tok: f64,
+    /// Parameter uploads per optimizer step summed over replica banks
+    /// (expected ≈ `replicas × n_params`).
+    pub uploads_per_step: f64,
+}
+
+/// Render the training-throughput sweep — replicas × accumulation vs
+/// measured step time, phase breakdown and token throughput — and
+/// persist it (`results/train_bench.{txt,csv}` + the
+/// `BENCH_train.json` perf-tracking file, merged like the other
+/// `BENCH_*.json` so repeated sweeps accumulate).
+pub fn train_table(rows: &[TrainBenchRow]) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Training throughput: replica fan-out × gradient accumulation\n\
+         (pipelined multi-replica engine; per-step wall clock with phase breakdown)."
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<9} {:>6} {:>7} {:>7}  {:>9} {:>9} {:>9} {:>9}  {:>10} {:>9} {:>9}",
+        "replicas", "accum", "steps", "gbatch", "step ms", "reduce ms", "apply ms", "stall ms",
+        "src tok/s", "loss/tok", "uploads"
+    )
+    .unwrap();
+    let mut csv = String::from(
+        "replicas,accum,steps,global_batch,step_ms,reduce_ms,apply_ms,stall_ms,\
+         src_tok_per_s,loss_per_tok,uploads_per_step\n",
+    );
+    let mut bench: BTreeMap<String, Json> = BTreeMap::new();
+    for r in rows {
+        writeln!(
+            out,
+            "{:<9} {:>6} {:>7} {:>7}  {:>9.1} {:>9.1} {:>9.1} {:>9.1}  {:>10.1} {:>9.3} {:>9.1}",
+            r.replicas,
+            r.accum,
+            r.steps,
+            r.global_batch,
+            r.step_s * 1e3,
+            r.reduce_s * 1e3,
+            r.apply_s * 1e3,
+            r.stall_s * 1e3,
+            r.src_tok_per_s,
+            r.loss_per_tok,
+            r.uploads_per_step,
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.2},{:.5},{:.1}",
+            r.replicas,
+            r.accum,
+            r.steps,
+            r.global_batch,
+            r.step_s * 1e3,
+            r.reduce_s * 1e3,
+            r.apply_s * 1e3,
+            r.stall_s * 1e3,
+            r.src_tok_per_s,
+            r.loss_per_tok,
+            r.uploads_per_step,
+        )
+        .unwrap();
+        let key = format!("r{}.accum{}", r.replicas, r.accum);
+        for (suffix, v) in [
+            ("tok_per_s", r.src_tok_per_s),
+            ("step_ms", r.step_s * 1e3),
+            ("reduce_ms", r.reduce_s * 1e3),
+            ("apply_ms", r.apply_s * 1e3),
+            ("stall_ms", r.stall_s * 1e3),
+            ("uploads_per_step", r.uploads_per_step),
+        ] {
+            bench.insert(format!("{key}.{suffix}"), Json::Num(v));
+        }
+    }
+    if let (Some(base), Some(best)) = (
+        rows.iter()
+            .find(|r| r.replicas == 1 && r.accum == 1)
+            .map(|r| r.src_tok_per_s),
+        rows.iter().map(|r| r.src_tok_per_s).max_by(|a, b| a.total_cmp(b)),
+    ) {
+        writeln!(
+            out,
+            "\nbest config: {:.2}x the 1-replica/no-accum token throughput",
+            best / base.max(1e-9)
+        )
+        .unwrap();
+    }
+    writeln!(
+        out,
+        "token throughput counts real (non-pad) source tokens; absolute numbers are CPU-PJRT,\n\
+         the replica scaling and the reduce/apply/stall shares are the claims (docs/PERF.md)."
+    )
+    .unwrap();
+    let mut all = std::fs::read_to_string("BENCH_train.json")
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    all.extend(bench);
+    let _ = std::fs::write("BENCH_train.json", Json::Obj(all).to_string());
+    write_results("train_bench.txt", &out);
+    write_results("train_bench.csv", &csv);
     out
 }
 

@@ -430,6 +430,13 @@ impl ParamBank {
     pub fn hit_count(&self) -> u64 {
         self.bufs.hit_count()
     }
+
+    /// Total bytes uploaded since construction (`upload_count`'s
+    /// traffic view — the multi-replica trainer reports this per bank
+    /// to show the R× parameter-replication cost).
+    pub fn upload_bytes(&self) -> u64 {
+        self.bufs.upload_bytes()
+    }
 }
 
 /// Named device-resident buffers for values that persist across many
@@ -450,6 +457,7 @@ impl ParamBank {
 pub struct BufCache {
     bufs: Mutex<HashMap<String, Arc<DeviceBuf>>>,
     uploads: AtomicU64,
+    uploaded_bytes: AtomicU64,
     hits: AtomicU64,
 }
 
@@ -474,6 +482,7 @@ impl BufCache {
         }
         let b = Arc::new(upload()?);
         self.uploads.fetch_add(1, Ordering::Relaxed);
+        self.uploaded_bytes.fetch_add(b.bytes, Ordering::Relaxed);
         bufs.insert(key.to_string(), b.clone());
         Ok(b)
     }
@@ -529,6 +538,11 @@ impl BufCache {
     /// Lookups served from a resident buffer since construction.
     pub fn hit_count(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Bytes the uploads in `upload_count` moved host→device.
+    pub fn upload_bytes(&self) -> u64 {
+        self.uploaded_bytes.load(Ordering::Relaxed)
     }
 }
 

@@ -1,10 +1,33 @@
-//! Parameter checkpointing: a tiny self-describing binary format
-//! (magic, version, per-tensor name/shape/f32 data, little-endian).
+//! Checkpointing: a tiny self-describing binary format (magic,
+//! per-tensor name/shape/f32 data, little-endian).
+//!
+//! Two format versions share the parameter section:
+//!
+//! * **v1** (`HYNMTCK1`) — parameters only. Written by [`save`]; what
+//!   inference needs.
+//! * **v2** (`HYNMTCK2`) — parameters + optimizer state (`m`, `v`,
+//!   `t`, current LR) + the training clocks (`steps_done`,
+//!   `sim_clock`, the plateau-schedule's `prev_dev_ppl`), so training
+//!   resume is *exact*: given the same batch shards, a resumed run
+//!   continues bitwise-identically to one that never stopped — LR
+//!   schedule included (the `train --resume` CLI fast-forwards the
+//!   deterministic batch stream past the `steps_done × replicas ×
+//!   accum` shards the checkpointed run consumed). Written by
+//!   [`save_full`] (`Trainer::save_checkpoint`). The eval *history*
+//!   (Figure-4 points) is reporting output, not training state, and is
+//!   not persisted.
+//!
+//! [`load`] / [`load_full`] accept both versions — v1 files simply
+//! restore with a fresh optimizer. Every length/count read from a file
+//! is bounded against the file size before allocation, so a truncated
+//! or corrupt checkpoint is a clean `Err`, never an abort-sized
+//! allocation.
 //!
 //! For inference, [`load_resident`] additionally pre-uploads the loaded
 //! parameters into a [`ParamBank`], so the first decode step already
 //! finds every weight device-resident.
 
+use crate::optim::{OptimState, OptimStateView};
 use crate::runtime::{Engine, ParamBank};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};
@@ -12,14 +35,38 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"HYNMTCK1";
+const MAGIC_V1: &[u8; 8] = b"HYNMTCK1";
+const MAGIC_V2: &[u8; 8] = b"HYNMTCK2";
 
-/// Write all parameters to `path`.
-pub fn save(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
-    );
-    f.write_all(MAGIC)?;
+/// Training clocks persisted by checkpoint v2 alongside the optimizer
+/// state.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TrainMeta {
+    pub steps_done: u64,
+    /// Micro-batches the run had consumed at save time
+    /// (`Σ replicas × accum` over its steps). Resume fast-forwards the
+    /// batch stream by exactly this count, so the skip is correct even
+    /// when the resuming run picks a different `--replicas/--accum`.
+    pub micro_consumed: u64,
+    /// Simulated wall-clock at save time (Figure-4 x-axis continuity).
+    pub sim_clock: f64,
+    /// Last scheduled-eval dev perplexity — the plateau LR schedule's
+    /// comparison point. Without it a resumed run could miss (or
+    /// double-apply) a decay and diverge from the uninterrupted run.
+    pub prev_dev_ppl: Option<f64>,
+}
+
+/// A fully-loaded checkpoint. `opt`/`meta` carry training state for v2
+/// files; v1 param-only files load with `opt: None` and a default
+/// (zeroed) `meta`.
+#[derive(Debug)]
+pub struct TrainCheckpoint {
+    pub params: BTreeMap<String, Tensor>,
+    pub opt: Option<OptimState>,
+    pub meta: TrainMeta,
+}
+
+fn write_params(f: &mut impl Write, params: &BTreeMap<String, Tensor>) -> Result<()> {
     f.write_all(&(params.len() as u32).to_le_bytes())?;
     for (name, t) in params {
         let nb = name.as_bytes();
@@ -36,40 +83,191 @@ pub fn save(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
     Ok(())
 }
 
-/// Load parameters from `path`.
-pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
-    );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(anyhow!("{path:?}: not a hybridnmt checkpoint"));
+/// Named f32 rows (the optimizer moment maps): count, then
+/// name / length / data per row.
+fn write_rows(f: &mut impl Write, rows: &BTreeMap<String, Vec<f32>>) -> Result<()> {
+    f.write_all(&(rows.len() as u32).to_le_bytes())?;
+    for (name, data) in rows {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(data.len() as u64).to_le_bytes())?;
+        for &x in data {
+            f.write_all(&x.to_le_bytes())?;
+        }
     }
+    Ok(())
+}
+
+/// Write a v1 (param-only) checkpoint to `path`.
+pub fn save(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(MAGIC_V1)?;
+    write_params(&mut f, params)
+}
+
+/// Write a v2 checkpoint: parameters + optimizer state + training
+/// clocks. Takes the optimizer state by reference ([`OptimStateView`])
+/// so saving never clones the model-sized moment maps.
+pub fn save_full(
+    path: &Path,
+    params: &BTreeMap<String, Tensor>,
+    opt: &OptimStateView,
+    meta: &TrainMeta,
+) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(MAGIC_V2)?;
+    write_params(&mut f, params)?;
+    let kb = opt.kind.as_bytes();
+    f.write_all(&(kb.len() as u32).to_le_bytes())?;
+    f.write_all(kb)?;
+    f.write_all(&opt.lr.to_le_bytes())?;
+    f.write_all(&opt.t.to_le_bytes())?;
+    f.write_all(&meta.steps_done.to_le_bytes())?;
+    f.write_all(&meta.micro_consumed.to_le_bytes())?;
+    f.write_all(&meta.sim_clock.to_le_bytes())?;
+    f.write_all(&[meta.prev_dev_ppl.is_some() as u8])?;
+    f.write_all(&meta.prev_dev_ppl.unwrap_or(0.0).to_le_bytes())?;
+    write_rows(&mut f, opt.m)?;
+    write_rows(&mut f, opt.v)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f64(f: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+/// Reject a self-described element count that could not possibly fit
+/// in the file: turns a truncated/corrupt checkpoint into a clean
+/// error instead of a multi-exabyte allocation attempt.
+fn check_count(count: u64, unit_bytes: u64, file_len: u64, what: &str) -> Result<usize> {
+    match count.checked_mul(unit_bytes) {
+        Some(bytes) if bytes <= file_len => Ok(count as usize),
+        _ => Err(anyhow!(
+            "corrupt checkpoint: {what} claims {count} entries, larger than the file itself"
+        )),
+    }
+}
+
+fn read_string(f: &mut impl Read, file_len: u64) -> Result<String> {
+    let len = check_count(read_u32(f)? as u64, 1, file_len, "name")?;
+    let mut bytes = vec![0u8; len];
+    f.read_exact(&mut bytes)?;
+    String::from_utf8(bytes).map_err(|_| anyhow!("bad name"))
+}
+
+fn read_f32s(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut data = vec![0f32; n];
+    let mut buf = [0u8; 4];
+    for x in &mut data {
+        f.read_exact(&mut buf)?;
+        *x = f32::from_le_bytes(buf);
+    }
+    Ok(data)
+}
+
+fn read_params(f: &mut impl Read, file_len: u64) -> Result<BTreeMap<String, Tensor>> {
     let mut params = BTreeMap::new();
-    let n = read_u32(&mut f)? as usize;
+    let n = read_u32(f)? as usize;
     for _ in 0..n {
-        let name_len = read_u32(&mut f)? as usize;
-        let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let name = String::from_utf8(name).map_err(|_| anyhow!("bad name"))?;
-        let rank = read_u32(&mut f)? as usize;
+        let name = read_string(f, file_len)?;
+        let rank = check_count(read_u32(f)? as u64, 8, file_len, "shape")?;
         let mut shape = Vec::with_capacity(rank);
         for _ in 0..rank {
-            let mut b = [0u8; 8];
-            f.read_exact(&mut b)?;
-            shape.push(u64::from_le_bytes(b) as usize);
+            shape.push(read_u64(f)? as usize);
         }
-        let numel: usize = shape.iter().product();
-        let mut data = vec![0f32; numel];
-        let mut buf = [0u8; 4];
-        for x in &mut data {
-            f.read_exact(&mut buf)?;
-            *x = f32::from_le_bytes(buf);
-        }
+        let numel = shape.iter().try_fold(1u64, |acc, &d| acc.checked_mul(d as u64));
+        let numel = check_count(
+            numel.ok_or_else(|| anyhow!("corrupt checkpoint: shape overflow"))?,
+            4,
+            file_len,
+            "tensor",
+        )?;
+        let data = read_f32s(f, numel)?;
         params.insert(name, Tensor::new(shape, data));
     }
     Ok(params)
+}
+
+fn read_rows(f: &mut impl Read, file_len: u64) -> Result<BTreeMap<String, Vec<f32>>> {
+    let mut rows = BTreeMap::new();
+    let n = read_u32(f)? as usize;
+    for _ in 0..n {
+        let name = read_string(f, file_len)?;
+        let len = check_count(read_u64(f)?, 4, file_len, "moment row")?;
+        rows.insert(name, read_f32s(f, len)?);
+    }
+    Ok(rows)
+}
+
+/// Open `path`, check the magic, and read the (shared) parameter
+/// section. Returns the reader positioned at the optimizer state for
+/// v2 files.
+fn read_header(
+    path: &Path,
+) -> Result<(std::io::BufReader<std::fs::File>, bool, u64, BTreeMap<String, Tensor>)> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let file_len = file.metadata().map(|m| m.len()).unwrap_or(u64::MAX);
+    let mut f = std::io::BufReader::new(file);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    let v2 = match &magic {
+        m if m == MAGIC_V1 => false,
+        m if m == MAGIC_V2 => true,
+        _ => return Err(anyhow!("{path:?}: not a hybridnmt checkpoint")),
+    };
+    let params = read_params(&mut f, file_len)?;
+    Ok((f, v2, file_len, params))
+}
+
+/// Load a checkpoint (either version), full training state included.
+pub fn load_full(path: &Path) -> Result<TrainCheckpoint> {
+    let (mut f, v2, file_len, params) = read_header(path)?;
+    if !v2 {
+        return Ok(TrainCheckpoint { params, opt: None, meta: TrainMeta::default() });
+    }
+    let kind = read_string(&mut f, file_len)?;
+    let lr = read_f64(&mut f)?;
+    let t = read_u64(&mut f)?;
+    let steps_done = read_u64(&mut f)?;
+    let micro_consumed = read_u64(&mut f)?;
+    let sim_clock = read_f64(&mut f)?;
+    let mut flag = [0u8; 1];
+    f.read_exact(&mut flag)?;
+    let prev = read_f64(&mut f)?;
+    let prev_dev_ppl = (flag[0] != 0).then_some(prev);
+    let m = read_rows(&mut f, file_len)?;
+    let v = read_rows(&mut f, file_len)?;
+    Ok(TrainCheckpoint {
+        params,
+        opt: Some(OptimState { kind, lr, t, m, v }),
+        meta: TrainMeta { steps_done, micro_consumed, sim_clock, prev_dev_ppl },
+    })
+}
+
+/// Load just the parameters from `path` (either version — the
+/// inference-side entry point). Stops after the parameter section, so
+/// a v2 file's model-sized optimizer moment maps are never read or
+/// allocated here.
+pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    Ok(read_header(path)?.3)
 }
 
 /// Load a checkpoint and upload every parameter into a fresh
@@ -89,35 +287,122 @@ pub fn load_resident(
     Ok((params, bank))
 }
 
-fn read_u32(f: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    f.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip() {
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hynmt_ck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_params() -> BTreeMap<String, Tensor> {
         let mut params = BTreeMap::new();
         params.insert("w".to_string(), Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
         params.insert("b".to_string(), Tensor::new(vec![1], vec![-0.5]));
-        let dir = std::env::temp_dir().join("hynmt_ck_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("ck.bin");
+        params
+    }
+
+    #[test]
+    fn v1_roundtrip() {
+        let params = sample_params();
+        let path = tmp("ck_v1.bin");
         save(&path, &params).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back, params);
     }
 
     #[test]
+    fn v2_roundtrip_preserves_training_state() {
+        let params = sample_params();
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), vec![0.1f32; 6]);
+        let mut v = BTreeMap::new();
+        v.insert("w".to_string(), vec![0.2f32; 6]);
+        let opt = OptimState { kind: "adam".into(), lr: 7e-4, t: 42, m, v };
+        let meta = TrainMeta {
+            steps_done: 17,
+            micro_consumed: 68,
+            sim_clock: 123.5,
+            prev_dev_ppl: Some(9.25),
+        };
+        let path = tmp("ck_v2.bin");
+        save_full(&path, &params, &opt.view(), &meta).unwrap();
+
+        let ck = load_full(&path).unwrap();
+        assert_eq!(ck.params, params);
+        assert_eq!(ck.meta, meta);
+        assert_eq!(ck.opt.as_ref().unwrap(), &opt);
+        // Param-only loading of a v2 file works too (inference path).
+        assert_eq!(load(&path).unwrap(), params);
+    }
+
+    impl OptimState {
+        /// Test helper: view of an owned state.
+        fn view(&self) -> OptimStateView<'_> {
+            OptimStateView { kind: &self.kind, lr: self.lr, t: self.t, m: &self.m, v: &self.v }
+        }
+    }
+
+    /// v1-compat: a param-only file (old format, byte-for-byte) loads
+    /// through `load_full` with no training state.
+    #[test]
+    fn v1_loads_through_load_full() {
+        let params = sample_params();
+        let path = tmp("ck_v1_compat.bin");
+        save(&path, &params).unwrap();
+        let ck = load_full(&path).unwrap();
+        assert_eq!(ck.params, params);
+        assert!(ck.opt.is_none());
+        assert_eq!(ck.meta, TrainMeta::default());
+    }
+
+    #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join("hynmt_ck_test2");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.bin");
+        let path = tmp("bad.bin");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
+        assert!(load_full(&path).is_err());
+    }
+
+    /// A corrupt length field must be a clean error, not an attempted
+    /// huge allocation or a hang.
+    #[test]
+    fn corrupt_lengths_error_cleanly() {
+        let params = sample_params();
+        let path = tmp("ck_trunc.bin");
+        let opt = OptimState { kind: "adam".into(), lr: 1e-3, t: 1, ..Default::default() };
+        save_full(&path, &params, &opt.view(), &TrainMeta::default()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Corrupt the first post-magic length field to a huge value.
+        for b in &mut bytes[8..12] {
+            *b = 0xFF;
+        }
+        let bad = tmp("ck_corrupt.bin");
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(load_full(&bad).is_err());
+        // Truncation mid-file is also a clean error.
+        bytes.truncate(bytes.len() / 2);
+        let cut = tmp("ck_cut.bin");
+        std::fs::write(&cut, &bytes).unwrap();
+        assert!(load_full(&cut).is_err());
+    }
+
+    #[test]
+    fn sgd_state_roundtrip_empty_moments() {
+        let params = sample_params();
+        let opt = OptimState { kind: "sgd".into(), lr: 0.35, t: 0, m: BTreeMap::new(), v: BTreeMap::new() };
+        let meta = TrainMeta {
+            steps_done: 3,
+            micro_consumed: 3,
+            sim_clock: 0.75,
+            prev_dev_ppl: None,
+        };
+        let path = tmp("ck_v2_sgd.bin");
+        save_full(&path, &params, &opt.view(), &meta).unwrap();
+        let ck = load_full(&path).unwrap();
+        assert_eq!(ck.opt.unwrap(), opt);
+        assert_eq!(ck.meta, meta);
     }
 }

@@ -1,21 +1,41 @@
-//! Training loop: parameter store, per-step orchestration (real
-//! numerics + simulated clock), plateau LR schedule, evaluation, and
-//! checkpointing.
+//! Training stack: parameter/optimizer state ([`TrainState`]), the
+//! pipelined multi-replica step engine ([`step`]), plateau LR
+//! scheduling, evaluation, and checkpointing.
+//!
+//! One optimizer step is a pipeline (see `docs/ARCHITECTURE.md`
+//! §Training):
+//!
+//! 1. **Fan-out** — `replicas × accum` micro-batches (the row-shards
+//!    of the global batch) execute the shared plan on the
+//!    plan-scheduler worker pool, one [`ParamBank`] per replica.
+//! 2. **Reduce** — micro-gradients combine through a fixed-order
+//!    binary tree ([`step::tree_reduce_grads`]), bitwise-identical at
+//!    every replica count and executor mode.
+//! 3. **Apply** — the [`Optimizer`] partitions the parameter set
+//!    across the replica workers (per-param granularity → unchanged
+//!    numerics) and the replica banks invalidate.
+//!
+//! Batch preparation for the *next* step overlaps all three phases via
+//! the double-buffered prefetch thread (`data::prefetch`).
 
 pub mod checkpoint;
+pub mod step;
+
+pub use step::Pipeline;
 
 use crate::config::{Experiment, Strategy};
-use crate::data::Batcher;
+use crate::data::{with_prefetch, Batcher};
 use crate::metrics::perplexity;
 use crate::model_spec::param_specs;
-use crate::optim::Optimizer;
+use crate::optim::{self, Optimizer};
 use crate::parallel::{build_plan, execute_with, Batch, ExecMode, ExecOptions, Plan};
 use crate::rng::Rng;
-use crate::runtime::{Engine, ParamBank};
+use crate::runtime::Engine;
 use crate::sim::{simulate, SimResult};
 use crate::tensor::Tensor;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
+use std::path::Path;
 
 /// Initialize the full parameter set: uniform(-scale, scale), the
 /// classic seq2seq recipe. Layout comes from `model_spec::param_specs`.
@@ -35,18 +55,33 @@ pub fn init_params(
     params
 }
 
-/// Per-step record (drives Figure 4 and the training logs).
+/// Per-step record (drives Figure 4, the training logs, and
+/// `train-bench`).
 #[derive(Debug, Clone)]
 pub struct StepStats {
     pub step: usize,
     pub loss_per_tok: f64,
     pub ppl: f64,
     pub grad_norm: f64,
-    /// Simulated wall-clock seconds of this step on the modeled node.
+    /// Simulated wall-clock seconds of this step on the modeled node
+    /// (`accum` sequential plan makespans; the cross-replica reduce is
+    /// measured, not simulated — see `reduce_seconds`).
     pub sim_seconds: f64,
-    /// Real CPU seconds spent executing artifacts.
+    /// Real CPU seconds of the whole replica-execution phase.
     pub host_seconds: f64,
     pub src_tokens: f64,
+    /// Micro-batches this step consumed (`replicas × accum`).
+    pub micro_batches: usize,
+    /// Host seconds spent in the fixed-order gradient tree reduce.
+    pub reduce_seconds: f64,
+    /// Host seconds spent in the sharded optimizer apply.
+    pub apply_seconds: f64,
+    /// Seconds the step waited on the batch prefetch thread (0 when
+    /// batches were handed in directly).
+    pub prefetch_stall_seconds: f64,
+    /// Plan-execution host seconds per replica worker (length =
+    /// `replicas`; load-imbalance diagnostic).
+    pub replica_host_seconds: Vec<f64>,
 }
 
 /// One point of the Figure 4 convergence curve.
@@ -59,23 +94,50 @@ pub struct EvalPoint {
     pub lr: f64,
 }
 
-/// The trainer: owns plan, params, optimizer, clocks.
+/// The mutable training state: parameters, optimizer (with its LR
+/// schedule), clocks, and the eval history. Everything checkpoint v2
+/// persists lives here; everything execution-related (engine, plan,
+/// banks) lives on [`Trainer`].
+pub struct TrainState {
+    pub params: BTreeMap<String, Tensor>,
+    pub opt: Box<dyn Optimizer>,
+    /// Simulated wall-clock accumulated over `steps_done` steps.
+    pub sim_clock: f64,
+    pub steps_done: usize,
+    /// Micro-batches consumed so far (`Σ replicas × accum`) — the
+    /// batch-stream position checkpoint resume fast-forwards to.
+    pub micro_consumed: usize,
+    pub prev_dev_ppl: Option<f64>,
+    pub history: Vec<EvalPoint>,
+}
+
+impl TrainState {
+    pub fn new(exp: &Experiment) -> Self {
+        TrainState {
+            params: init_params(exp, exp.strategy.uses_input_feeding()),
+            opt: optim::build(&exp.train),
+            sim_clock: 0.0,
+            steps_done: 0,
+            micro_consumed: 0,
+            prev_dev_ppl: None,
+            history: Vec::new(),
+        }
+    }
+}
+
+/// The trainer: plan + engine handles, the replica pipeline, and the
+/// [`TrainState`] it advances.
 pub struct Trainer<'a> {
     pub engine: &'a Engine,
     pub plan: Plan,
-    pub params: BTreeMap<String, Tensor>,
-    pub opt: Optimizer,
     pub strategy: Strategy,
     exp: Experiment,
-    /// Simulated per-step makespan (plan is static → computed once).
+    /// Simulated per-micro-step makespan (plan is static → computed once).
     pub step_sim: SimResult,
-    pub sim_clock: f64,
-    pub steps_done: usize,
-    prev_dev_ppl: Option<f64>,
-    pub history: Vec<EvalPoint>,
-    /// Device-resident parameter buffers: each parameter uploads once
-    /// per optimizer step, invalidated after every update.
-    pub bank: ParamBank,
+    /// Parameters, optimizer, clocks, history.
+    pub state: TrainState,
+    /// Replica fan-out × accumulation configuration + per-replica banks.
+    pub pipeline: Pipeline,
     /// Run plans with the sequential executor (`--sequential` escape
     /// hatch); default is the dependency-driven parallel scheduler.
     pub sequential: bool,
@@ -85,104 +147,178 @@ impl<'a> Trainer<'a> {
     pub fn new(engine: &'a Engine, exp: &Experiment) -> Result<Self> {
         let strategy = exp.strategy;
         let plan = build_plan(&exp.model, strategy, exp.hw.dp_host_staged);
-        plan.validate().map_err(|e| anyhow::anyhow!("invalid plan: {e}"))?;
+        plan.validate().map_err(|e| anyhow!("invalid plan: {e}"))?;
         let step_sim = simulate(&plan, &exp.hw);
-        let params = init_params(exp, strategy.uses_input_feeding());
         Ok(Trainer {
             engine,
             plan,
-            params,
-            opt: Optimizer::new(&exp.train),
             strategy,
             exp: exp.clone(),
             step_sim,
-            sim_clock: 0.0,
-            steps_done: 0,
-            prev_dev_ppl: None,
-            history: Vec::new(),
-            bank: ParamBank::new(),
+            state: TrainState::new(exp),
+            pipeline: Pipeline::new(1, 1),
             sequential: false,
         })
     }
 
-    fn exec_opts(&self) -> ExecOptions<'_> {
-        ExecOptions {
-            mode: if self.sequential { ExecMode::Sequential } else { ExecMode::Parallel },
-            bank: Some(&self.bank),
-        }
+    /// Reconfigure the replica fan-out / accumulation (fresh banks).
+    pub fn set_pipeline(&mut self, replicas: usize, accum: usize) {
+        self.pipeline = Pipeline::new(replicas, accum);
     }
 
-    /// Execute one optimizer step on `batch`.
-    pub fn train_step(&mut self, batch: &Batch) -> Result<StepStats> {
-        let t0 = std::time::Instant::now();
-        let out =
-            execute_with(&self.plan, self.engine, &self.params, batch, &self.exec_opts())?;
-        let host_seconds = t0.elapsed().as_secs_f64();
+    pub fn params(&self) -> &BTreeMap<String, Tensor> {
+        &self.state.params
+    }
 
-        // Normalize: mean token loss -> mean gradients.
-        let ntok = out.ntok.max(1.0);
-        let mut grads = out.grads;
+    /// Mutable access to the parameters. Call
+    /// [`Trainer::invalidate_device_params`] after out-of-band edits.
+    pub fn params_mut(&mut self) -> &mut BTreeMap<String, Tensor> {
+        &mut self.state.params
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.state.steps_done
+    }
+
+    /// Micro-batches this trainer (or the run it resumed from) has
+    /// consumed — the stream position for resume fast-forward.
+    pub fn micro_consumed(&self) -> usize {
+        self.state.micro_consumed
+    }
+
+    pub fn sim_clock(&self) -> f64 {
+        self.state.sim_clock
+    }
+
+    pub fn history(&self) -> &[EvalPoint] {
+        &self.state.history
+    }
+
+    fn exec_mode(&self) -> ExecMode {
+        if self.sequential { ExecMode::Sequential } else { ExecMode::Parallel }
+    }
+
+    /// Execute one optimizer step on a single micro-batch. Only valid
+    /// for the default `1 replica × 1 accum` pipeline; multi-replica
+    /// configurations go through [`Trainer::train_step_micro`].
+    pub fn train_step(&mut self, batch: &Batch) -> Result<StepStats> {
+        self.train_step_micro(std::slice::from_ref(batch))
+    }
+
+    /// Execute one optimizer step on `micro` (length must be
+    /// `replicas × accum`): replica fan-out → fixed-order tree reduce
+    /// → sharded optimizer apply → bank invalidation.
+    pub fn train_step_micro(&mut self, micro: &[Batch]) -> Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        let outs = step::run_micro_steps(
+            &self.plan,
+            self.engine,
+            &self.state.params,
+            micro,
+            &self.pipeline,
+            self.exec_mode(),
+        )?;
+        let host_seconds = t0.elapsed().as_secs_f64();
+        let mut replica_host_seconds = vec![0.0f64; self.pipeline.replicas()];
+        for (j, m) in outs.iter().enumerate() {
+            replica_host_seconds[j % self.pipeline.replicas()] += m.host_seconds;
+        }
+
+        // Fixed-order folds over the global shard order: loss/ntok as
+        // f64 left folds, gradients through the binary tree.
+        let t1 = std::time::Instant::now();
+        let mut loss_sum = 0.0;
+        let mut ntok = 0.0;
+        let mut grad_parts = Vec::with_capacity(outs.len());
+        for m in outs {
+            loss_sum += m.out.loss_sum;
+            ntok += m.out.ntok;
+            grad_parts.push(m.out.grads);
+        }
+        let ntok = ntok.max(1.0);
+        let mut grads = step::tree_reduce_grads(grad_parts)?;
+        // Normalize: mean token loss -> mean gradients (over the whole
+        // global batch, so accumulation changes the effective batch,
+        // not the gradient scale).
         for g in grads.values_mut() {
             g.scale(1.0 / ntok as f32);
         }
-        let grad_norm = self.opt.step(&mut self.params, &grads);
-        // The update changed the host parameters: the device-resident
-        // copies are stale until the next step's first touch.
-        self.bank.invalidate();
+        let reduce_seconds = t1.elapsed().as_secs_f64();
 
-        self.steps_done += 1;
-        self.sim_clock += self.step_sim.makespan;
-        let loss_per_tok = out.loss_sum / ntok;
+        let t2 = std::time::Instant::now();
+        let grad_norm =
+            self.state
+                .opt
+                .apply(&mut self.state.params, &grads, self.pipeline.replicas())?;
+        let apply_seconds = t2.elapsed().as_secs_f64();
+        // The update changed the host parameters: every replica's
+        // device-resident copies are stale until the next first touch.
+        self.pipeline.invalidate();
+
+        self.state.steps_done += 1;
+        self.state.micro_consumed += micro.len();
+        self.state.sim_clock += self.pipeline.accum() as f64 * self.step_sim.makespan;
+        let loss_per_tok = loss_sum / ntok;
         Ok(StepStats {
-            step: self.steps_done,
+            step: self.state.steps_done,
             loss_per_tok,
-            ppl: perplexity(out.loss_sum, ntok),
+            ppl: perplexity(loss_sum, ntok),
             grad_norm,
-            sim_seconds: self.step_sim.makespan,
+            sim_seconds: self.pipeline.accum() as f64 * self.step_sim.makespan,
             host_seconds,
-            src_tokens: batch.tokens(),
+            src_tokens: micro.iter().map(|b| b.tokens()).sum(),
+            micro_batches: micro.len(),
+            reduce_seconds,
+            apply_seconds,
+            prefetch_stall_seconds: 0.0,
+            replica_host_seconds,
         })
     }
 
     /// Dev perplexity: forward the eval batches through the same plan
-    /// (gradients discarded) and pool token NLL.
+    /// (gradients discarded) and pool token NLL. Rides replica 0's
+    /// bank.
     pub fn eval_ppl(&self, batches: &[Batch]) -> Result<f64> {
+        let opts = ExecOptions {
+            mode: self.exec_mode(),
+            bank: Some(&self.pipeline.banks()[0]),
+        };
         let mut loss = 0.0;
         let mut ntok = 0.0;
         for b in batches {
-            let out =
-                execute_with(&self.plan, self.engine, &self.params, b, &self.exec_opts())?;
+            let out = execute_with(&self.plan, self.engine, &self.state.params, b, &opts)?;
             loss += out.loss_sum;
             ntok += out.ntok;
         }
         Ok(perplexity(loss, ntok))
     }
 
-    /// Invalidate the device-resident parameter copies after any
-    /// out-of-band mutation of `self.params` (checkpoint restore,
-    /// manual edits in tests).
+    /// Invalidate every replica's device-resident parameter copies
+    /// after any out-of-band mutation of the parameters (checkpoint
+    /// restore, manual edits in tests).
     pub fn invalidate_device_params(&self) {
-        self.bank.invalidate();
+        self.pipeline.invalidate();
     }
 
     /// Evaluate + plateau-decay + record a Figure-4 point.
     pub fn eval_and_schedule(&mut self, dev: &[Batch]) -> Result<EvalPoint> {
         let ppl = self.eval_ppl(dev)?;
-        if self.steps_done % self.exp.train.decay_interval == 0 {
-            self.opt.maybe_decay(self.prev_dev_ppl, ppl);
+        if self.state.steps_done % self.exp.train.decay_interval == 0 {
+            self.state.opt.maybe_decay(self.state.prev_dev_ppl, ppl);
         }
-        self.prev_dev_ppl = Some(ppl);
+        self.state.prev_dev_ppl = Some(ppl);
         let point = EvalPoint {
-            step: self.steps_done,
-            sim_hours: self.sim_clock / 3600.0,
+            step: self.state.steps_done,
+            sim_hours: self.state.sim_clock / 3600.0,
             dev_ppl: ppl,
-            lr: self.opt.lr,
+            lr: self.state.opt.lr(),
         };
-        self.history.push(point.clone());
+        self.state.history.push(point.clone());
         Ok(point)
     }
 
-    /// Full training run over `batcher` per the experiment config.
+    /// Full training run over `batcher` per the experiment config, with
+    /// next-batch preparation prefetched one global batch ahead.
     /// `log` receives per-eval lines.
     pub fn run(
         &mut self,
@@ -194,18 +330,81 @@ impl<'a> Trainer<'a> {
         // use the full dev set via `eval_ppl`.
         let mut dev = batcher.dev_batches();
         dev.truncate(4);
-        for _ in 0..self.exp.train.steps {
-            let batch = batcher.next_train();
-            let st = self.train_step(&batch)?;
-            if self.steps_done % self.exp.train.eval_interval == 0 {
-                let ev = self.eval_and_schedule(&dev)?;
-                log(&format!(
-                    "step {:>5}  train-ppl {:>8.2}  dev-ppl {:>8.2}  lr {:.2e}  sim {:>7.1}s  ({:.2} tok/s sim)",
-                    st.step, st.ppl, ev.dev_ppl, ev.lr, self.sim_clock,
-                    st.src_tokens / st.sim_seconds
-                ));
+        let per_step = self.pipeline.micro_per_step();
+        let steps = self.exp.train.steps;
+        let eval_interval = self.exp.train.eval_interval;
+        with_prefetch(batcher, steps * per_step, per_step, |pre| {
+            for _ in 0..steps {
+                let micro: Vec<Batch> =
+                    (0..per_step).map(|_| pre.next()).collect::<Result<_>>()?;
+                let stall = pre.take_stall();
+                let mut st = self.train_step_micro(&micro)?;
+                st.prefetch_stall_seconds = stall;
+                if self.state.steps_done % eval_interval == 0 {
+                    let ev = self.eval_and_schedule(&dev)?;
+                    log(&format!(
+                        "step {:>5}  train-ppl {:>8.2}  dev-ppl {:>8.2}  lr {:.2e}  sim {:>7.1}s  ({:.2} tok/s sim)",
+                        st.step, st.ppl, ev.dev_ppl, ev.lr, self.state.sim_clock,
+                        st.src_tokens / st.sim_seconds
+                    ));
+                }
+            }
+            Ok(())
+        })
+    }
+
+    /// Write a format-v2 checkpoint: parameters + optimizer state +
+    /// training clocks (step count, sim clock, plateau-schedule
+    /// reference), so [`Trainer::resume`] restarts bitwise-exactly —
+    /// LR schedule included.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        checkpoint::save_full(
+            path,
+            &self.state.params,
+            &self.state.opt.state_view(),
+            &checkpoint::TrainMeta {
+                steps_done: self.state.steps_done as u64,
+                micro_consumed: self.state.micro_consumed as u64,
+                sim_clock: self.state.sim_clock,
+                prev_dev_ppl: self.state.prev_dev_ppl,
+            },
+        )
+    }
+
+    /// Restore parameters (and, for v2 checkpoints, optimizer state +
+    /// training clocks) from `path`. v1 param-only files restore
+    /// parameters and leave the optimizer fresh.
+    pub fn resume(&mut self, path: &Path) -> Result<()> {
+        let ck = checkpoint::load_full(path)?;
+        for (name, t) in &ck.params {
+            match self.state.params.get(name) {
+                Some(cur) if cur.shape() == t.shape() => {}
+                Some(cur) => {
+                    return Err(anyhow!(
+                        "checkpoint param `{name}` has shape {:?}, model wants {:?}",
+                        t.shape(),
+                        cur.shape()
+                    ))
+                }
+                None => return Err(anyhow!("checkpoint param `{name}` unknown to this model")),
             }
         }
+        if ck.params.len() != self.state.params.len() {
+            return Err(anyhow!(
+                "checkpoint has {} params, model wants {} (strategy mismatch?)",
+                ck.params.len(),
+                self.state.params.len()
+            ));
+        }
+        self.state.params = ck.params;
+        if let Some(opt) = &ck.opt {
+            self.state.opt.import_state(opt)?;
+        }
+        self.state.steps_done = ck.meta.steps_done as usize;
+        self.state.micro_consumed = ck.meta.micro_consumed as usize;
+        self.state.sim_clock = ck.meta.sim_clock;
+        self.state.prev_dev_ppl = ck.meta.prev_dev_ppl;
+        self.pipeline.invalidate();
         Ok(())
     }
 

@@ -1,0 +1,209 @@
+//! The pipelined multi-replica train step: replica fan-out over the
+//! plan-scheduler worker pool, fixed-order deterministic tree reduce,
+//! and micro-step gradient accumulation.
+//!
+//! One optimizer step consumes `replicas × accum` artifact-shaped
+//! micro-batches — the row-shards of the *global* batch (shard `j`
+//! owns rows `[j·B, (j+1)·B)` of the concatenated
+//! `[replicas·accum·B, …]` batch the step trains on). Replica `r`
+//! executes the shared [`Plan`] on shards `r, r+R, r+2R, …` in order
+//! (the same static round-robin as [`run_sharded`]), resolving
+//! parameters through **its own** [`ParamBank`] — the data-parallel
+//! picture of one weight copy per worker, and no bank-lock contention
+//! between replicas.
+//!
+//! ## Determinism
+//!
+//! The reduction is a fixed-shape binary tree over the micro-gradients
+//! *in global shard order* — pass 1 combines (0,1), (2,3), …; pass 2
+//! combines the pass-1 results pairwise; and so on. The tree's shape
+//! and order depend only on the shard count, never on the replica
+//! count, executor mode, or thread timing, so spreading the same
+//! shards over 1, 2 or 4 replicas (or flipping
+//! sequential ↔ parallel executors) produces **bitwise-identical**
+//! gradients — `rust/tests/train_equivalence.rs` is the gate.
+
+use crate::parallel::{execute_with, run_sharded, Batch, ExecMode, ExecOptions, Plan, StepOut};
+use crate::runtime::{Engine, ParamBank};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Replica fan-out + accumulation configuration of one trainer, plus
+/// the per-replica parameter banks it owns.
+pub struct Pipeline {
+    replicas: usize,
+    accum: usize,
+    /// One bank per replica worker: each uploads the full parameter set
+    /// once per optimizer step (its device's weight copy).
+    banks: Vec<ParamBank>,
+}
+
+impl Pipeline {
+    /// `replicas` data-parallel workers × `accum` sequential
+    /// micro-steps per worker (both clamped to ≥ 1).
+    pub fn new(replicas: usize, accum: usize) -> Self {
+        let replicas = replicas.max(1);
+        Pipeline {
+            replicas,
+            accum: accum.max(1),
+            banks: (0..replicas).map(|_| ParamBank::new()).collect(),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn accum(&self) -> usize {
+        self.accum
+    }
+
+    /// Micro-batches consumed per optimizer step (= global-batch rows
+    /// divided by the artifact batch).
+    pub fn micro_per_step(&self) -> usize {
+        self.replicas * self.accum
+    }
+
+    /// The replica parameter banks (index = replica).
+    pub fn banks(&self) -> &[ParamBank] {
+        &self.banks
+    }
+
+    /// Drop every replica's resident parameter copies (host parameters
+    /// changed — called after each optimizer update).
+    pub fn invalidate(&self) {
+        for b in &self.banks {
+            b.invalidate();
+        }
+    }
+
+    /// Total parameter uploads across all replica banks since
+    /// construction.
+    pub fn upload_count(&self) -> u64 {
+        self.banks.iter().map(|b| b.upload_count()).sum()
+    }
+
+    /// Total bytes those uploads moved host→device.
+    pub fn upload_bytes(&self) -> u64 {
+        self.banks.iter().map(|b| b.upload_bytes()).sum()
+    }
+}
+
+/// Per-micro-step execution record.
+pub struct MicroOut {
+    pub out: StepOut,
+    /// Host seconds this shard's plan execution took on its replica.
+    pub host_seconds: f64,
+}
+
+/// Execute the plan once per micro-batch, fanned out over the pipeline's
+/// replicas (shard `j` → replica `j % R`, each replica walking its
+/// shards in order through its own bank). Results come back in global
+/// shard order regardless of which replica ran them.
+pub fn run_micro_steps(
+    plan: &Plan,
+    engine: &Engine,
+    params: &BTreeMap<String, Tensor>,
+    micro: &[Batch],
+    pipeline: &Pipeline,
+    mode: ExecMode,
+) -> Result<Vec<MicroOut>> {
+    if micro.len() != pipeline.micro_per_step() {
+        return Err(anyhow!(
+            "train step needs {} micro-batches ({} replicas × {} accum), got {}",
+            pipeline.micro_per_step(),
+            pipeline.replicas,
+            pipeline.accum,
+            micro.len()
+        ));
+    }
+    let outs = run_sharded(pipeline.replicas, micro.len(), |worker, j| {
+        let opts = ExecOptions { mode, bank: Some(&pipeline.banks[worker]) };
+        let t0 = std::time::Instant::now();
+        let out = execute_with(plan, engine, params, &micro[j], &opts)?;
+        Ok(MicroOut { out, host_seconds: t0.elapsed().as_secs_f64() })
+    })?;
+    Ok(outs)
+}
+
+/// Sum a list of same-keyed gradient maps with a fixed-shape binary
+/// tree over the list order: pass 1 folds (0,1), (2,3), …, later
+/// passes fold the survivors pairwise (an odd tail passes through
+/// unchanged). Purely positional, so the result is independent of how
+/// the entries were produced — the cross-replica gradient reduce.
+pub fn tree_reduce_grads(
+    mut parts: Vec<BTreeMap<String, Tensor>>,
+) -> Result<BTreeMap<String, Tensor>> {
+    if parts.is_empty() {
+        return Err(anyhow!("tree reduce of zero gradient sets"));
+    }
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut left) = it.next() {
+            if let Some(right) = it.next() {
+                for (name, r) in right {
+                    let l = left
+                        .get_mut(&name)
+                        .ok_or_else(|| anyhow!("replica gradient sets disagree on `{name}`"))?;
+                    l.add_assign(&r);
+                }
+            }
+            next.push(left);
+        }
+        parts = next;
+    }
+    Ok(parts.pop().expect("non-empty"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gmap(vals: &[f32]) -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert("g".to_string(), Tensor::new(vec![vals.len()], vals.to_vec()));
+        m
+    }
+
+    #[test]
+    fn tree_reduce_matches_manual_tree() {
+        // Values chosen so f32 addition order matters: the tree
+        // ((a+b)+(c+d)) differs from the left fold (((a+b)+c)+d).
+        let (a, b, c, d) = (1.0e8f32, 1.0f32, -1.0e8f32, 1.0f32);
+        let out = tree_reduce_grads(vec![gmap(&[a]), gmap(&[b]), gmap(&[c]), gmap(&[d])]).unwrap();
+        let manual = (a + b) + (c + d);
+        assert_eq!(out["g"].data()[0].to_bits(), manual.to_bits());
+    }
+
+    #[test]
+    fn tree_reduce_odd_tail_passes_through() {
+        let out = tree_reduce_grads(vec![gmap(&[1.0]), gmap(&[2.0]), gmap(&[4.0])]).unwrap();
+        // Pass 1: (1+2), 4 ; pass 2: 3+4.
+        assert_eq!(out["g"].data()[0], 7.0);
+    }
+
+    #[test]
+    fn tree_reduce_single_is_identity() {
+        let out = tree_reduce_grads(vec![gmap(&[3.5, -1.0])]).unwrap();
+        assert_eq!(out["g"].data(), &[3.5, -1.0]);
+    }
+
+    #[test]
+    fn tree_reduce_rejects_key_mismatch() {
+        let mut odd = BTreeMap::new();
+        odd.insert("other".to_string(), Tensor::new(vec![1], vec![1.0]));
+        assert!(tree_reduce_grads(vec![gmap(&[1.0]), odd]).is_err());
+        assert!(tree_reduce_grads(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn pipeline_shapes() {
+        let p = Pipeline::new(4, 2);
+        assert_eq!(p.micro_per_step(), 8);
+        assert_eq!(p.banks().len(), 4);
+        let p = Pipeline::new(0, 0);
+        assert_eq!(p.micro_per_step(), 1);
+    }
+}

@@ -264,13 +264,13 @@ fn checkpoint_roundtrip_preserves_training_state() {
     let dir = std::env::temp_dir().join("hynmt_int_ck");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("m.bin");
-    hybridnmt::train::checkpoint::save(&path, &trainer.params).unwrap();
+    hybridnmt::train::checkpoint::save(&path, trainer.params()).unwrap();
     let back = hybridnmt::train::checkpoint::load(&path).unwrap();
-    assert_eq!(back, trainer.params);
+    assert_eq!(&back, trainer.params());
     // The reloaded params drive the same forward loss.
     let batch = random_batch(&exp.model, 21);
     let plan = build_plan(&exp.model, Strategy::Hybrid, true);
-    let a = execute(&plan, &e, &trainer.params, &batch).unwrap().loss_sum;
+    let a = execute(&plan, &e, trainer.params(), &batch).unwrap().loss_sum;
     let b = execute(&plan, &e, &back, &batch).unwrap().loss_sum;
     assert_eq!(a, b);
 }

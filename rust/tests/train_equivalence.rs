@@ -1,0 +1,357 @@
+//! Multi-replica training equivalence: for a fixed global batch (the
+//! same ordered list of micro-batch row-shards), the final parameters
+//! after N optimizer steps must be **bitwise-identical** no matter how
+//! the shards are spread over replicas, how many accumulation
+//! micro-steps each replica runs, or which plan executor
+//! (sequential/parallel) walks the graph. The pipeline's fixed-order
+//! gradient tree and the per-param-sharded optimizer make this hold by
+//! construction; this suite is the gate (requires `make artifacts`).
+//!
+//! Also here: optimizer-trait parity against the seed `Optimizer`
+//! numerics on the quadratic fixtures (engine-free), and exact
+//! checkpoint-v2 resume.
+
+use hybridnmt::config::{
+    DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig,
+};
+use hybridnmt::data::vocab::{BOS, EOS, PAD};
+use hybridnmt::optim::{self, Optimizer};
+use hybridnmt::parallel::Batch;
+use hybridnmt::rng::Rng;
+use hybridnmt::runtime::Engine;
+use hybridnmt::tensor::{ITensor, Tensor};
+use hybridnmt::train::Trainer;
+use std::collections::BTreeMap;
+
+fn engine() -> Engine {
+    Engine::load("artifacts", "tiny").expect("run `make artifacts` first")
+}
+
+/// A deterministic random batch padded to the artifact shapes.
+fn random_batch(d: &ModelDims, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (b, m, n) = (d.batch, d.max_src, d.max_tgt);
+    let mut src = vec![PAD; b * m];
+    let mut srclen = vec![0i32; b];
+    let mut tgt_in = vec![PAD; b * n];
+    let mut tgt_out = vec![PAD; b * n];
+    let mut tmask = vec![0.0f32; b * n];
+    for bi in 0..b {
+        let sl = rng.range(2, m + 1);
+        srclen[bi] = sl as i32;
+        for t in 0..sl {
+            src[bi * m + t] = rng.range(4, d.vocab) as i32;
+        }
+        let tl = rng.range(1, n);
+        tgt_in[bi * n] = BOS;
+        for t in 0..tl {
+            let tok = rng.range(4, d.vocab) as i32;
+            tgt_in[bi * n + t + 1] = tok;
+            tgt_out[bi * n + t] = tok;
+        }
+        tgt_out[bi * n + tl] = EOS;
+        for t in 0..=tl {
+            tmask[bi * n + t] = 1.0;
+        }
+    }
+    Batch {
+        src: ITensor::new(vec![b, m], src),
+        srclen: ITensor::new(vec![b], srclen),
+        tgt_in: ITensor::new(vec![b, n], tgt_in),
+        tgt_out: ITensor::new(vec![b, n], tgt_out),
+        tmask: Tensor::new(vec![b, n], tmask),
+    }
+}
+
+fn test_exp(e: &Engine) -> Experiment {
+    Experiment {
+        model: e.dims().clone(),
+        strategy: Strategy::Hybrid,
+        hw: HwConfig::default(),
+        train: TrainConfig {
+            seed: 3,
+            steps: 4,
+            eval_interval: 100,
+            // Every eval hits the plateau-decay check, so the resume
+            // test exercises the persisted `prev_dev_ppl` reference.
+            decay_interval: 2,
+            ..Default::default()
+        },
+        data: DataConfig::wmt14_sim(600),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// Train `steps` optimizer steps over `pool` (consumed in order,
+/// `replicas × accum` shards per step) and return the final params.
+fn train_config(
+    e: &Engine,
+    pool: &[Batch],
+    steps: usize,
+    replicas: usize,
+    accum: usize,
+    sequential: bool,
+) -> BTreeMap<String, Tensor> {
+    let exp = test_exp(e);
+    let mut tr = Trainer::new(e, &exp).unwrap();
+    tr.sequential = sequential;
+    tr.set_pipeline(replicas, accum);
+    let per = tr.pipeline.micro_per_step();
+    assert_eq!(per, replicas * accum);
+    assert!(pool.len() >= steps * per, "pool too small");
+    for s in 0..steps {
+        tr.train_step_micro(&pool[s * per..(s + 1) * per])
+            .unwrap_or_else(|err| panic!("{replicas}x{accum} step {s}: {err:#}"));
+    }
+    assert_eq!(tr.steps_done(), steps);
+    tr.params().clone()
+}
+
+fn assert_params_bitwise(label: &str, a: &BTreeMap<String, Tensor>, b: &BTreeMap<String, Tensor>) {
+    assert_eq!(a.len(), b.len(), "{label}: param count");
+    for (name, x) in a {
+        let y = b.get(name).unwrap_or_else(|| panic!("{label}: missing `{name}`"));
+        assert_eq!(x.shape(), y.shape(), "{label}: `{name}` shape");
+        for (i, (u, v)) in x.data().iter().zip(y.data()).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "{label}: param `{name}`[{i}] {u} vs {v}"
+            );
+        }
+    }
+}
+
+/// The tentpole claim: 4 shards per step spread as 1×4, 2×2 and 4×1
+/// over sequential and parallel executors — one set of final bits.
+#[test]
+fn replica_fanout_and_accumulation_are_bitwise_equivalent() {
+    let e = engine();
+    let d = e.dims().clone();
+    let steps = 2;
+    let pool: Vec<Batch> = (0..steps * 4).map(|j| random_batch(&d, 100 + j as u64)).collect();
+
+    // Reference: single replica, accumulation only, sequential executor.
+    let reference = train_config(&e, &pool, steps, 1, 4, true);
+    for (replicas, accum, sequential) in
+        [(1, 4, false), (2, 2, false), (4, 1, false), (4, 1, true)]
+    {
+        let got = train_config(&e, &pool, steps, replicas, accum, sequential);
+        assert_params_bitwise(
+            &format!("{replicas} replicas x {accum} accum (sequential={sequential})"),
+            &reference,
+            &got,
+        );
+    }
+}
+
+/// Same invariant at 8 shards per step (covers replicas {2, 4} with
+/// accum 4 and 2 against the single-replica accumulated reference).
+#[test]
+fn eight_shard_global_batch_is_replica_count_invariant() {
+    let e = engine();
+    let d = e.dims().clone();
+    let steps = 2;
+    let pool: Vec<Batch> = (0..steps * 8).map(|j| random_batch(&d, 200 + j as u64)).collect();
+    let reference = train_config(&e, &pool, steps, 1, 8, true);
+    for (replicas, accum) in [(2, 4), (4, 2)] {
+        let got = train_config(&e, &pool, steps, replicas, accum, false);
+        assert_params_bitwise(&format!("{replicas}x{accum}"), &reference, &got);
+    }
+}
+
+/// The degenerate 1×1 pipeline must preserve the seed trainer's
+/// numerics across both executors (the pre-refactor behavior).
+#[test]
+fn single_replica_single_accum_matches_across_executors() {
+    let e = engine();
+    let d = e.dims().clone();
+    let pool: Vec<Batch> = (0..3).map(|j| random_batch(&d, 300 + j as u64)).collect();
+    let seq = train_config(&e, &pool, 3, 1, 1, true);
+    let par = train_config(&e, &pool, 3, 1, 1, false);
+    assert_params_bitwise("1x1 seq vs par", &seq, &par);
+}
+
+/// A mis-sized micro list is an error, not a panic or a silent
+/// truncation.
+#[test]
+fn wrong_micro_count_errors() {
+    let e = engine();
+    let d = e.dims().clone();
+    let exp = test_exp(&e);
+    let mut tr = Trainer::new(&e, &exp).unwrap();
+    tr.set_pipeline(2, 2);
+    let batch = random_batch(&d, 7);
+    let err = tr.train_step_micro(std::slice::from_ref(&batch)).unwrap_err();
+    assert!(err.to_string().contains("micro-batches"), "{err}");
+    // train_step is the 1-micro-batch convenience: wrong here too.
+    assert!(tr.train_step(&batch).is_err());
+}
+
+/// Checkpoint v2 makes resume *exact*: save at step k (after a
+/// scheduled eval, so the plateau reference and sim clock are live),
+/// restore into a fresh trainer, continue through another eval —
+/// bitwise the same parameters, LR and clocks as never stopping.
+#[test]
+fn v2_resume_is_bitwise_exact() {
+    let e = engine();
+    let d = e.dims().clone();
+    let exp = test_exp(&e);
+    let pool: Vec<Batch> = (0..4).map(|j| random_batch(&d, 400 + j as u64)).collect();
+    let dev = vec![random_batch(&d, 500)];
+
+    let mut full = Trainer::new(&e, &exp).unwrap();
+    for b in &pool[..2] {
+        full.train_step(b).unwrap();
+    }
+    full.eval_and_schedule(&dev).unwrap();
+    let dir = std::env::temp_dir().join("hynmt_train_eq");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume.bin");
+    full.save_checkpoint(&path).unwrap();
+    let clock_at_save = full.sim_clock();
+    for b in &pool[2..] {
+        full.train_step(b).unwrap();
+    }
+    let ev_full = full.eval_and_schedule(&dev).unwrap();
+
+    let mut resumed = Trainer::new(&e, &exp).unwrap();
+    resumed.resume(&path).unwrap();
+    assert_eq!(resumed.steps_done(), 2);
+    assert_eq!(resumed.sim_clock().to_bits(), clock_at_save.to_bits());
+    for b in &pool[2..] {
+        resumed.train_step(b).unwrap();
+    }
+    let ev_res = resumed.eval_and_schedule(&dev).unwrap();
+    assert_eq!(resumed.steps_done(), full.steps_done());
+    assert_params_bitwise("resumed vs continuous", full.params(), resumed.params());
+    // The persisted training clocks + plateau reference make the whole
+    // schedule continue identically, not just the weights.
+    assert_eq!(ev_full.dev_ppl.to_bits(), ev_res.dev_ppl.to_bits(), "dev ppl");
+    assert_eq!(ev_full.lr.to_bits(), ev_res.lr.to_bits(), "post-eval LR");
+    assert_eq!(ev_full.sim_hours.to_bits(), ev_res.sim_hours.to_bits(), "sim clock");
+}
+
+// --------------------------------------------------------------------------
+// Optimizer-trait parity vs the seed `Optimizer` numerics (engine-free)
+// --------------------------------------------------------------------------
+
+/// The seed repo's optimizer, verbatim: one serial BTreeMap walk with
+/// per-element f64 math. The trait impls must reproduce it bit-for-bit
+/// at every worker count.
+struct SeedOptimizer {
+    lr: f64,
+    cfg: TrainConfig,
+    m: BTreeMap<String, Vec<f32>>,
+    v: BTreeMap<String, Vec<f32>>,
+    t: u64,
+}
+
+impl SeedOptimizer {
+    fn new(cfg: &TrainConfig) -> Self {
+        SeedOptimizer { lr: cfg.lr, cfg: cfg.clone(), m: BTreeMap::new(), v: BTreeMap::new(), t: 0 }
+    }
+
+    fn step(
+        &mut self,
+        params: &mut BTreeMap<String, Tensor>,
+        grads: &BTreeMap<String, Tensor>,
+    ) -> f64 {
+        self.t += 1;
+        let mut sq = 0.0f64;
+        for g in grads.values() {
+            sq += g.sq_norm() as f64;
+        }
+        let norm = sq.sqrt();
+        let clip = if self.cfg.clip_norm > 0.0 && norm > self.cfg.clip_norm {
+            self.cfg.clip_norm / norm
+        } else {
+            1.0
+        };
+        if self.cfg.sgd {
+            for (name, g) in grads {
+                let p = params.get_mut(name).expect("param for grad");
+                for (w, &gi) in p.data_mut().iter_mut().zip(g.data()) {
+                    *w -= (self.lr * clip * gi as f64) as f32;
+                }
+            }
+            return norm;
+        }
+        let (b1, b2, eps) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for (name, g) in grads {
+            let p = params.get_mut(name).expect("param for grad");
+            let m = self.m.entry(name.clone()).or_insert_with(|| vec![0.0; g.numel()]);
+            let v = self.v.entry(name.clone()).or_insert_with(|| vec![0.0; g.numel()]);
+            for i in 0..g.numel() {
+                let gi = (g.data()[i] as f64) * clip;
+                m[i] = (b1 * m[i] as f64 + (1.0 - b1) * gi) as f32;
+                v[i] = (b2 * v[i] as f64 + (1.0 - b2) * gi * gi) as f32;
+                let mhat = m[i] as f64 / bc1;
+                let vhat = v[i] as f64 / bc2;
+                p.data_mut()[i] -= (self.lr * mhat / (vhat.sqrt() + eps)) as f32;
+            }
+        }
+        norm
+    }
+}
+
+/// Multi-tensor variant of the quadratic fixture: f(w) = 0.5 Σ ||w||²,
+/// grad = w — several parameters so the per-param sharding actually
+/// partitions.
+fn quad_params(seed: u64) -> BTreeMap<String, Tensor> {
+    let mut rng = Rng::new(seed);
+    let mut p = BTreeMap::new();
+    for (name, n) in [("a_w", 5usize), ("b_w", 1), ("c_w", 9), ("d_w", 2)] {
+        let data: Vec<f32> = (0..n).map(|_| rng.uniform(2.0)).collect();
+        p.insert(name.to_string(), Tensor::new(vec![n], data));
+    }
+    p
+}
+
+fn grads_of(params: &BTreeMap<String, Tensor>) -> BTreeMap<String, Tensor> {
+    params.clone()
+}
+
+#[test]
+fn optimizer_trait_matches_seed_numerics_bitwise() {
+    for sgd in [false, true] {
+        let cfg = TrainConfig { sgd, lr: 0.07, clip_norm: 1.5, ..Default::default() };
+        for workers in [1usize, 2, 5] {
+            let mut seed_opt = SeedOptimizer::new(&cfg);
+            let mut seed_params = quad_params(9);
+            let mut trait_opt = optim::build(&cfg);
+            let mut trait_params = quad_params(9);
+            for step in 0..40 {
+                let g = grads_of(&seed_params);
+                let n_seed = seed_opt.step(&mut seed_params, &g);
+                let g2 = grads_of(&trait_params);
+                let n_trait = trait_opt.apply(&mut trait_params, &g2, workers).unwrap();
+                assert_eq!(
+                    n_seed.to_bits(),
+                    n_trait.to_bits(),
+                    "sgd={sgd} workers={workers} step {step}: grad norm"
+                );
+            }
+            assert_params_bitwise(
+                &format!("sgd={sgd} workers={workers}"),
+                &seed_params,
+                &trait_params,
+            );
+        }
+    }
+}
+
+/// The seed panicked on a gradient with no matching parameter; the
+/// trait returns an error (satellite: panic→error cleanup).
+#[test]
+fn optimizer_rejects_unknown_gradient() {
+    let cfg = TrainConfig::default();
+    let mut opt = optim::build(&cfg);
+    let mut params = quad_params(1);
+    let mut g = BTreeMap::new();
+    g.insert("zz_unknown".to_string(), Tensor::new(vec![2], vec![1.0, 2.0]));
+    let err = opt.apply(&mut params, &g, 1).unwrap_err();
+    assert!(err.to_string().contains("unknown parameter"), "{err}");
+}

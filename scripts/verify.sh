@@ -44,6 +44,23 @@ bad = [k for k, v in data.items()
        if not isinstance(v, (int, float)) or not math.isfinite(v)]
 if bad:
     raise SystemExit(f"{path}: non-numeric/non-finite entries: {bad[:5]}")
+if path.endswith("BENCH_train.json"):
+    # The training benchmark's fixed row schema: every row prefix
+    # (r<replicas>.accum<K>) must report token throughput, the
+    # per-step wall time, the reduce/apply/stall phase breakdown and
+    # the per-step parameter-upload count. A train-bench run that
+    # stopped writing any of these is a regression, not a formatting
+    # choice.
+    required = ["tok_per_s", "step_ms", "reduce_ms", "apply_ms",
+                "stall_ms", "uploads_per_step"]
+    prefixes = {k.rsplit(".", 1)[0] for k in data}
+    if not prefixes:
+        raise SystemExit(f"{path}: no train rows")
+    for p in sorted(prefixes):
+        missing = [s for s in required if f"{p}.{s}" not in data]
+        if missing:
+            raise SystemExit(f"{path}: row `{p}` missing {missing}")
+    print(f"  {path}: train schema OK ({len(prefixes)} rows)")
 if path.endswith("BENCH_serve.json"):
     # The serving benchmark has a fixed schema on top of the flat
     # name->number convention: every row prefix (r<replicas>.beam<B>.
