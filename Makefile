@@ -1,6 +1,6 @@
 # hybridnmt build/verify entry points (see README.md).
 
-.PHONY: artifacts verify doc clean-artifacts serve-bench train-bench
+.PHONY: artifacts verify lint doc clean-artifacts serve-bench train-bench
 
 # AOT-compile the JAX model to HLO-text artifacts + manifests.
 # aot.py uses package-relative imports, so run it as a module from
@@ -13,6 +13,11 @@ artifacts:
 # scripts/verify.sh) so the BENCH/doc checks still run everywhere.
 verify:
 	./scripts/verify.sh
+
+# Structural brace/bracket/paren balance of every rust source — the
+# no-toolchain lint stage of verify, runnable on its own (python3 only).
+lint:
+	python3 scripts/brace_balance.py rust/src rust/tests benches examples
 
 # Serving benchmarks: offline decode throughput (serve-bench →
 # BENCH_decode.json) and the online scheduler under Poisson load

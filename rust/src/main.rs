@@ -19,7 +19,7 @@ use hybridnmt::report;
 use hybridnmt::runtime::{Engine, ParamBank};
 use hybridnmt::serve::{drive_arrivals, poisson_arrivals, run_server, ServeOptions};
 use hybridnmt::sim::simulate;
-use hybridnmt::train::{checkpoint, init_params, Trainer};
+use hybridnmt::train::{checkpoint, init_params, StepMode, Trainer};
 use hybridnmt::util::per_sec;
 
 struct Args {
@@ -77,9 +77,13 @@ COMMANDS
              [--accum K (gradient-accumulation micro-steps per replica)]
              [--resume ck.bin (restore params + optimizer state + step count)]
              [--sequential (disable the parallel plan executor)]
+             [--bucket-kib N (flat-slab bucket size, default 256)]
+             [--map-step (PR-4 map-based step engine instead of the
+             overlapped flat-slab engine)]
   train-bench  [--model tiny] [--steps N] [--replicas R] [--accum K]
-             [--strategy S] [--sentences N] [--sequential]
-             (training-throughput sweep over replicas 1..R x accum {1, K};
+             [--strategy S] [--sentences N] [--sequential] [--bucket-kib N]
+             (training-throughput sweep over replicas 1..R x accum {1, K},
+             each config on the flat-slab engine AND the map reference;
              writes BENCH_train.json + results/train_bench.{txt,csv})
   translate  --ckpt file.bin [--model small] [--beam B] [--alpha A]
              [--dataset D] [--strategy S (sets input-feeding)]
@@ -237,6 +241,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let mut trainer = Trainer::new(&engine, &exp)?;
     trainer.sequential = args.get("sequential").is_some();
+    if args.get("map-step").is_some() {
+        trainer.set_step_mode(StepMode::Map);
+    }
+    trainer.set_bucket_bytes(args.usize("bucket-kib", 256)?.max(1) * 1024);
     let replicas = args.usize("replicas", 1)?.max(1);
     let accum = args.usize("accum", 1)?.max(1);
     trainer.set_pipeline(replicas, accum);
@@ -258,11 +266,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         0
     };
     println!(
-        "plan: {} steps on {} devices ({} executor), {} replicas x {} accum \
-         (global batch {}), sim step time {:.4}s, sim {:.0} src-tok/s",
+        "plan: {} steps on {} devices ({} executor, {} step engine), \
+         {} replicas x {} accum (global batch {}), sim step time {:.4}s, \
+         sim {:.0} src-tok/s",
         trainer.plan.steps.len(),
         trainer.plan.distinct_devices().len(),
         if trainer.sequential { "sequential" } else { "parallel" },
+        match trainer.step_mode() {
+            StepMode::Flat => format!("flat/{}KiB-bucket", trainer.bucket_bytes() / 1024),
+            StepMode::Map => "map".to_string(),
+        },
         replicas,
         accum,
         replicas * accum * exp.model.batch,
@@ -284,7 +297,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     println!(
         "uploads: {} ({:.1} MB); buffer reuse: {} hits, {:.1} MB re-upload avoided; \
-         param uploads/step: {:.1} over {} replica banks ({:.1} MB total)",
+         param uploads/step: {:.1} over {} replica banks ({:.1} MB total, \
+         {} bucketed prime passes)",
         st.uploads,
         st.upload_bytes as f64 / 1e6,
         st.buffer_hits,
@@ -294,20 +308,26 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.pipeline.upload_count() as f64
             / (trainer.steps_done() - resumed_at).max(1) as f64,
         trainer.pipeline.replicas(),
-        trainer.pipeline.upload_bytes() as f64 / 1e6
+        trainer.pipeline.upload_bytes() as f64 / 1e6,
+        trainer.pipeline.prime_count()
     );
     Ok(())
 }
 
-/// Training-throughput sweep (the tentpole acceptance gate for the
-/// pipelined multi-replica engine): time `--steps` optimizer steps at
-/// each replicas × accum configuration, after one untimed warmup step
-/// per config (artifact compilation + first parameter upload). Every
-/// config starts from the same seed and the same batch stream, so
-/// configurations with equal `replicas × accum` consume identical
-/// global batches — their first timed losses are asserted bitwise
-/// equal, the train-side analogue of serve-bench's token-identity
-/// gate. Writes `BENCH_train.json` + `results/train_bench.{txt,csv}`.
+/// Training-throughput sweep (the acceptance gate of the flat-slab
+/// overlapped-reduce engine): time `--steps` optimizer steps at each
+/// replicas × accum configuration — on **both** step engines (the
+/// flat-slab default and the map-based PR-4 reference) — after one
+/// untimed warmup step per config (artifact compilation + first
+/// parameter upload). Every config starts from the same seed and the
+/// same batch stream, so configurations with equal `replicas × accum`
+/// consume identical global batches — their first timed losses are
+/// asserted bitwise equal *across engines too*, the train-side
+/// analogue of serve-bench's token-identity gate. Rows report
+/// `overlap_pct` (share of the reduce hidden under compute) and
+/// `allocs_per_step` (f32 buffer churn) so the flat engine's wins are
+/// regression-tracked. Writes `BENCH_train.json` +
+/// `results/train_bench.{txt,csv}`.
 fn cmd_train_bench(args: &Args) -> Result<()> {
     let engine = load_engine(args)?;
     let exp = build_experiment(args, &engine)?;
@@ -315,6 +335,7 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
     let steps = args.usize("steps", 8)?.max(1);
     let max_rep = args.usize("replicas", 4)?.max(1);
     let max_accum = args.usize("accum", 4)?.max(1);
+    let bucket_bytes = args.usize("bucket-kib", 256)?.max(1) * 1024;
     let mut replica_counts = vec![1usize];
     let mut rv = 2;
     while rv <= max_rep {
@@ -328,78 +349,99 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
 
     let mut rows = Vec::new();
     // First timed loss per global-batch size: equal-sized configs must
-    // agree bitwise (same shards, same fixed-order tree).
+    // agree bitwise (same shards, same fixed-order tree) — including
+    // flat vs map rows of the same config.
     let mut loss_gate: std::collections::BTreeMap<usize, f64> = std::collections::BTreeMap::new();
     for &replicas in &replica_counts {
         for &accum in &accums {
-            let mut batcher = report::make_batcher(&exp, &corpus)?;
-            let mut trainer = Trainer::new(&engine, &exp)?;
-            trainer.sequential = args.get("sequential").is_some();
-            trainer.set_pipeline(replicas, accum);
-            let per_step = trainer.pipeline.micro_per_step();
-            // Warmup (compilation, first uploads) outside the timing.
-            let warm: Vec<_> = (0..per_step).map(|_| batcher.next_train()).collect();
-            trainer.train_step_micro(&warm)?;
-            let uploads0 = trainer.pipeline.upload_count();
+            for mode in [StepMode::Flat, StepMode::Map] {
+                let mut batcher = report::make_batcher(&exp, &corpus)?;
+                let mut trainer = Trainer::new(&engine, &exp)?;
+                trainer.sequential = args.get("sequential").is_some();
+                trainer.set_step_mode(mode);
+                trainer.set_bucket_bytes(bucket_bytes);
+                trainer.set_pipeline(replicas, accum);
+                let per_step = trainer.pipeline.micro_per_step();
+                // Warmup (compilation, first uploads) outside the timing.
+                let warm: Vec<_> = (0..per_step).map(|_| batcher.next_train()).collect();
+                trainer.train_step_micro(&warm)?;
+                let uploads0 = trainer.pipeline.upload_count();
 
-            let (mut reduce_s, mut apply_s, mut stall_s) = (0.0f64, 0.0f64, 0.0f64);
-            let mut tokens = 0.0f64;
-            let mut first_loss = f64::NAN;
-            let mut last_loss = f64::NAN;
-            let t0 = std::time::Instant::now();
-            with_prefetch(&mut batcher, steps * per_step, per_step, |pre| {
-                for i in 0..steps {
-                    let micro: Vec<_> =
-                        (0..per_step).map(|_| pre.next()).collect::<Result<_>>()?;
-                    let stall = pre.take_stall();
-                    let st = trainer.train_step_micro(&micro)?;
-                    reduce_s += st.reduce_seconds;
-                    apply_s += st.apply_seconds;
-                    stall_s += stall;
-                    tokens += st.src_tokens;
-                    if i == 0 {
-                        first_loss = st.loss_per_tok;
+                let (mut reduce_s, mut overlap_s, mut apply_s, mut stall_s) =
+                    (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                let mut tokens = 0.0f64;
+                let mut allocs = 0u64;
+                let mut first_loss = f64::NAN;
+                let mut last_loss = f64::NAN;
+                let t0 = std::time::Instant::now();
+                with_prefetch(&mut batcher, steps * per_step, per_step, |pre| {
+                    for i in 0..steps {
+                        let micro: Vec<_> =
+                            (0..per_step).map(|_| pre.next()).collect::<Result<_>>()?;
+                        let stall = pre.take_stall();
+                        let st = trainer.train_step_micro(&micro)?;
+                        reduce_s += st.reduce_seconds;
+                        overlap_s += st.reduce_overlap_seconds;
+                        apply_s += st.apply_seconds;
+                        stall_s += stall;
+                        tokens += st.src_tokens;
+                        allocs += st.allocs;
+                        if i == 0 {
+                            first_loss = st.loss_per_tok;
+                        }
+                        last_loss = st.loss_per_tok;
                     }
-                    last_loss = st.loss_per_tok;
+                    Ok(())
+                })?;
+                let wall = t0.elapsed().as_secs_f64();
+                let label = match mode {
+                    StepMode::Flat => "flat",
+                    StepMode::Map => "map",
+                };
+                match loss_gate.get(&per_step) {
+                    Some(expect) if expect.to_bits() != first_loss.to_bits() => {
+                        return Err(anyhow!(
+                            "training diverged from the equal-batch reference: {replicas} \
+                             replicas x {accum} accum ({label}) got loss {first_loss}, \
+                             expected {expect}"
+                        ));
+                    }
+                    Some(_) => {}
+                    None => {
+                        loss_gate.insert(per_step, first_loss);
+                    }
                 }
-                Ok(())
-            })?;
-            let wall = t0.elapsed().as_secs_f64();
-            match loss_gate.get(&per_step) {
-                Some(expect) if expect.to_bits() != first_loss.to_bits() => {
-                    return Err(anyhow!(
-                        "multi-replica training diverged from the equal-batch reference: \
-                         {replicas} replicas x {accum} accum got loss {first_loss}, expected {expect}"
-                    ));
-                }
-                Some(_) => {}
-                None => {
-                    loss_gate.insert(per_step, first_loss);
-                }
+                let sn = steps as f64;
+                let overlap_pct =
+                    if reduce_s > 0.0 { 100.0 * overlap_s / reduce_s } else { 0.0 };
+                println!(
+                    "replicas {replicas} x accum {accum} [{label}]: {:.1} ms/step \
+                     (reduce {:.1} [{overlap_pct:.0}% hidden] apply {:.1} stall {:.1}), \
+                     {:.1} src tok/s, {:.0} allocs/step",
+                    wall / sn * 1e3,
+                    reduce_s / sn * 1e3,
+                    apply_s / sn * 1e3,
+                    stall_s / sn * 1e3,
+                    per_sec(tokens, wall),
+                    allocs as f64 / sn,
+                );
+                rows.push(report::TrainBenchRow {
+                    replicas,
+                    accum,
+                    flat: mode == StepMode::Flat,
+                    steps,
+                    global_batch: per_step * exp.model.batch,
+                    step_s: wall / sn,
+                    reduce_s: reduce_s / sn,
+                    overlap_pct,
+                    apply_s: apply_s / sn,
+                    stall_s: stall_s / sn,
+                    src_tok_per_s: per_sec(tokens, wall),
+                    loss_per_tok: last_loss,
+                    uploads_per_step: (trainer.pipeline.upload_count() - uploads0) as f64 / sn,
+                    allocs_per_step: allocs as f64 / sn,
+                });
             }
-            let sn = steps as f64;
-            println!(
-                "replicas {replicas} x accum {accum}: {:.1} ms/step \
-                 (reduce {:.1} apply {:.1} stall {:.1}), {:.1} src tok/s",
-                wall / sn * 1e3,
-                reduce_s / sn * 1e3,
-                apply_s / sn * 1e3,
-                stall_s / sn * 1e3,
-                per_sec(tokens, wall)
-            );
-            rows.push(report::TrainBenchRow {
-                replicas,
-                accum,
-                steps,
-                global_batch: per_step * exp.model.batch,
-                step_s: wall / sn,
-                reduce_s: reduce_s / sn,
-                apply_s: apply_s / sn,
-                stall_s: stall_s / sn,
-                src_tok_per_s: per_sec(tokens, wall),
-                loss_per_tok: last_loss,
-                uploads_per_step: (trainer.pipeline.upload_count() - uploads0) as f64 / sn,
-            });
         }
     }
     print!("\n{}", report::train_table(&rows));

@@ -2,22 +2,34 @@
 //! plateau-decay (×0.7 when dev perplexity increases), plus plain SGD
 //! for the OpenNMT-lua comparator rows.
 //!
-//! [`Optimizer`] is a trait since the multi-replica training engine:
-//! [`Optimizer::apply`] partitions the parameter set across `workers`
-//! threads at **per-param granularity**, so the per-element update math
-//! is exactly the seed implementation's (each parameter's update reads
-//! nothing outside that parameter) and the result is bitwise-identical
-//! at every worker count — `rust/tests/train_equivalence.rs` asserts
-//! parity against the seed numerics on the quadratic fixtures.
+//! [`Optimizer`] is a trait since the multi-replica training engine.
+//! It has two update entry points with **identical per-element math**:
 //!
-//! Optimizer state is exportable ([`Optimizer::export_state`] /
-//! [`OptimState`]) so checkpoint format v2 can persist `m`, `v`, `t`
-//! and the current LR for exact training resume.
+//! * [`Optimizer::apply`] — the map-based reference path: walks
+//!   `BTreeMap<String, Tensor>` gradients, partitioning the parameter
+//!   set across `workers` threads at per-param granularity.
+//! * [`Optimizer::apply_flat`] — the slab path: parameters, gradients
+//!   and the Adam `m`/`v` moments all live in contiguous slabs sharing
+//!   one [`SlabIndex`], and the update walks bucket ranges (partitioned
+//!   across `workers` at per-bucket granularity). No per-name lookups,
+//!   no per-step allocation.
+//!
+//! Both partitions are pure scheduling: no element's update reads
+//! another element, so the result is bitwise-identical at every worker
+//! count and across the two storage layouts —
+//! `rust/tests/train_equivalence.rs` and the unit suite below are the
+//! gates.
+//!
+//! Optimizer state is exportable ([`Optimizer::state_view`] borrows it
+//! without cloning the model-sized moment slabs; [`OptimState`] is the
+//! owned form checkpoint v2 round-trips) so training resume is exact.
 
 use crate::config::TrainConfig;
-use crate::tensor::Tensor;
+use crate::tensor::flat::{split_buckets_mut, FlatGrads, FlatParams, SlabIndex};
+use crate::tensor::{sq_norm_slice, Tensor};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Serializable optimizer state (checkpoint format v2).
 ///
@@ -37,15 +49,74 @@ pub struct OptimState {
     pub v: BTreeMap<String, Vec<f32>>,
 }
 
-/// Borrowed view of the same state: what checkpoint *saving* consumes,
-/// so a save never clones the two model-sized moment maps.
+/// Borrowed moment rows, storage-agnostic: whichever representation the
+/// optimizer currently holds (per-name maps or the flat slabs), the
+/// checkpoint writer sees the same `(name, row)` sequence in sorted
+/// name order — so saving never clones and the on-disk bytes do not
+/// depend on the storage.
+#[derive(Debug, Clone, Copy)]
+pub enum MomentRowsView<'a> {
+    /// Per-name rows (fresh optimizers, imported checkpoints, the
+    /// map-based apply path).
+    Maps {
+        m: &'a BTreeMap<String, Vec<f32>>,
+        v: &'a BTreeMap<String, Vec<f32>>,
+    },
+    /// Flat slabs addressed through the shared index (the slab apply
+    /// path).
+    Slab { idx: &'a SlabIndex, m: &'a [f32], v: &'a [f32] },
+}
+
+impl<'a> MomentRowsView<'a> {
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self {
+            MomentRowsView::Maps { m, .. } => m.len(),
+            MomentRowsView::Slab { idx, .. } => idx.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// First-moment rows in sorted name order.
+    pub fn iter_m(&self) -> Box<dyn Iterator<Item = (&'a str, &'a [f32])> + 'a> {
+        match *self {
+            MomentRowsView::Maps { m, .. } => {
+                Box::new(m.iter().map(|(n, r)| (n.as_str(), r.as_slice())))
+            }
+            MomentRowsView::Slab { idx, m, .. } => Box::new(
+                idx.entries()
+                    .iter()
+                    .map(move |e| (e.name.as_str(), &m[e.off..e.off + e.len])),
+            ),
+        }
+    }
+
+    /// Second-moment rows in sorted name order.
+    pub fn iter_v(&self) -> Box<dyn Iterator<Item = (&'a str, &'a [f32])> + 'a> {
+        match *self {
+            MomentRowsView::Maps { v, .. } => {
+                Box::new(v.iter().map(|(n, r)| (n.as_str(), r.as_slice())))
+            }
+            MomentRowsView::Slab { idx, v, .. } => Box::new(
+                idx.entries()
+                    .iter()
+                    .map(move |e| (e.name.as_str(), &v[e.off..e.off + e.len])),
+            ),
+        }
+    }
+}
+
+/// Borrowed view of the full optimizer state: what checkpoint *saving*
+/// consumes, so a save never clones the two model-sized moment stores.
 #[derive(Debug, Clone, Copy)]
 pub struct OptimStateView<'a> {
     pub kind: &'a str,
     pub lr: f64,
     pub t: u64,
-    pub m: &'a BTreeMap<String, Vec<f32>>,
-    pub v: &'a BTreeMap<String, Vec<f32>>,
+    pub rows: MomentRowsView<'a>,
 }
 
 impl OptimStateView<'_> {
@@ -54,8 +125,8 @@ impl OptimStateView<'_> {
             kind: self.kind.to_string(),
             lr: self.lr,
             t: self.t,
-            m: self.m.clone(),
-            v: self.v.clone(),
+            m: self.rows.iter_m().map(|(n, r)| (n.to_string(), r.to_vec())).collect(),
+            v: self.rows.iter_v().map(|(n, r)| (n.to_string(), r.to_vec())).collect(),
         }
     }
 }
@@ -71,16 +142,28 @@ pub trait Optimizer: Send {
     /// Override the learning rate (checkpoint restore).
     fn set_lr(&mut self, lr: f64);
 
-    /// Apply one update. `grads` are *mean* gradients (already scaled by
-    /// 1/ntok by the caller). The parameter set is partitioned across
-    /// `workers` threads per-param, which cannot change numerics: no
-    /// parameter's update reads another parameter. Returns the global
-    /// grad norm (pre-clip). Errors on a gradient with no matching
-    /// parameter or with a mismatched element count.
+    /// Apply one update (map-based reference path). `grads` are *mean*
+    /// gradients (already scaled by 1/ntok by the caller). The
+    /// parameter set is partitioned across `workers` threads per-param,
+    /// which cannot change numerics: no parameter's update reads
+    /// another parameter. Returns the global grad norm (pre-clip).
+    /// Errors on a gradient with no matching parameter or with a
+    /// mismatched element count.
     fn apply(
         &mut self,
         params: &mut BTreeMap<String, Tensor>,
         grads: &BTreeMap<String, Tensor>,
+        workers: usize,
+    ) -> Result<f64>;
+
+    /// Apply one update over the flat slabs (same numerics as
+    /// [`Optimizer::apply`], bucket-range loops instead of per-name
+    /// walks; `workers` partitions at bucket granularity). `grads` must
+    /// share `params`' layout and already be mean gradients.
+    fn apply_flat(
+        &mut self,
+        params: &mut FlatParams,
+        grads: &FlatGrads,
         workers: usize,
     ) -> Result<f64>;
 
@@ -100,7 +183,7 @@ pub trait Optimizer: Send {
     }
 
     /// Borrowed view of the state checkpoint v2 persists (zero-copy
-    /// save path).
+    /// save path, regardless of moment storage).
     fn state_view(&self) -> OptimStateView<'_>;
 
     /// Owned snapshot (tests, callers that outlive the optimizer).
@@ -108,9 +191,10 @@ pub trait Optimizer: Send {
         self.state_view().to_owned()
     }
 
-    /// Restore a snapshot. Errors if `state.kind` names a different
-    /// optimizer family.
-    fn import_state(&mut self, state: &OptimState) -> Result<()>;
+    /// Restore a snapshot, *moving* the moment rows in (no model-sized
+    /// clone on the load path). Errors if `state.kind` names a
+    /// different optimizer family.
+    fn import_state(&mut self, state: OptimState) -> Result<()>;
 }
 
 /// Build the optimizer an experiment's train config asks for.
@@ -122,21 +206,39 @@ pub fn build(cfg: &TrainConfig) -> Box<dyn Optimizer> {
     }
 }
 
-/// Global-norm clipping factor (OpenNMT-style). Folds the per-tensor
-/// square norms in `grads`' sorted name order — fixed, so the factor is
-/// deterministic regardless of how `apply` later partitions the work.
+/// Turn a global gradient norm into the clipping factor
+/// (OpenNMT-style).
+fn clip_from_norm(cfg: &TrainConfig, norm: f64) -> f64 {
+    if cfg.clip_norm > 0.0 && norm > cfg.clip_norm {
+        cfg.clip_norm / norm
+    } else {
+        1.0
+    }
+}
+
+/// Global-norm clipping factor over a gradient map. Folds the
+/// per-tensor square norms in `grads`' sorted name order — fixed, so
+/// the factor is deterministic regardless of how `apply` later
+/// partitions the work.
 fn clip_factor(cfg: &TrainConfig, grads: &BTreeMap<String, Tensor>) -> (f64, f64) {
     let mut sq = 0.0f64;
     for g in grads.values() {
         sq += g.sq_norm() as f64;
     }
     let norm = sq.sqrt();
-    let clip = if cfg.clip_norm > 0.0 && norm > cfg.clip_norm {
-        cfg.clip_norm / norm
-    } else {
-        1.0
-    };
-    (norm, clip)
+    (norm, clip_from_norm(cfg, norm))
+}
+
+/// The flat path's clip factor: identical fold — per-parameter f32
+/// square norms (same accumulation as [`Tensor::sq_norm`]) folded as
+/// f64 in the index's (sorted) name order.
+fn clip_factor_flat(cfg: &TrainConfig, grads: &FlatGrads) -> (f64, f64) {
+    let mut sq = 0.0f64;
+    for (_, s) in grads.param_slices() {
+        sq += sq_norm_slice(s) as f64;
+    }
+    let norm = sq.sqrt();
+    (norm, clip_from_norm(cfg, norm))
 }
 
 /// Every gradient names an existing parameter of the same size — the
@@ -214,21 +316,113 @@ fn apply_sharded<T: Send>(items: Vec<T>, workers: usize, f: impl Fn(T) + Sync) {
     });
 }
 
+/// Adam moment storage: per-name rows (fresh/imported/map path) or the
+/// flat slabs sharing the parameter index (slab path). The two forms
+/// hold the same bytes; conversion happens only when the trainer
+/// switches step modes or resumes a checkpoint.
+enum Moments {
+    Rows {
+        m: BTreeMap<String, Vec<f32>>,
+        v: BTreeMap<String, Vec<f32>>,
+    },
+    Slab {
+        idx: Arc<SlabIndex>,
+        m: Vec<f32>,
+        v: Vec<f32>,
+    },
+}
+
+impl Moments {
+    fn empty() -> Self {
+        Moments::Rows { m: BTreeMap::new(), v: BTreeMap::new() }
+    }
+
+    /// Per-name rows, converting from slab storage if needed (only on a
+    /// flat→map step-mode switch — never in a steady-state hot loop).
+    fn rows_mut(&mut self) -> (&mut BTreeMap<String, Vec<f32>>, &mut BTreeMap<String, Vec<f32>>) {
+        if let Moments::Slab { idx, m, v } = &*self {
+            let to_rows = |s: &[f32]| -> BTreeMap<String, Vec<f32>> {
+                idx.entries()
+                    .iter()
+                    .map(|e| (e.name.clone(), s[e.off..e.off + e.len].to_vec()))
+                    .collect()
+            };
+            let (mr, vr) = (to_rows(m), to_rows(v));
+            *self = Moments::Rows { m: mr, v: vr };
+        }
+        match self {
+            Moments::Rows { m, v } => (m, v),
+            Moments::Slab { .. } => unreachable!("converted above"),
+        }
+    }
+
+    /// Slab storage on `idx`, converting from the current storage if
+    /// needed. A row naming no parameter, or of the wrong length, is an
+    /// error: silently dropping it would make a later checkpoint save
+    /// lose state the map engine would have carried along (the on-disk
+    /// bytes must never depend on the storage). Zero state is mutated
+    /// on error.
+    fn slab_on(&mut self, idx: &Arc<SlabIndex>) -> Result<(&mut Vec<f32>, &mut Vec<f32>)> {
+        let current = matches!(&*self, Moments::Slab { idx: cur, .. } if cur.same_layout(idx));
+        if !current {
+            let mut ms = vec![0.0f32; idx.total_len()];
+            let mut vs = vec![0.0f32; idx.total_len()];
+            {
+                let view = self.view();
+                for (label, rows, slab) in
+                    [("m", view.iter_m(), &mut ms), ("v", view.iter_v(), &mut vs)]
+                {
+                    for (name, row) in rows {
+                        let Some(e) = idx.entry(name) else {
+                            return Err(anyhow!(
+                                "optimizer moment `{label}[{name}]` names no parameter \
+                                 (mismatched checkpoint restore?)"
+                            ));
+                        };
+                        if row.len() != e.len {
+                            return Err(anyhow!(
+                                "optimizer moment `{label}[{name}]` has {} elements, gradient has {} \
+                                 (mismatched checkpoint restore?)",
+                                row.len(),
+                                e.len
+                            ));
+                        }
+                        slab[e.off..e.off + e.len].copy_from_slice(row);
+                    }
+                }
+            }
+            *self = Moments::Slab { idx: idx.clone(), m: ms, v: vs };
+        }
+        match self {
+            Moments::Slab { m, v, .. } => Ok((m, v)),
+            Moments::Rows { .. } => unreachable!("converted above"),
+        }
+    }
+
+    fn view(&self) -> MomentRowsView<'_> {
+        match self {
+            Moments::Rows { m, v } => MomentRowsView::Maps { m, v },
+            Moments::Slab { idx, m, v } => {
+                MomentRowsView::Slab { idx: idx.as_ref(), m: m.as_slice(), v: v.as_slice() }
+            }
+        }
+    }
+}
+
 /// Adam (paper Table 2 defaults) with the seed implementation's exact
 /// per-element math: f64 accumulate, f32 store.
 pub struct Adam {
     lr: f64,
     cfg: TrainConfig,
-    /// First/second moment per parameter.
-    m: BTreeMap<String, Vec<f32>>,
-    v: BTreeMap<String, Vec<f32>>,
+    /// First/second moments (per-name rows or flat slabs — same bytes).
+    moments: Moments,
     /// Step count (bias correction).
     t: u64,
 }
 
 impl Adam {
     pub fn new(cfg: &TrainConfig) -> Self {
-        Adam { lr: cfg.lr, cfg: cfg.clone(), m: BTreeMap::new(), v: BTreeMap::new(), t: 0 }
+        Adam { lr: cfg.lr, cfg: cfg.clone(), moments: Moments::empty(), t: 0 }
     }
 }
 
@@ -253,11 +447,12 @@ impl Optimizer for Adam {
     ) -> Result<f64> {
         // All validation happens before any state mutation, so a
         // rejected call (unknown gradient, size mismatch, corrupt
-        // checkpoint restore) leaves `t` and the moment maps untouched
+        // checkpoint restore) leaves `t` and the moment rows untouched
         // and later well-formed calls still succeed.
         validate_grads(params, grads)?;
+        let (m_rows, v_rows) = self.moments.rows_mut();
         for (name, g) in grads {
-            for (label, rows) in [("m", &self.m), ("v", &self.v)] {
+            for (label, rows) in [("m", &*m_rows), ("v", &*v_rows)] {
                 if let Some(row) = rows.get(name) {
                     if row.len() != g.numel() {
                         return Err(anyhow!(
@@ -272,10 +467,16 @@ impl Optimizer for Adam {
         }
         self.t += 1;
         let (norm, clip) = clip_factor(&self.cfg, grads);
-        // Moment rows must exist before the borrow split below.
+        // Moment rows must exist before the borrow split below. Only a
+        // missing row allocates (first step / first sight of a name) —
+        // the steady state does no per-step key cloning.
         for (name, g) in grads {
-            self.m.entry(name.clone()).or_insert_with(|| vec![0.0; g.numel()]);
-            self.v.entry(name.clone()).or_insert_with(|| vec![0.0; g.numel()]);
+            if !m_rows.contains_key(name) {
+                m_rows.insert(name.clone(), vec![0.0; g.numel()]);
+            }
+            if !v_rows.contains_key(name) {
+                v_rows.insert(name.clone(), vec![0.0; g.numel()]);
+            }
         }
         let (b1, b2, eps, lr) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps, self.lr);
         let bc1 = 1.0 - b1.powi(self.t as i32);
@@ -284,8 +485,8 @@ impl Optimizer for Adam {
         // Pair each gradient with its parameter + moment rows: three
         // sorted maps, grads ⊆ each after the seeding above.
         let matched = match_params(params, grads);
-        let mut mit = self.m.iter_mut();
-        let mut vit = self.v.iter_mut();
+        let mut mit = m_rows.iter_mut();
+        let mut vit = v_rows.iter_mut();
         let mut items = Vec::with_capacity(matched.len());
         for (name, p, g) in matched {
             let m = loop {
@@ -304,14 +505,42 @@ impl Optimizer for Adam {
         }
 
         apply_sharded(items, workers, |(p, g, m, v)| {
-            for i in 0..g.numel() {
-                let gi = (g.data()[i] as f64) * clip;
-                m[i] = (b1 * m[i] as f64 + (1.0 - b1) * gi) as f32;
-                v[i] = (b2 * v[i] as f64 + (1.0 - b2) * gi * gi) as f32;
-                let mhat = m[i] as f64 / bc1;
-                let vhat = v[i] as f64 / bc2;
-                p.data_mut()[i] -= (lr * mhat / (vhat.sqrt() + eps)) as f32;
-            }
+            adam_update(p.data_mut(), g.data(), m, v, clip, b1, b2, eps, lr, bc1, bc2);
+        });
+        Ok(norm)
+    }
+
+    fn apply_flat(
+        &mut self,
+        params: &mut FlatParams,
+        grads: &FlatGrads,
+        workers: usize,
+    ) -> Result<f64> {
+        if !params.idx().same_layout(grads.idx()) {
+            return Err(anyhow!("flat gradients do not share the parameter layout"));
+        }
+        // Moment slabs on the shared index (validates restored rows
+        // before any state mutation, mirroring the map path).
+        let (m_slab, v_slab) = self.moments.slab_on(params.idx())?;
+        self.t += 1;
+        let (norm, clip) = clip_factor_flat(&self.cfg, grads);
+        let (b1, b2, eps, lr) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps, self.lr);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        params.with_slab_mut(|_, buckets, slab| {
+            let psegs = split_buckets_mut(slab, buckets);
+            let msegs = split_buckets_mut(m_slab, buckets);
+            let vsegs = split_buckets_mut(v_slab, buckets);
+            let items: Vec<_> = psegs
+                .into_iter()
+                .zip(msegs)
+                .zip(vsegs)
+                .enumerate()
+                .map(|(b, ((p, m), v))| (p, grads.seg(b), m, v))
+                .collect();
+            apply_sharded(items, workers, |(p, g, m, v)| {
+                adam_update(p, g, m, v, clip, b1, b2, eps, lr, bc1, bc2);
+            });
         });
         Ok(norm)
     }
@@ -321,18 +550,53 @@ impl Optimizer for Adam {
     }
 
     fn state_view(&self) -> OptimStateView<'_> {
-        OptimStateView { kind: "adam", lr: self.lr, t: self.t, m: &self.m, v: &self.v }
+        OptimStateView { kind: "adam", lr: self.lr, t: self.t, rows: self.moments.view() }
     }
 
-    fn import_state(&mut self, state: &OptimState) -> Result<()> {
+    fn import_state(&mut self, state: OptimState) -> Result<()> {
         if state.kind != "adam" {
             return Err(anyhow!("checkpoint optimizer is `{}`, trainer uses adam", state.kind));
         }
         self.lr = state.lr;
         self.t = state.t;
-        self.m = state.m.clone();
-        self.v = state.v.clone();
+        // Moved, not cloned: the load path never duplicates the
+        // model-sized moment rows.
+        self.moments = Moments::Rows { m: state.m, v: state.v };
         Ok(())
+    }
+}
+
+/// The shared Adam per-element update (seed numerics, verbatim): used
+/// by both the per-param map path and the per-bucket slab path, so the
+/// two cannot drift.
+#[allow(clippy::too_many_arguments)]
+fn adam_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    clip: f64,
+    b1: f64,
+    b2: f64,
+    eps: f64,
+    lr: f64,
+    bc1: f64,
+    bc2: f64,
+) {
+    for i in 0..g.len() {
+        let gi = (g[i] as f64) * clip;
+        m[i] = (b1 * m[i] as f64 + (1.0 - b1) * gi) as f32;
+        v[i] = (b2 * v[i] as f64 + (1.0 - b2) * gi * gi) as f32;
+        let mhat = m[i] as f64 / bc1;
+        let vhat = v[i] as f64 / bc2;
+        p[i] -= (lr * mhat / (vhat.sqrt() + eps)) as f32;
+    }
+}
+
+/// The shared SGD per-element update (seed numerics, verbatim).
+fn sgd_update(p: &mut [f32], g: &[f32], clip: f64, lr: f64) {
+    for (w, &gi) in p.iter_mut().zip(g) {
+        *w -= (lr * clip * gi as f64) as f32;
     }
 }
 
@@ -378,9 +642,31 @@ impl Optimizer for Sgd {
         let lr = self.lr;
         let items = match_params(params, grads);
         apply_sharded(items, workers, |(_, p, g)| {
-            for (w, &gi) in p.data_mut().iter_mut().zip(g.data()) {
-                *w -= (lr * clip * gi as f64) as f32;
-            }
+            sgd_update(p.data_mut(), g.data(), clip, lr);
+        });
+        Ok(norm)
+    }
+
+    fn apply_flat(
+        &mut self,
+        params: &mut FlatParams,
+        grads: &FlatGrads,
+        workers: usize,
+    ) -> Result<f64> {
+        if !params.idx().same_layout(grads.idx()) {
+            return Err(anyhow!("flat gradients do not share the parameter layout"));
+        }
+        let (norm, clip) = clip_factor_flat(&self.cfg, grads);
+        let lr = self.lr;
+        params.with_slab_mut(|_, buckets, slab| {
+            let items: Vec<_> = split_buckets_mut(slab, buckets)
+                .into_iter()
+                .enumerate()
+                .map(|(b, p)| (p, grads.seg(b)))
+                .collect();
+            apply_sharded(items, workers, |(p, g)| {
+                sgd_update(p, g, clip, lr);
+            });
         });
         Ok(norm)
     }
@@ -390,10 +676,15 @@ impl Optimizer for Sgd {
     }
 
     fn state_view(&self) -> OptimStateView<'_> {
-        OptimStateView { kind: "sgd", lr: self.lr, t: 0, m: empty_rows(), v: empty_rows() }
+        OptimStateView {
+            kind: "sgd",
+            lr: self.lr,
+            t: 0,
+            rows: MomentRowsView::Maps { m: empty_rows(), v: empty_rows() },
+        }
     }
 
-    fn import_state(&mut self, state: &OptimState) -> Result<()> {
+    fn import_state(&mut self, state: OptimState) -> Result<()> {
         if state.kind != "sgd" {
             return Err(anyhow!("checkpoint optimizer is `{}`, trainer uses sgd", state.kind));
         }
@@ -405,6 +696,7 @@ impl Optimizer for Sgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::flat::{Bucket, FlatGrads, FlatParams};
 
     fn quad_setup(sgd: bool) -> (Box<dyn Optimizer>, BTreeMap<String, Tensor>) {
         let cfg = TrainConfig { sgd, lr: 0.1, clip_norm: 0.0, ..Default::default() };
@@ -419,6 +711,24 @@ mod tests {
         let mut g = BTreeMap::new();
         g.insert("w".to_string(), w.clone());
         g
+    }
+
+    /// Map grads → per-bucket flat segments on `fp`'s layout.
+    fn flat_grads_of(fp: &FlatParams, grads: &BTreeMap<String, Tensor>) -> FlatGrads {
+        let idx = fp.idx().clone();
+        let buckets = fp.buckets().clone();
+        let segs: Vec<Box<[f32]>> = buckets
+            .iter()
+            .map(|b: &Bucket| {
+                let mut seg = vec![0.0f32; b.range.end - b.range.start];
+                for e in &idx.entries()[b.params.clone()] {
+                    seg[e.off - b.range.start..e.off + e.len - b.range.start]
+                        .copy_from_slice(grads[&e.name].data());
+                }
+                seg.into_boxed_slice()
+            })
+            .collect();
+        FlatGrads::new(idx, buckets, segs)
     }
 
     #[test]
@@ -491,20 +801,42 @@ mod tests {
 
     /// A restored moment row of the wrong length (corrupt/mismatched
     /// checkpoint) must surface as an error on the next step, not an
-    /// index-out-of-bounds panic inside the update loop.
+    /// index-out-of-bounds panic inside the update loop — on both the
+    /// map and the slab path.
     #[test]
     fn mismatched_restored_moments_error_not_panic() {
         let cfg = TrainConfig { sgd: false, lr: 0.1, ..Default::default() };
-        let mut opt = Adam::new(&cfg);
         let mut st = OptimState { kind: "adam".into(), lr: 0.1, t: 1, ..Default::default() };
         st.m.insert("w".to_string(), vec![0.0; 5]); // `w` has 2 elements
         st.v.insert("w".to_string(), vec![0.0; 5]);
-        opt.import_state(&st).unwrap();
         let mut params = BTreeMap::new();
         params.insert("w".to_string(), Tensor::new(vec![2], vec![1.0, -2.0]));
+
+        let mut opt = Adam::new(&cfg);
+        opt.import_state(st.clone()).unwrap();
         let g = grad_of(&params);
         let err = opt.apply(&mut params, &g, 1).unwrap_err();
         assert!(err.to_string().contains("moment"), "{err}");
+
+        let mut opt = Adam::new(&cfg);
+        opt.import_state(st).unwrap();
+        let mut fp = FlatParams::from_map(&params, usize::MAX);
+        let fg = flat_grads_of(&fp, &g);
+        let err = opt.apply_flat(&mut fp, &fg, 1).unwrap_err();
+        assert!(err.to_string().contains("moment"), "{err}");
+
+        // A moment row naming no parameter is an error on the flat path
+        // too: the map engine would carry the row into later
+        // checkpoints, so dropping it silently would fork the on-disk
+        // bytes between engines.
+        let mut ghost = OptimState { kind: "adam".into(), lr: 0.1, t: 1, ..Default::default() };
+        ghost.m.insert("zz_ghost".to_string(), vec![0.0; 2]);
+        let mut opt = Adam::new(&cfg);
+        opt.import_state(ghost).unwrap();
+        let mut fp = FlatParams::from_map(&params, usize::MAX);
+        let fg = flat_grads_of(&fp, &g);
+        let err = opt.apply_flat(&mut fp, &fg, 1).unwrap_err();
+        assert!(err.to_string().contains("names no parameter"), "{err}");
     }
 
     #[test]
@@ -515,6 +847,15 @@ mod tests {
         assert!(opt.apply(&mut params, &g, 1).is_err());
     }
 
+    fn mk_params(rng: &mut crate::rng::Rng) -> BTreeMap<String, Tensor> {
+        let mut p = BTreeMap::new();
+        for (name, n) in [("a", 7usize), ("b", 3), ("c", 12), ("d", 1)] {
+            let data: Vec<f32> = (0..n).map(|_| rng.uniform(0.5)).collect();
+            p.insert(name.to_string(), Tensor::new(vec![n], data));
+        }
+        p
+    }
+
     /// Worker count is a pure scheduling knob: per-param partitioning
     /// must leave every updated bit identical.
     #[test]
@@ -522,14 +863,6 @@ mod tests {
         for sgd in [true, false] {
             let cfg = TrainConfig { sgd, lr: 0.05, ..Default::default() };
             let mut rng = crate::rng::Rng::new(41);
-            let mk_params = |rng: &mut crate::rng::Rng| {
-                let mut p = BTreeMap::new();
-                for (name, n) in [("a", 7usize), ("b", 3), ("c", 12), ("d", 1)] {
-                    let data: Vec<f32> = (0..n).map(|_| rng.uniform(0.5)).collect();
-                    p.insert(name.to_string(), Tensor::new(vec![n], data));
-                }
-                p
-            };
             let init = mk_params(&mut rng);
             let grads = mk_params(&mut rng);
             let mut reference: Option<BTreeMap<String, Tensor>> = None;
@@ -553,6 +886,82 @@ mod tests {
         }
     }
 
+    /// The tentpole gate at the optimizer layer (engine-free): the slab
+    /// path reproduces the map path bit-for-bit — for both families,
+    /// with clipping active, at several worker counts and bucket sizes,
+    /// over multiple steps.
+    #[test]
+    fn flat_apply_matches_map_apply_bitwise() {
+        for sgd in [false, true] {
+            let cfg = TrainConfig { sgd, lr: 0.07, clip_norm: 1.5, ..Default::default() };
+            let mut rng = crate::rng::Rng::new(77);
+            let init = mk_params(&mut rng);
+            let grads = mk_params(&mut rng);
+            // Map reference.
+            let mut map_opt = build(&cfg);
+            let mut map_params = init.clone();
+            let mut map_norms = Vec::new();
+            for _ in 0..6 {
+                map_norms.push(map_opt.apply(&mut map_params, &grads, 1).unwrap());
+            }
+            for bucket_bytes in [1usize, 16, usize::MAX] {
+                for workers in [1usize, 3] {
+                    let mut opt = build(&cfg);
+                    let mut fp = FlatParams::from_map(&init, bucket_bytes);
+                    for (step, want) in map_norms.iter().enumerate() {
+                        let fg = flat_grads_of(&fp, &grads);
+                        let norm = opt.apply_flat(&mut fp, &fg, workers).unwrap();
+                        assert_eq!(
+                            norm.to_bits(),
+                            want.to_bits(),
+                            "sgd={sgd} bb={bucket_bytes} workers={workers} step {step}: norm"
+                        );
+                    }
+                    let back = fp.to_map();
+                    for (name, p) in &map_params {
+                        for (i, (x, y)) in p.data().iter().zip(back[name].data()).enumerate() {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "sgd={sgd} bb={bucket_bytes} workers={workers} `{name}`[{i}]"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Moments survive storage conversion bitwise: flat steps, then a
+    /// map step, must equal map steps all the way.
+    #[test]
+    fn moment_storage_conversion_preserves_trajectory() {
+        let cfg = TrainConfig { sgd: false, lr: 0.05, clip_norm: 0.0, ..Default::default() };
+        let mut rng = crate::rng::Rng::new(5);
+        let init = mk_params(&mut rng);
+        let grads = mk_params(&mut rng);
+
+        let mut ref_opt = build(&cfg);
+        let mut ref_params = init.clone();
+        for _ in 0..4 {
+            ref_opt.apply(&mut ref_params, &grads, 1).unwrap();
+        }
+
+        let mut opt = build(&cfg);
+        let mut fp = FlatParams::from_map(&init, 16);
+        for _ in 0..3 {
+            let fg = flat_grads_of(&fp, &grads);
+            opt.apply_flat(&mut fp, &fg, 2).unwrap();
+        }
+        let mut mixed = fp.to_map();
+        opt.apply(&mut mixed, &grads, 1).unwrap(); // slab → rows conversion
+        for (name, p) in &ref_params {
+            for (x, y) in p.data().iter().zip(mixed[name].data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "`{name}`");
+            }
+        }
+    }
+
     #[test]
     fn state_roundtrip_restores_trajectory() {
         let (mut opt, mut params) = quad_setup(false);
@@ -567,13 +976,43 @@ mod tests {
         // identically to the original.
         let cfg = TrainConfig { sgd: false, lr: 0.1, clip_norm: 0.0, ..Default::default() };
         let mut fresh = Adam::new(&cfg);
-        fresh.import_state(&snap).unwrap();
+        fresh.import_state(snap.clone()).unwrap();
         let mut p2 = params.clone();
         let g = grad_of(&params);
         opt.apply(&mut params, &g, 1).unwrap();
         fresh.apply(&mut p2, &g, 1).unwrap();
         assert_eq!(params["w"].data(), p2["w"].data());
         // Kind mismatch is an error.
-        assert!(Sgd::new(&cfg).import_state(&snap).is_err());
+        assert!(Sgd::new(&cfg).import_state(snap).is_err());
+    }
+
+    /// Slab-backed state exports the same rows a map-backed one does
+    /// (sorted name order, same bytes) — the checkpoint writer sees one
+    /// sequence regardless of storage.
+    #[test]
+    fn slab_state_view_matches_rows_view() {
+        let cfg = TrainConfig { sgd: false, lr: 0.05, clip_norm: 0.0, ..Default::default() };
+        let mut rng = crate::rng::Rng::new(11);
+        let init = mk_params(&mut rng);
+        let grads = mk_params(&mut rng);
+
+        let mut map_opt = build(&cfg);
+        let mut map_params = init.clone();
+        map_opt.apply(&mut map_params, &grads, 1).unwrap();
+
+        let mut flat_opt = build(&cfg);
+        let mut fp = FlatParams::from_map(&init, 16);
+        let fg = flat_grads_of(&fp, &grads);
+        flat_opt.apply_flat(&mut fp, &fg, 1).unwrap();
+
+        let a = map_opt.export_state();
+        let b = flat_opt.export_state();
+        assert_eq!(a, b);
+        // And the borrowed views iterate identically without cloning.
+        let va = map_opt.state_view();
+        let vb = flat_opt.state_view();
+        let rows_a: Vec<_> = va.rows.iter_m().map(|(n, r)| (n.to_string(), r.to_vec())).collect();
+        let rows_b: Vec<_> = vb.rows.iter_m().map(|(n, r)| (n.to_string(), r.to_vec())).collect();
+        assert_eq!(rows_a, rows_b);
     }
 }

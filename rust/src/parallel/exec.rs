@@ -132,8 +132,25 @@ pub struct StepOut {
     pub loss_sum: f64,
     /// Number of target tokens.
     pub ntok: f64,
-    /// Parameter name -> summed gradient (unnormalized).
+    /// Parameter name -> summed gradient (unnormalized). **Empty when a
+    /// [`GradSink`] was attached** — the gradients were already
+    /// streamed out mid-execution and cloning them again here would put
+    /// the per-param map allocations back on the hot path.
     pub grads: BTreeMap<String, Tensor>,
+}
+
+/// Receives every gradient output the moment its producing step writes
+/// the slot — *during* plan execution, from whichever worker thread ran
+/// the step. This is the bucket-completion hook of the overlapped
+/// reduce (`train::step`): early-finishing gradients enter the
+/// cross-shard reduction while the rest of the backward pass is still
+/// computing.
+///
+/// Implementations must be `Sync` (the parallel executor calls from
+/// its device workers concurrently) and are called exactly once per
+/// `grad_out` entry per execution. An error aborts the execution.
+pub trait GradSink: Sync {
+    fn grad_ready(&self, name: &str, grad: &Tensor) -> Result<()>;
 }
 
 /// Which executor walks the plan.
@@ -147,12 +164,26 @@ pub enum ExecMode {
 }
 
 /// Executor configuration.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Clone, Copy, Default)]
 pub struct ExecOptions<'a> {
     pub mode: ExecMode,
     /// Device-resident parameter buffers (upload once per optimizer
     /// step). `None` uploads parameters per plan execution.
     pub bank: Option<&'a ParamBank>,
+    /// Streaming gradient consumer (the flat-slab trainer's bucket
+    /// board). When set, gradients are delivered as their slots are
+    /// written and [`StepOut::grads`] comes back empty.
+    pub grad_sink: Option<&'a dyn GradSink>,
+}
+
+impl std::fmt::Debug for ExecOptions<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecOptions")
+            .field("mode", &self.mode)
+            .field("bank", &self.bank.is_some())
+            .field("grad_sink", &self.grad_sink.is_some())
+            .finish()
+    }
 }
 
 /// Execute `plan` against `engine` with the default options (parallel
@@ -175,8 +206,8 @@ pub fn execute_with(
     opts: &ExecOptions,
 ) -> Result<StepOut> {
     match opts.mode {
-        ExecMode::Sequential => execute_seq(plan, engine, params, batch, opts.bank),
-        ExecMode::Parallel => execute_par(plan, engine, params, batch, opts.bank),
+        ExecMode::Sequential => execute_seq(plan, engine, params, batch, opts),
+        ExecMode::Parallel => execute_par(plan, engine, params, batch, opts),
     }
 }
 
@@ -314,7 +345,11 @@ fn eval_step(
     })
 }
 
-fn collect_out(plan: &Plan, mut take: impl FnMut(Slot) -> Result<Value>) -> Result<StepOut> {
+fn collect_out(
+    plan: &Plan,
+    collect_grads: bool,
+    mut take: impl FnMut(Slot) -> Result<Value>,
+) -> Result<StepOut> {
     let mut scalar = |s: Slot, what: &str| -> Result<f64> {
         let v = take(s).map_err(|e| anyhow!("{what}: {e}"))?;
         Ok(v.f()?.item() as f64)
@@ -322,9 +357,13 @@ fn collect_out(plan: &Plan, mut take: impl FnMut(Slot) -> Result<Value>) -> Resu
     let loss_sum = scalar(plan.loss_out, "loss output")?;
     let ntok = scalar(plan.ntok_out, "ntok output")?;
     let mut grads = BTreeMap::new();
-    for (name, &slot) in &plan.grad_out {
-        let v = take(slot).map_err(|e| anyhow!("grad `{name}`: {e}"))?;
-        grads.insert(name.clone(), v.f()?.clone());
+    // With a gradient sink the grads already streamed out mid-execution;
+    // re-cloning them into a map here would be pure hot-path overhead.
+    if collect_grads {
+        for (name, &slot) in &plan.grad_out {
+            let v = take(slot).map_err(|e| anyhow!("grad `{name}`: {e}"))?;
+            grads.insert(name.clone(), v.f()?.clone());
+        }
     }
     Ok(StepOut { loss_sum, ntok, grads })
 }
@@ -402,9 +441,10 @@ fn execute_seq(
     engine: &Engine,
     params: &BTreeMap<String, Tensor>,
     batch: &Batch,
-    bank: Option<&ParamBank>,
+    opts: &ExecOptions,
 ) -> Result<StepOut> {
-    let mut slots = bind_inputs(plan, engine, params, batch, bank)?;
+    let mut slots = bind_inputs(plan, engine, params, batch, opts.bank)?;
+    let gradmap = opts.grad_sink.map(|_| plan.grad_names_by_slot());
     for (i, step) in plan.steps.iter().enumerate() {
         let mut get = |s: Slot| -> Result<Value> {
             slots[s]
@@ -421,6 +461,13 @@ fn execute_seq(
             ));
         }
         for (&w, v) in step.writes.iter().zip(out) {
+            // A finished gradient streams to the sink immediately — the
+            // reducer thread can fold it while this walk continues.
+            if let (Some(sink), Some(gm)) = (opts.grad_sink, &gradmap) {
+                if let Some(name) = gm[w] {
+                    sink.grad_ready(name, v.f()?)?;
+                }
+            }
             slots[w] = Some(v);
         }
         // Reclaim slots whose last reader was this step.
@@ -430,7 +477,7 @@ fn execute_seq(
             }
         }
     }
-    collect_out(plan, |s| {
+    collect_out(plan, opts.grad_sink.is_none(), |s| {
         slots[s]
             .clone()
             .ok_or_else(|| anyhow!("output slot {s} empty"))
@@ -450,6 +497,10 @@ struct WorkQueue {
 struct Sched<'p> {
     plan: &'p Plan,
     engine: &'p Engine,
+    /// Streaming gradient consumer + the slot-indexed name table it
+    /// needs (empty when no sink is attached — never indexed then).
+    sink: Option<&'p dyn GradSink>,
+    gradmap: Vec<Option<&'p str>>,
     slots: Vec<Mutex<Option<Value>>>,
     /// Unresolved-dependency count per step (unique producer steps).
     indeg: Vec<AtomicUsize>,
@@ -561,6 +612,14 @@ impl<'p> Sched<'p> {
             ));
         }
         for (&w, v) in step.writes.iter().zip(out) {
+            // A finished gradient streams to the sink from this worker
+            // thread, mid-plan: the whole point of the overlapped
+            // bucket reduce.
+            if let Some(sink) = self.sink {
+                if let Some(name) = self.gradmap[w] {
+                    sink.grad_ready(name, v.f()?)?;
+                }
+            }
             *self.slots[w].lock().unwrap() = Some(v);
         }
         // Reclaim read slots once their last concurrent reader is done.
@@ -587,13 +646,13 @@ fn execute_par(
     engine: &Engine,
     params: &BTreeMap<String, Tensor>,
     batch: &Batch,
-    bank: Option<&ParamBank>,
+    opts: &ExecOptions,
 ) -> Result<StepOut> {
     let n = plan.steps.len();
     if n == 0 {
         return Err(anyhow!("empty plan"));
     }
-    let slots: Vec<Mutex<Option<Value>>> = bind_inputs(plan, engine, params, batch, bank)?
+    let slots: Vec<Mutex<Option<Value>>> = bind_inputs(plan, engine, params, batch, opts.bank)?
         .into_iter()
         .map(Mutex::new)
         .collect();
@@ -657,6 +716,12 @@ fn execute_par(
     let sched = Sched {
         plan,
         engine,
+        sink: opts.grad_sink,
+        gradmap: if opts.grad_sink.is_some() {
+            plan.grad_names_by_slot()
+        } else {
+            Vec::new()
+        },
         slots,
         indeg: indeg.into_iter().map(AtomicUsize::new).collect(),
         children,
@@ -697,7 +762,7 @@ fn execute_par(
             "parallel executor stalled with {left} steps pending (cyclic plan?)"
         ));
     }
-    collect_out(plan, |s| {
+    collect_out(plan, opts.grad_sink.is_none(), |s| {
         sched.slots[s]
             .lock()
             .unwrap()

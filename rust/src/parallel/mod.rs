@@ -6,7 +6,9 @@ pub mod plan;
 pub mod replica;
 pub mod strategies;
 
-pub use exec::{execute, execute_with, run_sharded, Batch, ExecMode, ExecOptions, StepOut, Value};
+pub use exec::{
+    execute, execute_with, run_sharded, Batch, ExecMode, ExecOptions, GradSink, StepOut, Value,
+};
 pub use plan::{Op, Plan, PlanBuilder, ReduceAlgo, Slot};
 pub use replica::{AttnMode, ReplicaSpec};
 pub use strategies::build_plan;

@@ -151,6 +151,21 @@ impl Plan {
         self.steps.iter().filter(|s| pred(&s.op)).count()
     }
 
+    /// Reverse map of [`Plan::grad_out`]: slot-indexed parameter name
+    /// (None for non-gradient slots). The executors build this when a
+    /// gradient sink is attached (`ExecOptions::grad_sink`), so a
+    /// finished gradient can be pushed to its bucket the moment its
+    /// producing step writes the slot — mid-execution, not after the
+    /// whole plan drains. One `vec![None; n_slots]` fill per execution
+    /// with O(1) lookup, so it stays invisible on the hot path.
+    pub fn grad_names_by_slot(&self) -> Vec<Option<&str>> {
+        let mut names = vec![None; self.n_slots];
+        for (n, &s) in &self.grad_out {
+            names[s] = Some(n.as_str());
+        }
+        names
+    }
+
     /// Distinct devices steps are placed on (includes [`HOST`] when any
     /// host-side bookkeeping op exists). Sized worker pool of the
     /// parallel executor: one worker per entry.

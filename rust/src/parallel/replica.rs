@@ -70,6 +70,13 @@ const ATTN_PARAM_NAMES: [&str; 4] = ["attn_Wa", "attn_Wc", "attn_Wout", "attn_bo
 
 /// Gradient accumulator: the first contribution seeds the slot, later
 /// ones chain `Add` steps on the owning device.
+///
+/// The slot this converges to per parameter becomes the plan's
+/// `grad_out` entry — the exact point the executors' streaming
+/// [`GradSink`](super::exec::GradSink) notification fires, so a
+/// parameter whose accumulation chain finishes early in the backward
+/// pass enters the cross-shard bucket reduce while later layers are
+/// still computing.
 struct Accum {
     slots: BTreeMap<String, (Slot, usize)>,
 }
@@ -80,13 +87,15 @@ impl Accum {
     }
 
     fn add(&mut self, b: &mut PlanBuilder, name: &str, slot: Slot, dev: usize) {
-        match self.slots.remove(name) {
+        // Chain in place: only the first contribution allocates the key
+        // (the seed remove+reinsert pattern re-allocated the name on
+        // every accumulation step of every plan build).
+        match self.slots.get_mut(name) {
             None => {
                 self.slots.insert(name.into(), (slot, dev));
             }
-            Some((acc, d)) => {
-                let s = b.add(acc, slot, d);
-                self.slots.insert(name.into(), (s, d));
+            Some(entry) => {
+                entry.0 = b.add(entry.0, slot, entry.1);
             }
         }
     }

@@ -824,6 +824,9 @@ pub struct TrainBenchRow {
     pub replicas: usize,
     /// Gradient-accumulation micro-steps per replica.
     pub accum: usize,
+    /// Flat-slab overlapped engine (`true`) or the map-based PR-4
+    /// reference (`false`).
+    pub flat: bool,
     /// Timed optimizer steps.
     pub steps: usize,
     /// Rows per global batch (`replicas × accum × artifact batch`).
@@ -832,6 +835,9 @@ pub struct TrainBenchRow {
     pub step_s: f64,
     /// Mean seconds in the fixed-order gradient tree reduce.
     pub reduce_s: f64,
+    /// Share of the reduce that ran while replica compute was still in
+    /// flight (always 0 for map rows).
+    pub overlap_pct: f64,
     /// Mean seconds in the sharded optimizer apply.
     pub apply_s: f64,
     /// Mean seconds stalled waiting on the batch prefetch thread.
@@ -844,6 +850,9 @@ pub struct TrainBenchRow {
     /// Parameter uploads per optimizer step summed over replica banks
     /// (expected ≈ `replicas × n_params`).
     pub uploads_per_step: f64,
+    /// f32 buffer allocations per optimizer step (hot-path churn; the
+    /// flat engine's headline reduction vs the map reference).
+    pub allocs_per_step: f64,
 }
 
 /// Render the training-throughput sweep — replicas × accumulation vs
@@ -856,69 +865,86 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
     writeln!(
         out,
         "Training throughput: replica fan-out × gradient accumulation\n\
-         (pipelined multi-replica engine; per-step wall clock with phase breakdown)."
+         (flat = overlapped bucketed-reduce slab engine, map = PR-4 reference;\n\
+         per-step wall clock with phase breakdown; ovl% = reduce hidden under compute)."
     )
     .unwrap();
     writeln!(
         out,
-        "{:<9} {:>6} {:>7} {:>7}  {:>9} {:>9} {:>9} {:>9}  {:>10} {:>9} {:>9}",
-        "replicas", "accum", "steps", "gbatch", "step ms", "reduce ms", "apply ms", "stall ms",
-        "src tok/s", "loss/tok", "uploads"
+        "{:<9} {:>6} {:>5} {:>7} {:>7}  {:>9} {:>9} {:>5} {:>9} {:>9}  {:>10} {:>9} {:>9} {:>9}",
+        "replicas", "accum", "mode", "steps", "gbatch", "step ms", "reduce ms", "ovl%",
+        "apply ms", "stall ms", "src tok/s", "loss/tok", "uploads", "allocs"
     )
     .unwrap();
     let mut csv = String::from(
-        "replicas,accum,steps,global_batch,step_ms,reduce_ms,apply_ms,stall_ms,\
-         src_tok_per_s,loss_per_tok,uploads_per_step\n",
+        "replicas,accum,mode,steps,global_batch,step_ms,reduce_ms,overlap_pct,apply_ms,\
+         stall_ms,src_tok_per_s,loss_per_tok,uploads_per_step,allocs_per_step\n",
     );
     let mut bench: BTreeMap<String, Json> = BTreeMap::new();
     for r in rows {
+        let mode = if r.flat { "flat" } else { "map" };
         writeln!(
             out,
-            "{:<9} {:>6} {:>7} {:>7}  {:>9.1} {:>9.1} {:>9.1} {:>9.1}  {:>10.1} {:>9.3} {:>9.1}",
+            "{:<9} {:>6} {:>5} {:>7} {:>7}  {:>9.1} {:>9.1} {:>5.1} {:>9.1} {:>9.1}  \
+             {:>10.1} {:>9.3} {:>9.1} {:>9.0}",
             r.replicas,
             r.accum,
+            mode,
             r.steps,
             r.global_batch,
             r.step_s * 1e3,
             r.reduce_s * 1e3,
+            r.overlap_pct,
             r.apply_s * 1e3,
             r.stall_s * 1e3,
             r.src_tok_per_s,
             r.loss_per_tok,
             r.uploads_per_step,
+            r.allocs_per_step,
         )
         .unwrap();
         writeln!(
             csv,
-            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.2},{:.5},{:.1}",
+            "{},{},{},{},{},{:.3},{:.3},{:.2},{:.3},{:.3},{:.2},{:.5},{:.1},{:.1}",
             r.replicas,
             r.accum,
+            mode,
             r.steps,
             r.global_batch,
             r.step_s * 1e3,
             r.reduce_s * 1e3,
+            r.overlap_pct,
             r.apply_s * 1e3,
             r.stall_s * 1e3,
             r.src_tok_per_s,
             r.loss_per_tok,
             r.uploads_per_step,
+            r.allocs_per_step,
         )
         .unwrap();
-        let key = format!("r{}.accum{}", r.replicas, r.accum);
+        // Flat rows keep the historical prefix; map-reference rows get
+        // their own `.map` row prefix so both are schema-checked.
+        let key = if r.flat {
+            format!("r{}.accum{}", r.replicas, r.accum)
+        } else {
+            format!("r{}.accum{}.map", r.replicas, r.accum)
+        };
         for (suffix, v) in [
             ("tok_per_s", r.src_tok_per_s),
             ("step_ms", r.step_s * 1e3),
             ("reduce_ms", r.reduce_s * 1e3),
+            ("overlap_pct", r.overlap_pct),
             ("apply_ms", r.apply_s * 1e3),
             ("stall_ms", r.stall_s * 1e3),
             ("uploads_per_step", r.uploads_per_step),
+            ("allocs_per_step", r.allocs_per_step),
         ] {
             bench.insert(format!("{key}.{suffix}"), Json::Num(v));
         }
     }
     if let (Some(base), Some(best)) = (
         rows.iter()
-            .find(|r| r.replicas == 1 && r.accum == 1)
+            .find(|r| r.replicas == 1 && r.accum == 1 && r.flat)
             .map(|r| r.src_tok_per_s),
         rows.iter().map(|r| r.src_tok_per_s).max_by(|a, b| a.total_cmp(b)),
     ) {
@@ -928,6 +954,24 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             best / base.max(1e-9)
         )
         .unwrap();
+    }
+    for (r_flat, r_map) in rows.iter().filter(|r| r.flat).filter_map(|rf| {
+        rows.iter()
+            .find(|rm| !rm.flat && rm.replicas == rf.replicas && rm.accum == rf.accum)
+            .map(|rm| (rf, rm))
+    }) {
+        if r_flat.replicas == rows.iter().map(|r| r.replicas).max().unwrap_or(1) {
+            writeln!(
+                out,
+                "flat vs map at {}x{}: {:.1}% of reduce hidden, allocs {:.0} -> {:.0} per step",
+                r_flat.replicas,
+                r_flat.accum,
+                r_flat.overlap_pct,
+                r_map.allocs_per_step,
+                r_flat.allocs_per_step
+            )
+            .unwrap();
+        }
     }
     writeln!(
         out,

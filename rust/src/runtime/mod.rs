@@ -30,6 +30,7 @@ mod manifest;
 pub use manifest::{ArtifactSig, IoSig, Manifest};
 
 use crate::config::ModelDims;
+use crate::tensor::flat::FlatParams;
 use crate::tensor::{ITensor, Tensor};
 use anyhow::{anyhow, Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -382,11 +383,40 @@ impl Engine {
 #[derive(Debug, Default)]
 pub struct ParamBank {
     bufs: BufCache,
+    /// Bucketed prime passes performed (the flat trainer's batched
+    /// upload path).
+    primes: AtomicU64,
 }
 
 impl ParamBank {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Upload every not-yet-resident parameter of a flat slab,
+    /// bucket-by-bucket: one cache-lock acquisition per *bucket*
+    /// instead of one per parameter, so a replica's whole weight copy
+    /// re-uploads in `n_buckets` batched passes right before its first
+    /// micro-step (instead of trickling through first-touch binds
+    /// mid-plan). Returns the number of uploads performed.
+    pub fn prime_flat(&self, engine: &Engine, flat: &FlatParams) -> Result<u64> {
+        self.primes.fetch_add(1, Ordering::Relaxed);
+        let mut uploaded = 0;
+        for b in flat.buckets().iter() {
+            let entries = &flat.idx().entries()[b.params.clone()];
+            uploaded += self.bufs.upload_many_f(
+                engine,
+                entries.iter().map(|e| {
+                    (e.name.as_str(), flat.get(&e.name).expect("index and views agree"))
+                }),
+            )?;
+        }
+        Ok(uploaded)
+    }
+
+    /// Bucketed prime passes since construction.
+    pub fn prime_count(&self) -> u64 {
+        self.primes.load(Ordering::Relaxed)
     }
 
     /// Resolve `name` to its device buffer, uploading `t` on first use
@@ -496,6 +526,30 @@ impl BufCache {
         t: &Tensor,
     ) -> Result<Arc<DeviceBuf>> {
         self.get_or(key, || engine.upload_f(t))
+    }
+
+    /// Upload every missing entry of one batch under a **single** lock
+    /// acquisition (the bucketed bank-prime path). Entries already
+    /// resident count as hits. Returns the uploads performed.
+    pub fn upload_many_f<'a>(
+        &self,
+        engine: &Engine,
+        items: impl Iterator<Item = (&'a str, &'a Tensor)>,
+    ) -> Result<u64> {
+        let mut bufs = self.bufs.lock().unwrap();
+        let mut n = 0;
+        for (key, t) in items {
+            if bufs.contains_key(key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let b = Arc::new(engine.upload_f(t)?);
+            self.uploads.fetch_add(1, Ordering::Relaxed);
+            self.uploaded_bytes.fetch_add(b.bytes, Ordering::Relaxed);
+            bufs.insert(key.to_string(), b);
+            n += 1;
+        }
+        Ok(n)
     }
 
     /// Resolve `key` to its device buffer, uploading the i32 tensor `t`

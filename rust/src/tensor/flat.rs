@@ -1,0 +1,489 @@
+//! Flat parameter/gradient slabs: one contiguous `Vec<f32>` per role
+//! (parameters, reduced gradients, Adam moments) addressed through a
+//! shared name → `(offset, len, shape)` index, partitioned into
+//! fixed-size buckets.
+//!
+//! The index is built **once** from the global parameter map's sorted
+//! (BTreeMap) name order, and every role — the parameter slab, each
+//! shard's micro-gradient segments, the reduced gradient, the optimizer
+//! moment slabs, the checkpoint row order — addresses through the same
+//! layout. That is what makes the overlapped bucket reduce
+//! (`train::step`) and the slab-range optimizer (`optim`)
+//! bitwise-identical to the map-based reference: the bytes are the
+//! same, only the container changed.
+//!
+//! ## Bucket boundary rule
+//!
+//! Buckets are maximal runs of consecutive index entries whose total
+//! byte size first reaches `bucket_bytes`; a parameter is never split
+//! across buckets. The partition is a pure function of the index and
+//! `bucket_bytes` — never of timing, replica count, or delivery order —
+//! so every shard and every run agrees on the same boundaries
+//! (`docs/PERF.md` §Overlapped bucketed reduction).
+//!
+//! ## Views
+//!
+//! [`FlatParams`] keeps a cached `BTreeMap<String, Tensor>` of
+//! zero-copy [`Tensor::view`]s into its slab, so the plan executor
+//! binds parameters without copying; mutation goes through
+//! [`FlatParams::with_slab_mut`], which drops the cached views,
+//! mutates the (then-unique) slab in place, and rebuilds them.
+
+use super::{note_alloc, scale_slice, Tensor};
+use std::collections::{BTreeMap, HashMap};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Default bucket size: 256 KiB of f32 per bucket (64 Ki elements).
+pub const DEFAULT_BUCKET_BYTES: usize = 256 * 1024;
+
+/// One parameter's place in the slab.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlabEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Element offset of this parameter's first value in the slab.
+    pub off: usize,
+    /// Element count.
+    pub len: usize,
+}
+
+/// The shared name → `(offset, len, shape)` layout, in global
+/// (BTreeMap-sorted) parameter name order.
+#[derive(Debug, Clone, Default)]
+pub struct SlabIndex {
+    entries: Vec<SlabEntry>,
+    by_name: HashMap<String, usize>,
+    total: usize,
+}
+
+impl SlabIndex {
+    /// Build the layout from a parameter map (BTreeMap iteration order
+    /// is the global sorted name order every role shares).
+    pub fn from_map(params: &BTreeMap<String, Tensor>) -> Self {
+        Self::from_shapes(params.iter().map(|(n, t)| (n.clone(), t.shape().to_vec())))
+    }
+
+    /// Build the layout from `(name, shape)` pairs already in sorted
+    /// name order.
+    pub fn from_shapes(shapes: impl IntoIterator<Item = (String, Vec<usize>)>) -> Self {
+        let mut entries = Vec::new();
+        let mut by_name = HashMap::new();
+        let mut off = 0usize;
+        for (name, shape) in shapes {
+            let len: usize = shape.iter().product();
+            by_name.insert(name.clone(), entries.len());
+            entries.push(SlabEntry { name, shape, off, len });
+            off += len;
+        }
+        debug_assert!(
+            entries.windows(2).all(|w| w[0].name < w[1].name),
+            "slab index must be built in sorted name order"
+        );
+        SlabIndex { entries, by_name, total: off }
+    }
+
+    /// Parameters in the layout.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total slab length in elements.
+    pub fn total_len(&self) -> usize {
+        self.total
+    }
+
+    /// Entries in global name order.
+    pub fn entries(&self) -> &[SlabEntry] {
+        &self.entries
+    }
+
+    /// Position of `name` in the layout (also its entry index).
+    pub fn position(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&SlabEntry> {
+        self.position(name).map(|i| &self.entries[i])
+    }
+
+    /// Two layouts describe the same bytes (names, sizes, offsets).
+    pub fn same_layout(&self, other: &SlabIndex) -> bool {
+        self.entries == other.entries
+    }
+
+    /// Partition the layout into buckets per the boundary rule above.
+    /// `bucket_bytes == usize::MAX` yields one giant bucket; tiny
+    /// values (≤ 4 bytes) yield one bucket per parameter.
+    pub fn buckets(&self, bucket_bytes: usize) -> Vec<Bucket> {
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        let mut bytes = 0usize;
+        for (i, e) in self.entries.iter().enumerate() {
+            bytes = bytes.saturating_add(4 * e.len);
+            if bytes >= bucket_bytes || i + 1 == self.entries.len() {
+                out.push(Bucket {
+                    params: start..i + 1,
+                    range: self.entries[start].off..e.off + e.len,
+                });
+                start = i + 1;
+                bytes = 0;
+            }
+        }
+        out
+    }
+}
+
+/// One bucket: a run of consecutive index entries and the slab element
+/// range they occupy. Buckets tile the slab exactly (no gaps, no
+/// overlap).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bucket {
+    /// Index-entry positions `[start, end)` in this bucket.
+    pub params: Range<usize>,
+    /// Slab element range `[start, end)` this bucket owns.
+    pub range: Range<usize>,
+}
+
+/// Which bucket owns index entry `param` (buckets are sorted and tile
+/// the entry range, so this is a binary search).
+pub fn bucket_of(buckets: &[Bucket], param: usize) -> usize {
+    buckets
+        .partition_point(|b| b.params.end <= param)
+        .min(buckets.len().saturating_sub(1))
+}
+
+/// Split a full slab into one `&mut` slice per bucket (the optimizer's
+/// per-bucket worker sharding: disjoint by construction). Panics if
+/// the buckets do not exactly tile the slab.
+pub fn split_buckets_mut<'a>(mut slab: &'a mut [f32], buckets: &[Bucket]) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(buckets.len());
+    let mut at = 0usize;
+    for b in buckets {
+        assert_eq!(b.range.start, at, "buckets must tile the slab contiguously");
+        let (head, tail) = slab.split_at_mut(b.range.end - b.range.start);
+        out.push(head);
+        slab = tail;
+        at = b.range.end;
+    }
+    assert!(slab.is_empty(), "buckets must cover the whole slab");
+    out
+}
+
+/// The parameter arena: the slab, its layout, its bucket partition, and
+/// a cached map of zero-copy views for the executor.
+#[derive(Debug)]
+pub struct FlatParams {
+    idx: Arc<SlabIndex>,
+    buckets: Arc<Vec<Bucket>>,
+    bucket_bytes: usize,
+    slab: Arc<Vec<f32>>,
+    views: BTreeMap<String, Tensor>,
+}
+
+impl FlatParams {
+    /// Pack a parameter map into one contiguous slab (one copy — the
+    /// last time these values live in per-name buffers).
+    pub fn from_map(params: &BTreeMap<String, Tensor>, bucket_bytes: usize) -> Self {
+        let idx = Arc::new(SlabIndex::from_map(params));
+        let mut slab = Vec::with_capacity(idx.total_len());
+        note_alloc();
+        for (e, (_, t)) in idx.entries().iter().zip(params) {
+            debug_assert_eq!(e.off, slab.len());
+            slab.extend_from_slice(t.data());
+        }
+        let buckets = Arc::new(idx.buckets(bucket_bytes));
+        let mut fp = FlatParams {
+            idx,
+            buckets,
+            bucket_bytes,
+            slab: Arc::new(slab),
+            views: BTreeMap::new(),
+        };
+        fp.rebuild_views();
+        fp
+    }
+
+    fn rebuild_views(&mut self) {
+        self.views = self
+            .idx
+            .entries()
+            .iter()
+            .map(|e| {
+                (e.name.clone(), Tensor::view(self.slab.clone(), e.off, e.shape.clone()))
+            })
+            .collect();
+    }
+
+    pub fn idx(&self) -> &Arc<SlabIndex> {
+        &self.idx
+    }
+
+    pub fn buckets(&self) -> &Arc<Vec<Bucket>> {
+        &self.buckets
+    }
+
+    pub fn bucket_bytes(&self) -> usize {
+        self.bucket_bytes
+    }
+
+    /// Re-partition with a new bucket size (layout and values are
+    /// untouched — boundaries are a pure function of index + size).
+    pub fn set_bucket_bytes(&mut self, bucket_bytes: usize) {
+        self.bucket_bytes = bucket_bytes;
+        self.buckets = Arc::new(self.idx.buckets(bucket_bytes));
+    }
+
+    /// Number of parameters.
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// The whole slab (read-only).
+    pub fn slab(&self) -> &[f32] {
+        &self.slab
+    }
+
+    /// Zero-copy parameter map for the executor: every value is a
+    /// [`Tensor::view`] into the slab, so binding the full set into a
+    /// plan clones only `Arc`s.
+    pub fn map(&self) -> &BTreeMap<String, Tensor> {
+        &self.views
+    }
+
+    /// One parameter's view.
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.views.get(name)
+    }
+
+    /// Owned (non-view) copy of the parameter map — the escape hatch to
+    /// the map-based store and the test-comparison path.
+    pub fn to_map(&self) -> BTreeMap<String, Tensor> {
+        self.idx
+            .entries()
+            .iter()
+            .map(|e| {
+                (
+                    e.name.clone(),
+                    Tensor::new(e.shape.clone(), self.slab[e.off..e.off + e.len].to_vec()),
+                )
+            })
+            .collect()
+    }
+
+    /// Mutate the slab in place. The cached views are dropped first so
+    /// the slab `Arc` is unique and the mutation is allocation-free;
+    /// they are rebuilt afterwards. If a caller still holds view clones
+    /// from a previous [`FlatParams::map`] (e.g. a test keeping a
+    /// snapshot across steps), the slab is copied once — correctness is
+    /// never affected, only the zero-copy fast path.
+    pub fn with_slab_mut<R>(
+        &mut self,
+        f: impl FnOnce(&SlabIndex, &[Bucket], &mut [f32]) -> R,
+    ) -> R {
+        self.views.clear();
+        if Arc::strong_count(&self.slab) > 1 {
+            note_alloc(); // external views force a defensive copy
+        }
+        let slab = Arc::make_mut(&mut self.slab);
+        let r = f(&self.idx, &self.buckets, slab);
+        self.rebuild_views();
+        r
+    }
+}
+
+/// The reduced gradient: one raw-sum (later normalized) segment per
+/// bucket, addressed by the shared index.
+#[derive(Debug)]
+pub struct FlatGrads {
+    idx: Arc<SlabIndex>,
+    buckets: Arc<Vec<Bucket>>,
+    segs: Vec<Box<[f32]>>,
+}
+
+impl FlatGrads {
+    /// Wrap per-bucket segments (in bucket order; lengths must match
+    /// the bucket ranges).
+    pub fn new(idx: Arc<SlabIndex>, buckets: Arc<Vec<Bucket>>, segs: Vec<Box<[f32]>>) -> Self {
+        assert_eq!(segs.len(), buckets.len(), "one segment per bucket");
+        for (b, s) in buckets.iter().zip(&segs) {
+            assert_eq!(s.len(), b.range.end - b.range.start, "segment/bucket length");
+        }
+        FlatGrads { idx, buckets, segs }
+    }
+
+    pub fn idx(&self) -> &Arc<SlabIndex> {
+        &self.idx
+    }
+
+    pub fn buckets(&self) -> &Arc<Vec<Bucket>> {
+        &self.buckets
+    }
+
+    /// Bucket `b`'s gradient segment.
+    pub fn seg(&self, b: usize) -> &[f32] {
+        &self.segs[b]
+    }
+
+    /// `grads *= s` over every bucket (the 1/ntok normalization).
+    pub fn scale(&mut self, s: f32) {
+        for seg in &mut self.segs {
+            scale_slice(seg, s);
+        }
+    }
+
+    /// Per-parameter slices in global name order (the clip-norm fold
+    /// and test comparisons walk this).
+    pub fn param_slices(&self) -> impl Iterator<Item = (&SlabEntry, &[f32])> {
+        self.idx.entries().iter().enumerate().map(|(i, e)| {
+            let b = bucket_of(&self.buckets, i);
+            let bk = &self.buckets[b];
+            let s = &self.segs[b][e.off - bk.range.start..e.off + e.len - bk.range.start];
+            (e, s)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_map() -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]));
+        m.insert("b".to_string(), Tensor::new(vec![3], vec![5., 6., 7.]));
+        m.insert("c".to_string(), Tensor::new(vec![1], vec![8.]));
+        m
+    }
+
+    #[test]
+    fn index_layout_follows_sorted_name_order() {
+        let idx = SlabIndex::from_map(&sample_map());
+        assert_eq!(idx.len(), 3);
+        assert_eq!(idx.total_len(), 8);
+        let e = idx.entry("b").unwrap();
+        assert_eq!((e.off, e.len), (4, 3));
+        assert_eq!(idx.position("c"), Some(2));
+        assert!(idx.entry("zz").is_none());
+    }
+
+    #[test]
+    fn bucket_rule_is_a_pure_function_of_index_and_size() {
+        let idx = SlabIndex::from_map(&sample_map());
+        // Tiny bucket size: one bucket per parameter.
+        let per_param = idx.buckets(1);
+        assert_eq!(per_param.len(), 3);
+        assert_eq!(per_param[0].range, 0..4);
+        assert_eq!(per_param[1].range, 4..7);
+        assert_eq!(per_param[2].range, 7..8);
+        // Giant bucket: everything in one.
+        let giant = idx.buckets(usize::MAX);
+        assert_eq!(giant.len(), 1);
+        assert_eq!(giant[0].params, 0..3);
+        assert_eq!(giant[0].range, 0..8);
+        // 16 bytes = 4 elems: `a` fills bucket 0 alone, `b`+`c` share.
+        let mid = idx.buckets(16);
+        assert_eq!(mid.len(), 2);
+        assert_eq!(mid[1].range, 4..8);
+        // Buckets always tile the slab.
+        for bs in [1usize, 16, 24, usize::MAX] {
+            let bks = idx.buckets(bs);
+            assert_eq!(bks[0].range.start, 0);
+            assert_eq!(bks.last().unwrap().range.end, idx.total_len());
+            for w in bks.windows(2) {
+                assert_eq!(w[0].range.end, w[1].range.start);
+                assert_eq!(w[0].params.end, w[1].params.start);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_of_locates_every_param() {
+        let idx = SlabIndex::from_map(&sample_map());
+        let bks = idx.buckets(16);
+        assert_eq!(bucket_of(&bks, 0), 0);
+        assert_eq!(bucket_of(&bks, 1), 1);
+        assert_eq!(bucket_of(&bks, 2), 1);
+    }
+
+    #[test]
+    fn flat_params_views_are_zero_copy_and_mutation_rebuilds() {
+        let map = sample_map();
+        let mut fp = FlatParams::from_map(&map, 16);
+        assert_eq!(fp.len(), 3);
+        for (name, t) in &map {
+            assert_eq!(fp.get(name).unwrap(), t, "`{name}` view mismatch");
+            assert!(fp.get(name).unwrap().is_view());
+        }
+        // In-place slab mutation. (Allocation-freedom is structural —
+        // `with_slab_mut` only notes an alloc when external views force
+        // `Arc::make_mut` to copy — and is not asserted through the
+        // process-global counter, which sibling tests bump
+        // concurrently.)
+        fp.with_slab_mut(|idx, buckets, slab| {
+            assert_eq!(buckets.len(), 2);
+            let e = idx.entry("c").unwrap();
+            slab[e.off] = 99.0;
+        });
+        assert_eq!(fp.get("c").unwrap().data(), &[99.0]);
+        assert_eq!(fp.slab()[7], 99.0);
+        // Round-trip back to an owned map preserves values + shapes.
+        let back = fp.to_map();
+        assert_eq!(back["a"], map["a"]);
+        assert_eq!(back["c"].data(), &[99.0]);
+    }
+
+    #[test]
+    fn with_slab_mut_is_safe_under_external_views() {
+        let mut fp = FlatParams::from_map(&sample_map(), usize::MAX);
+        let held = fp.get("a").unwrap().clone(); // external view pins the slab
+        fp.with_slab_mut(|idx, _, slab| {
+            let e = idx.entry("a").unwrap();
+            slab[e.off] = -1.0;
+        });
+        // The held view kept its pre-mutation values (defensive copy),
+        // the arena sees the new ones.
+        assert_eq!(held.data()[0], 1.0);
+        assert_eq!(fp.get("a").unwrap().data()[0], -1.0);
+    }
+
+    #[test]
+    fn flat_grads_param_slices_follow_the_index() {
+        let idx = Arc::new(SlabIndex::from_map(&sample_map()));
+        let buckets = Arc::new(idx.buckets(16));
+        let segs: Vec<Box<[f32]>> = buckets
+            .iter()
+            .map(|b| (b.range.start..b.range.end).map(|x| x as f32).collect())
+            .collect();
+        let mut g = FlatGrads::new(idx, buckets, segs);
+        let names: Vec<&str> = g.param_slices().map(|(e, _)| e.name.as_str()).collect();
+        assert_eq!(names, ["a", "b", "c"]);
+        let b_slice: Vec<f32> = g
+            .param_slices()
+            .find(|(e, _)| e.name == "b")
+            .map(|(_, s)| s.to_vec())
+            .unwrap();
+        assert_eq!(b_slice, vec![4.0, 5.0, 6.0]);
+        g.scale(2.0);
+        assert_eq!(g.seg(1)[0], 8.0);
+    }
+
+    #[test]
+    fn split_buckets_mut_tiles_exactly() {
+        let idx = SlabIndex::from_map(&sample_map());
+        let bks = idx.buckets(16);
+        let mut slab = vec![0.0f32; idx.total_len()];
+        let parts = split_buckets_mut(&mut slab, &bks);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].len(), 4);
+        assert_eq!(parts[1].len(), 4);
+    }
+}

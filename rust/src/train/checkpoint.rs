@@ -28,6 +28,8 @@
 //! finds every weight device-resident.
 
 use crate::optim::{OptimState, OptimStateView};
+#[cfg(test)]
+use crate::optim::MomentRowsView;
 use crate::runtime::{Engine, ParamBank};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};
@@ -84,8 +86,11 @@ fn write_params(f: &mut impl Write, params: &BTreeMap<String, Tensor>) -> Result
 }
 
 /// Named f32 rows (the optimizer moment maps): count, then
-/// name / length / data per row.
-fn write_rows(f: &mut impl Write, rows: &BTreeMap<String, Vec<f32>>) -> Result<()> {
+/// name / length / data per row. Takes borrowed `(name, row)` slices in
+/// sorted name order — the optimizer's state view yields the same
+/// sequence whether its moments live in per-name maps or in the flat
+/// slabs, so the bytes here never depend on the storage.
+fn write_rows(f: &mut impl Write, rows: Vec<(&str, &[f32])>) -> Result<()> {
     f.write_all(&(rows.len() as u32).to_le_bytes())?;
     for (name, data) in rows {
         let nb = name.as_bytes();
@@ -132,8 +137,8 @@ pub fn save_full(
     f.write_all(&meta.sim_clock.to_le_bytes())?;
     f.write_all(&[meta.prev_dev_ppl.is_some() as u8])?;
     f.write_all(&meta.prev_dev_ppl.unwrap_or(0.0).to_le_bytes())?;
-    write_rows(&mut f, opt.m)?;
-    write_rows(&mut f, opt.v)
+    write_rows(&mut f, opt.rows.iter_m().collect())?;
+    write_rows(&mut f, opt.rows.iter_v().collect())
 }
 
 fn read_u32(f: &mut impl Read) -> Result<u32> {
@@ -341,7 +346,12 @@ mod tests {
     impl OptimState {
         /// Test helper: view of an owned state.
         fn view(&self) -> OptimStateView<'_> {
-            OptimStateView { kind: &self.kind, lr: self.lr, t: self.t, m: &self.m, v: &self.v }
+            OptimStateView {
+                kind: &self.kind,
+                lr: self.lr,
+                t: self.t,
+                rows: MomentRowsView::Maps { m: &self.m, v: &self.v },
+            }
         }
     }
 

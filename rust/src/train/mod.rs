@@ -3,20 +3,31 @@
 //! scheduling, evaluation, and checkpointing.
 //!
 //! One optimizer step is a pipeline (see `docs/ARCHITECTURE.md`
-//! §Training):
+//! §Training). With the default **flat** step engine
+//! ([`StepMode::Flat`]):
 //!
 //! 1. **Fan-out** — `replicas × accum` micro-batches (the row-shards
 //!    of the global batch) execute the shared plan on the
-//!    plan-scheduler worker pool, one [`ParamBank`] per replica.
-//! 2. **Reduce** — micro-gradients combine through a fixed-order
-//!    binary tree ([`step::tree_reduce_grads`]), bitwise-identical at
-//!    every replica count and executor mode.
-//! 3. **Apply** — the [`Optimizer`] partitions the parameter set
-//!    across the replica workers (per-param granularity → unchanged
-//!    numerics) and the replica banks invalidate.
+//!    plan-scheduler worker pool, one
+//!    [`ParamBank`](crate::runtime::ParamBank) per replica, each bank
+//!    primed bucket-by-bucket from the parameter slab.
+//! 2. **Overlapped reduce** — gradients stream out of the executors
+//!    the moment their slots are written, land in per-shard bucket
+//!    segments of the shared slab layout, and each bucket folds
+//!    through the fixed-shape shard tree on a dedicated reducer thread
+//!    *while later micro-batches are still computing*.
+//! 3. **Apply** — the [`Optimizer`] updates parameters, Adam moments
+//!    and all in contiguous slab ranges, partitioned across the
+//!    replica workers at bucket granularity, and the replica banks
+//!    invalidate.
 //!
-//! Batch preparation for the *next* step overlaps all three phases via
-//! the double-buffered prefetch thread (`data::prefetch`).
+//! [`StepMode::Map`] keeps the PR-4 reference engine (full gradient
+//! maps, reduce strictly after all compute) — the equivalence baseline
+//! and the `--map-step` escape hatch. Both engines produce
+//! **bitwise-identical** parameters (`rust/tests/train_equivalence.rs`).
+//!
+//! Batch preparation for the *next* step overlaps all phases via the
+//! double-buffered prefetch thread (`data::prefetch`).
 
 pub mod checkpoint;
 pub mod step;
@@ -32,6 +43,7 @@ use crate::parallel::{build_plan, execute_with, Batch, ExecMode, ExecOptions, Pl
 use crate::rng::Rng;
 use crate::runtime::Engine;
 use crate::sim::{simulate, SimResult};
+use crate::tensor::flat::{FlatParams, DEFAULT_BUCKET_BYTES};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -55,6 +67,47 @@ pub fn init_params(
     params
 }
 
+/// Which train-step engine runs one optimizer step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StepMode {
+    /// Flat parameter/gradient slabs with the overlapped bucketed
+    /// reduce (the default).
+    #[default]
+    Flat,
+    /// The map-based PR-4 reference step (`--map-step`): full gradient
+    /// maps, reduce strictly after compute.
+    Map,
+}
+
+/// Canonical parameter storage — matches the trainer's [`StepMode`].
+pub enum ParamStore {
+    /// Per-name owned tensors (map engine).
+    Map(BTreeMap<String, Tensor>),
+    /// One contiguous slab + zero-copy views (flat engine).
+    Flat(FlatParams),
+}
+
+impl ParamStore {
+    /// The name→tensor map every consumer (executor bind, checkpoint,
+    /// decode) reads. For the flat store these are zero-copy slab
+    /// views; for the map store, the map itself.
+    pub fn map(&self) -> &BTreeMap<String, Tensor> {
+        match self {
+            ParamStore::Map(m) => m,
+            ParamStore::Flat(f) => f.map(),
+        }
+    }
+
+    /// Number of parameters.
+    pub fn len(&self) -> usize {
+        self.map().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map().is_empty()
+    }
+}
+
 /// Per-step record (drives Figure 4, the training logs, and
 /// `train-bench`).
 #[derive(Debug, Clone)]
@@ -67,18 +120,30 @@ pub struct StepStats {
     /// (`accum` sequential plan makespans; the cross-replica reduce is
     /// measured, not simulated — see `reduce_seconds`).
     pub sim_seconds: f64,
-    /// Real CPU seconds of the whole replica-execution phase.
+    /// Real CPU seconds of the whole replica-execution phase (for the
+    /// flat engine this window also absorbs any reduce tail that
+    /// outlived compute — the overlapped part costs no extra wall
+    /// clock).
     pub host_seconds: f64,
     pub src_tokens: f64,
     /// Micro-batches this step consumed (`replicas × accum`).
     pub micro_batches: usize,
-    /// Host seconds spent in the fixed-order gradient tree reduce.
+    /// Host seconds of gradient reduction: the fixed-shape shard tree
+    /// plus the loss fold and 1/ntok normalization.
     pub reduce_seconds: f64,
+    /// Portion of `reduce_seconds` that ran concurrently with replica
+    /// compute (always 0 for the map engine — its reduce starts after
+    /// the last micro-batch finishes).
+    pub reduce_overlap_seconds: f64,
     /// Host seconds spent in the sharded optimizer apply.
     pub apply_seconds: f64,
     /// Seconds the step waited on the batch prefetch thread (0 when
     /// batches were handed in directly).
     pub prefetch_stall_seconds: f64,
+    /// f32 buffer allocations this step performed
+    /// (`tensor::alloc_count` delta — the hot-path churn metric
+    /// `train-bench` tracks as `allocs_per_step`).
+    pub allocs: u64,
     /// Plan-execution host seconds per replica worker (length =
     /// `replicas`; load-imbalance diagnostic).
     pub replica_host_seconds: Vec<f64>,
@@ -99,7 +164,7 @@ pub struct EvalPoint {
 /// persists lives here; everything execution-related (engine, plan,
 /// banks) lives on [`Trainer`].
 pub struct TrainState {
-    pub params: BTreeMap<String, Tensor>,
+    pub params: ParamStore,
     pub opt: Box<dyn Optimizer>,
     /// Simulated wall-clock accumulated over `steps_done` steps.
     pub sim_clock: f64,
@@ -113,8 +178,11 @@ pub struct TrainState {
 
 impl TrainState {
     pub fn new(exp: &Experiment) -> Self {
+        let init = init_params(exp, exp.strategy.uses_input_feeding());
         TrainState {
-            params: init_params(exp, exp.strategy.uses_input_feeding()),
+            // The default engine is flat: pack the freshly-initialized
+            // map into the slab arena once, here.
+            params: ParamStore::Flat(FlatParams::from_map(&init, DEFAULT_BUCKET_BYTES)),
             opt: optim::build(&exp.train),
             sim_clock: 0.0,
             steps_done: 0,
@@ -141,6 +209,10 @@ pub struct Trainer<'a> {
     /// Run plans with the sequential executor (`--sequential` escape
     /// hatch); default is the dependency-driven parallel scheduler.
     pub sequential: bool,
+    /// Which step engine (flat slabs vs map reference) runs updates.
+    step_mode: StepMode,
+    /// Bucket size (bytes) of the flat engine's slab partition.
+    bucket_bytes: usize,
 }
 
 impl<'a> Trainer<'a> {
@@ -158,6 +230,8 @@ impl<'a> Trainer<'a> {
             state: TrainState::new(exp),
             pipeline: Pipeline::new(1, 1),
             sequential: false,
+            step_mode: StepMode::default(),
+            bucket_bytes: DEFAULT_BUCKET_BYTES,
         })
     }
 
@@ -166,14 +240,43 @@ impl<'a> Trainer<'a> {
         self.pipeline = Pipeline::new(replicas, accum);
     }
 
-    pub fn params(&self) -> &BTreeMap<String, Tensor> {
-        &self.state.params
+    pub fn step_mode(&self) -> StepMode {
+        self.step_mode
     }
 
-    /// Mutable access to the parameters. Call
-    /// [`Trainer::invalidate_device_params`] after out-of-band edits.
-    pub fn params_mut(&mut self) -> &mut BTreeMap<String, Tensor> {
-        &mut self.state.params
+    /// Switch step engines. Converts the parameter store in place
+    /// (values are copied bit-exactly, so the training trajectory is
+    /// unaffected — the whole point of the equivalence suite).
+    pub fn set_step_mode(&mut self, mode: StepMode) {
+        self.step_mode = mode;
+        match (mode, &mut self.state.params) {
+            (StepMode::Flat, ParamStore::Map(m)) => {
+                self.state.params = ParamStore::Flat(FlatParams::from_map(m, self.bucket_bytes));
+            }
+            (StepMode::Map, ParamStore::Flat(f)) => {
+                self.state.params = ParamStore::Map(f.to_map());
+            }
+            _ => {}
+        }
+    }
+
+    /// Bucket size of the flat engine's slab partition (bytes).
+    pub fn bucket_bytes(&self) -> usize {
+        self.bucket_bytes
+    }
+
+    /// Re-partition the flat slab (boundaries are a pure function of
+    /// the index + this size, so this never changes numerics).
+    pub fn set_bucket_bytes(&mut self, bytes: usize) {
+        self.bucket_bytes = bytes.max(1);
+        if let ParamStore::Flat(f) = &mut self.state.params {
+            f.set_bucket_bytes(self.bucket_bytes);
+        }
+    }
+
+    /// The parameter map (zero-copy slab views under the flat engine).
+    pub fn params(&self) -> &BTreeMap<String, Tensor> {
+        self.state.params.map()
     }
 
     pub fn steps_done(&self) -> usize {
@@ -206,18 +309,107 @@ impl<'a> Trainer<'a> {
     }
 
     /// Execute one optimizer step on `micro` (length must be
-    /// `replicas × accum`): replica fan-out → fixed-order tree reduce
-    /// → sharded optimizer apply → bank invalidation.
+    /// `replicas × accum`) with the configured [`StepMode`] engine.
     pub fn train_step_micro(&mut self, micro: &[Batch]) -> Result<StepStats> {
+        match self.step_mode {
+            StepMode::Flat => self.train_step_micro_flat(micro),
+            StepMode::Map => self.train_step_micro_map(micro),
+        }
+    }
+
+    /// The flat engine: fan-out + overlapped bucketed reduce
+    /// (`step::run_micro_steps_flat`) → 1/ntok normalization → slab
+    /// optimizer apply → bank invalidation.
+    fn train_step_micro_flat(&mut self, micro: &[Batch]) -> Result<StepStats> {
+        let allocs0 = crate::tensor::alloc_count();
         let t0 = std::time::Instant::now();
-        let outs = step::run_micro_steps(
-            &self.plan,
-            self.engine,
-            &self.state.params,
-            micro,
-            &self.pipeline,
-            self.exec_mode(),
-        )?;
+        let out = {
+            let ParamStore::Flat(flat) = &self.state.params else {
+                return Err(anyhow!("flat step engine with a map parameter store"));
+            };
+            step::run_micro_steps_flat(
+                &self.plan,
+                self.engine,
+                flat,
+                micro,
+                &self.pipeline,
+                self.exec_mode(),
+            )?
+        };
+        let host_seconds = t0.elapsed().as_secs_f64();
+        let mut replica_host_seconds = vec![0.0f64; self.pipeline.replicas()];
+        for (j, m) in out.micros.iter().enumerate() {
+            replica_host_seconds[j % self.pipeline.replicas()] += m.host_seconds;
+        }
+
+        // Finalize: f64 left folds over global shard order (identical
+        // to the map engine), then the 1/ntok normalization over the
+        // bucket segments. Counted into reduce_seconds so the two
+        // engines' phase breakdowns stay comparable.
+        let t1 = std::time::Instant::now();
+        let mut loss_sum = 0.0;
+        let mut ntok = 0.0;
+        for m in &out.micros {
+            loss_sum += m.loss_sum;
+            ntok += m.ntok;
+        }
+        let ntok = ntok.max(1.0);
+        let mut grads = out.grads;
+        grads.scale(1.0 / ntok as f32);
+        let reduce_seconds = out.reduce_seconds + t1.elapsed().as_secs_f64();
+
+        let t2 = std::time::Instant::now();
+        let state = &mut self.state;
+        let ParamStore::Flat(flat) = &mut state.params else {
+            unreachable!("checked above");
+        };
+        let grad_norm = state.opt.apply_flat(flat, &grads, self.pipeline.replicas())?;
+        let apply_seconds = t2.elapsed().as_secs_f64();
+        // The update changed the host parameters: every replica's
+        // device-resident copies are stale until the next first touch.
+        self.pipeline.invalidate();
+
+        self.state.steps_done += 1;
+        self.state.micro_consumed += micro.len();
+        self.state.sim_clock += self.pipeline.accum() as f64 * self.step_sim.makespan;
+        let loss_per_tok = loss_sum / ntok;
+        Ok(StepStats {
+            step: self.state.steps_done,
+            loss_per_tok,
+            ppl: perplexity(loss_sum, ntok),
+            grad_norm,
+            sim_seconds: self.pipeline.accum() as f64 * self.step_sim.makespan,
+            host_seconds,
+            src_tokens: micro.iter().map(|b| b.tokens()).sum(),
+            micro_batches: micro.len(),
+            reduce_seconds,
+            reduce_overlap_seconds: out.reduce_overlap_seconds,
+            apply_seconds,
+            prefetch_stall_seconds: 0.0,
+            allocs: crate::tensor::alloc_count() - allocs0,
+            replica_host_seconds,
+        })
+    }
+
+    /// The map reference engine (PR 4): replica fan-out → fixed-order
+    /// tree reduce over gradient maps → per-param sharded optimizer
+    /// apply → bank invalidation.
+    fn train_step_micro_map(&mut self, micro: &[Batch]) -> Result<StepStats> {
+        let allocs0 = crate::tensor::alloc_count();
+        let t0 = std::time::Instant::now();
+        let outs = {
+            let ParamStore::Map(params) = &self.state.params else {
+                return Err(anyhow!("map step engine with a flat parameter store"));
+            };
+            step::run_micro_steps(
+                &self.plan,
+                self.engine,
+                params,
+                micro,
+                &self.pipeline,
+                self.exec_mode(),
+            )?
+        };
         let host_seconds = t0.elapsed().as_secs_f64();
         let mut replica_host_seconds = vec![0.0f64; self.pipeline.replicas()];
         for (j, m) in outs.iter().enumerate() {
@@ -246,10 +438,11 @@ impl<'a> Trainer<'a> {
         let reduce_seconds = t1.elapsed().as_secs_f64();
 
         let t2 = std::time::Instant::now();
-        let grad_norm =
-            self.state
-                .opt
-                .apply(&mut self.state.params, &grads, self.pipeline.replicas())?;
+        let state = &mut self.state;
+        let ParamStore::Map(params) = &mut state.params else {
+            unreachable!("checked above");
+        };
+        let grad_norm = state.opt.apply(params, &grads, self.pipeline.replicas())?;
         let apply_seconds = t2.elapsed().as_secs_f64();
         // The update changed the host parameters: every replica's
         // device-resident copies are stale until the next first touch.
@@ -269,8 +462,10 @@ impl<'a> Trainer<'a> {
             src_tokens: micro.iter().map(|b| b.tokens()).sum(),
             micro_batches: micro.len(),
             reduce_seconds,
+            reduce_overlap_seconds: 0.0,
             apply_seconds,
             prefetch_stall_seconds: 0.0,
+            allocs: crate::tensor::alloc_count() - allocs0,
             replica_host_seconds,
         })
     }
@@ -282,11 +477,13 @@ impl<'a> Trainer<'a> {
         let opts = ExecOptions {
             mode: self.exec_mode(),
             bank: Some(&self.pipeline.banks()[0]),
+            ..Default::default()
         };
         let mut loss = 0.0;
         let mut ntok = 0.0;
         for b in batches {
-            let out = execute_with(&self.plan, self.engine, &self.state.params, b, &opts)?;
+            let out =
+                execute_with(&self.plan, self.engine, self.state.params.map(), b, &opts)?;
             loss += out.loss_sum;
             ntok += out.ntok;
         }
@@ -356,11 +553,12 @@ impl<'a> Trainer<'a> {
     /// Write a format-v2 checkpoint: parameters + optimizer state +
     /// training clocks (step count, sim clock, plateau-schedule
     /// reference), so [`Trainer::resume`] restarts bitwise-exactly —
-    /// LR schedule included.
+    /// LR schedule included. The parameter section streams straight
+    /// from the store (slab views under the flat engine: no clone).
     pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
         checkpoint::save_full(
             path,
-            &self.state.params,
+            self.state.params.map(),
             &self.state.opt.state_view(),
             &checkpoint::TrainMeta {
                 steps_done: self.state.steps_done as u64,
@@ -373,11 +571,14 @@ impl<'a> Trainer<'a> {
 
     /// Restore parameters (and, for v2 checkpoints, optimizer state +
     /// training clocks) from `path`. v1 param-only files restore
-    /// parameters and leave the optimizer fresh.
+    /// parameters and leave the optimizer fresh. The loaded map is
+    /// packed back into the slab arena under the flat engine — the
+    /// round-trip is bit-exact (`train_equivalence::v2_resume_*`).
     pub fn resume(&mut self, path: &Path) -> Result<()> {
         let ck = checkpoint::load_full(path)?;
+        let current = self.state.params.map();
         for (name, t) in &ck.params {
-            match self.state.params.get(name) {
+            match current.get(name) {
                 Some(cur) if cur.shape() == t.shape() => {}
                 Some(cur) => {
                     return Err(anyhow!(
@@ -389,15 +590,20 @@ impl<'a> Trainer<'a> {
                 None => return Err(anyhow!("checkpoint param `{name}` unknown to this model")),
             }
         }
-        if ck.params.len() != self.state.params.len() {
+        if ck.params.len() != current.len() {
             return Err(anyhow!(
                 "checkpoint has {} params, model wants {} (strategy mismatch?)",
                 ck.params.len(),
-                self.state.params.len()
+                current.len()
             ));
         }
-        self.state.params = ck.params;
-        if let Some(opt) = &ck.opt {
+        self.state.params = match self.step_mode {
+            StepMode::Flat => {
+                ParamStore::Flat(FlatParams::from_map(&ck.params, self.bucket_bytes))
+            }
+            StepMode::Map => ParamStore::Map(ck.params),
+        };
+        if let Some(opt) = ck.opt {
             self.state.opt.import_state(opt)?;
         }
         self.state.steps_done = ck.meta.steps_done as usize;

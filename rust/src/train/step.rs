@@ -1,33 +1,49 @@
 //! The pipelined multi-replica train step: replica fan-out over the
-//! plan-scheduler worker pool, fixed-order deterministic tree reduce,
-//! and micro-step gradient accumulation.
+//! plan-scheduler worker pool, deterministic gradient reduction, and
+//! micro-step gradient accumulation — in two interchangeable engines:
 //!
-//! One optimizer step consumes `replicas × accum` artifact-shaped
-//! micro-batches — the row-shards of the *global* batch (shard `j`
-//! owns rows `[j·B, (j+1)·B)` of the concatenated
-//! `[replicas·accum·B, …]` batch the step trains on). Replica `r`
-//! executes the shared [`Plan`] on shards `r, r+R, r+2R, …` in order
-//! (the same static round-robin as [`run_sharded`]), resolving
-//! parameters through **its own** [`ParamBank`] — the data-parallel
-//! picture of one weight copy per worker, and no bank-lock contention
-//! between replicas.
+//! * **Map path** ([`run_micro_steps`] + [`tree_reduce_grads`]) — the
+//!   reference: every micro-step returns a full
+//!   `BTreeMap<String, Tensor>` gradient set, and after *all* compute
+//!   finishes the maps fold through a fixed-shape binary tree.
+//! * **Flat path** ([`run_micro_steps_flat`]) — the overlapped bucketed
+//!   engine: gradients stream out of the executors mid-plan
+//!   ([`GradSink`]), land in per-shard bucket segments of one
+//!   contiguous slab layout ([`BucketBoard`]), and a bucket enters the
+//!   same fixed-shape binary tree (per bucket, over global shard order)
+//!   the moment every shard has delivered it — on a dedicated reducer
+//!   thread, so most of the reduction hides under the compute of
+//!   later-finishing micro-batches.
+//!
+//! One optimizer step consumes `replicas × accum` micro-batches — the
+//! row-shards of the *global* batch (shard `j` owns rows
+//! `[j·B, (j+1)·B)` of the concatenated `[replicas·accum·B, …]` batch
+//! the step trains on). Replica `r` executes the shared [`Plan`] on
+//! shards `r, r+R, r+2R, …` in order (the same static round-robin as
+//! [`run_sharded`]), resolving parameters through **its own**
+//! [`ParamBank`].
 //!
 //! ## Determinism
 //!
-//! The reduction is a fixed-shape binary tree over the micro-gradients
-//! *in global shard order* — pass 1 combines (0,1), (2,3), …; pass 2
-//! combines the pass-1 results pairwise; and so on. The tree's shape
-//! and order depend only on the shard count, never on the replica
-//! count, executor mode, or thread timing, so spreading the same
-//! shards over 1, 2 or 4 replicas (or flipping
-//! sequential ↔ parallel executors) produces **bitwise-identical**
-//! gradients — `rust/tests/train_equivalence.rs` is the gate.
+//! Both engines reduce with the identical fixed-shape binary tree over
+//! the micro-gradients *in global shard order* — pass 1 combines (0,1),
+//! (2,3), …; pass 2 combines the pass-1 results pairwise; and so on.
+//! The tree's shape and order depend only on the shard count; bucket
+//! boundaries depend only on the slab index (never on delivery timing);
+//! and per-bucket reduction touches exactly the same elements in the
+//! same order as per-parameter reduction. So flat ≡ map ≡ any replica
+//! spread, **bitwise** — `rust/tests/train_equivalence.rs` is the gate.
 
-use crate::parallel::{execute_with, run_sharded, Batch, ExecMode, ExecOptions, Plan, StepOut};
+use crate::parallel::{
+    execute_with, run_sharded, Batch, ExecMode, ExecOptions, GradSink, Plan, StepOut,
+};
 use crate::runtime::{Engine, ParamBank};
-use crate::tensor::Tensor;
+use crate::tensor::flat::{bucket_of, Bucket, FlatGrads, FlatParams, SlabIndex};
+use crate::tensor::{add_assign_slice, note_alloc, Tensor};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 
 /// Replica fan-out + accumulation configuration of one trainer, plus
 /// the per-replica parameter banks it owns.
@@ -88,9 +104,15 @@ impl Pipeline {
     pub fn upload_bytes(&self) -> u64 {
         self.banks.iter().map(|b| b.upload_bytes()).sum()
     }
+
+    /// Bucketed prime passes across all replica banks (flat engine:
+    /// expect `replicas` per optimizer step).
+    pub fn prime_count(&self) -> u64 {
+        self.banks.iter().map(|b| b.prime_count()).sum()
+    }
 }
 
-/// Per-micro-step execution record.
+/// Per-micro-step execution record (map path).
 pub struct MicroOut {
     pub out: StepOut,
     /// Host seconds this shard's plan execution took on its replica.
@@ -109,6 +131,21 @@ pub fn run_micro_steps(
     pipeline: &Pipeline,
     mode: ExecMode,
 ) -> Result<Vec<MicroOut>> {
+    check_micro_len(micro, pipeline)?;
+    let outs = run_sharded(pipeline.replicas, micro.len(), |worker, j| {
+        let opts = ExecOptions {
+            mode,
+            bank: Some(&pipeline.banks[worker]),
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let out = execute_with(plan, engine, params, &micro[j], &opts)?;
+        Ok(MicroOut { out, host_seconds: t0.elapsed().as_secs_f64() })
+    })?;
+    Ok(outs)
+}
+
+fn check_micro_len(micro: &[Batch], pipeline: &Pipeline) -> Result<()> {
     if micro.len() != pipeline.micro_per_step() {
         return Err(anyhow!(
             "train step needs {} micro-batches ({} replicas × {} accum), got {}",
@@ -118,13 +155,7 @@ pub fn run_micro_steps(
             micro.len()
         ));
     }
-    let outs = run_sharded(pipeline.replicas, micro.len(), |worker, j| {
-        let opts = ExecOptions { mode, bank: Some(&pipeline.banks[worker]) };
-        let t0 = std::time::Instant::now();
-        let out = execute_with(plan, engine, params, &micro[j], &opts)?;
-        Ok(MicroOut { out, host_seconds: t0.elapsed().as_secs_f64() })
-    })?;
-    Ok(outs)
+    Ok(())
 }
 
 /// Sum a list of same-keyed gradient maps with a fixed-shape binary
@@ -157,9 +188,282 @@ pub fn tree_reduce_grads(
     Ok(parts.pop().expect("non-empty"))
 }
 
+/// The same fixed-shape binary tree over flat segments (one bucket, all
+/// shards, in global shard order). Tree nodes accumulate into the left
+/// child's buffer — no allocation per combine.
+fn tree_reduce_segments(mut parts: Vec<Box<[f32]>>) -> Option<Box<[f32]>> {
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut left) = it.next() {
+            if let Some(right) = it.next() {
+                add_assign_slice(&mut left, &right);
+            }
+            next.push(left);
+        }
+        parts = next;
+    }
+    parts.pop()
+}
+
+// ------------------------------------------------------------------------
+// The overlapped bucketed reduce (flat path)
+// ------------------------------------------------------------------------
+
+/// Shared delivery board of one flat train step: per-(shard, bucket)
+/// gradient segments filled by the executors' [`GradSink`]
+/// notifications, bucket-completion counters, and the channel feeding
+/// ready buckets to the reducer thread.
+///
+/// All segment storage is preallocated up front (`shards × buckets`
+/// buffers — the same aggregate footprint as the map path's per-shard
+/// gradient maps), so the steady-state delivery path allocates nothing.
+pub struct BucketBoard<'a> {
+    idx: &'a SlabIndex,
+    buckets: &'a [Bucket],
+    shards: usize,
+    /// Segment storage, `segs[shard * n_buckets + bucket]`.
+    segs: Vec<Mutex<Box<[f32]>>>,
+    /// Parameters still undelivered per (shard, bucket), same indexing.
+    remaining: Vec<AtomicUsize>,
+    /// Shards that have fully delivered each bucket.
+    arrived: Vec<AtomicUsize>,
+    /// Param position → owning bucket.
+    param_bucket: Vec<usize>,
+    /// Ready buckets flow to the reducer here; closed after compute.
+    tx: Mutex<Option<mpsc::Sender<usize>>>,
+}
+
+impl<'a> BucketBoard<'a> {
+    pub fn new(
+        idx: &'a SlabIndex,
+        buckets: &'a [Bucket],
+        shards: usize,
+        tx: mpsc::Sender<usize>,
+    ) -> Self {
+        let nb = buckets.len();
+        let segs = (0..shards * nb)
+            .map(|i| {
+                let b = &buckets[i % nb];
+                note_alloc();
+                Mutex::new(vec![0.0f32; b.range.end - b.range.start].into_boxed_slice())
+            })
+            .collect();
+        let remaining = (0..shards * nb)
+            .map(|i| AtomicUsize::new(buckets[i % nb].params.len()))
+            .collect();
+        let param_bucket = (0..idx.len()).map(|p| bucket_of(buckets, p)).collect();
+        BucketBoard {
+            idx,
+            buckets,
+            shards,
+            segs,
+            remaining,
+            arrived: (0..nb).map(|_| AtomicUsize::new(0)).collect(),
+            param_bucket,
+            tx: Mutex::new(Some(tx)),
+        }
+    }
+
+    /// Record shard `shard`'s gradient for one parameter. When this
+    /// completes the shard's last missing parameter of a bucket, and
+    /// that was the last shard, the bucket is queued for reduction.
+    fn deliver(&self, shard: usize, name: &str, grad: &Tensor) -> Result<()> {
+        let pi = self
+            .idx
+            .position(name)
+            .ok_or_else(|| anyhow!("gradient `{name}` is not in the parameter index"))?;
+        let e = &self.idx.entries()[pi];
+        if grad.numel() != e.len {
+            return Err(anyhow!(
+                "gradient `{name}` has {} elements, index says {}",
+                grad.numel(),
+                e.len
+            ));
+        }
+        let nb = self.buckets.len();
+        let b = self.param_bucket[pi];
+        let bk = &self.buckets[b];
+        let cell = &self.remaining[shard * nb + b];
+        if cell.load(Ordering::Acquire) == 0 {
+            // SSA plans write each gradient slot once; a second delivery
+            // means the bucket may already be reducing — refuse before
+            // touching (possibly reclaimed) segment storage.
+            return Err(anyhow!("gradient `{name}` delivered twice for shard {shard}"));
+        }
+        {
+            let mut seg = self.segs[shard * nb + b].lock().unwrap();
+            seg[e.off - bk.range.start..e.off + e.len - bk.range.start]
+                .copy_from_slice(grad.data());
+        }
+        let left = cell.fetch_sub(1, Ordering::AcqRel);
+        if left == 0 {
+            return Err(anyhow!("gradient `{name}` delivered twice for shard {shard}"));
+        }
+        if left == 1 && self.arrived[b].fetch_add(1, Ordering::AcqRel) + 1 == self.shards {
+            // Last shard of bucket `b`: hand it to the reducer. A
+            // closed channel means the step already failed — drop it.
+            if let Some(tx) = self.tx.lock().unwrap().as_ref() {
+                let _ = tx.send(b);
+            }
+        }
+        Ok(())
+    }
+
+    /// Close the feed (compute finished or failed): the reducer drains
+    /// what is queued and exits.
+    fn close(&self) {
+        self.tx.lock().unwrap().take();
+    }
+
+    /// Take bucket `b`'s segments in global shard order (reducer side).
+    fn take_bucket(&self, b: usize) -> Vec<Box<[f32]>> {
+        let nb = self.buckets.len();
+        (0..self.shards)
+            .map(|s| {
+                let mut g = self.segs[s * nb + b].lock().unwrap();
+                std::mem::take(&mut *g)
+            })
+            .collect()
+    }
+}
+
+/// One shard's view of the board — what the executor's [`GradSink`]
+/// hook actually receives.
+struct ShardSink<'a> {
+    board: &'a BucketBoard<'a>,
+    shard: usize,
+}
+
+impl GradSink for ShardSink<'_> {
+    fn grad_ready(&self, name: &str, grad: &Tensor) -> Result<()> {
+        self.board.deliver(self.shard, name, grad)
+    }
+}
+
+/// Reducer loop: fold each ready bucket through the fixed-shape shard
+/// tree. Returns (per-bucket reduced segments, total reduce seconds,
+/// seconds that ran while compute was still in flight).
+fn reduce_worker(
+    board: &BucketBoard,
+    rx: mpsc::Receiver<usize>,
+    compute_done: &AtomicBool,
+) -> (Vec<Option<Box<[f32]>>>, f64, f64) {
+    let nb = board.buckets.len();
+    let mut out: Vec<Option<Box<[f32]>>> = (0..nb).map(|_| None).collect();
+    let (mut total, mut overlapped) = (0.0f64, 0.0f64);
+    while let Ok(b) = rx.recv() {
+        let t0 = std::time::Instant::now();
+        out[b] = tree_reduce_segments(board.take_bucket(b));
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        if !compute_done.load(Ordering::SeqCst) {
+            overlapped += dt;
+        }
+    }
+    (out, total, overlapped)
+}
+
+/// Loss/token record of one micro-step on the flat path (the gradients
+/// streamed to the board instead of riding the return value).
+pub struct FlatMicroOut {
+    pub loss_sum: f64,
+    pub ntok: f64,
+    /// Host seconds this shard's plan execution took on its replica.
+    pub host_seconds: f64,
+}
+
+/// Result of one flat train step's fan-out + overlapped reduce.
+pub struct FlatStepOut {
+    /// Per-micro-step records in global shard order.
+    pub micros: Vec<FlatMicroOut>,
+    /// Raw (un-normalized) gradient sums per bucket.
+    pub grads: FlatGrads,
+    /// Reducer-thread seconds spent folding buckets.
+    pub reduce_seconds: f64,
+    /// Portion of `reduce_seconds` that ran while replica compute was
+    /// still in flight — the overlap the bucketing buys.
+    pub reduce_overlap_seconds: f64,
+}
+
+/// The overlapped flat step: fan `replicas × accum` micro-batches over
+/// the worker pool with a streaming [`GradSink`] per shard, reduce each
+/// bucket on a dedicated thread as soon as every shard delivered it,
+/// and return the per-bucket raw sums (normalization and the optimizer
+/// run on the caller's thread — they need the global token count).
+///
+/// Each replica bank is primed bucket-by-bucket before that replica's
+/// first execution, so parameter uploads batch per bucket instead of
+/// trickling through first-touch binds.
+pub fn run_micro_steps_flat(
+    plan: &Plan,
+    engine: &Engine,
+    params: &FlatParams,
+    micro: &[Batch],
+    pipeline: &Pipeline,
+    mode: ExecMode,
+) -> Result<FlatStepOut> {
+    check_micro_len(micro, pipeline)?;
+    let idx = params.idx();
+    let buckets = params.buckets();
+    let shards = micro.len();
+    let (tx, rx) = mpsc::channel();
+    let board = BucketBoard::new(idx, buckets, shards, tx);
+    let compute_done = AtomicBool::new(false);
+
+    // Unblocks the reducer even if the compute fan-out unwinds (a
+    // panicking sequential-executor step): without this the scope
+    // would join a reducer forever blocked on an open channel.
+    struct CloseOnDrop<'a, 'b>(&'a BucketBoard<'b>);
+    impl Drop for CloseOnDrop<'_, '_> {
+        fn drop(&mut self) {
+            self.0.close();
+        }
+    }
+
+    let mut reducer_out = None;
+    let mut exec_out: Option<Result<Vec<FlatMicroOut>>> = None;
+    std::thread::scope(|scope| {
+        let reducer = scope.spawn(|| reduce_worker(&board, rx, &compute_done));
+        let _close_guard = CloseOnDrop(&board);
+        let res = run_sharded(pipeline.replicas(), shards, |worker, j| {
+            let bank = &pipeline.banks()[worker];
+            if j == worker {
+                // This replica's first shard: batch-upload the bank.
+                bank.prime_flat(engine, params)?;
+            }
+            let sink = ShardSink { board: &board, shard: j };
+            let opts = ExecOptions { mode, bank: Some(bank), grad_sink: Some(&sink) };
+            let t0 = std::time::Instant::now();
+            let out = execute_with(plan, engine, params.map(), &micro[j], &opts)?;
+            Ok(FlatMicroOut {
+                loss_sum: out.loss_sum,
+                ntok: out.ntok,
+                host_seconds: t0.elapsed().as_secs_f64(),
+            })
+        });
+        compute_done.store(true, Ordering::SeqCst);
+        board.close();
+        reducer_out = reducer.join().ok();
+        exec_out = Some(res);
+    });
+    let micros = exec_out.expect("scope ran")?;
+    let (reduced, reduce_seconds, reduce_overlap_seconds) =
+        reducer_out.ok_or_else(|| anyhow!("gradient reducer thread panicked"))?;
+    let mut segs = Vec::with_capacity(reduced.len());
+    for (b, s) in reduced.into_iter().enumerate() {
+        segs.push(s.ok_or_else(|| {
+            anyhow!("bucket {b} never completed: plan gradient outputs do not cover the index")
+        })?);
+    }
+    let grads = FlatGrads::new(idx.clone(), buckets.clone(), segs);
+    Ok(FlatStepOut { micros, grads, reduce_seconds, reduce_overlap_seconds })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
 
     fn gmap(vals: &[f32]) -> BTreeMap<String, Tensor> {
         let mut m = BTreeMap::new();
@@ -196,6 +500,72 @@ mod tests {
         odd.insert("other".to_string(), Tensor::new(vec![1], vec![1.0]));
         assert!(tree_reduce_grads(vec![gmap(&[1.0]), odd]).is_err());
         assert!(tree_reduce_grads(Vec::new()).is_err());
+    }
+
+    /// The segment tree and the map tree are the same tree: identical
+    /// bits for every shard count, including the ill-conditioned values
+    /// where fold order shows.
+    #[test]
+    fn segment_tree_matches_map_tree_bitwise() {
+        let mut rng = Rng::new(9);
+        for shards in [1usize, 2, 3, 4, 5, 8] {
+            let parts: Vec<Vec<f32>> = (0..shards)
+                .map(|_| (0..17).map(|_| rng.uniform(1.0e6)).collect())
+                .collect();
+            let map_out =
+                tree_reduce_grads(parts.iter().map(|p| gmap(p)).collect()).unwrap();
+            let seg_out = tree_reduce_segments(
+                parts.iter().map(|p| p.clone().into_boxed_slice()).collect(),
+            )
+            .unwrap();
+            for (i, (x, y)) in map_out["g"].data().iter().zip(seg_out.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "shards={shards} [{i}]");
+            }
+        }
+        assert!(tree_reduce_segments(Vec::new()).is_none());
+    }
+
+    /// Engine-free board exercise: deliveries in arbitrary order
+    /// complete buckets exactly when the last shard's last parameter
+    /// lands, and the reduced segments equal the shard sums.
+    #[test]
+    fn bucket_board_completes_and_reduces() {
+        let mut params = BTreeMap::new();
+        params.insert("a".to_string(), Tensor::new(vec![2], vec![0.0; 2]));
+        params.insert("b".to_string(), Tensor::new(vec![3], vec![0.0; 3]));
+        params.insert("c".to_string(), Tensor::new(vec![1], vec![0.0]));
+        let idx = SlabIndex::from_map(&params);
+        let buckets = idx.buckets(12); // {a+b}, {c}
+        assert_eq!(buckets.len(), 2);
+        let shards = 3;
+        let (tx, rx) = mpsc::channel();
+        let board = BucketBoard::new(&idx, &buckets, shards, tx);
+
+        let g = |v: f32, n: usize| Tensor::new(vec![n], vec![v; n]);
+        // Interleave shards; bucket 1 ({c}) completes before bucket 0.
+        for s in 0..shards {
+            board.deliver(s, "c", &g(s as f32 + 1.0, 1)).unwrap();
+        }
+        assert_eq!(rx.try_recv().unwrap(), 1);
+        for s in [2usize, 0, 1] {
+            board.deliver(s, "a", &g(10.0 * (s as f32 + 1.0), 2)).unwrap();
+        }
+        assert!(rx.try_recv().is_err(), "bucket 0 still missing `b`");
+        for s in 0..shards {
+            board.deliver(s, "b", &g(100.0 * (s as f32 + 1.0), 3)).unwrap();
+        }
+        assert_eq!(rx.try_recv().unwrap(), 0);
+
+        let b1 = tree_reduce_segments(board.take_bucket(1)).unwrap();
+        assert_eq!(&*b1, &[6.0]); // 1 + 2 + 3
+        let b0 = tree_reduce_segments(board.take_bucket(0)).unwrap();
+        assert_eq!(&*b0, &[60.0, 60.0, 600.0, 600.0, 600.0]);
+
+        // Error paths: unknown name, wrong size, duplicate delivery.
+        assert!(board.deliver(0, "zz", &g(1.0, 1)).is_err());
+        assert!(board.deliver(0, "a", &g(1.0, 3)).is_err());
+        let err = board.deliver(0, "a", &g(1.0, 2)).unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
     }
 
     #[test]

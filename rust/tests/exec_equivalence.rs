@@ -99,7 +99,7 @@ fn assert_bitwise(label: &str, a: &StepOut, b: &StepOut) {
 }
 
 fn run(plan: &Plan, e: &Engine, params: &BTreeMap<String, Tensor>, batch: &Batch, mode: ExecMode, bank: Option<&ParamBank>) -> StepOut {
-    execute_with(plan, e, params, batch, &ExecOptions { mode, bank })
+    execute_with(plan, e, params, batch, &ExecOptions { mode, bank, ..Default::default() })
         .unwrap_or_else(|err| panic!("{mode:?}: {err:#}"))
 }
 

@@ -2,14 +2,17 @@
 //! same ordered list of micro-batch row-shards), the final parameters
 //! after N optimizer steps must be **bitwise-identical** no matter how
 //! the shards are spread over replicas, how many accumulation
-//! micro-steps each replica runs, or which plan executor
-//! (sequential/parallel) walks the graph. The pipeline's fixed-order
-//! gradient tree and the per-param-sharded optimizer make this hold by
-//! construction; this suite is the gate (requires `make artifacts`).
+//! micro-steps each replica runs, which plan executor
+//! (sequential/parallel) walks the graph — or which step engine runs
+//! the update: the flat-slab overlapped bucketed reduce (the default)
+//! vs the map-based PR-4 reference, at every bucket size. The
+//! fixed-shape gradient tree, the index-only bucket boundaries and the
+//! partition-insensitive optimizer make this hold by construction;
+//! this suite is the gate (requires `make artifacts`).
 //!
 //! Also here: optimizer-trait parity against the seed `Optimizer`
 //! numerics on the quadratic fixtures (engine-free), and exact
-//! checkpoint-v2 resume.
+//! checkpoint-v2 resume through the slab round-trip.
 
 use hybridnmt::config::{
     DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig,
@@ -20,8 +23,11 @@ use hybridnmt::parallel::Batch;
 use hybridnmt::rng::Rng;
 use hybridnmt::runtime::Engine;
 use hybridnmt::tensor::{ITensor, Tensor};
-use hybridnmt::train::Trainer;
+use hybridnmt::train::{StepMode, Trainer};
 use std::collections::BTreeMap;
+
+/// 256 KiB — the default bucket size, named for the bucket-size sweep.
+const KIB256: usize = 256 * 1024;
 
 fn engine() -> Engine {
     Engine::load("artifacts", "tiny").expect("run `make artifacts` first")
@@ -83,7 +89,38 @@ fn test_exp(e: &Engine) -> Experiment {
 }
 
 /// Train `steps` optimizer steps over `pool` (consumed in order,
-/// `replicas × accum` shards per step) and return the final params.
+/// `replicas × accum` shards per step) with the given step engine and
+/// bucket size, and return the final params.
+#[allow(clippy::too_many_arguments)]
+fn train_mode_config(
+    e: &Engine,
+    pool: &[Batch],
+    steps: usize,
+    replicas: usize,
+    accum: usize,
+    sequential: bool,
+    mode: StepMode,
+    bucket_bytes: usize,
+) -> BTreeMap<String, Tensor> {
+    let exp = test_exp(e);
+    let mut tr = Trainer::new(e, &exp).unwrap();
+    tr.sequential = sequential;
+    tr.set_step_mode(mode);
+    tr.set_bucket_bytes(bucket_bytes);
+    tr.set_pipeline(replicas, accum);
+    let per = tr.pipeline.micro_per_step();
+    assert_eq!(per, replicas * accum);
+    assert!(pool.len() >= steps * per, "pool too small");
+    for s in 0..steps {
+        tr.train_step_micro(&pool[s * per..(s + 1) * per]).unwrap_or_else(|err| {
+            panic!("{replicas}x{accum} {mode:?}/bb={bucket_bytes} step {s}: {err:#}")
+        });
+    }
+    assert_eq!(tr.steps_done(), steps);
+    tr.params().clone()
+}
+
+/// Default-engine shorthand (flat slabs at the default bucket size).
 fn train_config(
     e: &Engine,
     pool: &[Batch],
@@ -92,19 +129,7 @@ fn train_config(
     accum: usize,
     sequential: bool,
 ) -> BTreeMap<String, Tensor> {
-    let exp = test_exp(e);
-    let mut tr = Trainer::new(e, &exp).unwrap();
-    tr.sequential = sequential;
-    tr.set_pipeline(replicas, accum);
-    let per = tr.pipeline.micro_per_step();
-    assert_eq!(per, replicas * accum);
-    assert!(pool.len() >= steps * per, "pool too small");
-    for s in 0..steps {
-        tr.train_step_micro(&pool[s * per..(s + 1) * per])
-            .unwrap_or_else(|err| panic!("{replicas}x{accum} step {s}: {err:#}"));
-    }
-    assert_eq!(tr.steps_done(), steps);
-    tr.params().clone()
+    train_mode_config(e, pool, steps, replicas, accum, sequential, StepMode::Flat, KIB256)
 }
 
 fn assert_params_bitwise(label: &str, a: &BTreeMap<String, Tensor>, b: &BTreeMap<String, Tensor>) {
@@ -172,6 +197,52 @@ fn single_replica_single_accum_matches_across_executors() {
     assert_params_bitwise("1x1 seq vs par", &seq, &par);
 }
 
+/// The tentpole acceptance gate: the flat-slab overlapped bucketed
+/// step reproduces the PR-4 map-based step **bitwise** at every
+/// replicas {1,2,4} × accum {1,4} spread and every bucket size —
+/// one-param buckets (bucket_bytes=1 closes a bucket after each
+/// parameter), the 256 KiB default, and one giant bucket. Bucket
+/// boundaries depend only on the index, the per-bucket shard tree is
+/// the same tree, and the slab optimizer is the same per-element math,
+/// so the bits cannot differ.
+#[test]
+fn flat_bucketed_step_matches_map_step_bitwise() {
+    let e = engine();
+    let d = e.dims().clone();
+    let steps = 2;
+    // Big enough for the largest config (4 replicas × 4 accum).
+    let pool: Vec<Batch> =
+        (0..steps * 16).map(|j| random_batch(&d, 600 + j as u64)).collect();
+    for (replicas, accum) in [(1, 1), (2, 1), (4, 1), (1, 4), (2, 4), (4, 4)] {
+        let n = steps * replicas * accum;
+        let map_ref = train_mode_config(
+            &e, &pool[..n], steps, replicas, accum, false, StepMode::Map, KIB256,
+        );
+        for bucket_bytes in [1usize, KIB256, usize::MAX] {
+            let flat = train_mode_config(
+                &e, &pool[..n], steps, replicas, accum, false, StepMode::Flat, bucket_bytes,
+            );
+            assert_params_bitwise(
+                &format!("{replicas}x{accum} flat(bb={bucket_bytes}) vs map"),
+                &map_ref,
+                &flat,
+            );
+        }
+    }
+}
+
+/// The flat engine under the sequential executor still streams
+/// gradients through the board/reducer — same bits as everything else.
+#[test]
+fn flat_step_sequential_executor_matches_map() {
+    let e = engine();
+    let d = e.dims().clone();
+    let pool: Vec<Batch> = (0..4).map(|j| random_batch(&d, 700 + j as u64)).collect();
+    let map_ref = train_mode_config(&e, &pool, 2, 2, 1, true, StepMode::Map, KIB256);
+    let flat = train_mode_config(&e, &pool, 2, 2, 1, true, StepMode::Flat, KIB256);
+    assert_params_bitwise("sequential flat vs map", &map_ref, &flat);
+}
+
 /// A mis-sized micro list is an error, not a panic or a silent
 /// truncation.
 #[test]
@@ -230,6 +301,49 @@ fn v2_resume_is_bitwise_exact() {
     assert_eq!(ev_full.dev_ppl.to_bits(), ev_res.dev_ppl.to_bits(), "dev ppl");
     assert_eq!(ev_full.lr.to_bits(), ev_res.lr.to_bits(), "post-eval LR");
     assert_eq!(ev_full.sim_hours.to_bits(), ev_res.sim_hours.to_bits(), "sim clock");
+}
+
+/// Checkpoint v2 through the slab round-trip, across engines: a
+/// checkpoint saved by the flat engine (slab params, slab-backed Adam
+/// moments) resumes a **map**-engine trainer — and vice versa — and
+/// both continuations land on the same bits as never stopping. The
+/// on-disk bytes cannot depend on the storage the state lived in.
+#[test]
+fn v2_checkpoint_round_trips_across_step_engines() {
+    let e = engine();
+    let d = e.dims().clone();
+    let exp = test_exp(&e);
+    let pool: Vec<Batch> = (0..4).map(|j| random_batch(&d, 800 + j as u64)).collect();
+    let dir = std::env::temp_dir().join("hynmt_train_eq");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for (save_mode, resume_mode) in
+        [(StepMode::Flat, StepMode::Map), (StepMode::Map, StepMode::Flat)]
+    {
+        let mut full = Trainer::new(&e, &exp).unwrap();
+        full.set_step_mode(save_mode);
+        for b in &pool[..2] {
+            full.train_step(b).unwrap();
+        }
+        let path = dir.join(format!("xresume_{save_mode:?}.bin"));
+        full.save_checkpoint(&path).unwrap();
+        for b in &pool[2..] {
+            full.train_step(b).unwrap();
+        }
+
+        let mut resumed = Trainer::new(&e, &exp).unwrap();
+        resumed.set_step_mode(resume_mode);
+        resumed.resume(&path).unwrap();
+        assert_eq!(resumed.steps_done(), 2);
+        for b in &pool[2..] {
+            resumed.train_step(b).unwrap();
+        }
+        assert_params_bitwise(
+            &format!("saved by {save_mode:?}, resumed by {resume_mode:?}"),
+            full.params(),
+            resumed.params(),
+        );
+    }
 }
 
 // --------------------------------------------------------------------------

@@ -1,8 +1,12 @@
 #!/bin/sh
-# Verification gate: build + tests + rustdoc + BENCH_*.json sanity.
+# Verification gate: lint + build + tests + rustdoc + BENCH_*.json
+# sanity.
 #
 #   ./scripts/verify.sh            # everything the machine can run
-#   SKIP_CARGO=1 ./scripts/verify.sh   # docs/bench-JSON checks only
+#   SKIP_CARGO=1 ./scripts/verify.sh   # lint + bench-JSON checks only
+#
+# The brace-balance lint stage needs only python3 and runs
+# unconditionally (also available standalone as `make lint`).
 #
 # The cargo stages run `cargo build --release`, `cargo test -q` (the
 # tier-1 gate) and `cargo doc --no-deps` with warnings denied, so docs
@@ -16,6 +20,16 @@ set -eu
 cd "$(dirname "$0")/.."
 
 fail=0
+
+# No-toolchain lint: structural brace/bracket/paren balance of every
+# rust source. Runs first and everywhere — including machines without
+# cargo — so a truncated edit can never land silently.
+echo "== brace-balance lint (scripts/brace_balance.py)"
+if python3 scripts/brace_balance.py rust/src rust/tests benches examples; then
+    :
+else
+    fail=1
+fi
 
 if [ "${SKIP_CARGO:-0}" != "1" ] && command -v cargo >/dev/null 2>&1; then
     echo "== cargo build --release"
@@ -46,13 +60,16 @@ if bad:
     raise SystemExit(f"{path}: non-numeric/non-finite entries: {bad[:5]}")
 if path.endswith("BENCH_train.json"):
     # The training benchmark's fixed row schema: every row prefix
-    # (r<replicas>.accum<K>) must report token throughput, the
-    # per-step wall time, the reduce/apply/stall phase breakdown and
-    # the per-step parameter-upload count. A train-bench run that
-    # stopped writing any of these is a regression, not a formatting
-    # choice.
-    required = ["tok_per_s", "step_ms", "reduce_ms", "apply_ms",
-                "stall_ms", "uploads_per_step"]
+    # (r<replicas>.accum<K> for the flat engine, r<R>.accum<K>.map for
+    # the map reference) must report token throughput, the per-step
+    # wall time, the reduce/apply/stall phase breakdown, the per-step
+    # parameter-upload count, the share of the reduce hidden under
+    # compute (overlap_pct) and the f32 allocation churn
+    # (allocs_per_step). A train-bench run that stopped writing any of
+    # these is a regression, not a formatting choice.
+    required = ["tok_per_s", "step_ms", "reduce_ms", "overlap_pct",
+                "apply_ms", "stall_ms", "uploads_per_step",
+                "allocs_per_step"]
     prefixes = {k.rsplit(".", 1)[0] for k in data}
     if not prefixes:
         raise SystemExit(f"{path}: no train rows")
