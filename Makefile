@@ -1,6 +1,6 @@
 # hybridnmt build/verify entry points (see README.md).
 
-.PHONY: artifacts verify lint doc clean-artifacts serve-bench train-bench
+.PHONY: artifacts verify lint doc clean-artifacts serve-bench train-bench crash-test
 
 # AOT-compile the JAX model to HLO-text artifacts + manifests.
 # aot.py uses package-relative imports, so run it as a module from
@@ -35,6 +35,19 @@ serve-bench:
 # (including the train-row schema).
 train-bench:
 	cargo run --release -- train-bench --model tiny --steps 8 --replicas 4 --accum 4
+
+# Kill-mid-write crash recovery: the async-checkpoint fault-injection
+# suite (backend dies mid-publish → clean error, `latest` pointer
+# survives, resume is bitwise-exact) plus the checkpoint truncation/
+# corruption property sweeps. Needs `make artifacts` first; degrades to
+# a notice on machines without the rust toolchain.
+crash-test:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo test --test crash_recovery -- --nocapture && \
+		cargo test --test property checkpoint; \
+	else \
+		echo "crash-test: cargo not available, skipping"; \
+	fi
 
 doc:
 	cargo doc --no-deps

@@ -21,6 +21,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod storage;
 pub mod tensor;
 pub mod train;
 pub mod util;

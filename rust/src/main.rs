@@ -19,8 +19,10 @@ use hybridnmt::report;
 use hybridnmt::runtime::{Engine, ParamBank};
 use hybridnmt::serve::{drive_arrivals, poisson_arrivals, run_server, ServeOptions};
 use hybridnmt::sim::simulate;
+use hybridnmt::storage::{local::write_file_atomic, LocalDir, Retrying, RetryPolicy};
 use hybridnmt::train::{checkpoint, init_params, StepMode, Trainer};
 use hybridnmt::util::per_sec;
+use std::sync::Arc;
 
 struct Args {
     cmd: String,
@@ -75,13 +77,21 @@ COMMANDS
              [--sentences N] [--seed N] [--ckpt out.bin] [--config file.json]
              [--replicas R (data-parallel train-step fan-out)]
              [--accum K (gradient-accumulation micro-steps per replica)]
-             [--resume ck.bin (restore params + optimizer state + step count)]
+             [--resume ck.bin | --resume DIR (a checkpoint directory:
+             restores the newest durable checkpoint via its `latest`
+             pointer)]
+             [--ckpt-dir DIR (async fault-tolerant checkpointing: a
+             background writer publishes v2 checkpoints to DIR via
+             atomic write + `latest` pointer, off the training thread)]
+             [--checkpoint-every N (snapshot cadence in steps, default 25)]
              [--sequential (disable the parallel plan executor)]
              [--bucket-kib N (flat-slab bucket size, default 256)]
              [--map-step (PR-4 map-based step engine instead of the
              overlapped flat-slab engine)]
   train-bench  [--model tiny] [--steps N] [--replicas R] [--accum K]
              [--strategy S] [--sentences N] [--sequential] [--bucket-kib N]
+             [--checkpoint-every N (default 2; async-checkpoint cost is
+             part of the sweep: checkpoint_stall_ms ~ 0 is the claim)]
              (training-throughput sweep over replicas 1..R x accum {1, K},
              each config on the flat-slab engine AND the map reference;
              writes BENCH_train.json + results/train_bench.{txt,csv})
@@ -248,8 +258,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     let replicas = args.usize("replicas", 1)?.max(1);
     let accum = args.usize("accum", 1)?.max(1);
     trainer.set_pipeline(replicas, accum);
+    if let Some(dir) = args.get("ckpt-dir") {
+        let every = args.usize("checkpoint-every", 25)?.max(1);
+        let store = Retrying::new(LocalDir::new(dir)?, RetryPolicy::default());
+        trainer.enable_async_checkpoint(Arc::new(store), every);
+        println!("async checkpointing to {dir}/ every {every} steps (latest-pointer protocol)");
+    }
     let resumed_at = if let Some(path) = args.get("resume") {
-        trainer.resume(std::path::Path::new(path))?;
+        let p = std::path::Path::new(path);
+        if p.is_dir() {
+            // A checkpoint *directory*: resolve its `latest` pointer to
+            // the newest durable checkpoint — torn/unreferenced objects
+            // from a crashed writer are never considered.
+            let store = Retrying::new(LocalDir::new(p)?, RetryPolicy::default());
+            let key = trainer.resume_latest(&store)?.ok_or_else(|| {
+                anyhow!("--resume {path}: directory has no published checkpoint")
+            })?;
+            println!("resolved {path}/latest -> {key}");
+        } else {
+            trainer.resume(p)?;
+        }
         // Fast-forward the deterministic batch stream past the shards
         // the checkpointed run already consumed (the checkpoint records
         // the count, so this is correct even if this run picks a
@@ -352,9 +380,14 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
     // agree bitwise (same shards, same fixed-order tree) — including
     // flat vs map rows of the same config.
     let mut loss_gate: std::collections::BTreeMap<usize, f64> = std::collections::BTreeMap::new();
+    let ckpt_every = args.usize("checkpoint-every", 2)?.max(1);
     for &replicas in &replica_counts {
         for &accum in &accums {
             for mode in [StepMode::Flat, StepMode::Map] {
+                let label = match mode {
+                    StepMode::Flat => "flat",
+                    StepMode::Map => "map",
+                };
                 let mut batcher = report::make_batcher(&exp, &corpus)?;
                 let mut trainer = Trainer::new(&engine, &exp)?;
                 trainer.sequential = args.get("sequential").is_some();
@@ -366,9 +399,20 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                 let warm: Vec<_> = (0..per_step).map(|_| batcher.next_train()).collect();
                 trainer.train_step_micro(&warm)?;
                 let uploads0 = trainer.pipeline.upload_count();
+                // Async checkpointing is part of the timed sweep: a real
+                // LocalDir backend (fsync + rename per publish) so the
+                // ~0-stall claim is measured against actual disk I/O.
+                let ck_dir = std::env::temp_dir()
+                    .join(format!("hynmt_train_bench_ckpt_r{replicas}_a{accum}_{label}"));
+                let _ = std::fs::remove_dir_all(&ck_dir);
+                trainer.enable_async_checkpoint(
+                    Arc::new(Retrying::new(LocalDir::new(&ck_dir)?, RetryPolicy::default())),
+                    ckpt_every,
+                );
 
                 let (mut reduce_s, mut overlap_s, mut apply_s, mut stall_s) =
                     (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                let mut ckpt_stall = 0.0f64;
                 let mut tokens = 0.0f64;
                 let mut allocs = 0u64;
                 let mut first_loss = f64::NAN;
@@ -380,6 +424,8 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                             (0..per_step).map(|_| pre.next()).collect::<Result<_>>()?;
                         let stall = pre.take_stall();
                         let st = trainer.train_step_micro(&micro)?;
+                        let (ck_stall, _) = trainer.tick_checkpoint()?;
+                        ckpt_stall += ck_stall;
                         reduce_s += st.reduce_seconds;
                         overlap_s += st.reduce_overlap_seconds;
                         apply_s += st.apply_seconds;
@@ -394,10 +440,12 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                     Ok(())
                 })?;
                 let wall = t0.elapsed().as_secs_f64();
-                let label = match mode {
-                    StepMode::Flat => "flat",
-                    StepMode::Map => "map",
-                };
+                // The final blocking flush sits outside the timed loop —
+                // steady-state stall is the claim, not shutdown latency.
+                let ck = trainer.finalize_checkpoints()?.unwrap_or_default();
+                let _ = std::fs::remove_dir_all(&ck_dir);
+                let ckpt_bytes_per_s =
+                    if ck.write_seconds > 0.0 { ck.bytes as f64 / ck.write_seconds } else { 0.0 };
                 match loss_gate.get(&per_step) {
                     Some(expect) if expect.to_bits() != first_loss.to_bits() => {
                         return Err(anyhow!(
@@ -416,14 +464,18 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                     if reduce_s > 0.0 { 100.0 * overlap_s / reduce_s } else { 0.0 };
                 println!(
                     "replicas {replicas} x accum {accum} [{label}]: {:.1} ms/step \
-                     (reduce {:.1} [{overlap_pct:.0}% hidden] apply {:.1} stall {:.1}), \
-                     {:.1} src tok/s, {:.0} allocs/step",
+                     (reduce {:.1} [{overlap_pct:.0}% hidden] apply {:.1} stall {:.1} \
+                     ck-stall {:.2}), {:.1} src tok/s, {:.0} allocs/step, \
+                     {} ckpt ({:.1} MB/s)",
                     wall / sn * 1e3,
                     reduce_s / sn * 1e3,
                     apply_s / sn * 1e3,
                     stall_s / sn * 1e3,
+                    ckpt_stall / sn * 1e3,
                     per_sec(tokens, wall),
                     allocs as f64 / sn,
+                    ck.written,
+                    ckpt_bytes_per_s / 1e6,
                 );
                 rows.push(report::TrainBenchRow {
                     replicas,
@@ -440,6 +492,8 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                     loss_per_tok: last_loss,
                     uploads_per_step: (trainer.pipeline.upload_count() - uploads0) as f64 / sn,
                     allocs_per_step: allocs as f64 / sn,
+                    ckpt_stall_s: ckpt_stall / sn,
+                    ckpt_bytes_per_s,
                 });
             }
         }
@@ -686,7 +740,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         for e in &events {
             csv.push_str(&format!("{},{},{:.9},{:.9},{}\n", e.step, e.device, e.start, e.end, e.kind));
         }
-        std::fs::write(path, csv)?;
+        write_file_atomic(std::path::Path::new(path), csv.as_bytes())?;
         println!("schedule trace ({} events) written to {path}", events.len());
     }
     let sim = simulate(&plan, &hw);

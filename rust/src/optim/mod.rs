@@ -26,7 +26,7 @@
 
 use crate::config::TrainConfig;
 use crate::tensor::flat::{split_buckets_mut, FlatGrads, FlatParams, SlabIndex};
-use crate::tensor::{sq_norm_slice, Tensor};
+use crate::tensor::{note_alloc, sq_norm_slice, Tensor};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -131,6 +131,56 @@ impl OptimStateView<'_> {
     }
 }
 
+/// Moment storage captured by [`Optimizer::snapshot`]: what the async
+/// checkpointer hands to its background writer thread.
+///
+/// Slab-backed moments are captured as `Arc` clones — O(1), no copy;
+/// the optimizer's *next* update copy-on-writes the slabs it still
+/// holds, so the snapshot stays frozen while training runs ahead.
+/// Map-backed rows (the reference engine) are deep-copied.
+#[derive(Clone)]
+pub enum MomentSnapshot {
+    /// Deep-copied per-name rows.
+    Rows {
+        m: BTreeMap<String, Vec<f32>>,
+        v: BTreeMap<String, Vec<f32>>,
+    },
+    /// Shared (frozen) flat slabs.
+    Slab {
+        idx: Arc<SlabIndex>,
+        m: Arc<Vec<f32>>,
+        v: Arc<Vec<f32>>,
+    },
+}
+
+/// An immutable, thread-transferable snapshot of the full optimizer
+/// state at a step boundary. [`OptimSnapshot::view`] re-borrows it as
+/// the same [`OptimStateView`] the synchronous save path consumes, so
+/// the serialized bytes cannot depend on how the snapshot was taken.
+#[derive(Clone)]
+pub struct OptimSnapshot {
+    pub kind: String,
+    pub lr: f64,
+    pub t: u64,
+    pub rows: MomentSnapshot,
+}
+
+impl OptimSnapshot {
+    pub fn view(&self) -> OptimStateView<'_> {
+        OptimStateView {
+            kind: &self.kind,
+            lr: self.lr,
+            t: self.t,
+            rows: match &self.rows {
+                MomentSnapshot::Rows { m, v } => MomentRowsView::Maps { m, v },
+                MomentSnapshot::Slab { idx, m, v } => {
+                    MomentRowsView::Slab { idx: idx.as_ref(), m: m.as_slice(), v: v.as_slice() }
+                }
+            },
+        }
+    }
+}
+
 /// An optimizer over a named parameter set.
 pub trait Optimizer: Send {
     /// `"adam"` or `"sgd"` (checkpoint tag, reports).
@@ -189,6 +239,24 @@ pub trait Optimizer: Send {
     /// Owned snapshot (tests, callers that outlive the optimizer).
     fn export_state(&self) -> OptimState {
         self.state_view().to_owned()
+    }
+
+    /// Frozen snapshot for the async checkpointer's background writer.
+    /// The default deep-copies through [`Optimizer::state_view`];
+    /// slab-backed implementations override it with O(1) `Arc` clones
+    /// and copy-on-write their live slabs on the next update, so taking
+    /// a snapshot never stalls the step for a model-sized copy.
+    fn snapshot(&self) -> OptimSnapshot {
+        let v = self.state_view();
+        OptimSnapshot {
+            kind: v.kind.to_string(),
+            lr: v.lr,
+            t: v.t,
+            rows: MomentSnapshot::Rows {
+                m: v.rows.iter_m().map(|(n, r)| (n.to_string(), r.to_vec())).collect(),
+                v: v.rows.iter_v().map(|(n, r)| (n.to_string(), r.to_vec())).collect(),
+            },
+        }
     }
 
     /// Restore a snapshot, *moving* the moment rows in (no model-sized
@@ -320,6 +388,12 @@ fn apply_sharded<T: Send>(items: Vec<T>, workers: usize, f: impl Fn(T) + Sync) {
 /// flat slabs sharing the parameter index (slab path). The two forms
 /// hold the same bytes; conversion happens only when the trainer
 /// switches step modes or resumes a checkpoint.
+///
+/// The slabs sit behind `Arc` purely for [`Optimizer::snapshot`]: a
+/// snapshot bumps the refcount, and the next `slab_on` sees the shared
+/// slab and `Arc::make_mut`-copies it before mutating (copy-on-write).
+/// With no snapshot outstanding — the steady state — `make_mut` is a
+/// refcount check, so the hot update loop is untouched.
 enum Moments {
     Rows {
         m: BTreeMap<String, Vec<f32>>,
@@ -327,8 +401,8 @@ enum Moments {
     },
     Slab {
         idx: Arc<SlabIndex>,
-        m: Vec<f32>,
-        v: Vec<f32>,
+        m: Arc<Vec<f32>>,
+        v: Arc<Vec<f32>>,
     },
 }
 
@@ -347,7 +421,7 @@ impl Moments {
                     .map(|e| (e.name.clone(), s[e.off..e.off + e.len].to_vec()))
                     .collect()
             };
-            let (mr, vr) = (to_rows(m), to_rows(v));
+            let (mr, vr) = (to_rows(m.as_slice()), to_rows(v.as_slice()));
             *self = Moments::Rows { m: mr, v: vr };
         }
         match self {
@@ -391,10 +465,22 @@ impl Moments {
                     }
                 }
             }
-            *self = Moments::Slab { idx: idx.clone(), m: ms, v: vs };
+            *self = Moments::Slab { idx: idx.clone(), m: Arc::new(ms), v: Arc::new(vs) };
         }
         match self {
-            Moments::Slab { m, v, .. } => Ok((m, v)),
+            Moments::Slab { m, v, .. } => {
+                // Copy-on-write: an outstanding checkpoint snapshot
+                // shares these Arcs; mutate a private copy and leave
+                // the snapshot frozen. Steady state (no snapshot) is
+                // just the refcount check.
+                if Arc::strong_count(m) > 1 {
+                    note_alloc();
+                }
+                if Arc::strong_count(v) > 1 {
+                    note_alloc();
+                }
+                Ok((Arc::make_mut(m), Arc::make_mut(v)))
+            }
             Moments::Rows { .. } => unreachable!("converted above"),
         }
     }
@@ -551,6 +637,19 @@ impl Optimizer for Adam {
 
     fn state_view(&self) -> OptimStateView<'_> {
         OptimStateView { kind: "adam", lr: self.lr, t: self.t, rows: self.moments.view() }
+    }
+
+    fn snapshot(&self) -> OptimSnapshot {
+        let rows = match &self.moments {
+            // Map engine: deep copy (reference path, not perf-relevant).
+            Moments::Rows { m, v } => MomentSnapshot::Rows { m: m.clone(), v: v.clone() },
+            // Slab engine: O(1) Arc bumps; the next `apply_flat`
+            // copy-on-writes, so this never stalls the step.
+            Moments::Slab { idx, m, v } => {
+                MomentSnapshot::Slab { idx: idx.clone(), m: m.clone(), v: v.clone() }
+            }
+        };
+        OptimSnapshot { kind: "adam".to_string(), lr: self.lr, t: self.t, rows }
     }
 
     fn import_state(&mut self, state: OptimState) -> Result<()> {
@@ -984,6 +1083,41 @@ mod tests {
         assert_eq!(params["w"].data(), p2["w"].data());
         // Kind mismatch is an error.
         assert!(Sgd::new(&cfg).import_state(snap).is_err());
+    }
+
+    /// A snapshot taken at a step boundary must stay frozen while the
+    /// optimizer keeps stepping (copy-on-write on the slab path), and
+    /// must serialize to the same rows `state_view` would have.
+    #[test]
+    fn snapshot_is_frozen_against_later_updates() {
+        let cfg = TrainConfig { sgd: false, lr: 0.05, clip_norm: 0.0, ..Default::default() };
+        let mut rng = crate::rng::Rng::new(23);
+        let init = mk_params(&mut rng);
+        let grads = mk_params(&mut rng);
+        let mut opt = build(&cfg);
+        let mut fp = FlatParams::from_map(&init, 16);
+        let fg = flat_grads_of(&fp, &grads);
+        opt.apply_flat(&mut fp, &fg, 1).unwrap();
+
+        let snap = opt.snapshot();
+        let at_snap = snap.view().to_owned();
+        assert_eq!(at_snap, opt.export_state(), "snapshot view == live view at capture");
+
+        // Step again: the live state moves, the snapshot must not.
+        let fg = flat_grads_of(&fp, &grads);
+        opt.apply_flat(&mut fp, &fg, 1).unwrap();
+        assert_eq!(snap.view().to_owned(), at_snap, "snapshot mutated by a later step");
+        assert_ne!(opt.export_state(), at_snap, "optimizer did not advance");
+
+        // And the default (deep-copy) snapshot path agrees on the map
+        // engine.
+        let mut opt = build(&cfg);
+        let mut params = init.clone();
+        opt.apply(&mut params, &grads, 1).unwrap();
+        let snap = opt.snapshot();
+        let at_snap = snap.view().to_owned();
+        opt.apply(&mut params, &grads, 1).unwrap();
+        assert_eq!(snap.view().to_owned(), at_snap);
     }
 
     /// Slab-backed state exports the same rows a map-backed one does

@@ -14,6 +14,7 @@ use crate::parallel::build_plan;
 use crate::runtime::{Engine, ParamBank};
 use crate::serve::ServeStats;
 use crate::sim::simulate;
+use crate::storage::local::write_file_atomic;
 use crate::tensor::Tensor;
 use crate::train::Trainer;
 use crate::util::json::Json;
@@ -49,7 +50,27 @@ pub fn make_batcher(exp: &Experiment, corpus: &Corpus) -> Result<Batcher> {
 
 fn write_results(name: &str, content: &str) {
     let _ = std::fs::create_dir_all("results");
-    let _ = std::fs::write(format!("results/{name}"), content);
+    // Atomic temp + rename: a reader (or a crash) never sees a
+    // half-written report file.
+    let path = std::path::Path::new("results").join(name);
+    let _ = write_file_atomic(&path, content.as_bytes());
+}
+
+/// Atomically merge `bench` into the flat name→number perf-tracking
+/// file at `path` (all `BENCH_*.json` writers go through here, so
+/// repeated sweeps accumulate and a kill mid-write can never leave a
+/// torn JSON behind).
+fn merge_bench_json(path: &str, bench: BTreeMap<String, Json>) {
+    let mut all = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    all.extend(bench);
+    let _ = write_file_atomic(
+        std::path::Path::new(path),
+        Json::Obj(all).to_string().as_bytes(),
+    );
 }
 
 // ---------------------------------------------------------------- Table 1
@@ -674,13 +695,7 @@ pub fn decode_bench_table(rows: &[DecodeRow], sentences: usize) -> String {
     }
     // Merge into an existing BENCH_decode.json so sweeps over several
     // beams (benches/decode.rs) accumulate instead of clobbering.
-    let mut all = std::fs::read_to_string("BENCH_decode.json")
-        .ok()
-        .and_then(|t| Json::parse(&t).ok())
-        .and_then(|j| j.as_obj().cloned())
-        .unwrap_or_default();
-    all.extend(bench);
-    let _ = std::fs::write("BENCH_decode.json", Json::Obj(all).to_string());
+    merge_bench_json("BENCH_decode.json", bench);
     write_results("decode_bench.txt", &out);
     write_results("decode_bench.csv", &csv);
     out
@@ -803,13 +818,7 @@ pub fn serve_table(rows: &[ServeRow]) -> String {
         )
         .unwrap();
     }
-    let mut all = std::fs::read_to_string("BENCH_serve.json")
-        .ok()
-        .and_then(|t| Json::parse(&t).ok())
-        .and_then(|j| j.as_obj().cloned())
-        .unwrap_or_default();
-    all.extend(bench);
-    let _ = std::fs::write("BENCH_serve.json", Json::Obj(all).to_string());
+    merge_bench_json("BENCH_serve.json", bench);
     write_results("serve_bench.txt", &out);
     write_results("serve_bench.csv", &csv);
     out
@@ -853,6 +862,13 @@ pub struct TrainBenchRow {
     /// f32 buffer allocations per optimizer step (hot-path churn; the
     /// flat engine's headline reduction vs the map reference).
     pub allocs_per_step: f64,
+    /// Mean seconds per step the training thread stalled on async
+    /// checkpoint work (copy-on-write snapshot capture + non-blocking
+    /// hand-off; ~0 is the claim).
+    pub ckpt_stall_s: f64,
+    /// Background-writer checkpoint bandwidth over the timed window
+    /// (serialized bytes / writer seconds).
+    pub ckpt_bytes_per_s: f64,
 }
 
 /// Render the training-throughput sweep — replicas × accumulation vs
@@ -871,22 +887,24 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
     .unwrap();
     writeln!(
         out,
-        "{:<9} {:>6} {:>5} {:>7} {:>7}  {:>9} {:>9} {:>5} {:>9} {:>9}  {:>10} {:>9} {:>9} {:>9}",
+        "{:<9} {:>6} {:>5} {:>7} {:>7}  {:>9} {:>9} {:>5} {:>9} {:>9} {:>9}  {:>10} {:>9} {:>9} {:>9} {:>10}",
         "replicas", "accum", "mode", "steps", "gbatch", "step ms", "reduce ms", "ovl%",
-        "apply ms", "stall ms", "src tok/s", "loss/tok", "uploads", "allocs"
+        "apply ms", "stall ms", "ck-st ms", "src tok/s", "loss/tok", "uploads", "allocs",
+        "ckpt MB/s"
     )
     .unwrap();
     let mut csv = String::from(
         "replicas,accum,mode,steps,global_batch,step_ms,reduce_ms,overlap_pct,apply_ms,\
-         stall_ms,src_tok_per_s,loss_per_tok,uploads_per_step,allocs_per_step\n",
+         stall_ms,checkpoint_stall_ms,src_tok_per_s,loss_per_tok,uploads_per_step,\
+         allocs_per_step,checkpoint_bytes_per_s\n",
     );
     let mut bench: BTreeMap<String, Json> = BTreeMap::new();
     for r in rows {
         let mode = if r.flat { "flat" } else { "map" };
         writeln!(
             out,
-            "{:<9} {:>6} {:>5} {:>7} {:>7}  {:>9.1} {:>9.1} {:>5.1} {:>9.1} {:>9.1}  \
-             {:>10.1} {:>9.3} {:>9.1} {:>9.0}",
+            "{:<9} {:>6} {:>5} {:>7} {:>7}  {:>9.1} {:>9.1} {:>5.1} {:>9.1} {:>9.1} {:>9.2}  \
+             {:>10.1} {:>9.3} {:>9.1} {:>9.0} {:>10.1}",
             r.replicas,
             r.accum,
             mode,
@@ -897,15 +915,17 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             r.overlap_pct,
             r.apply_s * 1e3,
             r.stall_s * 1e3,
+            r.ckpt_stall_s * 1e3,
             r.src_tok_per_s,
             r.loss_per_tok,
             r.uploads_per_step,
             r.allocs_per_step,
+            r.ckpt_bytes_per_s / 1e6,
         )
         .unwrap();
         writeln!(
             csv,
-            "{},{},{},{},{},{:.3},{:.3},{:.2},{:.3},{:.3},{:.2},{:.5},{:.1},{:.1}",
+            "{},{},{},{},{},{:.3},{:.3},{:.2},{:.3},{:.3},{:.4},{:.2},{:.5},{:.1},{:.1},{:.0}",
             r.replicas,
             r.accum,
             mode,
@@ -916,10 +936,12 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             r.overlap_pct,
             r.apply_s * 1e3,
             r.stall_s * 1e3,
+            r.ckpt_stall_s * 1e3,
             r.src_tok_per_s,
             r.loss_per_tok,
             r.uploads_per_step,
             r.allocs_per_step,
+            r.ckpt_bytes_per_s,
         )
         .unwrap();
         // Flat rows keep the historical prefix; map-reference rows get
@@ -936,6 +958,8 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             ("overlap_pct", r.overlap_pct),
             ("apply_ms", r.apply_s * 1e3),
             ("stall_ms", r.stall_s * 1e3),
+            ("checkpoint_stall_ms", r.ckpt_stall_s * 1e3),
+            ("checkpoint_bytes_per_s", r.ckpt_bytes_per_s),
             ("uploads_per_step", r.uploads_per_step),
             ("allocs_per_step", r.allocs_per_step),
         ] {
@@ -979,13 +1003,7 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
          the replica scaling and the reduce/apply/stall shares are the claims (docs/PERF.md)."
     )
     .unwrap();
-    let mut all = std::fs::read_to_string("BENCH_train.json")
-        .ok()
-        .and_then(|t| Json::parse(&t).ok())
-        .and_then(|j| j.as_obj().cloned())
-        .unwrap_or_default();
-    all.extend(bench);
-    let _ = std::fs::write("BENCH_train.json", Json::Obj(all).to_string());
+    merge_bench_json("BENCH_train.json", bench);
     write_results("train_bench.txt", &out);
     write_results("train_bench.csv", &csv);
     out

@@ -1,0 +1,214 @@
+//! Directory-backed storage with crash-safe atomic publish.
+//!
+//! `put_atomic` follows the classic durable-rename protocol:
+//!
+//! ```text
+//! write .<key>.tmp<N>  →  fsync(file)  →  rename(tmp, key)  →  fsync(dir)
+//! ```
+//!
+//! POSIX `rename(2)` within one directory is atomic, so a reader (or a
+//! resuming trainer) either sees the old complete object or the new
+//! complete object — never a prefix. A crash before the rename leaves
+//! only a dotted temp file, which `list` hides and `sweep_temps` can
+//! reclaim. The final directory fsync makes the rename itself durable;
+//! on filesystems where directories cannot be fsynced it is best-effort.
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{validate_key, Result, Storage, StorageError};
+
+/// Process-unique temp-name counter so concurrent writers (training
+/// thread finalizer + background checkpointer) never collide.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn io_err(what: &str, path: &Path, e: std::io::Error) -> StorageError {
+    // Local disks mostly fail transiently (ENOSPC cleared by a reaper,
+    // NFS blips); classify NotFound precisely and leave the rest to the
+    // retry layer, whose attempt cap bounds the damage either way.
+    if e.kind() == std::io::ErrorKind::NotFound {
+        StorageError::not_found(&path.display().to_string())
+    } else {
+        StorageError::transient(format!("{what} {}: {e}", path.display()))
+    }
+}
+
+/// Storage backend over a single flat directory.
+#[derive(Debug, Clone)]
+pub struct LocalDir {
+    root: PathBuf,
+}
+
+impl LocalDir {
+    /// Open (creating if needed) `root` as a storage directory.
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root).map_err(|e| io_err("create dir", &root, e))?;
+        Ok(LocalDir { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path_of(&self, key: &str) -> PathBuf {
+        self.root.join(key)
+    }
+
+    /// Delete leftover `.` temp files from crashed writers. Returns how
+    /// many were removed. Never touches published objects.
+    pub fn sweep_temps(&self) -> Result<usize> {
+        let mut swept = 0;
+        let entries =
+            fs::read_dir(&self.root).map_err(|e| io_err("read dir", &self.root, e))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| io_err("read dir", &self.root, e))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with('.') && fs::remove_file(entry.path()).is_ok() {
+                swept += 1;
+            }
+        }
+        Ok(swept)
+    }
+}
+
+/// Write `bytes` to `path` via the temp+fsync+rename protocol without
+/// going through a `LocalDir`. Used by the report/bench emitters so a
+/// crash mid-bench never leaves a truncated `BENCH_*.json` or
+/// `results/*.csv` behind for `verify.sh` to choke on.
+pub fn write_file_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file_name = path.file_name().ok_or_else(|| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("no file name in {}", path.display()),
+        )
+    })?;
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = match dir {
+        Some(d) => d.join(format!(".{}.tmp{seq}", file_name.to_string_lossy())),
+        None => PathBuf::from(format!(".{}.tmp{seq}", file_name.to_string_lossy())),
+    };
+    let mut f = File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    if let Err(e) = fs::rename(&tmp, path) {
+        let _ = fs::remove_file(&tmp);
+        return Err(e);
+    }
+    // Durable rename: fsync the containing directory. Best-effort —
+    // some platforms refuse to open directories for sync.
+    if let Some(d) = dir {
+        if let Ok(dirf) = File::open(d) {
+            let _ = dirf.sync_all();
+        }
+    }
+    Ok(())
+}
+
+impl Storage for LocalDir {
+    fn put_atomic(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        validate_key(key)?;
+        let path = self.path_of(key);
+        write_file_atomic(&path, bytes).map_err(|e| io_err("atomic write", &path, e))
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        validate_key(key)?;
+        let path = self.path_of(key);
+        fs::read(&path).map_err(|e| io_err("read", &path, e))
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        let entries =
+            fs::read_dir(&self.root).map_err(|e| io_err("read dir", &self.root, e))?;
+        let mut keys = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|e| io_err("read dir", &self.root, e))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if !name.starts_with('.') {
+                keys.push(name);
+            }
+        }
+        keys.sort();
+        Ok(keys)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        validate_key(key)?;
+        let path = self.path_of(key);
+        fs::remove_file(&path).map_err(|e| io_err("delete", &path, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "hynmt_localdir_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn roundtrip_list_delete() {
+        let root = scratch("rt");
+        let s = LocalDir::new(&root).unwrap();
+        s.put_atomic("b.bin", b"bbb").unwrap();
+        s.put_atomic("a.bin", b"aaa").unwrap();
+        assert_eq!(s.get("a.bin").unwrap(), b"aaa");
+        assert_eq!(s.list().unwrap(), vec!["a.bin".to_string(), "b.bin".to_string()]);
+        s.delete("a.bin").unwrap();
+        assert_eq!(s.list().unwrap(), vec!["b.bin".to_string()]);
+        assert_eq!(s.get("a.bin").unwrap_err().kind, super::super::ErrorKind::NotFound);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn put_overwrites_atomically_and_leaves_no_temps() {
+        let root = scratch("ow");
+        let s = LocalDir::new(&root).unwrap();
+        s.put_atomic("k", b"old").unwrap();
+        s.put_atomic("k", b"new-longer-value").unwrap();
+        assert_eq!(s.get("k").unwrap(), b"new-longer-value");
+        // The publish protocol must not leak temp files on success.
+        let leftovers: Vec<_> = fs::read_dir(&root)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with('.'))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files leaked: {leftovers:?}");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn list_hides_temps_and_sweep_reclaims_them() {
+        let root = scratch("tmp");
+        let s = LocalDir::new(&root).unwrap();
+        s.put_atomic("good", b"x").unwrap();
+        // Simulate a writer killed between temp write and rename.
+        fs::write(root.join(".orphan.tmp7"), b"torn").unwrap();
+        assert_eq!(s.list().unwrap(), vec!["good".to_string()]);
+        assert_eq!(s.sweep_temps().unwrap(), 1);
+        assert_eq!(s.sweep_temps().unwrap(), 0);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn rejects_traversal_keys() {
+        let root = scratch("bad");
+        let s = LocalDir::new(&root).unwrap();
+        assert!(s.put_atomic("../escape", b"x").is_err());
+        assert!(s.put_atomic(".hidden", b"x").is_err());
+        assert!(s.get("").is_err());
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,238 @@
+//! In-memory storage fake with deterministic injectable faults.
+//!
+//! `FaultyMem` models a *crashy* backend: a scheduled "torn write"
+//! stores only a prefix of the bytes and then reports failure, exactly
+//! what a kill-mid-write does to a non-atomic store. The checkpoint
+//! layer's `latest`-pointer protocol is what must keep resume safe on
+//! top of that — the tests in `train::checkpoint` and
+//! `tests/crash_recovery.rs` prove it does.
+//!
+//! Fault schedules are indexed by write-attempt number (1-based,
+//! counting every `put_atomic` call including retries) and all
+//! randomness (torn-prefix length, latency jitter) comes from
+//! [`rng::Rng`](crate::rng::Rng) seeded by the plan, so a failing
+//! schedule replays identically from a single seed.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::rng::Rng;
+
+use super::{validate_key, Result, Storage, StorageError};
+
+/// Deterministic fault schedule for a [`FaultyMem`].
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed for torn-prefix lengths and latency jitter.
+    pub seed: u64,
+    /// 1-based write-attempt indices that fail transiently (nothing
+    /// stored). A retry is a new attempt and may succeed.
+    pub fail_writes: Vec<u64>,
+    /// 1-based write-attempt indices that tear: a random prefix of the
+    /// bytes is stored under the key, then the call fails transiently.
+    pub torn_writes: Vec<u64>,
+    /// From this write-attempt index on, every write fails permanently
+    /// (backend declared dead). `None` = never.
+    pub permanent_from: Option<u64>,
+    /// Mean injected latency per operation, milliseconds (jittered
+    /// ±50% deterministically). 0 = no sleeping.
+    pub latency_ms: f64,
+}
+
+impl FaultPlan {
+    /// A plan with no faults — `FaultyMem` behaves as a plain map.
+    pub fn none() -> Self {
+        FaultPlan {
+            seed: 0,
+            fail_writes: Vec::new(),
+            torn_writes: Vec::new(),
+            permanent_from: None,
+            latency_ms: 0.0,
+        }
+    }
+}
+
+/// Operation counters, readable mid-test via [`FaultyMem::stats`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemStats {
+    /// Successful `put_atomic` calls.
+    pub puts_ok: u64,
+    /// Failed `put_atomic` calls (scheduled transient, torn or
+    /// permanent faults).
+    pub puts_failed: u64,
+    /// `get` calls (hit or miss).
+    pub gets: u64,
+    /// Bytes durably stored by successful puts.
+    pub bytes_written: u64,
+    /// Total injected latency actually slept, milliseconds.
+    pub slept_ms: f64,
+}
+
+struct Inner {
+    map: BTreeMap<String, Vec<u8>>,
+    plan: FaultPlan,
+    rng: Rng,
+    write_attempts: u64,
+    stats: MemStats,
+}
+
+/// In-memory [`Storage`] with scripted faults. Thread-safe; the mutex
+/// serializes operations so a schedule replays deterministically.
+pub struct FaultyMem {
+    inner: Mutex<Inner>,
+}
+
+impl FaultyMem {
+    pub fn new(plan: FaultPlan) -> Self {
+        let rng = Rng::new(plan.seed);
+        FaultyMem {
+            inner: Mutex::new(Inner {
+                map: BTreeMap::new(),
+                plan,
+                rng,
+                write_attempts: 0,
+                stats: MemStats::default(),
+            }),
+        }
+    }
+
+    /// A fault-free in-memory store.
+    pub fn reliable() -> Self {
+        FaultyMem::new(FaultPlan::none())
+    }
+
+    pub fn stats(&self) -> MemStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Peek at a stored object without counting a `get` or paying
+    /// injected latency. Test-inspection hook.
+    pub fn peek(&self, key: &str) -> Option<Vec<u8>> {
+        self.inner.lock().unwrap().map.get(key).cloned()
+    }
+}
+
+impl Inner {
+    fn inject_latency(&mut self) {
+        if self.plan.latency_ms > 0.0 {
+            let ms = self.plan.latency_ms * (0.5 + self.rng.f64());
+            self.stats.slept_ms += ms;
+            std::thread::sleep(Duration::from_micros((ms * 1000.0) as u64));
+        }
+    }
+}
+
+impl Storage for FaultyMem {
+    fn put_atomic(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        validate_key(key)?;
+        let mut g = self.inner.lock().unwrap();
+        g.write_attempts += 1;
+        let n = g.write_attempts;
+        g.inject_latency();
+        if g.plan.permanent_from.is_some_and(|from| n >= from) {
+            g.stats.puts_failed += 1;
+            return Err(StorageError::permanent(format!(
+                "injected permanent outage at write #{n} (key `{key}`)"
+            )));
+        }
+        if g.plan.torn_writes.contains(&n) {
+            // A crashy backend: part of the object lands, the call
+            // fails. The key now holds garbage — only the publish
+            // protocol (pointer written after data) keeps readers safe.
+            let frac = 0.1 + 0.8 * g.rng.f64();
+            let cut = ((bytes.len() as f64 * frac) as usize).min(bytes.len().saturating_sub(1));
+            g.map.insert(key.to_string(), bytes[..cut].to_vec());
+            g.stats.puts_failed += 1;
+            return Err(StorageError::transient(format!(
+                "injected torn write at write #{n} (key `{key}`, {cut}/{} bytes landed)",
+                bytes.len()
+            )));
+        }
+        if g.plan.fail_writes.contains(&n) {
+            g.stats.puts_failed += 1;
+            return Err(StorageError::transient(format!(
+                "injected write failure at write #{n} (key `{key}`)"
+            )));
+        }
+        g.map.insert(key.to_string(), bytes.to_vec());
+        g.stats.puts_ok += 1;
+        g.stats.bytes_written += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        validate_key(key)?;
+        let mut g = self.inner.lock().unwrap();
+        g.stats.gets += 1;
+        g.inject_latency();
+        g.map.get(key).cloned().ok_or_else(|| StorageError::not_found(key))
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        let g = self.inner.lock().unwrap();
+        Ok(g.map.keys().cloned().collect())
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        validate_key(key)?;
+        let mut g = self.inner.lock().unwrap();
+        g.map.remove(key).map(|_| ()).ok_or_else(|| StorageError::not_found(key))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ErrorKind;
+    use super::*;
+
+    #[test]
+    fn behaves_like_a_map_without_faults() {
+        let s = FaultyMem::reliable();
+        s.put_atomic("a", b"1").unwrap();
+        s.put_atomic("b", b"22").unwrap();
+        assert_eq!(s.get("b").unwrap(), b"22");
+        assert_eq!(s.list().unwrap(), vec!["a".to_string(), "b".to_string()]);
+        s.delete("a").unwrap();
+        assert_eq!(s.get("a").unwrap_err().kind, ErrorKind::NotFound);
+        let st = s.stats();
+        assert_eq!((st.puts_ok, st.puts_failed, st.bytes_written), (2, 0, 3));
+    }
+
+    #[test]
+    fn scheduled_write_fails_then_next_attempt_succeeds() {
+        let plan = FaultPlan { fail_writes: vec![1], ..FaultPlan::none() };
+        let s = FaultyMem::new(plan);
+        let err = s.put_atomic("k", b"v").unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Transient);
+        assert_eq!(s.peek("k"), None, "failed write must store nothing");
+        s.put_atomic("k", b"v").unwrap();
+        assert_eq!(s.get("k").unwrap(), b"v");
+    }
+
+    #[test]
+    fn torn_write_stores_partial_bytes_and_fails() {
+        let plan = FaultPlan { torn_writes: vec![1], seed: 7, ..FaultPlan::none() };
+        let s = FaultyMem::new(plan);
+        let payload = vec![0xAB; 1000];
+        let err = s.put_atomic("k", &payload).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Transient);
+        let torn = s.peek("k").expect("torn write leaves a partial object");
+        assert!(!torn.is_empty() && torn.len() < payload.len(), "len {}", torn.len());
+        // Same seed, same schedule → same torn length.
+        let s2 = FaultyMem::new(FaultPlan { torn_writes: vec![1], seed: 7, ..FaultPlan::none() });
+        let _ = s2.put_atomic("k", &payload);
+        assert_eq!(s2.peek("k").unwrap().len(), torn.len());
+    }
+
+    #[test]
+    fn permanent_outage_from_index() {
+        let plan = FaultPlan { permanent_from: Some(2), ..FaultPlan::none() };
+        let s = FaultyMem::new(plan);
+        s.put_atomic("a", b"1").unwrap();
+        for _ in 0..3 {
+            assert_eq!(s.put_atomic("b", b"2").unwrap_err().kind, ErrorKind::Permanent);
+        }
+        assert_eq!(s.get("a").unwrap(), b"1", "earlier objects survive the outage");
+    }
+}

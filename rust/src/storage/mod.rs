@@ -1,0 +1,152 @@
+//! Pluggable checkpoint/result storage with crash-safe publish semantics.
+//!
+//! The training loop never talks to the filesystem directly for durable
+//! state; it goes through the [`Storage`] trait so the same checkpoint
+//! protocol runs against a real directory ([`local::LocalDir`]), an
+//! in-memory fault-injecting fake ([`mem::FaultyMem`]) in tests, or any
+//! future remote object store. Two invariants the backends must uphold:
+//!
+//! 1. **`put_atomic` is all-or-nothing on success.** After `put_atomic`
+//!    returns `Ok`, a reader sees the complete new value; after `Err`,
+//!    the *key being written* may be absent or torn (a crashy backend),
+//!    but a previously published object under a *different* key is
+//!    untouched. The checkpoint layer builds its `latest`-pointer
+//!    protocol on exactly this: data object first, pointer second, so
+//!    the pointer never references a torn object.
+//! 2. **Errors are classified.** [`StorageError::kind`] tells the retry
+//!    layer ([`retry::Retrying`]) whether an operation is worth
+//!    retrying (`Transient`) or must surface immediately (`Permanent`,
+//!    `NotFound`). Exhausted retries come back as a clean `Err` — the
+//!    training thread turns that into a step-boundary abort, never a
+//!    hang or panic.
+//!
+//! Keys are flat names (no directory separators, no leading dot): the
+//! local backend maps them 1:1 to file names and reserves dotted names
+//! for its own temp files.
+
+pub mod local;
+pub mod mem;
+pub mod retry;
+
+pub use local::LocalDir;
+pub use mem::{FaultPlan, FaultyMem, MemStats};
+pub use retry::{Retrying, RetryPolicy};
+
+use std::fmt;
+
+/// What went wrong, from the retry layer's point of view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Key does not exist. Never retried — absence is an answer.
+    NotFound,
+    /// Plausibly temporary (I/O hiccup, injected flake). Retried with
+    /// backoff up to the policy's attempt cap.
+    Transient,
+    /// Retrying cannot help (invalid key, backend declared dead,
+    /// retries exhausted). Surfaces to the caller as-is.
+    Permanent,
+}
+
+/// Error type shared by every backend.
+#[derive(Debug, Clone)]
+pub struct StorageError {
+    pub kind: ErrorKind,
+    pub msg: String,
+}
+
+impl StorageError {
+    pub fn not_found(key: &str) -> Self {
+        StorageError { kind: ErrorKind::NotFound, msg: format!("key `{key}` not found") }
+    }
+
+    pub fn transient(msg: impl Into<String>) -> Self {
+        StorageError { kind: ErrorKind::Transient, msg: msg.into() }
+    }
+
+    pub fn permanent(msg: impl Into<String>) -> Self {
+        StorageError { kind: ErrorKind::Permanent, msg: msg.into() }
+    }
+
+    /// Should the retry layer try this operation again?
+    pub fn retryable(&self) -> bool {
+        self.kind == ErrorKind::Transient
+    }
+}
+
+impl fmt::Display for StorageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let tag = match self.kind {
+            ErrorKind::NotFound => "not found",
+            ErrorKind::Transient => "transient",
+            ErrorKind::Permanent => "permanent",
+        };
+        write!(f, "storage error ({tag}): {}", self.msg)
+    }
+}
+
+impl std::error::Error for StorageError {}
+
+pub type Result<T> = std::result::Result<T, StorageError>;
+
+/// A flat key → bytes object store with atomic publish.
+///
+/// `Send + Sync` because the async checkpointer hands an
+/// `Arc<dyn Storage>` to its background writer thread.
+pub trait Storage: Send + Sync {
+    /// Store `bytes` under `key`, all-or-nothing (see module docs).
+    fn put_atomic(&self, key: &str, bytes: &[u8]) -> Result<()>;
+
+    /// Read the full value under `key`.
+    fn get(&self, key: &str) -> Result<Vec<u8>>;
+
+    /// All keys, sorted, excluding backend-internal temp objects.
+    fn list(&self) -> Result<Vec<String>>;
+
+    /// Remove `key`. `NotFound` if it does not exist.
+    fn delete(&self, key: &str) -> Result<()>;
+}
+
+/// Reject keys the local backend could not map safely to a file name.
+/// Shared by all backends so a fault-injection test exercises the same
+/// key space a real directory would.
+pub fn validate_key(key: &str) -> Result<()> {
+    if key.is_empty() {
+        return Err(StorageError::permanent("empty storage key"));
+    }
+    if key.starts_with('.') {
+        return Err(StorageError::permanent(format!(
+            "storage key `{key}` starts with `.` (reserved for temp files)"
+        )));
+    }
+    if key.chars().any(|c| c == '/' || c == '\\' || c.is_control()) {
+        return Err(StorageError::permanent(format!(
+            "storage key `{key}` contains a path separator or control character"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_validation() {
+        assert!(validate_key("ck-00000010.bin").is_ok());
+        assert!(validate_key("latest").is_ok());
+        for bad in ["", ".hidden", "a/b", "a\\b", "nul\0byte"] {
+            let err = validate_key(bad).unwrap_err();
+            assert_eq!(err.kind, ErrorKind::Permanent, "key {bad:?}");
+        }
+    }
+
+    #[test]
+    fn error_display_carries_kind() {
+        let e = StorageError::transient("disk hiccup");
+        assert!(e.to_string().contains("transient"));
+        assert!(e.retryable());
+        let e = StorageError::permanent("gone");
+        assert!(!e.retryable());
+        assert!(StorageError::not_found("x").to_string().contains("`x`"));
+    }
+}

@@ -1,0 +1,203 @@
+//! Retry layer: capped exponential backoff with deterministic jitter.
+//!
+//! `Retrying<S>` wraps any [`Storage`] and re-issues transiently failed
+//! operations up to `max_attempts` times, sleeping
+//! `min(cap, base·2^attempt) · (0.5 + 0.5·u)` milliseconds between
+//! attempts, where `u` comes from a [`rng::Rng`](crate::rng::Rng)
+//! seeded by the policy — so a flaky-store test replays the exact same
+//! backoff schedule every run. `NotFound` and `Permanent` errors pass
+//! through untouched; exhausting the attempt budget converts the last
+//! transient error into a `Permanent` one with the attempt count in the
+//! message, which the training thread surfaces as a clean `Err` at the
+//! next step boundary.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::rng::Rng;
+
+use super::{Result, Storage, StorageError};
+
+/// Backoff configuration for [`Retrying`].
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts per operation (first try + retries). Minimum 1.
+    pub max_attempts: u32,
+    /// Backoff before the first retry, milliseconds.
+    pub base_ms: f64,
+    /// Ceiling on any single backoff, milliseconds.
+    pub cap_ms: f64,
+    /// Seed for the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 4, base_ms: 5.0, cap_ms: 250.0, seed: 0x5e7f_11aa }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never sleeps — for tests exercising many faults.
+    pub fn instant(max_attempts: u32) -> Self {
+        RetryPolicy { max_attempts, base_ms: 0.0, cap_ms: 0.0, seed: 0 }
+    }
+
+    /// The backoff before retry `attempt` (0-based) given jitter draw
+    /// `u ∈ [0,1)`: capped exponential, jittered into `[0.5x, 1.0x)`.
+    pub fn backoff_ms(&self, attempt: u32, u: f64) -> f64 {
+        let exp = self.base_ms * (2.0f64).powi(attempt.min(30) as i32);
+        exp.min(self.cap_ms) * (0.5 + 0.5 * u)
+    }
+
+    /// The full deterministic backoff schedule (one entry per possible
+    /// retry), as a fresh wrapper would sleep it. Inspection hook.
+    pub fn preview_ms(&self) -> Vec<f64> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.max_attempts.saturating_sub(1))
+            .map(|a| self.backoff_ms(a, rng.f64()))
+            .collect()
+    }
+}
+
+/// Counters for observing retry behaviour in tests and logs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RetryStats {
+    /// Operations that succeeded only after at least one retry.
+    pub recovered: u64,
+    /// Individual retry attempts issued.
+    pub retries: u64,
+    /// Total backoff actually slept, milliseconds.
+    pub slept_ms: f64,
+}
+
+/// A [`Storage`] wrapper that retries transient failures.
+pub struct Retrying<S> {
+    inner: S,
+    policy: RetryPolicy,
+    rng: Mutex<Rng>,
+    stats: Mutex<RetryStats>,
+}
+
+impl<S: Storage> Retrying<S> {
+    pub fn new(inner: S, policy: RetryPolicy) -> Self {
+        let rng = Rng::new(policy.seed);
+        Retrying { inner, policy, rng: Mutex::new(rng), stats: Mutex::new(RetryStats::default()) }
+    }
+
+    /// The wrapped backend (for test inspection, e.g. `FaultyMem::peek`).
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    pub fn stats(&self) -> RetryStats {
+        *self.stats.lock().unwrap()
+    }
+
+    fn with_retry<T>(&self, what: &str, mut op: impl FnMut() -> Result<T>) -> Result<T> {
+        let max = self.policy.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            match op() {
+                Ok(v) => {
+                    if attempt > 0 {
+                        self.stats.lock().unwrap().recovered += 1;
+                    }
+                    return Ok(v);
+                }
+                Err(e) if e.retryable() && attempt + 1 < max => {
+                    let u = self.rng.lock().unwrap().f64();
+                    let ms = self.policy.backoff_ms(attempt, u);
+                    {
+                        let mut st = self.stats.lock().unwrap();
+                        st.retries += 1;
+                        st.slept_ms += ms;
+                    }
+                    if ms > 0.0 {
+                        std::thread::sleep(Duration::from_micros((ms * 1000.0) as u64));
+                    }
+                    attempt += 1;
+                }
+                Err(e) if e.retryable() => {
+                    return Err(StorageError::permanent(format!(
+                        "{what}: retries exhausted after {max} attempts; last error: {}",
+                        e.msg
+                    )));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl<S: Storage> Storage for Retrying<S> {
+    fn put_atomic(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.with_retry(&format!("put_atomic `{key}`"), || self.inner.put_atomic(key, bytes))
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.with_retry(&format!("get `{key}`"), || self.inner.get(key))
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        self.with_retry("list", || self.inner.list())
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.with_retry(&format!("delete `{key}`"), || self.inner.delete(key))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mem::{FaultPlan, FaultyMem};
+    use super::super::ErrorKind;
+    use super::*;
+
+    #[test]
+    fn backoff_is_capped_exponential_with_jitter() {
+        let p = RetryPolicy { max_attempts: 8, base_ms: 10.0, cap_ms: 60.0, seed: 3 };
+        let sched = p.preview_ms();
+        assert_eq!(sched.len(), 7);
+        for (a, &ms) in sched.iter().enumerate() {
+            let uncapped = 10.0 * (2.0f64).powi(a as i32);
+            assert!(ms <= 60.0, "retry {a} slept {ms}ms > cap");
+            assert!(ms >= 0.5 * uncapped.min(60.0), "retry {a} slept {ms}ms, under half");
+        }
+        // Deterministic: same policy, same schedule.
+        assert_eq!(p.preview_ms(), sched);
+    }
+
+    #[test]
+    fn fail_then_succeed_recovers_without_caller_seeing_an_error() {
+        let plan = FaultPlan { fail_writes: vec![1], ..FaultPlan::none() };
+        let s = Retrying::new(FaultyMem::new(plan), RetryPolicy::instant(3));
+        s.put_atomic("k", b"v").unwrap();
+        assert_eq!(s.get("k").unwrap(), b"v");
+        let st = s.stats();
+        assert_eq!((st.retries, st.recovered), (1, 1));
+    }
+
+    #[test]
+    fn transient_faults_exhaust_into_clean_permanent_error() {
+        let plan = FaultPlan { fail_writes: vec![1, 2, 3], ..FaultPlan::none() };
+        let s = Retrying::new(FaultyMem::new(plan), RetryPolicy::instant(3));
+        let err = s.put_atomic("k", b"v").unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Permanent);
+        assert!(err.msg.contains("retries exhausted after 3 attempts"), "{}", err.msg);
+        assert_eq!(s.stats().retries, 2, "3 attempts = 2 retries");
+        // Fault schedule consumed — the next write works.
+        s.put_atomic("k", b"v").unwrap();
+    }
+
+    #[test]
+    fn permanent_and_not_found_pass_through_unretried() {
+        let plan = FaultPlan { permanent_from: Some(1), ..FaultPlan::none() };
+        let s = Retrying::new(FaultyMem::new(plan), RetryPolicy::instant(5));
+        assert_eq!(s.put_atomic("k", b"v").unwrap_err().kind, ErrorKind::Permanent);
+        assert_eq!(s.stats().retries, 0, "permanent errors must not be retried");
+        let s = Retrying::new(FaultyMem::reliable(), RetryPolicy::instant(5));
+        assert_eq!(s.get("missing").unwrap_err().kind, ErrorKind::NotFound);
+        assert_eq!(s.stats().retries, 0, "NotFound must not be retried");
+    }
+}

@@ -264,6 +264,19 @@ impl FlatParams {
         self.views.get(name)
     }
 
+    /// Copy-on-write snapshot of the parameter map: clones of the
+    /// cached views, i.e. O(#tensors) `Arc` bumps and **zero** element
+    /// copies. The clones pin the current slab; the next
+    /// [`FlatParams::with_slab_mut`] then sees a shared `Arc` and
+    /// defensively copies before mutating, so the snapshot stays frozen
+    /// at its capture step while training runs ahead. This is the async
+    /// checkpointer's capture path — the model-sized copy happens (at
+    /// most once per snapshot) on the *next* step's apply, not inside
+    /// the checkpoint stall window.
+    pub fn snapshot_map(&self) -> BTreeMap<String, Tensor> {
+        self.views.clone()
+    }
+
     /// Owned (non-view) copy of the parameter map — the escape hatch to
     /// the map-based store and the test-comparison path.
     pub fn to_map(&self) -> BTreeMap<String, Tensor> {
@@ -439,6 +452,28 @@ mod tests {
         let back = fp.to_map();
         assert_eq!(back["a"], map["a"]);
         assert_eq!(back["c"].data(), &[99.0]);
+    }
+
+    /// The async checkpointer's capture contract: a `snapshot_map` is
+    /// free to take (no element copies) and stays bitwise-frozen while
+    /// the arena keeps mutating.
+    #[test]
+    fn snapshot_map_is_frozen_against_later_mutation() {
+        let mut fp = FlatParams::from_map(&sample_map(), 16);
+        let snap = fp.snapshot_map();
+        assert!(snap.values().all(|t| t.is_view()), "snapshot must be zero-copy views");
+        fp.with_slab_mut(|idx, _, slab| {
+            let e = idx.entry("a").unwrap();
+            slab[e.off] = 123.0;
+        });
+        assert_eq!(snap["a"].data()[0], 1.0, "snapshot moved with the arena");
+        assert_eq!(fp.get("a").unwrap().data()[0], 123.0);
+        // A second mutation with the snapshot still held is also safe.
+        fp.with_slab_mut(|idx, _, slab| {
+            let e = idx.entry("b").unwrap();
+            slab[e.off] = -5.0;
+        });
+        assert_eq!(snap["b"].data()[0], 5.0);
     }
 
     #[test]

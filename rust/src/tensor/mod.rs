@@ -19,6 +19,13 @@
 //! never be corrupted through a view. All read paths are identical for
 //! both storages.
 //!
+//! The same sharing works in the other direction: holding view clones
+//! across an arena mutation (e.g. a checkpoint snapshot from
+//! [`flat::FlatParams::snapshot_map`]) freezes the *snapshot*, because
+//! `with_slab_mut` copies the slab before mutating when views are
+//! outstanding. That one deferred copy is what makes async checkpoint
+//! capture O(#tensors) instead of O(elements) on the training thread.
+//!
 //! ## Allocation accounting
 //!
 //! Every fresh f32 buffer allocation (construction, owned clone,

@@ -21,16 +21,34 @@
 //! restore with a fresh optimizer. Every length/count read from a file
 //! is bounded against the file size before allocation, so a truncated
 //! or corrupt checkpoint is a clean `Err`, never an abort-sized
-//! allocation.
+//! allocation; duplicate or empty parameter names and trailing bytes
+//! after the last section are rejected with specific errors.
+//!
+//! Both savers write through the atomic temp + fsync + rename protocol
+//! ([`crate::storage::local::write_file_atomic`]), and the same bytes
+//! can round-trip through any [`Storage`] backend ([`to_bytes`] /
+//! [`load_full_bytes`]). On a storage backend, checkpoints follow the
+//! **`latest`-pointer protocol**: [`publish`] writes the data object
+//! first and only then points the `latest` key at it, so a reader that
+//! resolves `latest` ([`resolve_latest`]) can never observe a torn or
+//! half-written checkpoint — a crash between the two writes just means
+//! `latest` still names the previous durable checkpoint.
+//!
+//! [`Snapshot`] is the frozen step-boundary capture the async
+//! checkpointer hands to its background writer thread: parameter
+//! tensors captured as `Arc` views (the slab engine's copy-on-write
+//! storage makes that O(#tensors), not O(elements)) plus an
+//! [`OptimSnapshot`] and the [`TrainMeta`] clocks.
 //!
 //! For inference, [`load_resident`] additionally pre-uploads the loaded
 //! parameters into a [`ParamBank`], so the first decode step already
 //! finds every weight device-resident.
 
-use crate::optim::{OptimState, OptimStateView};
+use crate::optim::{OptimSnapshot, OptimState, OptimStateView};
 #[cfg(test)]
 use crate::optim::MomentRowsView;
 use crate::runtime::{Engine, ParamBank};
+use crate::storage::{self, Storage};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -104,29 +122,14 @@ fn write_rows(f: &mut impl Write, rows: Vec<(&str, &[f32])>) -> Result<()> {
     Ok(())
 }
 
-/// Write a v1 (param-only) checkpoint to `path`.
-pub fn save(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
-    );
-    f.write_all(MAGIC_V1)?;
-    write_params(&mut f, params)
-}
-
-/// Write a v2 checkpoint: parameters + optimizer state + training
-/// clocks. Takes the optimizer state by reference ([`OptimStateView`])
-/// so saving never clones the model-sized moment maps.
-pub fn save_full(
-    path: &Path,
+fn write_full(
+    f: &mut impl Write,
     params: &BTreeMap<String, Tensor>,
     opt: &OptimStateView,
     meta: &TrainMeta,
 ) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
-    );
     f.write_all(MAGIC_V2)?;
-    write_params(&mut f, params)?;
+    write_params(f, params)?;
     let kb = opt.kind.as_bytes();
     f.write_all(&(kb.len() as u32).to_le_bytes())?;
     f.write_all(kb)?;
@@ -137,8 +140,47 @@ pub fn save_full(
     f.write_all(&meta.sim_clock.to_le_bytes())?;
     f.write_all(&[meta.prev_dev_ppl.is_some() as u8])?;
     f.write_all(&meta.prev_dev_ppl.unwrap_or(0.0).to_le_bytes())?;
-    write_rows(&mut f, opt.rows.iter_m().collect())?;
-    write_rows(&mut f, opt.rows.iter_v().collect())
+    write_rows(f, opt.rows.iter_m().collect())?;
+    write_rows(f, opt.rows.iter_v().collect())
+}
+
+/// Serialize a v2 checkpoint to bytes — the storage-backend save path
+/// (the background writer calls this off the training thread, then
+/// `put_atomic`s the result).
+pub fn to_bytes(
+    params: &BTreeMap<String, Tensor>,
+    opt: &OptimStateView,
+    meta: &TrainMeta,
+) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    write_full(&mut buf, params, opt, meta)?;
+    Ok(buf)
+}
+
+/// Write a v1 (param-only) checkpoint to `path`, atomically: a crash
+/// mid-save leaves the previous file (or nothing), never a torn one.
+pub fn save(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC_V1);
+    write_params(&mut buf, params)?;
+    storage::local::write_file_atomic(path, &buf)
+        .with_context(|| format!("writing {path:?}"))
+}
+
+/// Write a v2 checkpoint: parameters + optimizer state + training
+/// clocks. Takes the optimizer state by reference ([`OptimStateView`])
+/// so saving never clones the model-sized moment maps, and publishes
+/// via atomic temp + fsync + rename so a kill mid-save can never leave
+/// a torn file at `path`.
+pub fn save_full(
+    path: &Path,
+    params: &BTreeMap<String, Tensor>,
+    opt: &OptimStateView,
+    meta: &TrainMeta,
+) -> Result<()> {
+    let buf = to_bytes(params, opt, meta)?;
+    storage::local::write_file_atomic(path, &buf)
+        .with_context(|| format!("writing {path:?}"))
 }
 
 fn read_u32(f: &mut impl Read) -> Result<u32> {
@@ -193,6 +235,9 @@ fn read_params(f: &mut impl Read, file_len: u64) -> Result<BTreeMap<String, Tens
     let n = read_u32(f)? as usize;
     for _ in 0..n {
         let name = read_string(f, file_len)?;
+        if name.is_empty() {
+            return Err(anyhow!("corrupt checkpoint: zero-length parameter name"));
+        }
         let rank = check_count(read_u32(f)? as u64, 8, file_len, "shape")?;
         let mut shape = Vec::with_capacity(rank);
         for _ in 0..rank {
@@ -206,7 +251,9 @@ fn read_params(f: &mut impl Read, file_len: u64) -> Result<BTreeMap<String, Tens
             "tensor",
         )?;
         let data = read_f32s(f, numel)?;
-        params.insert(name, Tensor::new(shape, data));
+        if params.insert(name.clone(), Tensor::new(shape, data)).is_some() {
+            return Err(anyhow!("corrupt checkpoint: duplicate parameter `{name}`"));
+        }
     }
     Ok(params)
 }
@@ -216,36 +263,47 @@ fn read_rows(f: &mut impl Read, file_len: u64) -> Result<BTreeMap<String, Vec<f3
     let n = read_u32(f)? as usize;
     for _ in 0..n {
         let name = read_string(f, file_len)?;
+        if name.is_empty() {
+            return Err(anyhow!("corrupt checkpoint: zero-length moment-row name"));
+        }
         let len = check_count(read_u64(f)?, 4, file_len, "moment row")?;
-        rows.insert(name, read_f32s(f, len)?);
+        let data = read_f32s(f, len)?;
+        if rows.insert(name.clone(), data).is_some() {
+            return Err(anyhow!("corrupt checkpoint: duplicate moment row `{name}`"));
+        }
     }
     Ok(rows)
 }
 
-/// Open `path`, check the magic, and read the (shared) parameter
-/// section. Returns the reader positioned at the optimizer state for
-/// v2 files.
-fn read_header(
-    path: &Path,
-) -> Result<(std::io::BufReader<std::fs::File>, bool, u64, BTreeMap<String, Tensor>)> {
-    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
-    let file_len = file.metadata().map(|m| m.len()).unwrap_or(u64::MAX);
-    let mut f = std::io::BufReader::new(file);
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    let v2 = match &magic {
-        m if m == MAGIC_V1 => false,
-        m if m == MAGIC_V2 => true,
-        _ => return Err(anyhow!("{path:?}: not a hybridnmt checkpoint")),
-    };
-    let params = read_params(&mut f, file_len)?;
-    Ok((f, v2, file_len, params))
+/// The format is self-delimiting (every section's length is declared up
+/// front), so a well-formed file ends exactly where the last section
+/// does. Anything after that is corruption — most likely an interrupted
+/// overwrite on a non-atomic writer — and must not load silently.
+fn expect_eof(f: &mut impl Read, after: &str) -> Result<()> {
+    let mut b = [0u8; 1];
+    match f.read(&mut b)? {
+        0 => Ok(()),
+        _ => Err(anyhow!("corrupt checkpoint: trailing garbage after {after}")),
+    }
 }
 
-/// Load a checkpoint (either version), full training state included.
-pub fn load_full(path: &Path) -> Result<TrainCheckpoint> {
-    let (mut f, v2, file_len, params) = read_header(path)?;
+fn read_magic(f: &mut impl Read, what: &str) -> Result<bool> {
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    match &magic {
+        m if m == MAGIC_V1 => Ok(false),
+        m if m == MAGIC_V2 => Ok(true),
+        _ => Err(anyhow!("{what}: not a hybridnmt checkpoint")),
+    }
+}
+
+/// The shared full-load body, generic over the byte source so the file
+/// path and the storage-backend path cannot drift.
+fn load_full_from(mut f: impl Read, file_len: u64, what: &str) -> Result<TrainCheckpoint> {
+    let v2 = read_magic(&mut f, what)?;
+    let params = read_params(&mut f, file_len)?;
     if !v2 {
+        expect_eof(&mut f, "the parameter section")?;
         return Ok(TrainCheckpoint { params, opt: None, meta: TrainMeta::default() });
     }
     let kind = read_string(&mut f, file_len)?;
@@ -260,6 +318,7 @@ pub fn load_full(path: &Path) -> Result<TrainCheckpoint> {
     let prev_dev_ppl = (flag[0] != 0).then_some(prev);
     let m = read_rows(&mut f, file_len)?;
     let v = read_rows(&mut f, file_len)?;
+    expect_eof(&mut f, "the optimizer state")?;
     Ok(TrainCheckpoint {
         params,
         opt: Some(OptimState { kind, lr, t, m, v }),
@@ -267,12 +326,34 @@ pub fn load_full(path: &Path) -> Result<TrainCheckpoint> {
     })
 }
 
+/// Load a checkpoint (either version), full training state included.
+pub fn load_full(path: &Path) -> Result<TrainCheckpoint> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let file_len = file.metadata().map(|m| m.len()).unwrap_or(u64::MAX);
+    load_full_from(std::io::BufReader::new(file), file_len, &format!("{path:?}"))
+}
+
+/// Load a checkpoint from in-memory bytes (the storage-backend resume
+/// path — what [`resolve_latest`] returns).
+pub fn load_full_bytes(bytes: &[u8]) -> Result<TrainCheckpoint> {
+    load_full_from(bytes, bytes.len() as u64, "checkpoint object")
+}
+
 /// Load just the parameters from `path` (either version — the
 /// inference-side entry point). Stops after the parameter section, so
 /// a v2 file's model-sized optimizer moment maps are never read or
-/// allocated here.
+/// allocated here (which also means trailing corruption past the
+/// parameter section of a v2 file is only caught by [`load_full`]).
 pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
-    Ok(read_header(path)?.3)
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let file_len = file.metadata().map(|m| m.len()).unwrap_or(u64::MAX);
+    let mut f = std::io::BufReader::new(file);
+    let v2 = read_magic(&mut f, &format!("{path:?}"))?;
+    let params = read_params(&mut f, file_len)?;
+    if !v2 {
+        expect_eof(&mut f, "the parameter section")?;
+    }
+    Ok(params)
 }
 
 /// Load a checkpoint and upload every parameter into a fresh
@@ -290,6 +371,81 @@ pub fn load_resident(
         bank.get_or_upload(engine, name, t)?;
     }
     Ok((params, bank))
+}
+
+// ---------------------------------------------------------------------
+// Storage-backend checkpoints: the `latest`-pointer protocol.
+// ---------------------------------------------------------------------
+
+/// The pointer key: its value is the *key* of the newest durable
+/// checkpoint object, written only after that object landed.
+pub const LATEST_KEY: &str = "latest";
+
+/// Key for the checkpoint taken at `steps_done` (zero-padded so
+/// `Storage::list` sorts chronologically).
+pub fn checkpoint_key(steps_done: u64) -> String {
+    format!("ck-{steps_done:08}.bin")
+}
+
+/// A frozen step-boundary capture of the full training state, cheap to
+/// take (`Arc` bumps on the slab engine) and safe to serialize on
+/// another thread while training mutates its own copy-on-write copies.
+#[derive(Clone)]
+pub struct Snapshot {
+    /// Parameter tensors. On the flat engine these are zero-copy views
+    /// into the (frozen) slab; on the map engine, owned clones.
+    pub params: BTreeMap<String, Tensor>,
+    pub opt: OptimSnapshot,
+    pub meta: TrainMeta,
+}
+
+impl Snapshot {
+    /// The storage key this snapshot publishes under.
+    pub fn key(&self) -> String {
+        checkpoint_key(self.meta.steps_done)
+    }
+
+    /// Serialize to v2 checkpoint bytes (identical to what [`save_full`]
+    /// would have written from the live state at capture time).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        to_bytes(&self.params, &self.opt.view(), &self.meta)
+    }
+
+    /// Total f32 payload (params + moment rows), for byte-rate stats.
+    pub fn payload_f32s(&self) -> usize {
+        let p: usize = self.params.values().map(|t| t.numel()).sum();
+        let view = self.opt.view();
+        let m: usize = view.rows.iter_m().map(|(_, r)| r.len()).sum();
+        let v: usize = view.rows.iter_v().map(|(_, r)| r.len()).sum();
+        p + m + v
+    }
+}
+
+/// Durably publish checkpoint `bytes` under `key`, then repoint
+/// `latest`. The order is the whole protocol: the pointer is only ever
+/// written after its target is complete, so `resolve_latest` can never
+/// hand back a torn object — a crash (or injected fault) between the
+/// two writes leaves `latest` at the previous durable checkpoint.
+pub fn publish(store: &dyn Storage, key: &str, bytes: &[u8]) -> Result<()> {
+    store.put_atomic(key, bytes)?;
+    store.put_atomic(LATEST_KEY, key.as_bytes())?;
+    Ok(())
+}
+
+/// Resolve the `latest` pointer and fetch the checkpoint it names.
+/// `Ok(None)` if the store has no published checkpoint yet.
+pub fn resolve_latest(store: &dyn Storage) -> Result<Option<(String, Vec<u8>)>> {
+    let ptr = match store.get(LATEST_KEY) {
+        Ok(p) => p,
+        Err(e) if e.kind == storage::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let key = String::from_utf8(ptr)
+        .map_err(|_| anyhow!("corrupt `latest` pointer: not valid UTF-8"))?;
+    let bytes = store
+        .get(&key)
+        .with_context(|| format!("`latest` points at missing checkpoint `{key}`"))?;
+    Ok(Some((key, bytes)))
 }
 
 #[cfg(test)]
@@ -414,5 +570,116 @@ mod tests {
         let ck = load_full(&path).unwrap();
         assert_eq!(ck.opt.unwrap(), opt);
         assert_eq!(ck.meta, meta);
+    }
+
+    /// `to_bytes` + `load_full_bytes` is the same format as the file
+    /// path — byte-for-byte, both directions.
+    #[test]
+    fn bytes_and_file_paths_are_identical() {
+        let params = sample_params();
+        let opt = OptimState { kind: "adam".into(), lr: 1e-3, t: 5, ..Default::default() };
+        let meta = TrainMeta { steps_done: 5, micro_consumed: 20, sim_clock: 2.5, prev_dev_ppl: None };
+        let path = tmp("ck_bytes.bin");
+        save_full(&path, &params, &opt.view(), &meta).unwrap();
+        let on_disk = std::fs::read(&path).unwrap();
+        let in_mem = to_bytes(&params, &opt.view(), &meta).unwrap();
+        assert_eq!(on_disk, in_mem);
+        let ck = load_full_bytes(&in_mem).unwrap();
+        assert_eq!(ck.params, params);
+        assert_eq!(ck.meta, meta);
+    }
+
+    /// Hand-assemble one v1 param record (name, rank-1 shape, data).
+    fn param_record(name: &str, data: &[f32]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        b.extend_from_slice(name.as_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        for &x in data {
+            b.extend_from_slice(&x.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn rejects_duplicate_parameter_names() {
+        let mut bytes = MAGIC_V1.to_vec();
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&param_record("w", &[1.0, 2.0]));
+        bytes.extend_from_slice(&param_record("w", &[3.0, 4.0]));
+        let err = load_full_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("duplicate parameter `w`"), "{err}");
+        let path = tmp("ck_dup.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).unwrap_err().to_string().contains("duplicate"), "load too");
+    }
+
+    #[test]
+    fn rejects_zero_length_parameter_name() {
+        let mut bytes = MAGIC_V1.to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&param_record("", &[1.0]));
+        let err = load_full_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("zero-length parameter name"), "{err}");
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        // v1: garbage after the parameter section.
+        let params = sample_params();
+        let path = tmp("ck_trail1.bin");
+        save(&path, &params).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        let err = load_full_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("trailing garbage after the parameter section"), "{err}");
+
+        // v2: garbage after the optimizer state.
+        let opt = OptimState { kind: "adam".into(), lr: 1e-3, t: 1, ..Default::default() };
+        let mut bytes = to_bytes(&params, &opt.view(), &TrainMeta::default()).unwrap();
+        assert!(load_full_bytes(&bytes).is_ok(), "clean file loads");
+        bytes.push(0);
+        let err = load_full_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("trailing garbage after the optimizer state"), "{err}");
+    }
+
+    /// The `latest`-pointer protocol end-to-end over a faulty backend:
+    /// a torn data write never becomes visible through `resolve_latest`
+    /// — the pointer still names the previous durable checkpoint, which
+    /// still loads.
+    #[test]
+    fn torn_publish_never_corrupts_resolve_latest() {
+        use crate::storage::{FaultPlan, FaultyMem};
+        let params = sample_params();
+        let opt = OptimState { kind: "adam".into(), lr: 1e-3, t: 1, ..Default::default() };
+        let bytes_a =
+            to_bytes(&params, &opt.view(), &TrainMeta { steps_done: 2, ..Default::default() })
+                .unwrap();
+        let bytes_b =
+            to_bytes(&params, &opt.view(), &TrainMeta { steps_done: 4, ..Default::default() })
+                .unwrap();
+        // Write #3 (checkpoint B's data object) tears; no retry layer
+        // here, so the publish fails outright.
+        let store =
+            FaultyMem::new(FaultPlan { torn_writes: vec![3], seed: 11, ..FaultPlan::none() });
+        publish(&store, &checkpoint_key(2), &bytes_a).unwrap();
+        assert!(publish(&store, &checkpoint_key(4), &bytes_b).is_err());
+        // The store now holds a torn `ck-00000004.bin`…
+        let torn = store.peek(&checkpoint_key(4)).unwrap();
+        assert!(torn.len() < bytes_b.len());
+        assert!(load_full_bytes(&torn).is_err(), "torn object must not parse");
+        // …but `latest` still resolves to the durable checkpoint A.
+        let (key, bytes) = resolve_latest(&store).unwrap().unwrap();
+        assert_eq!(key, checkpoint_key(2));
+        let ck = load_full_bytes(&bytes).unwrap();
+        assert_eq!(ck.meta.steps_done, 2);
+    }
+
+    #[test]
+    fn resolve_latest_on_empty_store_is_none() {
+        use crate::storage::FaultyMem;
+        let store = FaultyMem::reliable();
+        assert!(resolve_latest(&store).unwrap().is_none());
     }
 }

@@ -32,7 +32,7 @@
 pub mod checkpoint;
 pub mod step;
 
-pub use step::Pipeline;
+pub use step::{AsyncCheckpointer, CkptStats, Pipeline};
 
 use crate::config::{Experiment, Strategy};
 use crate::data::{with_prefetch, Batcher};
@@ -43,11 +43,13 @@ use crate::parallel::{build_plan, execute_with, Batch, ExecMode, ExecOptions, Pl
 use crate::rng::Rng;
 use crate::runtime::Engine;
 use crate::sim::{simulate, SimResult};
+use crate::storage::Storage;
 use crate::tensor::flat::{FlatParams, DEFAULT_BUCKET_BYTES};
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Initialize the full parameter set: uniform(-scale, scale), the
 /// classic seq2seq recipe. Layout comes from `model_spec::param_specs`.
@@ -140,6 +142,15 @@ pub struct StepStats {
     /// Seconds the step waited on the batch prefetch thread (0 when
     /// batches were handed in directly).
     pub prefetch_stall_seconds: f64,
+    /// Seconds the *training thread* spent on checkpoint work this
+    /// step: the copy-on-write snapshot capture plus the non-blocking
+    /// hand-off to the background writer. ~0 by construction — the
+    /// serialization and storage I/O run on the writer thread.
+    pub checkpoint_stall_seconds: f64,
+    /// Background-writer checkpoint bandwidth observed since the
+    /// previous step boundary (serialized bytes / writer seconds; 0
+    /// when no write completed in the window).
+    pub checkpoint_bytes_per_s: f64,
     /// f32 buffer allocations this step performed
     /// (`tensor::alloc_count` delta — the hot-path churn metric
     /// `train-bench` tracks as `allocs_per_step`).
@@ -213,6 +224,14 @@ pub struct Trainer<'a> {
     step_mode: StepMode,
     /// Bucket size (bytes) of the flat engine's slab partition.
     bucket_bytes: usize,
+    /// Background checkpoint writer (None until
+    /// [`Trainer::enable_async_checkpoint`]).
+    ckpt: Option<AsyncCheckpointer>,
+    /// Snapshot cadence in optimizer steps.
+    ckpt_every: usize,
+    /// Writer (bytes, seconds) totals at the previous step boundary —
+    /// diffed into `StepStats::checkpoint_bytes_per_s`.
+    ckpt_last: (u64, f64),
 }
 
 impl<'a> Trainer<'a> {
@@ -232,6 +251,9 @@ impl<'a> Trainer<'a> {
             sequential: false,
             step_mode: StepMode::default(),
             bucket_bytes: DEFAULT_BUCKET_BYTES,
+            ckpt: None,
+            ckpt_every: 1,
+            ckpt_last: (0, 0.0),
         })
     }
 
@@ -386,6 +408,8 @@ impl<'a> Trainer<'a> {
             reduce_overlap_seconds: out.reduce_overlap_seconds,
             apply_seconds,
             prefetch_stall_seconds: 0.0,
+            checkpoint_stall_seconds: 0.0,
+            checkpoint_bytes_per_s: 0.0,
             allocs: crate::tensor::alloc_count() - allocs0,
             replica_host_seconds,
         })
@@ -465,6 +489,8 @@ impl<'a> Trainer<'a> {
             reduce_overlap_seconds: 0.0,
             apply_seconds,
             prefetch_stall_seconds: 0.0,
+            checkpoint_stall_seconds: 0.0,
+            checkpoint_bytes_per_s: 0.0,
             allocs: crate::tensor::alloc_count() - allocs0,
             replica_host_seconds,
         })
@@ -537,6 +563,11 @@ impl<'a> Trainer<'a> {
                 let stall = pre.take_stall();
                 let mut st = self.train_step_micro(&micro)?;
                 st.prefetch_stall_seconds = stall;
+                // Step boundary: offer a snapshot to the background
+                // checkpoint writer (and fail cleanly here if it died).
+                let (ck_stall, ck_bps) = self.tick_checkpoint()?;
+                st.checkpoint_stall_seconds = ck_stall;
+                st.checkpoint_bytes_per_s = ck_bps;
                 if self.state.steps_done % eval_interval == 0 {
                     let ev = self.eval_and_schedule(&dev)?;
                     log(&format!(
@@ -547,7 +578,21 @@ impl<'a> Trainer<'a> {
                 }
             }
             Ok(())
-        })
+        })?;
+        if let Some(stats) = self.finalize_checkpoints()? {
+            log(&format!(
+                "checkpoints: {} written, {} skipped, {:.1} MiB at {:.1} MiB/s",
+                stats.written,
+                stats.skipped,
+                stats.bytes as f64 / (1024.0 * 1024.0),
+                if stats.write_seconds > 0.0 {
+                    stats.bytes as f64 / (1024.0 * 1024.0) / stats.write_seconds
+                } else {
+                    0.0
+                }
+            ));
+        }
+        Ok(())
     }
 
     /// Write a format-v2 checkpoint: parameters + optimizer state +
@@ -569,13 +614,105 @@ impl<'a> Trainer<'a> {
         )
     }
 
+    /// Enable asynchronous checkpointing to `store`: every `every`
+    /// optimizer steps a copy-on-write snapshot of the full training
+    /// state is handed to a background writer thread, which serializes
+    /// it and publishes via the `latest`-pointer protocol. `store` is
+    /// typically a [`Retrying`](crate::storage::Retrying)-wrapped
+    /// backend so transient faults never reach the training loop.
+    pub fn enable_async_checkpoint(&mut self, store: Arc<dyn Storage>, every: usize) {
+        self.ckpt = Some(AsyncCheckpointer::new(store));
+        self.ckpt_every = every.max(1);
+        self.ckpt_last = (0, 0.0);
+    }
+
+    /// Whether asynchronous checkpointing is active.
+    pub fn checkpointing(&self) -> bool {
+        self.ckpt.is_some()
+    }
+
+    /// Freeze the full training state at this step boundary. Cheap by
+    /// construction: under the flat engine the parameter map is Arc
+    /// slab views and the Adam moments are Arc slab clones — training's
+    /// next mutation triggers the copy-on-write, not this capture.
+    pub fn snapshot(&self) -> checkpoint::Snapshot {
+        let params = match &self.state.params {
+            ParamStore::Flat(f) => f.snapshot_map(),
+            ParamStore::Map(m) => m.clone(),
+        };
+        checkpoint::Snapshot {
+            params,
+            opt: self.state.opt.snapshot(),
+            meta: checkpoint::TrainMeta {
+                steps_done: self.state.steps_done as u64,
+                micro_consumed: self.state.micro_consumed as u64,
+                sim_clock: self.state.sim_clock,
+                prev_dev_ppl: self.state.prev_dev_ppl,
+            },
+        }
+    }
+
+    /// The step-boundary checkpoint hook: surface any background write
+    /// failure as a clean `Err`; every `ckpt_every` steps, capture a
+    /// snapshot and offer it to the writer without blocking (if the
+    /// previous write is still in flight the snapshot is shed and
+    /// counted, never waited on). Returns this boundary's
+    /// (`checkpoint_stall_seconds`, `checkpoint_bytes_per_s`).
+    pub fn tick_checkpoint(&mut self) -> Result<(f64, f64)> {
+        if self.ckpt.is_none() {
+            return Ok((0.0, 0.0));
+        }
+        self.ckpt.as_ref().unwrap().check()?;
+        let t0 = std::time::Instant::now();
+        if self.state.steps_done % self.ckpt_every == 0 {
+            let snap = self.snapshot();
+            self.ckpt.as_ref().unwrap().offer(snap);
+        }
+        let stall = t0.elapsed().as_secs_f64();
+        let (bytes, secs) = self.ckpt.as_ref().unwrap().write_totals();
+        let (db, ds) = (bytes - self.ckpt_last.0, secs - self.ckpt_last.1);
+        self.ckpt_last = (bytes, secs);
+        Ok((stall, if ds > 0.0 { db as f64 / ds } else { 0.0 }))
+    }
+
+    /// Flush and shut down the background writer: block until a final
+    /// snapshot of the current state is durably published, then return
+    /// the lifetime [`CkptStats`]. A write failure — including on that
+    /// final flush — surfaces as the `Err` here. No-op `Ok(None)` when
+    /// checkpointing was never enabled.
+    pub fn finalize_checkpoints(&mut self) -> Result<Option<CkptStats>> {
+        let Some(ck) = self.ckpt.take() else { return Ok(None) };
+        ck.check()?;
+        ck.send_blocking(self.snapshot());
+        Ok(Some(ck.finish()?))
+    }
+
     /// Restore parameters (and, for v2 checkpoints, optimizer state +
     /// training clocks) from `path`. v1 param-only files restore
-    /// parameters and leave the optimizer fresh. The loaded map is
-    /// packed back into the slab arena under the flat engine — the
-    /// round-trip is bit-exact (`train_equivalence::v2_resume_*`).
+    /// parameters and leave the optimizer fresh.
     pub fn resume(&mut self, path: &Path) -> Result<()> {
-        let ck = checkpoint::load_full(path)?;
+        self.restore(checkpoint::load_full(path)?)
+    }
+
+    /// Resume from the newest durable checkpoint on a storage backend
+    /// (the `latest`-pointer protocol). `Ok(None)` if the store holds
+    /// no published checkpoint; otherwise the restored checkpoint key.
+    pub fn resume_latest(&mut self, store: &dyn Storage) -> Result<Option<String>> {
+        let Some((key, bytes)) = checkpoint::resolve_latest(store)? else {
+            return Ok(None);
+        };
+        let ck = checkpoint::load_full_bytes(&bytes)
+            .with_context(|| format!("loading checkpoint `{key}`"))?;
+        self.restore(ck)?;
+        Ok(Some(key))
+    }
+
+    /// Install a loaded checkpoint into the trainer — shared by the
+    /// file path ([`Trainer::resume`]) and the storage-backend path
+    /// ([`Trainer::resume_latest`]). The loaded map is packed back
+    /// into the slab arena under the flat engine — the round-trip is
+    /// bit-exact (`train_equivalence::v2_resume_*`).
+    pub fn restore(&mut self, ck: checkpoint::TrainCheckpoint) -> Result<()> {
         let current = self.state.params.map();
         for (name, t) in &ck.params {
             match current.get(name) {

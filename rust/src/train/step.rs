@@ -460,6 +460,190 @@ pub fn run_micro_steps_flat(
     Ok(FlatStepOut { micros, grads, reduce_seconds, reduce_overlap_seconds })
 }
 
+// ------------------------------------------------------------------------
+// Async fault-tolerant checkpointing
+// ------------------------------------------------------------------------
+
+use crate::storage::Storage;
+use crate::train::checkpoint::{self, Snapshot};
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+/// Counters the background writer publishes back to the training
+/// thread, plus the sticky first error (a failed publish is reported at
+/// the *next step boundary*, never by panicking a worker).
+struct CkptShared {
+    written: AtomicU64,
+    skipped: AtomicU64,
+    bytes: AtomicU64,
+    write_nanos: AtomicU64,
+    error: Mutex<Option<String>>,
+}
+
+/// Lifetime totals of one [`AsyncCheckpointer`], returned by
+/// [`AsyncCheckpointer::finish`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CkptStats {
+    /// Checkpoints durably published (data object + `latest` pointer).
+    pub written: u64,
+    /// Snapshots dropped because the previous write was still in
+    /// flight (the bounded channel was full).
+    pub skipped: u64,
+    /// Serialized bytes durably written.
+    pub bytes: u64,
+    /// Writer-thread seconds spent serializing + publishing.
+    pub write_seconds: f64,
+}
+
+/// The background checkpoint writer: a dedicated thread consuming
+/// frozen [`Snapshot`]s off a **one-deep** bounded channel and
+/// publishing them to a [`Storage`] backend via the `latest`-pointer
+/// protocol.
+///
+/// The training thread's only costs are the O(#tensors) copy-on-write
+/// snapshot capture and a `try_send` — if the previous write is still
+/// in flight the new snapshot is dropped (and counted in
+/// [`CkptStats::skipped`]) rather than blocking the step. A write
+/// failure (after the storage layer's retries) parks in a sticky error
+/// slot; [`AsyncCheckpointer::check`] surfaces it as a clean `Err` on
+/// the training thread at the next step boundary.
+pub struct AsyncCheckpointer {
+    tx: Option<mpsc::SyncSender<Snapshot>>,
+    writer: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<CkptShared>,
+}
+
+impl AsyncCheckpointer {
+    /// Spawn the writer thread against `store`. The store is typically
+    /// a [`Retrying`](crate::storage::Retrying) wrapper, so transient
+    /// backend faults are absorbed before they can become the sticky
+    /// error.
+    pub fn new(store: Arc<dyn Storage>) -> Self {
+        let shared = Arc::new(CkptShared {
+            written: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            write_nanos: AtomicU64::new(0),
+            error: Mutex::new(None),
+        });
+        let (tx, rx) = mpsc::sync_channel::<Snapshot>(1);
+        let sh = Arc::clone(&shared);
+        let writer = std::thread::spawn(move || {
+            while let Ok(snap) = rx.recv() {
+                let t0 = std::time::Instant::now();
+                let res = snap
+                    .to_bytes()
+                    .and_then(|bytes| {
+                        checkpoint::publish(store.as_ref(), &snap.key(), &bytes)?;
+                        Ok(bytes.len() as u64)
+                    });
+                match res {
+                    Ok(n) => {
+                        sh.bytes.fetch_add(n, Ordering::Relaxed);
+                        sh.write_nanos
+                            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        sh.written.fetch_add(1, Ordering::Release);
+                    }
+                    Err(e) => {
+                        // Sticky: keep the first failure, stop writing.
+                        // The training thread sees it at its next
+                        // `check()` and ends the run cleanly; the last
+                        // *durable* checkpoint is untouched.
+                        sh.error.lock().unwrap().get_or_insert(format!("{e:#}"));
+                        break;
+                    }
+                }
+            }
+        });
+        AsyncCheckpointer { tx: Some(tx), writer: Some(writer), shared }
+    }
+
+    /// Surface a background write failure as a clean `Err` — called by
+    /// the trainer at each step boundary.
+    pub fn check(&self) -> Result<()> {
+        match self.shared.error.lock().unwrap().as_ref() {
+            Some(e) => Err(anyhow!("async checkpoint writer failed: {e}")),
+            None => Ok(()),
+        }
+    }
+
+    /// Offer a snapshot without blocking. Returns `true` if the writer
+    /// accepted it; `false` means the previous write was still in
+    /// flight (or the writer already died — [`check`](Self::check)
+    /// reports why) and the snapshot was dropped.
+    pub fn offer(&self, snap: Snapshot) -> bool {
+        let Some(tx) = &self.tx else { return false };
+        match tx.try_send(snap) {
+            Ok(()) => true,
+            Err(_) => {
+                self.shared.skipped.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Blocking send — the end-of-run flush, where durability beats
+    /// latency. A dead writer (sticky error pending) is not an error
+    /// here; `check`/`finish` report it.
+    pub fn send_blocking(&self, snap: Snapshot) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(snap);
+        }
+    }
+
+    /// Checkpoints durably published so far.
+    pub fn written(&self) -> u64 {
+        self.shared.written.load(Ordering::Acquire)
+    }
+
+    /// Cumulative (bytes written, writer seconds) — the trainer diffs
+    /// successive readings into a per-step write bandwidth.
+    pub fn write_totals(&self) -> (u64, f64) {
+        // Acquire on `written` orders these loads after the writer's
+        // Release increment, so bytes/nanos are never ahead of a
+        // not-yet-counted checkpoint.
+        self.shared.written.load(Ordering::Acquire);
+        let bytes = self.shared.bytes.load(Ordering::Relaxed);
+        let nanos = self.shared.write_nanos.load(Ordering::Relaxed);
+        (bytes, nanos as f64 * 1e-9)
+    }
+
+    /// Close the channel, join the writer, and return lifetime totals.
+    /// A pending sticky error becomes the `Err` here, so a failure on
+    /// the very last write cannot vanish.
+    pub fn finish(mut self) -> Result<CkptStats> {
+        self.tx.take();
+        if let Some(w) = self.writer.take() {
+            if w.join().is_err() {
+                return Err(anyhow!("async checkpoint writer panicked"));
+            }
+        }
+        self.check()?;
+        let (bytes, write_seconds) = (
+            self.shared.bytes.load(Ordering::Relaxed),
+            self.shared.write_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        );
+        Ok(CkptStats {
+            written: self.shared.written.load(Ordering::Acquire),
+            skipped: self.shared.skipped.load(Ordering::Relaxed),
+            bytes,
+            write_seconds,
+        })
+    }
+}
+
+impl Drop for AsyncCheckpointer {
+    fn drop(&mut self) {
+        // Abandoned without `finish()` (error unwind): close the feed
+        // and let the writer drain — never leave a detached thread
+        // holding the storage handle.
+        self.tx.take();
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -575,5 +759,88 @@ mod tests {
         assert_eq!(p.banks().len(), 4);
         let p = Pipeline::new(0, 0);
         assert_eq!(p.micro_per_step(), 1);
+    }
+
+    use crate::optim::{MomentSnapshot, OptimSnapshot};
+    use crate::storage::{FaultPlan, FaultyMem};
+    use crate::train::checkpoint::TrainMeta;
+
+    fn snap_at(steps: u64) -> Snapshot {
+        let mut params = BTreeMap::new();
+        params.insert("w".to_string(), Tensor::new(vec![3], vec![1.0, 2.0, steps as f32]));
+        Snapshot {
+            params,
+            opt: OptimSnapshot {
+                kind: "sgd".into(),
+                lr: 0.5,
+                t: steps,
+                rows: MomentSnapshot::Rows { m: BTreeMap::new(), v: BTreeMap::new() },
+            },
+            meta: TrainMeta { steps_done: steps, ..Default::default() },
+        }
+    }
+
+    /// Happy path: snapshots offered at step boundaries land durably,
+    /// `latest` tracks the newest, and the stats add up.
+    #[test]
+    fn async_checkpointer_publishes_and_counts() {
+        let store = Arc::new(FaultyMem::reliable());
+        let ck = AsyncCheckpointer::new(store.clone() as Arc<dyn Storage>);
+        ck.send_blocking(snap_at(1));
+        ck.send_blocking(snap_at(2));
+        let stats = ck.finish().unwrap();
+        assert_eq!(stats.written, 2);
+        assert_eq!(stats.skipped, 0);
+        assert!(stats.bytes > 0);
+        let (key, bytes) = checkpoint::resolve_latest(store.as_ref()).unwrap().unwrap();
+        assert_eq!(key, checkpoint::checkpoint_key(2));
+        let back = checkpoint::load_full_bytes(&bytes).unwrap();
+        assert_eq!(back.meta.steps_done, 2);
+    }
+
+    /// A permanently failing backend surfaces as a clean `Err` from
+    /// `check()`/`finish()` on the training thread — no panic, no hang,
+    /// and the store holds no `latest` pointer.
+    #[test]
+    fn async_checkpointer_failure_is_a_clean_error_at_the_boundary() {
+        let store = Arc::new(FaultyMem::new(FaultPlan {
+            permanent_from: Some(1),
+            seed: 7,
+            ..FaultPlan::none()
+        }));
+        let ck = AsyncCheckpointer::new(store.clone() as Arc<dyn Storage>);
+        ck.send_blocking(snap_at(1));
+        // The writer dies on the failed publish; wait for it to park
+        // the sticky error, then the boundary check reports it.
+        while ck.check().is_ok() && ck.written() == 0 {
+            std::thread::yield_now();
+        }
+        let err = ck.finish().unwrap_err();
+        assert!(err.to_string().contains("async checkpoint writer failed"), "{err}");
+        assert!(checkpoint::resolve_latest(store.as_ref()).unwrap().is_none());
+    }
+
+    /// The one-deep channel sheds load instead of blocking: with the
+    /// writer wedged on an artificially slow store, extra offers are
+    /// skipped, and the skip is counted.
+    #[test]
+    fn async_checkpointer_sheds_when_writer_is_busy() {
+        let store = Arc::new(FaultyMem::new(FaultPlan {
+            latency_ms: 25.0,
+            seed: 3,
+            ..FaultPlan::none()
+        }));
+        let ck = AsyncCheckpointer::new(store as Arc<dyn Storage>);
+        // First two fill the writer + the one-deep buffer; keep
+        // offering until one is shed (timing-independent: the writer
+        // sleeps ~25ms per publish, so this terminates quickly).
+        let mut offered = 2u64;
+        ck.send_blocking(snap_at(1));
+        while ck.offer(snap_at(offered)) {
+            offered += 1;
+        }
+        let stats = ck.finish().unwrap();
+        assert!(stats.skipped >= 1);
+        assert_eq!(stats.written + stats.skipped, offered);
     }
 }

@@ -1,0 +1,257 @@
+//! Kill-mid-write crash recovery: a training run whose checkpoint
+//! backend dies (or whose process is killed) mid-write must surface a
+//! clean error at the next step boundary, leave `latest` pointing at
+//! the last durably-published checkpoint, and resume from it to
+//! **bitwise-identical** parameters versus a run that never stopped.
+//! Requires `make artifacts` (same gate as `train_equivalence`).
+
+use hybridnmt::config::{
+    DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig,
+};
+use hybridnmt::data::vocab::{BOS, EOS, PAD};
+use hybridnmt::parallel::Batch;
+use hybridnmt::rng::Rng;
+use hybridnmt::runtime::Engine;
+use hybridnmt::storage::{FaultPlan, FaultyMem, LocalDir, Retrying, RetryPolicy, Storage};
+use hybridnmt::tensor::{ITensor, Tensor};
+use hybridnmt::train::checkpoint::{self, checkpoint_key, resolve_latest};
+use hybridnmt::train::Trainer;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn engine() -> Engine {
+    Engine::load("artifacts", "tiny").expect("run `make artifacts` first")
+}
+
+/// A deterministic random batch padded to the artifact shapes (same
+/// generator as `train_equivalence`).
+fn random_batch(d: &ModelDims, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (b, m, n) = (d.batch, d.max_src, d.max_tgt);
+    let mut src = vec![PAD; b * m];
+    let mut srclen = vec![0i32; b];
+    let mut tgt_in = vec![PAD; b * n];
+    let mut tgt_out = vec![PAD; b * n];
+    let mut tmask = vec![0.0f32; b * n];
+    for bi in 0..b {
+        let sl = rng.range(2, m + 1);
+        srclen[bi] = sl as i32;
+        for t in 0..sl {
+            src[bi * m + t] = rng.range(4, d.vocab) as i32;
+        }
+        let tl = rng.range(1, n);
+        tgt_in[bi * n] = BOS;
+        for t in 0..tl {
+            let tok = rng.range(4, d.vocab) as i32;
+            tgt_in[bi * n + t + 1] = tok;
+            tgt_out[bi * n + t] = tok;
+        }
+        tgt_out[bi * n + tl] = EOS;
+        for t in 0..=tl {
+            tmask[bi * n + t] = 1.0;
+        }
+    }
+    Batch {
+        src: ITensor::new(vec![b, m], src),
+        srclen: ITensor::new(vec![b], srclen),
+        tgt_in: ITensor::new(vec![b, n], tgt_in),
+        tgt_out: ITensor::new(vec![b, n], tgt_out),
+        tmask: Tensor::new(vec![b, n], tmask),
+    }
+}
+
+fn test_exp(e: &Engine) -> Experiment {
+    Experiment {
+        model: e.dims().clone(),
+        strategy: Strategy::Hybrid,
+        hw: HwConfig::default(),
+        train: TrainConfig { seed: 3, steps: 4, eval_interval: 100, ..Default::default() },
+        data: DataConfig::wmt14_sim(600),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn assert_params_bitwise(label: &str, a: &BTreeMap<String, Tensor>, b: &BTreeMap<String, Tensor>) {
+    assert_eq!(a.len(), b.len(), "{label}: param count");
+    for (name, x) in a {
+        let y = b.get(name).unwrap_or_else(|| panic!("{label}: missing `{name}`"));
+        assert_eq!(x.shape(), y.shape(), "{label}: `{name}` shape");
+        for (i, (u, v)) in x.data().iter().zip(y.data()).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "{label}: param `{name}`[{i}] {u} vs {v}");
+        }
+    }
+}
+
+/// Train `steps` single-micro steps with no checkpointing — the
+/// uninterrupted reference bits.
+fn reference_params(e: &Engine, pool: &[Batch], steps: usize) -> BTreeMap<String, Tensor> {
+    let exp = test_exp(e);
+    let mut tr = Trainer::new(e, &exp).unwrap();
+    for b in &pool[..steps] {
+        tr.train_step(b).unwrap();
+    }
+    tr.params().clone()
+}
+
+/// The tentpole acceptance test. The backend dies permanently at write
+/// attempt #3 — i.e. the step-1 checkpoint (data + `latest` pointer)
+/// publishes, then the store goes dark while a later checkpoint is in
+/// flight, exactly what a kill mid-write looks like to the protocol.
+/// The training thread must see a clean `Err` (at a boundary check or
+/// at the final flush — never a panic or hang), `latest` must still
+/// resolve to the step-1 checkpoint, and resuming from it must land on
+/// the same bits as never crashing. Checkpointing itself must not
+/// perturb the numerics: the reference run has no checkpointer at all.
+#[test]
+fn kill_mid_write_resume_is_bitwise_exact() {
+    let e = engine();
+    let d = e.dims().clone();
+    let exp = test_exp(&e);
+    let steps = 4;
+    let pool: Vec<Batch> = (0..steps).map(|j| random_batch(&d, 900 + j as u64)).collect();
+    let reference = reference_params(&e, &pool, steps);
+
+    let store = Arc::new(FaultyMem::new(FaultPlan {
+        permanent_from: Some(3),
+        ..FaultPlan::none()
+    }));
+    let mut crashed = Trainer::new(&e, &exp).unwrap();
+    crashed.enable_async_checkpoint(store.clone(), 1);
+    let mut boundary_err = None;
+    for b in &pool {
+        crashed.train_step(b).unwrap();
+        match crashed.tick_checkpoint() {
+            Ok(_) => {}
+            Err(err) => {
+                boundary_err = Some(err);
+                break;
+            }
+        }
+    }
+    // The failure surfaces at a step boundary if the writer had already
+    // hit the outage, otherwise at the final blocking flush — but it
+    // MUST surface, and as an error naming the async writer.
+    let err = match boundary_err {
+        Some(err) => err,
+        None => crashed
+            .finalize_checkpoints()
+            .expect_err("permanent storage outage must fail the run"),
+    };
+    assert!(
+        format!("{err:#}").contains("async checkpoint writer failed"),
+        "unexpected error: {err:#}"
+    );
+    drop(crashed); // the "kill": joins the writer thread, no more writes
+
+    // The latest pointer never moved past the last durable publish.
+    let (key, bytes) =
+        resolve_latest(store.as_ref()).unwrap().expect("step-1 checkpoint is durable");
+    assert_eq!(key, checkpoint_key(1));
+    let ck = checkpoint::load_full_bytes(&bytes).expect("published object is never torn");
+    assert_eq!(ck.meta.steps_done, 1);
+
+    // Resume and replay the remaining batches: bitwise the reference.
+    let mut resumed = Trainer::new(&e, &exp).unwrap();
+    let resumed_key =
+        resumed.resume_latest(store.as_ref()).unwrap().expect("latest must resolve");
+    assert_eq!(resumed_key, checkpoint_key(1));
+    assert_eq!(resumed.steps_done(), 1);
+    for b in &pool[1..] {
+        resumed.train_step(b).unwrap();
+    }
+    assert_params_bitwise("resumed-after-kill vs uninterrupted", &reference, resumed.params());
+}
+
+/// Transient faults under the retry layer heal without the trainer ever
+/// noticing: write #1 fails outright and write #3 tears, both retry to
+/// success, the run completes, and `latest` lands on the final
+/// checkpoint with clean bytes.
+#[test]
+fn transient_faults_retry_to_a_clean_final_checkpoint() {
+    let e = engine();
+    let d = e.dims().clone();
+    let exp = test_exp(&e);
+    let steps = 2;
+    let pool: Vec<Batch> = (0..steps).map(|j| random_batch(&d, 950 + j as u64)).collect();
+    let reference = reference_params(&e, &pool, steps);
+
+    let store = Arc::new(Retrying::new(
+        FaultyMem::new(FaultPlan {
+            seed: 5,
+            fail_writes: vec![1],
+            torn_writes: vec![3],
+            ..FaultPlan::none()
+        }),
+        RetryPolicy::default(),
+    ));
+    let mut tr = Trainer::new(&e, &exp).unwrap();
+    tr.enable_async_checkpoint(store.clone(), 1);
+    for b in &pool {
+        tr.train_step(b).unwrap();
+        tr.tick_checkpoint().unwrap();
+    }
+    let stats = tr
+        .finalize_checkpoints()
+        .unwrap()
+        .expect("checkpointing was enabled");
+    assert!(stats.written >= 1, "final flush must publish: {stats:?}");
+    assert_params_bitwise("retried run vs reference", &reference, tr.params());
+
+    let (key, bytes) = resolve_latest(store.as_ref()).unwrap().expect("final checkpoint");
+    assert_eq!(key, checkpoint_key(steps as u64));
+    let ck = checkpoint::load_full_bytes(&bytes).expect("retried publish is whole");
+    assert_eq!(ck.meta.steps_done, steps as u64);
+    assert_eq!(ck.params.len(), reference.len());
+}
+
+/// The on-disk variant: a killed writer leaves a dotted temp file (and
+/// possibly a fully-written data object whose pointer repoint never
+/// happened). `resolve_latest` must ignore both, `sweep_temps` reclaims
+/// the temp, and resume from the surviving pointer is bitwise-exact.
+#[test]
+fn local_dir_kill_artifacts_do_not_confuse_resume() {
+    let e = engine();
+    let d = e.dims().clone();
+    let exp = test_exp(&e);
+    let steps = 4;
+    let resumed_from = 2;
+    let pool: Vec<Batch> = (0..steps).map(|j| random_batch(&d, 990 + j as u64)).collect();
+    let reference = reference_params(&e, &pool, steps);
+
+    let root = std::env::temp_dir()
+        .join(format!("hynmt_crash_recovery_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    // Phase 1: train 2 of 4 steps, checkpointing every step, then stop.
+    {
+        let mut tr = Trainer::new(&e, &exp).unwrap();
+        tr.enable_async_checkpoint(Arc::new(LocalDir::new(&root).unwrap()), 1);
+        for b in &pool[..resumed_from] {
+            tr.train_step(b).unwrap();
+            tr.tick_checkpoint().unwrap();
+        }
+        tr.finalize_checkpoints().unwrap().expect("stats");
+    }
+
+    // Phase 2: fake the kill-mid-write debris a crashed step-3 writer
+    // would leave behind — a dotted temp never renamed, plus a complete
+    // data object whose `latest` repoint never happened.
+    std::fs::write(root.join(".ck-00000003.bin.tmp99"), b"torn-mid-write").unwrap();
+    let s = LocalDir::new(&root).unwrap();
+    s.put_atomic("ck-00000003.bin", b"published-but-never-pointed-at").unwrap();
+    assert_eq!(s.sweep_temps().unwrap(), 1, "exactly the one orphan temp");
+
+    // Phase 3: resume must land on the step-2 checkpoint and finish to
+    // the reference bits.
+    let (key, _) = resolve_latest(&s).unwrap().expect("latest survives the crash");
+    assert_eq!(key, checkpoint_key(resumed_from as u64));
+    let mut resumed = Trainer::new(&e, &exp).unwrap();
+    resumed.resume_latest(&s).unwrap().expect("latest must resolve");
+    assert_eq!(resumed.steps_done(), resumed_from);
+    for b in &pool[resumed_from..] {
+        resumed.train_step(b).unwrap();
+    }
+    assert_params_bitwise("local-dir resume vs uninterrupted", &reference, resumed.params());
+
+    let _ = std::fs::remove_dir_all(&root);
+}

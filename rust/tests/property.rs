@@ -341,3 +341,139 @@ fn prop_coalescer_fill_floor_for_uniform_traffic() {
         }
     }
 }
+
+// --------------------------------------------------------------------------
+// Checkpoint truncation sweep (robustness: torn files load as errors)
+// --------------------------------------------------------------------------
+
+use hybridnmt::optim::{MomentRowsView, OptimStateView};
+use hybridnmt::train::checkpoint::{self, TrainMeta};
+use std::collections::BTreeMap;
+
+/// A small random parameter map plus matching Adam moment rows — tiny
+/// on purpose so the per-byte truncation sweep below stays cheap.
+fn random_checkpoint_state(
+    rng: &mut Rng,
+) -> (BTreeMap<String, Tensor>, BTreeMap<String, Vec<f32>>, BTreeMap<String, Vec<f32>>) {
+    let mut params = BTreeMap::new();
+    let mut m = BTreeMap::new();
+    let mut v = BTreeMap::new();
+    let n_params = rng.range(1, 4);
+    for i in 0..n_params {
+        let name = format!("p{i}_w");
+        let n = rng.range(1, 8);
+        let data: Vec<f32> = (0..n).map(|_| rng.uniform(1.0)).collect();
+        params.insert(name.clone(), Tensor::new(vec![n], data));
+        m.insert(name.clone(), (0..n).map(|_| rng.uniform(0.1)).collect());
+        v.insert(name, (0..n).map(|_| rng.uniform(0.1)).collect());
+    }
+    (params, m, v)
+}
+
+/// Every proper prefix of a valid v2 checkpoint — a torn write frozen
+/// at any byte — must load as a clean `Err`, never a panic and never a
+/// silently-shortened checkpoint. The format is self-delimiting with a
+/// trailing EOF check, so no strict prefix can parse.
+#[test]
+fn prop_every_truncated_checkpoint_prefix_errors() {
+    let mut rng = Rng::new(0xC4C4);
+    for trial in 0..8 {
+        let (params, m, v) = random_checkpoint_state(&mut rng);
+        let view = OptimStateView {
+            kind: "adam",
+            lr: 1e-3,
+            t: 5 + trial,
+            rows: MomentRowsView::Maps { m: &m, v: &v },
+        };
+        let meta = TrainMeta {
+            steps_done: 7 + trial,
+            micro_consumed: 28,
+            sim_clock: 12.5,
+            prev_dev_ppl: if trial % 2 == 0 { Some(33.25) } else { None },
+        };
+        let bytes = checkpoint::to_bytes(&params, &view, &meta).unwrap();
+
+        // The untruncated buffer round-trips exactly.
+        let full = checkpoint::load_full_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("trial {trial}: full buffer must load: {e:#}"));
+        assert_eq!(full.params.len(), params.len(), "trial {trial}");
+        assert_eq!(full.meta, meta, "trial {trial}");
+        let opt = full.opt.expect("v2 carries optimizer state");
+        assert_eq!(opt.kind, "adam", "trial {trial}");
+        assert_eq!(opt.t, 5 + trial, "trial {trial}");
+
+        // ...and every stepped prefix is a clean error.
+        for cut in 0..bytes.len() {
+            assert!(
+                checkpoint::load_full_bytes(&bytes[..cut]).is_err(),
+                "trial {trial}: prefix of {cut}/{} bytes must not parse",
+                bytes.len()
+            );
+        }
+    }
+}
+
+/// Single-byte corruption anywhere in a checkpoint never panics: it
+/// either fails the parse (counts/lengths are bounds-checked against
+/// the buffer) or decodes to different-but-well-formed values. Flipped
+/// length fields are the interesting case — a naive reader would
+/// attempt a multi-gigabyte allocation.
+#[test]
+fn prop_corrupt_checkpoint_bytes_never_panic() {
+    let mut rng = Rng::new(0xBADC);
+    let (params, m, v) = random_checkpoint_state(&mut rng);
+    let view =
+        OptimStateView { kind: "adam", lr: 1e-3, t: 3, rows: MomentRowsView::Maps { m: &m, v: &v } };
+    let bytes = checkpoint::to_bytes(&params, &view, &TrainMeta::default()).unwrap();
+    for _trial in 0..200 {
+        let mut evil = bytes.clone();
+        let pos = rng.range(0, evil.len());
+        let flip = 1u8 << rng.range(0, 8);
+        evil[pos] ^= flip;
+        // Must return (Ok or Err), not panic or OOM-abort.
+        let _ = checkpoint::load_full_bytes(&evil);
+    }
+    // All-0xFF counts: the worst-case "allocate u32::MAX rows" input.
+    let mut evil = bytes.clone();
+    for b in &mut evil[8..12] {
+        *b = 0xFF;
+    }
+    assert!(checkpoint::load_full_bytes(&evil).is_err(), "absurd param count must be rejected");
+}
+
+/// The params-only `load` path on a truncated v2 file: any cut inside
+/// the parameter section errors; a cut at-or-past the end of the
+/// parameter section loads the params (v2 files legitimately carry
+/// optimizer state after them, so no EOF check applies).
+#[test]
+fn prop_truncated_checkpoint_file_load_boundary_is_exact() {
+    let mut rng = Rng::new(0x70C7);
+    let (params, m, v) = random_checkpoint_state(&mut rng);
+    let view =
+        OptimStateView { kind: "adam", lr: 1e-3, t: 9, rows: MomentRowsView::Maps { m: &m, v: &v } };
+    let bytes = checkpoint::to_bytes(&params, &view, &TrainMeta::default()).unwrap();
+
+    let dir = std::env::temp_dir().join("hynmt_prop_trunc");
+    std::fs::create_dir_all(&dir).unwrap();
+    // The v1 file of the same params has the same length as the v2
+    // magic + parameter section, which locates the section boundary.
+    let v1_path = dir.join("v1.bin");
+    checkpoint::save(&v1_path, &params).unwrap();
+    let boundary = std::fs::metadata(&v1_path).unwrap().len() as usize;
+    assert!(boundary <= bytes.len());
+
+    let path = dir.join("cut.bin");
+    let mut cuts: Vec<usize> = (0..bytes.len()).step_by(13).collect();
+    cuts.extend([boundary - 1, boundary, bytes.len()]);
+    for cut in cuts {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let got = checkpoint::load(&path);
+        if cut < boundary {
+            assert!(got.is_err(), "cut {cut} < boundary {boundary} must fail");
+        } else {
+            let loaded = got.unwrap_or_else(|e| panic!("cut {cut} >= boundary {boundary}: {e:#}"));
+            assert_eq!(loaded.len(), params.len(), "cut {cut}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

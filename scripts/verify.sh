@@ -64,12 +64,17 @@ if path.endswith("BENCH_train.json"):
     # the map reference) must report token throughput, the per-step
     # wall time, the reduce/apply/stall phase breakdown, the per-step
     # parameter-upload count, the share of the reduce hidden under
-    # compute (overlap_pct) and the f32 allocation churn
-    # (allocs_per_step). A train-bench run that stopped writing any of
-    # these is a regression, not a formatting choice.
+    # compute (overlap_pct), the f32 allocation churn
+    # (allocs_per_step), and the async-checkpoint columns: the
+    # training-thread stall per step (checkpoint_stall_ms, ~0 under
+    # copy-on-write snapshots — that's the claim) and the background
+    # writer bandwidth (checkpoint_bytes_per_s). A train-bench run that
+    # stopped writing any of these is a regression, not a formatting
+    # choice.
     required = ["tok_per_s", "step_ms", "reduce_ms", "overlap_pct",
                 "apply_ms", "stall_ms", "uploads_per_step",
-                "allocs_per_step"]
+                "allocs_per_step", "checkpoint_stall_ms",
+                "checkpoint_bytes_per_s"]
     prefixes = {k.rsplit(".", 1)[0] for k in data}
     if not prefixes:
         raise SystemExit(f"{path}: no train rows")
