@@ -1,6 +1,6 @@
 # hybridnmt build/verify entry points (see README.md).
 
-.PHONY: artifacts verify lint doc clean-artifacts serve-bench train-bench crash-test
+.PHONY: artifacts verify lint doc clean-artifacts serve-bench train-bench crash-test dist-test
 
 # AOT-compile the JAX model to HLO-text artifacts + manifests.
 # aot.py uses package-relative imports, so run it as a module from
@@ -47,6 +47,25 @@ crash-test:
 		cargo test --test property checkpoint; \
 	else \
 		echo "crash-test: cargo not available, skipping"; \
+	fi
+
+# Distributed training: the 2-process loopback TCP smoke in both
+# collective modes (rank-0 parameter server + tree/ring all-reduce),
+# the wire-protocol corruption sweep, and the full equivalence /
+# fault-injection suite (bitwise dist-vs-single-process identity,
+# killed peers and torn frames surfacing as typed step-boundary
+# errors). Needs `make artifacts` first; degrades to a notice on
+# machines without the rust toolchain.
+dist-test:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo run --release -- train --model tiny --steps 2 --sentences 600 \
+			--dist 2 --dist-mode ps && \
+		cargo run --release -- train --model tiny --steps 2 --sentences 600 \
+			--dist 2 --dist-mode replicated && \
+		cargo test --test property prop_wire && \
+		cargo test --test dist_equivalence; \
+	else \
+		echo "dist-test: cargo not available, skipping"; \
 	fi
 
 doc:

@@ -10,7 +10,7 @@ pub mod synthetic;
 pub mod vocab;
 
 pub use batcher::{Batcher, Example};
-pub use prefetch::{with_prefetch, PrefetchHandle};
+pub use prefetch::{with_prefetch, with_prefetch_from, PrefetchHandle};
 pub use bpe::Bpe;
 pub use synthetic::{Corpus, SentencePair};
 pub use vocab::{Vocab, BOS, EOS, PAD, UNK};

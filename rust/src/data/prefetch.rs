@@ -16,25 +16,33 @@
 use super::batcher::Batcher;
 use crate::parallel::Batch;
 use anyhow::{anyhow, Result};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 
 /// Consumer-side handle: yields batches in stream order and accounts
 /// the time spent waiting on the producer.
 pub struct PrefetchHandle {
     rx: mpsc::Receiver<Batch>,
     stall_seconds: f64,
+    /// Producer panic message, parked by the producer thread before it
+    /// drops the channel — `next()` surfaces it as the step error.
+    fault: Arc<Mutex<Option<String>>>,
 }
 
 impl PrefetchHandle {
     /// Next batch in stream order. Blocks (and accounts the stall) when
-    /// the producer has not kept up. Errors only if the producer
-    /// stopped before delivering `total` batches (it panicked).
+    /// the producer has not kept up. A producer that stopped early —
+    /// including one that *panicked* — is a clean `Err` carrying its
+    /// panic message, never a propagated panic: in the distributed
+    /// path this is what turns a bad batch into a step-boundary abort
+    /// instead of a killed rank with silent peers.
     pub fn next(&mut self) -> Result<Batch> {
         let t0 = std::time::Instant::now();
-        let b = self
-            .rx
-            .recv()
-            .map_err(|_| anyhow!("batch prefetch thread stopped early"))?;
+        let b = self.rx.recv().map_err(|_| {
+            match self.fault.lock().unwrap().take() {
+                Some(msg) => anyhow!("batch prefetch thread panicked: {msg}"),
+                None => anyhow!("batch prefetch thread stopped early"),
+            }
+        })?;
         self.stall_seconds += t0.elapsed().as_secs_f64();
         Ok(b)
     }
@@ -62,18 +70,45 @@ pub fn with_prefetch<R>(
     depth: usize,
     f: impl FnOnce(&mut PrefetchHandle) -> Result<R>,
 ) -> Result<R> {
+    with_prefetch_from(|| batcher.next_train(), total, depth, f)
+}
+
+/// [`with_prefetch`] over an arbitrary batch source (the distributed
+/// driver feeds rank-sliced streams through this). Each `produce()`
+/// call runs under `catch_unwind`: a panic parks its message for the
+/// consumer and closes the channel, so the consumer's `next()` reports
+/// a first-error abort at the step boundary — matching
+/// `parallel::run_sharded` and `serve::server` semantics — instead of
+/// the panic resurfacing at scope join and killing the process.
+pub fn with_prefetch_from<R>(
+    mut produce: impl FnMut() -> Batch + Send,
+    total: usize,
+    depth: usize,
+    f: impl FnOnce(&mut PrefetchHandle) -> Result<R>,
+) -> Result<R> {
     let (tx, rx) = mpsc::sync_channel::<Batch>(depth.max(1));
+    let fault: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+    let producer_fault = Arc::clone(&fault);
     std::thread::scope(|scope| {
         scope.spawn(move || {
             for _ in 0..total {
-                let b = batcher.next_train();
+                let b = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || produce(),
+                )) {
+                    Ok(b) => b,
+                    Err(p) => {
+                        *producer_fault.lock().unwrap() =
+                            Some(crate::util::panic_message(&*p));
+                        return; // channel drops; consumer sees the fault
+                    }
+                };
                 if tx.send(b).is_err() {
                     // Consumer finished early (error path): stop quietly.
                     return;
                 }
             }
         });
-        let mut handle = PrefetchHandle { rx, stall_seconds: 0.0 };
+        let mut handle = PrefetchHandle { rx, stall_seconds: 0.0, fault };
         f(&mut handle)
     })
 }
@@ -128,6 +163,34 @@ mod tests {
             h.next()
         });
         assert!(res.is_err());
+    }
+
+    /// A panicking producer surfaces as a clean `Err` carrying the
+    /// panic message — never a propagated panic at scope join (the
+    /// distributed driver turns this into a step-boundary abort).
+    #[test]
+    fn producer_panic_is_a_clean_error() {
+        let mut b = batcher();
+        let mut made = 0usize;
+        let res = with_prefetch_from(
+            || {
+                made += 1;
+                if made > 2 {
+                    panic!("bad batch at index {made}");
+                }
+                b.next_train()
+            },
+            6,
+            2,
+            |h| {
+                h.next()?;
+                h.next()?;
+                h.next()
+            },
+        );
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("batch prefetch thread panicked"), "{err}");
+        assert!(err.contains("bad batch at index 3"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,636 @@
+//! The two cross-process reduction topologies, both bitwise-identical
+//! to the single-process flat engine.
+//!
+//! Every rank arrives at [`DistComm::finish_step`] holding its *local*
+//! raw bucket sums — the output of PR 5's intra-process tree reduce
+//! over its own `L = replicas × accum` micro-batch shards — plus the
+//! per-shard loss/token records. The comm layer's job is to finish the
+//! global fixed-shape binary tree over all `P × L` shards and get the
+//! identical optimizer update applied everywhere.
+//!
+//! ## Why this is exact (the factorization)
+//!
+//! The single-process engine folds `M` shards through a fixed binary
+//! tree over global shard order. When rank `r` owns the contiguous
+//! block `[r·L, (r+1)·L)` and `L` is a power of two, the first
+//! `log2 L` tree passes combine only *within* blocks — exactly the
+//! fold each rank already ran locally — and the remaining passes are
+//! the same binary tree over the `P` block partials in rank order.
+//! [`DistComm::new`] rejects non-power-of-two `L`, because for odd
+//! `L` the global tree pairs shards *across* the block boundary and no
+//! local-then-global schedule can reproduce it.
+//!
+//! * **ps** — workers send their partials to rank 0; rank 0 runs the
+//!   outer tree (`tree_fold_segments` over `[rank 0, rank 1, …]`),
+//!   normalizes, applies its optimizer, and broadcasts the updated
+//!   parameter buckets. Worker-side optimizer state is intentionally
+//!   untouched (rank 0's is authoritative — its checkpoints carry it).
+//! * **replicated** — a ring all-gather moves every rank's partials to
+//!   every rank in `P − 1` rounds (round `k`: forward the block
+//!   received in round `k − 1`); then *each* rank runs the identical
+//!   outer tree and applies its own optimizer. The ring only moves
+//!   bytes — all arithmetic happens in one fixed order on every rank —
+//!   which is why determinism survives it.
+//!
+//! Loss and token counts ship as per-shard 16-byte records and are
+//! left-folded in global shard order in f64, exactly matching the
+//! single-process fold (not a fold of per-rank partial sums, which
+//! would round differently).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::transport::DistTransport;
+use super::wire::{self, Frame, FrameKind};
+use super::{Backoff, DistError, DistMode, DistResult, Retrier, ShardMeta};
+use crate::optim::Optimizer;
+use crate::tensor::flat::{tree_fold_segments, FlatGrads, FlatParams};
+
+/// What every rank knows after a successful distributed step: the
+/// global loss/token fold and the (identical-everywhere) gradient norm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GlobalStep {
+    pub loss_sum: f64,
+    pub ntok: f64,
+    pub grad_norm: f64,
+    /// Seconds this rank spent in the optimizer apply (0 on ps
+    /// workers — rank 0 applies for them).
+    pub apply_seconds: f64,
+    /// Seconds spent moving/validating/folding cross-process data.
+    pub comm_seconds: f64,
+}
+
+/// One rank's communicator: a [`DistTransport`] plus the topology.
+/// All methods take `&self`; per-call retriers are seeded
+/// deterministically from (rank, step).
+pub struct DistComm {
+    transport: Box<dyn DistTransport>,
+    mode: DistMode,
+    /// Local shards per rank (`replicas × accum`) — the block size of
+    /// the factorized tree.
+    local_shards: usize,
+    backoff: Backoff,
+}
+
+impl DistComm {
+    /// Wrap a transport. Fails with a `Config` error when `world > 1`
+    /// and `local_shards` is not a power of two — the factorization
+    /// above would not hold and the run would silently diverge from
+    /// single-process.
+    pub fn new(
+        transport: Box<dyn DistTransport>,
+        mode: DistMode,
+        local_shards: usize,
+        backoff: Backoff,
+    ) -> DistResult<Self> {
+        let local_shards = local_shards.max(1);
+        if transport.world() > 1 && !local_shards.is_power_of_two() {
+            return Err(DistError::config(format!(
+                "distributed training needs a power-of-two local shard count \
+                 (replicas × accum) so the global reduction tree factorizes \
+                 into per-rank trees; got {local_shards}"
+            )));
+        }
+        Ok(DistComm { transport, mode, local_shards, backoff })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.transport.rank()
+    }
+
+    pub fn world(&self) -> usize {
+        self.transport.world()
+    }
+
+    pub fn mode(&self) -> DistMode {
+        self.mode
+    }
+
+    pub fn local_shards(&self) -> usize {
+        self.local_shards
+    }
+
+    /// Send with Transient-only retries (scripted drops on the fake
+    /// transport; connect races on TCP). Deterministic jitter seed per
+    /// (destination, step).
+    fn send_hub_retry(&self, to: usize, frame: &Frame) -> DistResult<()> {
+        let mut policy = self.backoff.clone();
+        policy.seed ^= (to as u64) << 32 ^ frame.step;
+        Retrier::new(policy).run("hub send", || self.transport.send_hub(to, frame))
+    }
+
+    /// Finish one optimizer step: complete the global reduction, get
+    /// the update applied, and return the global scalars. `grads` are
+    /// this rank's **raw** (un-normalized) local bucket sums; `metas`
+    /// its per-shard records in local shard order. On any error the
+    /// caller should [`DistComm::abort`] and stop — the step boundary
+    /// is the fault boundary.
+    pub fn finish_step(
+        &self,
+        step: u64,
+        params: &mut FlatParams,
+        opt: &mut dyn Optimizer,
+        grads: FlatGrads,
+        metas: &[ShardMeta],
+        apply_workers: usize,
+    ) -> Result<GlobalStep> {
+        if metas.len() != self.local_shards {
+            return Err(anyhow!(
+                "finish_step got {} shard metas, configured for {}",
+                metas.len(),
+                self.local_shards
+            ));
+        }
+        if self.world() == 1 {
+            return local_apply(params, opt, grads, metas.to_vec(), apply_workers, 0.0);
+        }
+        match (self.mode, self.rank()) {
+            (DistMode::Ps, 0) => self.ps_root(step, params, opt, grads, metas, apply_workers),
+            (DistMode::Ps, _) => self.ps_worker(step, params, grads, metas),
+            (DistMode::Replicated, _) => {
+                self.replicated(step, params, opt, grads, metas, apply_workers)
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- ps
+
+    /// Rank 0: receive every worker's partials (in rank order), run the
+    /// outer tree, normalize, apply, broadcast updated parameters.
+    fn ps_root(
+        &self,
+        step: u64,
+        params: &mut FlatParams,
+        opt: &mut dyn Optimizer,
+        grads: FlatGrads,
+        metas: &[ShardMeta],
+        apply_workers: usize,
+    ) -> Result<GlobalStep> {
+        let world = self.world();
+        let t_comm = Instant::now();
+        let idx = grads.idx().clone();
+        let buckets = grads.buckets().clone();
+        let own = grads.into_segments();
+        let nb = own.len();
+
+        // parts[b] collects rank-order partials of bucket b: rank 0's
+        // first, then each worker's as it is received (workers are
+        // drained in rank order, so the list order *is* rank order).
+        let mut per_bucket: Vec<Vec<Box<[f32]>>> =
+            own.into_iter().map(|s| vec![s]).collect();
+        let mut all_metas: Vec<ShardMeta> = metas.to_vec();
+        for w in 1..world {
+            for (b, parts) in per_bucket.iter_mut().enumerate() {
+                let f = expect_kind(self.transport.recv_hub(w)?, FrameKind::Grad, step)?;
+                check_origin_bucket(&f, w, b)?;
+                let seg = wire::bytes_to_f32s(&f.payload)?;
+                if seg.len() != parts[0].len() {
+                    return Err(DistError::wire(format!(
+                        "rank {w} bucket {b}: {} elements, expected {}",
+                        seg.len(),
+                        parts[0].len()
+                    ))
+                    .into());
+                }
+                parts.push(seg);
+            }
+            let f = expect_kind(self.transport.recv_hub(w)?, FrameKind::Meta, step)?;
+            let m = wire::bytes_to_metas(&f.payload)?;
+            if m.len() != self.local_shards {
+                return Err(DistError::config(format!(
+                    "rank {w} sent {} shard metas, expected {}",
+                    m.len(),
+                    self.local_shards
+                ))
+                .into());
+            }
+            all_metas.extend(m);
+        }
+
+        // The outer tree over rank order — same shape the global
+        // single-process tree has above the block boundary.
+        let folded: Vec<Box<[f32]>> = per_bucket
+            .into_iter()
+            .map(|parts| tree_fold_segments(parts).expect("world >= 1 partials"))
+            .collect();
+        let comm_seconds = t_comm.elapsed().as_secs_f64();
+
+        let global = local_apply(
+            params,
+            opt,
+            FlatGrads::new(idx, buckets, folded),
+            all_metas,
+            apply_workers,
+            comm_seconds,
+        )?;
+
+        // Broadcast the updated slab, bucket by bucket, plus the step
+        // scalars (workers report the same loss/ppl/grad_norm).
+        let t_bc = Instant::now();
+        let meta_payload =
+            wire::step_meta_to_bytes(global.loss_sum, global.ntok, global.grad_norm);
+        for w in 1..world {
+            for (b, bk) in params.buckets().iter().enumerate() {
+                let payload = wire::f32s_to_bytes(&params.slab()[bk.range.clone()]);
+                self.send_hub_retry(
+                    w,
+                    &Frame::new(FrameKind::Param, 0, step, b as u32, payload),
+                )?;
+            }
+            self.send_hub_retry(
+                w,
+                &Frame::new(FrameKind::Meta, 0, step, 0, meta_payload.clone()),
+            )?;
+        }
+        Ok(GlobalStep {
+            comm_seconds: global.comm_seconds + t_bc.elapsed().as_secs_f64(),
+            ..global
+        })
+    }
+
+    /// Worker: push partials + metas to rank 0, then install the
+    /// parameters rank 0 sends back. The local optimizer is *not*
+    /// advanced — in ps mode rank 0's optimizer state is authoritative.
+    fn ps_worker(
+        &self,
+        step: u64,
+        params: &mut FlatParams,
+        grads: FlatGrads,
+        metas: &[ShardMeta],
+    ) -> Result<GlobalStep> {
+        let rank = self.rank() as u32;
+        let t_comm = Instant::now();
+        let segs = grads.into_segments();
+        let nb = segs.len();
+        for (b, seg) in segs.iter().enumerate() {
+            self.send_hub_retry(
+                0,
+                &Frame::new(FrameKind::Grad, rank, step, b as u32, wire::f32s_to_bytes(seg)),
+            )?;
+        }
+        self.send_hub_retry(
+            0,
+            &Frame::new(FrameKind::Meta, rank, step, 0, wire::metas_to_bytes(metas)),
+        )?;
+
+        let mut bufs: Vec<Box<[f32]>> = Vec::with_capacity(nb);
+        for b in 0..nb {
+            let f = expect_kind(self.transport.recv_hub(0)?, FrameKind::Param, step)?;
+            check_origin_bucket(&f, 0, b)?;
+            bufs.push(wire::bytes_to_f32s(&f.payload)?);
+        }
+        let f = expect_kind(self.transport.recv_hub(0)?, FrameKind::Meta, step)?;
+        let (loss_sum, ntok, grad_norm) = wire::bytes_to_step_meta(&f.payload)?;
+
+        params.with_slab_mut(|_idx, buckets, slab| -> DistResult<()> {
+            for (b, bk) in buckets.iter().enumerate() {
+                let dst = &mut slab[bk.range.clone()];
+                if bufs[b].len() != dst.len() {
+                    return Err(DistError::wire(format!(
+                        "param bucket {b}: {} elements, slab bucket holds {}",
+                        bufs[b].len(),
+                        dst.len()
+                    )));
+                }
+                dst.copy_from_slice(&bufs[b]);
+            }
+            Ok(())
+        })?;
+        Ok(GlobalStep {
+            loss_sum,
+            ntok,
+            grad_norm,
+            apply_seconds: 0.0,
+            comm_seconds: t_comm.elapsed().as_secs_f64(),
+        })
+    }
+
+    // ----------------------------------------------------- replicated
+
+    /// Ring all-gather (`P − 1` rounds, forwarding origin-stamped
+    /// frames) followed by the identical outer tree + local apply on
+    /// every rank. Per round, a scoped sender thread pushes this
+    /// round's block to the successor while the main thread receives
+    /// from the predecessor — concurrent halves, so a full TCP buffer
+    /// can never deadlock the ring.
+    fn replicated(
+        &self,
+        step: u64,
+        params: &mut FlatParams,
+        opt: &mut dyn Optimizer,
+        grads: FlatGrads,
+        metas: &[ShardMeta],
+        apply_workers: usize,
+    ) -> Result<GlobalStep> {
+        let world = self.world();
+        let rank = self.rank();
+        let t_comm = Instant::now();
+        let idx = grads.idx().clone();
+        let buckets = grads.buckets().clone();
+        let own = grads.into_segments();
+        let nb = own.len();
+        let seg_len: Vec<usize> = own.iter().map(|s| s.len()).collect();
+
+        let mut gathered: Vec<Option<(Vec<Box<[f32]>>, Vec<ShardMeta>)>> =
+            (0..world).map(|_| None).collect();
+        gathered[rank] = Some((own, metas.to_vec()));
+
+        for k in 0..world - 1 {
+            // Round k forwards the block that arrived in round k-1
+            // (round 0 forwards our own); we receive the predecessor's
+            // k-steps-back block.
+            let send_origin = (rank + world - k) % world;
+            let recv_origin = (rank + world - 1 - k) % world;
+            let block = gathered[send_origin]
+                .as_ref()
+                .expect("forwarded block was received last round");
+            let received = std::thread::scope(
+                |scope| -> DistResult<(Vec<Box<[f32]>>, Vec<ShardMeta>)> {
+                    let sender = scope.spawn(|| -> DistResult<()> {
+                        let mut policy = self.backoff.clone();
+                        policy.seed ^= step << 8 ^ k as u64;
+                        let mut retrier = Retrier::new(policy);
+                        let (segs, ms) = block;
+                        for (b, seg) in segs.iter().enumerate() {
+                            let f = Frame::new(
+                                FrameKind::Grad,
+                                send_origin as u32,
+                                step,
+                                b as u32,
+                                wire::f32s_to_bytes(seg),
+                            );
+                            retrier.run("ring send", || self.transport.send_ring(&f))?;
+                        }
+                        let f = Frame::new(
+                            FrameKind::Meta,
+                            send_origin as u32,
+                            step,
+                            0,
+                            wire::metas_to_bytes(ms),
+                        );
+                        retrier.run("ring send", || self.transport.send_ring(&f))
+                    });
+                    let recv_res = (|| -> DistResult<(Vec<Box<[f32]>>, Vec<ShardMeta>)> {
+                        let mut segs = Vec::with_capacity(nb);
+                        for b in 0..nb {
+                            let f = expect_kind(self.transport.recv_ring()?, FrameKind::Grad, step)?;
+                            check_origin_bucket(&f, recv_origin, b)?;
+                            let seg = wire::bytes_to_f32s(&f.payload)?;
+                            if seg.len() != seg_len[b] {
+                                return Err(DistError::wire(format!(
+                                    "ring bucket {b} from rank {recv_origin}: {} elements, \
+                                     expected {}",
+                                    seg.len(),
+                                    seg_len[b]
+                                )));
+                            }
+                            segs.push(seg);
+                        }
+                        let f = expect_kind(self.transport.recv_ring()?, FrameKind::Meta, step)?;
+                        check_origin_bucket(&f, recv_origin, 0)?;
+                        let ms = wire::bytes_to_metas(&f.payload)?;
+                        if ms.len() != self.local_shards {
+                            return Err(DistError::config(format!(
+                                "rank {recv_origin} sent {} shard metas, expected {}",
+                                ms.len(),
+                                self.local_shards
+                            )));
+                        }
+                        Ok((segs, ms))
+                    })();
+                    let send_res = sender
+                        .join()
+                        .map_err(|_| DistError::permanent("ring sender thread panicked"))?;
+                    // A receive failure names the dead predecessor —
+                    // report it over a send failure when both hit.
+                    match (recv_res, send_res) {
+                        (Ok(block), Ok(())) => Ok(block),
+                        (Err(e), _) => Err(e),
+                        (_, Err(e)) => Err(e),
+                    }
+                },
+            )?;
+            gathered[recv_origin] = Some(received);
+        }
+
+        // Identical fold everywhere: bucket partials and shard metas in
+        // rank (= global shard block) order.
+        let mut per_bucket: Vec<Vec<Box<[f32]>>> =
+            (0..nb).map(|_| Vec::with_capacity(world)).collect();
+        let mut all_metas = Vec::with_capacity(world * self.local_shards);
+        for slot in gathered.iter_mut() {
+            let (segs, ms) = slot.take().expect("all-gather filled every slot");
+            for (b, s) in segs.into_iter().enumerate() {
+                per_bucket[b].push(s);
+            }
+            all_metas.extend(ms);
+        }
+        let folded: Vec<Box<[f32]>> = per_bucket
+            .into_iter()
+            .map(|parts| tree_fold_segments(parts).expect("world >= 1 partials"))
+            .collect();
+        let comm_seconds = t_comm.elapsed().as_secs_f64();
+        local_apply(
+            params,
+            opt,
+            FlatGrads::new(idx, buckets, folded),
+            all_metas,
+            apply_workers,
+            comm_seconds,
+        )
+    }
+
+    // ------------------------------------------------------ lifecycle
+
+    /// Best-effort fault propagation: tell the peers this rank's step
+    /// failed so they error out now instead of at their read deadline.
+    /// Never fails — the caller is already on its error path.
+    pub fn abort(&self, step: u64, msg: &str) {
+        if self.world() == 1 {
+            return;
+        }
+        let f = Frame::new(
+            FrameKind::Abort,
+            self.rank() as u32,
+            step,
+            0,
+            msg.as_bytes().to_vec(),
+        );
+        if self.rank() == 0 {
+            for w in 1..self.world() {
+                let _ = self.transport.send_hub(w, &f);
+            }
+        } else {
+            let _ = self.transport.send_hub(0, &f);
+        }
+        if self.mode == DistMode::Replicated {
+            let _ = self.transport.send_ring(&f);
+        }
+    }
+
+    /// Clean shutdown barrier over the hub: workers report Done, rank 0
+    /// acknowledges each. After this returns on every rank, no frame of
+    /// the run is still in flight.
+    pub fn shutdown(&self, step: u64) -> DistResult<()> {
+        if self.world() == 1 {
+            return Ok(());
+        }
+        if self.rank() == 0 {
+            for w in 1..self.world() {
+                expect_kind(self.transport.recv_hub(w)?, FrameKind::Done, step)?;
+            }
+            for w in 1..self.world() {
+                self.send_hub_retry(w, &Frame::bare(FrameKind::Done, 0, step))?;
+            }
+        } else {
+            self.send_hub_retry(0, &Frame::bare(FrameKind::Done, self.rank() as u32, step))?;
+            expect_kind(self.transport.recv_hub(0)?, FrameKind::Done, step)?;
+        }
+        Ok(())
+    }
+}
+
+/// The step finalization every rank runs on the *globally* reduced
+/// gradient — byte-for-byte the single-process
+/// `train_step_micro_flat` tail: f64 left fold of loss/ntok in global
+/// shard order, `ntok.max(1.0)`, `1/ntok` scale, optimizer apply.
+fn local_apply(
+    params: &mut FlatParams,
+    opt: &mut dyn Optimizer,
+    mut grads: FlatGrads,
+    all_metas: Vec<ShardMeta>,
+    apply_workers: usize,
+    comm_seconds: f64,
+) -> Result<GlobalStep> {
+    let mut loss_sum = 0.0;
+    let mut ntok = 0.0;
+    for m in &all_metas {
+        loss_sum += m.loss_sum;
+        ntok += m.ntok;
+    }
+    let ntok = ntok.max(1.0);
+    grads.scale(1.0 / ntok as f32);
+    let t = Instant::now();
+    let grad_norm = opt.apply_flat(params, &grads, apply_workers)?;
+    Ok(GlobalStep {
+        loss_sum,
+        ntok,
+        grad_norm,
+        apply_seconds: t.elapsed().as_secs_f64(),
+        comm_seconds,
+    })
+}
+
+/// Validate an incoming frame's kind + step. An Abort frame converts to
+/// a `Permanent` error carrying the origin's message, so a peer's step
+/// failure propagates as *this* rank's typed step error.
+fn expect_kind(f: Frame, kind: FrameKind, step: u64) -> DistResult<Frame> {
+    if f.kind == FrameKind::Abort {
+        return Err(DistError::permanent(format!(
+            "rank {} aborted: {}",
+            f.rank,
+            String::from_utf8_lossy(&f.payload)
+        )));
+    }
+    if f.kind != kind || f.step != step {
+        return Err(DistError::wire(format!(
+            "expected {} frame for step {step}, got {} for step {}",
+            kind.name(),
+            f.kind.name(),
+            f.step
+        )));
+    }
+    Ok(f)
+}
+
+fn check_origin_bucket(f: &Frame, origin: usize, bucket: usize) -> DistResult<()> {
+    if f.rank as usize != origin || f.bucket as usize != bucket {
+        return Err(DistError::wire(format!(
+            "frame origin/bucket mismatch: got rank {} bucket {}, expected rank {origin} \
+             bucket {bucket}",
+            f.rank, f.bucket
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::fake::{FakeNet, FaultScript};
+    use crate::dist::transport::CommOpts;
+    use crate::dist::DistErrorKind;
+
+    fn fake_world(world: usize) -> Vec<DistComm> {
+        let scripts = (0..world).map(|_| FaultScript::clean()).collect();
+        let mut opts = CommOpts::fast();
+        opts.read_timeout_ms = 500;
+        let (_net, eps) = FakeNet::world(world, scripts, opts);
+        eps.into_iter()
+            .map(|e| {
+                DistComm::new(Box::new(e), DistMode::Replicated, 2, Backoff::instant(3)).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn non_power_of_two_local_shards_is_a_config_error() {
+        let (_net, eps) = FakeNet::world(
+            2,
+            vec![FaultScript::clean(), FaultScript::clean()],
+            CommOpts::fast(),
+        );
+        let mut eps = eps.into_iter();
+        let err = DistComm::new(
+            Box::new(eps.next().unwrap()),
+            DistMode::Ps,
+            3,
+            Backoff::instant(1),
+        )
+        .unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Config);
+        assert!(err.msg.contains("power-of-two"), "{}", err.msg);
+        // world == 1 has no factorization to protect; any count is fine.
+        let (_n1, e1) = FakeNet::world(1, vec![FaultScript::clean()], CommOpts::fast());
+        assert!(DistComm::new(
+            Box::new(e1.into_iter().next().unwrap()),
+            DistMode::Ps,
+            3,
+            Backoff::instant(1),
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn shutdown_barrier_completes_on_every_rank() {
+        let comms = fake_world(3);
+        std::thread::scope(|scope| {
+            for c in &comms {
+                scope.spawn(move || c.shutdown(7).unwrap());
+            }
+        });
+    }
+
+    #[test]
+    fn abort_converts_to_permanent_error_on_the_peer() {
+        let comms = fake_world(2);
+        comms[1].abort(4, "optimizer apply failed");
+        // Rank 0's next expected frame is the abort → typed Permanent
+        // naming the origin. (shutdown's first recv sees it.)
+        let err = comms[0].shutdown(4).unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Permanent);
+        assert!(err.msg.contains("rank 1 aborted"), "{}", err.msg);
+        assert!(err.msg.contains("optimizer apply failed"), "{}", err.msg);
+    }
+
+    #[test]
+    fn expect_kind_rejects_wrong_step_and_kind() {
+        let f = Frame::bare(FrameKind::Done, 2, 9);
+        assert!(expect_kind(f.clone(), FrameKind::Done, 9).is_ok());
+        let e = expect_kind(f.clone(), FrameKind::Done, 8).unwrap_err();
+        assert_eq!(e.kind, DistErrorKind::Wire);
+        let e = expect_kind(f, FrameKind::Grad, 9).unwrap_err();
+        assert_eq!(e.kind, DistErrorKind::Wire);
+    }
+}

@@ -1,0 +1,260 @@
+//! The per-rank distributed training loop and the in-process world
+//! harnesses.
+//!
+//! [`train_rank`] is the one loop every entry point shares: the
+//! `dist-worker` subcommand (real processes over loopback TCP), the
+//! equivalence suite's thread worlds, and `train-bench --dist`.
+//!
+//! ## Batch ownership
+//!
+//! Every rank derives the *same* global micro-batch stream (the
+//! batcher is seeded identically everywhere) and keeps the contiguous
+//! block `[rank·L, (rank+1)·L)` of each step's `world × L` shards.
+//! Contiguous blocks are what the reduction-tree factorization
+//! requires (`dist::collective`); deriving rather than shipping the
+//! stream keeps the wire protocol gradient-only.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+
+use anyhow::{anyhow, Result};
+
+use super::collective::DistComm;
+use super::fake::{FakeNet, FaultScript};
+use super::transport::{CommOpts, TcpTransport};
+use super::{DistError, DistMode};
+use crate::config::Experiment;
+use crate::parallel::Batch;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::train::{StepStats, Trainer};
+
+/// Everything one rank needs to run its share of a distributed
+/// training job (identical on every rank except `die_at_step`).
+#[derive(Clone)]
+pub struct RankSpec {
+    pub exp: Experiment,
+    pub mode: DistMode,
+    /// Local data-parallel replicas (per process).
+    pub replicas: usize,
+    /// Gradient-accumulation micro-steps per replica.
+    pub accum: usize,
+    /// Optimizer steps to run.
+    pub steps: usize,
+    /// Flat-slab bucket size override (None = engine default).
+    pub bucket_bytes: Option<usize>,
+    /// Run plans on the sequential executor.
+    pub sequential: bool,
+    /// Deterministic fault hook: fail just before this (1-based) step.
+    pub die_at_step: Option<u64>,
+    /// With `die_at_step`: hard-exit the process (code 3) instead of
+    /// returning a typed error. Only for real worker processes — a
+    /// thread world must use the soft kill.
+    pub die_hard: bool,
+}
+
+impl RankSpec {
+    pub fn new(exp: Experiment, mode: DistMode, replicas: usize, accum: usize, steps: usize) -> Self {
+        RankSpec {
+            exp,
+            mode,
+            replicas: replicas.max(1),
+            accum: accum.max(1),
+            steps,
+            bucket_bytes: None,
+            sequential: false,
+            die_at_step: None,
+            die_hard: false,
+        }
+    }
+
+    /// Micro-batches one rank consumes per optimizer step.
+    pub fn local_shards(&self) -> usize {
+        self.replicas * self.accum
+    }
+}
+
+/// What a finished (or failed-after-some-steps) rank hands back.
+pub struct RankRun {
+    pub stats: Vec<StepStats>,
+    /// Final parameters (zero-copy views; compare `.data()` for the
+    /// bitwise-identity assertions).
+    pub params: BTreeMap<String, Tensor>,
+}
+
+/// Run `spec.steps` distributed optimizer steps as rank
+/// `comm.rank()`. `global_stream` is the full global micro-batch
+/// stream (`steps × world × L` batches, identical on every rank);
+/// this rank trains on its contiguous block of each step.
+///
+/// On a step error the communicator's peers are told
+/// ([`DistComm::abort`]) before the typed error returns — a fault on
+/// one rank becomes a step-boundary error on *every* rank, never a
+/// hang.
+pub fn train_rank(
+    engine: &Engine,
+    spec: &RankSpec,
+    comm: &DistComm,
+    global_stream: &[Batch],
+) -> Result<RankRun> {
+    let world = comm.world();
+    let rank = comm.rank();
+    let l = spec.local_shards();
+    let per_step = world * l;
+    if global_stream.len() != spec.steps * per_step {
+        return Err(anyhow!(
+            "global stream has {} micro-batches, {} steps × {world} ranks × {l} shards needs {}",
+            global_stream.len(),
+            spec.steps,
+            spec.steps * per_step
+        ));
+    }
+    if comm.local_shards() != l {
+        return Err(anyhow!(
+            "communicator configured for {} local shards, rank runs {l}",
+            comm.local_shards()
+        ));
+    }
+
+    let mut trainer = Trainer::new(engine, &spec.exp)?;
+    trainer.set_pipeline(spec.replicas, spec.accum);
+    trainer.sequential = spec.sequential;
+    if let Some(b) = spec.bucket_bytes {
+        trainer.set_bucket_bytes(b);
+    }
+
+    let mut stats = Vec::with_capacity(spec.steps);
+    for s in 0..spec.steps {
+        let step_no = s as u64 + 1;
+        if spec.die_at_step == Some(step_no) {
+            if spec.die_hard {
+                // The kill-mid-step hook for real worker processes:
+                // no abort frame, no socket shutdown courtesy — the
+                // peers must survive on timeouts/EOF alone.
+                eprintln!("[rank {rank}] --dist-die: hard exit at step {step_no}");
+                std::process::exit(3);
+            }
+            let err = DistError::permanent(format!(
+                "rank {rank} killed by --dist-die at step {step_no}"
+            ));
+            comm.abort(step_no, &err.msg);
+            return Err(err.into());
+        }
+        let base = s * per_step + rank * l;
+        let micro = &global_stream[base..base + l];
+        match trainer.train_step_micro_dist(micro, comm) {
+            Ok(st) => stats.push(st),
+            Err(e) => {
+                comm.abort(step_no, &format!("{e:#}"));
+                return Err(e.context(format!("rank {rank} failed at step {step_no}")));
+            }
+        }
+    }
+    comm.shutdown(spec.steps as u64)
+        .map_err(|e| anyhow::Error::from(e).context(format!("rank {rank} shutdown")))?;
+    Ok(RankRun { stats, params: trainer.params().clone() })
+}
+
+/// Run a whole world on the in-memory fake transport, one thread per
+/// rank. `specs[r]` configures rank r (same `exp`/topology everywhere,
+/// per-rank fault hooks allowed); `scripts[r]` is rank r's transport
+/// fault schedule. Returns per-rank results in rank order — faults
+/// come back as the typed errors the ranks returned, never a panic or
+/// a hang.
+pub fn run_fake_world(
+    engine: &Engine,
+    specs: &[RankSpec],
+    scripts: Vec<FaultScript>,
+    opts: CommOpts,
+    global_stream: &[Batch],
+) -> Vec<Result<RankRun>> {
+    let world = specs.len();
+    let (_net, endpoints) = FakeNet::world(world, scripts, opts.clone());
+    let mut results: Vec<Result<RankRun>> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .zip(specs)
+            .map(|(ep, spec)| {
+                let backoff = opts.backoff.clone();
+                scope.spawn(move || {
+                    let comm = DistComm::new(
+                        Box::new(ep),
+                        spec.mode,
+                        spec.local_shards(),
+                        backoff,
+                    )?;
+                    train_rank(engine, spec, &comm, global_stream)
+                })
+            })
+            .collect();
+        results = handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow!("rank thread panicked")))
+            })
+            .collect();
+    });
+    results
+}
+
+/// Run a whole world over real loopback TCP, one thread per rank
+/// (full rendezvous + wire protocol, no process spawn — the
+/// process-level path is `train --dist N`). World 1 degrades to the
+/// no-op communicator.
+pub fn run_tcp_world(
+    engine: &Engine,
+    specs: &[RankSpec],
+    opts: CommOpts,
+    global_stream: &[Batch],
+) -> Vec<Result<RankRun>> {
+    let world = specs.len();
+    if world == 1 {
+        let scripts = vec![FaultScript::clean()];
+        return run_fake_world(engine, specs, scripts, opts, global_stream);
+    }
+    let ring = specs[0].mode == DistMode::Replicated;
+    let listener = match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => l,
+        Err(e) => return vec![Err(anyhow!("bind rendezvous listener: {e}"))],
+    };
+    let addr = match listener.local_addr() {
+        Ok(a) => a,
+        Err(e) => return vec![Err(anyhow!("rendezvous addr: {e}"))],
+    };
+    let mut results: Vec<Result<RankRun>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut listener = Some(listener);
+        let handles: Vec<_> = specs
+            .iter()
+            .enumerate()
+            .map(|(r, spec)| {
+                let opts = opts.clone();
+                let listener = if r == 0 { listener.take() } else { None };
+                scope.spawn(move || {
+                    let transport = if r == 0 {
+                        TcpTransport::rank0(listener.expect("rank 0 owns it"), world, ring, opts.clone())?
+                    } else {
+                        TcpTransport::worker(r, world, addr, ring, opts.clone())?
+                    };
+                    let comm = DistComm::new(
+                        Box::new(transport),
+                        spec.mode,
+                        spec.local_shards(),
+                        opts.backoff,
+                    )?;
+                    train_rank(engine, spec, &comm, global_stream)
+                })
+            })
+            .collect();
+        results = handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow!("rank thread panicked")))
+            })
+            .collect();
+    });
+    results
+}

@@ -1,0 +1,375 @@
+//! In-memory fake transport with scripted deterministic faults —
+//! the dist analogue of `storage::FaultyMem`.
+//!
+//! Channels carry *encoded* frame bytes, not `Frame` values, so every
+//! receive exercises the real wire decoder and a scripted torn send
+//! delivers a genuinely truncated byte string (decoded to a typed
+//! error on the other side, exactly like a TCP peer dying mid-write).
+//!
+//! Fault schedules are 1-based send-attempt indices on one endpoint,
+//! mirroring `FaultyMem`'s `fail_puts` convention, so tests can say
+//! "rank 1's 3rd send is dropped" and get the same failure every run.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::transport::{CommOpts, DistTransport};
+use super::wire::{self, Frame};
+use super::{DistError, DistResult};
+use crate::rng::Rng;
+
+/// Deterministic fault schedule for one endpoint. Indices are 1-based
+/// counts of send attempts on that endpoint (hub + ring combined).
+#[derive(Debug, Clone, Default)]
+pub struct FaultScript {
+    /// Jitter/tear randomness seed.
+    pub seed: u64,
+    /// These send attempts fail with a `Transient` error and the frame
+    /// is dropped (the retry must re-send).
+    pub fail_sends: Vec<u64>,
+    /// These send attempts deliver only a prefix of the encoded frame
+    /// (deterministic fraction in [0.1, 0.9)) and report success — the
+    /// receiver finds the torn frame.
+    pub torn_sends: Vec<u64>,
+    /// Sleep this long before every send (latency injection).
+    pub delay_ms: u64,
+    /// From this attempt on, every send fails `Permanent`.
+    pub permanent_from: Option<u64>,
+    /// On this attempt, the endpoint marks itself dead (peers see
+    /// `PeerClosed`) and the send returns `Permanent`.
+    pub kill_at_send: Option<u64>,
+}
+
+impl FaultScript {
+    pub fn clean() -> Self {
+        FaultScript::default()
+    }
+}
+
+/// Shared world state: liveness flags for fast peer-death detection.
+pub struct FakeNet {
+    alive: Arc<Vec<AtomicBool>>,
+}
+
+impl FakeNet {
+    /// Build a fully wired world: hub channels between every worker
+    /// and rank 0 plus a unidirectional ring. Returns the net handle
+    /// (for external [`kill`](Self::kill)) and one endpoint per rank,
+    /// in rank order. `scripts` must have one entry per rank.
+    pub fn world(
+        world: usize,
+        scripts: Vec<FaultScript>,
+        opts: CommOpts,
+    ) -> (FakeNet, Vec<FakeEndpoint>) {
+        assert!(world >= 1);
+        assert_eq!(scripts.len(), world, "one fault script per rank");
+        let alive: Arc<Vec<AtomicBool>> =
+            Arc::new((0..world).map(|_| AtomicBool::new(true)).collect());
+
+        // hub_to0[w] / hub_from0[w]: worker w <-> rank 0.
+        let mut to0_tx: HashMap<usize, Sender<Vec<u8>>> = HashMap::new();
+        let mut to0_rx: HashMap<usize, Receiver<Vec<u8>>> = HashMap::new();
+        let mut from0_tx: HashMap<usize, Sender<Vec<u8>>> = HashMap::new();
+        let mut from0_rx: HashMap<usize, Receiver<Vec<u8>>> = HashMap::new();
+        for w in 1..world {
+            let (tx, rx) = channel();
+            to0_tx.insert(w, tx);
+            to0_rx.insert(w, rx);
+            let (tx, rx) = channel();
+            from0_tx.insert(w, tx);
+            from0_rx.insert(w, rx);
+        }
+        // ring[r]: rank r -> rank (r+1) % world.
+        let mut ring_tx: Vec<Option<Sender<Vec<u8>>>> = Vec::new();
+        let mut ring_rx_by_succ: HashMap<usize, Receiver<Vec<u8>>> = HashMap::new();
+        for r in 0..world {
+            let (tx, rx) = channel();
+            ring_tx.push(Some(tx));
+            ring_rx_by_succ.insert((r + 1) % world, rx);
+        }
+
+        let mut eps = Vec::with_capacity(world);
+        for (r, script) in scripts.into_iter().enumerate() {
+            let mut hub_tx = HashMap::new();
+            let mut hub_rx = HashMap::new();
+            if r == 0 {
+                for w in 1..world {
+                    hub_tx.insert(w, Mutex::new(from0_tx[&w].clone()));
+                    hub_rx.insert(w, Mutex::new(to0_rx.remove(&w).unwrap()));
+                }
+            } else {
+                hub_tx.insert(0, Mutex::new(to0_tx[&r].clone()));
+                hub_rx.insert(0, Mutex::new(from0_rx.remove(&r).unwrap()));
+            }
+            let rng = Rng::new(script.seed ^ 0xFA4E_0000 ^ r as u64);
+            eps.push(FakeEndpoint {
+                rank: r,
+                world,
+                alive: alive.clone(),
+                read_timeout_ms: opts.read_timeout_ms,
+                script,
+                sends: Mutex::new(0),
+                rng: Mutex::new(rng),
+                hub_tx,
+                hub_rx,
+                ring_tx: ring_tx[r].take().map(Mutex::new),
+                ring_rx: ring_rx_by_succ.remove(&r).map(Mutex::new),
+            });
+        }
+        (FakeNet { alive }, eps)
+    }
+
+    /// Mark `rank` dead: its peers see `PeerClosed` on their next
+    /// receive poll (after draining already-delivered frames).
+    pub fn kill(&self, rank: usize) {
+        self.alive[rank].store(false, Ordering::SeqCst);
+    }
+
+    pub fn is_alive(&self, rank: usize) -> bool {
+        self.alive[rank].load(Ordering::SeqCst)
+    }
+}
+
+/// One rank's view of the fake network. Implements [`DistTransport`];
+/// all faults come from its [`FaultScript`] or a [`FakeNet::kill`].
+pub struct FakeEndpoint {
+    rank: usize,
+    world: usize,
+    alive: Arc<Vec<AtomicBool>>,
+    read_timeout_ms: u64,
+    script: FaultScript,
+    sends: Mutex<u64>,
+    rng: Mutex<Rng>,
+    hub_tx: HashMap<usize, Mutex<Sender<Vec<u8>>>>,
+    hub_rx: HashMap<usize, Mutex<Receiver<Vec<u8>>>>,
+    ring_tx: Option<Mutex<Sender<Vec<u8>>>>,
+    ring_rx: Option<Mutex<Receiver<Vec<u8>>>>,
+}
+
+impl FakeEndpoint {
+    /// Apply the fault script to one send attempt; on clean attempts
+    /// returns the (possibly torn) bytes to deliver.
+    fn scripted_bytes(&self, frame: &Frame) -> DistResult<Vec<u8>> {
+        let n = {
+            let mut c = self.sends.lock().unwrap();
+            *c += 1;
+            *c
+        };
+        if let Some(k) = self.script.kill_at_send {
+            if n == k {
+                self.alive[self.rank].store(false, Ordering::SeqCst);
+                return Err(DistError::permanent(format!(
+                    "rank {} killed by fault script at send {n}",
+                    self.rank
+                )));
+            }
+        }
+        if !self.alive[self.rank].load(Ordering::SeqCst) {
+            return Err(DistError::permanent(format!("rank {} is dead", self.rank)));
+        }
+        if let Some(p) = self.script.permanent_from {
+            if n >= p {
+                return Err(DistError::permanent(format!(
+                    "scripted permanent outage from send {p} (attempt {n})"
+                )));
+            }
+        }
+        if self.script.delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.script.delay_ms));
+        }
+        if self.script.fail_sends.contains(&n) {
+            return Err(DistError::transient(format!("scripted send drop (attempt {n})")));
+        }
+        let mut bytes = wire::encode(frame);
+        if self.script.torn_sends.contains(&n) {
+            let frac = {
+                let mut rng = self.rng.lock().unwrap();
+                0.1 + 0.8 * rng.f64()
+            };
+            let keep = ((bytes.len() as f64 * frac) as usize).max(1).min(bytes.len() - 1);
+            bytes.truncate(keep);
+        }
+        Ok(bytes)
+    }
+
+    fn deliver(&self, tx: &Mutex<Sender<Vec<u8>>>, to: usize, frame: &Frame) -> DistResult<()> {
+        if !self.alive[to].load(Ordering::SeqCst) {
+            return Err(DistError::peer_closed(format!("rank {to} is dead")));
+        }
+        let bytes = self.scripted_bytes(frame)?;
+        tx.lock()
+            .unwrap()
+            .send(bytes)
+            .map_err(|_| DistError::peer_closed(format!("rank {to} hung up")))
+    }
+
+    /// Poll `rx` in short slices up to the read deadline, checking the
+    /// sender's liveness between slices: queued frames drain first, a
+    /// dead peer then surfaces as `PeerClosed` (fast), a merely silent
+    /// one as `Timeout` (at the deadline). Decode failures map through
+    /// `WireError::into_dist`, so a torn frame is a typed error too.
+    fn poll(&self, rx: &Mutex<Receiver<Vec<u8>>>, from: usize) -> DistResult<Frame> {
+        let deadline = Instant::now() + Duration::from_millis(self.read_timeout_ms);
+        let rx = rx.lock().unwrap();
+        loop {
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(bytes) => return wire::decode_exact(&bytes).map_err(|e| e.into_dist()),
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(DistError::peer_closed(format!("rank {from} hung up")));
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.alive[from].load(Ordering::SeqCst) {
+                        return Err(DistError::peer_closed(format!("rank {from} is dead")));
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(DistError::timeout(format!(
+                            "no frame from rank {from} before deadline"
+                        )));
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl DistTransport for FakeEndpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send_hub(&self, to: usize, frame: &Frame) -> DistResult<()> {
+        let tx = self.hub_tx.get(&to).ok_or_else(|| {
+            DistError::config(format!("rank {} has no hub link to rank {to}", self.rank))
+        })?;
+        self.deliver(tx, to, frame)
+    }
+
+    fn recv_hub(&self, from: usize) -> DistResult<Frame> {
+        let rx = self.hub_rx.get(&from).ok_or_else(|| {
+            DistError::config(format!("rank {} has no hub link to rank {from}", self.rank))
+        })?;
+        self.poll(rx, from)
+    }
+
+    fn send_ring(&self, frame: &Frame) -> DistResult<()> {
+        let succ = (self.rank + 1) % self.world;
+        let tx = self
+            .ring_tx
+            .as_ref()
+            .ok_or_else(|| DistError::config("fake endpoint has no ring"))?;
+        self.deliver(tx, succ, frame)
+    }
+
+    fn recv_ring(&self) -> DistResult<Frame> {
+        let pred = (self.rank + self.world - 1) % self.world;
+        let rx = self
+            .ring_rx
+            .as_ref()
+            .ok_or_else(|| DistError::config("fake endpoint has no ring"))?;
+        self.poll(rx, pred)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::wire::FrameKind;
+    use crate::dist::DistErrorKind;
+
+    fn fast() -> CommOpts {
+        let mut o = CommOpts::fast();
+        o.read_timeout_ms = 200;
+        o
+    }
+
+    #[test]
+    fn clean_world_delivers_hub_and_ring() {
+        let (_net, eps) =
+            FakeNet::world(2, vec![FaultScript::clean(), FaultScript::clean()], fast());
+        let (r0, r1) = (&eps[0], &eps[1]);
+        r1.send_hub(0, &Frame::new(FrameKind::Grad, 1, 7, 2, vec![0; 8])).unwrap();
+        let f = r0.recv_hub(1).unwrap();
+        assert_eq!((f.kind, f.rank, f.step, f.bucket), (FrameKind::Grad, 1, 7, 2));
+        r0.send_ring(&Frame::bare(FrameKind::Meta, 0, 1)).unwrap();
+        assert_eq!(r1.recv_ring().unwrap().rank, 0);
+        r1.send_ring(&Frame::bare(FrameKind::Meta, 1, 1)).unwrap();
+        assert_eq!(r0.recv_ring().unwrap().rank, 1);
+    }
+
+    #[test]
+    fn scripted_drop_is_transient_and_frame_is_lost() {
+        let script = FaultScript { fail_sends: vec![1], ..FaultScript::clean() };
+        let (_net, eps) = FakeNet::world(2, vec![FaultScript::clean(), script], fast());
+        let err = eps[1]
+            .send_hub(0, &Frame::bare(FrameKind::Done, 1, 0))
+            .unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Transient);
+        // Retry (attempt 2) succeeds and exactly one frame arrives.
+        eps[1].send_hub(0, &Frame::bare(FrameKind::Done, 1, 0)).unwrap();
+        assert_eq!(eps[0].recv_hub(1).unwrap().kind, FrameKind::Done);
+        assert_eq!(eps[0].recv_hub(1).unwrap_err().kind, DistErrorKind::Timeout);
+    }
+
+    #[test]
+    fn torn_send_decodes_to_typed_error_on_receiver() {
+        let script = FaultScript { torn_sends: vec![1], seed: 9, ..FaultScript::clean() };
+        let (_net, eps) = FakeNet::world(2, vec![FaultScript::clean(), script], fast());
+        eps[1]
+            .send_hub(0, &Frame::new(FrameKind::Grad, 1, 3, 0, vec![7; 64]))
+            .unwrap();
+        let err = eps[0].recv_hub(1).unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::PeerClosed, "{err}");
+    }
+
+    #[test]
+    fn killed_peer_surfaces_fast_as_peer_closed() {
+        let (net, eps) =
+            FakeNet::world(2, vec![FaultScript::clean(), FaultScript::clean()], fast());
+        net.kill(1);
+        let t0 = Instant::now();
+        let err = eps[0].recv_hub(1).unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::PeerClosed);
+        assert!(t0.elapsed() < Duration::from_millis(150), "kill detection was slow");
+        // Sending to the corpse also errors.
+        let err = eps[0].send_hub(1, &Frame::bare(FrameKind::Done, 0, 0)).unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::PeerClosed);
+    }
+
+    #[test]
+    fn queued_frames_drain_before_kill_is_reported() {
+        let (net, eps) =
+            FakeNet::world(2, vec![FaultScript::clean(), FaultScript::clean()], fast());
+        eps[1].send_hub(0, &Frame::bare(FrameKind::Done, 1, 5)).unwrap();
+        net.kill(1);
+        assert_eq!(eps[0].recv_hub(1).unwrap().step, 5);
+        assert_eq!(eps[0].recv_hub(1).unwrap_err().kind, DistErrorKind::PeerClosed);
+    }
+
+    #[test]
+    fn permanent_outage_from_attempt_n() {
+        let script = FaultScript { permanent_from: Some(2), ..FaultScript::clean() };
+        let (_net, eps) = FakeNet::world(2, vec![FaultScript::clean(), script], fast());
+        eps[1].send_hub(0, &Frame::bare(FrameKind::Done, 1, 0)).unwrap();
+        let err = eps[1].send_hub(0, &Frame::bare(FrameKind::Done, 1, 1)).unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Permanent);
+        let err = eps[1].send_hub(0, &Frame::bare(FrameKind::Done, 1, 2)).unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Permanent);
+    }
+
+    #[test]
+    fn kill_at_send_marks_self_dead() {
+        let script = FaultScript { kill_at_send: Some(1), ..FaultScript::clean() };
+        let (net, eps) = FakeNet::world(2, vec![FaultScript::clean(), script], fast());
+        let err = eps[1].send_hub(0, &Frame::bare(FrameKind::Done, 1, 0)).unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Permanent);
+        assert!(!net.is_alive(1));
+        assert_eq!(eps[0].recv_hub(1).unwrap_err().kind, DistErrorKind::PeerClosed);
+    }
+}

@@ -1,0 +1,336 @@
+//! Multi-process distributed training over TCP (and an in-memory fake
+//! for deterministic fault injection).
+//!
+//! The paper's hybrid data-model parallel scheme stops at one machine;
+//! this module crosses the process boundary while preserving the
+//! repo's signature invariant: **a distributed run is bitwise-identical
+//! to the single-process flat engine** (`rust/tests/dist_equivalence.rs`).
+//!
+//! Layers, bottom up:
+//!
+//! * [`wire`] — the length-prefixed binary frame protocol. The message
+//!   unit is one [`Bucket`](crate::tensor::flat::Bucket) segment of
+//!   the flat gradient/parameter slab (frame = magic + u32 len + kind
+//!   + rank + step + bucket id + payload + checksum). Torn, truncated
+//!   or corrupted frames decode to a typed [`WireError`](wire::WireError)
+//!   — never a panic — mirroring the hardened `checkpoint::load_full`.
+//! * [`transport`] — the [`DistTransport`](transport::DistTransport)
+//!   trait (hub links to rank 0 + ring links to the ring neighbours)
+//!   and its loopback-TCP implementation with read/connect timeouts,
+//!   so a killed peer surfaces as a clean typed error at a step
+//!   boundary, not a hang.
+//! * [`fake`] — the in-memory transport with scripted deterministic
+//!   faults (transient send drops, torn frames, delays, permanent
+//!   outages, kill-peer), modeled on `storage::FaultyMem`'s 1-based
+//!   attempt schedules.
+//! * [`collective`] — [`DistComm`](collective::DistComm): the two
+//!   reduction topologies. **`ps`** (parameter server): workers push
+//!   their locally tree-reduced bucket segments to rank 0, rank 0
+//!   continues the fixed-shape binary tree over global shard order,
+//!   applies the optimizer once and broadcasts the updated parameter
+//!   buckets. **`replicated`**: a ring all-gather of the per-rank
+//!   partial segments followed by the *identical* tree fold on every
+//!   rank, so every rank applies the same update to its own optimizer.
+//! * [`driver`] — the per-rank training loop (`train_rank`) shared by
+//!   the `dist-worker` subcommand, the equivalence tests and the
+//!   `train-bench --dist` rows, plus thread-world harnesses over both
+//!   transports.
+//!
+//! ## Why the network hop cannot change the numbers
+//!
+//! The single-process flat engine folds the `M` micro-batch shards of
+//! one global batch through a fixed-shape binary tree over global
+//! shard order (pass 1 combines (0,1), (2,3), …). When rank `r` of
+//! `P` owns the contiguous block of `L = replicas × accum` shards
+//! `[r·L, (r+1)·L)` and `L` is a power of two, that tree *factorizes*:
+//! its first `log2 L` passes combine only within blocks — exactly the
+//! intra-process reduce each rank already ran — and the remaining
+//! passes are the same tree over the `P` per-rank partials in rank
+//! order. Both topologies implement that outer tree verbatim (rank 0
+//! folds in rank order; the ring only *moves* segments, every rank
+//! folds the gathered partials in rank order), so the bytes equal the
+//! single-process reduction. The token count `ntok` is a sum of
+//! integers (exact in f64 under any order), so the `1/ntok`
+//! normalization and the clip norm — both computed from the already
+//! bitwise-identical reduced gradient — agree too. [`DistComm`]
+//! rejects non-power-of-two `L` at construction instead of silently
+//! diverging.
+//!
+//! [`DistComm`]: collective::DistComm
+
+pub mod collective;
+pub mod driver;
+pub mod fake;
+pub mod transport;
+pub mod wire;
+
+pub use collective::{DistComm, GlobalStep};
+pub use driver::{run_fake_world, run_tcp_world, train_rank, RankRun, RankSpec};
+pub use fake::{FakeNet, FaultScript};
+pub use transport::{CommOpts, DistTransport, TcpTransport};
+
+use crate::rng::Rng;
+
+// ------------------------------------------------------------- errors
+
+/// Classification of a distributed-training failure, mirroring
+/// `storage::ErrorKind`: only [`Transient`](DistErrorKind::Transient)
+/// is retryable; everything else must surface at the step boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistErrorKind {
+    /// Malformed bytes on the wire (bad magic/length/checksum/kind).
+    Wire,
+    /// A peer stayed silent past the read deadline.
+    Timeout,
+    /// A peer closed its connection (killed process, dropped socket).
+    PeerClosed,
+    /// Retryable fault (loopback connect race, scripted send drop).
+    Transient,
+    /// Non-retryable fault (retries exhausted, peer aborted, I/O).
+    Permanent,
+    /// Invalid topology or configuration, detected before any step.
+    Config,
+}
+
+/// The typed error every peer loop returns — a killed worker, a torn
+/// frame or a permanent outage is always one of these, never a hang or
+/// a panic.
+#[derive(Debug, Clone)]
+pub struct DistError {
+    pub kind: DistErrorKind,
+    pub msg: String,
+}
+
+impl DistError {
+    pub fn new(kind: DistErrorKind, msg: impl Into<String>) -> Self {
+        DistError { kind, msg: msg.into() }
+    }
+
+    pub fn wire(msg: impl Into<String>) -> Self {
+        Self::new(DistErrorKind::Wire, msg)
+    }
+
+    pub fn timeout(msg: impl Into<String>) -> Self {
+        Self::new(DistErrorKind::Timeout, msg)
+    }
+
+    pub fn peer_closed(msg: impl Into<String>) -> Self {
+        Self::new(DistErrorKind::PeerClosed, msg)
+    }
+
+    pub fn transient(msg: impl Into<String>) -> Self {
+        Self::new(DistErrorKind::Transient, msg)
+    }
+
+    pub fn permanent(msg: impl Into<String>) -> Self {
+        Self::new(DistErrorKind::Permanent, msg)
+    }
+
+    pub fn config(msg: impl Into<String>) -> Self {
+        Self::new(DistErrorKind::Config, msg)
+    }
+
+    /// Whether a retry loop may try again (Transient only — a timeout
+    /// already spent its patience inside the read deadline).
+    pub fn retryable(&self) -> bool {
+        self.kind == DistErrorKind::Transient
+    }
+}
+
+impl std::fmt::Display for DistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let k = match self.kind {
+            DistErrorKind::Wire => "wire",
+            DistErrorKind::Timeout => "timeout",
+            DistErrorKind::PeerClosed => "peer-closed",
+            DistErrorKind::Transient => "transient",
+            DistErrorKind::Permanent => "permanent",
+            DistErrorKind::Config => "config",
+        };
+        write!(f, "dist {k}: {}", self.msg)
+    }
+}
+
+impl std::error::Error for DistError {}
+
+pub type DistResult<T> = Result<T, DistError>;
+
+// ------------------------------------------------------------ backoff
+
+/// Capped exponential backoff with deterministic jitter — the same
+/// shape as `storage::RetryPolicy` (`min(cap, base·2^attempt) ·
+/// (0.5 + 0.5u)`), reused for peer connect loops and transient send
+/// faults so distributed retries behave exactly like storage retries.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    /// Total attempts including the first (≥ 1).
+    pub max_attempts: u32,
+    pub base_ms: f64,
+    pub cap_ms: f64,
+    /// Seed of the jitter stream (deterministic per peer loop).
+    pub seed: u64,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff { max_attempts: 5, base_ms: 2.0, cap_ms: 100.0, seed: 0xD157_BACC }
+    }
+}
+
+impl Backoff {
+    /// Zero-delay policy for tests: `n` attempts, no sleeping.
+    pub fn instant(n: u32) -> Self {
+        Backoff { max_attempts: n.max(1), base_ms: 0.0, cap_ms: 0.0, seed: 0 }
+    }
+
+    /// Jittered delay before retry number `attempt` (0-based), given a
+    /// uniform sample `u ∈ [0, 1)`.
+    pub fn delay_ms(&self, attempt: u32, u: f64) -> f64 {
+        let exp = self.base_ms * (1u64 << attempt.min(32)) as f64;
+        exp.min(self.cap_ms) * (0.5 + 0.5 * u)
+    }
+}
+
+/// A [`Backoff`] plus its jitter stream: retries `Transient` errors
+/// with capped jittered sleeps and converts exhaustion into a
+/// `Permanent` error naming the attempt count.
+pub struct Retrier {
+    policy: Backoff,
+    rng: Rng,
+}
+
+impl Retrier {
+    pub fn new(policy: Backoff) -> Self {
+        let rng = Rng::new(policy.seed);
+        Retrier { policy, rng }
+    }
+
+    pub fn run<T>(
+        &mut self,
+        what: &str,
+        mut f: impl FnMut() -> DistResult<T>,
+    ) -> DistResult<T> {
+        let max = self.policy.max_attempts.max(1);
+        for attempt in 0..max {
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) if e.retryable() && attempt + 1 < max => {
+                    let ms = self.policy.delay_ms(attempt, self.rng.f64());
+                    if ms > 0.0 {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+                    }
+                }
+                Err(e) if e.retryable() => {
+                    return Err(DistError::permanent(format!(
+                        "{what}: retries exhausted after {max} attempts: {}",
+                        e.msg
+                    )));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!("loop returns on the last attempt")
+    }
+}
+
+// ------------------------------------------------------------- shared
+
+/// Which reduction topology a distributed run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistMode {
+    /// Rank 0 is the parameter server: workers push reduced buckets,
+    /// rank 0 folds + applies + broadcasts updated parameters.
+    Ps,
+    /// Every rank holds replicated optimizer state: ring all-gather of
+    /// the partials, identical tree fold + apply on every rank.
+    Replicated,
+}
+
+impl DistMode {
+    pub fn key(self) -> &'static str {
+        match self {
+            DistMode::Ps => "ps",
+            DistMode::Replicated => "replicated",
+        }
+    }
+}
+
+impl std::str::FromStr for DistMode {
+    type Err = DistError;
+    fn from_str(s: &str) -> DistResult<Self> {
+        match s {
+            "ps" => Ok(DistMode::Ps),
+            "replicated" => Ok(DistMode::Replicated),
+            other => Err(DistError::config(format!(
+                "unknown --dist-mode `{other}` (ps | replicated)"
+            ))),
+        }
+    }
+}
+
+/// One micro-batch shard's scalar contribution. The full per-shard
+/// list crosses the wire (16 bytes per shard) so every rank folds
+/// loss/ntok as the same f64 left fold over *global* shard order the
+/// single-process engine uses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardMeta {
+    pub loss_sum: f64,
+    pub ntok: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retrier_retries_transient_then_succeeds() {
+        let mut r = Retrier::new(Backoff::instant(4));
+        let mut calls = 0;
+        let out = r.run("op", || {
+            calls += 1;
+            if calls < 3 { Err(DistError::transient("flaky")) } else { Ok(calls) }
+        });
+        assert_eq!(out.unwrap(), 3);
+    }
+
+    #[test]
+    fn retrier_exhaustion_is_permanent_with_attempt_count() {
+        let mut r = Retrier::new(Backoff::instant(3));
+        let err = r
+            .run("op", || -> DistResult<()> { Err(DistError::transient("down")) })
+            .unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Permanent);
+        assert!(err.msg.contains("3 attempts"), "{}", err.msg);
+    }
+
+    #[test]
+    fn retrier_never_retries_non_transient() {
+        let mut r = Retrier::new(Backoff::instant(5));
+        let mut calls = 0;
+        let err = r
+            .run("op", || -> DistResult<()> {
+                calls += 1;
+                Err(DistError::peer_closed("gone"))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 1);
+        assert_eq!(err.kind, DistErrorKind::PeerClosed);
+    }
+
+    #[test]
+    fn backoff_delay_is_capped_and_jittered() {
+        let b = Backoff { max_attempts: 8, base_ms: 10.0, cap_ms: 40.0, seed: 1 };
+        assert_eq!(b.delay_ms(0, 0.0), 5.0); // 10 * 0.5
+        assert_eq!(b.delay_ms(0, 1.0), 10.0);
+        assert_eq!(b.delay_ms(10, 0.0), 20.0); // capped at 40 * 0.5
+        assert!(b.delay_ms(3, 0.5) <= 40.0);
+    }
+
+    #[test]
+    fn dist_mode_parses_both_names_and_rejects_garbage() {
+        assert_eq!("ps".parse::<DistMode>().unwrap(), DistMode::Ps);
+        assert_eq!("replicated".parse::<DistMode>().unwrap(), DistMode::Replicated);
+        let e = "ring".parse::<DistMode>().unwrap_err();
+        assert_eq!(e.kind, DistErrorKind::Config);
+    }
+}

@@ -1,0 +1,583 @@
+//! Transport abstraction: hub links (every rank ↔ rank 0) plus ring
+//! links (rank ↔ ring neighbours), and the loopback-TCP
+//! implementation with deadlines on every blocking operation.
+//!
+//! Hub and ring are *separate channels* even when they connect the
+//! same pair of processes (at world = 2 the successor, the
+//! predecessor and the hub peer are all the same rank) — mixing them
+//! on one stream would interleave rendezvous and ring traffic.
+//!
+//! Every receive runs against a deadline: a peer that died mid-frame
+//! surfaces as `PeerClosed`, one that merely went silent as `Timeout`.
+//! Neither can hang the caller, which is what turns a killed worker
+//! into a clean step-boundary error.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::wire::{self, Frame};
+use super::{Backoff, DistError, DistResult, Retrier};
+
+/// Timeouts + retry policy for one transport endpoint.
+#[derive(Debug, Clone)]
+pub struct CommOpts {
+    /// Overall deadline for receiving one frame (and for the shutdown
+    /// barrier). A peer silent past this is reported as `Timeout`.
+    pub read_timeout_ms: u64,
+    /// Overall deadline for dialing a peer during rendezvous.
+    pub connect_timeout_ms: u64,
+    /// Backoff policy for connect retries / transient send faults.
+    pub backoff: Backoff,
+}
+
+impl Default for CommOpts {
+    fn default() -> Self {
+        CommOpts { read_timeout_ms: 10_000, connect_timeout_ms: 10_000, backoff: Backoff::default() }
+    }
+}
+
+impl CommOpts {
+    /// Short deadlines for fault-injection tests: failures should
+    /// surface in well under a second.
+    pub fn fast() -> Self {
+        CommOpts { read_timeout_ms: 2_000, connect_timeout_ms: 2_000, backoff: Backoff::instant(3) }
+    }
+}
+
+/// What [`DistComm`](super::collective::DistComm) needs from the
+/// network. Methods take `&self` (endpoints are shared across the
+/// per-round send/recv threads), so implementations guard their
+/// streams internally.
+pub trait DistTransport: Send + Sync {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+
+    /// Send on the hub channel. Workers may only target rank 0;
+    /// rank 0 may target any worker.
+    fn send_hub(&self, to: usize, frame: &Frame) -> DistResult<()>;
+
+    /// Receive the next hub frame from `from` (same addressing rule).
+    fn recv_hub(&self, from: usize) -> DistResult<Frame>;
+
+    /// Send to the ring successor `(rank + 1) % world`.
+    fn send_ring(&self, frame: &Frame) -> DistResult<()>;
+
+    /// Receive from the ring predecessor `(rank + world - 1) % world`.
+    fn recv_ring(&self) -> DistResult<Frame>;
+}
+
+// ------------------------------------------------------- TCP helpers
+
+/// Read exactly `buf.len()` bytes before `deadline`. Uses a short
+/// socket read timeout so partial progress is preserved across polls
+/// (std's `read_exact` discards progress when a timeout fires
+/// mid-buffer). Returns `PeerClosed` on EOF: at `offset == 0` the peer
+/// closed between frames; mid-buffer it died inside one.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], deadline: Instant) -> DistResult<()> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        if Instant::now() >= deadline {
+            return Err(DistError::timeout(format!(
+                "read stalled: {got}/{} bytes before deadline",
+                buf.len()
+            )));
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 {
+                    DistError::peer_closed("peer closed the connection")
+                } else {
+                    DistError::peer_closed(format!(
+                        "connection died mid-frame: {got}/{} bytes",
+                        buf.len()
+                    ))
+                });
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(DistError::permanent(format!("socket read failed: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+/// Read one whole frame (header, body, checksum) before `deadline` and
+/// decode it. Wire-level failures map through `WireError::into_dist`.
+fn read_frame(stream: &mut TcpStream, deadline: Instant) -> DistResult<Frame> {
+    let mut head = [0u8; 12];
+    read_full(stream, &mut head, deadline)?;
+    if head[..8] != wire::MAGIC {
+        return Err(wire::WireError::BadMagic.into_dist());
+    }
+    let body_len = u32::from_le_bytes([head[8], head[9], head[10], head[11]]) as usize;
+    if body_len < wire::BODY_HEADER || body_len > wire::MAX_BODY {
+        return Err(wire::WireError::BadLength(body_len as u64).into_dist());
+    }
+    let mut rest = vec![0u8; body_len + 4];
+    read_full(stream, &mut rest, deadline)?;
+    let mut whole = Vec::with_capacity(12 + rest.len());
+    whole.extend_from_slice(&head);
+    whole.extend_from_slice(&rest);
+    wire::decode_exact(&whole).map_err(|e| e.into_dist())
+}
+
+fn write_frame(stream: &mut TcpStream, frame: &Frame) -> DistResult<()> {
+    let bytes = wire::encode(frame);
+    stream.write_all(&bytes).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::BrokenPipe
+            || e.kind() == std::io::ErrorKind::ConnectionReset
+            || e.kind() == std::io::ErrorKind::ConnectionAborted
+        {
+            DistError::peer_closed(format!("peer gone on send: {e}"))
+        } else if e.kind() == std::io::ErrorKind::WouldBlock
+            || e.kind() == std::io::ErrorKind::TimedOut
+        {
+            DistError::timeout(format!("send stalled: {e}"))
+        } else {
+            DistError::permanent(format!("socket write failed: {e}"))
+        }
+    })
+}
+
+/// A bidirectional link: cloned read/write halves of one TcpStream,
+/// each behind its own lock so one thread can send while another
+/// receives (the ring does exactly that every round).
+struct Link {
+    rd: Mutex<TcpStream>,
+    wr: Mutex<TcpStream>,
+}
+
+impl Link {
+    fn new(stream: TcpStream, opts: &CommOpts) -> DistResult<Link> {
+        stream
+            .set_nodelay(true)
+            .map_err(|e| DistError::permanent(format!("set_nodelay: {e}")))?;
+        // Short poll interval; read_full enforces the real deadline.
+        stream
+            .set_read_timeout(Some(Duration::from_millis(50)))
+            .map_err(|e| DistError::permanent(format!("set_read_timeout: {e}")))?;
+        stream
+            .set_write_timeout(Some(Duration::from_millis(
+                CommOpts::default().read_timeout_ms,
+            )))
+            .map_err(|e| DistError::permanent(format!("set_write_timeout: {e}")))?;
+        let _ = opts;
+        let rd = stream
+            .try_clone()
+            .map_err(|e| DistError::permanent(format!("stream clone: {e}")))?;
+        Ok(Link { rd: Mutex::new(rd), wr: Mutex::new(stream) })
+    }
+
+    fn send(&self, frame: &Frame) -> DistResult<()> {
+        let mut s = self.wr.lock().unwrap();
+        write_frame(&mut s, frame)
+    }
+
+    fn recv(&self, timeout: Duration) -> DistResult<Frame> {
+        let mut s = self.rd.lock().unwrap();
+        read_frame(&mut s, Instant::now() + timeout)
+    }
+}
+
+/// Accept one connection before `deadline` (nonblocking poll loop —
+/// std has no accept timeout).
+fn accept_deadline(listener: &TcpListener, deadline: Instant) -> DistResult<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| DistError::permanent(format!("set_nonblocking: {e}")))?;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false)
+                    .map_err(|e| DistError::permanent(format!("set_nonblocking: {e}")))?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(DistError::timeout("no peer connected before deadline"));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(DistError::permanent(format!("accept failed: {e}"))),
+        }
+    }
+}
+
+fn dial(addr: SocketAddr, opts: &CommOpts, seed_salt: u64) -> DistResult<TcpStream> {
+    let deadline = Instant::now() + Duration::from_millis(opts.connect_timeout_ms);
+    let mut policy = opts.backoff.clone();
+    policy.seed ^= seed_salt;
+    // Connect until the deadline, not a fixed attempt count: the peer
+    // may legitimately not have bound its listener yet.
+    policy.max_attempts = u32::MAX;
+    let mut retrier = Retrier::new(policy);
+    retrier.run("connect", || {
+        if Instant::now() >= deadline {
+            return Err(DistError::timeout(format!("connect to {addr} timed out")));
+        }
+        TcpStream::connect_timeout(&addr, Duration::from_millis(250))
+            .map_err(|e| DistError::transient(format!("connect {addr}: {e}")))
+    })
+}
+
+// ------------------------------------------------------ TcpTransport
+
+/// Loopback-TCP transport. Rank 0 holds one hub [`Link`] per worker;
+/// workers hold one hub link to rank 0. In replicated mode every rank
+/// additionally holds `ring_out` (to its successor) and `ring_in`
+/// (from its predecessor).
+pub struct TcpTransport {
+    rank: usize,
+    world: usize,
+    opts: CommOpts,
+    /// rank 0: index w-1 is the link to worker w. workers: single link
+    /// to rank 0.
+    hub: Vec<Link>,
+    ring_out: Option<Link>,
+    ring_in: Option<Link>,
+}
+
+impl TcpTransport {
+    /// Rendezvous as rank 0. `listener` must already be bound (the
+    /// launcher prints its address for the workers). Collects one
+    /// Hello per worker carrying the worker's ring port, then replies
+    /// with the full Roster. With `ring` set, also wires this rank's
+    /// own ring links.
+    pub fn rank0(
+        listener: TcpListener,
+        world: usize,
+        ring: bool,
+        opts: CommOpts,
+    ) -> DistResult<TcpTransport> {
+        assert!(world >= 2, "rank0 rendezvous needs world >= 2");
+        let deadline = Instant::now() + Duration::from_millis(opts.connect_timeout_ms);
+        let ring_listener = if ring { Some(bind_ring()?) } else { None };
+        let my_ring_port = ring_listener
+            .as_ref()
+            .map(|l| l.local_addr().map(|a| a.port()).unwrap_or(0))
+            .unwrap_or(0);
+
+        // Accept world-1 workers; Hello tells us which rank each is.
+        let mut hub: Vec<Option<Link>> = (1..world).map(|_| None).collect();
+        let mut ports = vec![0u16; world];
+        ports[0] = my_ring_port;
+        for _ in 1..world {
+            let stream = accept_deadline(&listener, deadline)?;
+            let link = Link::new(stream, &opts)?;
+            let hello = link.recv(Duration::from_millis(opts.read_timeout_ms))?;
+            if hello.kind != wire::FrameKind::Hello {
+                return Err(DistError::wire(format!(
+                    "expected hello, got {} frame",
+                    hello.kind.name()
+                )));
+            }
+            let w = hello.rank as usize;
+            if w == 0 || w >= world {
+                return Err(DistError::config(format!("hello from invalid rank {w}")));
+            }
+            if hub[w - 1].is_some() {
+                return Err(DistError::config(format!("duplicate hello from rank {w}")));
+            }
+            let port_bytes = wire::bytes_to_ports(&hello.payload)?;
+            ports[w] = port_bytes.first().copied().unwrap_or(0);
+            hub[w - 1] = Some(link);
+        }
+        let hub: Vec<Link> = hub
+            .into_iter()
+            .map(|l| l.expect("all worker slots filled above"))
+            .collect();
+
+        // Broadcast the roster so every rank can dial its successor.
+        let roster = Frame::new(
+            wire::FrameKind::Roster,
+            0,
+            0,
+            0,
+            wire::ports_to_bytes(&ports),
+        );
+        for link in &hub {
+            link.send(&roster)?;
+        }
+
+        let (ring_out, ring_in) = match ring_listener {
+            Some(l) => {
+                let (o, i) = wire_ring(&l, 0, world, &ports, &opts)?;
+                (Some(o), Some(i))
+            }
+            None => (None, None),
+        };
+        Ok(TcpTransport { rank: 0, world, opts, hub, ring_out, ring_in })
+    }
+
+    /// Rendezvous as worker `rank`: dial rank 0, send Hello (with this
+    /// rank's ring port when `ring`), receive the Roster, then wire
+    /// ring links.
+    pub fn worker(
+        rank: usize,
+        world: usize,
+        hub_addr: SocketAddr,
+        ring: bool,
+        opts: CommOpts,
+    ) -> DistResult<TcpTransport> {
+        assert!(rank >= 1 && rank < world, "worker rank out of range");
+        let ring_listener = if ring { Some(bind_ring()?) } else { None };
+        let my_ring_port = ring_listener
+            .as_ref()
+            .map(|l| l.local_addr().map(|a| a.port()).unwrap_or(0))
+            .unwrap_or(0);
+
+        let stream = dial(hub_addr, &opts, rank as u64)?;
+        let link = Link::new(stream, &opts)?;
+        link.send(&Frame::new(
+            wire::FrameKind::Hello,
+            rank as u32,
+            0,
+            0,
+            wire::ports_to_bytes(&[my_ring_port]),
+        ))?;
+        let roster = link.recv(Duration::from_millis(opts.read_timeout_ms))?;
+        if roster.kind != wire::FrameKind::Roster {
+            return Err(DistError::wire(format!(
+                "expected roster, got {} frame",
+                roster.kind.name()
+            )));
+        }
+        let ports = wire::bytes_to_ports(&roster.payload)?;
+        if ports.len() != world {
+            return Err(DistError::config(format!(
+                "roster has {} ports, world is {world}",
+                ports.len()
+            )));
+        }
+
+        let (ring_out, ring_in) = match ring_listener {
+            Some(l) => {
+                let (o, i) = wire_ring(&l, rank, world, &ports, &opts)?;
+                (Some(o), Some(i))
+            }
+            None => (None, None),
+        };
+        Ok(TcpTransport { rank, world, opts, hub: vec![link], ring_out, ring_in })
+    }
+
+    fn hub_link(&self, peer: usize) -> DistResult<&Link> {
+        if self.rank == 0 {
+            if peer == 0 || peer >= self.world {
+                return Err(DistError::config(format!(
+                    "rank 0 has no hub link to rank {peer}"
+                )));
+            }
+            Ok(&self.hub[peer - 1])
+        } else {
+            if peer != 0 {
+                return Err(DistError::config(format!(
+                    "worker {} can only talk to rank 0 on the hub, not {peer}",
+                    self.rank
+                )));
+            }
+            Ok(&self.hub[0])
+        }
+    }
+}
+
+fn bind_ring() -> DistResult<TcpListener> {
+    TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| DistError::permanent(format!("bind ring listener: {e}")))
+}
+
+/// Connect to the successor's ring listener and accept the
+/// predecessor. Listener backlog makes connect-before-accept safe, so
+/// a single fixed order (dial first, then accept) cannot deadlock.
+fn wire_ring(
+    listener: &TcpListener,
+    rank: usize,
+    world: usize,
+    ports: &[u16],
+    opts: &CommOpts,
+) -> DistResult<(Link, Link)> {
+    let succ = (rank + 1) % world;
+    let succ_port = ports[succ];
+    if succ_port == 0 {
+        return Err(DistError::config(format!("rank {succ} published no ring port")));
+    }
+    let addr: SocketAddr = format!("127.0.0.1:{succ_port}")
+        .parse()
+        .map_err(|e| DistError::config(format!("ring addr: {e}")))?;
+    let out_stream = dial(addr, opts, 0x5150 + rank as u64)?;
+    let out = Link::new(out_stream, opts)?;
+    out.send(&Frame::bare(wire::FrameKind::RingHello, rank as u32, 0))?;
+
+    let deadline = Instant::now() + Duration::from_millis(opts.connect_timeout_ms);
+    let in_stream = accept_deadline(listener, deadline)?;
+    let inc = Link::new(in_stream, opts)?;
+    let hello = inc.recv(Duration::from_millis(opts.read_timeout_ms))?;
+    let pred = (rank + world - 1) % world;
+    if hello.kind != wire::FrameKind::RingHello || hello.rank as usize != pred {
+        return Err(DistError::wire(format!(
+            "ring predecessor handshake: expected ring-hello from rank {pred}, got {} from rank {}",
+            hello.kind.name(),
+            hello.rank
+        )));
+    }
+    Ok((out, inc))
+}
+
+impl DistTransport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send_hub(&self, to: usize, frame: &Frame) -> DistResult<()> {
+        self.hub_link(to)?.send(frame)
+    }
+
+    fn recv_hub(&self, from: usize) -> DistResult<Frame> {
+        self.hub_link(from)?
+            .recv(Duration::from_millis(self.opts.read_timeout_ms))
+    }
+
+    fn send_ring(&self, frame: &Frame) -> DistResult<()> {
+        self.ring_out
+            .as_ref()
+            .ok_or_else(|| DistError::config("no ring links in ps mode"))?
+            .send(frame)
+    }
+
+    fn recv_ring(&self) -> DistResult<Frame> {
+        self.ring_in
+            .as_ref()
+            .ok_or_else(|| DistError::config("no ring links in ps mode"))?
+            .recv(Duration::from_millis(self.opts.read_timeout_ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::wire::FrameKind;
+
+    /// Full rendezvous + hub echo + one ring round over real loopback
+    /// sockets, world = 3.
+    #[test]
+    fn tcp_rendezvous_hub_and_ring_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let world = 3;
+        std::thread::scope(|scope| {
+            let r0 = scope.spawn(move || {
+                let t = TcpTransport::rank0(listener, world, true, CommOpts::fast()).unwrap();
+                for w in 1..world {
+                    let f = t.recv_hub(w).unwrap();
+                    assert_eq!(f.kind, FrameKind::Grad);
+                    assert_eq!(f.rank as usize, w);
+                    t.send_hub(w, &Frame::bare(FrameKind::Done, 0, f.step)).unwrap();
+                }
+                t.send_ring(&Frame::bare(FrameKind::Meta, 0, 9)).unwrap();
+                let f = t.recv_ring().unwrap();
+                assert_eq!(f.rank as usize, world - 1);
+            });
+            let workers: Vec<_> = (1..world)
+                .map(|w| {
+                    scope.spawn(move || {
+                        let t =
+                            TcpTransport::worker(w, world, addr, true, CommOpts::fast()).unwrap();
+                        t.send_hub(
+                            0,
+                            &Frame::new(FrameKind::Grad, w as u32, 4, 0, vec![1, 2, 3, 4]),
+                        )
+                        .unwrap();
+                        assert_eq!(t.recv_hub(0).unwrap().kind, FrameKind::Done);
+                        let f = t.recv_ring().unwrap();
+                        assert_eq!(f.rank as usize, w - 1);
+                        t.send_ring(&Frame::bare(FrameKind::Meta, w as u32, 9)).unwrap();
+                    })
+                })
+                .collect();
+            r0.join().unwrap();
+            for w in workers {
+                w.join().unwrap();
+            }
+        });
+    }
+
+    /// A peer that dies after rendezvous surfaces as PeerClosed (its
+    /// socket closed) — not a hang.
+    #[test]
+    fn dead_peer_is_peer_closed_not_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|scope| {
+            let r0 = scope.spawn(move || {
+                let t = TcpTransport::rank0(listener, 2, false, CommOpts::fast()).unwrap();
+                let err = t.recv_hub(1).unwrap_err();
+                assert_eq!(err.kind, crate::dist::DistErrorKind::PeerClosed);
+            });
+            scope
+                .spawn(move || {
+                    let t = TcpTransport::worker(1, 2, addr, false, CommOpts::fast()).unwrap();
+                    drop(t); // dies right after rendezvous
+                })
+                .join()
+                .unwrap();
+            r0.join().unwrap();
+        });
+    }
+
+    /// A silent (alive but unresponsive) peer surfaces as Timeout at
+    /// the read deadline.
+    #[test]
+    fn silent_peer_is_timeout() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut opts = CommOpts::fast();
+        opts.read_timeout_ms = 300;
+        let o2 = opts.clone();
+        std::thread::scope(|scope| {
+            let (tx, rx) = std::sync::mpsc::channel::<()>();
+            let r0 = scope.spawn(move || {
+                let t = TcpTransport::rank0(listener, 2, false, o2).unwrap();
+                let err = t.recv_hub(1).unwrap_err();
+                assert_eq!(err.kind, crate::dist::DistErrorKind::Timeout);
+                drop(rx); // release the silent worker
+            });
+            scope.spawn(move || {
+                let t = TcpTransport::worker(1, 2, addr, false, opts).unwrap();
+                // Stay alive, send nothing, until rank 0 finishes.
+                let _ = tx.send(());
+                std::thread::sleep(Duration::from_millis(600));
+                drop(t);
+            });
+            r0.join().unwrap();
+        });
+    }
+
+    /// Dialing a never-bound port exhausts the connect deadline with a
+    /// typed Timeout.
+    #[test]
+    fn connect_to_nothing_times_out() {
+        // Bind-then-drop to get a port that is almost surely closed.
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let mut opts = CommOpts::fast();
+        opts.connect_timeout_ms = 300;
+        let addr: SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
+        let err = dial(addr, &opts, 0).unwrap_err();
+        assert!(
+            matches!(
+                err.kind,
+                crate::dist::DistErrorKind::Timeout | crate::dist::DistErrorKind::Permanent
+            ),
+            "{err}"
+        );
+    }
+}

@@ -1,0 +1,482 @@
+//! The length-prefixed binary wire protocol.
+//!
+//! One frame carries one message; the workhorse payload is a single
+//! [`Bucket`](crate::tensor::flat::Bucket) segment of the flat
+//! gradient/parameter slab, so the network reuses exactly the bucket
+//! boundaries PR 5's overlapped reduce established.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! +----------+---------+------+--------+--------+----------+---------+----------+
+//! | magic  8 | len u32 | kind | rank   | step   | bucket   | payload | crc u32  |
+//! |          |         | u8   | u32    | u64    | u32      | len-17  |          |
+//! +----------+---------+------+--------+--------+----------+---------+----------+
+//! |<-------------------------- checksummed ------------------------->|
+//! ```
+//!
+//! `len` counts the body (kind..payload). The checksum is FNV-1a over
+//! *everything* before it — magic, length prefix and body — so any
+//! single corrupted byte anywhere in the frame is detected. Decoding
+//! is bounds-checked end to end and returns a typed [`WireError`];
+//! torn/truncated/corrupt input can never panic or over-allocate
+//! (body length is capped at [`MAX_BODY`], mirroring the element-count
+//! cap in `checkpoint::load_full`).
+
+use super::{DistError, DistResult, ShardMeta};
+
+/// Protocol magic + version. Bump the trailing digit on any layout
+/// change so mismatched builds fail loudly at the first frame.
+pub const MAGIC: [u8; 8] = *b"HYNMTDW1";
+
+/// Fixed body header: kind u8 + rank u32 + step u64 + bucket u32.
+pub const BODY_HEADER: usize = 1 + 4 + 8 + 4;
+
+/// Upper bound on a frame body. The largest legitimate payload is one
+/// parameter bucket (`DEFAULT_BUCKET_BYTES` = 256 KiB); 256 MiB leaves
+/// three orders of magnitude of headroom while keeping a corrupt
+/// length prefix from driving a multi-GiB allocation.
+pub const MAX_BODY: usize = 256 << 20;
+
+/// Everything a frame says besides its payload bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Worker → rank 0 rendezvous: "rank `rank` is up"; payload is the
+    /// worker's u16 ring-listener port (0 in ps mode).
+    Hello,
+    /// Rank 0 → worker rendezvous reply; payload is the full roster of
+    /// ring ports (u16 per rank) so each rank can dial its successor.
+    Roster,
+    /// Ring-link identification right after connect; no payload.
+    RingHello,
+    /// One locally tree-reduced gradient bucket segment (f32 LE).
+    Grad,
+    /// One updated parameter bucket segment (f32 LE), rank 0 → worker.
+    Param,
+    /// Per-shard loss/ntok metadata (worker → rank 0: `ShardMeta` list;
+    /// rank 0 → worker: loss_sum/ntok/grad_norm triple).
+    Meta,
+    /// Clean shutdown barrier.
+    Done,
+    /// A peer hit a step error; payload is its UTF-8 message. Receivers
+    /// convert this to a Permanent error immediately.
+    Abort,
+}
+
+impl FrameKind {
+    fn code(&self) -> u8 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::Roster => 2,
+            FrameKind::RingHello => 3,
+            FrameKind::Grad => 4,
+            FrameKind::Param => 5,
+            FrameKind::Meta => 6,
+            FrameKind::Done => 7,
+            FrameKind::Abort => 8,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<FrameKind> {
+        Some(match c {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Roster,
+            3 => FrameKind::RingHello,
+            4 => FrameKind::Grad,
+            5 => FrameKind::Param,
+            6 => FrameKind::Meta,
+            7 => FrameKind::Done,
+            8 => FrameKind::Abort,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameKind::Hello => "hello",
+            FrameKind::Roster => "roster",
+            FrameKind::RingHello => "ring-hello",
+            FrameKind::Grad => "grad",
+            FrameKind::Param => "param",
+            FrameKind::Meta => "meta",
+            FrameKind::Done => "done",
+            FrameKind::Abort => "abort",
+        }
+    }
+}
+
+/// One decoded wire message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    /// Originating rank (for ring frames: the rank whose partial this
+    /// is, not the forwarding neighbour).
+    pub rank: u32,
+    pub step: u64,
+    /// Bucket index for Grad/Param; 0 otherwise.
+    pub bucket: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, rank: u32, step: u64, bucket: u32, payload: Vec<u8>) -> Self {
+        Frame { kind, rank, step, bucket, payload }
+    }
+
+    /// Frames with no payload (Done, RingHello, …).
+    pub fn bare(kind: FrameKind, rank: u32, step: u64) -> Self {
+        Frame::new(kind, rank, step, 0, Vec::new())
+    }
+}
+
+/// Typed decode failure. Wraps into [`DistError`] (`Wire` kind for
+/// malformed bytes, `PeerClosed` for clean truncation at a frame
+/// boundary) via [`WireError::into_dist`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Stream ended cleanly exactly at a frame boundary.
+    Eof,
+    /// Stream ended inside a frame (torn write / killed peer).
+    Truncated { need: usize, have: usize },
+    BadMagic,
+    /// Length prefix exceeds [`MAX_BODY`] or is below the body header.
+    BadLength(u64),
+    BadChecksum { want: u32, got: u32 },
+    BadKind(u8),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Eof => write!(f, "stream closed at frame boundary"),
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::BadMagic => write!(f, "bad frame magic"),
+            WireError::BadLength(n) => write!(f, "frame body length {n} out of range"),
+            WireError::BadChecksum { want, got } => {
+                write!(f, "frame checksum mismatch: want {want:#010x}, got {got:#010x}")
+            }
+            WireError::BadKind(c) => write!(f, "unknown frame kind {c}"),
+        }
+    }
+}
+
+impl WireError {
+    pub fn into_dist(self) -> DistError {
+        match self {
+            WireError::Eof => DistError::peer_closed("peer closed the connection"),
+            WireError::Truncated { .. } => {
+                DistError::peer_closed(format!("connection died mid-frame: {self}"))
+            }
+            _ => DistError::wire(self.to_string()),
+        }
+    }
+}
+
+/// FNV-1a 32-bit — the same tiny keyed-nothing checksum the rest of
+/// the repo uses for content hashes; one corrupted byte anywhere flips
+/// the digest.
+pub fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Encode a frame to its on-wire bytes.
+pub fn encode(f: &Frame) -> Vec<u8> {
+    let body_len = BODY_HEADER + f.payload.len();
+    let mut out = Vec::with_capacity(8 + 4 + body_len + 4);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(f.kind.code());
+    out.extend_from_slice(&f.rank.to_le_bytes());
+    out.extend_from_slice(&f.step.to_le_bytes());
+    out.extend_from_slice(&f.bucket.to_le_bytes());
+    out.extend_from_slice(&f.payload);
+    let crc = fnv1a32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Total on-wire size of a frame with `payload_len` payload bytes.
+pub fn frame_size(payload_len: usize) -> usize {
+    8 + 4 + BODY_HEADER + payload_len + 4
+}
+
+fn rd_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn rd_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Decode one frame from the front of `buf`. Returns the frame and the
+/// number of bytes consumed. Every failure mode — short buffer, bad
+/// magic, absurd length, checksum mismatch, unknown kind — is a typed
+/// `Err`; nothing panics and nothing allocates beyond the (validated)
+/// payload length.
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), WireError> {
+    if buf.is_empty() {
+        return Err(WireError::Eof);
+    }
+    if buf.len() < 12 {
+        return Err(WireError::Truncated { need: 12, have: buf.len() });
+    }
+    if buf[..8] != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    let body_len = rd_u32(&buf[8..12]) as usize;
+    if body_len < BODY_HEADER || body_len > MAX_BODY {
+        return Err(WireError::BadLength(body_len as u64));
+    }
+    let total = 12 + body_len + 4;
+    if buf.len() < total {
+        return Err(WireError::Truncated { need: total, have: buf.len() });
+    }
+    let want = fnv1a32(&buf[..12 + body_len]);
+    let got = rd_u32(&buf[12 + body_len..total]);
+    if want != got {
+        return Err(WireError::BadChecksum { want, got });
+    }
+    let body = &buf[12..12 + body_len];
+    let kind = FrameKind::from_code(body[0]).ok_or(WireError::BadKind(body[0]))?;
+    let rank = rd_u32(&body[1..5]);
+    let step = rd_u64(&body[5..13]);
+    let bucket = rd_u32(&body[13..17]);
+    let payload = body[BODY_HEADER..].to_vec();
+    Ok((Frame { kind, rank, step, bucket, payload }, total))
+}
+
+/// Read exactly one frame from a byte stream (used by the TCP
+/// transport after `read_full` has pulled the header + body). The
+/// reader-side framing lives in `transport::read_frame`; this helper
+/// exists for buffered decoders (the fake transport, tests).
+pub fn decode_exact(buf: &[u8]) -> Result<Frame, WireError> {
+    let (f, used) = decode(buf)?;
+    if used != buf.len() {
+        // Trailing garbage after a valid frame is a framing bug.
+        return Err(WireError::BadLength(buf.len() as u64));
+    }
+    Ok(f)
+}
+
+// --------------------------------------------------- payload codecs
+
+/// f32 slice → LE bytes (bucket segment payloads).
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// LE bytes → f32 box. Length must be a multiple of 4.
+pub fn bytes_to_f32s(b: &[u8]) -> DistResult<Box<[f32]>> {
+    if b.len() % 4 != 0 {
+        return Err(DistError::wire(format!(
+            "f32 payload length {} not a multiple of 4",
+            b.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(b.len() / 4);
+    for c in b.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(out.into_boxed_slice())
+}
+
+/// Per-shard metadata list → bytes (16 per shard: loss_sum f64 LE,
+/// ntok f64 LE). Sent worker → rank 0 (ps) / around the ring
+/// (replicated) so loss/ntok fold in global shard order everywhere.
+pub fn metas_to_bytes(ms: &[ShardMeta]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ms.len() * 16);
+    for m in ms {
+        out.extend_from_slice(&m.loss_sum.to_le_bytes());
+        out.extend_from_slice(&m.ntok.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_metas(b: &[u8]) -> DistResult<Vec<ShardMeta>> {
+    if b.len() % 16 != 0 {
+        return Err(DistError::wire(format!(
+            "shard-meta payload length {} not a multiple of 16",
+            b.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(b.len() / 16);
+    for c in b.chunks_exact(16) {
+        let loss_sum = f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+        let ntok = f64::from_le_bytes([c[8], c[9], c[10], c[11], c[12], c[13], c[14], c[15]]);
+        out.push(ShardMeta { loss_sum, ntok });
+    }
+    Ok(out)
+}
+
+/// Rank-0 → worker step summary payload (ps mode): loss_sum, ntok,
+/// grad_norm as three f64 LE.
+pub fn step_meta_to_bytes(loss_sum: f64, ntok: f64, grad_norm: f64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24);
+    out.extend_from_slice(&loss_sum.to_le_bytes());
+    out.extend_from_slice(&ntok.to_le_bytes());
+    out.extend_from_slice(&grad_norm.to_le_bytes());
+    out
+}
+
+pub fn bytes_to_step_meta(b: &[u8]) -> DistResult<(f64, f64, f64)> {
+    if b.len() != 24 {
+        return Err(DistError::wire(format!(
+            "step-meta payload length {} != 24",
+            b.len()
+        )));
+    }
+    let f = |o: usize| {
+        f64::from_le_bytes([
+            b[o], b[o + 1], b[o + 2], b[o + 3], b[o + 4], b[o + 5], b[o + 6], b[o + 7],
+        ])
+    };
+    Ok((f(0), f(8), f(16)))
+}
+
+/// u16 port list payload (Roster frames).
+pub fn ports_to_bytes(ports: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ports.len() * 2);
+    for p in ports {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_ports(b: &[u8]) -> DistResult<Vec<u16>> {
+    if b.len() % 2 != 0 {
+        return Err(DistError::wire(format!(
+            "port-roster payload length {} not a multiple of 2",
+            b.len()
+        )));
+    }
+    Ok(b.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Frame {
+        Frame::new(
+            FrameKind::Grad,
+            3,
+            77,
+            5,
+            f32s_to_bytes(&[1.0, -2.5, 3.25e-3, f32::MIN_POSITIVE]),
+        )
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let f = sample();
+        let bytes = encode(&f);
+        assert_eq!(bytes.len(), frame_size(f.payload.len()));
+        let (g, used) = decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(g, f);
+        assert_eq!(bytes_to_f32s(&g.payload).unwrap().as_ref(), &[
+            1.0,
+            -2.5,
+            3.25e-3,
+            f32::MIN_POSITIVE
+        ]);
+    }
+
+    #[test]
+    fn empty_input_is_eof_not_truncated() {
+        assert_eq!(decode(&[]).unwrap_err(), WireError::Eof);
+    }
+
+    #[test]
+    fn every_proper_prefix_errors_cleanly() {
+        let bytes = encode(&sample());
+        for n in 0..bytes.len() {
+            let err = decode(&bytes[..n]).unwrap_err();
+            match err {
+                WireError::Eof | WireError::Truncated { .. } => {}
+                other => panic!("prefix {n}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn single_byte_corruption_always_detected() {
+        let bytes = encode(&sample());
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(decode(&bad).is_err(), "flip at byte {i} went undetected");
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_without_allocating() {
+        let mut bytes = encode(&Frame::bare(FrameKind::Done, 0, 1));
+        bytes[8..12].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(decode(&bytes).unwrap_err(), WireError::BadLength(_)));
+    }
+
+    #[test]
+    fn undersized_length_prefix_rejected() {
+        let mut bytes = encode(&Frame::bare(FrameKind::Done, 0, 1));
+        bytes[8..12].copy_from_slice(&3u32.to_le_bytes());
+        assert!(matches!(decode(&bytes).unwrap_err(), WireError::BadLength(3)));
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut f = sample();
+        f.payload.clear();
+        let mut bytes = encode(&f);
+        bytes[12] = 99; // kind byte
+        // Checksum now also mismatches; recompute so the kind check is hit.
+        let n = bytes.len();
+        let crc = fnv1a32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(decode(&bytes).unwrap_err(), WireError::BadKind(99));
+    }
+
+    #[test]
+    fn decode_exact_rejects_trailing_garbage() {
+        let mut bytes = encode(&sample());
+        bytes.push(0);
+        assert!(decode_exact(&bytes).is_err());
+    }
+
+    #[test]
+    fn meta_codecs_roundtrip() {
+        let ms = vec![
+            ShardMeta { loss_sum: 12.5, ntok: 40.0 },
+            ShardMeta { loss_sum: -0.125, ntok: 0.0 },
+        ];
+        assert_eq!(bytes_to_metas(&metas_to_bytes(&ms)).unwrap(), ms);
+        let (l, n, g) = bytes_to_step_meta(&step_meta_to_bytes(1.5, 2.0, 0.25)).unwrap();
+        assert_eq!((l, n, g), (1.5, 2.0, 0.25));
+        assert!(bytes_to_metas(&[0u8; 15]).is_err());
+        assert!(bytes_to_step_meta(&[0u8; 23]).is_err());
+    }
+
+    #[test]
+    fn port_codec_roundtrips_and_validates() {
+        let ports = vec![0u16, 1, 65535, 40000];
+        assert_eq!(bytes_to_ports(&ports_to_bytes(&ports)).unwrap(), ports);
+        assert!(bytes_to_ports(&[1u8]).is_err());
+    }
+
+    #[test]
+    fn f32_codec_validates_length() {
+        assert!(bytes_to_f32s(&[0u8; 7]).is_err());
+        assert_eq!(bytes_to_f32s(&[]).unwrap().len(), 0);
+    }
+}

@@ -13,6 +13,7 @@
 pub mod config;
 pub mod data;
 pub mod decode;
+pub mod dist;
 pub mod metrics;
 pub mod model_spec;
 pub mod parallel;

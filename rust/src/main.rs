@@ -13,6 +13,7 @@ use anyhow::{anyhow, Context, Result};
 use hybridnmt::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig};
 use hybridnmt::data::with_prefetch;
 use hybridnmt::decode::{translate_corpus, BeamConfig, DecodeOptions, Decoder, LengthNorm};
+use hybridnmt::dist::{CommOpts, DistComm, DistMode, TcpTransport};
 use hybridnmt::metrics::corpus_bleu;
 use hybridnmt::parallel::build_plan;
 use hybridnmt::report;
@@ -88,10 +89,21 @@ COMMANDS
              [--bucket-kib N (flat-slab bucket size, default 256)]
              [--map-step (PR-4 map-based step engine instead of the
              overlapped flat-slab engine)]
+             [--dist N (multi-process data parallelism: spawn N rank
+             processes over loopback TCP; params stay bitwise-identical
+             to the single-process run)]
+             [--dist-mode ps|replicated (rank-0 parameter server vs
+             hierarchical tree+ring all-reduce; default ps)]
+             [--dist-die R@S (fault drill: rank R hard-exits before step
+             S; surviving ranks must fail with a typed step-boundary
+             error, never hang)] [--dist-timeout-ms T (peer read/connect
+             timeout, default 10000)]
   train-bench  [--model tiny] [--steps N] [--replicas R] [--accum K]
              [--strategy S] [--sentences N] [--sequential] [--bucket-kib N]
              [--checkpoint-every N (default 2; async-checkpoint cost is
              part of the sweep: checkpoint_stall_ms ~ 0 is the claim)]
+             [--dist N (adds r{R}.dist{N}.{ps,replicated} rows: an
+             N-rank in-process world per collective mode)]
              (training-throughput sweep over replicas 1..R x accum {1, K},
              each config on the flat-slab engine AND the map reference;
              writes BENCH_train.json + results/train_bench.{txt,csv})
@@ -175,6 +187,9 @@ fn run() -> Result<()> {
             Ok(())
         }
         "train" => cmd_train(&args),
+        // Internal: one rank of `train --dist N` (the launcher spawns
+        // these; not part of the public CLI surface).
+        "dist-worker" => cmd_dist_worker(&args),
         "train-bench" => cmd_train_bench(&args),
         "translate" => cmd_translate(&args),
         "serve-bench" => cmd_serve_bench(&args),
@@ -230,6 +245,10 @@ fn run() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let dist = args.usize("dist", 1)?;
+    if dist >= 2 {
+        return cmd_train_dist(args, dist);
+    }
     let engine = load_engine(args)?;
     let exp = build_experiment(args, &engine)?;
     println!(
@@ -338,6 +357,210 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.pipeline.replicas(),
         trainer.pipeline.upload_bytes() as f64 / 1e6,
         trainer.pipeline.prime_count()
+    );
+    Ok(())
+}
+
+/// `train --dist N` launcher: spawn N `dist-worker` processes over
+/// loopback TCP and multiplex their output. Rank 0 prints
+/// `DIST-LISTEN <addr>` once its rendezvous socket is bound; the
+/// launcher relays that address to the workers via `--dist-addr`.
+/// Any rank exiting non-zero fails the whole run, named by rank.
+fn cmd_train_dist(args: &Args, world: usize) -> Result<()> {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+
+    // Validate the mode up front — better a flag error here than one
+    // replicated N times from the children.
+    let mode: DistMode = args.str_or("dist-mode", "ps").parse()?;
+    let exe = std::env::current_exe().context("resolve current executable")?;
+    let forward: Vec<(String, String)> = args
+        .flags
+        .iter()
+        .filter(|(k, _)| k.as_str() != "dist-addr" && k.as_str() != "dist-rank")
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect();
+    let spawn = |rank: usize, addr: Option<&str>| -> Result<std::process::Child> {
+        let mut c = Command::new(&exe);
+        c.arg("dist-worker");
+        for (k, v) in &forward {
+            c.arg(format!("--{k}")).arg(v);
+        }
+        c.arg("--dist-rank").arg(rank.to_string());
+        if let Some(a) = addr {
+            c.arg("--dist-addr").arg(a);
+        }
+        c.stdout(Stdio::piped()).stderr(Stdio::piped());
+        c.spawn().with_context(|| format!("spawn rank {rank}"))
+    };
+
+    println!("launching {world} ranks over loopback TCP ({} mode)", mode.key());
+    let mut rank0 = spawn(0, None)?;
+    let mut r0_out = std::io::BufReader::new(rank0.stdout.take().expect("stdout piped"));
+    let mut addr = None;
+    let mut line = String::new();
+    while addr.is_none() {
+        line.clear();
+        if r0_out.read_line(&mut line)? == 0 {
+            break;
+        }
+        match line.trim().strip_prefix("DIST-LISTEN ") {
+            Some(a) => addr = Some(a.to_string()),
+            None => print!("[rank 0] {line}"),
+        }
+    }
+    let addr = match addr {
+        Some(a) => a,
+        None => {
+            // Rank 0 died before binding: reap it and surface stderr.
+            let st = rank0.wait()?;
+            let mut err = String::new();
+            if let Some(mut e) = rank0.stderr.take() {
+                use std::io::Read;
+                let _ = e.read_to_string(&mut err);
+            }
+            return Err(anyhow!("rank 0 exited ({st}) before DIST-LISTEN:\n{err}"));
+        }
+    };
+
+    let mut procs: Vec<(usize, std::process::Child)> = vec![(0, rank0)];
+    for r in 1..world {
+        procs.push((r, spawn(r, Some(&addr))?));
+    }
+    let mut statuses: Vec<(usize, std::process::ExitStatus)> = Vec::with_capacity(world);
+    std::thread::scope(|scope| -> Result<()> {
+        // Drain every child's pipes concurrently (a full pipe buffer
+        // would otherwise deadlock a chatty rank against our wait).
+        scope.spawn(move || pump_lines(0, Box::new(r0_out)));
+        for (rank, child) in procs.iter_mut() {
+            let rank = *rank;
+            if let Some(out) = child.stdout.take() {
+                scope.spawn(move || pump_lines(rank, Box::new(out)));
+            }
+            if let Some(err) = child.stderr.take() {
+                scope.spawn(move || pump_lines(rank, Box::new(err)));
+            }
+        }
+        for (rank, child) in procs.iter_mut() {
+            let st = child.wait().with_context(|| format!("wait rank {rank}"))?;
+            statuses.push((*rank, st));
+        }
+        Ok(())
+    })?;
+    let failed: Vec<String> = statuses
+        .iter()
+        .filter(|(_, st)| !st.success())
+        .map(|(r, st)| format!("rank {r}: {st}"))
+        .collect();
+    if !failed.is_empty() {
+        return Err(anyhow!("distributed run failed — {}", failed.join(", ")));
+    }
+    println!(
+        "all {world} ranks finished ({} mode); every rank holds the same \
+         parameters the single-process run would have produced",
+        mode.key()
+    );
+    Ok(())
+}
+
+/// Copy a child pipe to our stdout line-by-line with a rank prefix.
+fn pump_lines(rank: usize, rd: Box<dyn std::io::Read + Send>) {
+    use std::io::BufRead;
+    for line in std::io::BufReader::new(rd).lines().map_while(|l| l.ok()) {
+        println!("[rank {rank}] {line}");
+    }
+}
+
+/// Parse `--dist-die RANK@STEP` (that rank hard-exits just before the
+/// 1-based step).
+fn parse_dist_die(v: &str) -> Result<(usize, u64)> {
+    let (r, s) = v
+        .split_once('@')
+        .ok_or_else(|| anyhow!("--dist-die wants RANK@STEP, got `{v}`"))?;
+    Ok((
+        r.parse().with_context(|| format!("--dist-die rank `{r}`"))?,
+        s.parse().with_context(|| format!("--dist-die step `{s}`"))?,
+    ))
+}
+
+/// One rank of a `train --dist N` job (spawned by [`cmd_train_dist`]).
+fn cmd_dist_worker(args: &Args) -> Result<()> {
+    use std::io::Write;
+
+    let world = args.usize("dist", 0)?;
+    if world < 2 {
+        return Err(anyhow!("dist-worker needs --dist >= 2"));
+    }
+    let rank = args.usize("dist-rank", 0)?;
+    if rank >= world {
+        return Err(anyhow!("--dist-rank {rank} outside world {world}"));
+    }
+    let mode: DistMode = args.str_or("dist-mode", "ps").parse()?;
+    let ring = mode == DistMode::Replicated;
+    let tmo = args.usize("dist-timeout-ms", 10_000)?.max(1) as u64;
+    let opts = CommOpts { read_timeout_ms: tmo, connect_timeout_ms: tmo, ..CommOpts::default() };
+
+    // Rank 0 publishes its rendezvous address *before* the (slow)
+    // engine/corpus build so the launcher can start the workers; every
+    // rank then builds in parallel and the rendezvous skew stays well
+    // inside the connect timeout.
+    let listener = if rank == 0 {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").context("bind rendezvous listener")?;
+        println!("DIST-LISTEN {}", l.local_addr()?);
+        std::io::stdout().flush().ok();
+        Some(l)
+    } else {
+        None
+    };
+
+    let engine = load_engine(args)?;
+    let exp = build_experiment(args, &engine)?;
+    let replicas = args.usize("replicas", 1)?.max(1);
+    let accum = args.usize("accum", 1)?.max(1);
+    let steps = exp.train.steps;
+    let mut spec = hybridnmt::dist::RankSpec::new(exp.clone(), mode, replicas, accum, steps);
+    spec.sequential = args.get("sequential").is_some();
+    spec.bucket_bytes = Some(args.usize("bucket-kib", 256)?.max(1) * 1024);
+    if let Some(die) = args.get("dist-die") {
+        let (r, s) = parse_dist_die(die)?;
+        if r == rank {
+            spec.die_at_step = Some(s);
+            spec.die_hard = true;
+        }
+    }
+    let local = spec.local_shards();
+
+    // Every rank derives the same global micro-batch stream and trains
+    // on its contiguous block of each step (see dist::driver).
+    let corpus = report::make_corpus(&exp.data, &exp.model);
+    let mut batcher = report::make_batcher(&exp, &corpus)?;
+    let stream: Vec<_> = (0..steps * world * local).map(|_| batcher.next_train()).collect();
+
+    let transport = match listener {
+        Some(l0) => TcpTransport::rank0(l0, world, ring, opts.clone())?,
+        None => {
+            let addr = args
+                .get("dist-addr")
+                .ok_or_else(|| anyhow!("--dist-addr required for rank > 0"))?;
+            let addr: std::net::SocketAddr =
+                addr.parse().with_context(|| format!("--dist-addr {addr}"))?;
+            TcpTransport::worker(rank, world, addr, ring, opts.clone())?
+        }
+    };
+    let comm = DistComm::new(Box::new(transport), mode, local, opts.backoff.clone())?;
+    println!(
+        "rank {rank}/{world} up ({} mode): {steps} steps, {replicas} replicas x {accum} accum, \
+         global batch {}",
+        mode.key(),
+        world * local * exp.model.batch
+    );
+    let run = hybridnmt::dist::train_rank(&engine, &spec, &comm, &stream)?;
+    let last = run.stats.last();
+    println!(
+        "rank {rank} done: {} steps, final loss/tok {:.6}, ppl {:.3}",
+        run.stats.len(),
+        last.map(|s| s.loss_per_tok).unwrap_or(f64::NAN),
+        last.map(|s| s.ppl).unwrap_or(f64::NAN)
     );
     Ok(())
 }
@@ -494,9 +717,97 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                     allocs_per_step: allocs as f64 / sn,
                     ckpt_stall_s: ckpt_stall / sn,
                     ckpt_bytes_per_s,
+                    dist_world: 0,
+                    dist_mode: String::new(),
                 });
             }
         }
+    }
+    // Distributed rows: an N-rank in-process world per collective mode
+    // (fake transport — the full wire encode/decode without sockets).
+    // Per-rank warmup/compilation lands inside the timed window, so
+    // these rows track collective cost trends, not absolute parity
+    // with the single-process rows; the correctness gate here is the
+    // two modes agreeing bitwise on the first step's loss.
+    let dist_world = args.usize("dist", 0)?;
+    if dist_world >= 2 {
+        let mut first_losses = Vec::new();
+        for mode in [DistMode::Ps, DistMode::Replicated] {
+            let mut batcher = report::make_batcher(&exp, &corpus)?;
+            let spec = {
+                let mut s = hybridnmt::dist::RankSpec::new(exp.clone(), mode, 1, 1, steps);
+                s.sequential = args.get("sequential").is_some();
+                s.bucket_bytes = Some(bucket_bytes);
+                s
+            };
+            let local = spec.local_shards();
+            let stream: Vec<_> =
+                (0..steps * dist_world * local).map(|_| batcher.next_train()).collect();
+            let specs = vec![spec; dist_world];
+            let scripts = vec![hybridnmt::dist::FaultScript::clean(); dist_world];
+            let t0 = std::time::Instant::now();
+            let runs = hybridnmt::dist::run_fake_world(
+                &engine,
+                &specs,
+                scripts,
+                CommOpts::default(),
+                &stream,
+            );
+            let wall = t0.elapsed().as_secs_f64();
+            let mut tokens = 0.0f64;
+            let mut rank0_stats = None;
+            for (r, run) in runs.into_iter().enumerate() {
+                let run =
+                    run.map_err(|e| anyhow!("dist bench rank {r} ({}): {e:#}", mode.key()))?;
+                tokens += run.stats.iter().map(|s| s.src_tokens).sum::<f64>();
+                if r == 0 {
+                    rank0_stats = Some(run.stats);
+                }
+            }
+            let stats = rank0_stats.expect("world >= 2 always has a rank 0");
+            let sn = steps as f64;
+            let reduce_s: f64 = stats.iter().map(|s| s.reduce_seconds).sum();
+            let overlap_s: f64 = stats.iter().map(|s| s.reduce_overlap_seconds).sum();
+            let apply_s: f64 = stats.iter().map(|s| s.apply_seconds).sum();
+            let first = stats.first().map(|s| s.loss_per_tok).unwrap_or(f64::NAN);
+            let last = stats.last().map(|s| s.loss_per_tok).unwrap_or(f64::NAN);
+            first_losses.push(first);
+            println!(
+                "dist {dist_world} [{}]: {:.1} ms/step, {:.1} src tok/s (global), loss/tok {:.4}",
+                mode.key(),
+                wall / sn * 1e3,
+                per_sec(tokens, wall),
+                last
+            );
+            rows.push(report::TrainBenchRow {
+                replicas: 1,
+                accum: 1,
+                flat: true,
+                steps,
+                global_batch: dist_world * exp.model.batch,
+                step_s: wall / sn,
+                reduce_s: reduce_s / sn,
+                overlap_pct: if reduce_s > 0.0 { 100.0 * overlap_s / reduce_s } else { 0.0 },
+                apply_s: apply_s / sn,
+                stall_s: 0.0,
+                src_tok_per_s: per_sec(tokens, wall),
+                loss_per_tok: last,
+                uploads_per_step: 0.0,
+                allocs_per_step: stats.iter().map(|s| s.allocs).sum::<u64>() as f64 / sn,
+                ckpt_stall_s: 0.0,
+                ckpt_bytes_per_s: 0.0,
+                dist_world,
+                dist_mode: mode.key().to_string(),
+            });
+        }
+        if first_losses.len() == 2 && first_losses[0].to_bits() != first_losses[1].to_bits() {
+            return Err(anyhow!(
+                "ps and replicated modes disagree on the first dist loss: {} vs {}",
+                first_losses[0],
+                first_losses[1]
+            ));
+        }
+        println!("dist modes agree bitwise on the first-step loss ({dist_world} ranks)");
     }
     print!("\n{}", report::train_table(&rows));
     println!("wrote BENCH_train.json");

@@ -386,7 +386,12 @@ fn collect_out(
 ///
 /// `f(worker, job)` must be safe to call concurrently from different
 /// threads for different jobs. The first error aborts the remaining
-/// jobs (already-running ones finish) and is returned.
+/// jobs (already-running ones finish) and is returned. A panicking job
+/// is converted into that same first-error abort (naming the worker,
+/// the job, and the panic message) rather than unwinding through the
+/// scope — the same first-error semantics as `serve::server`, and what
+/// lets the distributed driver treat *any* local failure as a clean
+/// step-boundary error.
 pub fn run_sharded<T, F>(workers: usize, jobs: usize, f: F) -> Result<Vec<T>>
 where
     T: Send,
@@ -407,7 +412,21 @@ where
                     if failed.load(Ordering::SeqCst) {
                         return;
                     }
-                    match f(w, j) {
+                    // A panicking job must become the run's first error,
+                    // not unwind through the scope and panic the caller:
+                    // the distributed driver turns step errors into
+                    // abort frames + a typed step-boundary error, and a
+                    // panic would skip that (and kill the whole world's
+                    // process in thread harnesses).
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(w, j)));
+                    let flat = match run {
+                        Ok(r) => r,
+                        Err(p) => Err(anyhow!(
+                            "worker {w} panicked on job {j}: {}",
+                            crate::util::panic_message(&*p)
+                        )),
+                    };
+                    match flat {
                         Ok(v) => *results[j].lock().unwrap() = Some(v),
                         Err(e) => {
                             let mut slot = error.lock().unwrap();
@@ -578,11 +597,7 @@ impl<'p> Sched<'p> {
                     return;
                 }
                 Err(panic) => {
-                    let msg = panic
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| panic.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "non-string panic payload".into());
+                    let msg = crate::util::panic_message(&*panic);
                     self.fail(anyhow!(
                         "step {id} {:?} panicked: {msg}",
                         self.plan.steps[id].op
@@ -769,4 +784,47 @@ fn execute_par(
             .clone()
             .ok_or_else(|| anyhow!("output slot {s} empty"))
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::run_sharded;
+    use anyhow::{anyhow, Result};
+
+    #[test]
+    fn run_sharded_collects_in_job_order() {
+        let out = run_sharded(3, 7, |_w, j| Ok(j * 10)).unwrap();
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60]);
+    }
+
+    #[test]
+    fn run_sharded_returns_first_error() {
+        let err = run_sharded(2, 4, |_w, j| -> Result<usize> {
+            if j == 2 {
+                Err(anyhow!("job 2 failed"))
+            } else {
+                Ok(j)
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("job 2 failed"), "{err}");
+    }
+
+    /// Regression (distributed step-boundary semantics): a panicking
+    /// job must come back as the run's first error — worker, job and
+    /// panic message named — not unwind through the scope and panic
+    /// the caller.
+    #[test]
+    fn run_sharded_converts_worker_panic_to_error() {
+        let err = run_sharded(2, 6, |_w, j| -> Result<usize> {
+            if j == 3 {
+                panic!("shape mismatch in op");
+            }
+            Ok(j)
+        })
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("panicked on job 3"), "{msg}");
+        assert!(msg.contains("shape mismatch in op"), "{msg}");
+    }
 }

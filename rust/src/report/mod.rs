@@ -869,6 +869,13 @@ pub struct TrainBenchRow {
     /// Background-writer checkpoint bandwidth over the timed window
     /// (serialized bytes / writer seconds).
     pub ckpt_bytes_per_s: f64,
+    /// Distributed world size (0 = single-process row). Dist rows are
+    /// keyed `r{R}.dist{N}.{mode}` in `BENCH_train.json` and excluded
+    /// from the single-process scaling summaries.
+    pub dist_world: usize,
+    /// Distributed mode key (`ps` | `replicated`); empty when
+    /// `dist_world == 0`.
+    pub dist_mode: String,
 }
 
 /// Render the training-throughput sweep — replicas × accumulation vs
@@ -887,7 +894,7 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
     .unwrap();
     writeln!(
         out,
-        "{:<9} {:>6} {:>5} {:>7} {:>7}  {:>9} {:>9} {:>5} {:>9} {:>9} {:>9}  {:>10} {:>9} {:>9} {:>9} {:>10}",
+        "{:<9} {:>6} {:>7} {:>7} {:>7}  {:>9} {:>9} {:>5} {:>9} {:>9} {:>9}  {:>10} {:>9} {:>9} {:>9} {:>10}",
         "replicas", "accum", "mode", "steps", "gbatch", "step ms", "reduce ms", "ovl%",
         "apply ms", "stall ms", "ck-st ms", "src tok/s", "loss/tok", "uploads", "allocs",
         "ckpt MB/s"
@@ -900,10 +907,19 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
     );
     let mut bench: BTreeMap<String, Json> = BTreeMap::new();
     for r in rows {
-        let mode = if r.flat { "flat" } else { "map" };
+        // Distributed rows run the flat engine; their mode column names
+        // the collective instead (`ps:N` / `repl:N` for N processes).
+        let mode = if r.dist_world > 0 {
+            let short = if r.dist_mode == "replicated" { "repl" } else { r.dist_mode.as_str() };
+            format!("{short}:{}", r.dist_world)
+        } else if r.flat {
+            "flat".to_string()
+        } else {
+            "map".to_string()
+        };
         writeln!(
             out,
-            "{:<9} {:>6} {:>5} {:>7} {:>7}  {:>9.1} {:>9.1} {:>5.1} {:>9.1} {:>9.1} {:>9.2}  \
+            "{:<9} {:>6} {:>7} {:>7} {:>7}  {:>9.1} {:>9.1} {:>5.1} {:>9.1} {:>9.1} {:>9.2}  \
              {:>10.1} {:>9.3} {:>9.1} {:>9.0} {:>10.1}",
             r.replicas,
             r.accum,
@@ -945,8 +961,11 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
         )
         .unwrap();
         // Flat rows keep the historical prefix; map-reference rows get
-        // their own `.map` row prefix so both are schema-checked.
-        let key = if r.flat {
+        // their own `.map` row prefix; distributed rows are keyed by
+        // world size + collective mode. All three are schema-checked.
+        let key = if r.dist_world > 0 {
+            format!("r{}.dist{}.{}", r.replicas, r.dist_world, r.dist_mode)
+        } else if r.flat {
             format!("r{}.accum{}", r.replicas, r.accum)
         } else {
             format!("r{}.accum{}.map", r.replicas, r.accum)
@@ -968,9 +987,12 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
     }
     if let (Some(base), Some(best)) = (
         rows.iter()
-            .find(|r| r.replicas == 1 && r.accum == 1 && r.flat)
+            .find(|r| r.replicas == 1 && r.accum == 1 && r.flat && r.dist_world == 0)
             .map(|r| r.src_tok_per_s),
-        rows.iter().map(|r| r.src_tok_per_s).max_by(|a, b| a.total_cmp(b)),
+        rows.iter()
+            .filter(|r| r.dist_world == 0)
+            .map(|r| r.src_tok_per_s)
+            .max_by(|a, b| a.total_cmp(b)),
     ) {
         writeln!(
             out,
@@ -979,9 +1001,11 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
         )
         .unwrap();
     }
-    for (r_flat, r_map) in rows.iter().filter(|r| r.flat).filter_map(|rf| {
+    for (r_flat, r_map) in rows.iter().filter(|r| r.flat && r.dist_world == 0).filter_map(|rf| {
         rows.iter()
-            .find(|rm| !rm.flat && rm.replicas == rf.replicas && rm.accum == rf.accum)
+            .find(|rm| {
+                !rm.flat && rm.dist_world == 0 && rm.replicas == rf.replicas && rm.accum == rf.accum
+            })
             .map(|rm| (rf, rm))
     }) {
         if r_flat.replicas == rows.iter().map(|r| r.replicas).max().unwrap_or(1) {

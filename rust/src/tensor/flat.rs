@@ -29,7 +29,7 @@
 //! [`FlatParams::with_slab_mut`], which drops the cached views,
 //! mutates the (then-unique) slab in place, and rebuilds them.
 
-use super::{note_alloc, scale_slice, Tensor};
+use super::{add_assign_slice, note_alloc, scale_slice, Tensor};
 use std::collections::{BTreeMap, HashMap};
 use std::ops::Range;
 use std::sync::Arc;
@@ -172,6 +172,29 @@ pub fn split_buckets_mut<'a>(mut slab: &'a mut [f32], buckets: &[Bucket]) -> Vec
     }
     assert!(slab.is_empty(), "buckets must cover the whole slab");
     out
+}
+
+/// The fixed-shape binary tree fold over equal-length segments: pass 1
+/// combines (0,1), (2,3), …; later passes fold the survivors pairwise
+/// (an odd tail passes through unchanged); each combine accumulates
+/// into the left child's buffer. This is *the* reduction of the repo —
+/// the intra-process shard tree (`train::step`), the parameter-server
+/// fold over per-rank partials, and the replicated mode's post-gather
+/// fold (`dist::collective`) all call this one function, which is what
+/// makes them bitwise-interchangeable.
+pub fn tree_fold_segments(mut parts: Vec<Box<[f32]>>) -> Option<Box<[f32]>> {
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut left) = it.next() {
+            if let Some(right) = it.next() {
+                add_assign_slice(&mut left, &right);
+            }
+            next.push(left);
+        }
+        parts = next;
+    }
+    parts.pop()
 }
 
 /// The parameter arena: the slab, its layout, its bucket partition, and
@@ -351,6 +374,13 @@ impl FlatGrads {
         for seg in &mut self.segs {
             scale_slice(seg, s);
         }
+    }
+
+    /// Take the per-bucket segments out (bucket order) — the dist
+    /// layer sends these as wire payloads and refolds them with
+    /// [`tree_fold_segments`].
+    pub fn into_segments(self) -> Vec<Box<[f32]>> {
+        self.segs
     }
 
     /// Per-parameter slices in global name order (the clip-norm fold

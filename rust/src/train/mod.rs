@@ -415,6 +415,95 @@ impl<'a> Trainer<'a> {
         })
     }
 
+    /// The distributed flat step: the same local fan-out + overlapped
+    /// bucketed reduce as [`Trainer::train_step_micro`] on the flat
+    /// engine, but the finalization — global tree fold, loss/ntok
+    /// fold, 1/ntok normalization, optimizer apply — runs through the
+    /// cross-process communicator. `micro` is this rank's contiguous
+    /// block of the global batch (`replicas × accum` shards); the
+    /// resulting parameters are bitwise-identical to a single process
+    /// training on the full `world × replicas × accum` shard stream
+    /// (`rust/tests/dist_equivalence.rs`).
+    ///
+    /// Any communicator failure (killed peer, torn frame, timeout)
+    /// surfaces here as a typed step-boundary error — the caller
+    /// should `comm.abort(...)` and stop.
+    pub fn train_step_micro_dist(
+        &mut self,
+        micro: &[Batch],
+        comm: &crate::dist::DistComm,
+    ) -> Result<StepStats> {
+        let allocs0 = crate::tensor::alloc_count();
+        let t0 = std::time::Instant::now();
+        let out = {
+            let ParamStore::Flat(flat) = &self.state.params else {
+                return Err(anyhow!("distributed training requires the flat step engine"));
+            };
+            step::run_micro_steps_flat(
+                &self.plan,
+                self.engine,
+                flat,
+                micro,
+                &self.pipeline,
+                self.exec_mode(),
+            )?
+        };
+        let host_seconds = t0.elapsed().as_secs_f64();
+        let mut replica_host_seconds = vec![0.0f64; self.pipeline.replicas()];
+        for (j, m) in out.micros.iter().enumerate() {
+            replica_host_seconds[j % self.pipeline.replicas()] += m.host_seconds;
+        }
+        // Per-shard records in local shard order; the communicator
+        // concatenates them in rank order so the global f64 loss fold
+        // runs over global shard order, same as single-process.
+        let metas: Vec<crate::dist::ShardMeta> = out
+            .micros
+            .iter()
+            .map(|m| crate::dist::ShardMeta { loss_sum: m.loss_sum, ntok: m.ntok })
+            .collect();
+
+        let t1 = std::time::Instant::now();
+        let state = &mut self.state;
+        let ParamStore::Flat(flat) = &mut state.params else {
+            unreachable!("checked above");
+        };
+        let global = comm.finish_step(
+            state.steps_done as u64 + 1,
+            flat,
+            state.opt.as_mut(),
+            out.grads,
+            &metas,
+            self.pipeline.replicas(),
+        )?;
+        let finish_seconds = t1.elapsed().as_secs_f64();
+        self.pipeline.invalidate();
+
+        self.state.steps_done += 1;
+        self.state.micro_consumed += micro.len();
+        self.state.sim_clock += self.pipeline.accum() as f64 * self.step_sim.makespan;
+        Ok(StepStats {
+            step: self.state.steps_done,
+            loss_per_tok: global.loss_sum / global.ntok,
+            ppl: perplexity(global.loss_sum, global.ntok),
+            grad_norm: global.grad_norm,
+            sim_seconds: self.pipeline.accum() as f64 * self.step_sim.makespan,
+            host_seconds,
+            src_tokens: micro.iter().map(|b| b.tokens()).sum(),
+            micro_batches: micro.len(),
+            // Local bucket tree + everything distributed that is not
+            // the optimizer apply (gather, wire codecs, global fold).
+            reduce_seconds: out.reduce_seconds
+                + (finish_seconds - global.apply_seconds).max(0.0),
+            reduce_overlap_seconds: out.reduce_overlap_seconds,
+            apply_seconds: global.apply_seconds,
+            prefetch_stall_seconds: 0.0,
+            checkpoint_stall_seconds: 0.0,
+            checkpoint_bytes_per_s: 0.0,
+            allocs: crate::tensor::alloc_count() - allocs0,
+            replica_host_seconds,
+        })
+    }
+
     /// The map reference engine (PR 4): replica fan-out → fixed-order
     /// tree reduce over gradient maps → per-param sharded optimizer
     /// apply → bank invalidation.

@@ -39,7 +39,7 @@ use crate::parallel::{
 };
 use crate::runtime::{Engine, ParamBank};
 use crate::tensor::flat::{bucket_of, Bucket, FlatGrads, FlatParams, SlabIndex};
-use crate::tensor::{add_assign_slice, note_alloc, Tensor};
+use crate::tensor::{note_alloc, Tensor};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -190,20 +190,12 @@ pub fn tree_reduce_grads(
 
 /// The same fixed-shape binary tree over flat segments (one bucket, all
 /// shards, in global shard order). Tree nodes accumulate into the left
-/// child's buffer — no allocation per combine.
-fn tree_reduce_segments(mut parts: Vec<Box<[f32]>>) -> Option<Box<[f32]>> {
-    while parts.len() > 1 {
-        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
-        let mut it = parts.into_iter();
-        while let Some(mut left) = it.next() {
-            if let Some(right) = it.next() {
-                add_assign_slice(&mut left, &right);
-            }
-            next.push(left);
-        }
-        parts = next;
-    }
-    parts.pop()
+/// child's buffer — no allocation per combine. Delegates to the shared
+/// [`tree_fold_segments`](crate::tensor::flat::tree_fold_segments) the
+/// dist layer also uses, so intra- and inter-process reductions are the
+/// same code.
+fn tree_reduce_segments(parts: Vec<Box<[f32]>>) -> Option<Box<[f32]>> {
+    crate::tensor::flat::tree_fold_segments(parts)
 }
 
 // ------------------------------------------------------------------------

@@ -14,14 +14,38 @@ pub fn per_sec(count: f64, secs: f64) -> f64 {
     count / secs.max(1e-9)
 }
 
+/// Extract a human-readable message from a `catch_unwind` payload.
+/// Shared by every worker loop that converts panics into first-error
+/// aborts (`parallel::run_sharded`, `data::prefetch`, the plan
+/// scheduler), so panic reporting cannot drift between them.
+pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use super::per_sec;
+    use super::{panic_message, per_sec};
 
     #[test]
     fn per_sec_guards_zero_wall() {
         assert!(per_sec(10.0, 0.0).is_finite());
         assert_eq!(per_sec(10.0, 2.0), 5.0);
         assert_eq!(per_sec(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn panic_message_handles_all_payload_shapes() {
+        let e = std::panic::catch_unwind(|| panic!("plain str")).unwrap_err();
+        assert_eq!(panic_message(&*e), "plain str");
+        let e = std::panic::catch_unwind(|| panic!("formatted {}", 7)).unwrap_err();
+        assert_eq!(panic_message(&*e), "formatted 7");
+        let e = std::panic::catch_unwind(|| std::panic::panic_any(42u32)).unwrap_err();
+        assert_eq!(panic_message(&*e), "non-string panic payload");
     }
 }

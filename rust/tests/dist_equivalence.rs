@@ -1,0 +1,349 @@
+//! Distributed training equivalence and fault-injection suite
+//! (requires `make artifacts`).
+//!
+//! The headline claim of the dist subsystem: a world of P processes ×
+//! L local shards per step produces **bitwise-identical** parameters
+//! to the single-process flat engine consuming the same P·L shards —
+//! for both collective modes (rank-0 parameter server and the
+//! hierarchical tree+ring all-reduce), over both the in-memory fake
+//! transport and real loopback TCP. The reduction-tree factorization
+//! that makes this hold is argued in `dist::mod` and
+//! docs/ARCHITECTURE.md; this suite is the gate.
+//!
+//! The second claim: every injected fault — a killed rank, a torn
+//! frame, a transient drop, a permanent outage — surfaces on every
+//! surviving rank as a *typed* error at a step boundary, bounded by
+//! the read timeout. No hang, no panic, no silent divergence.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use hybridnmt::config::{
+    DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig,
+};
+use hybridnmt::data::vocab::{BOS, EOS, PAD};
+use hybridnmt::dist::{
+    run_fake_world, run_tcp_world, CommOpts, DistError, DistMode, FaultScript, RankSpec,
+};
+use hybridnmt::parallel::Batch;
+use hybridnmt::rng::Rng;
+use hybridnmt::runtime::Engine;
+use hybridnmt::tensor::{ITensor, Tensor};
+use hybridnmt::train::Trainer;
+
+/// Small bucket size so even the tiny model crosses several Grad/Param
+/// frames per step (exercises the multi-bucket wire path). Bucket
+/// boundaries are elementwise-neutral, so this cannot change numerics.
+const BUCKET: usize = 32 * 1024;
+
+fn engine() -> Engine {
+    Engine::load("artifacts", "tiny").expect("run `make artifacts` first")
+}
+
+/// A deterministic random batch padded to the artifact shapes (same
+/// generator as tests/train_equivalence.rs).
+fn random_batch(d: &ModelDims, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (b, m, n) = (d.batch, d.max_src, d.max_tgt);
+    let mut src = vec![PAD; b * m];
+    let mut srclen = vec![0i32; b];
+    let mut tgt_in = vec![PAD; b * n];
+    let mut tgt_out = vec![PAD; b * n];
+    let mut tmask = vec![0.0f32; b * n];
+    for bi in 0..b {
+        let sl = rng.range(2, m + 1);
+        srclen[bi] = sl as i32;
+        for t in 0..sl {
+            src[bi * m + t] = rng.range(4, d.vocab) as i32;
+        }
+        let tl = rng.range(1, n);
+        tgt_in[bi * n] = BOS;
+        for t in 0..tl {
+            let tok = rng.range(4, d.vocab) as i32;
+            tgt_in[bi * n + t + 1] = tok;
+            tgt_out[bi * n + t] = tok;
+        }
+        tgt_out[bi * n + tl] = EOS;
+        for t in 0..=tl {
+            tmask[bi * n + t] = 1.0;
+        }
+    }
+    Batch {
+        src: ITensor::new(vec![b, m], src),
+        srclen: ITensor::new(vec![b], srclen),
+        tgt_in: ITensor::new(vec![b, n], tgt_in),
+        tgt_out: ITensor::new(vec![b, n], tgt_out),
+        tmask: Tensor::new(vec![b, n], tmask),
+    }
+}
+
+fn test_exp(e: &Engine) -> Experiment {
+    Experiment {
+        model: e.dims().clone(),
+        strategy: Strategy::Hybrid,
+        hw: HwConfig::default(),
+        train: TrainConfig {
+            seed: 3,
+            steps: 4,
+            eval_interval: 100,
+            decay_interval: 2,
+            ..Default::default()
+        },
+        data: DataConfig::wmt14_sim(600),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn pool(e: &Engine, n: usize) -> Vec<Batch> {
+    (0..n).map(|i| random_batch(e.dims(), 9000 + i as u64)).collect()
+}
+
+/// Single-process flat-engine reference: `shards` micro-batches per
+/// optimizer step, consumed in pool order.
+fn single_process(e: &Engine, pool: &[Batch], steps: usize, shards: usize) -> BTreeMap<String, Tensor> {
+    let exp = test_exp(e);
+    let mut tr = Trainer::new(e, &exp).unwrap();
+    tr.set_bucket_bytes(BUCKET);
+    tr.set_pipeline(shards, 1);
+    for s in 0..steps {
+        tr.train_step_micro(&pool[s * shards..(s + 1) * shards])
+            .unwrap_or_else(|err| panic!("reference {shards}-shard step {s}: {err:#}"));
+    }
+    tr.params().clone()
+}
+
+fn dist_spec(e: &Engine, mode: DistMode, replicas: usize, steps: usize) -> RankSpec {
+    let mut s = RankSpec::new(test_exp(e), mode, replicas, 1, steps);
+    s.bucket_bytes = Some(BUCKET);
+    s
+}
+
+fn assert_params_bitwise(label: &str, a: &BTreeMap<String, Tensor>, b: &BTreeMap<String, Tensor>) {
+    assert_eq!(a.len(), b.len(), "{label}: param count");
+    for (name, x) in a {
+        let y = b.get(name).unwrap_or_else(|| panic!("{label}: missing `{name}`"));
+        assert_eq!(x.shape(), y.shape(), "{label}: `{name}` shape");
+        for (i, (u, v)) in x.data().iter().zip(y.data()).enumerate() {
+            assert!(
+                u.to_bits() == v.to_bits(),
+                "{label}: `{name}`[{i}] {u} != {v} (bitwise)"
+            );
+        }
+    }
+}
+
+fn expect_typed(label: &str, res: &anyhow::Result<hybridnmt::dist::RankRun>) -> String {
+    let err = match res {
+        Ok(_) => panic!("{label}: expected a typed error, rank succeeded"),
+        Err(e) => e,
+    };
+    err.downcast_ref::<DistError>()
+        .unwrap_or_else(|| panic!("{label}: error is not a DistError: {err:#}"));
+    format!("{err:#}")
+}
+
+// ----------------------------------------------------- equivalence
+
+/// procs {1,2,4} × modes {ps,replicated} × replicas-per-proc {1,2} on
+/// the in-memory fake transport: every rank's final params bitwise
+/// equal to the single-process run over the same global shard stream.
+#[test]
+fn fake_worlds_match_single_process_bitwise() {
+    let e = engine();
+    let steps = 2;
+    for procs in [1usize, 2, 4] {
+        for rpp in [1usize, 2] {
+            let shards = procs * rpp;
+            let p = pool(&e, steps * shards);
+            let reference = single_process(&e, &p, steps, shards);
+            for mode in [DistMode::Ps, DistMode::Replicated] {
+                let specs: Vec<RankSpec> =
+                    (0..procs).map(|_| dist_spec(&e, mode, rpp, steps)).collect();
+                let runs =
+                    run_fake_world(&e, &specs, vec![FaultScript::clean(); procs], CommOpts::fast(), &p);
+                for (r, run) in runs.into_iter().enumerate() {
+                    let label = format!("fake {procs}p x {rpp}rep {mode:?} rank {r}");
+                    let run = run.unwrap_or_else(|err| panic!("{label}: {err:#}"));
+                    assert_params_bitwise(&label, &reference, &run.params);
+                }
+            }
+        }
+    }
+}
+
+/// Same bitwise claim over real loopback TCP (full rendezvous + wire
+/// protocol): procs {1,2,4} at 1 replica/proc in both modes, plus the
+/// 2-proc × 2-replica corner.
+#[test]
+fn tcp_worlds_match_single_process_bitwise() {
+    let e = engine();
+    let steps = 2;
+    for (procs, rpp) in [(1usize, 1usize), (2, 1), (4, 1), (2, 2)] {
+        let shards = procs * rpp;
+        let p = pool(&e, steps * shards);
+        let reference = single_process(&e, &p, steps, shards);
+        for mode in [DistMode::Ps, DistMode::Replicated] {
+            let specs: Vec<RankSpec> =
+                (0..procs).map(|_| dist_spec(&e, mode, rpp, steps)).collect();
+            let runs = run_tcp_world(&e, &specs, CommOpts::fast(), &p);
+            for (r, run) in runs.into_iter().enumerate() {
+                let label = format!("tcp {procs}p x {rpp}rep {mode:?} rank {r}");
+                let run = run.unwrap_or_else(|err| panic!("{label}: {err:#}"));
+                assert_params_bitwise(&label, &reference, &run.params);
+            }
+        }
+    }
+}
+
+/// A non-power-of-two local shard count breaks the reduction-tree
+/// factorization and must be rejected up front, not silently diverge.
+#[test]
+fn non_pow2_local_shards_rejected() {
+    let e = engine();
+    let steps = 1;
+    let procs = 2;
+    let rpp = 3; // 3 local shards: not a power of two
+    let p = pool(&e, steps * procs * rpp);
+    let specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Ps, rpp, steps)).collect();
+    let runs = run_fake_world(&e, &specs, vec![FaultScript::clean(); procs], CommOpts::fast(), &p);
+    for (r, run) in runs.iter().enumerate() {
+        let msg = expect_typed(&format!("non-po2 rank {r}"), run);
+        assert!(msg.contains("power-of-two"), "rank {r}: {msg}");
+    }
+}
+
+// -------------------------------------------------- fault injection
+
+/// A rank that dies mid-run (soft kill just before its step) surfaces
+/// as a typed error on EVERY rank — the killed one names the kill, the
+/// survivors get abort/timeout errors — within the fast timeouts, in
+/// both collective modes.
+#[test]
+fn killed_rank_yields_typed_errors_everywhere() {
+    let e = engine();
+    let procs = 3;
+    let steps = 3;
+    for mode in [DistMode::Ps, DistMode::Replicated] {
+        let p = pool(&e, steps * procs);
+        let mut specs: Vec<RankSpec> =
+            (0..procs).map(|_| dist_spec(&e, mode, 1, steps)).collect();
+        specs[1].die_at_step = Some(2);
+        let t0 = Instant::now();
+        let runs =
+            run_fake_world(&e, &specs, vec![FaultScript::clean(); procs], CommOpts::fast(), &p);
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "{mode:?}: world must fail fast, not hang"
+        );
+        for (r, run) in runs.iter().enumerate() {
+            let msg = expect_typed(&format!("{mode:?} kill rank {r}"), run);
+            if r == 1 {
+                assert!(msg.contains("dist-die"), "killed rank should name the kill: {msg}");
+            }
+        }
+    }
+}
+
+/// Same kill drill over real loopback TCP: the survivor's error comes
+/// from the abort frame / read timeout, never a hang.
+#[test]
+fn tcp_killed_rank_yields_typed_error_on_survivor() {
+    let e = engine();
+    let procs = 2;
+    let steps = 2;
+    let p = pool(&e, steps * procs);
+    let mut specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Ps, 1, steps)).collect();
+    specs[1].die_at_step = Some(1);
+    let t0 = Instant::now();
+    let runs = run_tcp_world(&e, &specs, CommOpts::fast(), &p);
+    assert!(t0.elapsed() < Duration::from_secs(60), "tcp kill must fail fast");
+    for (r, run) in runs.iter().enumerate() {
+        expect_typed(&format!("tcp kill rank {r}"), run);
+    }
+}
+
+/// A scripted transient drop is retried by the sender's capped backoff
+/// and the step completes **bitwise-correct** — faults the retry layer
+/// absorbs are invisible to the numerics.
+#[test]
+fn transient_drop_retries_to_bitwise_correct_step() {
+    let e = engine();
+    let procs = 2;
+    let steps = 2;
+    let p = pool(&e, steps * procs);
+    let reference = single_process(&e, &p, steps, procs);
+    let specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Ps, 1, steps)).collect();
+    let mut scripts = vec![FaultScript::clean(); procs];
+    // Rank 1's first and third send attempts are dropped in flight.
+    scripts[1].fail_sends = vec![1, 3];
+    let runs = run_fake_world(&e, &specs, scripts, CommOpts::fast(), &p);
+    for (r, run) in runs.into_iter().enumerate() {
+        let label = format!("transient-drop rank {r}");
+        let run = run.unwrap_or_else(|err| panic!("{label}: {err:#}"));
+        assert_params_bitwise(&label, &reference, &run.params);
+    }
+}
+
+/// A torn frame (peer died mid-write) decodes to a typed error on the
+/// receiver; the sender is told via the abort path. Nobody hangs.
+#[test]
+fn torn_frame_is_typed_error_not_hang() {
+    let e = engine();
+    let procs = 2;
+    let steps = 2;
+    let p = pool(&e, steps * procs);
+    let specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Ps, 1, steps)).collect();
+    let mut scripts = vec![FaultScript::clean(); procs];
+    scripts[1].torn_sends = vec![1];
+    let t0 = Instant::now();
+    let runs = run_fake_world(&e, &specs, scripts, CommOpts::fast(), &p);
+    assert!(t0.elapsed() < Duration::from_secs(60), "torn frame must fail fast");
+    for (r, run) in runs.iter().enumerate() {
+        expect_typed(&format!("torn-frame rank {r}"), run);
+    }
+}
+
+/// A permanent outage on one endpoint: its own sends fail `Permanent`,
+/// its peers run into the read timeout — typed errors on every rank.
+#[test]
+fn permanent_outage_is_typed_on_every_rank() {
+    let e = engine();
+    let procs = 2;
+    let steps = 2;
+    let p = pool(&e, steps * procs);
+    let specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Ps, 1, steps)).collect();
+    let mut scripts = vec![FaultScript::clean(); procs];
+    scripts[1].permanent_from = Some(1);
+    let t0 = Instant::now();
+    let runs = run_fake_world(&e, &specs, scripts, CommOpts::fast(), &p);
+    assert!(t0.elapsed() < Duration::from_secs(60), "outage must fail fast");
+    for (r, run) in runs.iter().enumerate() {
+        expect_typed(&format!("outage rank {r}"), run);
+    }
+}
+
+/// `kill_at_send`: the endpoint drops dead mid-step (no abort
+/// courtesy). The peer detects the death via the liveness flag /
+/// closed channel and errors within the timeout.
+#[test]
+fn kill_at_send_mid_step_is_typed_on_survivors() {
+    let e = engine();
+    let procs = 2;
+    let steps = 2;
+    let p = pool(&e, steps * procs);
+    let specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Ps, 1, steps)).collect();
+    let mut scripts = vec![FaultScript::clean(); procs];
+    scripts[1].kill_at_send = Some(2);
+    let t0 = Instant::now();
+    let runs = run_fake_world(&e, &specs, scripts, CommOpts::fast(), &p);
+    assert!(t0.elapsed() < Duration::from_secs(60), "peer death must fail fast");
+    for (r, run) in runs.iter().enumerate() {
+        expect_typed(&format!("kill-at-send rank {r}"), run);
+    }
+}

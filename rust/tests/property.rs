@@ -8,6 +8,7 @@ use hybridnmt::config::{HwConfig, ModelDims, Strategy};
 use hybridnmt::data::bpe::Bpe;
 use hybridnmt::data::synthetic::{Corpus, GenConfig};
 use hybridnmt::data::Batcher;
+use hybridnmt::dist::wire::{self, Frame, FrameKind, WireError};
 use hybridnmt::model_spec::param_specs;
 use hybridnmt::parallel::{build_plan, Op};
 use hybridnmt::rng::Rng;
@@ -476,4 +477,141 @@ fn prop_truncated_checkpoint_file_load_boundary_is_exact() {
         }
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------- dist wire protocol
+
+fn random_wire_frame(rng: &mut Rng) -> Frame {
+    let kinds = [
+        FrameKind::Hello,
+        FrameKind::Roster,
+        FrameKind::RingHello,
+        FrameKind::Grad,
+        FrameKind::Param,
+        FrameKind::Meta,
+        FrameKind::Done,
+        FrameKind::Abort,
+    ];
+    let kind = kinds[rng.range(0, kinds.len())];
+    let payload: Vec<u8> = (0..rng.range(0, 600)).map(|_| rng.range(0, 256) as u8).collect();
+    Frame::new(
+        kind,
+        rng.range(0, 64) as u32,
+        rng.range(0, 1 << 20) as u64,
+        rng.range(0, 512) as u32,
+        payload,
+    )
+}
+
+/// Encode/decode round-trip over random frames, including random
+/// bucket segments through the f32 payload codec.
+#[test]
+fn prop_wire_roundtrip_random_frames() {
+    let mut rng = Rng::new(0xD157_0001);
+    for _ in 0..300 {
+        let f = random_wire_frame(&mut rng);
+        let bytes = wire::encode(&f);
+        assert_eq!(bytes.len(), wire::frame_size(f.payload.len()));
+        let back = wire::decode_exact(&bytes)
+            .unwrap_or_else(|e| panic!("roundtrip of {:?} failed: {e}", f.kind));
+        assert_eq!(back, f);
+    }
+    // Bucket segments: random f32 slices survive the payload codec
+    // bit-for-bit inside a Grad frame.
+    for i in 0..50 {
+        let seg: Vec<f32> = (0..rng.range(1, 2000))
+            .map(|_| rng.uniform(1.0) * 10f32.powi(rng.range(0, 8) as i32 - 4))
+            .collect();
+        let f = Frame::new(FrameKind::Grad, 1, i, 0, wire::f32s_to_bytes(&seg));
+        let back = wire::decode_exact(&wire::encode(&f)).unwrap();
+        let seg2 = wire::bytes_to_f32s(&back.payload).unwrap();
+        assert_eq!(seg.len(), seg2.len());
+        for (a, b) in seg.iter().zip(seg2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+/// Decode a buffer as a stream of frames; Err carries the failure of
+/// the frame the cut landed in.
+fn decode_stream(mut buf: &[u8]) -> Result<Vec<Frame>, WireError> {
+    let mut out = Vec::new();
+    while !buf.is_empty() {
+        let (f, used) = wire::decode(buf)?;
+        out.push(f);
+        buf = &buf[used..];
+    }
+    Ok(out)
+}
+
+/// Every proper prefix of a valid multi-frame stream decodes to a
+/// clean typed error (a torn final frame), and every frame-boundary
+/// prefix decodes to exactly the frames before the cut. Nothing
+/// panics, nothing is silently mis-framed.
+#[test]
+fn prop_every_wire_stream_prefix_is_typed() {
+    let mut rng = Rng::new(0xD157_0002);
+    for _ in 0..20 {
+        let frames: Vec<Frame> = (0..3).map(|_| random_wire_frame(&mut rng)).collect();
+        let mut stream = Vec::new();
+        let mut boundaries = vec![0usize];
+        for f in &frames {
+            stream.extend_from_slice(&wire::encode(f));
+            boundaries.push(stream.len());
+        }
+        for cut in 0..stream.len() {
+            match decode_stream(&stream[..cut]) {
+                Ok(decoded) => {
+                    let k = boundaries.iter().position(|&b| b == cut).unwrap_or_else(|| {
+                        panic!("cut {cut} decoded Ok but is not a frame boundary")
+                    });
+                    assert_eq!(decoded, frames[..k], "boundary cut {cut}");
+                }
+                Err(WireError::Truncated { need, have }) => {
+                    assert!(have < need, "cut {cut}: nonsense truncation {have}/{need}");
+                    assert!(
+                        !boundaries.contains(&cut),
+                        "cut {cut} is a boundary but decoded Truncated"
+                    );
+                }
+                Err(e) => panic!("cut {cut}: expected Truncated, got {e}"),
+            }
+        }
+        let full = decode_stream(&stream).unwrap();
+        assert_eq!(full, frames);
+    }
+}
+
+/// Flipping any single bit anywhere in an encoded frame — magic,
+/// length, header, payload, checksum — makes decode return a typed
+/// error, never a wrong frame and never a panic.
+#[test]
+fn prop_wire_single_bit_corruption_always_detected() {
+    let mut rng = Rng::new(0xD157_0003);
+    for _ in 0..8 {
+        let f = random_wire_frame(&mut rng);
+        let clean = wire::encode(&f);
+        for i in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[i] ^= 1 << rng.range(0, 8);
+            let got = wire::decode_exact(&bad);
+            assert!(
+                got.is_err(),
+                "flipping byte {i}/{} of a {:?} frame decoded Ok",
+                clean.len(),
+                f.kind
+            );
+        }
+    }
+}
+
+/// Random byte soup (no magic) is rejected, not mis-framed: decode
+/// errors on arbitrary garbage of any length.
+#[test]
+fn prop_wire_garbage_never_panics() {
+    let mut rng = Rng::new(0xD157_0004);
+    for _ in 0..200 {
+        let soup: Vec<u8> = (0..rng.range(0, 64)).map(|_| rng.range(0, 256) as u8).collect();
+        assert!(wire::decode(&soup).is_err(), "garbage decoded Ok: {soup:?}");
+    }
 }

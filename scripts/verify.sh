@@ -48,7 +48,7 @@ for f in BENCH_*.json; do
     [ -e "$f" ] || continue
     found=1
     if python3 - "$f" <<'EOF'
-import json, math, sys
+import json, math, re, sys
 path = sys.argv[1]
 with open(path) as fh:
     data = json.load(fh)
@@ -78,11 +78,19 @@ if path.endswith("BENCH_train.json"):
     prefixes = {k.rsplit(".", 1)[0] for k in data}
     if not prefixes:
         raise SystemExit(f"{path}: no train rows")
+    # Distributed rows (train-bench --dist) have their own fixed key
+    # shape: r<replicas>.dist<world>.<ps|replicated>. Anything else
+    # containing ".dist" is a malformed row, not a new convention.
+    dist_re = re.compile(r"^r\d+\.dist\d+\.(ps|replicated)$")
     for p in sorted(prefixes):
+        if ".dist" in p and not dist_re.match(p):
+            raise SystemExit(f"{path}: malformed dist row `{p}` "
+                             "(want r<R>.dist<N>.<ps|replicated>)")
         missing = [s for s in required if f"{p}.{s}" not in data]
         if missing:
             raise SystemExit(f"{path}: row `{p}` missing {missing}")
-    print(f"  {path}: train schema OK ({len(prefixes)} rows)")
+    dist_rows = sum(1 for p in prefixes if ".dist" in p)
+    print(f"  {path}: train schema OK ({len(prefixes)} rows, {dist_rows} dist)")
 if path.endswith("BENCH_serve.json"):
     # The serving benchmark has a fixed schema on top of the flat
     # name->number convention: every row prefix (r<replicas>.beam<B>.
