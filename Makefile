@@ -1,6 +1,6 @@
 # hybridnmt build/verify entry points (see README.md).
 
-.PHONY: artifacts verify lint doc clean-artifacts serve-bench train-bench crash-test dist-test
+.PHONY: artifacts verify lint doc clean-artifacts serve-bench train-bench tenant-bench crash-test dist-test
 
 # AOT-compile the JAX model to HLO-text artifacts + manifests.
 # aot.py uses package-relative imports, so run it as a module from
@@ -27,6 +27,19 @@ lint:
 serve-bench:
 	cargo run --release -- serve-bench --model tiny --batch 32 --devices 4 --n 48
 	cargo run --release -- serve-load --model tiny --replicas 4 --requests 64 --rate 16
+
+# Multi-tenant serving: 3 tenants under Zipf(1.0)-skewed Poisson load
+# with the hottest tenant hot-swapped mid-run (--swap-at 0.5), solo
+# baselines per tenant, and a p99 ≤ 8× solo fairness gate. Emits
+# mt.<tenant>.* rows into BENCH_serve.json, the per-tenant table to
+# results/tenant_bench.{txt,csv}, and the Prometheus dump to
+# results/metrics.prom; `make verify` then validates the tenant-row
+# schema and the exposition format (scripts/check_prom.py), plus the
+# multi-tenant correctness suite (swap/detach under live load).
+tenant-bench:
+	cargo run --release -- serve-load --model tiny --replicas 4 --requests 96 \
+		--rate 24 --tenants 3 --zipf-s 1.0 --swap-at 0.5 --fairness-factor 8
+	cargo test --test tenant_serving
 
 # Training throughput: the pipelined multi-replica train-step sweep
 # (replicas 1..4 x accum {1,4} → BENCH_train.json +

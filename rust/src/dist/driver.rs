@@ -24,6 +24,7 @@ use super::fake::{FakeNet, FaultScript};
 use super::transport::{CommOpts, TcpTransport};
 use super::{DistError, DistMode};
 use crate::config::Experiment;
+use crate::metrics::Registry;
 use crate::parallel::Batch;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
@@ -145,6 +146,7 @@ pub fn train_rank(
         match trainer.train_step_micro_dist(micro, comm) {
             Ok(st) => stats.push(st),
             Err(e) => {
+                register_rank_stats(rank, &stats, true);
                 comm.abort(step_no, &format!("{e:#}"));
                 return Err(e.context(format!("rank {rank} failed at step {step_no}")));
             }
@@ -152,7 +154,31 @@ pub fn train_rank(
     }
     comm.shutdown(spec.steps as u64)
         .map_err(|e| anyhow::Error::from(e).context(format!("rank {rank} shutdown")))?;
+    register_rank_stats(rank, &stats, false);
     Ok(RankRun { stats, params: trainer.params().clone() })
+}
+
+/// Fold one rank's ad-hoc per-step stats into the process-wide metrics
+/// [`Registry`] (in multi-process runs each worker process has its own
+/// registry; in thread worlds the ranks share one, labelled apart).
+fn register_rank_stats(rank: usize, stats: &[StepStats], aborted: bool) {
+    let m = Registry::global();
+    let r = rank.to_string();
+    let labels = &[("rank", r.as_str())];
+    m.counter("dist_steps_total", "distributed optimizer steps completed", labels)
+        .add(stats.len() as u64);
+    m.counter("dist_src_tokens_total", "source tokens trained on", labels)
+        .add(stats.iter().map(|s| s.src_tokens).sum::<f64>() as u64);
+    m.gauge(
+        "dist_reduce_seconds",
+        "host seconds in gradient reduction over the rank's last run",
+        labels,
+    )
+    .set(stats.iter().map(|s| s.reduce_seconds).sum());
+    if aborted {
+        m.counter("dist_aborts_total", "rank-local failures that aborted the world", labels)
+            .inc();
+    }
 }
 
 /// Run a whole world on the in-memory fake transport, one thread per

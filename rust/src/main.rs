@@ -18,7 +18,10 @@ use hybridnmt::metrics::corpus_bleu;
 use hybridnmt::parallel::build_plan;
 use hybridnmt::report;
 use hybridnmt::runtime::{Engine, ParamBank};
-use hybridnmt::serve::{drive_arrivals, poisson_arrivals, run_server, ServeOptions};
+use hybridnmt::serve::{
+    drive_arrivals, drive_tenant_arrivals, poisson_arrivals, run_server, run_tenant_server,
+    tenant_arrivals, ServeOptions, TenantDriveReport, TenantOpts, TenantRegistry,
+};
 use hybridnmt::sim::simulate;
 use hybridnmt::storage::{local::write_file_atomic, LocalDir, Retrying, RetryPolicy};
 use hybridnmt::train::{checkpoint, init_params, StepMode, Trainer};
@@ -120,6 +123,17 @@ COMMANDS
              (online scheduler under deterministic Poisson arrivals,
              replica sweep 1..R; writes BENCH_serve.json +
              results/serve_bench.{txt,csv})
+             [--tenants T (multi-tenant mode: T tenants under Zipf-skewed
+             popularity, deficit-round-robin fairness, per-tenant rows in
+             BENCH_serve.json + results/tenant_bench.{txt,csv} + the
+             Prometheus dump at results/metrics.prom)]
+             [--zipf-s S (tenant popularity skew, default 1.0)]
+             [--users U (distinct users per tenant, default 200)]
+             [--tenant-queue C (per-tenant admission cap, default 64)]
+             [--swap-at F (hot-swap the hottest tenant after fraction F
+             of the schedule; responses never drop or mix generations)]
+             [--fairness-factor F (gate: every tenant's shared-fleet p99
+             must stay within F x its solo p99; 0 = report only)]
   sim        --strategy S [--batch B] [--trace out.csv] (schedule breakdown)
   table1     [--sentences14 N] [--sentences17 N]
   table2     [--model tiny|small|paper]
@@ -994,6 +1008,11 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         max_wait_ms: args.str_or("max-wait-ms", "5.0").parse().with_context(|| "--max-wait-ms")?,
         bucket_width: args.usize("bucket-width", 4)?,
     };
+
+    let tenants = args.usize("tenants", 1)?;
+    if tenants > 1 {
+        return serve_load_tenants(args, &su, &pool, &reference, requests, rate, seed, &base);
+    }
     // One schedule for every replica count: identical offered load.
     let arrivals = poisson_arrivals(&pool, requests, rate, seed);
     let mut rows = Vec::new();
@@ -1034,6 +1053,171 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
     }
     print!("\n{}", report::serve_table(&rows));
     println!("wrote BENCH_serve.json");
+    Ok(())
+}
+
+/// Multi-tenant serve-load: `--tenants T` tenants under Zipf-skewed
+/// popularity share one replica fleet through the deficit-round-robin
+/// scheduler. Each tenant also gets a *solo* run of exactly its own
+/// slice of the schedule — the fairness baseline its shared-fleet p99
+/// is compared against. `--swap-at F` hot-swaps the hottest tenant's
+/// model (to an identical parameter clone, so the token-identity gate
+/// spans the swap) after fraction F of the arrivals.
+#[allow(clippy::too_many_arguments)]
+fn serve_load_tenants(
+    args: &Args,
+    su: &ServeSetup,
+    pool: &[Vec<i32>],
+    reference: &[Vec<i32>],
+    requests: usize,
+    rate: f64,
+    seed: u64,
+    base: &ServeOptions,
+) -> Result<()> {
+    let n_tenants = args.usize("tenants", 2)?;
+    let zipf_s: f64 = args.str_or("zipf-s", "1.0").parse().with_context(|| "--zipf-s")?;
+    let users = args.usize("users", 200)? as u64;
+    let tenant_queue = args.usize("tenant-queue", 64)?.max(1);
+    let swap_at: f64 = args.str_or("swap-at", "0").parse().with_context(|| "--swap-at")?;
+    let fairness: f64 =
+        args.str_or("fairness-factor", "0").parse().with_context(|| "--fairness-factor")?;
+    let replicas = args.usize("replicas", 4)?.max(1);
+    let opts = ServeOptions { replicas, ..*base };
+    let topts = TenantOpts { queue_cap: tenant_queue, weight: 1 };
+
+    // Hottest-first tenant names (rank 0 of the Zipf sampler).
+    let names: Vec<String> = (0..n_tenants).map(|i| format!("t{i}")).collect();
+    let arrivals = tenant_arrivals(pool, &names, requests, rate, zipf_s, users, seed);
+
+    let verify = |responses: &[hybridnmt::serve::TenantResponse]| -> Result<()> {
+        for r in responses {
+            if r.response.tokens != reference[r.response.id as usize % pool.len()] {
+                return Err(anyhow!(
+                    "tenant `{}` response {} (gen {}) diverged from the single-sentence \
+                     reference — a hot-swap mixed or corrupted a group",
+                    r.tenant,
+                    r.response.id,
+                    r.generation
+                ));
+            }
+        }
+        Ok(())
+    };
+
+    // Solo baselines: each tenant's own slice of the schedule, alone on
+    // the same fleet. Its p99 here is what isolation is measured
+    // against.
+    let mut solo_p99: std::collections::BTreeMap<String, f64> = Default::default();
+    for t in &names {
+        let slice: Vec<_> = arrivals.iter().filter(|a| &a.tenant == t).cloned().collect();
+        if slice.is_empty() {
+            continue;
+        }
+        let registry = TenantRegistry::new();
+        registry.attach(t, su.params.clone(), ParamBank::new(), topts)?;
+        let (_, responses, _, per_tenant) = run_tenant_server(
+            &su.engine, &registry, su.input_feeding, &su.cfg, &opts,
+            |h| drive_tenant_arrivals(h, &slice),
+        )?;
+        verify(&responses)?;
+        if let Some(ts) = per_tenant.get(t) {
+            solo_p99.insert(t.clone(), ts.latency_pctl_ms(0.99));
+        }
+    }
+
+    // The shared-fleet run, with the optional mid-run hot-swap.
+    let registry = TenantRegistry::new();
+    for t in &names {
+        registry.attach(t, su.params.clone(), ParamBank::new(), topts)?;
+    }
+    let split = if swap_at > 0.0 {
+        ((requests as f64 * swap_at.clamp(0.0, 1.0)) as usize).min(requests)
+    } else {
+        0
+    };
+    let (drive, responses, stats, per_tenant) = run_tenant_server(
+        &su.engine, &registry, su.input_feeding, &su.cfg, &opts,
+        |h| -> Result<TenantDriveReport> {
+            if split == 0 {
+                return drive_tenant_arrivals(h, &arrivals);
+            }
+            let first = drive_tenant_arrivals(h, &arrivals[..split])?;
+            let hot = &names[0];
+            let old_gen = registry.generation_of(hot).unwrap_or(0);
+            let new_gen = registry.swap(hot, su.params.clone(), ParamBank::new())?;
+            println!(
+                "hot-swap at request {split}: tenant {hot} generation {old_gen} -> {new_gen} \
+                 (in-flight work drains on the old generation)"
+            );
+            let mut rest = drive_tenant_arrivals(h, &arrivals[split..])?;
+            rest.accepted += first.accepted;
+            rest.rejected += first.rejected;
+            rest.unknown += first.unknown;
+            for (t, n) in first.shed {
+                *rest.shed.entry(t).or_insert(0) += n;
+            }
+            for (t, n) in first.offered {
+                *rest.offered.entry(t).or_insert(0) += n;
+            }
+            Ok(rest)
+        },
+    )?;
+    verify(&responses)?;
+    if responses.len() as u64 != stats.accepted {
+        return Err(anyhow!(
+            "dropped responses: {} accepted but {} completed",
+            stats.accepted,
+            responses.len()
+        ));
+    }
+    if split > 0 {
+        let hot = &names[0];
+        let gens: std::collections::BTreeSet<u64> = responses
+            .iter()
+            .filter(|r| &r.tenant == hot)
+            .map(|r| r.generation)
+            .collect();
+        println!(
+            "tenant {hot} decoded under generations {gens:?}; every response token-identical"
+        );
+        if !registry.wait_drained(std::time::Duration::from_secs(10)) {
+            return Err(anyhow!("old generation failed to drain after the run"));
+        }
+    }
+
+    let span = arrivals.last().map_or(0.0, |a| a.at_s);
+    let mut rows = Vec::new();
+    for t in &names {
+        let ts = per_tenant.get(t).cloned().unwrap_or_default();
+        let offered = *drive.offered.get(t).unwrap_or(&0);
+        rows.push(report::TenantRow {
+            tenant: t.clone(),
+            offered_rps: hybridnmt::util::per_sec(offered as f64, span),
+            sustained_rps: hybridnmt::util::per_sec(ts.completed as f64, stats.wall_s),
+            p50_ms: ts.latency_pctl_ms(0.50),
+            p99_ms: ts.latency_pctl_ms(0.99),
+            shed: ts.shed,
+            distinct_users_est: ts.distinct_users_est,
+            solo_p99_ms: *solo_p99.get(t).unwrap_or(&f64::NAN),
+        });
+    }
+    print!("\n{}", report::tenant_table(&rows));
+    println!("wrote BENCH_serve.json (mt.* + prom.* keys) and results/metrics.prom");
+
+    if fairness > 0.0 {
+        for r in &rows {
+            if r.solo_p99_ms.is_finite() && r.p99_ms > fairness * r.solo_p99_ms {
+                return Err(anyhow!(
+                    "fairness gate: tenant `{}` p99 {:.1} ms exceeds {fairness} x solo p99 \
+                     {:.1} ms",
+                    r.tenant,
+                    r.p99_ms,
+                    r.solo_p99_ms
+                ));
+            }
+        }
+        println!("fairness gate passed: every tenant p99 within {fairness}x its solo p99");
+    }
     Ok(())
 }
 

@@ -1,0 +1,229 @@
+//! HyperLogLog distinct-count estimator (Flajolet et al., 2007).
+//!
+//! "Millions of users" is a cardinality claim, and counting it exactly
+//! would cost a hash-set entry per user — per tenant. HLL gets within a
+//! few percent in `2^p` bytes total: hash each user id to 64 bits, use
+//! the top `p` bits to pick a register, and keep per register the
+//! maximum number of leading zeros (+1) seen in the remaining bits.
+//! The harmonic mean of `2^register` across registers estimates the
+//! cardinality; the low-range bias is repaired with linear counting
+//! over the still-zero registers, so small tenants read near-exact.
+//!
+//! Registers are `AtomicU8` updated with `fetch_max` — inserts from
+//! concurrent serving threads are lock-free and order-independent
+//! (max is commutative), which is what lets the serve scheduler feed
+//! one estimator per tenant without another mutex on the hot path.
+//! Accuracy: the standard error of the raw estimator is
+//! `1.04 / sqrt(2^p)` — ~1.6 % at the default `p = 12` (4 KiB) —
+//! bounded-error tested at cardinalities {10, 1e3, 1e5} in
+//! `rust/tests/property.rs`.
+
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
+
+/// Default precision: 2^12 = 4096 registers, ~1.6 % standard error.
+pub const DEFAULT_PRECISION: u8 = 12;
+
+/// Concurrent HyperLogLog sketch over 64-bit items.
+#[derive(Debug)]
+pub struct Hll {
+    /// log2 of the register count, clamped to [4, 16].
+    p: u8,
+    registers: Vec<AtomicU8>,
+    /// Raw items observed (not distinct) — cheap sanity counter.
+    inserts: AtomicU64,
+}
+
+/// Finalizer from SplitMix64 (the same mixer [`crate::rng::Rng`]
+/// uses): turns sequential / low-entropy ids into uniform 64-bit
+/// hashes, which is all HLL needs of its hash function.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over bytes, for string-keyed identities.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Hll {
+    /// Sketch with `2^p` one-byte registers (`p` clamped to [4, 16]).
+    pub fn new(p: u8) -> Self {
+        let p = p.clamp(4, 16);
+        let m = 1usize << p;
+        Hll {
+            p,
+            registers: (0..m).map(|_| AtomicU8::new(0)).collect(),
+            inserts: AtomicU64::new(0),
+        }
+    }
+
+    /// Register count `m = 2^p`.
+    pub fn registers(&self) -> usize {
+        self.registers.len()
+    }
+
+    /// Raw (non-distinct) insert count.
+    pub fn inserts(&self) -> u64 {
+        self.inserts.load(Ordering::Relaxed)
+    }
+
+    /// Observe a 64-bit identity (mixed internally, so sequential ids
+    /// are fine).
+    pub fn insert_u64(&self, item: u64) {
+        self.observe_hash(mix64(item));
+    }
+
+    /// Observe a string identity.
+    pub fn insert_str(&self, item: &str) {
+        self.observe_hash(mix64(fnv1a(item.as_bytes())));
+    }
+
+    fn observe_hash(&self, h: u64) {
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        let idx = (h >> (64 - self.p)) as usize;
+        // Rank = leading zeros of the remaining 64-p bits, + 1. Shift
+        // the register index out and mark the bit below the payload so
+        // an all-zero payload yields the maximum rank 64-p+1, not 65.
+        let payload = (h << self.p) | (1u64 << (self.p - 1));
+        let rank = (payload.leading_zeros() + 1) as u8;
+        self.registers[idx].fetch_max(rank, Ordering::Relaxed);
+    }
+
+    /// Bias-correction constant `alpha_m` (Flajolet et al., Fig. 3).
+    fn alpha(&self) -> f64 {
+        let m = self.registers.len() as f64;
+        match self.registers.len() {
+            16 => 0.673,
+            32 => 0.697,
+            64 => 0.709,
+            _ => 0.7213 / (1.0 + 1.079 / m),
+        }
+    }
+
+    /// Estimated distinct count.
+    ///
+    /// Raw estimator `alpha_m · m² / Σ 2^(−M_j)`, switched to linear
+    /// counting (`m · ln(m / V)`, `V` = zero registers) below `2.5 m`
+    /// where the raw form is biased — that switch is what makes tiny
+    /// cardinalities (a tenant with 10 users) read near-exact. No
+    /// large-range correction: the 64-bit hash space does not saturate
+    /// at any cardinality this system can see.
+    pub fn estimate(&self) -> f64 {
+        let m = self.registers.len() as f64;
+        let mut sum = 0.0f64;
+        let mut zeros = 0usize;
+        for r in &self.registers {
+            let v = r.load(Ordering::Relaxed);
+            if v == 0 {
+                zeros += 1;
+            }
+            sum += 1.0 / (1u64 << v.min(63)) as f64;
+        }
+        let raw = self.alpha() * m * m / sum;
+        if raw <= 2.5 * m && zeros > 0 {
+            m * (m / zeros as f64).ln()
+        } else {
+            raw
+        }
+    }
+
+    /// Reset every register to zero (a fresh sketch).
+    pub fn reset(&self) {
+        for r in &self.registers {
+            r.store(0, Ordering::Relaxed);
+        }
+        self.inserts.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_sketch_estimates_zero() {
+        let h = Hll::new(DEFAULT_PRECISION);
+        assert_eq!(h.estimate(), 0.0);
+        assert_eq!(h.inserts(), 0);
+    }
+
+    #[test]
+    fn duplicates_do_not_inflate() {
+        let h = Hll::new(DEFAULT_PRECISION);
+        for _ in 0..10_000 {
+            h.insert_u64(42);
+        }
+        let e = h.estimate();
+        assert!((0.5..=1.5).contains(&e), "10k duplicates of one item -> {e}");
+        assert_eq!(h.inserts(), 10_000);
+    }
+
+    #[test]
+    fn small_cardinalities_are_near_exact() {
+        // Linear counting regime: every count up to a few hundred must
+        // round-trip within one.
+        let h = Hll::new(DEFAULT_PRECISION);
+        for i in 0..10u64 {
+            h.insert_u64(i);
+        }
+        assert!((h.estimate() - 10.0).abs() <= 1.0, "{}", h.estimate());
+    }
+
+    #[test]
+    fn strings_and_ints_both_count() {
+        let h = Hll::new(DEFAULT_PRECISION);
+        for i in 0..500 {
+            h.insert_str(&format!("user-{i}"));
+        }
+        let e = h.estimate();
+        assert!((450.0..=550.0).contains(&e), "500 string users -> {e}");
+    }
+
+    #[test]
+    fn precision_is_clamped() {
+        assert_eq!(Hll::new(0).registers(), 16);
+        assert_eq!(Hll::new(20).registers(), 1 << 16);
+        assert_eq!(Hll::new(12).registers(), 4096);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = Hll::new(8);
+        for i in 0..1000u64 {
+            h.insert_u64(i);
+        }
+        assert!(h.estimate() > 500.0);
+        h.reset();
+        assert_eq!(h.estimate(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_inserts_match_sequential() {
+        // fetch_max is commutative: any interleaving lands the same
+        // registers, so a threaded fill estimates like a serial one.
+        let h = std::sync::Arc::new(Hll::new(10));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..2500u64 {
+                        h.insert_u64(t * 2500 + i);
+                    }
+                });
+            }
+        });
+        let seq = Hll::new(10);
+        for i in 0..10_000u64 {
+            seq.insert_u64(i);
+        }
+        assert_eq!(h.estimate(), seq.estimate());
+    }
+}

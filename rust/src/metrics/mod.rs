@@ -1,9 +1,15 @@
 //! Evaluation metrics: corpus BLEU (Table 4/5), perplexity (Figure 4),
-//! and throughput bookkeeping (Table 3).
+//! throughput bookkeeping (Table 3) — plus the *operational* metrics
+//! layer: a process-wide Prometheus-format [`registry`] and the
+//! [`hll`] distinct-count estimator behind its per-tenant user gauges.
 
 pub mod bleu;
+pub mod hll;
+pub mod registry;
 
 pub use bleu::{corpus_bleu, sentence_bleu};
+pub use hll::Hll;
+pub use registry::{Counter, Gauge, Histogram, Registry, LATENCY_MS_BUCKETS};
 
 /// Perplexity from summed token NLL.
 pub fn perplexity(loss_sum: f64, ntok: f64) -> f64 {

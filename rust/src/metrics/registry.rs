@@ -1,0 +1,568 @@
+//! Process-wide metrics registry with Prometheus text exposition.
+//!
+//! Every subsystem so far grew its own ad-hoc stats struct
+//! ([`crate::serve::ServeStats`], engine counters, dist step stats) —
+//! fine for one-shot bench tables, useless for a fleet: "millions of
+//! users" is only a claim you can *check* if the serving path exports
+//! its counters in a format a scraper ingests. This module is that
+//! layer: a registry of named metric families — monotone [`Counter`]s,
+//! set-valued [`Gauge`]s, fixed-bucket [`Histogram`]s and
+//! [`Hll`]-backed distinct-count estimators — each keyed by a label
+//! set (`tenant="de-en"`), rendered in the Prometheus text exposition
+//! format by [`Registry::render`] and snapshotted into
+//! `BENCH_serve.json` via [`Registry::snapshot_totals`].
+//!
+//! Concurrency: metric handles are `Arc`s over atomics — registration
+//! takes a lock once, the hot path (increment/observe) never does.
+//! Registering the same `(name, labels)` twice returns the *same*
+//! handle, so independent subsystems can share a family without
+//! plumbing handles through every constructor.
+//!
+//! Quantiles: [`Histogram::quantile`] derives its rank from
+//! [`crate::util::nearest_rank_index`] — the identical rule the exact
+//! serve-latency percentiles use — and answers with the smallest
+//! bucket upper bound covering that rank (a conservative estimate that
+//! equals the exact nearest-rank value whenever bucket resolution
+//! suffices).
+//!
+//! Metric and label names are validated against the Prometheus data
+//! model (`[a-zA-Z_:][a-zA-Z0-9_:]*`, labels without `:`); violations
+//! panic with the offending name — they are compile-time string
+//! constants, so this is a programmer error on the order of an index
+//! out of bounds, not a runtime condition to propagate.
+
+use super::hll::Hll;
+use crate::util::nearest_rank_index;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonically-increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (f64 stored as bits).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: cumulative `le` buckets in the Prometheus
+/// sense, plus sum and count. Bucket bounds are frozen at registration
+/// (observation is bound-search + one atomic add — no lock, no
+/// allocation).
+#[derive(Debug)]
+pub struct Histogram {
+    /// Ascending finite upper bounds; the `+Inf` bucket is implicit.
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `len = bounds.len() + 1`.
+    counts: Vec<AtomicU64>,
+    /// Σ observations, accumulated as f64 bits under CAS.
+    sum_bits: AtomicU64,
+}
+
+/// Default latency buckets in milliseconds: sub-ms to 10 s, roughly
+/// log-spaced — wide enough for both the in-process serve path and a
+/// loaded fleet.
+pub const LATENCY_MS_BUCKETS: &[f64] = &[
+    0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0, 5000.0, 10_000.0,
+];
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        let mut bs: Vec<f64> = bounds.iter().copied().filter(|b| b.is_finite()).collect();
+        bs.sort_by(|a, b| a.total_cmp(b));
+        bs.dedup();
+        let n = bs.len() + 1;
+        Histogram {
+            bounds: bs,
+            counts: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Nearest-rank quantile estimate from the bucket counts: the
+    /// smallest bucket upper bound whose cumulative count covers rank
+    /// `⌈q·n⌉` (the exact rule in [`crate::util::nearest_rank_index`]).
+    /// Observations above the largest finite bound answer with that
+    /// largest bound — a deliberately conservative (never inflated)
+    /// tail estimate. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let per: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let n = per.iter().sum::<u64>();
+        let Some(rank_idx) = nearest_rank_index(n as usize, q) else {
+            return 0.0;
+        };
+        let mut cum = 0u64;
+        for (i, &c) in per.iter().enumerate() {
+            cum += c;
+            if cum > rank_idx as u64 {
+                return self.bounds.get(i).copied().unwrap_or_else(|| {
+                    self.bounds.last().copied().unwrap_or(0.0)
+                });
+            }
+        }
+        self.bounds.last().copied().unwrap_or(0.0)
+    }
+
+    /// `(upper_bound, cumulative_count)` pairs, ending with the
+    /// implicit `+Inf` bucket — the exposition-format view.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            let bound = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((bound, cum));
+        }
+        out
+    }
+}
+
+/// One metric instance (a family member at one label set).
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+    /// Exposed as a gauge whose value is the live HLL estimate.
+    Distinct(Arc<Hll>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) | Metric::Distinct(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Family {
+    help: String,
+    kind: &'static str,
+    /// Rendered label string (`{a="x",b="y"}` or empty) → instance.
+    members: BTreeMap<String, Metric>,
+}
+
+/// The registry: named families of labeled metrics. One process-wide
+/// instance lives behind [`Registry::global`]; tests build their own.
+#[derive(Debug, Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+fn valid_name(name: &str, allow_colon: bool) -> bool {
+    let mut chars = name.chars();
+    let first_ok = chars.next().is_some_and(|c| {
+        c.is_ascii_alphabetic() || c == '_' || (allow_colon && c == ':')
+    });
+    first_ok
+        && name.chars().all(|c| {
+            c.is_ascii_alphanumeric() || c == '_' || (allow_colon && c == ':')
+        })
+}
+
+/// Render a label set Prometheus-style, sorted by label name, with
+/// value escaping (`\` → `\\`, `"` → `\"`, newline → `\n`).
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut sorted: Vec<(&str, &str)> = labels.to_vec();
+    sorted.sort_by_key(|&(k, _)| k);
+    let mut out = String::from("{");
+    for (i, (k, v)) in sorted.iter().enumerate() {
+        assert!(
+            valid_name(k, false),
+            "invalid Prometheus label name `{k}` (want [a-zA-Z_][a-zA-Z0-9_]*)"
+        );
+        if i > 0 {
+            out.push(',');
+        }
+        let escaped = v
+            .replace('\\', "\\\\")
+            .replace('"', "\\\"")
+            .replace('\n', "\\n");
+        let _ = write!(out, "{k}=\"{escaped}\"");
+    }
+    out.push('}');
+    out
+}
+
+/// Exposition-format float: Rust's `inf` spelled the Prometheus way.
+fn fmt_value(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else if v.is_nan() {
+        "NaN".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+impl Registry {
+    /// A fresh, empty registry (tests; the process uses [`global`](Registry::global)).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide registry every subsystem registers through.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        assert!(
+            valid_name(name, true),
+            "invalid Prometheus metric name `{name}` (want [a-zA-Z_:][a-zA-Z0-9_:]*)"
+        );
+        let key = render_labels(labels);
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind: "",
+            members: BTreeMap::new(),
+        });
+        let m = fam.members.entry(key).or_insert_with(make).clone();
+        if fam.kind.is_empty() {
+            fam.kind = m.kind();
+        }
+        assert_eq!(
+            fam.kind,
+            m.kind(),
+            "metric `{name}` registered as both {} and {}",
+            fam.kind,
+            m.kind()
+        );
+        m
+    }
+
+    /// Get-or-register a counter at `(name, labels)`.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.get_or_insert(name, help, labels, || Metric::Counter(Arc::default())) {
+            Metric::Counter(c) => c,
+            other => panic!("metric `{name}` already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Get-or-register a gauge at `(name, labels)`.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.get_or_insert(name, help, labels, || Metric::Gauge(Arc::default())) {
+            Metric::Gauge(g) => g,
+            other => panic!("metric `{name}` already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Get-or-register a fixed-bucket histogram at `(name, labels)`.
+    /// Bounds matter only on first registration of the family member;
+    /// later calls return the existing instance unchanged.
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        match self.get_or_insert(name, help, labels, || {
+            Metric::Histogram(Arc::new(Histogram::new(bounds)))
+        }) {
+            Metric::Histogram(h) => h,
+            other => panic!("metric `{name}` already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Get-or-register an HLL distinct-count estimator, exposed as a
+    /// gauge whose exported value is the live cardinality estimate.
+    pub fn distinct(&self, name: &str, help: &str, labels: &[(&str, &str)], p: u8) -> Arc<Hll> {
+        match self.get_or_insert(name, help, labels, || Metric::Distinct(Arc::new(Hll::new(p)))) {
+            Metric::Distinct(h) => h,
+            other => panic!("metric `{name}` already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Render everything in the Prometheus text exposition format
+    /// (version 0.0.4): `# HELP` / `# TYPE` headers per family, one
+    /// sample line per member, histograms as cumulative `_bucket`
+    /// series (ending at `le="+Inf"`) plus `_sum` / `_count`.
+    pub fn render(&self) -> String {
+        let fams = self.families.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            let help = fam.help.replace('\\', "\\\\").replace('\n', "\\n");
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind);
+            for (labels, m) in &fam.members {
+                match m {
+                    Metric::Counter(c) => {
+                        let _ = writeln!(out, "{name}{labels} {}", c.get());
+                    }
+                    Metric::Gauge(g) => {
+                        let _ = writeln!(out, "{name}{labels} {}", fmt_value(g.get()));
+                    }
+                    Metric::Distinct(h) => {
+                        let _ = writeln!(out, "{name}{labels} {}", fmt_value(h.estimate()));
+                    }
+                    Metric::Histogram(h) => {
+                        // Splice `le` into the member's label set.
+                        let base = labels.strip_suffix('}').map(|s| &s[1..]).unwrap_or("");
+                        let sep = if base.is_empty() { "" } else { "," };
+                        for (bound, cum) in h.cumulative_buckets() {
+                            let _ = writeln!(
+                                out,
+                                "{name}_bucket{{{base}{sep}le=\"{}\"}} {cum}",
+                                fmt_value(bound)
+                            );
+                        }
+                        let _ = writeln!(out, "{name}_sum{labels} {}", fmt_value(h.sum()));
+                        let _ = writeln!(out, "{name}_count{labels} {}", h.count());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Label-aggregated totals per family, for the flat name→number
+    /// `BENCH_*.json` convention: counters and histogram counts sum
+    /// across label sets, gauges and distinct estimates also sum
+    /// (instantaneous totals). Histograms add a `<name>_sum` entry.
+    pub fn snapshot_totals(&self) -> BTreeMap<String, f64> {
+        let fams = self.families.lock().unwrap();
+        let mut out = BTreeMap::new();
+        for (name, fam) in fams.iter() {
+            let mut total = 0.0f64;
+            let mut hist_sum = 0.0f64;
+            let mut is_hist = false;
+            for m in fam.members.values() {
+                match m {
+                    Metric::Counter(c) => total += c.get() as f64,
+                    Metric::Gauge(g) => total += g.get(),
+                    Metric::Distinct(h) => total += h.estimate(),
+                    Metric::Histogram(h) => {
+                        is_hist = true;
+                        total += h.count() as f64;
+                        hist_sum += h.sum();
+                    }
+                }
+            }
+            if total.is_finite() {
+                out.insert(name.clone(), total);
+            }
+            if is_hist && hist_sum.is_finite() {
+                out.insert(format!("{name}_sum"), hist_sum);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip_and_identity() {
+        let r = Registry::new();
+        let c = r.counter("reqs_total", "requests", &[("tenant", "a")]);
+        c.inc();
+        c.add(4);
+        // Same (name, labels) -> same instance.
+        let c2 = r.counter("reqs_total", "requests", &[("tenant", "a")]);
+        assert_eq!(c2.get(), 5);
+        // Different labels -> independent instance.
+        let c3 = r.counter("reqs_total", "requests", &[("tenant", "b")]);
+        assert_eq!(c3.get(), 0);
+        let g = r.gauge("depth", "queue depth", &[]);
+        g.set(3.5);
+        assert_eq!(r.gauge("depth", "", &[]).get(), 3.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_conflict_panics() {
+        let r = Registry::new();
+        r.counter("m", "h", &[]);
+        r.gauge("m", "h", &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid Prometheus metric name")]
+    fn bad_name_panics() {
+        Registry::new().counter("0bad-name", "h", &[]);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let r = Registry::new();
+        let h = r.histogram("lat_ms", "latency", &[], &[1.0, 10.0, 100.0]);
+        for v in [0.5, 0.5, 5.0, 50.0, 5000.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 5056.0).abs() < 1e-9);
+        let cum = h.cumulative_buckets();
+        assert_eq!(cum.len(), 4);
+        assert_eq!(cum[0], (1.0, 2));
+        assert_eq!(cum[1], (10.0, 3));
+        assert_eq!(cum[2], (100.0, 4));
+        assert_eq!(cum[3].1, 5);
+        assert!(cum[3].0.is_infinite());
+    }
+
+    /// The histogram quantile and the exact percentile derive the rank
+    /// from the same helper: at n ∈ {1, 2, 4, 100}, when every sample
+    /// sits exactly on a bucket bound, the two answers are equal.
+    #[test]
+    fn histogram_quantile_matches_exact_nearest_rank() {
+        use crate::util::percentile_sorted;
+        let bounds: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        for n in [1usize, 2, 4, 100] {
+            let r = Registry::new();
+            let h = r.histogram("q", "h", &[], &bounds);
+            let xs: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+            for &x in &xs {
+                h.observe(x);
+            }
+            for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+                assert_eq!(
+                    h.quantile(q),
+                    percentile_sorted(&xs, q),
+                    "n={n} q={q}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_quantile_tail_is_conservative() {
+        let r = Registry::new();
+        let h = r.histogram("q", "h", &[], &[1.0, 10.0]);
+        h.observe(5000.0); // above every finite bound
+        assert_eq!(h.quantile(0.99), 10.0, "tail clamps to the largest finite bound");
+        let empty = r.histogram("q2", "h", &[], &[1.0]);
+        assert_eq!(empty.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn render_is_valid_exposition_format() {
+        let r = Registry::new();
+        r.counter("reqs_total", "total requests", &[("tenant", "a")]).add(3);
+        r.gauge("inflight", "in-flight now", &[]).set(2.0);
+        let h = r.histogram("lat_ms", "latency ms", &[("tenant", "a")], &[1.0, 10.0]);
+        h.observe(0.5);
+        h.observe(50.0);
+        r.distinct("users", "distinct users", &[("tenant", "a")], 8).insert_u64(7);
+        let text = r.render();
+        assert!(text.contains("# HELP reqs_total total requests\n"));
+        assert!(text.contains("# TYPE reqs_total counter\n"));
+        assert!(text.contains("reqs_total{tenant=\"a\"} 3\n"));
+        assert!(text.contains("# TYPE inflight gauge\n"));
+        assert!(text.contains("inflight 2\n"));
+        assert!(text.contains("# TYPE lat_ms histogram\n"));
+        assert!(text.contains("lat_ms_bucket{tenant=\"a\",le=\"1\"} 1\n"));
+        assert!(text.contains("lat_ms_bucket{tenant=\"a\",le=\"+Inf\"} 2\n"));
+        assert!(text.contains("lat_ms_sum{tenant=\"a\"} 50.5\n"));
+        assert!(text.contains("lat_ms_count{tenant=\"a\"} 2\n"));
+        assert!(text.contains("# TYPE users gauge\n"));
+        // Every non-comment line is `name{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (series, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(!series.is_empty());
+            assert!(
+                value.parse::<f64>().is_ok() || value == "+Inf" || value == "NaN",
+                "unparseable sample value `{value}`"
+            );
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped_and_sorted() {
+        let s = render_labels(&[("z", "with\"quote"), ("a", "back\\slash\nnl")]);
+        assert_eq!(s, "{a=\"back\\\\slash\\nnl\",z=\"with\\\"quote\"}");
+    }
+
+    #[test]
+    fn snapshot_totals_aggregates_labels() {
+        let r = Registry::new();
+        r.counter("c_total", "h", &[("t", "a")]).add(2);
+        r.counter("c_total", "h", &[("t", "b")]).add(5);
+        let h = r.histogram("lat", "h", &[], &[1.0]);
+        h.observe(0.5);
+        h.observe(3.0);
+        let snap = r.snapshot_totals();
+        assert_eq!(snap["c_total"], 7.0);
+        assert_eq!(snap["lat"], 2.0);
+        assert_eq!(snap["lat_sum"], 3.5);
+    }
+}

@@ -824,6 +824,123 @@ pub fn serve_table(rows: &[ServeRow]) -> String {
     out
 }
 
+// ------------------------------------------------- Multi-tenant bench
+
+/// One per-tenant row of a multi-tenant serving run (`serve-load
+/// --tenants`).
+#[derive(Debug, Clone)]
+pub struct TenantRow {
+    /// Tenant id (hyphenated, never dotted — it becomes a flat
+    /// `BENCH_serve.json` key segment).
+    pub tenant: String,
+    /// Offered load addressed to this tenant, requests/s.
+    pub offered_rps: f64,
+    /// Completed responses per second for this tenant.
+    pub sustained_rps: f64,
+    /// Nearest-rank p50 latency, milliseconds.
+    pub p50_ms: f64,
+    /// Nearest-rank p99 latency, milliseconds.
+    pub p99_ms: f64,
+    /// Requests refused over this tenant's admission cap.
+    pub shed: u64,
+    /// HyperLogLog estimate of distinct submitting users.
+    pub distinct_users_est: f64,
+    /// p99 of the same tenant's schedule served *alone* (the fairness
+    /// baseline); NaN when the solo baseline was not run.
+    pub solo_p99_ms: f64,
+}
+
+/// Render the multi-tenant serving table — per-tenant offered vs
+/// sustained load, tail latency (and its ratio to the tenant's solo
+/// baseline, the isolation claim), sheds, and distinct users — and
+/// persist it: `results/tenant_bench.{txt,csv}`, per-tenant
+/// `mt.{tenant}.*` rows in `BENCH_serve.json`, the full Prometheus
+/// exposition dump at `results/metrics.prom`, and the registry's
+/// label-aggregated totals as `prom.*` keys in `BENCH_serve.json`.
+pub fn tenant_table(rows: &[TenantRow]) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Multi-tenant serving: per-tenant isolation under Zipf-skewed load\n\
+         (deficit-round-robin dispatch; per-tenant admission caps; p99/solo is\n\
+         the fairness column — how much a tenant's tail stretches when it shares\n\
+         the fleet with every other tenant)."
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<12} {:>10} {:>11} {:>8} {:>8} {:>10} {:>7} {:>10}",
+        "tenant", "offered/s", "sustained/s", "p50 ms", "p99 ms", "solo p99", "shed", "users est"
+    )
+    .unwrap();
+    let mut csv = String::from(
+        "tenant,offered_rps,sustained_rps,p50_ms,p99_ms,solo_p99_ms,p99_vs_solo,shed,distinct_users_est\n",
+    );
+    let mut bench: BTreeMap<String, Json> = BTreeMap::new();
+    for r in rows {
+        let ratio = if r.solo_p99_ms.is_finite() && r.solo_p99_ms > 0.0 {
+            r.p99_ms / r.solo_p99_ms
+        } else {
+            f64::NAN
+        };
+        let fmt_opt = |x: f64| if x.is_finite() { format!("{x:.1}") } else { "-".into() };
+        writeln!(
+            out,
+            "{:<12} {:>10.1} {:>11.2} {:>8.1} {:>8.1} {:>10} {:>7} {:>10.1}",
+            r.tenant,
+            r.offered_rps,
+            r.sustained_rps,
+            r.p50_ms,
+            r.p99_ms,
+            fmt_opt(r.solo_p99_ms),
+            r.shed,
+            r.distinct_users_est,
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{},{:.1}",
+            r.tenant,
+            r.offered_rps,
+            r.sustained_rps,
+            r.p50_ms,
+            r.p99_ms,
+            r.solo_p99_ms,
+            ratio,
+            r.shed,
+            r.distinct_users_est,
+        )
+        .unwrap();
+        let key = format!("mt.{}", r.tenant);
+        for (suffix, v) in [
+            ("offered_rps", r.offered_rps),
+            ("sustained_rps", r.sustained_rps),
+            ("p99_ms", r.p99_ms),
+            ("shed", r.shed as f64),
+            ("distinct_users_est", r.distinct_users_est),
+        ] {
+            bench.insert(format!("{key}.{suffix}"), Json::Num(v));
+        }
+        if ratio.is_finite() {
+            bench.insert(format!("{key}.p99_vs_solo"), Json::Num(ratio));
+        }
+    }
+    // Snapshot the process-wide metrics registry alongside: the full
+    // Prometheus text dump for scraping/validation, and its
+    // label-aggregated totals as flat prom.* keys.
+    let registry = crate::metrics::Registry::global();
+    write_results("metrics.prom", &registry.render());
+    for (name, v) in registry.snapshot_totals() {
+        if v.is_finite() {
+            bench.insert(format!("prom.{name}"), Json::Num(v));
+        }
+    }
+    merge_bench_json("BENCH_serve.json", bench);
+    write_results("tenant_bench.txt", &out);
+    write_results("tenant_bench.csv", &csv);
+    out
+}
+
 // -------------------------------------------------------- Train bench
 
 /// One measured training configuration (`train-bench`).

@@ -467,6 +467,13 @@ impl ParamBank {
     pub fn upload_bytes(&self) -> u64 {
         self.bufs.upload_bytes()
     }
+
+    /// Bytes currently resident on device for this bank — what one
+    /// tenant's parameter set costs in device memory right now (drops
+    /// to zero when a retired model generation releases its bank).
+    pub fn resident_bytes(&self) -> u64 {
+        self.bufs.resident_bytes()
+    }
 }
 
 /// Named device-resident buffers for values that persist across many
@@ -597,6 +604,13 @@ impl BufCache {
     /// Bytes the uploads in `upload_count` moved host→device.
     pub fn upload_bytes(&self) -> u64 {
         self.uploaded_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Bytes currently resident on device (sum over live entries —
+    /// unlike `upload_bytes` this *decreases* on `remove`/`clear`, so
+    /// it is the number a per-tenant memory gauge wants).
+    pub fn resident_bytes(&self) -> u64 {
+        self.bufs.lock().unwrap().values().map(|b| b.bytes).sum()
     }
 }
 

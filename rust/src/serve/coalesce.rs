@@ -15,8 +15,17 @@
 //! timestamps and asks for expired buckets explicitly, which is what
 //! makes the permutation/fill properties testable without an engine
 //! (`rust/tests/property.rs`).
+//!
+//! Multi-tenant serving adds two more engine-free pieces here: the
+//! per-tenant, per-generation coalescer [`MtCoalescer`] (a group never
+//! mixes tenants *or* model generations — the hot-swap correctness
+//! invariant starts at batching), and the deficit-round-robin
+//! scheduler [`Drr`] that decides which tenant's group a free replica
+//! decodes next (per-tenant queues, bounded deficit ⇒ one hot tenant
+//! cannot starve siblings — the fairness properties in
+//! `rust/tests/property.rs`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 /// One admitted request waiting to be packed into a group.
 #[derive(Debug, Clone)]
@@ -147,6 +156,268 @@ impl Coalescer {
     }
 }
 
+// ------------------------------------------------- Multi-tenant layer
+
+/// One packed group owned by a single `(tenant, generation)` — the
+/// unit the DRR scheduler hands to replicas.
+#[derive(Debug, Clone)]
+pub struct TenantGroup {
+    /// Tenant (model id) every request in the group belongs to.
+    pub tenant: String,
+    /// Model generation the group is pinned to: the replica decodes
+    /// with exactly this generation's parameters, no matter how many
+    /// swaps happen while the group waits.
+    pub generation: u64,
+    /// The packed requests.
+    pub group: Group,
+}
+
+/// Per-tenant, per-generation length-bucketed coalescer.
+///
+/// The single-tenant [`Coalescer`]'s bucket key grows two dimensions:
+/// `(tenant, generation, length-bucket)`. Keying by generation is what
+/// makes a hot swap response-exact — requests admitted before the swap
+/// coalesce (and decode) entirely under the old parameters, requests
+/// after it entirely under the new; no group ever mixes the two.
+#[derive(Debug)]
+pub struct MtCoalescer {
+    capacity: usize,
+    bucket_width: usize,
+    max_wait_s: f64,
+    /// `(tenant, generation, length-bucket)` → waiting requests in
+    /// admission order. BTreeMap keeps every walk deterministic.
+    buckets: BTreeMap<(String, u64, usize), Vec<Pending>>,
+}
+
+impl MtCoalescer {
+    /// Same knobs as [`Coalescer::new`]; the tenant/generation key
+    /// dimensions come from each pushed request.
+    pub fn new(capacity: usize, bucket_width: usize, max_wait_s: f64) -> Self {
+        MtCoalescer {
+            capacity: capacity.max(1),
+            bucket_width: bucket_width.max(1),
+            max_wait_s: max_wait_s.max(0.0),
+            buckets: BTreeMap::new(),
+        }
+    }
+
+    fn len_key(&self, src_len: usize) -> usize {
+        (src_len.max(1) - 1) / self.bucket_width
+    }
+
+    /// Admit one request for `tenant` at model `generation`. Returns a
+    /// full group the moment its `(tenant, generation, length)` bucket
+    /// reaches capacity.
+    pub fn push(&mut self, tenant: &str, generation: u64, req: Pending) -> Option<TenantGroup> {
+        let key = (tenant.to_string(), generation, self.len_key(req.src.len()));
+        let bucket = self.buckets.entry(key.clone()).or_default();
+        bucket.push(req);
+        if bucket.len() >= self.capacity {
+            let reqs = self.buckets.remove(&key).unwrap_or_default();
+            Some(TenantGroup {
+                tenant: tenant.to_string(),
+                generation,
+                group: Group { reqs, capacity: self.capacity },
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Buckets whose oldest member has waited past `max_wait_s` ship
+    /// now, partial or not (same deadline contract as the
+    /// single-tenant coalescer, enforced per tenant-generation bucket).
+    pub fn flush_expired(&mut self, now: f64) -> Vec<TenantGroup> {
+        let expired: Vec<(String, u64, usize)> = self
+            .buckets
+            .iter()
+            .filter(|(_, reqs)| {
+                reqs.first()
+                    .is_some_and(|r| now - r.t_submit >= self.max_wait_s)
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .map(|k| TenantGroup {
+                tenant: k.0.clone(),
+                generation: k.1,
+                group: Group {
+                    reqs: self.buckets.remove(&k).unwrap_or_default(),
+                    capacity: self.capacity,
+                },
+            })
+            .collect()
+    }
+
+    /// Earliest deadline among waiting buckets (absolute seconds since
+    /// server start). `None` when empty.
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.buckets
+            .values()
+            .filter_map(|reqs| reqs.first().map(|r| r.t_submit + self.max_wait_s))
+            .fold(None, |acc: Option<f64>, d| Some(acc.map_or(d, |a| a.min(d))))
+    }
+
+    /// Ship everything still waiting (shutdown drain).
+    pub fn drain(&mut self) -> Vec<TenantGroup> {
+        let buckets = std::mem::take(&mut self.buckets);
+        buckets
+            .into_iter()
+            .filter(|(_, reqs)| !reqs.is_empty())
+            .map(|(k, reqs)| TenantGroup {
+                tenant: k.0,
+                generation: k.1,
+                group: Group { reqs, capacity: self.capacity },
+            })
+            .collect()
+    }
+
+    /// Requests currently waiting in partial buckets.
+    pub fn pending(&self) -> usize {
+        self.buckets.values().map(Vec::len).sum()
+    }
+
+    /// Requests currently waiting for one tenant (any generation).
+    pub fn pending_for(&self, tenant: &str) -> usize {
+        self.buckets
+            .iter()
+            .filter(|((t, _, _), _)| t == tenant)
+            .map(|(_, reqs)| reqs.len())
+            .sum()
+    }
+}
+
+// ------------------------------------------- Deficit round-robin (DRR)
+
+struct DrrQueue<T> {
+    /// Waiting items with their costs (for serve groups: sentences).
+    items: VecDeque<(T, u64)>,
+    /// Unspent service credit, in cost units.
+    deficit: u64,
+    /// Quantum multiplier (2 ⇒ twice the fair share).
+    weight: u64,
+    /// Whether this queue already received its quantum for the current
+    /// head-of-round visit (credit is granted once per visit, not once
+    /// per pop).
+    credited: bool,
+}
+
+/// Deficit round-robin scheduler over named queues (Shreedhar &
+/// Varghese, 1996) — the fairness layer between the per-tenant
+/// coalescers and the replica pool.
+///
+/// Each queue holds `(item, cost)` pairs. A round visits the active
+/// queues in FIFO order; on arriving at a queue's head the scheduler
+/// grants it `quantum × weight` cost units of credit, then serves items
+/// while the accumulated deficit covers their cost. An emptied queue
+/// forfeits its remaining deficit (so idle tenants bank nothing), and a
+/// queue whose head item exceeds its deficit keeps the credit and waits
+/// for the next round — which bounds any backlogged queue's wait by a
+/// constant number of rounds (deficit grows by `quantum × weight` per
+/// round while costs are bounded by the group capacity):
+///
+/// * **work-conserving** — `pop` returns an item whenever any queue is
+///   non-empty; an idle tenant costs nothing;
+/// * **no starvation** — a backlogged queue's deficit never exceeds
+///   `quantum × weight + max_cost − 1`, so it is served at least once
+///   every `⌈max_cost / (quantum × weight)⌉` rounds;
+///
+/// both asserted as properties in `rust/tests/property.rs`.
+pub struct Drr<T> {
+    quantum: u64,
+    queues: BTreeMap<String, DrrQueue<T>>,
+    /// Visitation order of queues with work; head = current visit.
+    active: VecDeque<String>,
+}
+
+impl<T> Drr<T> {
+    /// `quantum` = cost units granted per visit (≥ 1). For serving,
+    /// cost is sentences per group and quantum defaults to the group
+    /// capacity: every tenant may ship one full group per round.
+    pub fn new(quantum: u64) -> Self {
+        Drr { quantum: quantum.max(1), queues: BTreeMap::new(), active: VecDeque::new() }
+    }
+
+    /// Set a queue's weight (quantum multiplier; default 1, min 1).
+    /// Takes effect at its next credit grant.
+    pub fn set_weight(&mut self, name: &str, weight: u64) {
+        self.queue_mut(name).weight = weight.max(1);
+    }
+
+    fn queue_mut(&mut self, name: &str) -> &mut DrrQueue<T> {
+        self.queues.entry(name.to_string()).or_insert_with(|| DrrQueue {
+            items: VecDeque::new(),
+            deficit: 0,
+            weight: 1,
+            credited: false,
+        })
+    }
+
+    /// Enqueue an item with its service cost (clamped ≥ 1 so zero-cost
+    /// items cannot capture a round).
+    pub fn enqueue(&mut self, name: &str, item: T, cost: u64) {
+        let was_empty = self.queue_mut(name).items.is_empty();
+        self.queue_mut(name).items.push_back((item, cost.max(1)));
+        if was_empty {
+            self.active.push_back(name.to_string());
+        }
+    }
+
+    /// Serve the next item under DRR order, with the queue it came
+    /// from. `None` only when every queue is empty.
+    pub fn pop(&mut self) -> Option<(String, T)> {
+        loop {
+            let name = self.active.front()?.clone();
+            let quantum = self.quantum;
+            let q = self.queues.get_mut(&name).expect("active queue exists");
+            let cost = q.items.front().expect("active queue is non-empty").1;
+            if !q.credited {
+                q.deficit = q.deficit.saturating_add(quantum.saturating_mul(q.weight));
+                q.credited = true;
+            }
+            if q.deficit >= cost {
+                q.deficit -= cost;
+                let (item, _) = q.items.pop_front().expect("checked non-empty");
+                if q.items.is_empty() {
+                    // Emptied queues forfeit their credit: deficits
+                    // cannot be banked while idle.
+                    q.deficit = 0;
+                    q.credited = false;
+                    self.active.pop_front();
+                }
+                return Some((name, item));
+            }
+            // Head item exceeds the deficit: keep the credit, end this
+            // visit, try again next round.
+            q.credited = false;
+            self.active.pop_front();
+            self.active.push_back(name);
+        }
+    }
+
+    /// Items waiting across all queues.
+    pub fn len(&self) -> usize {
+        self.queues.values().map(|q| q.items.len()).sum()
+    }
+
+    /// True when no queue has work.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Items waiting in one queue.
+    pub fn queue_len(&self, name: &str) -> usize {
+        self.queues.get(name).map_or(0, |q| q.items.len())
+    }
+
+    /// Current unspent deficit of one queue (test/diagnostic surface
+    /// for the bounded-deficit property).
+    pub fn deficit(&self, name: &str) -> u64 {
+        self.queues.get(name).map_or(0, |q| q.deficit)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,5 +491,99 @@ mod tests {
         assert_eq!(ids, (0..7).collect::<Vec<_>>());
         assert_eq!(c.pending(), 0);
         assert!(c.drain().is_empty());
+    }
+
+    #[test]
+    fn mt_groups_never_mix_tenants_or_generations() {
+        let mut c = MtCoalescer::new(2, 4, 10.0);
+        // Same length, three different (tenant, gen) keys: no group.
+        assert!(c.push("a", 1, req(0, 3, 0.0)).is_none());
+        assert!(c.push("b", 1, req(1, 3, 0.0)).is_none());
+        assert!(c.push("a", 2, req(2, 3, 0.0)).is_none());
+        assert_eq!(c.pending(), 3);
+        assert_eq!(c.pending_for("a"), 2);
+        // A second (a, gen 1) request completes exactly that bucket.
+        let g = c.push("a", 1, req(3, 3, 0.0)).expect("bucket (a,1) is full");
+        assert_eq!(g.tenant, "a");
+        assert_eq!(g.generation, 1);
+        let ids: Vec<u64> = g.group.reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 3]);
+        // Drain ships the two stragglers as single-key partial groups.
+        let rest = c.drain();
+        assert_eq!(rest.len(), 2);
+        for tg in &rest {
+            assert_eq!(tg.group.reqs.len(), 1);
+        }
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn mt_deadline_flush_is_per_bucket() {
+        let mut c = MtCoalescer::new(8, 4, 0.5);
+        c.push("a", 1, req(0, 3, 0.0));
+        c.push("b", 1, req(1, 3, 0.3));
+        assert_eq!(c.next_deadline(), Some(0.5));
+        let gs = c.flush_expired(0.6);
+        assert_eq!(gs.len(), 1);
+        assert_eq!(gs[0].tenant, "a");
+        assert_eq!(c.pending_for("b"), 1);
+        let gs = c.flush_expired(0.9);
+        assert_eq!(gs.len(), 1);
+        assert_eq!(gs[0].tenant, "b");
+    }
+
+    #[test]
+    fn drr_serves_round_robin_at_equal_cost() {
+        let mut d: Drr<u64> = Drr::new(1);
+        for i in 0..3u64 {
+            d.enqueue("a", i, 1);
+            d.enqueue("b", 10 + i, 1);
+        }
+        let order: Vec<String> = std::iter::from_fn(|| d.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec!["a", "b", "a", "b", "a", "b"]);
+        assert!(d.is_empty());
+        assert_eq!(d.pop(), None);
+    }
+
+    #[test]
+    fn drr_is_work_conserving_with_one_queue() {
+        let mut d: Drr<u64> = Drr::new(2);
+        for i in 0..5u64 {
+            d.enqueue("only", i, 3); // cost > quantum: needs 2 rounds of credit
+        }
+        let served: Vec<u64> = std::iter::from_fn(|| d.pop().map(|(_, v)| v)).collect();
+        assert_eq!(served, vec![0, 1, 2, 3, 4], "sole backlogged queue is never stalled");
+    }
+
+    #[test]
+    fn drr_weight_doubles_the_share() {
+        let mut d: Drr<u64> = Drr::new(1);
+        d.set_weight("heavy", 2);
+        for i in 0..60u64 {
+            d.enqueue("heavy", i, 1);
+            d.enqueue("light", i, 1);
+        }
+        let mut heavy = 0;
+        for _ in 0..30 {
+            let (t, _) = d.pop().unwrap();
+            if t == "heavy" {
+                heavy += 1;
+            }
+        }
+        // Weight 2 vs 1 ⇒ ~2/3 of the served items while both backlogged.
+        assert_eq!(heavy, 20, "weight-2 queue gets exactly 2 of every 3 serves");
+    }
+
+    #[test]
+    fn drr_emptied_queue_forfeits_deficit() {
+        let mut d: Drr<u64> = Drr::new(10);
+        d.enqueue("a", 0, 1);
+        assert_eq!(d.pop().unwrap().1, 0);
+        // The 9 leftover credit units are gone: after re-enqueueing,
+        // the deficit restarts from the fresh quantum.
+        assert_eq!(d.deficit("a"), 0);
+        d.enqueue("a", 1, 1);
+        assert_eq!(d.pop().unwrap().1, 1);
+        assert_eq!(d.deficit("a"), 0);
     }
 }

@@ -1,16 +1,24 @@
 //! Deterministic synthetic traffic: Poisson arrivals over a sentence
 //! pool, paced in real time against the server clock.
 //!
-//! The arrival *schedule* (which sentence, when) is a pure function of
+//! The arrival *schedule* (which sentence, when — and for multi-tenant
+//! runs, which tenant and which user) is a pure function of
 //! `(pool, n, rate, seed)` via [`crate::rng::Rng`], so two runs at
 //! different replica counts face byte-identical offered load — the
 //! prerequisite for the `serve-load` table to compare replica counts
 //! at all. Only the wall-clock pacing (and therefore latency) varies
 //! with the machine.
+//!
+//! Multi-tenant schedules skew tenant popularity with an *exact*
+//! [`ZipfSampler`] (inverse-CDF over the true normalized Zipf weights,
+//! not an approximation — its CDF is tested against closed form), the
+//! standard model for "a few hot language pairs, a long cold tail".
 
-use super::server::{ServerHandle, SubmitError};
+use super::server::{ServerHandle, SubmitError, TenantServerHandle};
+use crate::metrics::Registry;
 use crate::rng::Rng;
 use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
 
 /// One scheduled request arrival.
 #[derive(Debug, Clone)]
@@ -77,6 +85,172 @@ pub fn drive_arrivals(handle: &ServerHandle, arrivals: &[Arrival]) -> Result<Dri
             // A draining/failed server stops the generator: whatever
             // failed will surface from run_server itself.
             Err(SubmitError::Closed) => break,
+            Err(e) => return Err(anyhow!("load generator submitted a bad request: {e}")),
+        }
+    }
+    let span = arrivals.last().map_or(0.0, |a| a.at_s);
+    report.offered_per_s = crate::util::per_sec(arrivals.len() as f64, span);
+    let m = Registry::global();
+    m.counter("loadgen_offered_total", "requests offered by the load generator", &[])
+        .add(arrivals.len() as u64);
+    m.counter("loadgen_shed_total", "offered requests shed at admission", &[])
+        .add(report.rejected);
+    Ok(report)
+}
+
+/// Exact Zipf(s) sampler over ranks `0..n` by inverse-CDF lookup.
+///
+/// Rank `k` (0-based) carries weight `1/(k+1)^s`, normalized by the
+/// generalized harmonic number — the *true* distribution, not the
+/// log-uniform approximation [`Rng::zipf`] uses for cheap data
+/// synthesis. The precomputed CDF makes sampling one uniform draw plus
+/// a binary search, and makes the distribution testable against the
+/// closed-form CDF (e.g. n=4, s=1: 12/25, 18/25, 22/25, 1).
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    /// Sampler over `n ≥ 1` ranks with exponent `s ≥ 0` (`s = 0` is
+    /// uniform; larger skews harder toward rank 0).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1, "ZipfSampler needs at least one rank");
+        let s = s.max(0.0);
+        let mut cdf: Vec<f64> = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let h = acc;
+        for c in &mut cdf {
+            *c /= h;
+        }
+        // Guard the tail against rounding: the last bucket must catch
+        // every u in [0, 1).
+        *cdf.last_mut().unwrap() = 1.0;
+        ZipfSampler { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Always false: construction requires at least one rank.
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Cumulative probability of ranks `0..=k`.
+    pub fn cdf(&self, k: usize) -> f64 {
+        self.cdf[k]
+    }
+
+    /// Draw one rank in `0..n`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
+/// One scheduled multi-tenant request arrival.
+#[derive(Debug, Clone)]
+pub struct TenantArrival {
+    /// Request id (position in the schedule).
+    pub id: u64,
+    /// Tenant the request is addressed to.
+    pub tenant: String,
+    /// Submitting user identity (feeds the distinct-user estimate).
+    pub user: u64,
+    /// Source token ids.
+    pub src: Vec<i32>,
+    /// Arrival time, seconds since the schedule's start.
+    pub at_s: f64,
+}
+
+/// Build a deterministic multi-tenant Poisson schedule: `n` requests
+/// at aggregate `rate_per_s`, each addressed to a tenant drawn from a
+/// [`ZipfSampler`] over `tenants` (listed hottest-first; `zipf_s`
+/// skew) by a user drawn uniformly from that tenant's
+/// `users_per_tenant`-sized universe. Pure in
+/// `(pool, tenants, n, rate, zipf_s, users_per_tenant, seed)`.
+pub fn tenant_arrivals(
+    pool: &[Vec<i32>],
+    tenants: &[String],
+    n: usize,
+    rate_per_s: f64,
+    zipf_s: f64,
+    users_per_tenant: u64,
+    seed: u64,
+) -> Vec<TenantArrival> {
+    assert!(!pool.is_empty(), "arrival pool must not be empty");
+    assert!(!tenants.is_empty(), "need at least one tenant");
+    let zipf = ZipfSampler::new(tenants.len(), zipf_s);
+    let mut rng = Rng::new(seed ^ 0x7E4A_4E7A_11C0_FFEE);
+    let users = users_per_tenant.max(1);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            if rate_per_s > 0.0 {
+                t += -(1.0 - rng.f64()).ln() / rate_per_s;
+            }
+            let ti = zipf.sample(&mut rng);
+            // Distinct user universes per tenant: user ids never
+            // collide across tenants.
+            let user = ti as u64 * 1_000_000 + rng.below(users as usize) as u64;
+            TenantArrival {
+                id: i as u64,
+                tenant: tenants[ti].clone(),
+                user,
+                src: pool[i % pool.len()].clone(),
+                at_s: t,
+            }
+        })
+        .collect()
+}
+
+/// What the multi-tenant load generator observed.
+#[derive(Debug, Clone, Default)]
+pub struct TenantDriveReport {
+    /// Requests admitted.
+    pub accepted: u64,
+    /// Requests shed by the *global* admission bound.
+    pub rejected: u64,
+    /// Requests refused because the tenant was not attached (counted
+    /// per tenant — nonzero only around detach windows).
+    pub unknown: u64,
+    /// Per-tenant sheds from `SubmitError::TenantOverQueue`.
+    pub shed: BTreeMap<String, u64>,
+    /// Per-tenant offered request counts.
+    pub offered: BTreeMap<String, u64>,
+    /// Aggregate offered requests per second over the driven span.
+    pub offered_per_s: f64,
+}
+
+/// Replay a multi-tenant schedule against a live tenant server in real
+/// time. Per-tenant sheds and global rejections are counted, not
+/// errors; an `Invalid` submission aborts.
+pub fn drive_tenant_arrivals(
+    handle: &TenantServerHandle<'_, '_>,
+    arrivals: &[TenantArrival],
+) -> Result<TenantDriveReport> {
+    let mut report = TenantDriveReport::default();
+    for a in arrivals {
+        let wait = a.at_s - handle.elapsed_s();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        *report.offered.entry(a.tenant.clone()).or_insert(0) += 1;
+        match handle.submit(&a.tenant, a.id, a.user, a.src.clone()) {
+            Ok(()) => report.accepted += 1,
+            Err(SubmitError::QueueFull { .. }) => report.rejected += 1,
+            Err(SubmitError::TenantOverQueue { tenant, .. }) => {
+                *report.shed.entry(tenant).or_insert(0) += 1;
+            }
+            Err(SubmitError::UnknownTenant { .. }) => report.unknown += 1,
+            Err(SubmitError::Closed) => break,
             Err(e @ SubmitError::Invalid(_)) => {
                 return Err(anyhow!("load generator submitted a bad request: {e}"))
             }
@@ -84,6 +258,19 @@ pub fn drive_arrivals(handle: &ServerHandle, arrivals: &[Arrival]) -> Result<Dri
     }
     let span = arrivals.last().map_or(0.0, |a| a.at_s);
     report.offered_per_s = crate::util::per_sec(arrivals.len() as f64, span);
+    let m = Registry::global();
+    m.counter("loadgen_offered_total", "requests offered by the load generator", &[])
+        .add(arrivals.len() as u64);
+    m.counter("loadgen_shed_total", "offered requests shed at admission", &[])
+        .add(report.rejected + report.shed.values().sum::<u64>());
+    for (t, n) in &report.shed {
+        m.counter(
+            "loadgen_tenant_shed_total",
+            "per-tenant sheds observed by the load generator",
+            &[("tenant", t)],
+        )
+        .add(*n);
+    }
     Ok(report)
 }
 
@@ -133,6 +320,79 @@ mod tests {
         for (i, arr) in a.iter().enumerate() {
             assert_eq!(arr.src, p[i % p.len()]);
             assert_eq!(arr.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn zipf_cdf_matches_closed_form() {
+        // n=4, s=1: weights 1, 1/2, 1/3, 1/4; H = 25/12.
+        // CDF = 12/25, 18/25, 22/25, 1 — exactly.
+        let z = ZipfSampler::new(4, 1.0);
+        let expect = [12.0 / 25.0, 18.0 / 25.0, 22.0 / 25.0, 1.0];
+        for (k, &e) in expect.iter().enumerate() {
+            assert!(
+                (z.cdf(k) - e).abs() < 1e-12,
+                "cdf({k}) = {}, closed form {e}",
+                z.cdf(k)
+            );
+        }
+        // s=0 degenerates to uniform.
+        let u = ZipfSampler::new(5, 0.0);
+        for k in 0..5 {
+            assert!((u.cdf(k) - (k + 1) as f64 / 5.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zipf_samples_follow_the_cdf() {
+        let z = ZipfSampler::new(4, 1.0);
+        let mut rng = Rng::new(99);
+        let mut counts = [0u64; 4];
+        let n = 40_000;
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Empirical mass within 2% absolute of the exact pmf.
+        let pmf = [12.0 / 25.0, 6.0 / 25.0, 4.0 / 25.0, 3.0 / 25.0];
+        for (k, &p) in pmf.iter().enumerate() {
+            let emp = counts[k] as f64 / n as f64;
+            assert!((emp - p).abs() < 0.02, "rank {k}: empirical {emp}, exact {p}");
+        }
+    }
+
+    #[test]
+    fn zipf_rank_zero_is_hottest() {
+        let z = ZipfSampler::new(8, 1.2);
+        let mut rng = Rng::new(3);
+        let mut counts = [0u64; 8];
+        for _ in 0..10_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for w in counts.windows(2) {
+            // Monotone non-increasing popularity (loose: allow small
+            // statistical inversions only deep in the tail).
+            assert!(w[0] + 200 >= w[1], "popularity must decay with rank: {counts:?}");
+        }
+        assert!(counts[0] > counts[7] * 3);
+    }
+
+    #[test]
+    fn tenant_schedule_is_deterministic_and_skewed() {
+        let tenants: Vec<String> = ["de-en", "fr-en", "zh-en"].iter().map(|s| s.to_string()).collect();
+        let a = tenant_arrivals(&pool(), &tenants, 600, 100.0, 1.0, 50, 11);
+        let b = tenant_arrivals(&pool(), &tenants, 600, 100.0, 1.0, 50, 11);
+        assert_eq!(a.len(), 600);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, &x.tenant, x.user, &x.src, x.at_s.to_bits()),
+                       (y.id, &y.tenant, y.user, &y.src, y.at_s.to_bits()));
+        }
+        let hot = a.iter().filter(|x| x.tenant == "de-en").count();
+        let cold = a.iter().filter(|x| x.tenant == "zh-en").count();
+        assert!(hot > cold * 2, "rank-0 tenant must dominate: hot {hot} cold {cold}");
+        // User ids stay inside their tenant's universe.
+        for x in &a {
+            let ti = tenants.iter().position(|t| *t == x.tenant).unwrap() as u64;
+            assert!(x.user / 1_000_000 == ti && x.user % 1_000_000 < 50);
         }
     }
 }

@@ -7,23 +7,18 @@
 //! and padding (wasted decode-step) ratio. All rates go through
 //! [`crate::util::per_sec`] — the shared denominator guard.
 
-use crate::util::per_sec;
+use crate::util::{per_sec, percentile_sorted};
 
-/// Nearest-rank percentile of an already-sorted sample.
-fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize).max(1) - 1;
-    sorted[rank.min(sorted.len() - 1)]
-}
-
-/// Nearest-rank percentile of an **unsorted** sample (`q` in [0, 1]).
-/// Returns 0.0 on an empty sample so downstream JSON stays finite.
+/// Nearest-rank percentile of an **unsorted** sample (`q` in [0, 1]),
+/// per the documented rank rule in [`crate::util::nearest_rank_index`]
+/// (rank = ⌈q·n⌉ clamped to [1, n]) — the same rule the metrics-registry
+/// histogram quantile uses, so exact and bucketed estimates agree on
+/// which rank they report. Returns 0.0 on an empty sample so
+/// downstream JSON stays finite.
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     let mut xs = samples.to_vec();
     xs.sort_by(|a, b| a.total_cmp(b));
-    nearest_rank(&xs, q)
+    percentile_sorted(&xs, q)
 }
 
 fn mean(samples: &[f64]) -> f64 {
@@ -88,9 +83,9 @@ impl ServeStats {
         let mut xs = self.latencies_s.clone();
         xs.sort_by(|a, b| a.total_cmp(b));
         (
-            nearest_rank(&xs, 0.50) * 1e3,
-            nearest_rank(&xs, 0.95) * 1e3,
-            nearest_rank(&xs, 0.99) * 1e3,
+            percentile_sorted(&xs, 0.50) * 1e3,
+            percentile_sorted(&xs, 0.95) * 1e3,
+            percentile_sorted(&xs, 0.99) * 1e3,
         )
     }
 
@@ -172,6 +167,13 @@ mod tests {
         assert_eq!(percentile(&[], 0.5), 0.0);
         assert_eq!(percentile(&[7.0], 0.99), 7.0);
         assert_eq!(percentile(&[3.0, 1.0, 2.0], 0.5), 2.0);
+        // Small-sample nearest-rank semantics (the historical misreport
+        // cases): p99 of n = 2 is the larger element, p50 the smaller;
+        // p99 of n = 4 is the maximum, p50 the 2nd smallest.
+        assert_eq!(percentile(&[4.0, 1.0], 0.99), 4.0);
+        assert_eq!(percentile(&[4.0, 1.0], 0.50), 1.0);
+        assert_eq!(percentile(&[9.0, 3.0, 7.0, 5.0], 0.99), 9.0);
+        assert_eq!(percentile(&[9.0, 3.0, 7.0, 5.0], 0.50), 5.0);
     }
 
     #[test]

@@ -20,7 +20,15 @@
 //!   p50/p95/p99 latency, queue depth, batch-fill ratio and
 //!   padding-waste — the numbers `BENCH_serve.json` tracks.
 //! * [`loadgen`] — deterministic Poisson arrival generator (seeded
-//!   from [`crate::rng::Rng`]) behind the `serve-load` CLI.
+//!   from [`crate::rng::Rng`]) behind the `serve-load` CLI, plus the
+//!   Zipf-skewed multi-tenant schedule behind `--tenants`.
+//! * [`tenant`] — the multi-tenant registry: model-id → resident
+//!   checkpoint with attach / detach / hot-swap behind a generation
+//!   counter, drained via admission-time pins.
+//! * [`server::run_tenant_server`] — the multi-tenant scheduler:
+//!   per-tenant admission caps ([`SubmitError::TenantOverQueue`]) and
+//!   a deficit-round-robin dispatcher ([`coalesce::Drr`]) so a hot
+//!   tenant cannot starve a cold one.
 //!
 //! Invariant: response tokens are identical to the single-sentence
 //! reference [`crate::decode::Decoder`] for every request, regardless
@@ -32,8 +40,16 @@ pub mod coalesce;
 pub mod loadgen;
 pub mod metrics;
 pub mod server;
+pub mod tenant;
 
-pub use coalesce::{Coalescer, Group, Pending};
-pub use loadgen::{drive_arrivals, poisson_arrivals, Arrival, DriveReport};
+pub use coalesce::{Coalescer, Drr, Group, MtCoalescer, Pending, TenantGroup};
+pub use loadgen::{
+    drive_arrivals, drive_tenant_arrivals, poisson_arrivals, tenant_arrivals, Arrival,
+    DriveReport, TenantArrival, TenantDriveReport, ZipfSampler,
+};
 pub use metrics::{percentile, ServeStats};
-pub use server::{run_server, Response, ServeOptions, ServerHandle, SubmitError};
+pub use server::{
+    run_server, run_tenant_server, Response, ServeOptions, ServerHandle, SubmitError,
+    TenantResponse, TenantServerHandle, TenantStats,
+};
+pub use tenant::{ModelGen, PinnedGen, TenantOpts, TenantRegistry};

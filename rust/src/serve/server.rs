@@ -34,10 +34,13 @@
 //! were coalesced, or how many replicas raced
 //! (`rust/tests/serve_equivalence.rs`).
 
-use super::coalesce::{Coalescer, Group, Pending};
+use super::coalesce::{Coalescer, Drr, Group, MtCoalescer, Pending, TenantGroup};
 use super::metrics::ServeStats;
+use super::tenant::{PinnedGen, TenantRegistry};
 use crate::config::ModelDims;
 use crate::decode::{check_src, BatchDecoder, BeamConfig};
+use crate::metrics::hll::DEFAULT_PRECISION;
+use crate::metrics::{Hll, Registry, LATENCY_MS_BUCKETS};
 use crate::runtime::{Engine, ParamBank};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
@@ -81,6 +84,21 @@ pub enum SubmitError {
         /// The configured admission bound.
         capacity: usize,
     },
+    /// Per-tenant backpressure: this tenant's admission cap
+    /// ([`super::tenant::TenantOpts::queue_cap`]) is full. Other
+    /// tenants are unaffected — this is the isolation boundary that
+    /// keeps one hot tenant from consuming the shared queue.
+    TenantOverQueue {
+        /// The tenant whose lane is full.
+        tenant: String,
+        /// Its configured per-tenant admission cap.
+        capacity: usize,
+    },
+    /// The tenant id is not attached (never was, or was detached).
+    UnknownTenant {
+        /// The unresolvable tenant id.
+        tenant: String,
+    },
     /// The server is draining (or a replica failed): no new work.
     Closed,
     /// The request can never decode on this model (empty or oversize
@@ -93,6 +111,12 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::QueueFull { capacity } => {
                 write!(f, "queue full: {capacity} requests already in flight")
+            }
+            SubmitError::TenantOverQueue { tenant, capacity } => {
+                write!(f, "tenant `{tenant}` over its admission cap of {capacity}")
+            }
+            SubmitError::UnknownTenant { tenant } => {
+                write!(f, "tenant `{tenant}` is not attached")
             }
             SubmitError::Closed => write!(f, "server is draining; submission refused"),
             SubmitError::Invalid(e) => write!(f, "invalid request: {e}"),
@@ -486,5 +510,654 @@ pub fn run_server<R>(
         wastes: collected.wastes,
         depth_samples: shared.depth_samples.into_inner().unwrap(),
     };
+    register_serve_stats("default", &stats);
     Ok((driver_out, responses, stats))
+}
+
+/// Fold one run's ad-hoc [`ServeStats`] into the process-wide
+/// [`Registry`], labelled by tenant (the single-tenant scheduler uses
+/// `"default"`). Counters accumulate across runs; latency lands in the
+/// shared `serve_latency_ms` histogram.
+fn register_serve_stats(tenant: &str, stats: &ServeStats) {
+    let m = Registry::global();
+    let labels = &[("tenant", tenant)];
+    m.counter("serve_submitted_total", "requests submitted to the serve scheduler", labels)
+        .add(stats.submitted);
+    m.counter("serve_accepted_total", "requests admitted past backpressure", labels)
+        .add(stats.accepted);
+    m.counter("serve_rejected_total", "submissions refused by the global admission bound", labels)
+        .add(stats.rejected);
+    m.counter("serve_completed_total", "responses delivered", labels)
+        .add(stats.completed);
+    m.counter("serve_groups_total", "coalesced groups decoded", labels)
+        .add(stats.groups);
+    m.counter("serve_decode_steps_total", "batched decode-step iterations", labels)
+        .add(stats.decode_steps);
+    let h = m.histogram(
+        "serve_latency_ms",
+        "end-to-end request latency (admission to completion)",
+        labels,
+        &LATENCY_MS_BUCKETS,
+    );
+    for &l in &stats.latencies_s {
+        h.observe(l * 1e3);
+    }
+    if !stats.fills.is_empty() {
+        let mean = stats.fills.iter().sum::<f64>() / stats.fills.len() as f64;
+        m.gauge("coalesce_batch_fill", "mean batch-fill ratio of the last run", labels)
+            .set(mean);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenant scheduler: registry-routed admission, per-tenant caps,
+// deficit-round-robin dispatch.
+// ---------------------------------------------------------------------------
+
+/// One completed request on the multi-tenant scheduler: the tenant and
+/// model generation it decoded under, plus the usual [`Response`].
+#[derive(Debug, Clone)]
+pub struct TenantResponse {
+    /// Tenant the request was submitted to.
+    pub tenant: String,
+    /// Model generation the tokens were decoded under — pinned at
+    /// admission, so a hot-swap mid-flight never changes it.
+    pub generation: u64,
+    /// The decode result and timing.
+    pub response: Response,
+}
+
+/// Per-tenant admission/latency accounting for one run.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    /// Submissions addressed to this tenant.
+    pub submitted: u64,
+    /// Admitted past both the tenant cap and the global bound.
+    pub accepted: u64,
+    /// Refused with [`SubmitError::TenantOverQueue`] (the per-tenant
+    /// shed count `BENCH_serve.json` reports).
+    pub shed: u64,
+    /// Responses delivered.
+    pub completed: u64,
+    /// End-to-end latencies of the completed requests, seconds.
+    pub latencies_s: Vec<f64>,
+    /// HyperLogLog estimate of distinct submitting users this run.
+    pub distinct_users_est: f64,
+}
+
+impl TenantStats {
+    /// Nearest-rank latency percentile in milliseconds.
+    pub fn latency_pctl_ms(&self, q: f64) -> f64 {
+        let mut xs = self.latencies_s.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::percentile_sorted(&xs, q) * 1e3
+    }
+}
+
+#[derive(Default)]
+struct Lane {
+    submitted: u64,
+    accepted: u64,
+    shed: u64,
+}
+
+struct MtPending {
+    tenant: String,
+    generation: u64,
+    p: Pending,
+}
+
+struct MtSub {
+    q: VecDeque<MtPending>,
+    closed: bool,
+}
+
+struct MtDispatch {
+    drr: Drr<TenantGroup>,
+    closed: bool,
+}
+
+#[derive(Default)]
+struct MtCollected {
+    responses: Vec<TenantResponse>,
+    fills: Vec<f64>,
+    wastes: Vec<f64>,
+    queue_delays: Vec<f64>,
+    groups: u64,
+    deadline_groups: u64,
+}
+
+/// State shared by the driver, the mt coalescer thread and the
+/// replicas. `'r` is the registry borrow: admission pins live in
+/// `pins` (keyed by request id) until the response is recorded, which
+/// is exactly the drain gate hot-swap waits on.
+struct MtShared<'r> {
+    t0: Instant,
+    dims: ModelDims,
+    capacity: usize,
+    registry: &'r TenantRegistry,
+    in_flight: AtomicU64,
+    tenant_inflight: Mutex<BTreeMap<String, u64>>,
+    pins: Mutex<BTreeMap<u64, PinnedGen<'r>>>,
+    users: Mutex<BTreeMap<String, Hll>>,
+    lanes: Mutex<BTreeMap<String, Lane>>,
+    sub: Mutex<MtSub>,
+    sub_cv: Condvar,
+    disp: Mutex<MtDispatch>,
+    disp_cv: Condvar,
+    collect: Mutex<MtCollected>,
+    depth_samples: Mutex<Vec<u64>>,
+    submitted: AtomicU64,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    invalid: AtomicU64,
+    decode_steps: AtomicU64,
+    failed: AtomicBool,
+    error: Mutex<Option<anyhow::Error>>,
+}
+
+impl MtShared<'_> {
+    fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn close_submissions(&self) {
+        let mut sub = self.sub.lock().unwrap();
+        sub.closed = true;
+        self.sub_cv.notify_all();
+    }
+
+    fn close_dispatch(&self) {
+        let mut d = self.disp.lock().unwrap();
+        d.closed = true;
+        self.disp_cv.notify_all();
+    }
+
+    fn fail(&self, e: anyhow::Error) {
+        {
+            let mut slot = self.error.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+        self.failed.store(true, Ordering::SeqCst);
+        self.close_submissions();
+        self.close_dispatch();
+    }
+}
+
+/// Submission handle for the multi-tenant scheduler: requests are
+/// addressed to a tenant and carry a user identity (for the per-tenant
+/// distinct-user estimate).
+pub struct TenantServerHandle<'s, 'r> {
+    shared: &'s MtShared<'r>,
+}
+
+impl<'r> TenantServerHandle<'_, 'r> {
+    /// Submit one request to `tenant`. Admission runs three gates in
+    /// order — tenant resolution ([`SubmitError::UnknownTenant`]), the
+    /// tenant's own cap ([`SubmitError::TenantOverQueue`]), the global
+    /// bound ([`SubmitError::QueueFull`]) — and on success pins the
+    /// tenant's *current* model generation: the response decodes under
+    /// it even if a hot-swap lands first.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        id: u64,
+        user: u64,
+        src: Vec<i32>,
+    ) -> Result<(), SubmitError> {
+        let sh = self.shared;
+        sh.submitted.fetch_add(1, Ordering::Relaxed);
+        sh.lanes.lock().unwrap().entry(tenant.to_string()).or_default().submitted += 1;
+        if let Err(e) = check_src(&sh.dims, &src) {
+            sh.invalid.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Invalid(e));
+        }
+        // Pin before the queue lock: the pin fixes the generation this
+        // request will decode under; it is dropped on any refusal.
+        let pin = match sh.registry.pin(tenant) {
+            Some(p) => p,
+            None => return Err(SubmitError::UnknownTenant { tenant: tenant.to_string() }),
+        };
+        let generation = pin.generation();
+        let cap = sh
+            .registry
+            .opts_of(tenant)
+            .map(|o| o.queue_cap.max(1))
+            .unwrap_or(1);
+        let mut sub = sh.sub.lock().unwrap();
+        if sub.closed || sh.failed.load(Ordering::Relaxed) {
+            return Err(SubmitError::Closed);
+        }
+        let mut tin = sh.tenant_inflight.lock().unwrap();
+        let t_depth = tin.entry(tenant.to_string()).or_insert(0);
+        if *t_depth >= cap as u64 {
+            sh.lanes.lock().unwrap().entry(tenant.to_string()).or_default().shed += 1;
+            return Err(SubmitError::TenantOverQueue {
+                tenant: tenant.to_string(),
+                capacity: cap,
+            });
+        }
+        let depth = sh.in_flight.load(Ordering::Relaxed);
+        if depth >= sh.capacity as u64 {
+            sh.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::QueueFull { capacity: sh.capacity });
+        }
+        *t_depth += 1;
+        drop(tin);
+        sh.in_flight.fetch_add(1, Ordering::Relaxed);
+        sh.accepted.fetch_add(1, Ordering::Relaxed);
+        sh.lanes.lock().unwrap().entry(tenant.to_string()).or_default().accepted += 1;
+        sh.depth_samples.lock().unwrap().push(depth);
+        sh.users
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_insert_with(|| Hll::new(DEFAULT_PRECISION))
+            .insert_u64(user);
+        // Mirror into the process-wide sketch so the Prometheus dump
+        // carries a live HLL-backed gauge.
+        Registry::global()
+            .distinct(
+                "serve_distinct_users",
+                "estimated distinct users per tenant (HyperLogLog)",
+                &[("tenant", tenant)],
+                DEFAULT_PRECISION,
+            )
+            .insert_u64(user);
+        sh.pins.lock().unwrap().insert(id, pin);
+        sub.q.push_back(MtPending {
+            tenant: tenant.to_string(),
+            generation,
+            p: Pending { id, src, t_submit: sh.now_s() },
+        });
+        sh.sub_cv.notify_all();
+        Ok(())
+    }
+
+    /// Requests currently in flight across all tenants.
+    pub fn in_flight(&self) -> u64 {
+        self.shared.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently in flight for one tenant.
+    pub fn tenant_in_flight(&self, tenant: &str) -> u64 {
+        *self
+            .shared
+            .tenant_inflight
+            .lock()
+            .unwrap()
+            .get(tenant)
+            .unwrap_or(&0)
+    }
+
+    /// Seconds since the server started.
+    pub fn elapsed_s(&self) -> f64 {
+        self.shared.now_s()
+    }
+
+    /// The tenant registry — hot-swap and attach/detach mid-run go
+    /// through here (e.g. `handle.registry().swap(...)`).
+    pub fn registry(&self) -> &'r TenantRegistry {
+        self.shared.registry
+    }
+}
+
+struct MtCloseGuard<'a, 'r>(&'a MtShared<'r>);
+
+impl Drop for MtCloseGuard<'_, '_> {
+    fn drop(&mut self) {
+        self.0.close_submissions();
+    }
+}
+
+fn run_mt_coalescer(shared: &MtShared<'_>, mut co: MtCoalescer) {
+    loop {
+        let (drained, closed) = {
+            let mut sub = shared.sub.lock().unwrap();
+            loop {
+                if !sub.q.is_empty() || sub.closed || shared.failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                match co.next_deadline() {
+                    None => sub = shared.sub_cv.wait(sub).unwrap(),
+                    Some(d) => {
+                        let left = d - shared.now_s();
+                        if left <= 0.0 {
+                            break;
+                        }
+                        let (s, _) = shared
+                            .sub_cv
+                            .wait_timeout(sub, Duration::from_secs_f64(left))
+                            .unwrap();
+                        sub = s;
+                        break;
+                    }
+                }
+            }
+            (sub.q.drain(..).collect::<Vec<MtPending>>(), sub.closed)
+        };
+        if shared.failed.load(Ordering::Relaxed) {
+            shared.close_dispatch();
+            return;
+        }
+        let mut groups: Vec<TenantGroup> = Vec::new();
+        for mp in drained {
+            if let Some(g) = co.push(&mp.tenant, mp.generation, mp.p) {
+                groups.push(g);
+            }
+        }
+        let expired = co.flush_expired(shared.now_s());
+        shared.collect.lock().unwrap().deadline_groups += expired.len() as u64;
+        groups.extend(expired);
+        if closed {
+            groups.extend(co.drain());
+        }
+        if !groups.is_empty() {
+            let mut d = shared.disp.lock().unwrap();
+            for g in groups {
+                let w = shared
+                    .registry
+                    .opts_of(&g.tenant)
+                    .map(|o| o.weight.max(1))
+                    .unwrap_or(1);
+                d.drr.set_weight(&g.tenant, w);
+                let cost = g.group.reqs.len() as u64;
+                let tenant = g.tenant.clone();
+                d.drr.enqueue(&tenant, g, cost);
+            }
+            shared.disp_cv.notify_all();
+        }
+        if closed && co.pending() == 0 {
+            shared.close_dispatch();
+            return;
+        }
+    }
+}
+
+fn run_mt_replica(
+    shared: &MtShared<'_>,
+    engine: &Engine,
+    input_feeding: bool,
+    cfg: &BeamConfig,
+) {
+    loop {
+        let tg = {
+            let mut d = shared.disp.lock().unwrap();
+            loop {
+                if shared.failed.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some((_, tg)) = d.drr.pop() {
+                    break tg;
+                }
+                if d.closed {
+                    return;
+                }
+                d = shared.disp_cv.wait(d).unwrap();
+            }
+        };
+        let t_pick = shared.now_s();
+        // Resolve the pinned model: every request in the group carries
+        // the same (tenant, generation), so the first id's pin is the
+        // group's model. Cloning the Arc keeps the parameters alive for
+        // this decode even if the pins drop concurrently — release
+        // still cannot precede the last use.
+        let model = {
+            let pins = shared.pins.lock().unwrap();
+            match pins.get(&tg.group.reqs[0].id) {
+                Some(p) => p.model().clone(),
+                None => {
+                    drop(pins);
+                    shared.fail(anyhow!(
+                        "group for tenant `{}` gen {} lost its admission pin",
+                        tg.tenant,
+                        tg.generation
+                    ));
+                    return;
+                }
+            }
+        };
+        let decoder = match BatchDecoder::new(engine, model.params(), model.bank(), input_feeding)
+        {
+            Ok(d) => d,
+            Err(e) => {
+                shared.fail(anyhow!("replica decoder for `{}`: {e:#}", tg.tenant));
+                return;
+            }
+        };
+        let srcs: Vec<Vec<i32>> = tg.group.reqs.iter().map(|p| p.src.clone()).collect();
+        match decoder.translate_batch(&srcs, cfg) {
+            Ok(hyps) => {
+                let t_done = shared.now_s();
+                let steps = decoder.decode_steps();
+                shared.decode_steps.fetch_add(steps, Ordering::Relaxed);
+                let used: u64 = hyps
+                    .iter()
+                    .map(|h| (h.len() as u64 + 1).min(steps.max(1)))
+                    .sum();
+                let total = steps.max(1) * hyps.len().max(1) as u64;
+                let waste = (1.0 - used as f64 / total as f64).clamp(0.0, 1.0);
+                let n_done = tg.group.reqs.len() as u64;
+                {
+                    let mut c = shared.collect.lock().unwrap();
+                    c.groups += 1;
+                    c.fills.push(tg.group.fill_ratio());
+                    c.wastes.push(waste);
+                    for (p, tokens) in tg.group.reqs.iter().zip(hyps) {
+                        c.queue_delays.push(t_pick - p.t_submit);
+                        c.responses.push(TenantResponse {
+                            tenant: tg.tenant.clone(),
+                            generation: tg.generation,
+                            response: Response {
+                                id: p.id,
+                                tokens,
+                                latency_s: t_done - p.t_submit,
+                                queue_delay_s: t_pick - p.t_submit,
+                                replica: 0,
+                            },
+                        });
+                    }
+                }
+                shared.in_flight.fetch_sub(n_done, Ordering::Relaxed);
+                {
+                    let mut tin = shared.tenant_inflight.lock().unwrap();
+                    if let Some(d) = tin.get_mut(&tg.tenant) {
+                        *d = d.saturating_sub(n_done);
+                    }
+                }
+                // Responses are recorded: release the admission pins.
+                // This is the drain edge hot-swap waits on — it must
+                // come last.
+                {
+                    let mut pins = shared.pins.lock().unwrap();
+                    for p in &tg.group.reqs {
+                        pins.remove(&p.id);
+                    }
+                }
+            }
+            Err(e) => {
+                shared.fail(anyhow!("tenant `{}` decode: {e:#}", tg.tenant));
+                return;
+            }
+        }
+    }
+}
+
+/// Run the multi-tenant serving scheduler for the lifetime of `driver`.
+///
+/// Like [`run_server`], but requests are routed through a
+/// [`TenantRegistry`]: admission pins the tenant's current model
+/// generation, groups are coalesced per (tenant, generation) — so a
+/// hot-swap mid-run never drops a response or mixes parameters — and
+/// groups dispatch to `opts.replicas` decode replicas through a
+/// deficit-round-robin scheduler weighted by
+/// [`TenantOpts::weight`](super::tenant::TenantOpts::weight), so a hot
+/// tenant cannot starve a cold one. At least one tenant must already
+/// be attached (its model probes the packed decode width).
+///
+/// Returns the driver's output, every response (sorted by request id)
+/// tagged with its tenant and generation, the run's aggregate
+/// [`ServeStats`], and the per-tenant [`TenantStats`] rows.
+pub fn run_tenant_server<'r, R>(
+    engine: &Engine,
+    registry: &'r TenantRegistry,
+    input_feeding: bool,
+    cfg: &BeamConfig,
+    opts: &ServeOptions,
+    driver: impl FnOnce(&TenantServerHandle<'_, 'r>) -> Result<R>,
+) -> Result<(R, Vec<TenantResponse>, ServeStats, BTreeMap<String, TenantStats>)> {
+    let replicas = opts.replicas.max(1);
+    let capacity = {
+        let first = registry
+            .tenants()
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("attach at least one tenant before serving"))?;
+        let pin = registry
+            .pin(&first)
+            .ok_or_else(|| anyhow!("tenant `{first}` detached during startup"))?;
+        let probe = BatchDecoder::new(engine, pin.model().params(), pin.model().bank(), input_feeding)?;
+        let width = probe.width();
+        if cfg.beam == 0 || cfg.beam > width {
+            return Err(anyhow!(
+                "beam {} outside the packed decode width 1..={width}",
+                cfg.beam
+            ));
+        }
+        probe.group_capacity(cfg.beam)
+    };
+
+    let shared = MtShared {
+        t0: Instant::now(),
+        dims: engine.dims().clone(),
+        capacity: opts.queue_capacity.max(1),
+        registry,
+        in_flight: AtomicU64::new(0),
+        tenant_inflight: Mutex::new(BTreeMap::new()),
+        pins: Mutex::new(BTreeMap::new()),
+        users: Mutex::new(BTreeMap::new()),
+        lanes: Mutex::new(BTreeMap::new()),
+        sub: Mutex::new(MtSub { q: VecDeque::new(), closed: false }),
+        sub_cv: Condvar::new(),
+        disp: Mutex::new(MtDispatch {
+            drr: Drr::new(capacity as u64),
+            closed: false,
+        }),
+        disp_cv: Condvar::new(),
+        collect: Mutex::new(MtCollected::default()),
+        depth_samples: Mutex::new(Vec::new()),
+        submitted: AtomicU64::new(0),
+        accepted: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        invalid: AtomicU64::new(0),
+        decode_steps: AtomicU64::new(0),
+        failed: AtomicBool::new(false),
+        error: Mutex::new(None),
+    };
+
+    let driver_out = std::thread::scope(|s| {
+        let sh = &shared;
+        let co = MtCoalescer::new(capacity, opts.bucket_width, opts.max_wait_ms.max(0.0) / 1e3);
+        s.spawn(move || run_mt_coalescer(sh, co));
+        for _ in 0..replicas {
+            s.spawn(move || run_mt_replica(sh, engine, input_feeding, cfg));
+        }
+        let _close = MtCloseGuard(sh);
+        driver(&TenantServerHandle { shared: sh })
+    });
+
+    if let Some(e) = shared.error.lock().unwrap().take() {
+        return Err(e);
+    }
+    let driver_out = driver_out?;
+
+    let wall_s = shared.now_s();
+    let collected = shared.collect.into_inner().unwrap();
+    let mut responses = collected.responses;
+    responses.sort_by_key(|r| r.response.id);
+    let users = shared.users.into_inner().unwrap();
+    let lanes = shared.lanes.into_inner().unwrap();
+    let mut per_tenant: BTreeMap<String, TenantStats> = BTreeMap::new();
+    for (t, lane) in lanes {
+        let latencies_s: Vec<f64> = responses
+            .iter()
+            .filter(|r| r.tenant == t)
+            .map(|r| r.response.latency_s)
+            .collect();
+        per_tenant.insert(
+            t.clone(),
+            TenantStats {
+                submitted: lane.submitted,
+                accepted: lane.accepted,
+                shed: lane.shed,
+                completed: latencies_s.len() as u64,
+                latencies_s,
+                distinct_users_est: users.get(&t).map_or(0.0, |h| h.estimate()),
+            },
+        );
+    }
+
+    let stats = ServeStats {
+        submitted: shared.submitted.load(Ordering::Relaxed),
+        accepted: shared.accepted.load(Ordering::Relaxed),
+        rejected: shared.rejected.load(Ordering::Relaxed),
+        invalid: shared.invalid.load(Ordering::Relaxed),
+        completed: responses.len() as u64,
+        out_tokens: responses.iter().map(|r| r.response.tokens.len()).sum(),
+        groups: collected.groups,
+        stolen_groups: 0,
+        decode_steps: shared.decode_steps.load(Ordering::Relaxed),
+        wall_s,
+        latencies_s: responses.iter().map(|r| r.response.latency_s).collect(),
+        queue_delays_s: collected.queue_delays,
+        fills: collected.fills,
+        wastes: collected.wastes,
+        depth_samples: shared.depth_samples.into_inner().unwrap(),
+    };
+
+    let m = Registry::global();
+    m.counter(
+        "coalesce_deadline_flush_total",
+        "groups shipped by the max-wait deadline rather than group-full",
+        &[],
+    )
+    .add(collected.deadline_groups);
+    m.counter("serve_groups_total", "coalesced groups decoded", &[])
+        .add(stats.groups);
+    m.counter("serve_decode_steps_total", "batched decode-step iterations", &[])
+        .add(stats.decode_steps);
+    for (t, ts) in &per_tenant {
+        let labels = &[("tenant", t.as_str())];
+        m.counter("serve_submitted_total", "requests submitted to the serve scheduler", labels)
+            .add(ts.submitted);
+        m.counter("serve_accepted_total", "requests admitted past backpressure", labels)
+            .add(ts.accepted);
+        m.counter("tenant_shed_total", "per-tenant admissions refused over the tenant cap", labels)
+            .add(ts.shed);
+        m.counter("serve_completed_total", "responses delivered", labels)
+            .add(ts.completed);
+        let h = m.histogram(
+            "serve_latency_ms",
+            "end-to-end request latency (admission to completion)",
+            labels,
+            &LATENCY_MS_BUCKETS,
+        );
+        for &l in &ts.latencies_s {
+            h.observe(l * 1e3);
+        }
+    }
+    for t in registry.tenants() {
+        if let Some(pin) = registry.pin(&t) {
+            m.gauge(
+                "tenant_resident_bytes",
+                "device bytes resident for the tenant's current model generation",
+                &[("tenant", &t)],
+            )
+            .set(pin.model().bank().resident_bytes() as f64);
+        }
+    }
+
+    Ok((driver_out, responses, stats, per_tenant))
 }

@@ -1,0 +1,507 @@
+//! Tenant registry: many resident models behind one serving fleet,
+//! with attach / detach / hot-swap lifecycle.
+//!
+//! "Millions of users" means many language pairs and model versions,
+//! not one checkpoint. A *tenant* is a model id mapped to a resident
+//! parameter set (a `BTreeMap<String, Tensor>` plus the
+//! [`ParamBank`] holding its device buffers — the pair
+//! [`crate::train::checkpoint::load_resident`] produces). The registry
+//! owns these and hands the scheduler immutable, generation-stamped
+//! snapshots:
+//!
+//! * **attach** — register a new tenant at a fresh generation;
+//! * **hot-swap** — install a new parameter set for a live tenant.
+//!   The new generation serves every request admitted *after* the
+//!   swap; requests admitted before keep decoding under the old one
+//!   (groups are coalesced per generation — see
+//!   [`super::coalesce::MtCoalescer`]) so no response is ever dropped
+//!   or mixes parameters from two generations;
+//! * **detach** — remove a tenant; in-flight work drains first.
+//!
+//! The drain protocol is a pin count per generation: the scheduler
+//! [`pin`](TenantRegistry::pin)s the current generation at admission
+//! and the pin is released when the request completes (or is shed).
+//! A retired generation (swapped out or detached) moves to a draining
+//! list while pins remain; the registry drops its strong reference —
+//! releasing the [`ParamBank`] device buffers — only when the pin
+//! count reaches zero. Memory safety never depends on that protocol
+//! (generations live behind `Arc`s, so a use-after-release cannot be
+//! expressed); the pin count is what makes the release *observable and
+//! testable*: [`ModelGen::release_probe`] flips exactly when the last
+//! reference goes, and `rust/tests/tenant_serving.rs` asserts it flips
+//! only after the drain.
+//!
+//! Per-tenant scheduling policy (admission cap, DRR weight) lives here
+//! too, so the scheduler reads one source of truth.
+
+use crate::metrics::Registry;
+use crate::runtime::ParamBank;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One immutable generation of one tenant's model: the parameters and
+/// their resident device buffers, stamped with a registry-unique
+/// generation number.
+pub struct ModelGen {
+    tenant: String,
+    generation: u64,
+    params: BTreeMap<String, Tensor>,
+    bank: ParamBank,
+    /// Flips (via `Drop`) when the generation's buffers are released —
+    /// the test probe behind the release-only-after-drain guarantee.
+    released: Arc<AtomicBool>,
+}
+
+impl ModelGen {
+    /// Tenant this generation belongs to.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Registry-unique generation number (monotone across tenants).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The parameter tensors.
+    pub fn params(&self) -> &BTreeMap<String, Tensor> {
+        &self.params
+    }
+
+    /// The resident device-buffer bank.
+    pub fn bank(&self) -> &ParamBank {
+        &self.bank
+    }
+
+    /// A handle that turns true exactly when this generation's
+    /// buffers are released (its `Drop` ran).
+    pub fn release_probe(&self) -> Arc<AtomicBool> {
+        self.released.clone()
+    }
+}
+
+impl Drop for ModelGen {
+    fn drop(&mut self) {
+        // The bank (and its DeviceBufs) drop right after this marker:
+        // observing `released == true` means the old generation's
+        // buffers are gone.
+        self.released.store(true, Ordering::SeqCst);
+    }
+}
+
+impl std::fmt::Debug for ModelGen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ModelGen({} gen {}, {} params)",
+            self.tenant,
+            self.generation,
+            self.params.len()
+        )
+    }
+}
+
+/// Per-tenant scheduling policy, fixed at attach.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantOpts {
+    /// Admission cap on this tenant's in-flight requests; submissions
+    /// beyond it get `SubmitError::TenantOverQueue`.
+    pub queue_cap: usize,
+    /// DRR weight (quantum multiplier; 2 ⇒ twice the fair share).
+    pub weight: u64,
+}
+
+impl Default for TenantOpts {
+    fn default() -> Self {
+        TenantOpts { queue_cap: 64, weight: 1 }
+    }
+}
+
+struct GenSlot {
+    model: Arc<ModelGen>,
+    /// Outstanding scheduler pins on this generation.
+    pins: u64,
+}
+
+struct TenantEntry {
+    current: GenSlot,
+    opts: TenantOpts,
+}
+
+#[derive(Default)]
+struct Inner {
+    tenants: BTreeMap<String, TenantEntry>,
+    /// Retired generations still pinned by in-flight work.
+    draining: Vec<GenSlot>,
+    next_gen: u64,
+}
+
+/// The tenant registry (see module docs). Shared by reference across
+/// the scheduler's threads; all state behind one mutex, with a condvar
+/// signalling drain completion.
+#[derive(Default)]
+pub struct TenantRegistry {
+    inner: Mutex<Inner>,
+    drained: Condvar,
+}
+
+/// A pinned generation: holds the model alive *and* holds the drain
+/// gate open until dropped. Obtained from [`TenantRegistry::pin`] at
+/// admission; the scheduler keeps one per in-flight request.
+pub struct PinnedGen<'r> {
+    model: Arc<ModelGen>,
+    reg: &'r TenantRegistry,
+}
+
+impl PinnedGen<'_> {
+    /// The pinned generation's model (clone the `Arc` to hand a replica
+    /// decode-duration access without extending the drain gate).
+    pub fn model(&self) -> &Arc<ModelGen> {
+        &self.model
+    }
+
+    /// Generation number this pin is for.
+    pub fn generation(&self) -> u64 {
+        self.model.generation
+    }
+}
+
+impl Drop for PinnedGen<'_> {
+    fn drop(&mut self) {
+        self.reg.unpin(&self.model);
+    }
+}
+
+impl TenantRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn gauge_generation(tenant: &str, generation: u64) {
+        Registry::global()
+            .gauge(
+                "tenant_generation",
+                "current model generation per tenant",
+                &[("tenant", tenant)],
+            )
+            .set(generation as f64);
+    }
+
+    /// Attach a new tenant at a fresh generation. `params`/`bank` are
+    /// the resident pair from
+    /// [`load_resident`](crate::train::checkpoint::load_resident) (or
+    /// an un-primed `ParamBank::new()` — buffers then upload lazily on
+    /// the tenant's first decode). Errors if the id is already
+    /// attached. Returns the generation number.
+    pub fn attach(
+        &self,
+        id: &str,
+        params: BTreeMap<String, Tensor>,
+        bank: ParamBank,
+        opts: TenantOpts,
+    ) -> Result<u64> {
+        if id.is_empty() {
+            return Err(anyhow!("tenant id must not be empty"));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.tenants.contains_key(id) {
+            return Err(anyhow!("tenant `{id}` is already attached (swap instead?)"));
+        }
+        inner.next_gen += 1;
+        let generation = inner.next_gen;
+        let model = Arc::new(ModelGen {
+            tenant: id.to_string(),
+            generation,
+            params,
+            bank,
+            released: Arc::new(AtomicBool::new(false)),
+        });
+        inner.tenants.insert(
+            id.to_string(),
+            TenantEntry { current: GenSlot { model, pins: 0 }, opts },
+        );
+        drop(inner);
+        Registry::global()
+            .counter("tenant_attach_total", "tenant attach operations", &[])
+            .inc();
+        Self::gauge_generation(id, generation);
+        Ok(generation)
+    }
+
+    /// Hot-swap a live tenant to a new parameter set. The new
+    /// generation takes over for all requests admitted from now on;
+    /// the old one drains (in-flight pins finish) and only then is its
+    /// bank released. Errors on an unknown tenant. Returns the new
+    /// generation number.
+    pub fn swap(
+        &self,
+        id: &str,
+        params: BTreeMap<String, Tensor>,
+        bank: ParamBank,
+    ) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.tenants.contains_key(id) {
+            return Err(anyhow!("cannot swap unknown tenant `{id}`"));
+        }
+        inner.next_gen += 1;
+        let generation = inner.next_gen;
+        let model = Arc::new(ModelGen {
+            tenant: id.to_string(),
+            generation,
+            params,
+            bank,
+            released: Arc::new(AtomicBool::new(false)),
+        });
+        let entry = inner.tenants.get_mut(id).expect("checked above");
+        let old = std::mem::replace(&mut entry.current, GenSlot { model, pins: 0 });
+        Self::retire(&mut inner, old);
+        drop(inner);
+        Registry::global()
+            .counter("tenant_swap_total", "tenant hot-swap operations", &[])
+            .inc();
+        Self::gauge_generation(id, generation);
+        Ok(generation)
+    }
+
+    /// Detach a tenant: no new admissions resolve it, in-flight work
+    /// drains, then its current generation's buffers are released.
+    pub fn detach(&self, id: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner
+            .tenants
+            .remove(id)
+            .ok_or_else(|| anyhow!("cannot detach unknown tenant `{id}`"))?;
+        Self::retire(&mut inner, entry.current);
+        drop(inner);
+        Registry::global()
+            .counter("tenant_detach_total", "tenant detach operations", &[])
+            .inc();
+        Ok(())
+    }
+
+    /// Move a no-longer-current generation toward release: drop it now
+    /// if unpinned, park it on the draining list otherwise.
+    fn retire(inner: &mut Inner, slot: GenSlot) {
+        if slot.pins > 0 {
+            inner.draining.push(slot);
+        }
+        // pins == 0: `slot` drops here — the registry's strong
+        // reference goes and (absent transient replica Arcs) the
+        // bank's device buffers are released immediately.
+    }
+
+    /// Pin `id`'s current generation (admission-time). `None` for an
+    /// unknown/detached tenant — the scheduler turns that into
+    /// `SubmitError::UnknownTenant`.
+    pub fn pin(&self, id: &str) -> Option<PinnedGen<'_>> {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner.tenants.get_mut(id)?;
+        entry.current.pins += 1;
+        let model = entry.current.model.clone();
+        Some(PinnedGen { model, reg: self })
+    }
+
+    /// Release one pin (from `PinnedGen::drop`). When the last pin of
+    /// a *retired* generation goes, the registry drops its reference
+    /// and wakes [`wait_drained`](Self::wait_drained) waiters.
+    fn unpin(&self, model: &Arc<ModelGen>) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(entry) = inner.tenants.get_mut(&model.tenant) {
+            if entry.current.model.generation == model.generation {
+                entry.current.pins = entry.current.pins.saturating_sub(1);
+                return;
+            }
+        }
+        if let Some(i) = inner
+            .draining
+            .iter()
+            .position(|s| s.model.generation == model.generation)
+        {
+            inner.draining[i].pins = inner.draining[i].pins.saturating_sub(1);
+            if inner.draining[i].pins == 0 {
+                inner.draining.swap_remove(i);
+                self.drained.notify_all();
+            }
+        }
+    }
+
+    /// Retired generations still pinned by in-flight work.
+    pub fn draining_len(&self) -> usize {
+        self.inner.lock().unwrap().draining.len()
+    }
+
+    /// Block until every retired generation has drained (pin count
+    /// zero ⇒ buffers released), or `timeout` elapses. Returns whether
+    /// the drain completed.
+    pub fn wait_drained(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        while !inner.draining.is_empty() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (g, _) = self.drained.wait_timeout(inner, left).unwrap();
+            inner = g;
+        }
+        true
+    }
+
+    /// Attached tenant ids, sorted.
+    pub fn tenants(&self) -> Vec<String> {
+        self.inner.lock().unwrap().tenants.keys().cloned().collect()
+    }
+
+    /// Current generation of `id`, if attached.
+    pub fn generation_of(&self, id: &str) -> Option<u64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .tenants
+            .get(id)
+            .map(|e| e.current.model.generation)
+    }
+
+    /// Scheduling policy of `id`, if attached.
+    pub fn opts_of(&self, id: &str) -> Option<TenantOpts> {
+        self.inner.lock().unwrap().tenants.get(id).map(|e| e.opts)
+    }
+
+    /// Outstanding pins on `id`'s *current* generation.
+    pub fn pins_of(&self, id: &str) -> Option<u64> {
+        self.inner.lock().unwrap().tenants.get(id).map(|e| e.current.pins)
+    }
+}
+
+impl std::fmt::Debug for TenantRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        write!(
+            f,
+            "TenantRegistry({} tenants, {} draining)",
+            inner.tenants.len(),
+            inner.draining.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg_with(ids: &[&str]) -> TenantRegistry {
+        let r = TenantRegistry::new();
+        for id in ids {
+            r.attach(id, BTreeMap::new(), ParamBank::new(), TenantOpts::default())
+                .unwrap();
+        }
+        r
+    }
+
+    #[test]
+    fn attach_is_unique_and_generations_are_monotone() {
+        let r = reg_with(&["a", "b"]);
+        assert_eq!(r.tenants(), vec!["a".to_string(), "b".to_string()]);
+        let ga = r.generation_of("a").unwrap();
+        let gb = r.generation_of("b").unwrap();
+        assert!(gb > ga, "generations are registry-unique and monotone");
+        assert!(r.attach("a", BTreeMap::new(), ParamBank::new(), TenantOpts::default())
+            .is_err());
+        assert!(r.attach("", BTreeMap::new(), ParamBank::new(), TenantOpts::default())
+            .is_err());
+    }
+
+    #[test]
+    fn swap_bumps_generation_and_releases_unpinned_old_immediately() {
+        let r = reg_with(&["a"]);
+        let g1 = r.generation_of("a").unwrap();
+        let probe = r.pin("a").unwrap().model().release_probe();
+        // Pin dropped above (temporary) — old gen has zero pins.
+        assert!(!probe.load(Ordering::SeqCst));
+        let g2 = r.swap("a", BTreeMap::new(), ParamBank::new()).unwrap();
+        assert!(g2 > g1);
+        assert_eq!(r.generation_of("a"), Some(g2));
+        assert!(probe.load(Ordering::SeqCst), "unpinned old gen released at swap");
+        assert_eq!(r.draining_len(), 0);
+        assert!(r.swap("nope", BTreeMap::new(), ParamBank::new()).is_err());
+    }
+
+    #[test]
+    fn pinned_old_generation_drains_before_release() {
+        let r = reg_with(&["a"]);
+        let pin = r.pin("a").unwrap();
+        let probe = pin.model().release_probe();
+        let g1 = pin.generation();
+        r.swap("a", BTreeMap::new(), ParamBank::new()).unwrap();
+        // Old generation retired but pinned: parked, not released.
+        assert_eq!(r.draining_len(), 1);
+        assert!(!probe.load(Ordering::SeqCst), "pinned old gen must survive the swap");
+        assert!(!r.wait_drained(Duration::from_millis(10)), "drain cannot finish while pinned");
+        // New admissions see the new generation.
+        let pin2 = r.pin("a").unwrap();
+        assert!(pin2.generation() > g1);
+        drop(pin2);
+        drop(pin);
+        assert!(r.wait_drained(Duration::from_secs(5)));
+        assert_eq!(r.draining_len(), 0);
+        assert!(probe.load(Ordering::SeqCst), "released exactly after the last unpin");
+    }
+
+    #[test]
+    fn detach_while_pinned_drains_cleanly() {
+        let r = reg_with(&["a", "b"]);
+        let pin = r.pin("a").unwrap();
+        let probe = pin.model().release_probe();
+        r.detach("a").unwrap();
+        // Gone from the routing table immediately...
+        assert!(r.pin("a").is_none());
+        assert_eq!(r.tenants(), vec!["b".to_string()]);
+        // ...but the generation survives until its pin drops.
+        assert!(!probe.load(Ordering::SeqCst));
+        assert_eq!(r.draining_len(), 1);
+        drop(pin);
+        assert!(probe.load(Ordering::SeqCst));
+        assert_eq!(r.draining_len(), 0);
+        assert!(r.detach("a").is_err(), "double detach is an error");
+    }
+
+    #[test]
+    fn replica_arcs_do_not_hold_the_drain_gate() {
+        // A replica clones the Arc for the decode call; the drain gate
+        // tracks pins, not Arcs — but release (the probe) waits for
+        // the last Arc, so a transient replica clone delays the probe,
+        // never the registry bookkeeping.
+        let r = reg_with(&["a"]);
+        let pin = r.pin("a").unwrap();
+        let replica_arc = pin.model().clone();
+        let probe = replica_arc.release_probe();
+        r.swap("a", BTreeMap::new(), ParamBank::new()).unwrap();
+        drop(pin);
+        assert_eq!(r.draining_len(), 0, "registry let go at the last unpin");
+        assert!(!probe.load(Ordering::SeqCst), "replica still holds the model");
+        drop(replica_arc);
+        assert!(probe.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn pins_count_per_generation() {
+        let r = reg_with(&["a"]);
+        let p1 = r.pin("a").unwrap();
+        let p2 = r.pin("a").unwrap();
+        assert_eq!(r.pins_of("a"), Some(2));
+        drop(p1);
+        assert_eq!(r.pins_of("a"), Some(1));
+        r.swap("a", BTreeMap::new(), ParamBank::new()).unwrap();
+        // The new current generation starts unpinned; p2 pins the
+        // draining one.
+        assert_eq!(r.pins_of("a"), Some(0));
+        assert_eq!(r.draining_len(), 1);
+        drop(p2);
+        assert_eq!(r.draining_len(), 0);
+    }
+}

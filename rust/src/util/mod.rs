@@ -14,6 +14,34 @@ pub fn per_sec(count: f64, secs: f64) -> f64 {
     count / secs.max(1e-9)
 }
 
+/// Nearest-rank order statistic: the index into a sorted sample of
+/// length `n` holding the `q`-quantile, per the *documented* rule
+///
+/// ```text
+///   rank = ⌈q · n⌉ clamped to [1, n],   index = rank − 1
+/// ```
+///
+/// so p99 of n = 100 is element 99 (the 99th smallest), p99 of n = 1
+/// is the only element, and every quantile of a sample is a value that
+/// actually occurred (never an interpolation). `None` for an empty
+/// sample. Every quantile in the codebase — the serve latency
+/// percentiles and the metrics-registry histogram estimate — derives
+/// its rank from this one helper, so the small-sample semantics cannot
+/// drift between call sites.
+pub fn nearest_rank_index(n: usize, q: f64) -> Option<usize> {
+    if n == 0 {
+        return None;
+    }
+    let rank = (q.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    Some(rank.clamp(1, n) - 1)
+}
+
+/// Nearest-rank quantile of an **already-sorted** sample (`q` in
+/// [0, 1]); 0.0 on an empty sample so downstream JSON stays finite.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    nearest_rank_index(sorted.len(), q).map_or(0.0, |i| sorted[i])
+}
+
 /// Extract a human-readable message from a `catch_unwind` payload.
 /// Shared by every worker loop that converts panics into first-error
 /// aborts (`parallel::run_sharded`, `data::prefetch`, the plan
@@ -30,7 +58,46 @@ pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
 
 #[cfg(test)]
 mod tests {
-    use super::{panic_message, per_sec};
+    use super::{nearest_rank_index, panic_message, per_sec, percentile_sorted};
+
+    /// The documented nearest-rank rule at the sample sizes where
+    /// ad-hoc indexing schemes historically misreport: n ∈ {1, 2, 4}
+    /// (where ⌊q·n⌋ or round() pick the wrong element) and n = 100
+    /// (where the rule is unambiguous).
+    #[test]
+    fn nearest_rank_small_sample_semantics() {
+        // n = 1: every quantile is the only element.
+        assert_eq!(nearest_rank_index(1, 0.0), Some(0));
+        assert_eq!(nearest_rank_index(1, 0.5), Some(0));
+        assert_eq!(nearest_rank_index(1, 0.99), Some(0));
+        assert_eq!(nearest_rank_index(1, 1.0), Some(0));
+        // n = 2: p50 = ⌈0.5·2⌉ = rank 1 (the smaller element); p99 the larger.
+        assert_eq!(nearest_rank_index(2, 0.5), Some(0));
+        assert_eq!(nearest_rank_index(2, 0.51), Some(1));
+        assert_eq!(nearest_rank_index(2, 0.99), Some(1));
+        // n = 4: p50 = rank 2, p95/p99 = rank 4.
+        assert_eq!(nearest_rank_index(4, 0.5), Some(1));
+        assert_eq!(nearest_rank_index(4, 0.95), Some(3));
+        assert_eq!(nearest_rank_index(4, 0.99), Some(3));
+        assert_eq!(nearest_rank_index(4, 0.25), Some(0));
+        // n = 100: p99 is the 99th smallest, not the max.
+        assert_eq!(nearest_rank_index(100, 0.99), Some(98));
+        assert_eq!(nearest_rank_index(100, 1.0), Some(99));
+        assert_eq!(nearest_rank_index(100, 0.50), Some(49));
+        // Empty sample and out-of-range q never panic.
+        assert_eq!(nearest_rank_index(0, 0.5), None);
+        assert_eq!(nearest_rank_index(3, -1.0), Some(0));
+        assert_eq!(nearest_rank_index(3, 2.0), Some(2));
+    }
+
+    #[test]
+    fn percentile_sorted_reads_the_ranked_element() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&xs, 0.5), 2.0);
+        assert_eq!(percentile_sorted(&xs, 0.99), 4.0);
+        assert_eq!(percentile_sorted(&[], 0.99), 0.0);
+        assert_eq!(percentile_sorted(&[7.5], 0.01), 7.5);
+    }
 
     #[test]
     fn per_sec_guards_zero_wall() {

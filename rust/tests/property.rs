@@ -615,3 +615,220 @@ fn prop_wire_garbage_never_panics() {
         assert!(wire::decode(&soup).is_err(), "garbage decoded Ok: {soup:?}");
     }
 }
+
+// --------------------------------------- deficit round-robin fairness
+
+use hybridnmt::metrics::hll::DEFAULT_PRECISION;
+use hybridnmt::metrics::Hll;
+use hybridnmt::serve::{Drr, ZipfSampler};
+
+/// Work conservation: for any random mix of queues, items, costs and
+/// weights, `pop` yields an item whenever any queue is non-empty, every
+/// enqueued item comes back exactly once, and each item is returned
+/// under the queue name it was enqueued to.
+#[test]
+fn prop_drr_is_work_conserving_and_lossless() {
+    let mut rng = Rng::new(0xD88_0001);
+    for trial in 0..30 {
+        let quantum = rng.range(1, 9) as u64;
+        let mut drr: Drr<u64> = Drr::new(quantum);
+        let n_queues = rng.range(1, 6);
+        let mut expected: Vec<Vec<u64>> = vec![Vec::new(); n_queues];
+        let mut total = 0usize;
+        for q in 0..n_queues {
+            let name = format!("q{q}");
+            drr.set_weight(&name, rng.range(1, 4) as u64);
+            for _ in 0..rng.range(0, 20) {
+                let item = rng.next_u64();
+                let cost = rng.range(0, 12) as u64; // 0 exercises the ≥1 clamp
+                drr.enqueue(&name, item, cost);
+                expected[q].push(item);
+                total += 1;
+            }
+        }
+        assert_eq!(drr.len(), total, "trial {trial}");
+        let mut got: Vec<Vec<u64>> = vec![Vec::new(); n_queues];
+        for served in 0..total {
+            let (name, item) = drr
+                .pop()
+                .unwrap_or_else(|| panic!("trial {trial}: pop None with {} left", total - served));
+            let q: usize = name[1..].parse().unwrap();
+            got[q].push(item);
+        }
+        assert!(drr.pop().is_none(), "trial {trial}: drained scheduler must return None");
+        assert!(drr.is_empty(), "trial {trial}");
+        // Per-queue FIFO, nothing lost, nothing duplicated.
+        assert_eq!(got, expected, "trial {trial}");
+    }
+}
+
+/// Bounded deficit ⇒ no starvation: at every point of any schedule, a
+/// queue's unspent deficit is below `quantum × weight + max_cost` —
+/// credit cannot be banked without bound, so a backlogged queue is
+/// served at least once every `⌈max_cost / (quantum × weight)⌉` rounds
+/// no matter how hard the other queues flood.
+#[test]
+fn prop_drr_deficit_is_bounded() {
+    let mut rng = Rng::new(0xD88_0002);
+    for trial in 0..25 {
+        let quantum = rng.range(1, 6) as u64;
+        let max_cost = rng.range(1, 10) as u64;
+        let mut drr: Drr<usize> = Drr::new(quantum);
+        let names: Vec<String> = (0..rng.range(2, 5)).map(|q| format!("q{q}")).collect();
+        let mut weights = std::collections::BTreeMap::new();
+        for name in &names {
+            let w = rng.range(1, 4) as u64;
+            drr.set_weight(name, w);
+            weights.insert(name.clone(), w);
+            for i in 0..rng.range(1, 40) {
+                drr.enqueue(name, i, rng.range(1, max_cost as usize + 1) as u64);
+            }
+        }
+        while drr.pop().is_some() {
+            for name in &names {
+                let bound = quantum * weights[name] + max_cost;
+                assert!(
+                    drr.deficit(name) < bound,
+                    "trial {trial}: queue {name} banked deficit {} ≥ bound {bound}",
+                    drr.deficit(name)
+                );
+            }
+        }
+    }
+}
+
+/// A flooding hot tenant cannot starve a cold one: with equal weights
+/// and unit costs, the cold queue's entire (≤ quantum) backlog is
+/// served within the first two rounds — i.e. within `2 × quantum` pops
+/// — even when the hot queue holds 20× the work.
+#[test]
+fn prop_drr_flooding_queue_cannot_starve_the_cold_one() {
+    let mut rng = Rng::new(0xD88_0003);
+    for trial in 0..20 {
+        let quantum = rng.range(2, 9) as u64;
+        let cold_n = rng.range(1, quantum as usize + 1);
+        let mut drr: Drr<u32> = Drr::new(quantum);
+        for i in 0..(20 * quantum) as u32 {
+            drr.enqueue("hot", i, 1);
+        }
+        for i in 0..cold_n as u32 {
+            drr.enqueue("cold", i, 1);
+        }
+        let mut cold_done_at = None;
+        let mut pops = 0usize;
+        while let Some((name, _)) = drr.pop() {
+            pops += 1;
+            if name == "cold" && drr.queue_len("cold") == 0 {
+                cold_done_at = Some(pops);
+                break;
+            }
+        }
+        let done = cold_done_at
+            .unwrap_or_else(|| panic!("trial {trial}: cold queue never fully served"));
+        assert!(
+            done <= 2 * quantum as usize,
+            "trial {trial}: cold backlog of {cold_n} took {done} pops (quantum {quantum})"
+        );
+    }
+}
+
+/// Weights shape the share: with unit costs and both queues saturated,
+/// a weight-2 queue is served exactly twice as often as a weight-1
+/// queue over any whole number of rounds.
+#[test]
+fn prop_drr_weighted_share_is_proportional() {
+    let mut rng = Rng::new(0xD88_0004);
+    for trial in 0..20 {
+        let quantum = rng.range(1, 7) as u64;
+        let mut drr: Drr<u32> = Drr::new(quantum);
+        // Both queues hold far more than the pops we take, so neither
+        // empties (an emptied queue forfeits credit and skews counts).
+        for i in 0..1000u32 {
+            drr.enqueue("heavy", i, 1);
+            drr.enqueue("light", i, 1);
+        }
+        drr.set_weight("heavy", 2);
+        drr.set_weight("light", 1);
+        let rounds = rng.range(2, 8) as u64;
+        let per_round = (3 * quantum) as usize; // 2q heavy + q light
+        let mut heavy = 0u64;
+        let mut light = 0u64;
+        for _ in 0..rounds as usize * per_round {
+            match drr.pop().unwrap().0.as_str() {
+                "heavy" => heavy += 1,
+                _ => light += 1,
+            }
+        }
+        assert_eq!(heavy, 2 * quantum * rounds, "trial {trial}");
+        assert_eq!(light, quantum * rounds, "trial {trial}");
+    }
+}
+
+// ------------------------------------------------ HyperLogLog accuracy
+
+/// HLL error bounds at the cardinalities the serving bench reports:
+/// near-exact at 10 (linear-counting regime), within 5 % at 1e3 and
+/// 1e5 (the raw-estimator standard error at p = 12 is ~1.6 %, so 3σ is
+/// ~5 %). Items are drawn as disjoint random streams, so this also
+/// checks the internal mixer handles arbitrary (not just sequential)
+/// identities.
+#[test]
+fn prop_hll_error_is_bounded_at_bench_cardinalities() {
+    for (truth, tol_frac, seed) in
+        [(10u64, 0.0, 1u64), (1_000, 0.05, 2), (100_000, 0.05, 3)]
+    {
+        let h = Hll::new(DEFAULT_PRECISION);
+        let mut rng = Rng::new(0x4115_0000 ^ seed);
+        // Distinct by construction: disjoint high bits per index.
+        let salt = rng.next_u64() >> 20;
+        for i in 0..truth {
+            h.insert_u64((salt << 20) | i);
+            if i % 3 == 0 {
+                h.insert_u64((salt << 20) | i); // duplicates must not inflate
+            }
+        }
+        let est = h.estimate();
+        let err = (est - truth as f64).abs();
+        let tol = if truth <= 10 { 1.0 } else { truth as f64 * tol_frac };
+        assert!(
+            err <= tol,
+            "cardinality {truth}: estimate {est} off by {err} (tolerance {tol})"
+        );
+    }
+}
+
+// ---------------------------------------------------- Zipf CDF shape
+
+/// For any (n, s), the sampler's CDF equals the directly-computed
+/// normalized partial sums of `1/(k+1)^s` (to 1e-12), is monotone
+/// nondecreasing, and terminates at exactly 1 — so every uniform draw
+/// maps to a valid rank and the closed-form spot checks in
+/// `serve::loadgen` generalize.
+#[test]
+fn prop_zipf_cdf_is_exact_for_random_shapes() {
+    let mut rng = Rng::new(0x21FF);
+    for trial in 0..40 {
+        let n = rng.range(1, 40);
+        let s = rng.f64() * 3.0;
+        let z = ZipfSampler::new(n, s);
+        assert_eq!(z.len(), n);
+        let h: f64 = (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(s)).sum();
+        let mut acc = 0.0;
+        let mut prev = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            let expect = if k + 1 == n { 1.0 } else { acc / h };
+            assert!(
+                (z.cdf(k) - expect).abs() < 1e-12,
+                "trial {trial}: cdf({k}) = {}, partial sum {expect}",
+                z.cdf(k)
+            );
+            assert!(z.cdf(k) + 1e-15 >= prev, "trial {trial}: CDF must be monotone");
+            prev = z.cdf(k);
+        }
+        assert_eq!(z.cdf(n - 1), 1.0, "trial {trial}: CDF must end at exactly 1");
+        for _ in 0..50 {
+            assert!(z.sample(&mut rng) < n, "trial {trial}: sample out of range");
+        }
+    }
+}

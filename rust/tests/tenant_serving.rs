@@ -1,0 +1,301 @@
+//! Multi-tenant serving acceptance: hot-swap under live load never
+//! drops or mixes responses (and releases the old generation's buffers
+//! only after its in-flight work drains), per-tenant admission caps
+//! shed only the offending tenant, detach drains cleanly, and the
+//! per-tenant bench rows + Prometheus dump land on disk (requires
+//! `make artifacts`).
+//!
+//! The engine-free scheduler properties (DRR fairness, HLL accuracy,
+//! Zipf exactness, generation/pin bookkeeping) live in
+//! `tests/property.rs` and the unit tests; this file is where a real
+//! decode pipeline runs behind the registry.
+
+use hybridnmt::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig};
+use hybridnmt::decode::{BeamConfig, Decoder, LengthNorm};
+use hybridnmt::report::{tenant_table, TenantRow};
+use hybridnmt::rng::Rng;
+use hybridnmt::runtime::{Engine, ParamBank};
+use hybridnmt::serve::{
+    drive_tenant_arrivals, run_tenant_server, tenant_arrivals, ServeOptions, SubmitError,
+    TenantOpts, TenantRegistry,
+};
+use hybridnmt::tensor::Tensor;
+use hybridnmt::train::init_params;
+use hybridnmt::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn engine() -> Engine {
+    Engine::load("artifacts", "tiny").expect("run `make artifacts` first")
+}
+
+fn random_params(d: &ModelDims, seed: u64) -> BTreeMap<String, Tensor> {
+    let exp = Experiment {
+        model: d.clone(),
+        strategy: Strategy::Hybrid,
+        hw: HwConfig::default(),
+        train: TrainConfig { seed, ..Default::default() },
+        data: DataConfig::wmt14_sim(100),
+        artifacts_dir: "artifacts".into(),
+    };
+    init_params(&exp, false)
+}
+
+fn random_srcs(d: &ModelDims, n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.range(2, d.max_src + 1);
+            (0..len).map(|_| rng.range(4, d.vocab) as i32).collect()
+        })
+        .collect()
+}
+
+fn cfg(beam: usize, max_tgt: usize) -> BeamConfig {
+    BeamConfig { beam, max_len: max_tgt, norm: LengthNorm::Marian { alpha: 1.0 } }
+}
+
+fn registry_with(params: &BTreeMap<String, Tensor>, tenants: &[(&str, TenantOpts)]) -> TenantRegistry {
+    let r = TenantRegistry::new();
+    for (id, opts) in tenants {
+        r.attach(id, params.clone(), ParamBank::new(), *opts).unwrap();
+    }
+    r
+}
+
+/// The headline acceptance test: a hot-swap lands while requests are in
+/// flight. Every admitted request completes with reference-identical
+/// tokens; requests admitted before the swap decode under the old
+/// generation, requests admitted after under the new one — never a
+/// mixed group — and the old generation's buffers are released only
+/// after its last in-flight request drains.
+#[test]
+fn hot_swap_under_load_never_drops_or_mixes() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, 3);
+    let pool = random_srcs(&d, 8, 42);
+    let c = cfg(4, d.max_tgt);
+    let dec = Decoder::new(&e, &params, false);
+    let reference: Vec<Vec<i32>> = pool.iter().map(|s| dec.translate(s, &c).unwrap()).collect();
+
+    let reg = registry_with(&params, &[("alpha", TenantOpts::default()), ("beta", TenantOpts::default())]);
+    let gen1 = reg.generation_of("alpha").unwrap();
+    // Generous max_wait so pre- and post-swap submissions would land in
+    // one group if the coalescer ignored generations.
+    let opts = ServeOptions { replicas: 2, queue_capacity: 64, max_wait_ms: 50.0, ..Default::default() };
+    let (swap_info, responses, stats, per_tenant) =
+        run_tenant_server(&e, &reg, false, &c, &opts, |h| {
+            // Phase 1: load both tenants, then swap alpha while that
+            // work is (at least partly) still in flight.
+            for i in 0..8u64 {
+                h.submit("alpha", i, 100 + i, pool[i as usize % pool.len()].clone()).unwrap();
+                h.submit("beta", 100 + i, 200 + i, pool[(100 + i) as usize % pool.len()].clone())
+                    .unwrap();
+            }
+            let probe = reg.pin("alpha").unwrap().model().release_probe();
+            let gen2 = reg.swap("alpha", params.clone(), ParamBank::new()).unwrap();
+            // Phase 2: post-swap traffic pins the new generation.
+            for i in 8..16u64 {
+                h.submit("alpha", i, 100 + i, pool[i as usize % pool.len()].clone()).unwrap();
+            }
+            Ok((gen2, probe))
+        })
+        .unwrap();
+    let (gen2, probe) = swap_info;
+    assert!(gen2 > gen1);
+
+    // Never drops: every admitted request completed.
+    assert_eq!(responses.len() as u64, stats.accepted);
+    assert_eq!(per_tenant["alpha"].completed, 16);
+    assert_eq!(per_tenant["beta"].completed, 8);
+    // Never mixes: the generation a request decodes under is exactly
+    // the one current at its admission.
+    for r in &responses {
+        assert_eq!(
+            r.response.tokens,
+            reference[r.response.id as usize % pool.len()],
+            "tenant {} request {} (gen {}) diverged across the swap",
+            r.tenant,
+            r.response.id,
+            r.generation
+        );
+        if r.tenant == "alpha" {
+            let expect = if r.response.id < 8 { gen1 } else { gen2 };
+            assert_eq!(
+                r.generation, expect,
+                "request {} decoded under generation {}, admitted under {}",
+                r.response.id, r.generation, expect
+            );
+        }
+    }
+    // The old generation has fully drained by the time run_tenant_server
+    // returns (it never returns with work in flight), so its buffers —
+    // watched by the probe — must now be released.
+    assert!(reg.wait_drained(Duration::from_secs(5)), "old generation must drain");
+    assert!(probe.load(Ordering::SeqCst), "old generation buffers released after drain");
+}
+
+/// Per-tenant admission caps: a burst from one tenant over its own cap
+/// sheds with `TenantOverQueue` naming that tenant, while another
+/// tenant's traffic is admitted untouched — the isolation boundary.
+#[test]
+fn tenant_cap_sheds_only_the_hot_tenant() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, 5);
+    let pool = random_srcs(&d, 6, 7);
+    let c = cfg(4, d.max_tgt);
+    let reg = registry_with(
+        &params,
+        &[
+            ("hot", TenantOpts { queue_cap: 2, weight: 1 }),
+            ("cold", TenantOpts { queue_cap: 64, weight: 1 }),
+        ],
+    );
+    let opts = ServeOptions { replicas: 1, queue_capacity: 256, ..Default::default() };
+    let (shed, responses, stats, per_tenant) =
+        run_tenant_server(&e, &reg, false, &c, &opts, |h| {
+            let mut shed = 0u64;
+            for i in 0..24u64 {
+                match h.submit("hot", i, i, pool[i as usize % pool.len()].clone()) {
+                    Ok(()) => {}
+                    Err(SubmitError::TenantOverQueue { tenant, capacity }) => {
+                        assert_eq!(tenant, "hot");
+                        assert_eq!(capacity, 2);
+                        shed += 1;
+                    }
+                    Err(other) => panic!("unexpected submit error: {other}"),
+                }
+            }
+            for i in 0..6u64 {
+                h.submit("cold", 100 + i, 100 + i, pool[i as usize % pool.len()].clone())
+                    .expect("cold tenant must be unaffected by hot's sheds");
+            }
+            // And an unattached tenant is a typed refusal, not a panic.
+            assert!(matches!(
+                h.submit("nope", 999, 0, pool[0].clone()),
+                Err(SubmitError::UnknownTenant { .. })
+            ));
+            Ok(shed)
+        })
+        .unwrap();
+    assert!(shed > 0, "24-burst against a cap of 2 must shed");
+    assert_eq!(per_tenant["hot"].shed, shed);
+    assert_eq!(per_tenant["cold"].shed, 0);
+    assert_eq!(stats.rejected, 0, "tenant sheds are not global QueueFull rejections");
+    assert_eq!(responses.len() as u64, stats.accepted, "every admitted request completes");
+    assert_eq!(per_tenant["cold"].completed, 6);
+    // Distinct-user estimates: small cardinalities are near-exact.
+    assert!((per_tenant["cold"].distinct_users_est - 6.0).abs() <= 1.0);
+}
+
+/// Detach while requests are in flight: the tenant disappears from
+/// routing immediately (subsequent submissions get `UnknownTenant`),
+/// already-admitted work completes with correct tokens, and the
+/// detached generation drains and releases.
+#[test]
+fn detach_while_in_flight_drains_cleanly() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, 9);
+    let pool = random_srcs(&d, 6, 13);
+    let c = cfg(4, d.max_tgt);
+    let dec = Decoder::new(&e, &params, false);
+    let reference: Vec<Vec<i32>> = pool.iter().map(|s| dec.translate(s, &c).unwrap()).collect();
+    let reg = registry_with(&params, &[("gone", TenantOpts::default()), ("stay", TenantOpts::default())]);
+    let opts = ServeOptions { replicas: 2, queue_capacity: 64, ..Default::default() };
+    let (probe, responses, stats, per_tenant) =
+        run_tenant_server(&e, &reg, false, &c, &opts, |h| {
+            for i in 0..6u64 {
+                h.submit("gone", i, i, pool[i as usize % pool.len()].clone()).unwrap();
+                h.submit("stay", 100 + i, i, pool[(100 + i) as usize % pool.len()].clone())
+                    .unwrap();
+            }
+            let probe = reg.pin("gone").unwrap().model().release_probe();
+            reg.detach("gone").unwrap();
+            assert!(matches!(
+                h.submit("gone", 50, 0, pool[0].clone()),
+                Err(SubmitError::UnknownTenant { .. })
+            ));
+            Ok(probe)
+        })
+        .unwrap();
+    assert_eq!(responses.len() as u64, stats.accepted);
+    assert_eq!(per_tenant["gone"].completed, 6, "in-flight work survives the detach");
+    assert_eq!(per_tenant["stay"].completed, 6);
+    for r in &responses {
+        assert_eq!(r.response.tokens, reference[r.response.id as usize % pool.len()]);
+    }
+    assert!(reg.wait_drained(Duration::from_secs(5)));
+    assert_eq!(reg.tenants(), vec!["stay".to_string()]);
+    assert!(probe.load(Ordering::SeqCst), "detached generation released after drain");
+}
+
+/// The per-tenant bench artifact: `tenant_table` writes `mt.{tenant}.*`
+/// rows (the schema `scripts/verify.sh` enforces) into
+/// `BENCH_serve.json`, plus the Prometheus dump at
+/// `results/metrics.prom` with the serve/coalesce/loadgen counter
+/// families and the HLL-backed distinct-user gauge.
+#[test]
+fn tenant_bench_rows_and_prometheus_dump() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, 17);
+    let pool = random_srcs(&d, 6, 19);
+    let c = cfg(4, d.max_tgt);
+    let reg = registry_with(&params, &[("ten-a", TenantOpts::default()), ("ten-b", TenantOpts::default())]);
+    let opts = ServeOptions { replicas: 2, queue_capacity: 64, ..Default::default() };
+    let names = vec!["ten-a".to_string(), "ten-b".to_string()];
+    let schedule = tenant_arrivals(&pool, &names, 16, 200.0, 1.0, 8, 77);
+    let (report, _, stats, per_tenant) = run_tenant_server(&e, &reg, false, &c, &opts, |h| {
+        drive_tenant_arrivals(h, &schedule)
+    })
+    .unwrap();
+    assert_eq!(report.accepted, stats.accepted);
+    let rows: Vec<TenantRow> = per_tenant
+        .iter()
+        .map(|(t, ts)| TenantRow {
+            tenant: t.clone(),
+            offered_rps: ts.submitted as f64,
+            sustained_rps: ts.completed as f64 / stats.wall_s.max(1e-9),
+            p50_ms: ts.latency_pctl_ms(0.50),
+            p99_ms: ts.latency_pctl_ms(0.99),
+            shed: ts.shed,
+            distinct_users_est: ts.distinct_users_est,
+            solo_p99_ms: f64::NAN,
+        })
+        .collect();
+    let out = tenant_table(&rows);
+    assert!(out.contains("ten-a") && out.contains("p99"));
+
+    let text = std::fs::read_to_string("BENCH_serve.json").unwrap();
+    let obj = Json::parse(&text).unwrap().as_obj().cloned().unwrap();
+    assert!(per_tenant.contains_key("ten-a"), "the hot Zipf rank must see traffic");
+    for t in per_tenant.keys() {
+        for suffix in ["offered_rps", "sustained_rps", "p99_ms", "shed", "distinct_users_est"] {
+            let key = format!("mt.{t}.{suffix}");
+            assert!(
+                obj.get(&key).and_then(|v| v.as_f64()).is_some_and(f64::is_finite),
+                "BENCH_serve.json missing finite `{key}`"
+            );
+        }
+    }
+    assert!(
+        obj.keys().any(|k| k.starts_with("prom.")),
+        "registry totals must be snapshotted as prom.* keys"
+    );
+
+    let prom = std::fs::read_to_string("results/metrics.prom").unwrap();
+    for family in [
+        "serve_submitted_total",
+        "serve_latency_ms",
+        "loadgen_offered_total",
+        "serve_distinct_users",
+    ] {
+        assert!(prom.contains(&format!("# TYPE {family}")), "metrics.prom missing {family}");
+    }
+    // Histogram exposition shape: cumulative buckets ending at +Inf.
+    assert!(prom.contains("le=\"+Inf\""));
+}

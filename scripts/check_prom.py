@@ -1,0 +1,203 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text-exposition (0.0.4) dump.
+
+    python3 scripts/check_prom.py results/metrics.prom [required_family ...]
+
+Checks, in order of increasing specificity:
+
+  * every line is a comment (`# HELP` / `# TYPE`), blank, or a sample
+    `name{labels} value` with a valid metric name, well-formed quoted
+    label values, and a parseable value;
+  * every sample belongs to a family declared by a preceding `# TYPE`
+    (histogram `_bucket`/`_sum`/`_count` suffixes resolve to their base
+    family), and no family is declared twice;
+  * counter samples are finite and non-negative;
+  * histogram families are structurally sound per label set: buckets
+    are cumulative (non-decreasing in `le`), end at `le="+Inf"`, and
+    agree with the `_count` sample; `_sum` and `_count` are present;
+  * each `required_family` argument names a family that must be present
+    with at least one sample (the acceptance hook: verify.sh requires
+    the serve / coalesce / loadgen counters and the HLL-backed
+    distinct-users gauge).
+
+Exit status 0 on success; 1 with a diagnostic on the first failure.
+"""
+
+import math
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_NAME_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+KINDS = {"counter", "gauge", "histogram", "summary", "untyped"}
+
+
+PATH = "metrics.prom"
+
+
+def die(lineno, msg):
+    raise SystemExit(f"{PATH}:{lineno}: {msg}")
+
+
+def parse_value(tok, lineno):
+    if tok == "+Inf":
+        return math.inf
+    if tok == "-Inf":
+        return -math.inf
+    if tok == "NaN":
+        return math.nan
+    try:
+        return float(tok)
+    except ValueError:
+        die(lineno, f"unparseable sample value `{tok}`")
+
+
+def parse_labels(text, lineno):
+    """`a="x",b="y"` (no braces) -> dict. Handles \\\\, \\" and \\n."""
+    labels = {}
+    i = 0
+    while i < len(text):
+        eq = text.find("=", i)
+        if eq < 0:
+            die(lineno, f"malformed label segment `{text[i:]}`")
+        name = text[i:eq]
+        if not LABEL_NAME_RE.match(name):
+            die(lineno, f"invalid label name `{name}`")
+        if eq + 1 >= len(text) or text[eq + 1] != '"':
+            die(lineno, f"label `{name}` value is not quoted")
+        j = eq + 2
+        val = []
+        while j < len(text):
+            c = text[j]
+            if c == "\\":
+                if j + 1 >= len(text):
+                    die(lineno, f"dangling escape in label `{name}`")
+                esc = text[j + 1]
+                val.append({"\\": "\\", '"': '"', "n": "\n"}.get(esc) or
+                           die(lineno, f"bad escape `\\{esc}` in label `{name}`"))
+                j += 2
+            elif c == '"':
+                break
+            else:
+                val.append(c)
+                j += 1
+        else:
+            die(lineno, f"unterminated label value for `{name}`")
+        if name in labels:
+            die(lineno, f"duplicate label `{name}`")
+        labels[name] = "".join(val)
+        i = j + 1
+        if i < len(text):
+            if text[i] != ",":
+                die(lineno, f"expected `,` between labels, got `{text[i]}`")
+            i += 1
+    return labels
+
+
+def main():
+    if len(sys.argv) < 2:
+        raise SystemExit(__doc__)
+    global PATH
+    path, required = sys.argv[1], sys.argv[2:]
+    PATH = path
+    with open(path) as fh:
+        lines = fh.read().splitlines()
+
+    types = {}          # family -> kind
+    samples = []        # (family, suffix, labels, value, lineno)
+    n_samples = 0
+    for lineno, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) < 3 or parts[1] not in ("HELP", "TYPE"):
+                continue  # free-form comment — legal
+            fam = parts[2]
+            if not NAME_RE.match(fam):
+                die(lineno, f"invalid family name `{fam}` in {parts[1]}")
+            if parts[1] == "TYPE":
+                kind = parts[3].strip() if len(parts) > 3 else ""
+                if kind not in KINDS:
+                    die(lineno, f"unknown metric type `{kind}`")
+                if fam in types:
+                    die(lineno, f"family `{fam}` declared twice")
+                types[fam] = kind
+            continue
+
+        # Sample line: name[{labels}] value
+        m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{(.*)\})?\s+(\S+)$", line)
+        if not m:
+            die(lineno, f"malformed sample line `{line}`")
+        name, labels_text, value_tok = m.group(1), m.group(3), m.group(4)
+        labels = parse_labels(labels_text, lineno) if labels_text else {}
+        value = parse_value(value_tok, lineno)
+        n_samples += 1
+
+        # Resolve the family: exact, or histogram series suffixes.
+        fam, suffix = name, ""
+        if name not in types:
+            for s in ("_bucket", "_sum", "_count"):
+                base = name[: -len(s)] if name.endswith(s) else None
+                if base and types.get(base) == "histogram":
+                    fam, suffix = base, s
+                    break
+            else:
+                die(lineno, f"sample `{name}` has no preceding # TYPE")
+        kind = types[fam]
+        if kind == "histogram" and not suffix:
+            die(lineno, f"bare sample for histogram family `{fam}`")
+        if kind == "counter" and not (value >= 0 and math.isfinite(value)):
+            die(lineno, f"counter `{name}` has non-finite/negative value {value_tok}")
+        samples.append((fam, suffix, labels, value, lineno))
+
+    if n_samples == 0:
+        raise SystemExit(f"{path}: no samples at all")
+
+    # Histogram structure per (family, label-set-without-le).
+    hists = {}
+    for fam, suffix, labels, value, lineno in samples:
+        if types[fam] != "histogram":
+            continue
+        base = tuple(sorted((k, v) for k, v in labels.items() if k != "le"))
+        h = hists.setdefault((fam, base), {"buckets": [], "sum": None, "count": None})
+        if suffix == "_bucket":
+            if "le" not in labels:
+                die(lineno, f"`{fam}_bucket` without an `le` label")
+            h["buckets"].append((parse_value(labels["le"], lineno), value, lineno))
+        elif suffix == "_sum":
+            h["sum"] = value
+        elif suffix == "_count":
+            h["count"] = (value, lineno)
+
+    for (fam, base), h in sorted(hists.items()):
+        where = f"histogram `{fam}` {dict(base)}"
+        if not h["buckets"]:
+            raise SystemExit(f"{path}: {where}: no _bucket samples")
+        if h["sum"] is None or h["count"] is None:
+            raise SystemExit(f"{path}: {where}: missing _sum or _count")
+        bs = sorted(h["buckets"], key=lambda t: t[0])
+        if not math.isinf(bs[-1][0]):
+            raise SystemExit(f"{path}: {where}: no le=\"+Inf\" bucket")
+        prev = -1.0
+        for le, cum, lineno in bs:
+            if cum < prev:
+                die(lineno, f"{where}: bucket le={le} count {cum} < previous {prev} "
+                            "(buckets must be cumulative)")
+            prev = cum
+        if bs[-1][1] != h["count"][0]:
+            raise SystemExit(f"{path}: {where}: +Inf bucket {bs[-1][1]} != _count "
+                             f"{h['count'][0]}")
+
+    present = {fam for fam, _, _, _, _ in samples}
+    missing = [r for r in required if r not in present]
+    if missing:
+        raise SystemExit(f"{path}: required metric families absent: {missing} "
+                         f"(have {len(present)} families)")
+
+    print(f"  {path}: exposition format OK "
+          f"({len(types)} families, {n_samples} samples, {len(hists)} histogram series)")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,21 +92,50 @@ if path.endswith("BENCH_train.json"):
     dist_rows = sum(1 for p in prefixes if ".dist" in p)
     print(f"  {path}: train schema OK ({len(prefixes)} rows, {dist_rows} dist)")
 if path.endswith("BENCH_serve.json"):
-    # The serving benchmark has a fixed schema on top of the flat
-    # name->number convention: every row prefix (r<replicas>.beam<B>.
-    # load<rate>) must report tail latency, throughput and batching
-    # efficiency. A serve-load run that stopped writing any of these
-    # is a regression, not a formatting choice.
-    required = ["p50_ms", "p95_ms", "p99_ms", "sent_per_s",
-                "batch_fill", "padding_waste", "rejected"]
-    prefixes = {k.rsplit(".", 1)[0] for k in data}
+    # The serving benchmark has fixed schemas on top of the flat
+    # name->number convention, scoped by row class:
+    #   r<replicas>...   single-tenant rows: tail latency, throughput,
+    #                    batching efficiency;
+    #   mt.<tenant>.*    multi-tenant rows (serve-load --tenants):
+    #                    offered vs sustained load, p99, sheds, and the
+    #                    HLL distinct-user estimate (p99_vs_solo is
+    #                    optional — only written when the solo baseline
+    #                    ran);
+    #   prom.*           label-aggregated metrics-registry totals —
+    #                    free-form names, numeric-finite like all keys.
+    # A run that stopped writing any required column is a regression,
+    # not a formatting choice.
+    serve_required = ["p50_ms", "p95_ms", "p99_ms", "sent_per_s",
+                      "batch_fill", "padding_waste", "rejected"]
+    mt_required = ["offered_rps", "sustained_rps", "p99_ms", "shed",
+                   "distinct_users_est"]
+    mt_optional = {"p99_vs_solo"}
+    prefixes = {k.rsplit(".", 1)[0] for k in data if not k.startswith("prom.")}
     if not prefixes:
         raise SystemExit(f"{path}: no serve rows")
+    n_mt = 0
     for p in sorted(prefixes):
+        if p.startswith("mt."):
+            n_mt += 1
+            if p.count(".") != 1 or not p[3:]:
+                raise SystemExit(f"{path}: malformed tenant row `{p}` "
+                                 "(want mt.<tenant>.<col>; tenant ids "
+                                 "must not contain dots)")
+            required = mt_required
+            cols = {k.rsplit(".", 1)[1] for k in data
+                    if k.rsplit(".", 1)[0] == p}
+            stray = cols - set(mt_required) - mt_optional
+            if stray:
+                raise SystemExit(f"{path}: tenant row `{p}` has unknown "
+                                 f"columns {sorted(stray)}")
+        else:
+            required = serve_required
         missing = [s for s in required if f"{p}.{s}" not in data]
         if missing:
             raise SystemExit(f"{path}: row `{p}` missing {missing}")
-    print(f"  {path}: serve schema OK ({len(prefixes)} rows)")
+    n_prom = sum(1 for k in data if k.startswith("prom."))
+    print(f"  {path}: serve schema OK ({len(prefixes) - n_mt} serve rows, "
+          f"{n_mt} tenant rows, {n_prom} prom totals)")
 print(f"  {path}: OK ({len(data)} entries)")
 EOF
     then :; else
@@ -114,6 +143,23 @@ EOF
     fi
 done
 [ "$found" = "1" ] || echo "  (no BENCH_*.json present yet — run the benches or serve-bench/serve-load)"
+
+echo "== Prometheus dump sanity (results/metrics.prom)"
+if [ -e results/metrics.prom ]; then
+    # Required families are the acceptance hook: the serve scheduler,
+    # coalescer and load-generator counters plus the HLL-backed
+    # distinct-users gauge must all survive into the dump.
+    if python3 scripts/check_prom.py results/metrics.prom \
+        serve_submitted_total serve_completed_total serve_latency_ms \
+        coalesce_deadline_flush_total loadgen_offered_total \
+        serve_distinct_users; then
+        :
+    else
+        fail=1
+    fi
+else
+    echo "  (no results/metrics.prom yet — run serve-load --tenants or the tenant_serving tests)"
+fi
 
 if [ "$fail" != "0" ]; then
     echo "verify: FAILED"
