@@ -43,6 +43,9 @@ fn main() -> anyhow::Result<()> {
             norm: LengthNorm::Marian { alpha: 1.0 },
         };
         println!("== beam {beam} ==");
+        // No int8 rows here: quantization quality on random-init
+        // weights is meaningless; `serve-bench --quantize int8` runs
+        // the gated quantized sweep on real checkpoints.
         let out = report::decode_bench(
             &engine,
             &params,
@@ -52,6 +55,7 @@ fn main() -> anyhow::Result<()> {
             &cfg,
             &[1, 32],
             &[1, 2, 4],
+            None,
         )?;
         print!("{out}\n");
     }

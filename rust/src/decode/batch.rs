@@ -71,6 +71,10 @@ pub struct DecodeStats {
     pub wall_s: f64,
     /// Parameters uploaded during the run (0 on a warm bank).
     pub param_uploads: u64,
+    /// Bytes those parameter uploads moved, at the bank's storage
+    /// representation (f32, or i8 + scale table on a quantized bank —
+    /// the `bytes_uploaded` column of `BENCH_decode.json`).
+    pub param_bytes_uploaded: u64,
     /// Parameter lookups served device-resident.
     pub param_hits: u64,
     /// Encoder-state uploads (one `s_block` + one `srclen` per group).
@@ -454,6 +458,7 @@ pub fn translate_corpus(
         .collect::<Result<_>>()?;
 
     let (up0, hit0) = (bank.upload_count(), bank.hit_count());
+    let pb0 = bank.upload_bytes();
     let t0 = std::time::Instant::now();
     let chunks = run_sharded(workers, n_chunks, |w, j| {
         let lo = j * batch;
@@ -468,6 +473,7 @@ pub fn translate_corpus(
         out_tokens: hyps.iter().map(Vec::len).sum(),
         wall_s,
         param_uploads: bank.upload_count() - up0,
+        param_bytes_uploaded: bank.upload_bytes() - pb0,
         param_hits: bank.hit_count() - hit0,
         ..Default::default()
     };

@@ -46,6 +46,9 @@ use super::wire::{self, Frame, FrameKind};
 use super::{Backoff, DistError, DistMode, DistResult, Retrier, ShardMeta};
 use crate::optim::Optimizer;
 use crate::tensor::flat::{tree_fold_segments, FlatGrads, FlatParams};
+use crate::tensor::half::SlabDtype;
+use crate::train::checkpoint::LossScaleState;
+use crate::train::step::StepPrecision;
 
 /// What every rank knows after a successful distributed step: the
 /// global loss/token fold and the (identical-everywhere) gradient norm.
@@ -59,6 +62,10 @@ pub struct GlobalStep {
     pub apply_seconds: f64,
     /// Seconds spent moving/validating/folding cross-process data.
     pub comm_seconds: f64,
+    /// True when dynamic loss scaling found a non-finite global
+    /// gradient: no rank applied an update this step and every rank's
+    /// scale state machine recorded the overflow.
+    pub overflow: bool,
 }
 
 /// One rank's communicator: a [`DistTransport`] plus the topology.
@@ -122,10 +129,14 @@ impl DistComm {
 
     /// Finish one optimizer step: complete the global reduction, get
     /// the update applied, and return the global scalars. `grads` are
-    /// this rank's **raw** (un-normalized) local bucket sums; `metas`
-    /// its per-shard records in local shard order. On any error the
+    /// this rank's **raw** (un-normalized, loss-scaled under 16-bit
+    /// precisions) local bucket sums; `metas` its per-shard records in
+    /// local shard order; `local_overflow` is the local reducer's
+    /// non-finite scan result; `ls` is this rank's loss-scale state
+    /// machine (advanced identically on every rank). On any error the
     /// caller should [`DistComm::abort`] and stop — the step boundary
     /// is the fault boundary.
+    #[allow(clippy::too_many_arguments)]
     pub fn finish_step(
         &self,
         step: u64,
@@ -134,6 +145,9 @@ impl DistComm {
         grads: FlatGrads,
         metas: &[ShardMeta],
         apply_workers: usize,
+        prec: StepPrecision,
+        local_overflow: bool,
+        ls: &mut LossScaleState,
     ) -> Result<GlobalStep> {
         if metas.len() != self.local_shards {
             return Err(anyhow!(
@@ -143,13 +157,18 @@ impl DistComm {
             ));
         }
         if self.world() == 1 {
-            return local_apply(params, opt, grads, metas.to_vec(), apply_workers, 0.0);
+            return local_apply(
+                params, opt, grads, metas.to_vec(), apply_workers, 0.0, prec,
+                local_overflow, ls,
+            );
         }
         match (self.mode, self.rank()) {
-            (DistMode::Ps, 0) => self.ps_root(step, params, opt, grads, metas, apply_workers),
-            (DistMode::Ps, _) => self.ps_worker(step, params, grads, metas),
+            (DistMode::Ps, 0) => self.ps_root(
+                step, params, opt, grads, metas, apply_workers, prec, local_overflow, ls,
+            ),
+            (DistMode::Ps, _) => self.ps_worker(step, params, grads, metas, prec, ls),
             (DistMode::Replicated, _) => {
-                self.replicated(step, params, opt, grads, metas, apply_workers)
+                self.replicated(step, params, opt, grads, metas, apply_workers, prec, ls)
             }
         }
     }
@@ -158,6 +177,7 @@ impl DistComm {
 
     /// Rank 0: receive every worker's partials (in rank order), run the
     /// outer tree, normalize, apply, broadcast updated parameters.
+    #[allow(clippy::too_many_arguments)]
     fn ps_root(
         &self,
         step: u64,
@@ -166,12 +186,19 @@ impl DistComm {
         grads: FlatGrads,
         metas: &[ShardMeta],
         apply_workers: usize,
+        prec: StepPrecision,
+        local_overflow: bool,
+        ls: &mut LossScaleState,
     ) -> Result<GlobalStep> {
         let world = self.world();
         let t_comm = Instant::now();
         let idx = grads.idx().clone();
         let buckets = grads.buckets().clone();
-        let own = grads.into_segments();
+        let mut own = grads.into_segments();
+        // Under 16-bit precisions every rank's partials fold at the
+        // wire dtype — including our own, which never hit the wire —
+        // so the result matches what any other topology would compute.
+        round_segments(prec, &mut own);
         let nb = own.len();
 
         // parts[b] collects rank-order partials of bucket b: rank 0's
@@ -184,7 +211,8 @@ impl DistComm {
             for (b, parts) in per_bucket.iter_mut().enumerate() {
                 let f = expect_kind(self.transport.recv_hub(w)?, FrameKind::Grad, step)?;
                 check_origin_bucket(&f, w, b)?;
-                let seg = wire::bytes_to_f32s(&f.payload)?;
+                check_dtype(&f, prec.dtype)?;
+                let seg = wire::bytes_to_segment(prec.dtype, &f.payload)?;
                 if seg.len() != parts[0].len() {
                     return Err(DistError::wire(format!(
                         "rank {w} bucket {b}: {} elements, expected {}",
@@ -223,19 +251,30 @@ impl DistComm {
             all_metas,
             apply_workers,
             comm_seconds,
+            prec,
+            local_overflow,
+            ls,
         )?;
 
         // Broadcast the updated slab, bucket by bucket, plus the step
-        // scalars (workers report the same loss/ppl/grad_norm).
+        // scalars (workers report the same loss/ppl/grad_norm). On an
+        // overflow skip the params are simply unchanged — the framing
+        // is identical either way, and the meta carries the flag.
+        // 16-bit params are post-apply rounded to the dtype, so the
+        // half-width encoding is lossless.
         let t_bc = Instant::now();
-        let meta_payload =
-            wire::step_meta_to_bytes(global.loss_sum, global.ntok, global.grad_norm);
+        let meta_payload = wire::step_meta_to_bytes(
+            global.loss_sum,
+            global.ntok,
+            global.grad_norm,
+            global.overflow,
+        );
         for w in 1..world {
             for (b, bk) in params.buckets().iter().enumerate() {
-                let payload = wire::f32s_to_bytes(&params.slab()[bk.range.clone()]);
+                let payload = wire::segment_to_bytes(prec.dtype, &params.slab()[bk.range.clone()]);
                 self.send_hub_retry(
                     w,
-                    &Frame::new(FrameKind::Param, 0, step, b as u32, payload),
+                    &Frame::with_dtype(FrameKind::Param, 0, step, b as u32, prec.dtype, payload),
                 )?;
             }
             self.send_hub_retry(
@@ -258,15 +297,25 @@ impl DistComm {
         params: &mut FlatParams,
         grads: FlatGrads,
         metas: &[ShardMeta],
+        prec: StepPrecision,
+        ls: &mut LossScaleState,
     ) -> Result<GlobalStep> {
         let rank = self.rank() as u32;
         let t_comm = Instant::now();
-        let segs = grads.into_segments();
+        let mut segs = grads.into_segments();
+        round_segments(prec, &mut segs);
         let nb = segs.len();
         for (b, seg) in segs.iter().enumerate() {
             self.send_hub_retry(
                 0,
-                &Frame::new(FrameKind::Grad, rank, step, b as u32, wire::f32s_to_bytes(seg)),
+                &Frame::with_dtype(
+                    FrameKind::Grad,
+                    rank,
+                    step,
+                    b as u32,
+                    prec.dtype,
+                    wire::segment_to_bytes(prec.dtype, seg),
+                ),
             )?;
         }
         self.send_hub_retry(
@@ -278,10 +327,20 @@ impl DistComm {
         for b in 0..nb {
             let f = expect_kind(self.transport.recv_hub(0)?, FrameKind::Param, step)?;
             check_origin_bucket(&f, 0, b)?;
-            bufs.push(wire::bytes_to_f32s(&f.payload)?);
+            check_dtype(&f, prec.dtype)?;
+            bufs.push(wire::bytes_to_segment(prec.dtype, &f.payload)?);
         }
         let f = expect_kind(self.transport.recv_hub(0)?, FrameKind::Meta, step)?;
-        let (loss_sum, ntok, grad_norm) = wire::bytes_to_step_meta(&f.payload)?;
+        let (loss_sum, ntok, grad_norm, overflow) = wire::bytes_to_step_meta(&f.payload)?;
+        // Follow rank 0's overflow decision so every rank's scale
+        // state machine stays in lockstep.
+        if prec.active() {
+            if overflow {
+                ls.on_overflow();
+            } else {
+                ls.on_clean();
+            }
+        }
 
         params.with_slab_mut(|_idx, buckets, slab| -> DistResult<()> {
             for (b, bk) in buckets.iter().enumerate() {
@@ -303,6 +362,7 @@ impl DistComm {
             grad_norm,
             apply_seconds: 0.0,
             comm_seconds: t_comm.elapsed().as_secs_f64(),
+            overflow,
         })
     }
 
@@ -314,6 +374,7 @@ impl DistComm {
     /// round's block to the successor while the main thread receives
     /// from the predecessor — concurrent halves, so a full TCP buffer
     /// can never deadlock the ring.
+    #[allow(clippy::too_many_arguments)]
     fn replicated(
         &self,
         step: u64,
@@ -322,13 +383,21 @@ impl DistComm {
         grads: FlatGrads,
         metas: &[ShardMeta],
         apply_workers: usize,
+        prec: StepPrecision,
+        ls: &mut LossScaleState,
     ) -> Result<GlobalStep> {
         let world = self.world();
         let rank = self.rank();
         let t_comm = Instant::now();
         let idx = grads.idx().clone();
         let buckets = grads.buckets().clone();
-        let own = grads.into_segments();
+        let mut own = grads.into_segments();
+        // Fold at the wire dtype everywhere (our own block included)
+        // so every rank reduces bit-identical inputs; a non-finite
+        // partial survives the 16-bit encode (f16/bf16 keep Inf/NaN),
+        // so the post-fold overflow scan is consistent across ranks —
+        // the local flag is deliberately NOT consulted here.
+        round_segments(prec, &mut own);
         let nb = own.len();
         let seg_len: Vec<usize> = own.iter().map(|s| s.len()).collect();
 
@@ -353,12 +422,13 @@ impl DistComm {
                         let mut retrier = Retrier::new(policy);
                         let (segs, ms) = block;
                         for (b, seg) in segs.iter().enumerate() {
-                            let f = Frame::new(
+                            let f = Frame::with_dtype(
                                 FrameKind::Grad,
                                 send_origin as u32,
                                 step,
                                 b as u32,
-                                wire::f32s_to_bytes(seg),
+                                prec.dtype,
+                                wire::segment_to_bytes(prec.dtype, seg),
                             );
                             retrier.run("ring send", || self.transport.send_ring(&f))?;
                         }
@@ -376,7 +446,8 @@ impl DistComm {
                         for b in 0..nb {
                             let f = expect_kind(self.transport.recv_ring()?, FrameKind::Grad, step)?;
                             check_origin_bucket(&f, recv_origin, b)?;
-                            let seg = wire::bytes_to_f32s(&f.payload)?;
+                            check_dtype(&f, prec.dtype)?;
+                            let seg = wire::bytes_to_segment(prec.dtype, &f.payload)?;
                             if seg.len() != seg_len[b] {
                                 return Err(DistError::wire(format!(
                                     "ring bucket {b} from rank {recv_origin}: {} elements, \
@@ -438,6 +509,11 @@ impl DistComm {
             all_metas,
             apply_workers,
             comm_seconds,
+            prec,
+            // Cross-rank consistency: only the (identical) folded
+            // gradient decides — see the comment at round_segments.
+            false,
+            ls,
         )
     }
 
@@ -491,10 +567,25 @@ impl DistComm {
     }
 }
 
+/// Round bucket partials through the wire dtype in place (no-op for
+/// f32) so the local fold and the cross-process fold see identical
+/// values — already-representable segments then ship losslessly.
+fn round_segments(prec: StepPrecision, segs: &mut [Box<[f32]>]) {
+    if prec.dtype != SlabDtype::F32 {
+        for s in segs.iter_mut() {
+            prec.dtype.round_slice(s);
+        }
+    }
+}
+
 /// The step finalization every rank runs on the *globally* reduced
 /// gradient — byte-for-byte the single-process
 /// `train_step_micro_flat` tail: f64 left fold of loss/ntok in global
-/// shard order, `ntok.max(1.0)`, `1/ntok` scale, optimizer apply.
+/// shard order, `ntok.max(1.0)`, `1/(scale·ntok)` normalization
+/// (plain `1/ntok` on the bitwise f32 path), optimizer apply. Under
+/// loss scaling a non-finite gradient skips the apply and halves the
+/// scale instead.
+#[allow(clippy::too_many_arguments)]
 fn local_apply(
     params: &mut FlatParams,
     opt: &mut dyn Optimizer,
@@ -502,6 +593,9 @@ fn local_apply(
     all_metas: Vec<ShardMeta>,
     apply_workers: usize,
     comm_seconds: f64,
+    prec: StepPrecision,
+    local_overflow: bool,
+    ls: &mut LossScaleState,
 ) -> Result<GlobalStep> {
     let mut loss_sum = 0.0;
     let mut ntok = 0.0;
@@ -510,15 +604,36 @@ fn local_apply(
         ntok += m.ntok;
     }
     let ntok = ntok.max(1.0);
-    grads.scale(1.0 / ntok as f32);
+    if prec.active() && (local_overflow || grads.any_non_finite()) {
+        ls.on_overflow();
+        return Ok(GlobalStep {
+            loss_sum,
+            ntok,
+            grad_norm: 0.0,
+            apply_seconds: 0.0,
+            comm_seconds,
+            overflow: true,
+        });
+    }
+    if prec.dtype == SlabDtype::F32 {
+        // Kept verbatim so the f32 path stays bitwise-identical.
+        grads.scale(1.0 / ntok as f32);
+    } else {
+        grads.scale((1.0 / (prec.loss_scale as f64 * ntok)) as f32);
+    }
     let t = Instant::now();
     let grad_norm = opt.apply_flat(params, &grads, apply_workers)?;
+    if prec.dtype != SlabDtype::F32 {
+        params.round_to_dtype();
+        ls.on_clean();
+    }
     Ok(GlobalStep {
         loss_sum,
         ntok,
         grad_norm,
         apply_seconds: t.elapsed().as_secs_f64(),
         comm_seconds,
+        overflow: false,
     })
 }
 
@@ -542,6 +657,17 @@ fn expect_kind(f: Frame, kind: FrameKind, step: u64) -> DistResult<Frame> {
         )));
     }
     Ok(f)
+}
+
+fn check_dtype(f: &Frame, want: SlabDtype) -> DistResult<()> {
+    if f.dtype != want {
+        return Err(DistError::wire(format!(
+            "frame dtype mismatch: got {}, this rank runs {want} (precision flags differ \
+             across ranks?)",
+            f.dtype
+        )));
+    }
+    Ok(())
 }
 
 fn check_origin_bucket(f: &Frame, origin: usize, bucket: usize) -> DistResult<()> {

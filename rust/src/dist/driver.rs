@@ -46,6 +46,9 @@ pub struct RankSpec {
     pub bucket_bytes: Option<usize>,
     /// Run plans on the sequential executor.
     pub sequential: bool,
+    /// Storage precision (must match on every rank — frames carry the
+    /// dtype and receivers reject a mismatch).
+    pub precision: crate::tensor::half::SlabDtype,
     /// Deterministic fault hook: fail just before this (1-based) step.
     pub die_at_step: Option<u64>,
     /// With `die_at_step`: hard-exit the process (code 3) instead of
@@ -64,6 +67,7 @@ impl RankSpec {
             steps,
             bucket_bytes: None,
             sequential: false,
+            precision: crate::tensor::half::SlabDtype::F32,
             die_at_step: None,
             die_hard: false,
         }
@@ -123,6 +127,7 @@ pub fn train_rank(
     if let Some(b) = spec.bucket_bytes {
         trainer.set_bucket_bytes(b);
     }
+    trainer.set_precision(spec.precision)?;
 
     let mut stats = Vec::with_capacity(spec.steps);
     for s in 0..spec.steps {

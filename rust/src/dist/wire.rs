@@ -8,12 +8,16 @@
 //! Layout (all integers little-endian):
 //!
 //! ```text
-//! +----------+---------+------+--------+--------+----------+---------+----------+
-//! | magic  8 | len u32 | kind | rank   | step   | bucket   | payload | crc u32  |
-//! |          |         | u8   | u32    | u64    | u32      | len-17  |          |
-//! +----------+---------+------+--------+--------+----------+---------+----------+
-//! |<-------------------------- checksummed ------------------------->|
+//! +----------+---------+------+--------+--------+----------+-------+---------+----------+
+//! | magic  8 | len u32 | kind | rank   | step   | bucket   | dtype | payload | crc u32  |
+//! |          |         | u8   | u32    | u64    | u32      | u8    | len-18  |          |
+//! +----------+---------+------+--------+--------+----------+-------+---------+----------+
+//! |<------------------------------ checksummed ----------------------------->|
 //! ```
+//!
+//! `dtype` tags the element encoding of Grad/Param payloads
+//! ([`SlabDtype::code`]: f32 = 0, f16 = 1, bf16 = 2) so 16-bit
+//! precisions ship half the segment bytes; non-tensor frames carry 0.
 //!
 //! `len` counts the body (kind..payload). The checksum is FNV-1a over
 //! *everything* before it — magic, length prefix and body — so any
@@ -24,13 +28,16 @@
 //! cap in `checkpoint::load_full`).
 
 use super::{DistError, DistResult, ShardMeta};
+use crate::tensor::half::{self, SlabDtype};
 
 /// Protocol magic + version. Bump the trailing digit on any layout
 /// change so mismatched builds fail loudly at the first frame.
-pub const MAGIC: [u8; 8] = *b"HYNMTDW1";
+/// v2 added the per-frame payload dtype byte.
+pub const MAGIC: [u8; 8] = *b"HYNMTDW2";
 
-/// Fixed body header: kind u8 + rank u32 + step u64 + bucket u32.
-pub const BODY_HEADER: usize = 1 + 4 + 8 + 4;
+/// Fixed body header: kind u8 + rank u32 + step u64 + bucket u32 +
+/// dtype u8.
+pub const BODY_HEADER: usize = 1 + 4 + 8 + 4 + 1;
 
 /// Upper bound on a frame body. The largest legitimate payload is one
 /// parameter bucket (`DEFAULT_BUCKET_BYTES` = 256 KiB); 256 MiB leaves
@@ -115,12 +122,27 @@ pub struct Frame {
     pub step: u64,
     /// Bucket index for Grad/Param; 0 otherwise.
     pub bucket: u32,
+    /// Element encoding of Grad/Param payloads; F32 for everything
+    /// else.
+    pub dtype: SlabDtype,
     pub payload: Vec<u8>,
 }
 
 impl Frame {
     pub fn new(kind: FrameKind, rank: u32, step: u64, bucket: u32, payload: Vec<u8>) -> Self {
-        Frame { kind, rank, step, bucket, payload }
+        Frame { kind, rank, step, bucket, dtype: SlabDtype::F32, payload }
+    }
+
+    /// A tensor-segment frame whose payload is encoded at `dtype`.
+    pub fn with_dtype(
+        kind: FrameKind,
+        rank: u32,
+        step: u64,
+        bucket: u32,
+        dtype: SlabDtype,
+        payload: Vec<u8>,
+    ) -> Self {
+        Frame { kind, rank, step, bucket, dtype, payload }
     }
 
     /// Frames with no payload (Done, RingHello, …).
@@ -143,6 +165,8 @@ pub enum WireError {
     BadLength(u64),
     BadChecksum { want: u32, got: u32 },
     BadKind(u8),
+    /// Dtype byte is not a known [`SlabDtype`] code.
+    BadDtype(u8),
 }
 
 impl std::fmt::Display for WireError {
@@ -158,6 +182,7 @@ impl std::fmt::Display for WireError {
                 write!(f, "frame checksum mismatch: want {want:#010x}, got {got:#010x}")
             }
             WireError::BadKind(c) => write!(f, "unknown frame kind {c}"),
+            WireError::BadDtype(c) => write!(f, "unknown payload dtype {c}"),
         }
     }
 }
@@ -196,6 +221,7 @@ pub fn encode(f: &Frame) -> Vec<u8> {
     out.extend_from_slice(&f.rank.to_le_bytes());
     out.extend_from_slice(&f.step.to_le_bytes());
     out.extend_from_slice(&f.bucket.to_le_bytes());
+    out.push(f.dtype.code());
     out.extend_from_slice(&f.payload);
     let crc = fnv1a32(&out);
     out.extend_from_slice(&crc.to_le_bytes());
@@ -248,8 +274,9 @@ pub fn decode(buf: &[u8]) -> Result<(Frame, usize), WireError> {
     let rank = rd_u32(&body[1..5]);
     let step = rd_u64(&body[5..13]);
     let bucket = rd_u32(&body[13..17]);
+    let dtype = SlabDtype::from_code(body[17]).ok_or(WireError::BadDtype(body[17]))?;
     let payload = body[BODY_HEADER..].to_vec();
-    Ok((Frame { kind, rank, step, bucket, payload }, total))
+    Ok((Frame { kind, rank, step, bucket, dtype, payload }, total))
 }
 
 /// Read exactly one frame from a byte stream (used by the TCP
@@ -291,6 +318,36 @@ pub fn bytes_to_f32s(b: &[u8]) -> DistResult<Box<[f32]>> {
     Ok(out.into_boxed_slice())
 }
 
+/// Tensor segment → payload bytes at `dtype` (f32 ships 4 bytes per
+/// element, f16/bf16 ship 2 — values are rounded through the dtype on
+/// encode, so already-representable values round-trip losslessly).
+pub fn segment_to_bytes(dtype: SlabDtype, xs: &[f32]) -> Vec<u8> {
+    match dtype {
+        SlabDtype::F32 => f32s_to_bytes(xs),
+        _ => {
+            let mut out = Vec::new();
+            half::encode_from_f32(dtype, xs, &mut out);
+            out
+        }
+    }
+}
+
+/// Payload bytes at `dtype` → f32 box (inverse of
+/// [`segment_to_bytes`]).
+pub fn bytes_to_segment(dtype: SlabDtype, b: &[u8]) -> DistResult<Box<[f32]>> {
+    match dtype {
+        SlabDtype::F32 => bytes_to_f32s(b),
+        _ => half::decode_to_f32(dtype, b)
+            .map(Vec::into_boxed_slice)
+            .ok_or_else(|| {
+                DistError::wire(format!(
+                    "{dtype} payload length {} not a multiple of 2",
+                    b.len()
+                ))
+            }),
+    }
+}
+
 /// Per-shard metadata list → bytes (16 per shard: loss_sum f64 LE,
 /// ntok f64 LE). Sent worker → rank 0 (ps) / around the ring
 /// (replicated) so loss/ntok fold in global shard order everywhere.
@@ -320,20 +377,29 @@ pub fn bytes_to_metas(b: &[u8]) -> DistResult<Vec<ShardMeta>> {
 }
 
 /// Rank-0 → worker step summary payload (ps mode): loss_sum, ntok,
-/// grad_norm as three f64 LE.
-pub fn step_meta_to_bytes(loss_sum: f64, ntok: f64, grad_norm: f64) -> Vec<u8> {
-    let mut out = Vec::with_capacity(24);
+/// grad_norm as three f64 LE plus the loss-scaling overflow flag u8
+/// (1 = this step's apply was skipped everywhere; workers must skip
+/// too so the scale state machines stay in lockstep).
+pub fn step_meta_to_bytes(loss_sum: f64, ntok: f64, grad_norm: f64, overflow: bool) -> Vec<u8> {
+    let mut out = Vec::with_capacity(25);
     out.extend_from_slice(&loss_sum.to_le_bytes());
     out.extend_from_slice(&ntok.to_le_bytes());
     out.extend_from_slice(&grad_norm.to_le_bytes());
+    out.push(overflow as u8);
     out
 }
 
-pub fn bytes_to_step_meta(b: &[u8]) -> DistResult<(f64, f64, f64)> {
-    if b.len() != 24 {
+pub fn bytes_to_step_meta(b: &[u8]) -> DistResult<(f64, f64, f64, bool)> {
+    if b.len() != 25 {
         return Err(DistError::wire(format!(
-            "step-meta payload length {} != 24",
+            "step-meta payload length {} != 25",
             b.len()
+        )));
+    }
+    if b[24] > 1 {
+        return Err(DistError::wire(format!(
+            "step-meta overflow flag {} not 0/1",
+            b[24]
         )));
     }
     let f = |o: usize| {
@@ -341,7 +407,7 @@ pub fn bytes_to_step_meta(b: &[u8]) -> DistResult<(f64, f64, f64)> {
             b[o], b[o + 1], b[o + 2], b[o + 3], b[o + 4], b[o + 5], b[o + 6], b[o + 7],
         ])
     };
-    Ok((f(0), f(8), f(16)))
+    Ok((f(0), f(8), f(16), b[24] == 1))
 }
 
 /// u16 port list payload (Roster frames).
@@ -461,10 +527,44 @@ mod tests {
             ShardMeta { loss_sum: -0.125, ntok: 0.0 },
         ];
         assert_eq!(bytes_to_metas(&metas_to_bytes(&ms)).unwrap(), ms);
-        let (l, n, g) = bytes_to_step_meta(&step_meta_to_bytes(1.5, 2.0, 0.25)).unwrap();
-        assert_eq!((l, n, g), (1.5, 2.0, 0.25));
+        let (l, n, g, ov) =
+            bytes_to_step_meta(&step_meta_to_bytes(1.5, 2.0, 0.25, false)).unwrap();
+        assert_eq!((l, n, g, ov), (1.5, 2.0, 0.25, false));
+        let (.., ov) = bytes_to_step_meta(&step_meta_to_bytes(0.0, 1.0, 0.0, true)).unwrap();
+        assert!(ov);
         assert!(bytes_to_metas(&[0u8; 15]).is_err());
-        assert!(bytes_to_step_meta(&[0u8; 23]).is_err());
+        assert!(bytes_to_step_meta(&[0u8; 24]).is_err());
+        let mut bad = step_meta_to_bytes(1.0, 1.0, 1.0, false);
+        bad[24] = 7;
+        assert!(bytes_to_step_meta(&bad).is_err());
+    }
+
+    #[test]
+    fn dtype_frames_roundtrip_and_bad_tag_rejected() {
+        let vals = [1.0f32, -0.5, 3.0];
+        for dtype in [SlabDtype::F16, SlabDtype::Bf16] {
+            let f = Frame::with_dtype(
+                FrameKind::Grad,
+                1,
+                9,
+                2,
+                dtype,
+                segment_to_bytes(dtype, &vals),
+            );
+            assert_eq!(f.payload.len(), vals.len() * 2);
+            let g = decode_exact(&encode(&f)).unwrap();
+            assert_eq!(g.dtype, dtype);
+            // The sample values are dtype-representable → lossless.
+            assert_eq!(bytes_to_segment(dtype, &g.payload).unwrap().as_ref(), &vals);
+            assert!(bytes_to_segment(dtype, &g.payload[..1]).is_err());
+        }
+        // Corrupt the dtype byte (body offset 17 → frame offset 29).
+        let mut bytes = encode(&Frame::bare(FrameKind::Done, 0, 1));
+        bytes[29] = 7;
+        let n = bytes.len();
+        let crc = fnv1a32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(decode(&bytes).unwrap_err(), WireError::BadDtype(7));
     }
 
     #[test]

@@ -24,6 +24,7 @@ use hybridnmt::serve::{
 };
 use hybridnmt::sim::simulate;
 use hybridnmt::storage::{local::write_file_atomic, LocalDir, Retrying, RetryPolicy};
+use hybridnmt::tensor::half::SlabDtype;
 use hybridnmt::train::{checkpoint, init_params, StepMode, Trainer};
 use hybridnmt::util::per_sec;
 use std::sync::Arc;
@@ -92,6 +93,10 @@ COMMANDS
              [--bucket-kib N (flat-slab bucket size, default 256)]
              [--map-step (PR-4 map-based step engine instead of the
              overlapped flat-slab engine)]
+             [--precision f32|f16|bf16 (storage precision of the
+             parameter/gradient slabs; 16-bit modes keep an f32 master
+             copy in the optimizer and use dynamic loss scaling;
+             default f32, bitwise-identical to earlier releases)]
              [--dist N (multi-process data parallelism: spawn N rank
              processes over loopback TCP; params stay bitwise-identical
              to the single-process run)]
@@ -107,6 +112,10 @@ COMMANDS
              part of the sweep: checkpoint_stall_ms ~ 0 is the claim)]
              [--dist N (adds r{R}.dist{N}.{ps,replicated} rows: an
              N-rank in-process world per collective mode)]
+             [--precision f32,bf16 (comma list; adds 16-bit rows — keyed
+             r{R}.accum{K}.{f16,bf16} with bytes_per_step and
+             overflow_skips columns — next to the f32 sweep; 16-bit rows
+             gate within 10% of the f32 loss)]
              (training-throughput sweep over replicas 1..R x accum {1, K},
              each config on the flat-slab engine AND the map reference;
              writes BENCH_train.json + results/train_bench.{txt,csv})
@@ -116,6 +125,11 @@ COMMANDS
   serve-bench  [--ckpt file.bin] [--model small] [--beam B] [--batch N]
              [--devices D] [--n sentences] (sustained decode throughput;
              writes BENCH_decode.json + results/decode_bench.{txt,csv})
+             [--quantize int8 (adds int8.batch{N}.devices{D} rows: the
+             batched sweep against a post-training-quantized bank, with
+             bytes_uploaded and the token-identity delta vs the f32
+             reference)] [--accept-delta F (gate: max fraction of
+             sentences allowed to differ under int8; default 0.15)]
   serve-load [--ckpt file.bin] [--model small] [--beam B] [--replicas R]
              [--rate req/s] [--requests N] [--pool N distinct sentences]
              [--queue CAP] [--max-wait-ms W] [--bucket-width T] [--seed S]
@@ -288,6 +302,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.set_step_mode(StepMode::Map);
     }
     trainer.set_bucket_bytes(args.usize("bucket-kib", 256)?.max(1) * 1024);
+    let precision: SlabDtype =
+        args.str_or("precision", "f32").parse().map_err(|e: String| anyhow!(e))?;
+    trainer.set_precision(precision)?;
+    if precision != SlabDtype::F32 {
+        println!(
+            "mixed precision: {precision} parameter/gradient slabs, dynamic loss scaling \
+             (f32 master copy in the optimizer)"
+        );
+    }
     let replicas = args.usize("replicas", 1)?.max(1);
     let accum = args.usize("accum", 1)?.max(1);
     trainer.set_pipeline(replicas, accum);
@@ -346,7 +369,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     trainer.run(&mut batcher, |line| println!("{line}"))?;
     if let Some(ckpt) = args.get("ckpt") {
         trainer.save_checkpoint(std::path::Path::new(ckpt))?;
-        println!("checkpoint (v2: params + optimizer state) written to {ckpt}");
+        if precision == SlabDtype::F32 {
+            println!("checkpoint (v2: params + optimizer state) written to {ckpt}");
+        } else {
+            println!(
+                "checkpoint (v3: params + optimizer state + {precision} loss-scale state) \
+                 written to {ckpt}"
+            );
+        }
     }
     let st = engine.stats();
     println!(
@@ -535,6 +565,7 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
     let mut spec = hybridnmt::dist::RankSpec::new(exp.clone(), mode, replicas, accum, steps);
     spec.sequential = args.get("sequential").is_some();
     spec.bucket_bytes = Some(args.usize("bucket-kib", 256)?.max(1) * 1024);
+    spec.precision = args.str_or("precision", "f32").parse().map_err(|e: String| anyhow!(e))?;
     if let Some(die) = args.get("dist-die") {
         let (r, s) = parse_dist_die(die)?;
         if r == rank {
@@ -611,25 +642,49 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
         replica_counts.push(max_rep);
     }
     let accums: Vec<usize> = if max_accum > 1 { vec![1, max_accum] } else { vec![1] };
+    // `--precision f32,bf16` adds 16-bit rows next to the f32 sweep.
+    // The map reference engine is f32-only, so 16-bit precisions run on
+    // the flat engine alone.
+    let precisions: Vec<SlabDtype> = args
+        .str_or("precision", "f32")
+        .split(',')
+        .map(|s| s.trim().parse::<SlabDtype>().map_err(|e: String| anyhow!(e)))
+        .collect::<Result<Vec<_>>>()?;
+    let mut engine_cfgs: Vec<(StepMode, SlabDtype)> = Vec::new();
+    for &prec in &precisions {
+        engine_cfgs.push((StepMode::Flat, prec));
+        if prec == SlabDtype::F32 {
+            engine_cfgs.push((StepMode::Map, prec));
+        }
+    }
 
     let mut rows = Vec::new();
-    // First timed loss per global-batch size: equal-sized configs must
-    // agree bitwise (same shards, same fixed-order tree) — including
-    // flat vs map rows of the same config.
-    let mut loss_gate: std::collections::BTreeMap<usize, f64> = std::collections::BTreeMap::new();
+    // First timed loss per (global-batch size, precision): equal-sized
+    // f32 configs must agree bitwise (same shards, same fixed-order
+    // tree) — including flat vs map rows of the same config. 16-bit
+    // rows gate bitwise against each other and within 10% of the f32
+    // loss (the loss-parity gate of the mixed-precision path).
+    let mut loss_gate: std::collections::BTreeMap<(usize, u8), f64> =
+        std::collections::BTreeMap::new();
     let ckpt_every = args.usize("checkpoint-every", 2)?.max(1);
     for &replicas in &replica_counts {
         for &accum in &accums {
-            for mode in [StepMode::Flat, StepMode::Map] {
+            for &(mode, prec) in &engine_cfgs {
                 let label = match mode {
                     StepMode::Flat => "flat",
                     StepMode::Map => "map",
+                };
+                let label = if prec == SlabDtype::F32 {
+                    label.to_string()
+                } else {
+                    format!("{label}-{prec}")
                 };
                 let mut batcher = report::make_batcher(&exp, &corpus)?;
                 let mut trainer = Trainer::new(&engine, &exp)?;
                 trainer.sequential = args.get("sequential").is_some();
                 trainer.set_step_mode(mode);
                 trainer.set_bucket_bytes(bucket_bytes);
+                trainer.set_precision(prec)?;
                 trainer.set_pipeline(replicas, accum);
                 let per_step = trainer.pipeline.micro_per_step();
                 // Warmup (compilation, first uploads) outside the timing.
@@ -652,6 +707,8 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                 let mut ckpt_stall = 0.0f64;
                 let mut tokens = 0.0f64;
                 let mut allocs = 0u64;
+                let mut grad_bytes = 0u64;
+                let mut ovf_skips = 0u64;
                 let mut first_loss = f64::NAN;
                 let mut last_loss = f64::NAN;
                 let t0 = std::time::Instant::now();
@@ -669,6 +726,8 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                         stall_s += stall;
                         tokens += st.src_tokens;
                         allocs += st.allocs;
+                        grad_bytes += st.grad_bytes;
+                        ovf_skips += st.overflow_skipped as u64;
                         if i == 0 {
                             first_loss = st.loss_per_tok;
                         }
@@ -683,7 +742,7 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                 let _ = std::fs::remove_dir_all(&ck_dir);
                 let ckpt_bytes_per_s =
                     if ck.write_seconds > 0.0 { ck.bytes as f64 / ck.write_seconds } else { 0.0 };
-                match loss_gate.get(&per_step) {
+                match loss_gate.get(&(per_step, prec.code())) {
                     Some(expect) if expect.to_bits() != first_loss.to_bits() => {
                         return Err(anyhow!(
                             "training diverged from the equal-batch reference: {replicas} \
@@ -693,7 +752,21 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                     }
                     Some(_) => {}
                     None => {
-                        loss_gate.insert(per_step, first_loss);
+                        loss_gate.insert((per_step, prec.code()), first_loss);
+                    }
+                }
+                if prec != SlabDtype::F32 {
+                    // Loss-parity gate: a 16-bit run of the same global
+                    // batch must land within 10% of the f32 loss.
+                    if let Some(f32_first) = loss_gate.get(&(per_step, SlabDtype::F32.code())) {
+                        let rel = (first_loss - f32_first).abs() / f32_first.abs().max(1e-9);
+                        if !(rel < 0.1) {
+                            return Err(anyhow!(
+                                "{prec} loss parity gate failed: {replicas} replicas x {accum} \
+                                 accum got first loss {first_loss}, f32 reference {f32_first} \
+                                 (relative gap {rel:.4} >= 0.1)"
+                            ));
+                        }
                     }
                 }
                 let sn = steps as f64;
@@ -733,6 +806,9 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                     ckpt_bytes_per_s,
                     dist_world: 0,
                     dist_mode: String::new(),
+                    precision: prec,
+                    bytes_per_step: grad_bytes as f64 / sn,
+                    overflow_skips: ovf_skips,
                 });
             }
         }
@@ -812,6 +888,9 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                 ckpt_bytes_per_s: 0.0,
                 dist_world,
                 dist_mode: mode.key().to_string(),
+                precision: SlabDtype::F32,
+                bytes_per_step: stats.iter().map(|s| s.grad_bytes).sum::<u64>() as f64 / sn,
+                overflow_skips: stats.iter().filter(|s| s.overflow_skipped).count() as u64,
             });
         }
         if first_losses.len() == 2 && first_losses[0].to_bits() != first_losses[1].to_bits() {
@@ -959,8 +1038,26 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if *devices.last().unwrap() != max_dev {
         devices.push(max_dev);
     }
+    // `--quantize int8` repeats the batched sweep against an int8
+    // post-training-quantized bank, gated by `--accept-delta` (max
+    // fraction of sentences allowed to differ from the f32 reference).
+    let int8_gate = match args.get("quantize") {
+        None => None,
+        Some("int8") => Some(args.str_or("accept-delta", "0.15").parse::<f64>().with_context(
+            || format!("--accept-delta {}", args.str_or("accept-delta", "0.15")),
+        )?),
+        Some(q) => return Err(anyhow!("--quantize {q}: only `int8` is supported")),
+    };
     let out = report::decode_bench(
-        &s.engine, &s.params, &s.bank, s.input_feeding, &srcs, &s.cfg, &batches, &devices,
+        &s.engine,
+        &s.params,
+        &s.bank,
+        s.input_feeding,
+        &srcs,
+        &s.cfg,
+        &batches,
+        &devices,
+        int8_gate,
     )?;
     print!("{out}");
     println!("wrote BENCH_decode.json");

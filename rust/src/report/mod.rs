@@ -11,10 +11,11 @@ use crate::decode::{
 use crate::metrics::corpus_bleu;
 use crate::model_spec::param_count;
 use crate::parallel::build_plan;
-use crate::runtime::{Engine, ParamBank};
+use crate::runtime::{quantize_params, Engine, ParamBank};
 use crate::serve::ServeStats;
 use crate::sim::simulate;
 use crate::storage::local::write_file_atomic;
+use crate::tensor::half::SlabDtype;
 use crate::tensor::Tensor;
 use crate::train::Trainer;
 use crate::util::json::Json;
@@ -538,6 +539,14 @@ pub struct DecodeRow {
     pub devices: usize,
     /// Beam width.
     pub beam: usize,
+    /// Weight precision the parameter bank served: `"f32"`, or
+    /// `"int8"` for post-training-quantized rows.
+    pub quant: String,
+    /// Fraction of sentences whose output tokens differ from the f32
+    /// single-sentence reference. Always 0 for f32 rows (those are
+    /// gated exactly token-identical); int8 rows are gated against the
+    /// caller's acceptance threshold.
+    pub accept_delta: f64,
     /// Throughput + residency counters of the run.
     pub stats: DecodeStats,
 }
@@ -548,6 +557,12 @@ pub struct DecodeRow {
 /// sentences/sec side by side. Writes `results/decode_bench.{txt,csv}`
 /// and `BENCH_decode.json` (flat name → number, same convention as the
 /// other `BENCH_*.json` perf-tracking files).
+///
+/// With `int8_gate = Some(max_delta)` the sweep repeats every batched
+/// configuration against an int8 post-training-quantized parameter
+/// bank, reporting upload bytes and the token-identity delta vs the
+/// f32 reference — and errors if any quantized row's delta exceeds
+/// `max_delta` (fraction of sentences allowed to differ).
 #[allow(clippy::too_many_arguments)]
 pub fn decode_bench(
     engine: &Engine,
@@ -558,6 +573,7 @@ pub fn decode_bench(
     cfg: &BeamConfig,
     batches: &[usize],
     devices: &[usize],
+    int8_gate: Option<f64>,
 ) -> Result<String> {
     let mut rows: Vec<DecodeRow> = Vec::new();
 
@@ -576,6 +592,8 @@ pub fn decode_bench(
         batch: 1,
         devices: 1,
         beam: cfg.beam,
+        quant: "f32".into(),
+        accept_delta: 0.0,
         stats: DecodeStats {
             sentences: srcs.len(),
             out_tokens,
@@ -604,8 +622,43 @@ pub fn decode_bench(
                 batch,
                 devices: dv,
                 beam: cfg.beam,
+                quant: "f32".into(),
+                accept_delta: 0.0,
                 stats,
             });
+        }
+    }
+
+    if let Some(max_delta) = int8_gate {
+        // Fresh bank for the quantized rows: a bank never serves mixed
+        // precisions, so the f32 sweep's bank is left untouched.
+        let qbank = ParamBank::new();
+        qbank.set_quantized(std::sync::Arc::new(quantize_params(params)));
+        for &batch in batches {
+            for &dv in devices {
+                let opts = DecodeOptions { batch, devices: dv };
+                let (hyps, stats) =
+                    translate_corpus(engine, params, &qbank, input_feeding, srcs, cfg, &opts)?;
+                let differing = hyps.iter().zip(&ref_hyps).filter(|(h, r)| h != r).count();
+                let delta = differing as f64 / srcs.len().max(1) as f64;
+                if delta > max_delta {
+                    return Err(anyhow::anyhow!(
+                        "int8 decode (batch {batch}, devices {dv}): {differing}/{} sentences \
+                         diverged from the f32 reference — accept delta {delta:.3} exceeds the \
+                         gate {max_delta:.3}",
+                        srcs.len()
+                    ));
+                }
+                rows.push(DecodeRow {
+                    engine: "batched".into(),
+                    batch,
+                    devices: dv,
+                    beam: cfg.beam,
+                    quant: "int8".into(),
+                    accept_delta: delta,
+                    stats,
+                });
+            }
         }
     }
     Ok(decode_bench_table(&rows, srcs.len()))
@@ -623,12 +676,14 @@ pub fn decode_bench_table(rows: &[DecodeRow], sentences: usize) -> String {
     .unwrap();
     writeln!(
         out,
-        "{:<10} {:>6} {:>8} {:>5}  {:>9} {:>9} {:>8}  {:>12} {:>12}",
-        "engine", "batch", "devices", "beam", "sent/s", "tok/s", "wall s", "param up/hit", "state up/hit"
+        "{:<10} {:>6} {:>8} {:>5} {:>6}  {:>9} {:>9} {:>8}  {:>12} {:>12} {:>9} {:>6}",
+        "engine", "batch", "devices", "beam", "quant", "sent/s", "tok/s", "wall s",
+        "param up/hit", "state up/hit", "up kB", "Δtok"
     )
     .unwrap();
     let mut csv = String::from(
-        "engine,batch,devices,beam,sent_per_s,tok_per_s,wall_s,param_uploads,param_hits,state_uploads,state_hits\n",
+        "engine,batch,devices,beam,quant,sent_per_s,tok_per_s,wall_s,param_uploads,param_hits,\
+         state_uploads,state_hits,bytes_uploaded,accept_delta\n",
     );
     let mut bench: BTreeMap<String, Json> = BTreeMap::new();
     let base = rows.first().map(|r| r.stats.sentences_per_sec());
@@ -636,46 +691,67 @@ pub fn decode_bench_table(rows: &[DecodeRow], sentences: usize) -> String {
         let st = &r.stats;
         writeln!(
             out,
-            "{:<10} {:>6} {:>8} {:>5}  {:>9.2} {:>9.1} {:>8.2}  {:>12} {:>12}",
+            "{:<10} {:>6} {:>8} {:>5} {:>6}  {:>9.2} {:>9.1} {:>8.2}  {:>12} {:>12} {:>9.1} {:>6.3}",
             r.engine,
             r.batch,
             r.devices,
             r.beam,
+            r.quant,
             st.sentences_per_sec(),
             st.tokens_per_sec(),
             st.wall_s,
             format!("{}/{}", st.param_uploads, st.param_hits),
             format!("{}/{}", st.state_uploads, st.state_hits),
+            st.param_bytes_uploaded as f64 / 1e3,
+            r.accept_delta,
         )
         .unwrap();
         writeln!(
             csv,
-            "{},{},{},{},{:.3},{:.2},{:.4},{},{},{},{}",
+            "{},{},{},{},{},{:.3},{:.2},{:.4},{},{},{},{},{},{:.4}",
             r.engine,
             r.batch,
             r.devices,
             r.beam,
+            r.quant,
             st.sentences_per_sec(),
             st.tokens_per_sec(),
             st.wall_s,
             st.param_uploads,
             st.param_hits,
             st.state_uploads,
-            st.state_hits
+            st.state_hits,
+            st.param_bytes_uploaded,
+            r.accept_delta,
         )
         .unwrap();
         let key = if r.engine == "single" {
             format!("single.beam{}", r.beam)
+        } else if r.quant != "f32" {
+            // Quantized rows get their own prefix so f32 keys stay
+            // byte-stable across sweeps with and without --quantize.
+            format!("{}.batch{}.devices{}.beam{}", r.quant, r.batch, r.devices, r.beam)
         } else {
             format!("batch{}.devices{}.beam{}", r.batch, r.devices, r.beam)
         };
         bench.insert(format!("{key}.sent_per_s"), Json::Num(st.sentences_per_sec()));
         bench.insert(format!("{key}.wall_ns"), Json::Num(st.wall_s * 1e9));
+        // Quantization schema (numeric-only values: quant cell is the
+        // weight bit-width under quantization, 0 = unquantized f32).
+        bench.insert(
+            format!("{key}.quant"),
+            Json::Num(if r.quant == "int8" { 8.0 } else { 0.0 }),
+        );
+        bench.insert(
+            format!("{key}.bytes_uploaded"),
+            Json::Num(st.param_bytes_uploaded as f64),
+        );
+        bench.insert(format!("{key}.accept_delta"), Json::Num(r.accept_delta));
     }
     if let (Some(base), Some(best)) = (
         base,
         rows.iter()
-            .filter(|r| r.engine == "batched")
+            .filter(|r| r.engine == "batched" && r.quant == "f32")
             .map(|r| r.stats.sentences_per_sec())
             .max_by(|a, b| a.total_cmp(b)),
     ) {
@@ -993,6 +1069,17 @@ pub struct TrainBenchRow {
     /// Distributed mode key (`ps` | `replicated`); empty when
     /// `dist_world == 0`.
     pub dist_mode: String,
+    /// Storage precision of the parameter/gradient slabs for this row
+    /// (f32 rows keep the historical row keys; f16/bf16 rows get a
+    /// `.f16`/`.bf16` key suffix).
+    pub precision: SlabDtype,
+    /// Mean gradient bytes shipped per optimizer step at the row's
+    /// storage dtype (shards × slab elements × bytes/elem) — the
+    /// halved-wire-traffic claim of the 16-bit modes.
+    pub bytes_per_step: f64,
+    /// Optimizer steps skipped by the dynamic loss scaler (overflow in
+    /// the folded gradient); always 0 for f32 rows.
+    pub overflow_skips: u64,
 }
 
 /// Render the training-throughput sweep — replicas × accumulation vs
@@ -1011,22 +1098,22 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
     .unwrap();
     writeln!(
         out,
-        "{:<9} {:>6} {:>7} {:>7} {:>7}  {:>9} {:>9} {:>5} {:>9} {:>9} {:>9}  {:>10} {:>9} {:>9} {:>9} {:>10}",
+        "{:<9} {:>6} {:>10} {:>7} {:>7}  {:>9} {:>9} {:>5} {:>9} {:>9} {:>9}  {:>10} {:>9} {:>9} {:>9} {:>10} {:>9} {:>4}",
         "replicas", "accum", "mode", "steps", "gbatch", "step ms", "reduce ms", "ovl%",
         "apply ms", "stall ms", "ck-st ms", "src tok/s", "loss/tok", "uploads", "allocs",
-        "ckpt MB/s"
+        "ckpt MB/s", "grad kB", "ovf"
     )
     .unwrap();
     let mut csv = String::from(
         "replicas,accum,mode,steps,global_batch,step_ms,reduce_ms,overlap_pct,apply_ms,\
          stall_ms,checkpoint_stall_ms,src_tok_per_s,loss_per_tok,uploads_per_step,\
-         allocs_per_step,checkpoint_bytes_per_s\n",
+         allocs_per_step,checkpoint_bytes_per_s,precision,bytes_per_step,overflow_skips\n",
     );
     let mut bench: BTreeMap<String, Json> = BTreeMap::new();
     for r in rows {
         // Distributed rows run the flat engine; their mode column names
         // the collective instead (`ps:N` / `repl:N` for N processes).
-        let mode = if r.dist_world > 0 {
+        let mut mode = if r.dist_world > 0 {
             let short = if r.dist_mode == "replicated" { "repl" } else { r.dist_mode.as_str() };
             format!("{short}:{}", r.dist_world)
         } else if r.flat {
@@ -1034,10 +1121,13 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
         } else {
             "map".to_string()
         };
+        if r.precision != SlabDtype::F32 {
+            mode = format!("{mode}/{}", r.precision);
+        }
         writeln!(
             out,
-            "{:<9} {:>6} {:>7} {:>7} {:>7}  {:>9.1} {:>9.1} {:>5.1} {:>9.1} {:>9.1} {:>9.2}  \
-             {:>10.1} {:>9.3} {:>9.1} {:>9.0} {:>10.1}",
+            "{:<9} {:>6} {:>10} {:>7} {:>7}  {:>9.1} {:>9.1} {:>5.1} {:>9.1} {:>9.1} {:>9.2}  \
+             {:>10.1} {:>9.3} {:>9.1} {:>9.0} {:>10.1} {:>9.1} {:>4}",
             r.replicas,
             r.accum,
             mode,
@@ -1054,11 +1144,13 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             r.uploads_per_step,
             r.allocs_per_step,
             r.ckpt_bytes_per_s / 1e6,
+            r.bytes_per_step / 1e3,
+            r.overflow_skips,
         )
         .unwrap();
         writeln!(
             csv,
-            "{},{},{},{},{},{:.3},{:.3},{:.2},{:.3},{:.3},{:.4},{:.2},{:.5},{:.1},{:.1},{:.0}",
+            "{},{},{},{},{},{:.3},{:.3},{:.2},{:.3},{:.3},{:.4},{:.2},{:.5},{:.1},{:.1},{:.0},{},{:.0},{}",
             r.replicas,
             r.accum,
             mode,
@@ -1075,18 +1167,27 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             r.uploads_per_step,
             r.allocs_per_step,
             r.ckpt_bytes_per_s,
+            r.precision,
+            r.bytes_per_step,
+            r.overflow_skips,
         )
         .unwrap();
         // Flat rows keep the historical prefix; map-reference rows get
         // their own `.map` row prefix; distributed rows are keyed by
         // world size + collective mode. All three are schema-checked.
-        let key = if r.dist_world > 0 {
+        let mut key = if r.dist_world > 0 {
             format!("r{}.dist{}.{}", r.replicas, r.dist_world, r.dist_mode)
         } else if r.flat {
             format!("r{}.accum{}", r.replicas, r.accum)
         } else {
             format!("r{}.accum{}.map", r.replicas, r.accum)
         };
+        if r.precision != SlabDtype::F32 {
+            // f32 rows keep their historical keys; 16-bit rows sit next
+            // to them under a dtype suffix so sweeps across precisions
+            // accumulate instead of clobbering.
+            key = format!("{key}.{}", r.precision);
+        }
         for (suffix, v) in [
             ("tok_per_s", r.src_tok_per_s),
             ("step_ms", r.step_s * 1e3),
@@ -1098,16 +1199,27 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             ("checkpoint_bytes_per_s", r.ckpt_bytes_per_s),
             ("uploads_per_step", r.uploads_per_step),
             ("allocs_per_step", r.allocs_per_step),
+            // Mixed-precision schema (BENCH values are numeric-only, so
+            // the precision cell is the dtype code: f32=0 f16=1 bf16=2).
+            ("precision", r.precision.code() as f64),
+            ("bytes_per_step", r.bytes_per_step),
+            ("overflow_skips", r.overflow_skips as f64),
         ] {
             bench.insert(format!("{key}.{suffix}"), Json::Num(v));
         }
     }
     if let (Some(base), Some(best)) = (
         rows.iter()
-            .find(|r| r.replicas == 1 && r.accum == 1 && r.flat && r.dist_world == 0)
+            .find(|r| {
+                r.replicas == 1
+                    && r.accum == 1
+                    && r.flat
+                    && r.dist_world == 0
+                    && r.precision == SlabDtype::F32
+            })
             .map(|r| r.src_tok_per_s),
         rows.iter()
-            .filter(|r| r.dist_world == 0)
+            .filter(|r| r.dist_world == 0 && r.precision == SlabDtype::F32)
             .map(|r| r.src_tok_per_s)
             .max_by(|a, b| a.total_cmp(b)),
     ) {

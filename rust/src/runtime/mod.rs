@@ -368,6 +368,94 @@ impl Engine {
     }
 }
 
+/// One post-training-quantized parameter: symmetric per-tensor int8.
+/// `f32 ≈ q as f32 * scale`, `scale = max_abs / 127`; zero-point is
+/// always 0, so the codec is a single multiply each way.
+#[derive(Debug, Clone)]
+pub struct QuantTensor {
+    pub shape: Vec<usize>,
+    pub scale: f32,
+    pub data: Vec<i8>,
+}
+
+impl QuantTensor {
+    /// Quantize one f32 tensor (round-to-nearest, clamped to ±127 so
+    /// the grid is symmetric; an all-zero tensor gets scale 1.0).
+    pub fn from_tensor(t: &Tensor) -> Self {
+        let max_abs = t.data().iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+        let data = t
+            .data()
+            .iter()
+            .map(|x| (x / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        QuantTensor { shape: t.shape().to_vec(), scale, data }
+    }
+
+    /// Expand back to f32 (the dequant-on-bind path — the engine only
+    /// uploads f32/i32 buffers).
+    pub fn dequantize(&self) -> Tensor {
+        let data: Vec<f32> = self.data.iter().map(|&q| q as f32 * self.scale).collect();
+        Tensor::new(self.shape.clone(), data)
+    }
+
+    /// Bytes of the quantized representation (i8 payload + f32 scale)
+    /// — what a quantized bank's upload/resident accounting reports.
+    pub fn quant_bytes(&self) -> u64 {
+        self.data.len() as u64 + 4
+    }
+
+    /// Worst-case absolute dequantization error of this tensor
+    /// (half a quantization step).
+    pub fn max_abs_error(&self) -> f32 {
+        self.scale * 0.5
+    }
+}
+
+/// A whole parameter set quantized to int8: the scale table plus one
+/// i8 slab per tensor. Built offline from checkpoint weights
+/// ([`quantize_params`]) and installed on a serving [`ParamBank`] via
+/// [`ParamBank::set_quantized`].
+#[derive(Debug, Clone, Default)]
+pub struct QuantParams {
+    tensors: BTreeMap<String, QuantTensor>,
+}
+
+impl QuantParams {
+    pub fn get(&self, name: &str) -> Option<&QuantTensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total quantized bytes (i8 payloads + scale table).
+    pub fn total_bytes(&self) -> u64 {
+        self.tensors.values().map(QuantTensor::quant_bytes).sum()
+    }
+
+    /// Total f32 bytes of the source tensors (the 4× baseline).
+    pub fn f32_bytes(&self) -> u64 {
+        self.tensors.values().map(|t| 4 * t.data.len() as u64).sum()
+    }
+}
+
+/// Symmetric per-tensor int8 post-training quantization of a
+/// parameter map.
+pub fn quantize_params(params: &BTreeMap<String, Tensor>) -> QuantParams {
+    QuantParams {
+        tensors: params
+            .iter()
+            .map(|(name, t)| (name.clone(), QuantTensor::from_tensor(t)))
+            .collect(),
+    }
+}
+
 /// Device-resident parameter buffers: upload each parameter once per
 /// optimizer step instead of once per artifact call.
 ///
@@ -386,11 +474,29 @@ pub struct ParamBank {
     /// Bucketed prime passes performed (the flat trainer's batched
     /// upload path).
     primes: AtomicU64,
+    /// When set, [`ParamBank::get_or_upload`] serves dequantized int8
+    /// weights instead of the caller's f32 tensors, and upload/resident
+    /// byte accounting switches to the i8 representation.
+    quant: Mutex<Option<Arc<QuantParams>>>,
 }
 
 impl ParamBank {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Install an int8 quantized weight store. From now on parameter
+    /// binds dequantize from `q` (the caller's f32 tensor is only used
+    /// for the name/shape contract); any already-resident f32 buffers
+    /// are dropped so a bank never serves mixed precisions.
+    pub fn set_quantized(&self, q: Arc<QuantParams>) {
+        *self.quant.lock().unwrap() = Some(q);
+        self.bufs.clear();
+    }
+
+    /// `Some("int8")` when a quantized store is installed.
+    pub fn quant_kind(&self) -> Option<&'static str> {
+        self.quant.lock().unwrap().as_ref().map(|_| "int8")
     }
 
     /// Upload every not-yet-resident parameter of a flat slab,
@@ -432,7 +538,31 @@ impl ParamBank {
         name: &str,
         t: &Tensor,
     ) -> Result<Arc<DeviceBuf>> {
-        self.bufs.get_or_upload_f(engine, name, t)
+        let quant = self.quant.lock().unwrap().clone();
+        match quant {
+            None => self.bufs.get_or_upload_f(engine, name, t),
+            Some(q) => {
+                let qt = q.get(name).ok_or_else(|| {
+                    anyhow!("quantized bank has no tensor `{name}`")
+                })?;
+                if qt.shape != t.shape() {
+                    return Err(anyhow!(
+                        "quantized `{name}` has shape {:?}, model wants {:?}",
+                        qt.shape,
+                        t.shape()
+                    ));
+                }
+                // Dequant-on-bind: the engine uploads the expanded f32
+                // buffer (PJRT CPU takes f32/i32 only), but this bank's
+                // traffic/residency accounting records the i8 bytes —
+                // the storage the quantized tenant actually costs.
+                self.bufs.get_or(name, || {
+                    let mut b = engine.upload_f(&qt.dequantize())?;
+                    b.bytes = qt.quant_bytes();
+                    Ok(b)
+                })
+            }
+        }
     }
 
     /// Drop all resident buffers (host parameters changed).
@@ -712,5 +842,52 @@ pub mod keys {
     }
     pub fn attn_step_logits(b: usize) -> String {
         format!("attn_step_logits.b{b}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_bounds_error_by_half_a_step() {
+        let t = Tensor::new(vec![2, 3], vec![0.5, -1.0, 0.25, 0.9999, -0.3, 0.0]);
+        let q = QuantTensor::from_tensor(&t);
+        assert_eq!(q.shape, &[2, 3]);
+        assert_eq!(q.scale, 1.0 / 127.0);
+        let d = q.dequantize();
+        for (x, y) in t.data().iter().zip(d.data()) {
+            assert!(
+                (x - y).abs() <= q.max_abs_error() + 1e-7,
+                "{x} dequantized to {y} (scale {})",
+                q.scale
+            );
+        }
+        // Extremes hit the grid exactly.
+        let t = Tensor::new(vec![2], vec![2.54, -2.54]);
+        let q = QuantTensor::from_tensor(&t);
+        assert_eq!(q.data, vec![127, -127]);
+        assert_eq!(q.dequantize().data(), t.data());
+    }
+
+    #[test]
+    fn quantize_all_zero_tensor_is_safe() {
+        let t = Tensor::new(vec![3], vec![0.0; 3]);
+        let q = QuantTensor::from_tensor(&t);
+        assert_eq!(q.scale, 1.0);
+        assert_eq!(q.dequantize().data(), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn quant_params_byte_accounting() {
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), Tensor::new(vec![4], vec![1.0, 2.0, -3.0, 0.5]));
+        m.insert("b".to_string(), Tensor::new(vec![2, 2], vec![0.1; 4]));
+        let q = quantize_params(&m);
+        assert_eq!(q.len(), 2);
+        // 4 i8 + 4-byte scale per tensor vs 16 f32 bytes per tensor.
+        assert_eq!(q.total_bytes(), 2 * (4 + 4));
+        assert_eq!(q.f32_bytes(), 2 * 16);
+        assert!(q.get("a").is_some() && q.get("missing").is_none());
     }
 }

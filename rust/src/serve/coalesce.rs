@@ -168,25 +168,33 @@ pub struct TenantGroup {
     /// with exactly this generation's parameters, no matter how many
     /// swaps happen while the group waits.
     pub generation: u64,
+    /// Weight precision of that generation's bank ("f32" or "int8") —
+    /// carried so a precision change across a hot swap can never hide
+    /// inside one group.
+    pub quant: String,
     /// The packed requests.
     pub group: Group,
 }
 
 /// Per-tenant, per-generation length-bucketed coalescer.
 ///
-/// The single-tenant [`Coalescer`]'s bucket key grows two dimensions:
-/// `(tenant, generation, length-bucket)`. Keying by generation is what
-/// makes a hot swap response-exact — requests admitted before the swap
-/// coalesce (and decode) entirely under the old parameters, requests
-/// after it entirely under the new; no group ever mixes the two.
+/// The single-tenant [`Coalescer`]'s bucket key grows three
+/// dimensions: `(tenant, generation, quant, length-bucket)`. Keying by
+/// generation is what makes a hot swap response-exact — requests
+/// admitted before the swap coalesce (and decode) entirely under the
+/// old parameters, requests after it entirely under the new; no group
+/// ever mixes the two. Keying by the weight precision (`quant`) too
+/// means a swap from f32 to int8 weights (or back) also can never mix
+/// precisions within one group, even if generation numbering were ever
+/// reused or misassigned.
 #[derive(Debug)]
 pub struct MtCoalescer {
     capacity: usize,
     bucket_width: usize,
     max_wait_s: f64,
-    /// `(tenant, generation, length-bucket)` → waiting requests in
-    /// admission order. BTreeMap keeps every walk deterministic.
-    buckets: BTreeMap<(String, u64, usize), Vec<Pending>>,
+    /// `(tenant, generation, quant, length-bucket)` → waiting requests
+    /// in admission order. BTreeMap keeps every walk deterministic.
+    buckets: BTreeMap<(String, u64, String, usize), Vec<Pending>>,
 }
 
 impl MtCoalescer {
@@ -205,11 +213,23 @@ impl MtCoalescer {
         (src_len.max(1) - 1) / self.bucket_width
     }
 
-    /// Admit one request for `tenant` at model `generation`. Returns a
-    /// full group the moment its `(tenant, generation, length)` bucket
-    /// reaches capacity.
-    pub fn push(&mut self, tenant: &str, generation: u64, req: Pending) -> Option<TenantGroup> {
-        let key = (tenant.to_string(), generation, self.len_key(req.src.len()));
+    /// Admit one request for `tenant` at model `generation`, decoding
+    /// against `quant`-precision weights ("f32" or "int8"). Returns a
+    /// full group the moment its `(tenant, generation, quant, length)`
+    /// bucket reaches capacity.
+    pub fn push(
+        &mut self,
+        tenant: &str,
+        generation: u64,
+        quant: &str,
+        req: Pending,
+    ) -> Option<TenantGroup> {
+        let key = (
+            tenant.to_string(),
+            generation,
+            quant.to_string(),
+            self.len_key(req.src.len()),
+        );
         let bucket = self.buckets.entry(key.clone()).or_default();
         bucket.push(req);
         if bucket.len() >= self.capacity {
@@ -217,6 +237,7 @@ impl MtCoalescer {
             Some(TenantGroup {
                 tenant: tenant.to_string(),
                 generation,
+                quant: quant.to_string(),
                 group: Group { reqs, capacity: self.capacity },
             })
         } else {
@@ -228,7 +249,7 @@ impl MtCoalescer {
     /// now, partial or not (same deadline contract as the
     /// single-tenant coalescer, enforced per tenant-generation bucket).
     pub fn flush_expired(&mut self, now: f64) -> Vec<TenantGroup> {
-        let expired: Vec<(String, u64, usize)> = self
+        let expired: Vec<(String, u64, String, usize)> = self
             .buckets
             .iter()
             .filter(|(_, reqs)| {
@@ -242,6 +263,7 @@ impl MtCoalescer {
             .map(|k| TenantGroup {
                 tenant: k.0.clone(),
                 generation: k.1,
+                quant: k.2.clone(),
                 group: Group {
                     reqs: self.buckets.remove(&k).unwrap_or_default(),
                     capacity: self.capacity,
@@ -268,6 +290,7 @@ impl MtCoalescer {
             .map(|(k, reqs)| TenantGroup {
                 tenant: k.0,
                 generation: k.1,
+                quant: k.2,
                 group: Group { reqs, capacity: self.capacity },
             })
             .collect()
@@ -282,7 +305,7 @@ impl MtCoalescer {
     pub fn pending_for(&self, tenant: &str) -> usize {
         self.buckets
             .iter()
-            .filter(|((t, _, _), _)| t == tenant)
+            .filter(|((t, _, _, _), _)| t == tenant)
             .map(|(_, reqs)| reqs.len())
             .sum()
     }
@@ -497,15 +520,18 @@ mod tests {
     fn mt_groups_never_mix_tenants_or_generations() {
         let mut c = MtCoalescer::new(2, 4, 10.0);
         // Same length, three different (tenant, gen) keys: no group.
-        assert!(c.push("a", 1, req(0, 3, 0.0)).is_none());
-        assert!(c.push("b", 1, req(1, 3, 0.0)).is_none());
-        assert!(c.push("a", 2, req(2, 3, 0.0)).is_none());
+        assert!(c.push("a", 1, "f32", req(0, 3, 0.0)).is_none());
+        assert!(c.push("b", 1, "f32", req(1, 3, 0.0)).is_none());
+        assert!(c.push("a", 2, "f32", req(2, 3, 0.0)).is_none());
         assert_eq!(c.pending(), 3);
         assert_eq!(c.pending_for("a"), 2);
         // A second (a, gen 1) request completes exactly that bucket.
-        let g = c.push("a", 1, req(3, 3, 0.0)).expect("bucket (a,1) is full");
+        let g = c
+            .push("a", 1, "f32", req(3, 3, 0.0))
+            .expect("bucket (a,1) is full");
         assert_eq!(g.tenant, "a");
         assert_eq!(g.generation, 1);
+        assert_eq!(g.quant, "f32");
         let ids: Vec<u64> = g.group.reqs.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 3]);
         // Drain ships the two stragglers as single-key partial groups.
@@ -518,10 +544,33 @@ mod tests {
     }
 
     #[test]
+    fn mt_groups_never_mix_precisions() {
+        let mut c = MtCoalescer::new(2, 4, 10.0);
+        // Same tenant, same generation, same length bucket — but one
+        // request was admitted against f32 weights and one against the
+        // int8-quantized bank (tenant hot-swapped precision between
+        // them). They must never share a group.
+        assert!(c.push("a", 1, "f32", req(0, 3, 0.0)).is_none());
+        assert!(c.push("a", 1, "int8", req(1, 3, 0.0)).is_none());
+        assert_eq!(c.pending(), 2, "distinct quant keys stay in distinct buckets");
+        let g = c
+            .push("a", 1, "int8", req(2, 3, 0.0))
+            .expect("the int8 bucket fills first");
+        assert_eq!(g.quant, "int8");
+        let ids: Vec<u64> = g.group.reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        // The f32 straggler drains alone, still tagged f32.
+        let rest = c.drain();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].quant, "f32");
+        assert_eq!(rest[0].group.reqs.len(), 1);
+    }
+
+    #[test]
     fn mt_deadline_flush_is_per_bucket() {
         let mut c = MtCoalescer::new(8, 4, 0.5);
-        c.push("a", 1, req(0, 3, 0.0));
-        c.push("b", 1, req(1, 3, 0.3));
+        c.push("a", 1, "f32", req(0, 3, 0.0));
+        c.push("b", 1, "f32", req(1, 3, 0.3));
         assert_eq!(c.next_deadline(), Some(0.5));
         let gs = c.flush_expired(0.6);
         assert_eq!(gs.len(), 1);

@@ -604,6 +604,10 @@ struct Lane {
 struct MtPending {
     tenant: String,
     generation: u64,
+    /// Weight precision of the pinned generation's bank ("f32" or
+    /// "int8"), captured at submit — the coalescer keys groups on it so
+    /// a precision hot-swap can never mix dtypes inside one group.
+    quant: &'static str,
     p: Pending,
 }
 
@@ -721,6 +725,7 @@ impl<'r> TenantServerHandle<'_, 'r> {
             None => return Err(SubmitError::UnknownTenant { tenant: tenant.to_string() }),
         };
         let generation = pin.generation();
+        let quant = pin.model().bank().quant_kind().unwrap_or("f32");
         let cap = sh
             .registry
             .opts_of(tenant)
@@ -770,6 +775,7 @@ impl<'r> TenantServerHandle<'_, 'r> {
         sub.q.push_back(MtPending {
             tenant: tenant.to_string(),
             generation,
+            quant,
             p: Pending { id, src, t_submit: sh.now_s() },
         });
         sh.sub_cv.notify_all();
@@ -844,7 +850,7 @@ fn run_mt_coalescer(shared: &MtShared<'_>, mut co: MtCoalescer) {
         }
         let mut groups: Vec<TenantGroup> = Vec::new();
         for mp in drained {
-            if let Some(g) = co.push(&mp.tenant, mp.generation, mp.p) {
+            if let Some(g) = co.push(&mp.tenant, mp.generation, mp.quant, mp.p) {
                 groups.push(g);
             }
         }

@@ -28,7 +28,21 @@
 //! binds parameters without copying; mutation goes through
 //! [`FlatParams::with_slab_mut`], which drops the cached views,
 //! mutates the (then-unique) slab in place, and rebuilds them.
+//!
+//! ## Precision tag
+//!
+//! A slab may carry a [`SlabDtype`] tag (default `F32`). The storage
+//! stays `f32` either way — the tag records the precision *contract*:
+//! a 16-bit-tagged parameter slab holds only values exactly
+//! representable in that format (enforced by
+//! [`FlatParams::round_to_dtype`] after every optimizer apply), and
+//! byte accounting / wire encoding use
+//! [`SlabDtype::bytes_per_elem`]. Crucially the **bucket boundary
+//! rule stays at 4 bytes per element regardless of the tag**, so
+//! bucket partitions — and with them the fixed-shape reduction tree —
+//! are identical across precision modes.
 
+use super::half::SlabDtype;
 use super::{add_assign_slice, note_alloc, scale_slice, Tensor};
 use std::collections::{BTreeMap, HashMap};
 use std::ops::Range;
@@ -124,6 +138,9 @@ impl SlabIndex {
         let mut start = 0usize;
         let mut bytes = 0usize;
         for (i, e) in self.entries.iter().enumerate() {
+            // Always 4 bytes/elem — boundaries must not move with the
+            // storage dtype or the reduction tree would change shape
+            // across precision modes.
             bytes = bytes.saturating_add(4 * e.len);
             if bytes >= bucket_bytes || i + 1 == self.entries.len() {
                 out.push(Bucket {
@@ -206,6 +223,7 @@ pub struct FlatParams {
     bucket_bytes: usize,
     slab: Arc<Vec<f32>>,
     views: BTreeMap<String, Tensor>,
+    dtype: SlabDtype,
 }
 
 impl FlatParams {
@@ -226,9 +244,38 @@ impl FlatParams {
             bucket_bytes,
             slab: Arc::new(slab),
             views: BTreeMap::new(),
+            dtype: SlabDtype::F32,
         };
         fp.rebuild_views();
         fp
+    }
+
+    /// The slab's precision contract (default `F32`).
+    pub fn dtype(&self) -> SlabDtype {
+        self.dtype
+    }
+
+    /// Set the precision tag and enforce its contract: for 16-bit
+    /// tags every slab value is rounded (RNE) to the format in place.
+    /// `F32` is an exact no-op — no rounding, no copy, no view churn —
+    /// so tagging a slab `F32` can never perturb a bitwise baseline.
+    pub fn set_dtype(&mut self, dtype: SlabDtype) {
+        self.dtype = dtype;
+        if dtype != SlabDtype::F32 {
+            self.round_to_dtype();
+        }
+    }
+
+    /// Round every slab value to the tagged precision (no-op for
+    /// `F32`). Called after each optimizer apply in 16-bit modes so
+    /// the params stay exactly representable — which in turn makes
+    /// the 16-bit parameter broadcast in PS mode lossless.
+    pub fn round_to_dtype(&mut self) {
+        if self.dtype == SlabDtype::F32 {
+            return;
+        }
+        let dtype = self.dtype;
+        self.with_slab_mut(|_, _, slab| dtype.round_slice(slab));
     }
 
     fn rebuild_views(&mut self) {
@@ -381,6 +428,22 @@ impl FlatGrads {
     /// [`tree_fold_segments`].
     pub fn into_segments(self) -> Vec<Box<[f32]>> {
         self.segs
+    }
+
+    /// Any value in any bucket is Inf/NaN — the loss-scale overflow
+    /// check over the *folded* gradient (the reducer thread runs the
+    /// same scan per bucket as each fold finishes, so this full pass
+    /// is the fallback for paths without a reducer thread).
+    pub fn any_non_finite(&self) -> bool {
+        self.segs
+            .iter()
+            .any(|s| s.iter().any(|x| !x.is_finite()))
+    }
+
+    /// Bytes these gradients cost on the wire / in per-step
+    /// accounting when shipped as `dtype` (storage is always f32).
+    pub fn wire_bytes(&self, dtype: SlabDtype) -> usize {
+        self.segs.iter().map(|s| s.len() * dtype.bytes_per_elem()).sum()
     }
 
     /// Per-parameter slices in global name order (the clip-norm fold
@@ -539,6 +602,43 @@ mod tests {
         assert_eq!(b_slice, vec![4.0, 5.0, 6.0]);
         g.scale(2.0);
         assert_eq!(g.seg(1)[0], 8.0);
+    }
+
+    #[test]
+    fn dtype_tag_rounds_slab_but_f32_is_inert() {
+        let mut fp = FlatParams::from_map(&sample_map(), 16);
+        let before = fp.slab().to_vec();
+        fp.set_dtype(SlabDtype::F32);
+        assert_eq!(fp.slab(), &before[..], "F32 tag must not touch the slab");
+        // Values in the sample map are small integers: exactly
+        // representable in both 16-bit formats, so rounding is
+        // lossless here and the contract (idempotence) holds.
+        fp.set_dtype(SlabDtype::Bf16);
+        assert_eq!(fp.slab(), &before[..]);
+        fp.with_slab_mut(|_, _, slab| slab[0] = 1.000001);
+        fp.round_to_dtype();
+        let r = fp.slab()[0];
+        assert_eq!(SlabDtype::Bf16.round(r), r, "slab value not bf16-representable");
+        // Boundaries never move with the tag.
+        assert_eq!(fp.buckets().len(), fp.idx().buckets(16).len());
+    }
+
+    #[test]
+    fn grad_overflow_scan_and_wire_bytes() {
+        let idx = Arc::new(SlabIndex::from_map(&sample_map()));
+        let buckets = Arc::new(idx.buckets(16));
+        let segs: Vec<Box<[f32]>> = buckets
+            .iter()
+            .map(|b| vec![1.0f32; b.range.end - b.range.start].into_boxed_slice())
+            .collect();
+        let mut g = FlatGrads::new(idx.clone(), buckets.clone(), segs);
+        assert!(!g.any_non_finite());
+        assert_eq!(g.wire_bytes(SlabDtype::F32), 8 * 4);
+        assert_eq!(g.wire_bytes(SlabDtype::Bf16), 8 * 2);
+        let mut segs2: Vec<Box<[f32]>> = g.into_segments();
+        segs2[1][0] = f32::NAN;
+        g = FlatGrads::new(idx, buckets, segs2);
+        assert!(g.any_non_finite());
     }
 
     #[test]

@@ -1,0 +1,447 @@
+//! Software 16-bit float conversion for the flat slabs.
+//!
+//! The training arena ([`crate::tensor::flat`]) keeps every parameter
+//! and gradient in one contiguous `f32` slab. Mixed-precision mode
+//! does **not** change that storage — the optimizer's master copy and
+//! every fold stay f32 — it changes what the numbers are allowed to
+//! *be* and how many bytes they cost on the wire / in accounting:
+//!
+//! * [`SlabDtype`] tags a slab (`f32`, `f16`, `bf16`). A 16-bit tag
+//!   means "every value in this slab is exactly representable in that
+//!   16-bit format" — enforced by [`SlabDtype::round_slice`], which
+//!   round-trips values through the encoding in place.
+//! * [`encode_from_f32`] / [`decode_to_f32`] are the slice-level
+//!   codecs the dist wire uses to ship 16-bit segments
+//!   ([`crate::dist::wire`]).
+//!
+//! The scalar conversions are pure software (no `f16` hardware, no
+//! external crates): round-to-nearest-even, with subnormals, ±Inf and
+//! NaN handled explicitly. `f32 -> f16 -> f32` is exact for every
+//! value already representable in f16 (same for bf16), so re-encoding
+//! an already-rounded slab is lossless — that is what makes the
+//! 16-bit *parameter broadcast* in PS mode bit-exact while 16-bit
+//! *gradient* traffic is lossy (partial sums are folded in f32 and
+//! need a fresh rounding).
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Storage/wire precision of a flat slab.
+///
+/// `F32` is the default everywhere and keeps every code path
+/// bitwise-identical to the pre-precision builds; the 16-bit modes
+/// round values through the format at well-defined points (grad
+/// delivery, post-apply params, wire frames).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SlabDtype {
+    #[default]
+    F32,
+    F16,
+    Bf16,
+}
+
+impl SlabDtype {
+    /// Stable one-byte code used in checkpoints and wire frames.
+    pub fn code(self) -> u8 {
+        match self {
+            SlabDtype::F32 => 0,
+            SlabDtype::F16 => 1,
+            SlabDtype::Bf16 => 2,
+        }
+    }
+
+    /// Inverse of [`SlabDtype::code`]; `None` for unknown tags so
+    /// callers can produce their own (checkpoint vs wire) error.
+    pub fn from_code(c: u8) -> Option<SlabDtype> {
+        match c {
+            0 => Some(SlabDtype::F32),
+            1 => Some(SlabDtype::F16),
+            2 => Some(SlabDtype::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Row-key fragment for bench tables (`r2.accum1.bf16`).
+    pub fn key(self) -> &'static str {
+        match self {
+            SlabDtype::F32 => "f32",
+            SlabDtype::F16 => "f16",
+            SlabDtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Bytes one element costs in this storage format (wire frames,
+    /// bytes-per-step accounting). The in-memory slab is always f32.
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            SlabDtype::F32 => 4,
+            SlabDtype::F16 | SlabDtype::Bf16 => 2,
+        }
+    }
+
+    /// Round one value to the nearest representable value of this
+    /// format (identity for `F32`).
+    pub fn round(self, x: f32) -> f32 {
+        match self {
+            SlabDtype::F32 => x,
+            SlabDtype::F16 => f16_to_f32(f32_to_f16(x)),
+            SlabDtype::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+        }
+    }
+
+    /// Round every value of `xs` in place (no-op for `F32`).
+    pub fn round_slice(self, xs: &mut [f32]) {
+        match self {
+            SlabDtype::F32 => {}
+            SlabDtype::F16 => {
+                for x in xs.iter_mut() {
+                    *x = f16_to_f32(f32_to_f16(*x));
+                }
+            }
+            SlabDtype::Bf16 => {
+                for x in xs.iter_mut() {
+                    *x = bf16_to_f32(f32_to_bf16(*x));
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for SlabDtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+impl FromStr for SlabDtype {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f32" | "fp32" => Ok(SlabDtype::F32),
+            "f16" | "fp16" | "half" => Ok(SlabDtype::F16),
+            "bf16" | "bfloat16" => Ok(SlabDtype::Bf16),
+            _ => Err(format!("unknown precision `{s}` (want f32, f16 or bf16)")),
+        }
+    }
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even.
+///
+/// Overflow (|x| ≥ 65520 after rounding) becomes ±Inf; values below
+/// the smallest f16 subnormal round to ±0; NaN stays NaN (quiet, with
+/// a truncated payload, never collapsed to Inf).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN. Keep NaN-ness: force a quiet bit if the
+        // truncated payload would be zero.
+        if man == 0 {
+            return sign | 0x7c00;
+        }
+        let mut payload = (man >> 13) as u16;
+        if payload == 0 {
+            payload = 0x200;
+        }
+        return sign | 0x7c00 | payload;
+    }
+
+    // Unbiased exponent; f16 bias is 15, f32 bias is 127.
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        // Overflows f16 range even before rounding: ±Inf.
+        return sign | 0x7c00;
+    }
+    if e <= 0 {
+        // Subnormal (or underflow to zero). The implicit leading 1
+        // becomes explicit and the mantissa is shifted right by
+        // (1 - e) extra places.
+        if e < -10 {
+            return sign; // below half the smallest subnormal: ±0
+        }
+        let full = man | 0x0080_0000; // explicit leading 1, 24 bits
+        let shift = (14 - e) as u32; // bits dropped from the 24
+        let kept = (full >> shift) as u16;
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        // Round to nearest, ties to even.
+        if rem > half || (rem == half && kept & 1 == 1) {
+            return sign | (kept + 1); // may carry into the exponent: correct
+        }
+        return sign | kept;
+    }
+
+    // Normal: keep top 10 mantissa bits, RNE on the dropped 13.
+    let kept = (man >> 13) as u16;
+    let rem = man & 0x1fff;
+    let mut out = sign | ((e as u16) << 10) | kept;
+    if rem > 0x1000 || (rem == 0x1000 && kept & 1 == 1) {
+        out = out.wrapping_add(1); // mantissa carry rolls into exponent; 0x7c00 = Inf, still correct
+    }
+    out
+}
+
+/// IEEE 754 binary16 bits → f32 (exact; every f16 value is
+/// representable in f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = u32::from(h & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = u32::from(h & 0x03ff);
+    let bits = match exp {
+        0 => {
+            if man == 0 {
+                sign // ±0
+            } else {
+                // Subnormal: value = man * 2^-24. Normalize: with k
+                // the MSB index of man, value = 2^(k-24) * 1.frac, so
+                // the f32 biased exponent is 127 + k - 24 = 113 - shift.
+                let shift = man.leading_zeros() - 21; // = 10 - k
+                let e = 113 - shift;
+                let m = (man << (shift + 13)) & 0x007f_ffff;
+                sign | (e << 23) | m
+            }
+        }
+        0x1f => {
+            if man == 0 {
+                sign | 0x7f80_0000 // ±Inf
+            } else {
+                sign | 0x7f80_0000 | (man << 13) | 0x0040_0000 // quiet NaN
+            }
+        }
+        _ => sign | ((u32::from(exp) + 127 - 15) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16 bits, round-to-nearest-even.
+///
+/// bf16 is the top 16 bits of f32 (same exponent range), so the
+/// conversion is a rounding truncation; NaN is kept NaN.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if bits & 0x7fff_ffff > 0x7f80_0000 {
+        // NaN: truncation could zero the payload and turn it into
+        // Inf; force a quiet bit instead.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let kept = (bits >> 16) as u16;
+    let rem = bits & 0xffff;
+    if rem > 0x8000 || (rem == 0x8000 && kept & 1 == 1) {
+        // Carry may roll mantissa into exponent and exponent into
+        // Inf — both are the correctly rounded results.
+        return kept.wrapping_add(1);
+    }
+    kept
+}
+
+/// bfloat16 bits → f32 (exact: shift back into the top half).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits(u32::from(h) << 16)
+}
+
+/// Encode `src` into little-endian 16-bit words of `dtype` appended
+/// to `out`. Panics if `dtype` is `F32` — the f32 wire codec is
+/// [`crate::dist::wire::f32s_to_bytes`] and callers must pick one.
+pub fn encode_from_f32(dtype: SlabDtype, src: &[f32], out: &mut Vec<u8>) {
+    out.reserve(src.len() * 2);
+    match dtype {
+        SlabDtype::F32 => panic!("encode_from_f32: F32 slabs use the 4-byte codec"),
+        SlabDtype::F16 => {
+            for &x in src {
+                out.extend_from_slice(&f32_to_f16(x).to_le_bytes());
+            }
+        }
+        SlabDtype::Bf16 => {
+            for &x in src {
+                out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Decode little-endian 16-bit words of `dtype` into f32s. Returns
+/// `None` when `bytes` is not a multiple of 2 (corrupt frame).
+pub fn decode_to_f32(dtype: SlabDtype, bytes: &[u8]) -> Option<Vec<f32>> {
+    if bytes.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    match dtype {
+        SlabDtype::F32 => return None,
+        SlabDtype::F16 => {
+            for c in bytes.chunks_exact(2) {
+                out.push(f16_to_f32(u16::from_le_bytes([c[0], c[1]])));
+            }
+        }
+        SlabDtype::Bf16 => {
+            for c in bytes.chunks_exact(2) {
+                out.push(bf16_to_f32(u16::from_le_bytes([c[0], c[1]])));
+            }
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn dtype_codes_roundtrip() {
+        for d in [SlabDtype::F32, SlabDtype::F16, SlabDtype::Bf16] {
+            assert_eq!(SlabDtype::from_code(d.code()), Some(d));
+            assert_eq!(d.key().parse::<SlabDtype>().unwrap(), d);
+        }
+        assert_eq!(SlabDtype::from_code(3), None);
+        assert_eq!(SlabDtype::from_code(0xff), None);
+        assert!("int8".parse::<SlabDtype>().is_err());
+    }
+
+    #[test]
+    fn f16_exact_for_representable_values() {
+        // Every finite f16 bit pattern decodes to an f32 that encodes
+        // back to the same bits (exactness on representable values).
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // Inf/NaN handled below
+            }
+            let x = f16_to_f32(h);
+            let back = f32_to_f16(x);
+            // -0 and +0 keep their signs distinctly.
+            assert_eq!(back, h, "f16 bits {h:#06x} -> {x} -> {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_exact_for_representable_values() {
+        for h in (0u16..=0xffff).step_by(1) {
+            let x = bf16_to_f32(h);
+            if x.is_nan() {
+                assert!(f16_to_f32(f32_to_f16(x)).is_nan());
+                continue;
+            }
+            assert_eq!(f32_to_bf16(x), h, "bf16 bits {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_rne_tie_cases() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1.0 + 2^-10): ties-to-even keeps the even mantissa (1.0).
+        let tie_down = 1.0f32 + f32::powi(2.0, -11);
+        assert_eq!(f16_to_f32(f32_to_f16(tie_down)), 1.0);
+        // (1.0 + 2^-10) + 2^-11 is halfway with an odd low bit: rounds
+        // up to 1.0 + 2^-9.
+        let tie_up = 1.0f32 + f32::powi(2.0, -10) + f32::powi(2.0, -11);
+        assert_eq!(f16_to_f32(f32_to_f16(tie_up)), 1.0 + f32::powi(2.0, -9));
+        // Just above the tie rounds up even from the even side.
+        let above = 1.0f32 + f32::powi(2.0, -11) + f32::powi(2.0, -20);
+        assert_eq!(f16_to_f32(f32_to_f16(above)), 1.0 + f32::powi(2.0, -10));
+    }
+
+    #[test]
+    fn bf16_rne_tie_cases() {
+        // bf16 keeps 7 mantissa bits: 1.0 + 2^-8 is the halfway point.
+        let tie_down = 1.0f32 + f32::powi(2.0, -8);
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie_down)), 1.0);
+        let tie_up = 1.0f32 + f32::powi(2.0, -7) + f32::powi(2.0, -8);
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie_up)), 1.0 + f32::powi(2.0, -6));
+    }
+
+    #[test]
+    fn f16_subnormal_inf_nan_sweep() {
+        // Smallest f16 subnormal.
+        let tiny = f32::powi(2.0, -24);
+        assert_eq!(f16_to_f32(f32_to_f16(tiny)), tiny);
+        // Below half the smallest subnormal flushes to signed zero.
+        let below = f32::powi(2.0, -26);
+        assert_eq!(f32_to_f16(below), 0x0000);
+        assert_eq!(f32_to_f16(-below), 0x8000);
+        // Largest f16 normal survives; the first value that rounds
+        // past it becomes Inf.
+        assert_eq!(f16_to_f32(f32_to_f16(65504.0)), 65504.0);
+        assert_eq!(f32_to_f16(65520.0), 0x7c00); // ties up to Inf
+        assert_eq!(f32_to_f16(1e6), 0x7c00);
+        assert_eq!(f32_to_f16(-1e6), 0xfc00);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // NaN payload truncated to zero must stay NaN, not become Inf.
+        let sneaky = f32::from_bits(0x7f80_0001);
+        assert!(sneaky.is_nan());
+        let h = f32_to_f16(sneaky);
+        assert_eq!((h >> 10) & 0x1f, 0x1f);
+        assert_ne!(h & 0x3ff, 0, "NaN collapsed to Inf");
+        assert!(f16_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn bf16_inf_nan_sweep() {
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        let sneaky = f32::from_bits(0x7f80_0001);
+        assert!(bf16_to_f32(f32_to_bf16(sneaky)).is_nan());
+        // Rounding can legitimately overflow to Inf.
+        let near_max = f32::from_bits(0x7f7f_ffff); // f32::MAX
+        assert_eq!(bf16_to_f32(f32_to_bf16(near_max)), f32::INFINITY);
+    }
+
+    #[test]
+    fn fuzz_never_panics_on_any_bit_pattern() {
+        // Every u16 decodes; a pseudo-random sweep of f32 bit patterns
+        // (including signalling-NaN territory) encodes without panic
+        // and round-trips through decode to the same rounded value.
+        let mut rng = Rng::new(0x9e3779b9);
+        for _ in 0..20_000 {
+            let bits = (rng.next_u64() >> 16) as u32 ^ (rng.next_u64() as u32);
+            let x = f32::from_bits(bits);
+            for d in [SlabDtype::F16, SlabDtype::Bf16] {
+                let r = d.round(x);
+                let r2 = d.round(r);
+                if r.is_nan() {
+                    assert!(r2.is_nan());
+                } else {
+                    assert_eq!(r.to_bits(), r2.to_bits(), "rounding not idempotent for {bits:#010x}");
+                }
+            }
+        }
+        for h in 0u16..=0xffff {
+            let _ = f16_to_f32(h);
+            let _ = bf16_to_f32(h);
+        }
+    }
+
+    #[test]
+    fn slice_codecs_roundtrip() {
+        let vals: Vec<f32> = vec![0.0, -0.0, 1.5, -2.25, 65504.0, 1e-7, 3.1415926];
+        for d in [SlabDtype::F16, SlabDtype::Bf16] {
+            let mut rounded = vals.clone();
+            d.round_slice(&mut rounded);
+            let mut bytes = Vec::new();
+            encode_from_f32(d, &rounded, &mut bytes);
+            assert_eq!(bytes.len(), rounded.len() * 2);
+            let back = decode_to_f32(d, &bytes).unwrap();
+            assert_eq!(back, rounded, "{d}: already-rounded values must ship losslessly");
+            // Odd byte count is corrupt, not a panic.
+            assert!(decode_to_f32(d, &bytes[..bytes.len() - 1]).is_none());
+        }
+        // F32 through the 2-byte codec is a caller bug.
+        assert!(decode_to_f32(SlabDtype::F32, &[0, 0]).is_none());
+    }
+
+    #[test]
+    fn round_slice_f32_is_identity() {
+        let vals: Vec<f32> = vec![f32::NAN, f32::INFINITY, 1.000001, -0.0];
+        let mut copy = vals.clone();
+        SlabDtype::F32.round_slice(&mut copy);
+        for (a, b) in vals.iter().zip(&copy) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

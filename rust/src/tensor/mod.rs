@@ -35,6 +35,7 @@
 //! `allocs_per_step` — the regression metric for the hot training path.
 
 pub mod flat;
+pub mod half;
 
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};

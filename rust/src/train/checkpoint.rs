@@ -16,9 +16,17 @@
 //!   [`save_full`] (`Trainer::save_checkpoint`). The eval *history*
 //!   (Figure-4 points) is reporting output, not training state, and is
 //!   not persisted.
+//! * **v3** (`HYNMTCK3`) — v2 plus the mixed-precision state: the
+//!   slab precision tag ([`SlabDtype`]) and the dynamic
+//!   [`LossScaleState`], appended between the training clocks and the
+//!   moment rows. **Only written when that state is non-default** — an
+//!   f32 run without loss scaling still writes byte-identical v2
+//!   files, so the precision feature is invisible to every pre-v3
+//!   consumer until it is actually used.
 //!
-//! [`load`] / [`load_full`] accept both versions — v1 files simply
-//! restore with a fresh optimizer. Every length/count read from a file
+//! [`load`] / [`load_full`] accept all versions — v1 files simply
+//! restore with a fresh optimizer, v1/v2 files with f32 precision and
+//! no loss-scale state. Every length/count read from a file
 //! is bounded against the file size before allocation, so a truncated
 //! or corrupt checkpoint is a clean `Err`, never an abort-sized
 //! allocation; duplicate or empty parameter names and trailing bytes
@@ -49,6 +57,7 @@ use crate::optim::{OptimSnapshot, OptimState, OptimStateView};
 use crate::optim::MomentRowsView;
 use crate::runtime::{Engine, ParamBank};
 use crate::storage::{self, Storage};
+use crate::tensor::half::SlabDtype;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -57,9 +66,71 @@ use std::path::Path;
 
 const MAGIC_V1: &[u8; 8] = b"HYNMTCK1";
 const MAGIC_V2: &[u8; 8] = b"HYNMTCK2";
+const MAGIC_V3: &[u8; 8] = b"HYNMTCK3";
+
+/// The dynamic loss-scale state machine of mixed-precision training
+/// (Ott et al. 2018 §4): gradients are multiplied by `scale` before
+/// 16-bit rounding so small values survive the format's range; if the
+/// folded gradient overflows (Inf/NaN) the step's apply is *skipped*
+/// and the scale halves; after `growth_interval` consecutive clean
+/// steps it doubles again. Persisted in checkpoint v3 so a resumed
+/// run continues with the exact same scale trajectory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LossScaleState {
+    /// Current multiplier applied to every delivered gradient.
+    pub scale: f32,
+    /// Consecutive clean steps required before the scale doubles.
+    pub growth_interval: u32,
+    /// Clean steps since the last overflow (or growth).
+    pub clean_steps: u32,
+    /// Lifetime count of overflow-skipped steps (bench column).
+    pub overflow_skips: u64,
+}
+
+impl LossScaleState {
+    /// Initial dynamic scale (2^16 — high enough that f16 gradient
+    /// underflow is immediately covered, low enough that the first
+    /// few halvings converge fast if it overflows).
+    pub const INITIAL_SCALE: f32 = 65536.0;
+    /// The scale never grows past 2^24 nor shrinks below 1.
+    pub const MAX_SCALE: f32 = 16_777_216.0;
+
+    pub fn new() -> Self {
+        LossScaleState {
+            scale: Self::INITIAL_SCALE,
+            growth_interval: 200,
+            clean_steps: 0,
+            overflow_skips: 0,
+        }
+    }
+
+    /// The reducer found Inf/NaN: halve the scale (floor 1.0), reset
+    /// the clean streak, count the skipped step.
+    pub fn on_overflow(&mut self) {
+        self.scale = (self.scale * 0.5).max(1.0);
+        self.clean_steps = 0;
+        self.overflow_skips += 1;
+    }
+
+    /// A step applied cleanly: extend the streak; double the scale
+    /// (capped) every `growth_interval` clean steps.
+    pub fn on_clean(&mut self) {
+        self.clean_steps += 1;
+        if self.clean_steps >= self.growth_interval {
+            self.scale = (self.scale * 2.0).min(Self::MAX_SCALE);
+            self.clean_steps = 0;
+        }
+    }
+}
+
+impl Default for LossScaleState {
+    fn default() -> Self {
+        LossScaleState::new()
+    }
+}
 
 /// Training clocks persisted by checkpoint v2 alongside the optimizer
-/// state.
+/// state; v3 additionally persists the precision fields.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TrainMeta {
     pub steps_done: u64,
@@ -74,6 +145,19 @@ pub struct TrainMeta {
     /// comparison point. Without it a resumed run could miss (or
     /// double-apply) a decay and diverge from the uninterrupted run.
     pub prev_dev_ppl: Option<f64>,
+    /// Slab precision the run trained with (`F32` ⇒ this and
+    /// `loss_scale` stay out of the file: v2 is written).
+    pub precision: SlabDtype,
+    /// Dynamic loss-scale state (`Some` exactly for 16-bit runs).
+    pub loss_scale: Option<LossScaleState>,
+}
+
+impl TrainMeta {
+    /// Whether this meta needs the v3 format (any non-default
+    /// precision state).
+    fn needs_v3(&self) -> bool {
+        self.precision != SlabDtype::F32 || self.loss_scale.is_some()
+    }
 }
 
 /// A fully-loaded checkpoint. `opt`/`meta` carry training state for v2
@@ -128,7 +212,10 @@ fn write_full(
     opt: &OptimStateView,
     meta: &TrainMeta,
 ) -> Result<()> {
-    f.write_all(MAGIC_V2)?;
+    // v3 only when the precision state is non-default, so f32 runs
+    // keep writing byte-identical v2 files.
+    let v3 = meta.needs_v3();
+    f.write_all(if v3 { MAGIC_V3 } else { MAGIC_V2 })?;
     write_params(f, params)?;
     let kb = opt.kind.as_bytes();
     f.write_all(&(kb.len() as u32).to_le_bytes())?;
@@ -140,13 +227,21 @@ fn write_full(
     f.write_all(&meta.sim_clock.to_le_bytes())?;
     f.write_all(&[meta.prev_dev_ppl.is_some() as u8])?;
     f.write_all(&meta.prev_dev_ppl.unwrap_or(0.0).to_le_bytes())?;
+    if v3 {
+        let ls = meta.loss_scale.unwrap_or_default();
+        f.write_all(&[meta.precision.code()])?;
+        f.write_all(&ls.scale.to_le_bytes())?;
+        f.write_all(&ls.growth_interval.to_le_bytes())?;
+        f.write_all(&ls.clean_steps.to_le_bytes())?;
+        f.write_all(&ls.overflow_skips.to_le_bytes())?;
+    }
     write_rows(f, opt.rows.iter_m().collect())?;
     write_rows(f, opt.rows.iter_v().collect())
 }
 
-/// Serialize a v2 checkpoint to bytes — the storage-backend save path
-/// (the background writer calls this off the training thread, then
-/// `put_atomic`s the result).
+/// Serialize a v2/v3 checkpoint to bytes — the storage-backend save
+/// path (the background writer calls this off the training thread,
+/// then `put_atomic`s the result).
 pub fn to_bytes(
     params: &BTreeMap<String, Tensor>,
     opt: &OptimStateView,
@@ -287,12 +382,20 @@ fn expect_eof(f: &mut impl Read, after: &str) -> Result<()> {
     }
 }
 
-fn read_magic(f: &mut impl Read, what: &str) -> Result<bool> {
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Version {
+    V1,
+    V2,
+    V3,
+}
+
+fn read_magic(f: &mut impl Read, what: &str) -> Result<Version> {
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
     match &magic {
-        m if m == MAGIC_V1 => Ok(false),
-        m if m == MAGIC_V2 => Ok(true),
+        m if m == MAGIC_V1 => Ok(Version::V1),
+        m if m == MAGIC_V2 => Ok(Version::V2),
+        m if m == MAGIC_V3 => Ok(Version::V3),
         _ => Err(anyhow!("{what}: not a hybridnmt checkpoint")),
     }
 }
@@ -300,9 +403,9 @@ fn read_magic(f: &mut impl Read, what: &str) -> Result<bool> {
 /// The shared full-load body, generic over the byte source so the file
 /// path and the storage-backend path cannot drift.
 fn load_full_from(mut f: impl Read, file_len: u64, what: &str) -> Result<TrainCheckpoint> {
-    let v2 = read_magic(&mut f, what)?;
+    let version = read_magic(&mut f, what)?;
     let params = read_params(&mut f, file_len)?;
-    if !v2 {
+    if version == Version::V1 {
         expect_eof(&mut f, "the parameter section")?;
         return Ok(TrainCheckpoint { params, opt: None, meta: TrainMeta::default() });
     }
@@ -316,13 +419,45 @@ fn load_full_from(mut f: impl Read, file_len: u64, what: &str) -> Result<TrainCh
     f.read_exact(&mut flag)?;
     let prev = read_f64(&mut f)?;
     let prev_dev_ppl = (flag[0] != 0).then_some(prev);
+    let (precision, loss_scale) = if version == Version::V3 {
+        let mut tag = [0u8; 1];
+        f.read_exact(&mut tag)?;
+        let precision = SlabDtype::from_code(tag[0]).ok_or_else(|| {
+            anyhow!(
+                "corrupt checkpoint: unknown precision tag {} (know f32=0, f16=1, bf16=2)",
+                tag[0]
+            )
+        })?;
+        let mut sb = [0u8; 4];
+        f.read_exact(&mut sb)?;
+        let scale = f32::from_le_bytes(sb);
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(anyhow!("corrupt checkpoint: loss scale {scale} is not a positive finite value"));
+        }
+        let growth_interval = read_u32(&mut f)?;
+        let clean_steps = read_u32(&mut f)?;
+        let overflow_skips = read_u64(&mut f)?;
+        (
+            precision,
+            Some(LossScaleState { scale, growth_interval, clean_steps, overflow_skips }),
+        )
+    } else {
+        (SlabDtype::F32, None)
+    };
     let m = read_rows(&mut f, file_len)?;
     let v = read_rows(&mut f, file_len)?;
     expect_eof(&mut f, "the optimizer state")?;
     Ok(TrainCheckpoint {
         params,
         opt: Some(OptimState { kind, lr, t, m, v }),
-        meta: TrainMeta { steps_done, micro_consumed, sim_clock, prev_dev_ppl },
+        meta: TrainMeta {
+            steps_done,
+            micro_consumed,
+            sim_clock,
+            prev_dev_ppl,
+            precision,
+            loss_scale,
+        },
     })
 }
 
@@ -348,9 +483,9 @@ pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
     let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
     let file_len = file.metadata().map(|m| m.len()).unwrap_or(u64::MAX);
     let mut f = std::io::BufReader::new(file);
-    let v2 = read_magic(&mut f, &format!("{path:?}"))?;
+    let version = read_magic(&mut f, &format!("{path:?}"))?;
     let params = read_params(&mut f, file_len)?;
-    if !v2 {
+    if version == Version::V1 {
         expect_eof(&mut f, "the parameter section")?;
     }
     Ok(params)
@@ -405,8 +540,9 @@ impl Snapshot {
         checkpoint_key(self.meta.steps_done)
     }
 
-    /// Serialize to v2 checkpoint bytes (identical to what [`save_full`]
-    /// would have written from the live state at capture time).
+    /// Serialize to v2/v3 checkpoint bytes (identical to what
+    /// [`save_full`] would have written from the live state at capture
+    /// time; v3 exactly when the meta carries precision state).
     pub fn to_bytes(&self) -> Result<Vec<u8>> {
         to_bytes(&self.params, &self.opt.view(), &self.meta)
     }
@@ -487,6 +623,7 @@ mod tests {
             micro_consumed: 68,
             sim_clock: 123.5,
             prev_dev_ppl: Some(9.25),
+            ..Default::default()
         };
         let path = tmp("ck_v2.bin");
         save_full(&path, &params, &opt.view(), &meta).unwrap();
@@ -563,7 +700,7 @@ mod tests {
             steps_done: 3,
             micro_consumed: 3,
             sim_clock: 0.75,
-            prev_dev_ppl: None,
+            ..Default::default()
         };
         let path = tmp("ck_v2_sgd.bin");
         save_full(&path, &params, &opt.view(), &meta).unwrap();
@@ -578,7 +715,7 @@ mod tests {
     fn bytes_and_file_paths_are_identical() {
         let params = sample_params();
         let opt = OptimState { kind: "adam".into(), lr: 1e-3, t: 5, ..Default::default() };
-        let meta = TrainMeta { steps_done: 5, micro_consumed: 20, sim_clock: 2.5, prev_dev_ppl: None };
+        let meta = TrainMeta { steps_done: 5, micro_consumed: 20, sim_clock: 2.5, ..Default::default() };
         let path = tmp("ck_bytes.bin");
         save_full(&path, &params, &opt.view(), &meta).unwrap();
         let on_disk = std::fs::read(&path).unwrap();
@@ -681,5 +818,176 @@ mod tests {
         use crate::storage::FaultyMem;
         let store = FaultyMem::reliable();
         assert!(resolve_latest(&store).unwrap().is_none());
+    }
+
+    fn v3_meta() -> TrainMeta {
+        TrainMeta {
+            steps_done: 9,
+            micro_consumed: 36,
+            sim_clock: 4.5,
+            prev_dev_ppl: Some(11.0),
+            precision: SlabDtype::Bf16,
+            loss_scale: Some(LossScaleState {
+                scale: 1024.0,
+                growth_interval: 50,
+                clean_steps: 7,
+                overflow_skips: 3,
+            }),
+        }
+    }
+
+    /// v3 round-trip: precision tag + full loss-scale state survive,
+    /// and the file actually carries the v3 magic.
+    #[test]
+    fn v3_roundtrip_preserves_precision_state() {
+        let params = sample_params();
+        let opt = OptimState { kind: "adam".into(), lr: 1e-3, t: 9, ..Default::default() };
+        let meta = v3_meta();
+        let bytes = to_bytes(&params, &opt.view(), &meta).unwrap();
+        assert_eq!(&bytes[..8], MAGIC_V3);
+        let ck = load_full_bytes(&bytes).unwrap();
+        assert_eq!(ck.meta, meta);
+        assert_eq!(ck.params, params);
+        // Param-only loading of a v3 file works too (inference path).
+        let path = tmp("ck_v3.bin");
+        save_full(&path, &params, &opt.view(), &meta).unwrap();
+        assert_eq!(load(&path).unwrap(), params);
+    }
+
+    /// The f32-invisibility contract: default precision state writes
+    /// byte-identical v2, so pre-v3 consumers never see a new magic.
+    #[test]
+    fn default_precision_still_writes_v2() {
+        let params = sample_params();
+        let opt = OptimState { kind: "sgd".into(), lr: 0.1, t: 2, ..Default::default() };
+        let meta = TrainMeta { steps_done: 2, ..Default::default() };
+        let bytes = to_bytes(&params, &opt.view(), &meta).unwrap();
+        assert_eq!(&bytes[..8], MAGIC_V2);
+        let ck = load_full_bytes(&bytes).unwrap();
+        assert_eq!(ck.meta.precision, SlabDtype::F32);
+        assert!(ck.meta.loss_scale.is_none());
+    }
+
+    /// Truncation sweep: every proper prefix of a v3 file is a clean
+    /// `Err` — no panic, no giant allocation, no silent partial load.
+    #[test]
+    fn v3_every_proper_prefix_errors_cleanly() {
+        let params = sample_params();
+        let opt = OptimState { kind: "adam".into(), lr: 1e-3, t: 9, ..Default::default() };
+        let bytes = to_bytes(&params, &opt.view(), &v3_meta()).unwrap();
+        assert!(load_full_bytes(&bytes).is_ok());
+        for cut in 0..bytes.len() {
+            assert!(
+                load_full_bytes(&bytes[..cut]).is_err(),
+                "prefix of {cut}/{} bytes must not load",
+                bytes.len()
+            );
+        }
+    }
+
+    /// A corrupted dtype tag is rejected with the specific message,
+    /// not misread as some other precision.
+    #[test]
+    fn v3_rejects_corrupt_dtype_tag() {
+        let params = sample_params();
+        let opt = OptimState { kind: "adam".into(), lr: 1e-3, t: 9, ..Default::default() };
+        let meta = v3_meta();
+        let mut bytes = to_bytes(&params, &opt.view(), &meta).unwrap();
+        // Locate the tag: it is the byte right before the loss-scale
+        // f32. Its value is the bf16 code (2); find it by re-encoding
+        // with a different precision and diffing.
+        let alt = to_bytes(
+            &params,
+            &opt.view(),
+            &TrainMeta { precision: SlabDtype::F16, ..meta },
+        )
+        .unwrap();
+        let tag_at = bytes
+            .iter()
+            .zip(&alt)
+            .position(|(a, b)| a != b)
+            .expect("encodings differ only at the tag");
+        assert_eq!(bytes[tag_at], SlabDtype::Bf16.code());
+        bytes[tag_at] = 0x7f;
+        let err = load_full_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("unknown precision tag 127"), "{err}");
+    }
+
+    /// A non-finite or non-positive loss scale is corruption, not a
+    /// state to resume into.
+    #[test]
+    fn v3_rejects_bad_loss_scale() {
+        let params = sample_params();
+        let opt = OptimState { kind: "adam".into(), lr: 1e-3, t: 9, ..Default::default() };
+        for bad in [f32::NAN, f32::INFINITY, 0.0, -2.0] {
+            let meta = TrainMeta {
+                loss_scale: Some(LossScaleState { scale: bad, ..LossScaleState::new() }),
+                ..v3_meta()
+            };
+            // The writer does not validate (it writes what the state
+            // machine holds — which can never be bad in practice);
+            // the reader must.
+            let bytes = to_bytes(&params, &opt.view(), &meta).unwrap();
+            let err = load_full_bytes(&bytes).unwrap_err();
+            assert!(err.to_string().contains("loss scale"), "{err}");
+        }
+    }
+
+    /// Cross-version resume: a v2 file saved by pre-precision code
+    /// loads bitwise-identically under the v3 reader, with default
+    /// precision state filled in.
+    #[test]
+    fn v2_file_resumes_under_v3_code() {
+        let params = sample_params();
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), vec![0.25f32; 6]);
+        let opt = OptimState { kind: "adam".into(), lr: 5e-4, t: 8, m, v: BTreeMap::new() };
+        let meta = TrainMeta {
+            steps_done: 8,
+            micro_consumed: 16,
+            sim_clock: 2.0,
+            prev_dev_ppl: Some(13.5),
+            ..Default::default()
+        };
+        let bytes = to_bytes(&params, &opt.view(), &meta).unwrap();
+        assert_eq!(&bytes[..8], MAGIC_V2);
+        let ck = load_full_bytes(&bytes).unwrap();
+        assert_eq!(ck.params, params);
+        assert_eq!(ck.opt.as_ref().unwrap(), &opt);
+        assert_eq!(ck.meta, meta);
+        assert_eq!(ck.meta.precision, SlabDtype::F32);
+        assert!(ck.meta.loss_scale.is_none());
+        // And re-saving it unchanged reproduces the identical bytes —
+        // the bitwise half of the cross-version guarantee.
+        let again = to_bytes(&ck.params, &ck.opt.unwrap().view(), &ck.meta).unwrap();
+        assert_eq!(again, bytes);
+    }
+
+    /// The loss-scale state machine itself: halve-on-overflow with a
+    /// floor, double-after-N-clean with a cap.
+    #[test]
+    fn loss_scale_state_machine() {
+        let mut ls = LossScaleState { growth_interval: 2, ..LossScaleState::new() };
+        assert_eq!(ls.scale, 65536.0);
+        ls.on_overflow();
+        assert_eq!((ls.scale, ls.clean_steps, ls.overflow_skips), (32768.0, 0, 1));
+        ls.on_clean();
+        assert_eq!((ls.scale, ls.clean_steps), (32768.0, 1));
+        ls.on_clean();
+        assert_eq!((ls.scale, ls.clean_steps), (65536.0, 0));
+        // Floor at 1.0.
+        let mut tiny = LossScaleState { scale: 1.5, ..LossScaleState::new() };
+        tiny.on_overflow();
+        assert_eq!(tiny.scale, 1.0);
+        tiny.on_overflow();
+        assert_eq!(tiny.scale, 1.0);
+        // Cap at MAX_SCALE.
+        let mut big = LossScaleState {
+            scale: LossScaleState::MAX_SCALE,
+            growth_interval: 1,
+            ..LossScaleState::new()
+        };
+        big.on_clean();
+        assert_eq!(big.scale, LossScaleState::MAX_SCALE);
     }
 }

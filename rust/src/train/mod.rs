@@ -32,7 +32,8 @@
 pub mod checkpoint;
 pub mod step;
 
-pub use step::{AsyncCheckpointer, CkptStats, Pipeline};
+pub use checkpoint::LossScaleState;
+pub use step::{AsyncCheckpointer, CkptStats, Pipeline, StepPrecision};
 
 use crate::config::{Experiment, Strategy};
 use crate::data::{with_prefetch, Batcher};
@@ -45,6 +46,7 @@ use crate::runtime::Engine;
 use crate::sim::{simulate, SimResult};
 use crate::storage::Storage;
 use crate::tensor::flat::{FlatParams, DEFAULT_BUCKET_BYTES};
+use crate::tensor::half::SlabDtype;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -155,6 +157,18 @@ pub struct StepStats {
     /// (`tensor::alloc_count` delta — the hot-path churn metric
     /// `train-bench` tracks as `allocs_per_step`).
     pub allocs: u64,
+    /// True when dynamic loss scaling detected a non-finite gradient
+    /// and skipped the optimizer apply (parameters unchanged; the
+    /// scale was halved). Always false under `--precision f32`.
+    pub overflow_skipped: bool,
+    /// Loss scale in effect while this step's gradients were produced
+    /// (1.0 under f32).
+    pub loss_scale: f64,
+    /// Gradient bytes delivered into the reduction this step at the
+    /// storage dtype (`shards × slab elements × bytes_per_elem`) — the
+    /// `bytes_per_step` column of `train-bench`; 16-bit precisions
+    /// halve it.
+    pub grad_bytes: u64,
     /// Plan-execution host seconds per replica worker (length =
     /// `replicas`; load-imbalance diagnostic).
     pub replica_host_seconds: Vec<f64>,
@@ -185,6 +199,12 @@ pub struct TrainState {
     pub micro_consumed: usize,
     pub prev_dev_ppl: Option<f64>,
     pub history: Vec<EvalPoint>,
+    /// Storage precision of the parameter slab and of gradient
+    /// deliveries (f32 = the bitwise-reference path).
+    pub precision: SlabDtype,
+    /// Dynamic loss-scale state machine; only consulted when
+    /// `precision != f32` but always carried so resume round-trips it.
+    pub loss_scale: LossScaleState,
 }
 
 impl TrainState {
@@ -200,6 +220,8 @@ impl TrainState {
             micro_consumed: 0,
             prev_dev_ppl: None,
             history: Vec::new(),
+            precision: SlabDtype::F32,
+            loss_scale: LossScaleState::new(),
         }
     }
 }
@@ -232,6 +254,10 @@ pub struct Trainer<'a> {
     /// Writer (bytes, seconds) totals at the previous step boundary —
     /// diffed into `StepStats::checkpoint_bytes_per_s`.
     ckpt_last: (u64, f64),
+    /// Test hook: poison the next step's first gradient delivery with
+    /// `Inf` so the overflow-skip path can be exercised
+    /// deterministically (one-shot; cleared when consumed).
+    pub force_overflow_next: bool,
 }
 
 impl<'a> Trainer<'a> {
@@ -254,6 +280,7 @@ impl<'a> Trainer<'a> {
             ckpt: None,
             ckpt_every: 1,
             ckpt_last: (0, 0.0),
+            force_overflow_next: false,
         })
     }
 
@@ -279,6 +306,47 @@ impl<'a> Trainer<'a> {
                 self.state.params = ParamStore::Map(f.to_map());
             }
             _ => {}
+        }
+    }
+
+    /// Storage precision of the parameter slab / gradient deliveries.
+    pub fn precision(&self) -> SlabDtype {
+        self.state.precision
+    }
+
+    /// Switch the training precision. f32 is the bitwise-reference
+    /// path; f16/bf16 keep the optimizer's FP32 master slab but round
+    /// parameters and gradient deliveries through the 16-bit dtype and
+    /// turn on dynamic loss scaling. Rounds the current parameters
+    /// once on entry (lossy for 16-bit — do it before training, or
+    /// accept the one-time quantization). Requires the flat engine for
+    /// non-f32 dtypes.
+    pub fn set_precision(&mut self, dtype: SlabDtype) -> Result<()> {
+        if dtype != SlabDtype::F32 && self.step_mode != StepMode::Flat {
+            return Err(anyhow!(
+                "precision {dtype} requires the flat step engine (map engine is f32-only)"
+            ));
+        }
+        self.state.precision = dtype;
+        if let ParamStore::Flat(f) = &mut self.state.params {
+            f.set_dtype(dtype);
+        }
+        self.pipeline.invalidate();
+        Ok(())
+    }
+
+    /// Build this step's delivery precision (dtype + live loss scale),
+    /// consuming the one-shot forced-overflow hook.
+    fn step_precision(&mut self) -> StepPrecision {
+        let poison = std::mem::take(&mut self.force_overflow_next);
+        StepPrecision {
+            dtype: self.state.precision,
+            loss_scale: if self.state.precision == SlabDtype::F32 {
+                1.0
+            } else {
+                self.state.loss_scale.scale
+            },
+            poison_first_grad: poison,
         }
     }
 
@@ -344,6 +412,7 @@ impl<'a> Trainer<'a> {
     /// optimizer apply → bank invalidation.
     fn train_step_micro_flat(&mut self, micro: &[Batch]) -> Result<StepStats> {
         let allocs0 = crate::tensor::alloc_count();
+        let prec = self.step_precision();
         let t0 = std::time::Instant::now();
         let out = {
             let ParamStore::Flat(flat) = &self.state.params else {
@@ -356,6 +425,7 @@ impl<'a> Trainer<'a> {
                 micro,
                 &self.pipeline,
                 self.exec_mode(),
+                prec,
             )?
         };
         let host_seconds = t0.elapsed().as_secs_f64();
@@ -377,7 +447,14 @@ impl<'a> Trainer<'a> {
         }
         let ntok = ntok.max(1.0);
         let mut grads = out.grads;
-        grads.scale(1.0 / ntok as f32);
+        let grad_bytes = (micro.len() * grads.wire_bytes(prec.dtype)) as u64;
+        // Undo the loss scale alongside the 1/ntok normalization. The
+        // f32 expression is kept verbatim so that path stays bitwise.
+        if prec.dtype == SlabDtype::F32 && !out.overflow {
+            grads.scale(1.0 / ntok as f32);
+        } else if !out.overflow {
+            grads.scale((1.0 / (prec.loss_scale as f64 * ntok)) as f32);
+        }
         let reduce_seconds = out.reduce_seconds + t1.elapsed().as_secs_f64();
 
         let t2 = std::time::Instant::now();
@@ -385,11 +462,26 @@ impl<'a> Trainer<'a> {
         let ParamStore::Flat(flat) = &mut state.params else {
             unreachable!("checked above");
         };
-        let grad_norm = state.opt.apply_flat(flat, &grads, self.pipeline.replicas())?;
-        let apply_seconds = t2.elapsed().as_secs_f64();
-        // The update changed the host parameters: every replica's
-        // device-resident copies are stale until the next first touch.
-        self.pipeline.invalidate();
+        let (grad_norm, apply_seconds) = if out.overflow {
+            // Non-finite gradient under loss scaling: skip the apply
+            // (parameters and optimizer state untouched), halve the
+            // scale. The step still consumes its batches.
+            state.loss_scale.on_overflow();
+            (0.0, 0.0)
+        } else {
+            let gn = state.opt.apply_flat(flat, &grads, self.pipeline.replicas())?;
+            if prec.dtype != SlabDtype::F32 {
+                // The FP32 master update lands, then parameters round
+                // back to the storage dtype for the next forward.
+                flat.round_to_dtype();
+                state.loss_scale.on_clean();
+            }
+            // The update changed the host parameters: every replica's
+            // device-resident copies are stale until the next first
+            // touch.
+            self.pipeline.invalidate();
+            (gn, t2.elapsed().as_secs_f64())
+        };
 
         self.state.steps_done += 1;
         self.state.micro_consumed += micro.len();
@@ -411,6 +503,9 @@ impl<'a> Trainer<'a> {
             checkpoint_stall_seconds: 0.0,
             checkpoint_bytes_per_s: 0.0,
             allocs: crate::tensor::alloc_count() - allocs0,
+            overflow_skipped: out.overflow,
+            loss_scale: prec.loss_scale as f64,
+            grad_bytes,
             replica_host_seconds,
         })
     }
@@ -434,6 +529,7 @@ impl<'a> Trainer<'a> {
         comm: &crate::dist::DistComm,
     ) -> Result<StepStats> {
         let allocs0 = crate::tensor::alloc_count();
+        let prec = self.step_precision();
         let t0 = std::time::Instant::now();
         let out = {
             let ParamStore::Flat(flat) = &self.state.params else {
@@ -446,6 +542,7 @@ impl<'a> Trainer<'a> {
                 micro,
                 &self.pipeline,
                 self.exec_mode(),
+                prec,
             )?
         };
         let host_seconds = t0.elapsed().as_secs_f64();
@@ -467,6 +564,7 @@ impl<'a> Trainer<'a> {
         let ParamStore::Flat(flat) = &mut state.params else {
             unreachable!("checked above");
         };
+        let grad_bytes = (micro.len() * out.grads.wire_bytes(prec.dtype)) as u64;
         let global = comm.finish_step(
             state.steps_done as u64 + 1,
             flat,
@@ -474,6 +572,9 @@ impl<'a> Trainer<'a> {
             out.grads,
             &metas,
             self.pipeline.replicas(),
+            prec,
+            out.overflow,
+            &mut state.loss_scale,
         )?;
         let finish_seconds = t1.elapsed().as_secs_f64();
         self.pipeline.invalidate();
@@ -500,6 +601,9 @@ impl<'a> Trainer<'a> {
             checkpoint_stall_seconds: 0.0,
             checkpoint_bytes_per_s: 0.0,
             allocs: crate::tensor::alloc_count() - allocs0,
+            overflow_skipped: global.overflow,
+            loss_scale: prec.loss_scale as f64,
+            grad_bytes,
             replica_host_seconds,
         })
     }
@@ -581,6 +685,13 @@ impl<'a> Trainer<'a> {
             checkpoint_stall_seconds: 0.0,
             checkpoint_bytes_per_s: 0.0,
             allocs: crate::tensor::alloc_count() - allocs0,
+            overflow_skipped: false,
+            loss_scale: 1.0,
+            grad_bytes: {
+                let elems: usize =
+                    grads.values().map(|g| g.shape().iter().product::<usize>()).sum();
+                (micro.len() * elems * 4) as u64
+            },
             replica_host_seconds,
         })
     }
@@ -699,6 +810,9 @@ impl<'a> Trainer<'a> {
                 micro_consumed: self.state.micro_consumed as u64,
                 sim_clock: self.state.sim_clock,
                 prev_dev_ppl: self.state.prev_dev_ppl,
+                precision: self.state.precision,
+                loss_scale: (self.state.precision != SlabDtype::F32)
+                    .then_some(self.state.loss_scale),
             },
         )
     }
@@ -737,6 +851,9 @@ impl<'a> Trainer<'a> {
                 micro_consumed: self.state.micro_consumed as u64,
                 sim_clock: self.state.sim_clock,
                 prev_dev_ppl: self.state.prev_dev_ppl,
+                precision: self.state.precision,
+                loss_scale: (self.state.precision != SlabDtype::F32)
+                    .then_some(self.state.loss_scale),
             },
         }
     }
@@ -836,6 +953,21 @@ impl<'a> Trainer<'a> {
         self.state.micro_consumed = ck.meta.micro_consumed as usize;
         self.state.sim_clock = ck.meta.sim_clock;
         self.state.prev_dev_ppl = ck.meta.prev_dev_ppl;
+        self.state.precision = ck.meta.precision;
+        self.state.loss_scale = ck.meta.loss_scale.unwrap_or_default();
+        if ck.meta.precision != SlabDtype::F32 {
+            if self.step_mode != StepMode::Flat {
+                return Err(anyhow!(
+                    "checkpoint precision {} requires the flat step engine",
+                    ck.meta.precision
+                ));
+            }
+            if let ParamStore::Flat(f) = &mut self.state.params {
+                // Checkpointed values are already representable in the
+                // dtype — this tags the slab without changing bits.
+                f.set_dtype(ck.meta.precision);
+            }
+        }
         self.pipeline.invalidate();
         Ok(())
     }

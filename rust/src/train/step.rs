@@ -39,6 +39,7 @@ use crate::parallel::{
 };
 use crate::runtime::{Engine, ParamBank};
 use crate::tensor::flat::{bucket_of, Bucket, FlatGrads, FlatParams, SlabIndex};
+use crate::tensor::half::SlabDtype;
 use crate::tensor::{note_alloc, Tensor};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -202,6 +203,48 @@ fn tree_reduce_segments(parts: Vec<Box<[f32]>>) -> Option<Box<[f32]>> {
 // The overlapped bucketed reduce (flat path)
 // ------------------------------------------------------------------------
 
+/// Precision configuration of one flat train step.
+///
+/// The default (`F32`, scale 1.0, no poison) makes every precision
+/// hook in the step a structural no-op — no extra passes over any
+/// segment — so the f32 path stays bitwise-identical to the
+/// pre-precision builds. In 16-bit modes each shard's delivered
+/// gradient is multiplied by the loss scale and rounded (RNE) to the
+/// storage format *at delivery time* on the executor threads, and the
+/// reducer thread scans each folded bucket for Inf/NaN as it
+/// finishes — so overflow detection overlaps compute exactly like the
+/// reduction it rides on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepPrecision {
+    /// Storage/wire precision of grads delivered this step.
+    pub dtype: SlabDtype,
+    /// Dynamic loss scale applied to each shard gradient at delivery
+    /// (undone by the trainer's `1/(scale·ntok)` normalization).
+    pub loss_scale: f32,
+    /// Test hook: poison the first delivered gradient value of the
+    /// step with `+Inf`, so the overflow-skip path is exercised end
+    /// to end (delivery → fold → reducer scan → skipped apply).
+    pub poison_first_grad: bool,
+}
+
+impl StepPrecision {
+    /// The inert f32 configuration (also `Default`).
+    pub fn f32() -> Self {
+        StepPrecision { dtype: SlabDtype::F32, loss_scale: 1.0, poison_first_grad: false }
+    }
+
+    /// Whether any delivery-time or reducer-side precision work runs.
+    pub fn active(&self) -> bool {
+        self.dtype != SlabDtype::F32 || self.poison_first_grad
+    }
+}
+
+impl Default for StepPrecision {
+    fn default() -> Self {
+        StepPrecision::f32()
+    }
+}
+
 /// Shared delivery board of one flat train step: per-(shard, bucket)
 /// gradient segments filled by the executors' [`GradSink`]
 /// notifications, bucket-completion counters, and the channel feeding
@@ -224,6 +267,10 @@ pub struct BucketBoard<'a> {
     param_bucket: Vec<usize>,
     /// Ready buckets flow to the reducer here; closed after compute.
     tx: Mutex<Option<mpsc::Sender<usize>>>,
+    /// Precision of this step (scale + rounding at delivery).
+    prec: StepPrecision,
+    /// One-shot poison latch for [`StepPrecision::poison_first_grad`].
+    poison: AtomicBool,
 }
 
 impl<'a> BucketBoard<'a> {
@@ -232,6 +279,7 @@ impl<'a> BucketBoard<'a> {
         buckets: &'a [Bucket],
         shards: usize,
         tx: mpsc::Sender<usize>,
+        prec: StepPrecision,
     ) -> Self {
         let nb = buckets.len();
         let segs = (0..shards * nb)
@@ -254,6 +302,8 @@ impl<'a> BucketBoard<'a> {
             arrived: (0..nb).map(|_| AtomicUsize::new(0)).collect(),
             param_bucket,
             tx: Mutex::new(Some(tx)),
+            prec,
+            poison: AtomicBool::new(prec.poison_first_grad),
         }
     }
 
@@ -285,8 +335,21 @@ impl<'a> BucketBoard<'a> {
         }
         {
             let mut seg = self.segs[shard * nb + b].lock().unwrap();
-            seg[e.off - bk.range.start..e.off + e.len - bk.range.start]
-                .copy_from_slice(grad.data());
+            let dst = &mut seg[e.off - bk.range.start..e.off + e.len - bk.range.start];
+            dst.copy_from_slice(grad.data());
+            if self.prec.active() {
+                // Mixed-precision delivery: scale by the loss scale,
+                // then round to the storage dtype — on the executor
+                // thread, so the cost hides in the compute fan-out.
+                for x in dst.iter_mut() {
+                    *x = self.prec.dtype.round(*x * self.prec.loss_scale);
+                }
+                if self.poison.swap(false, Ordering::AcqRel) {
+                    if let Some(x0) = dst.first_mut() {
+                        *x0 = f32::INFINITY;
+                    }
+                }
+            }
         }
         let left = cell.fetch_sub(1, Ordering::AcqRel);
         if left == 0 {
@@ -335,25 +398,36 @@ impl GradSink for ShardSink<'_> {
 
 /// Reducer loop: fold each ready bucket through the fixed-shape shard
 /// tree. Returns (per-bucket reduced segments, total reduce seconds,
-/// seconds that ran while compute was still in flight).
+/// seconds that ran while compute was still in flight, overflow).
+///
+/// In mixed-precision mode ([`StepPrecision::active`]) each folded
+/// bucket is scanned for Inf/NaN right after its fold — still on the
+/// reducer thread, so loss-scale overflow detection overlaps compute
+/// exactly like the reduction does. The f32 path never scans.
 fn reduce_worker(
     board: &BucketBoard,
     rx: mpsc::Receiver<usize>,
     compute_done: &AtomicBool,
-) -> (Vec<Option<Box<[f32]>>>, f64, f64) {
+) -> (Vec<Option<Box<[f32]>>>, f64, f64, bool) {
     let nb = board.buckets.len();
     let mut out: Vec<Option<Box<[f32]>>> = (0..nb).map(|_| None).collect();
     let (mut total, mut overlapped) = (0.0f64, 0.0f64);
+    let mut overflow = false;
     while let Ok(b) = rx.recv() {
         let t0 = std::time::Instant::now();
         out[b] = tree_reduce_segments(board.take_bucket(b));
+        if board.prec.active() && !overflow {
+            if let Some(seg) = &out[b] {
+                overflow = seg.iter().any(|x| !x.is_finite());
+            }
+        }
         let dt = t0.elapsed().as_secs_f64();
         total += dt;
         if !compute_done.load(Ordering::SeqCst) {
             overlapped += dt;
         }
     }
-    (out, total, overlapped)
+    (out, total, overlapped, overflow)
 }
 
 /// Loss/token record of one micro-step on the flat path (the gradients
@@ -376,6 +450,10 @@ pub struct FlatStepOut {
     /// Portion of `reduce_seconds` that ran while replica compute was
     /// still in flight — the overlap the bucketing buys.
     pub reduce_overlap_seconds: f64,
+    /// Mixed-precision only: the reducer found Inf/NaN in a folded
+    /// bucket — the caller must skip the apply and shrink the loss
+    /// scale. Always `false` on the f32 path.
+    pub overflow: bool,
 }
 
 /// The overlapped flat step: fan `replicas × accum` micro-batches over
@@ -394,13 +472,14 @@ pub fn run_micro_steps_flat(
     micro: &[Batch],
     pipeline: &Pipeline,
     mode: ExecMode,
+    prec: StepPrecision,
 ) -> Result<FlatStepOut> {
     check_micro_len(micro, pipeline)?;
     let idx = params.idx();
     let buckets = params.buckets();
     let shards = micro.len();
     let (tx, rx) = mpsc::channel();
-    let board = BucketBoard::new(idx, buckets, shards, tx);
+    let board = BucketBoard::new(idx, buckets, shards, tx, prec);
     let compute_done = AtomicBool::new(false);
 
     // Unblocks the reducer even if the compute fan-out unwinds (a
@@ -440,7 +519,7 @@ pub fn run_micro_steps_flat(
         exec_out = Some(res);
     });
     let micros = exec_out.expect("scope ran")?;
-    let (reduced, reduce_seconds, reduce_overlap_seconds) =
+    let (reduced, reduce_seconds, reduce_overlap_seconds, overflow) =
         reducer_out.ok_or_else(|| anyhow!("gradient reducer thread panicked"))?;
     let mut segs = Vec::with_capacity(reduced.len());
     for (b, s) in reduced.into_iter().enumerate() {
@@ -449,7 +528,7 @@ pub fn run_micro_steps_flat(
         })?);
     }
     let grads = FlatGrads::new(idx.clone(), buckets.clone(), segs);
-    Ok(FlatStepOut { micros, grads, reduce_seconds, reduce_overlap_seconds })
+    Ok(FlatStepOut { micros, grads, reduce_seconds, reduce_overlap_seconds, overflow })
 }
 
 // ------------------------------------------------------------------------
@@ -715,7 +794,7 @@ mod tests {
         assert_eq!(buckets.len(), 2);
         let shards = 3;
         let (tx, rx) = mpsc::channel();
-        let board = BucketBoard::new(&idx, &buckets, shards, tx);
+        let board = BucketBoard::new(&idx, &buckets, shards, tx, StepPrecision::f32());
 
         let g = |v: f32, n: usize| Tensor::new(vec![n], vec![v; n]);
         // Interleave shards; bucket 1 ({c}) completes before bucket 0.
@@ -742,6 +821,45 @@ mod tests {
         assert!(board.deliver(0, "a", &g(1.0, 3)).is_err());
         let err = board.deliver(0, "a", &g(1.0, 2)).unwrap_err();
         assert!(err.to_string().contains("twice"), "{err}");
+    }
+
+    /// Mixed-precision delivery: the board scales by the loss scale,
+    /// rounds to the dtype, and the poison hook plants an Inf that the
+    /// reducer-side scan reports as overflow.
+    #[test]
+    fn bucket_board_scales_rounds_and_detects_overflow() {
+        let mut params = BTreeMap::new();
+        params.insert("a".to_string(), Tensor::new(vec![2], vec![0.0; 2]));
+        let idx = SlabIndex::from_map(&params);
+        let buckets = idx.buckets(usize::MAX);
+        let (tx, rx) = mpsc::channel();
+        let prec = StepPrecision {
+            dtype: SlabDtype::Bf16,
+            loss_scale: 4.0,
+            poison_first_grad: false,
+        };
+        let board = BucketBoard::new(&idx, &buckets, 1, tx, prec);
+        board
+            .deliver(0, "a", &Tensor::new(vec![2], vec![1.000001, 2.0]))
+            .unwrap();
+        assert_eq!(rx.try_recv().unwrap(), 0);
+        let seg = tree_reduce_segments(board.take_bucket(0)).unwrap();
+        // 4 × 1.000001 rounded to bf16, 4 × 2.0 exact.
+        assert_eq!(seg[0], SlabDtype::Bf16.round(4.0 * 1.000001));
+        assert_eq!(seg[1], 8.0);
+        assert!(!seg.iter().any(|x| !x.is_finite()));
+
+        // Same board shape with the poison latch armed: the first
+        // delivered value becomes +Inf, exactly once.
+        let (tx, rx) = mpsc::channel();
+        let prec = StepPrecision { poison_first_grad: true, ..prec };
+        let board = BucketBoard::new(&idx, &buckets, 2, tx, prec);
+        board.deliver(0, "a", &Tensor::new(vec![2], vec![1.0, 1.0])).unwrap();
+        board.deliver(1, "a", &Tensor::new(vec![2], vec![1.0, 1.0])).unwrap();
+        assert_eq!(rx.try_recv().unwrap(), 0);
+        let seg = tree_reduce_segments(board.take_bucket(0)).unwrap();
+        assert!(seg[0].is_infinite(), "poison must survive the fold");
+        assert_eq!(seg[1], 8.0, "only the first value is poisoned");
     }
 
     #[test]

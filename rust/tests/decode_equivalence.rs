@@ -13,7 +13,7 @@ use hybridnmt::decode::{
     translate_corpus, BatchDecoder, BeamConfig, DecodeOptions, Decoder, LengthNorm,
 };
 use hybridnmt::rng::Rng;
-use hybridnmt::runtime::{Engine, ParamBank};
+use hybridnmt::runtime::{quantize_params, Engine, ParamBank};
 use hybridnmt::tensor::Tensor;
 use hybridnmt::train::{checkpoint, init_params};
 use std::collections::BTreeMap;
@@ -173,6 +173,99 @@ fn invalid_inputs_error_cleanly() {
     // A good sentence after a bad one: the whole batch is rejected
     // before any device work happens.
     assert!(bd.translate_batch(&[vec![5, 6], long], &c).is_err());
+}
+
+/// Int8 dequant-on-bind is constructionally exact: a quantized bank
+/// decodes token-identically to decoding with the host-dequantized
+/// tensors through a plain f32 bank (same expanded weights either
+/// way), while the bank's traffic accounting reports the i8 bytes —
+/// a ~4× reduction over the f32 baseline.
+#[test]
+fn int8_bank_decodes_via_dequantized_weights_with_quarter_uploads() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, false, 17);
+    let srcs = random_srcs(&d, 6, 19);
+    let c = cfg(4, d.max_tgt);
+    let opts = DecodeOptions { batch: 4, devices: 2 };
+
+    let q = std::sync::Arc::new(quantize_params(&params));
+    assert_eq!(q.len(), params.len());
+    let deq: BTreeMap<String, Tensor> = params
+        .keys()
+        .map(|k| (k.clone(), q.get(k).unwrap().dequantize()))
+        .collect();
+    let fresh = ParamBank::new();
+    let (ref_hyps, _) =
+        translate_corpus(&e, &deq, &fresh, false, &srcs, &c, &opts).unwrap();
+
+    let qbank = ParamBank::new();
+    qbank.set_quantized(q.clone());
+    assert_eq!(qbank.quant_kind(), Some("int8"));
+    // The caller still passes the original f32 params: the bank ignores
+    // their values (name/shape contract only) and binds dequantized int8.
+    let (q_hyps, q_stats) =
+        translate_corpus(&e, &params, &qbank, false, &srcs, &c, &opts).unwrap();
+    assert_eq!(
+        q_hyps, ref_hyps,
+        "dequant-on-bind must serve exactly the dequantized weights"
+    );
+
+    // Byte accounting: every parameter bound once, each recorded at its
+    // i8 size (payload + 4-byte scale) — strictly under a third of f32.
+    assert_eq!(q_stats.param_bytes_uploaded, q.total_bytes());
+    assert!(
+        q.total_bytes() < q.f32_bytes() / 3,
+        "int8 uploads {} not ~4x under f32 {}",
+        q.total_bytes(),
+        q.f32_bytes()
+    );
+}
+
+/// The serve-bench acceptance gate (`--quantize int8` token-delta vs
+/// the f32 reference) at its fixed point: weights already on the int8
+/// grid — built with a power-of-two scale so every value and the scale
+/// itself are exactly representable — requantize bit-for-bit, and the
+/// quantized decode shows an accept delta of exactly 0.
+#[test]
+fn int8_is_exact_on_grid_snapped_weights() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, false, 23);
+    let snapped: BTreeMap<String, Tensor> = {
+        let q0 = quantize_params(&params);
+        params
+            .keys()
+            .map(|k| {
+                let qt = q0.get(k).unwrap();
+                // 2^-10 keeps magnitudes near the init scale; being a
+                // power of two makes `max_abs / 127` round-trip exact.
+                let data: Vec<f32> =
+                    qt.data.iter().map(|&v| v as f32 * 0.0009765625).collect();
+                (k.clone(), Tensor::new(qt.shape.clone(), data))
+            })
+            .collect()
+    };
+    // Requantization of on-grid weights is the identity.
+    let q = quantize_params(&snapped);
+    for (k, t) in &snapped {
+        let qt = q.get(k).unwrap();
+        let rt = qt.dequantize();
+        assert_eq!(rt.data(), t.data(), "`{k}` not a quantization fixed point");
+    }
+
+    let srcs = random_srcs(&d, 6, 29);
+    let c = cfg(4, d.max_tgt);
+    let opts = DecodeOptions { batch: 4, devices: 1 };
+    let fresh = ParamBank::new();
+    let (ref_hyps, _) =
+        translate_corpus(&e, &snapped, &fresh, false, &srcs, &c, &opts).unwrap();
+    let qbank = ParamBank::new();
+    qbank.set_quantized(std::sync::Arc::new(q));
+    let (q_hyps, _) =
+        translate_corpus(&e, &snapped, &qbank, false, &srcs, &c, &opts).unwrap();
+    let differing = q_hyps.iter().zip(&ref_hyps).filter(|(h, r)| h != r).count();
+    assert_eq!(differing, 0, "on-grid weights must decode with zero token delta");
 }
 
 /// The packed width really is wider than the single-sentence path's

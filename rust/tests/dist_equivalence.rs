@@ -347,3 +347,84 @@ fn kill_at_send_mid_step_is_typed_on_survivors() {
         expect_typed(&format!("kill-at-send rank {r}"), run);
     }
 }
+
+// ----------------------------------------------------- mixed precision
+
+/// Mixed-precision dist: a 2-rank bf16 world in both collective modes
+/// lands on the same bits as the single-process bf16 run over the same
+/// shard stream. Every rank rounds its gradient partial through the
+/// wire dtype before the fixed-shape fold, so all ranks fold identical
+/// inputs and the cross-process/in-process boundary stays invisible —
+/// the same claim the f32 suite makes, at 16 bits.
+#[test]
+fn bf16_worlds_match_single_process_bf16_bitwise() {
+    use hybridnmt::tensor::half::SlabDtype;
+    let e = engine();
+    let steps = 2;
+    let procs = 2;
+    let p = pool(&e, steps * procs);
+
+    let exp = test_exp(&e);
+    let mut tr = Trainer::new(&e, &exp).unwrap();
+    tr.set_bucket_bytes(BUCKET);
+    tr.set_precision(SlabDtype::Bf16).unwrap();
+    tr.set_pipeline(procs, 1);
+    for s in 0..steps {
+        tr.train_step_micro(&p[s * procs..(s + 1) * procs])
+            .unwrap_or_else(|err| panic!("bf16 reference step {s}: {err:#}"));
+    }
+    let reference = tr.params().clone();
+
+    for mode in [DistMode::Ps, DistMode::Replicated] {
+        let specs: Vec<RankSpec> = (0..procs)
+            .map(|_| {
+                let mut s = dist_spec(&e, mode, 1, steps);
+                s.precision = SlabDtype::Bf16;
+                s
+            })
+            .collect();
+        let runs =
+            run_fake_world(&e, &specs, vec![FaultScript::clean(); procs], CommOpts::fast(), &p);
+        for (r, run) in runs.into_iter().enumerate() {
+            let label = format!("bf16 {mode:?} rank {r}");
+            let run = run.unwrap_or_else(|err| panic!("{label}: {err:#}"));
+            assert_params_bitwise(&label, &reference, &run.params);
+        }
+    }
+    // The run really was 16-bit: every final parameter survives a
+    // round-trip through bf16 unchanged.
+    for (name, t) in &reference {
+        for &v in t.data() {
+            assert_eq!(
+                SlabDtype::Bf16.round(v).to_bits(),
+                v.to_bits(),
+                "`{name}` holds {v}, which is not bf16-representable"
+            );
+        }
+    }
+}
+
+/// Ranks disagreeing on `--precision` must fail with a typed
+/// dtype-mismatch error at the first gradient exchange — never a
+/// silently mixed-precision fold.
+#[test]
+fn mixed_precision_world_is_rejected() {
+    use hybridnmt::tensor::half::SlabDtype;
+    let e = engine();
+    let procs = 2;
+    let steps = 2;
+    let p = pool(&e, steps * procs);
+    let mut specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Ps, 1, steps)).collect();
+    specs[0].precision = SlabDtype::Bf16; // rank 1 stays f32
+    let runs = run_fake_world(&e, &specs, vec![FaultScript::clean(); procs], CommOpts::fast(), &p);
+    let msgs: Vec<String> = runs
+        .iter()
+        .enumerate()
+        .map(|(r, run)| expect_typed(&format!("mixed-precision rank {r}"), run))
+        .collect();
+    assert!(
+        msgs.iter().any(|m| m.contains("dtype mismatch")),
+        "some rank must name the dtype mismatch: {msgs:?}"
+    );
+}

@@ -391,6 +391,7 @@ fn prop_every_truncated_checkpoint_prefix_errors() {
             micro_consumed: 28,
             sim_clock: 12.5,
             prev_dev_ppl: if trial % 2 == 0 { Some(33.25) } else { None },
+            ..TrainMeta::default()
         };
         let bytes = checkpoint::to_bytes(&params, &view, &meta).unwrap();
 

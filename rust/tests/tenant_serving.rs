@@ -14,7 +14,7 @@ use hybridnmt::config::{DataConfig, Experiment, HwConfig, ModelDims, Strategy, T
 use hybridnmt::decode::{BeamConfig, Decoder, LengthNorm};
 use hybridnmt::report::{tenant_table, TenantRow};
 use hybridnmt::rng::Rng;
-use hybridnmt::runtime::{Engine, ParamBank};
+use hybridnmt::runtime::{quantize_params, Engine, ParamBank};
 use hybridnmt::serve::{
     drive_tenant_arrivals, run_tenant_server, tenant_arrivals, ServeOptions, SubmitError,
     TenantOpts, TenantRegistry,
@@ -135,6 +135,86 @@ fn hot_swap_under_load_never_drops_or_mixes() {
     // watched by the probe — must now be released.
     assert!(reg.wait_drained(Duration::from_secs(5)), "old generation must drain");
     assert!(probe.load(Ordering::SeqCst), "old generation buffers released after drain");
+}
+
+/// A *precision* hot-swap: alpha's weights are re-published behind an
+/// int8 quantized bank while f32 work is still in flight. The weights
+/// are snapped onto the int8 grid with a power-of-two scale first, so
+/// the quantized decode is token-identical to f32 — any coalescer
+/// group that mixed the two precisions, or a request decoded under the
+/// wrong generation's bank, would surface as a divergent token
+/// sequence or a wrong pinned generation. (The coalescer keys groups
+/// on (tenant, generation, quant), so f32 and int8 traffic can never
+/// share a device batch even with a generous coalescing window.)
+#[test]
+fn quantized_hot_swap_never_mixes_precisions() {
+    let e = engine();
+    let d = e.dims().clone();
+    let raw = random_params(&d, 11);
+    // Quantize → dequantize is the identity on these weights (2^-10
+    // scale), so one reference covers both generations.
+    let params: BTreeMap<String, Tensor> = {
+        let q0 = quantize_params(&raw);
+        raw.keys()
+            .map(|k| {
+                let qt = q0.get(k).unwrap();
+                let data: Vec<f32> =
+                    qt.data.iter().map(|&v| v as f32 * 0.0009765625).collect();
+                (k.clone(), Tensor::new(qt.shape.clone(), data))
+            })
+            .collect()
+    };
+    let pool = random_srcs(&d, 8, 13);
+    let c = cfg(4, d.max_tgt);
+    let dec = Decoder::new(&e, &params, false);
+    let reference: Vec<Vec<i32>> = pool.iter().map(|s| dec.translate(s, &c).unwrap()).collect();
+
+    let reg = registry_with(&params, &[("alpha", TenantOpts::default())]);
+    let gen1 = reg.generation_of("alpha").unwrap();
+    let opts = ServeOptions {
+        replicas: 2,
+        queue_capacity: 64,
+        max_wait_ms: 50.0,
+        ..Default::default()
+    };
+    let (gen2, responses, stats, per_tenant) =
+        run_tenant_server(&e, &reg, false, &c, &opts, |h| {
+            // Phase 1: f32 traffic, then swap in the quantized bank
+            // while it is (at least partly) still in flight.
+            for i in 0..8u64 {
+                h.submit("alpha", i, 100 + i, pool[i as usize % pool.len()].clone()).unwrap();
+            }
+            let qbank = ParamBank::new();
+            qbank.set_quantized(std::sync::Arc::new(quantize_params(&params)));
+            assert_eq!(qbank.quant_kind(), Some("int8"));
+            let gen2 = reg.swap("alpha", params.clone(), qbank).unwrap();
+            // Phase 2: post-swap traffic decodes through int8 binds.
+            for i in 8..16u64 {
+                h.submit("alpha", i, 100 + i, pool[i as usize % pool.len()].clone()).unwrap();
+            }
+            Ok(gen2)
+        })
+        .unwrap();
+    assert!(gen2 > gen1);
+
+    assert_eq!(responses.len() as u64, stats.accepted);
+    assert_eq!(per_tenant["alpha"].completed, 16);
+    for r in &responses {
+        assert_eq!(
+            r.response.tokens,
+            reference[r.response.id as usize % pool.len()],
+            "request {} (gen {}) diverged across the precision swap",
+            r.response.id,
+            r.generation
+        );
+        let expect = if r.response.id < 8 { gen1 } else { gen2 };
+        assert_eq!(
+            r.generation, expect,
+            "request {} decoded under generation {}, admitted under {}",
+            r.response.id, r.generation, expect
+        );
+    }
+    assert!(reg.wait_drained(Duration::from_secs(5)), "old f32 generation must drain");
 }
 
 /// Per-tenant admission caps: a burst from one tenant over its own cap

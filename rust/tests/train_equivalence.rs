@@ -22,6 +22,7 @@ use hybridnmt::optim::{self, Optimizer};
 use hybridnmt::parallel::Batch;
 use hybridnmt::rng::Rng;
 use hybridnmt::runtime::Engine;
+use hybridnmt::tensor::half::SlabDtype;
 use hybridnmt::tensor::{ITensor, Tensor};
 use hybridnmt::train::{StepMode, Trainer};
 use std::collections::BTreeMap;
@@ -344,6 +345,185 @@ fn v2_checkpoint_round_trips_across_step_engines() {
             resumed.params(),
         );
     }
+}
+
+// --------------------------------------------------------------------------
+// Mixed precision (16-bit slabs + dynamic loss scaling)
+// --------------------------------------------------------------------------
+
+/// Train `steps` single-shard steps at the given slab precision and
+/// return (final params, per-step stats).
+fn train_precision(
+    e: &Engine,
+    pool: &[Batch],
+    steps: usize,
+    dtype: SlabDtype,
+) -> (BTreeMap<String, Tensor>, Vec<hybridnmt::train::StepStats>) {
+    let exp = test_exp(e);
+    let mut tr = Trainer::new(e, &exp).unwrap();
+    tr.set_precision(dtype).unwrap();
+    let mut stats = Vec::new();
+    for b in &pool[..steps] {
+        stats.push(tr.train_step(b).unwrap());
+    }
+    (tr.params().clone(), stats)
+}
+
+/// `--precision f32` must stay byte-for-byte the pre-precision path:
+/// the explicit f32 setting and the default produce identical bits at
+/// every replica spread.
+#[test]
+fn explicit_f32_precision_is_bitwise_default() {
+    let e = engine();
+    let d = e.dims().clone();
+    let steps = 2;
+    let pool: Vec<Batch> = (0..steps * 4).map(|j| random_batch(&d, 900 + j as u64)).collect();
+    let reference = train_config(&e, &pool, steps, 1, 4, true);
+    for (replicas, accum) in [(1, 4), (2, 2), (4, 1)] {
+        let exp = test_exp(&e);
+        let mut tr = Trainer::new(&e, &exp).unwrap();
+        tr.set_precision(SlabDtype::F32).unwrap();
+        tr.set_pipeline(replicas, accum);
+        let per = tr.pipeline.micro_per_step();
+        for s in 0..steps {
+            tr.train_step_micro(&pool[s * per..(s + 1) * per]).unwrap();
+        }
+        assert_params_bitwise(
+            &format!("explicit f32 {replicas}x{accum}"),
+            &reference,
+            tr.params(),
+        );
+    }
+}
+
+/// The 16-bit bounded-divergence gate: five steps at f16/bf16 stay
+/// within a small L2-relative distance of the f32 run on the same
+/// batches, per-step losses stay within 15% (loss parity), and the
+/// final parameters are exactly representable in the storage dtype
+/// (the post-apply rounding really ran).
+#[test]
+fn half_precision_divergence_is_bounded_over_five_steps() {
+    let e = engine();
+    let d = e.dims().clone();
+    let steps = 5;
+    let pool: Vec<Batch> = (0..steps).map(|j| random_batch(&d, 1000 + j as u64)).collect();
+    let (ref_params, ref_stats) = train_precision(&e, &pool, steps, SlabDtype::F32);
+    assert!(ref_stats.iter().all(|s| !s.overflow_skipped), "f32 never skips");
+
+    for dtype in [SlabDtype::F16, SlabDtype::Bf16] {
+        let (params, stats) = train_precision(&e, &pool, steps, dtype);
+        // Loss parity per step (skipped steps still report the loss of
+        // the batches they consumed, so the comparison is total).
+        for (i, (s, r)) in stats.iter().zip(&ref_stats).enumerate() {
+            assert!(s.loss_per_tok.is_finite(), "{dtype} step {i}: finite loss");
+            let rel = (s.loss_per_tok - r.loss_per_tok).abs() / r.loss_per_tok.abs().max(1e-9);
+            assert!(
+                rel < 0.15,
+                "{dtype} step {i}: loss {} vs f32 {} (rel {rel:.4})",
+                s.loss_per_tok,
+                r.loss_per_tok
+            );
+        }
+        // Bounded parameter divergence: L2-relative over the whole set.
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (name, x) in &ref_params {
+            let y = &params[name];
+            for (u, v) in x.data().iter().zip(y.data()) {
+                assert!(v.is_finite(), "{dtype}: `{name}` stays finite");
+                num += ((u - v) as f64).powi(2);
+                den += (*u as f64).powi(2);
+            }
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 0.15, "{dtype}: L2-relative divergence {rel:.5} vs f32");
+        assert!(rel.is_finite(), "{dtype}: divergence finite");
+        // Every stored value must survive a round-trip through the
+        // storage dtype unchanged — params live in 16-bit.
+        for (name, t) in &params {
+            for (i, &v) in t.data().iter().enumerate() {
+                assert_eq!(
+                    dtype.round(v).to_bits(),
+                    v.to_bits(),
+                    "{dtype}: `{name}`[{i}] = {v} not representable in {dtype}"
+                );
+            }
+        }
+    }
+}
+
+/// Forced overflow drill: poisoning one step's gradient with Inf must
+/// skip that apply (parameters and optimizer state untouched), halve
+/// the loss scale, and leave the next step clean at the halved scale.
+#[test]
+fn forced_overflow_skips_step_and_halves_scale() {
+    let e = engine();
+    let d = e.dims().clone();
+    let exp = test_exp(&e);
+    let pool: Vec<Batch> = (0..3).map(|j| random_batch(&d, 1100 + j as u64)).collect();
+
+    let mut tr = Trainer::new(&e, &exp).unwrap();
+    tr.set_precision(SlabDtype::Bf16).unwrap();
+    let st1 = tr.train_step(&pool[0]).unwrap();
+    assert!(!st1.overflow_skipped, "clean warmup step");
+    let scale1 = st1.loss_scale;
+    assert!(scale1 > 1.0, "16-bit mode starts with a real loss scale");
+    let params_after_1 = tr.params().clone();
+
+    tr.force_overflow_next = true;
+    let st2 = tr.train_step(&pool[1]).unwrap();
+    assert!(st2.overflow_skipped, "poisoned step must be skipped");
+    assert_eq!(st2.grad_norm, 0.0, "skipped step reports no grad norm");
+    assert_eq!(tr.steps_done(), 2, "a skipped step still counts (batches consumed)");
+    assert_params_bitwise("params untouched by skipped step", &params_after_1, tr.params());
+
+    let st3 = tr.train_step(&pool[2]).unwrap();
+    assert!(!st3.overflow_skipped, "next step is clean again");
+    assert_eq!(st3.loss_scale, scale1 / 2.0, "overflow halved the scale");
+    let changed = tr
+        .params()
+        .iter()
+        .any(|(n, t)| t.data().iter().zip(params_after_1[n].data()).any(|(a, b)| a != b));
+    assert!(changed, "the clean step after the skip applies an update");
+}
+
+/// A 16-bit run checkpoints as v3 and resumes bitwise — params, loss
+/// scale and clocks — while the map engine refuses such a checkpoint
+/// with a typed error.
+#[test]
+fn bf16_checkpoint_resumes_bitwise_and_map_engine_rejects_it() {
+    let e = engine();
+    let d = e.dims().clone();
+    let exp = test_exp(&e);
+    let pool: Vec<Batch> = (0..4).map(|j| random_batch(&d, 1200 + j as u64)).collect();
+
+    let mut full = Trainer::new(&e, &exp).unwrap();
+    full.set_precision(SlabDtype::Bf16).unwrap();
+    for b in &pool[..2] {
+        full.train_step(b).unwrap();
+    }
+    let dir = std::env::temp_dir().join("hynmt_train_eq");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume_bf16.bin");
+    full.save_checkpoint(&path).unwrap();
+    for b in &pool[2..] {
+        full.train_step(b).unwrap();
+    }
+
+    let mut resumed = Trainer::new(&e, &exp).unwrap();
+    resumed.resume(&path).unwrap();
+    assert_eq!(resumed.precision(), SlabDtype::Bf16, "precision restored from v3");
+    for b in &pool[2..] {
+        resumed.train_step(b).unwrap();
+    }
+    assert_params_bitwise("bf16 resumed vs continuous", full.params(), resumed.params());
+
+    let mut map_tr = Trainer::new(&e, &exp).unwrap();
+    map_tr.set_step_mode(StepMode::Map);
+    let err = map_tr.resume(&path).unwrap_err();
+    assert!(
+        err.to_string().contains("flat step engine"),
+        "map engine must reject a 16-bit checkpoint: {err:#}"
+    );
 }
 
 // --------------------------------------------------------------------------

@@ -68,13 +68,19 @@ if path.endswith("BENCH_train.json"):
     # (allocs_per_step), and the async-checkpoint columns: the
     # training-thread stall per step (checkpoint_stall_ms, ~0 under
     # copy-on-write snapshots — that's the claim) and the background
-    # writer bandwidth (checkpoint_bytes_per_s). A train-bench run that
-    # stopped writing any of these is a regression, not a formatting
-    # choice.
+    # writer bandwidth (checkpoint_bytes_per_s). Since mixed-precision
+    # training every row also carries its slab dtype (precision:
+    # 0=f32, 1=f16, 2=bf16 — 16-bit rows additionally get a
+    # .f16/.bf16 key suffix so f32 keys stay byte-stable), the grad
+    # wire traffic (bytes_per_step — the column the 16-bit modes are
+    # supposed to halve) and the dynamic-loss-scale skip count
+    # (overflow_skips). A train-bench run that stopped writing any of
+    # these is a regression, not a formatting choice.
     required = ["tok_per_s", "step_ms", "reduce_ms", "overlap_pct",
                 "apply_ms", "stall_ms", "uploads_per_step",
                 "allocs_per_step", "checkpoint_stall_ms",
-                "checkpoint_bytes_per_s"]
+                "checkpoint_bytes_per_s", "precision", "bytes_per_step",
+                "overflow_skips"]
     prefixes = {k.rsplit(".", 1)[0] for k in data}
     if not prefixes:
         raise SystemExit(f"{path}: no train rows")
@@ -89,8 +95,41 @@ if path.endswith("BENCH_train.json"):
         missing = [s for s in required if f"{p}.{s}" not in data]
         if missing:
             raise SystemExit(f"{path}: row `{p}` missing {missing}")
+        if data[f"{p}.precision"] not in (0, 1, 2):
+            raise SystemExit(f"{path}: row `{p}` has precision "
+                             f"{data[f'{p}.precision']} (want 0=f32, 1=f16, "
+                             "2=bf16)")
     dist_rows = sum(1 for p in prefixes if ".dist" in p)
     print(f"  {path}: train schema OK ({len(prefixes)} rows, {dist_rows} dist)")
+if path.endswith("BENCH_decode.json"):
+    # Decode-bench rows: single.beam<B> (reference path),
+    # batch<N>.devices<D>.beam<B> (f32 batched) and
+    # int8.batch<N>.devices<D>.beam<B> (quantized sweeps from
+    # serve-bench --quantize int8). Every row carries throughput plus
+    # the quantization triple: quant (weight bit-width, 0 = f32,
+    # 8 = int8), bytes_uploaded (parameter bytes crossing the
+    # host→device boundary — the column int8 is supposed to quarter)
+    # and accept_delta (fraction of sentences whose tokens differ from
+    # the f32 reference; 0 on every f32 row by definition).
+    required = ["sent_per_s", "wall_ns", "quant", "bytes_uploaded",
+                "accept_delta"]
+    prefixes = {k.rsplit(".", 1)[0] for k in data}
+    if not prefixes:
+        raise SystemExit(f"{path}: no decode rows")
+    n_q = 0
+    for p in sorted(prefixes):
+        missing = [s for s in required if f"{p}.{s}" not in data]
+        if missing:
+            raise SystemExit(f"{path}: row `{p}` missing {missing}")
+        if data[f"{p}.quant"] not in (0, 8):
+            raise SystemExit(f"{path}: row `{p}` has quant "
+                             f"{data[f'{p}.quant']} (want 0=f32 or 8=int8)")
+        if data[f"{p}.quant"] == 0 and data[f"{p}.accept_delta"] != 0:
+            raise SystemExit(f"{path}: f32 row `{p}` has nonzero "
+                             "accept_delta (only quantized rows may "
+                             "diverge from the reference)")
+        n_q += data[f"{p}.quant"] != 0
+    print(f"  {path}: decode schema OK ({len(prefixes)} rows, {n_q} quantized)")
 if path.endswith("BENCH_serve.json"):
     # The serving benchmark has fixed schemas on top of the flat
     # name->number convention, scoped by row class:
