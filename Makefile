@@ -1,6 +1,6 @@
 # hybridnmt build/verify entry points (see README.md).
 
-.PHONY: artifacts verify lint doc clean-artifacts serve-bench train-bench tenant-bench crash-test dist-test
+.PHONY: artifacts verify lint doc clean-artifacts serve-bench train-bench tenant-bench crash-test dist-test chaos-test
 
 # AOT-compile the JAX model to HLO-text artifacts + manifests.
 # aot.py uses package-relative imports, so run it as a module from
@@ -79,6 +79,24 @@ dist-test:
 		cargo test --test dist_equivalence; \
 	else \
 		echo "dist-test: cargo not available, skipping"; \
+	fi
+
+# Elastic recovery: the chaos equivalence suite (scripted kills under
+# the supervisor recover bitwise from durable checkpoints; budget
+# exhaustion is a typed error), the engine-free supervisor unit tests,
+# and a supervised 2-process CLI drill where rank 1 hard-exits at step
+# 2 and the relaunched world resumes from the `latest` checkpoint.
+# Needs `make artifacts` first; degrades to a notice without cargo.
+chaos-test:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo test --test supervisor_unit && \
+		cargo test --test chaos_recovery && \
+		rm -rf /tmp/hybridnmt-chaos-ck && \
+		cargo run --release -- train --model tiny --steps 3 --sentences 600 \
+			--dist 2 --dist-mode ps --dist-supervise --max-restarts 2 \
+			--ckpt-dir /tmp/hybridnmt-chaos-ck --dist-die 1@2; \
+	else \
+		echo "chaos-test: cargo not available, skipping"; \
 	fi
 
 doc:

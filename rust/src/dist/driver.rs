@@ -4,6 +4,9 @@
 //! [`train_rank`] is the one loop every entry point shares: the
 //! `dist-worker` subcommand (real processes over loopback TCP), the
 //! equivalence suite's thread worlds, and `train-bench --dist`.
+//! [`train_rank_ctx`] is the same loop with a [`RankCtx`] attached —
+//! durable checkpoint resume, per-step heartbeats and an incarnation
+//! generation — which is what supervised (elastic) worlds run.
 //!
 //! ## Batch ownership
 //!
@@ -13,25 +16,59 @@
 //! Contiguous blocks are what the reduction-tree factorization
 //! requires (`dist::collective`); deriving rather than shipping the
 //! stream keeps the wire protocol gradient-only.
+//!
+//! ## Elastic recovery
+//!
+//! [`run_supervised_world`] wraps either thread-world harness in the
+//! [`supervisor`](super::supervisor) loop: each incarnation runs with
+//! its generation stamped into every frame, rank 0 checkpoints through
+//! the `latest`-pointer protocol, and after a failure the next
+//! incarnation resumes all ranks from the newest durable checkpoint.
+//! Because the stream is derived (identical everywhere) and the loop
+//! below indexes it by absolute step, resuming at `steps_done = k`
+//! *is* the fast-forward — the recovered trajectory replays exactly
+//! the steps a fault-free run would have taken, so final parameters
+//! are bitwise-identical (`rust/tests/chaos_recovery.rs`).
 
 use std::collections::BTreeMap;
 use std::net::TcpListener;
+use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context as _, Result};
 
 use super::collective::DistComm;
 use super::fake::{FakeNet, FaultScript};
+use super::supervisor::{
+    self, FailureCause, HeartbeatMonitor, HeartbeatTx, Incarnation, RecoveryStats,
+    SupervisorOpts,
+};
 use super::transport::{CommOpts, TcpTransport};
 use super::{DistError, DistMode};
 use crate::config::Experiment;
 use crate::metrics::Registry;
 use crate::parallel::Batch;
 use crate::runtime::Engine;
+use crate::storage::Storage;
 use crate::tensor::Tensor;
-use crate::train::{StepStats, Trainer};
+use crate::train::{checkpoint, StepStats, Trainer};
+
+/// One scripted rank death for chaos runs: fail just before (1-based)
+/// `step` of incarnation `gen`. Lets a test kill the same rank in
+/// several consecutive incarnations, or different ranks per
+/// incarnation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduledDeath {
+    /// Incarnation this death fires in (0 = the initial launch).
+    pub gen: u32,
+    /// 1-based optimizer step to die just before.
+    pub step: u64,
+    /// Hard-exit the process (code 3) instead of the typed-error soft
+    /// kill. Only meaningful in real worker processes.
+    pub hard: bool,
+}
 
 /// Everything one rank needs to run its share of a distributed
-/// training job (identical on every rank except `die_at_step`).
+/// training job (identical on every rank except the fault hooks).
 #[derive(Clone)]
 pub struct RankSpec {
     pub exp: Experiment,
@@ -49,12 +86,17 @@ pub struct RankSpec {
     /// Storage precision (must match on every rank — frames carry the
     /// dtype and receivers reject a mismatch).
     pub precision: crate::tensor::half::SlabDtype,
-    /// Deterministic fault hook: fail just before this (1-based) step.
+    /// Deterministic fault hook: fail just before this (1-based) step
+    /// (incarnation 0 only; see `die_script` for later incarnations).
     pub die_at_step: Option<u64>,
     /// With `die_at_step`: hard-exit the process (code 3) instead of
     /// returning a typed error. Only for real worker processes — a
     /// thread world must use the soft kill.
     pub die_hard: bool,
+    /// Per-incarnation death schedule for supervised chaos runs;
+    /// takes precedence over `die_at_step` when an entry matches the
+    /// running incarnation.
+    pub die_script: Vec<ScheduledDeath>,
 }
 
 impl RankSpec {
@@ -70,12 +112,27 @@ impl RankSpec {
             precision: crate::tensor::half::SlabDtype::F32,
             die_at_step: None,
             die_hard: false,
+            die_script: Vec::new(),
         }
     }
 
     /// Micro-batches one rank consumes per optimizer step.
     pub fn local_shards(&self) -> usize {
         self.replicas * self.accum
+    }
+
+    /// The `(step, hard)` death scheduled for incarnation `gen`, if
+    /// any. `die_script` entries win; the legacy `die_at_step` hook
+    /// applies to incarnation 0 only (one-shot faults must not kill
+    /// every relaunch).
+    pub fn death_for(&self, gen: u32) -> Option<(u64, bool)> {
+        if let Some(d) = self.die_script.iter().find(|d| d.gen == gen) {
+            return Some((d.step, d.hard));
+        }
+        if gen == 0 {
+            return self.die_at_step.map(|s| (s, self.die_hard));
+        }
+        None
     }
 }
 
@@ -85,6 +142,27 @@ pub struct RankRun {
     /// Final parameters (zero-copy views; compare `.data()` for the
     /// bitwise-identity assertions).
     pub params: BTreeMap<String, Tensor>,
+}
+
+/// Per-rank runtime context for supervised runs: durable checkpoint
+/// store, heartbeat channel, and the incarnation generation. The
+/// default context (no store, no beats, generation 0) is exactly the
+/// unsupervised behaviour [`train_rank`] always had.
+#[derive(Clone, Default)]
+pub struct RankCtx {
+    /// Checkpoint store. Every rank *resumes* from it; only rank 0
+    /// *writes* to it (valid because parameters are bitwise-identical
+    /// across ranks at every step boundary — in `ps` mode the workers'
+    /// optimizer state is never consulted, in `replicated` mode it is
+    /// identical by the signature invariant).
+    pub store: Option<Arc<dyn Storage>>,
+    /// Publish a checkpoint every this many optimizer steps (rank 0).
+    pub ckpt_every: usize,
+    /// Where this rank's per-step liveness beacons go.
+    pub beat: Option<HeartbeatTx>,
+    /// Incarnation generation, stamped into every frame this rank
+    /// sends so zombies from dead incarnations are dropped on receive.
+    pub gen: u32,
 }
 
 /// Run `spec.steps` distributed optimizer steps as rank
@@ -101,6 +179,22 @@ pub fn train_rank(
     spec: &RankSpec,
     comm: &DistComm,
     global_stream: &[Batch],
+) -> Result<RankRun> {
+    train_rank_ctx(engine, spec, comm, global_stream, &RankCtx::default())
+}
+
+/// [`train_rank`] with a supervised-run context: resume from the
+/// newest durable checkpoint (all ranks), publish checkpoints (rank 0),
+/// and beat the heartbeat channel once per completed step. Resuming at
+/// `steps_done = k` fast-forwards by *indexing* the derived stream at
+/// absolute step `k` — no state beyond the checkpoint is needed for
+/// the recovered run to be bitwise-identical to a fault-free one.
+pub fn train_rank_ctx(
+    engine: &Engine,
+    spec: &RankSpec,
+    comm: &DistComm,
+    global_stream: &[Batch],
+    ctx: &RankCtx,
 ) -> Result<RankRun> {
     let world = comm.world();
     let rank = comm.rank();
@@ -129,22 +223,49 @@ pub fn train_rank(
     }
     trainer.set_precision(spec.precision)?;
 
-    let mut stats = Vec::with_capacity(spec.steps);
-    for s in 0..spec.steps {
-        let step_no = s as u64 + 1;
-        if spec.die_at_step == Some(step_no) {
-            if spec.die_hard {
-                // The kill-mid-step hook for real worker processes:
-                // no abort frame, no socket shutdown courtesy — the
-                // peers must survive on timeouts/EOF alone.
-                eprintln!("[rank {rank}] --dist-die: hard exit at step {step_no}");
-                std::process::exit(3);
+    let mut done = 0usize;
+    if let Some(store) = &ctx.store {
+        if let Some(key) = trainer
+            .resume_latest(&**store)
+            .with_context(|| format!("rank {rank} resuming from durable checkpoint"))?
+        {
+            done = trainer.steps_done();
+            if done > spec.steps {
+                return Err(anyhow!(
+                    "checkpoint `{key}` is {done} steps in, this run only has {}",
+                    spec.steps
+                ));
             }
-            let err = DistError::permanent(format!(
-                "rank {rank} killed by --dist-die at step {step_no}"
-            ));
-            comm.abort(step_no, &err.msg);
-            return Err(err.into());
+        }
+        if rank == 0 {
+            trainer.enable_async_checkpoint(store.clone(), ctx.ckpt_every.max(1));
+        }
+    }
+    if let Some(b) = &ctx.beat {
+        // First beat before any step: "alive at `done`" — lets the
+        // monitor distinguish a slow first step from a failed launch.
+        b.beat(done as u64);
+    }
+
+    let death = spec.death_for(ctx.gen);
+    let mut stats = Vec::with_capacity(spec.steps - done);
+    for s in done..spec.steps {
+        let step_no = s as u64 + 1;
+        if let Some((die_step, hard)) = death {
+            if die_step == step_no {
+                if hard {
+                    // The kill-mid-step hook for real worker processes:
+                    // no abort frame, no socket shutdown courtesy — the
+                    // peers must survive on timeouts/EOF alone.
+                    eprintln!("[rank {rank}] --dist-die: hard exit at step {step_no}");
+                    std::process::exit(3);
+                }
+                let err = DistError::permanent(format!(
+                    "rank {rank} killed by --dist-die at step {step_no}"
+                ));
+                comm.abort(step_no, &err.msg);
+                return Err(err.into());
+            }
         }
         let base = s * per_step + rank * l;
         let micro = &global_stream[base..base + l];
@@ -155,6 +276,25 @@ pub fn train_rank(
                 comm.abort(step_no, &format!("{e:#}"));
                 return Err(e.context(format!("rank {rank} failed at step {step_no}")));
             }
+        }
+        if rank == 0 && ctx.store.is_some() {
+            if let Err(e) = trainer.tick_checkpoint() {
+                register_rank_stats(rank, &stats, true);
+                comm.abort(step_no, &format!("{e:#}"));
+                return Err(e.context(format!("rank {rank} checkpoint at step {step_no}")));
+            }
+        }
+        if let Some(b) = &ctx.beat {
+            b.beat(step_no);
+        }
+    }
+    if rank == 0 && ctx.store.is_some() {
+        // Publish the final state durably *before* the world unwinds,
+        // so a crash during teardown still resumes at `steps`.
+        if let Err(e) = trainer.finalize_checkpoints() {
+            register_rank_stats(rank, &stats, true);
+            comm.abort(spec.steps as u64, &format!("{e:#}"));
+            return Err(e.context(format!("rank {rank} final checkpoint")));
         }
     }
     comm.shutdown(spec.steps as u64)
@@ -199,15 +339,32 @@ pub fn run_fake_world(
     opts: CommOpts,
     global_stream: &[Batch],
 ) -> Vec<Result<RankRun>> {
+    let ctxs = vec![RankCtx::default(); specs.len()];
+    run_fake_world_ctx(engine, specs, scripts, opts, global_stream, &ctxs)
+}
+
+/// [`run_fake_world`] with per-rank contexts (supervised runs:
+/// checkpoint store, heartbeats, incarnation generation).
+pub fn run_fake_world_ctx(
+    engine: &Engine,
+    specs: &[RankSpec],
+    scripts: Vec<FaultScript>,
+    opts: CommOpts,
+    global_stream: &[Batch],
+    ctxs: &[RankCtx],
+) -> Vec<Result<RankRun>> {
     let world = specs.len();
-    let (_net, endpoints) = FakeNet::world(world, scripts, opts.clone());
+    debug_assert_eq!(ctxs.len(), world);
+    let gens: Vec<u32> = ctxs.iter().map(|c| c.gen).collect();
+    let (_net, endpoints) = FakeNet::world_with_gens(world, scripts, opts.clone(), &gens);
     let mut results: Vec<Result<RankRun>> = Vec::new();
     std::thread::scope(|scope| {
         let handles: Vec<_> = endpoints
             .into_iter()
             .zip(specs)
-            .map(|(ep, spec)| {
-                let backoff = opts.backoff.clone();
+            .zip(ctxs)
+            .map(|((ep, spec), ctx)| {
+                let backoff = opts.backoff;
                 scope.spawn(move || {
                     let comm = DistComm::new(
                         Box::new(ep),
@@ -215,7 +372,7 @@ pub fn run_fake_world(
                         spec.local_shards(),
                         backoff,
                     )?;
-                    train_rank(engine, spec, &comm, global_stream)
+                    train_rank_ctx(engine, spec, &comm, global_stream, ctx)
                 })
             })
             .collect();
@@ -240,10 +397,25 @@ pub fn run_tcp_world(
     opts: CommOpts,
     global_stream: &[Batch],
 ) -> Vec<Result<RankRun>> {
+    let ctxs = vec![RankCtx::default(); specs.len()];
+    run_tcp_world_ctx(engine, specs, opts, global_stream, &ctxs)
+}
+
+/// [`run_tcp_world`] with per-rank contexts. Each incarnation binds a
+/// fresh rendezvous listener (port 0), so relaunches never race a
+/// half-closed predecessor socket.
+pub fn run_tcp_world_ctx(
+    engine: &Engine,
+    specs: &[RankSpec],
+    opts: CommOpts,
+    global_stream: &[Batch],
+    ctxs: &[RankCtx],
+) -> Vec<Result<RankRun>> {
     let world = specs.len();
+    debug_assert_eq!(ctxs.len(), world);
     if world == 1 {
         let scripts = vec![FaultScript::clean()];
-        return run_fake_world(engine, specs, scripts, opts, global_stream);
+        return run_fake_world_ctx(engine, specs, scripts, opts, global_stream, ctxs);
     }
     let ring = specs[0].mode == DistMode::Replicated;
     let listener = match TcpListener::bind("127.0.0.1:0") {
@@ -259,13 +431,17 @@ pub fn run_tcp_world(
         let mut listener = Some(listener);
         let handles: Vec<_> = specs
             .iter()
+            .zip(ctxs)
             .enumerate()
-            .map(|(r, spec)| {
-                let opts = opts.clone();
+            .map(|(r, (spec, ctx))| {
+                let opts = opts.with_generation(ctx.gen);
                 let listener = if r == 0 { listener.take() } else { None };
                 scope.spawn(move || {
                     let transport = if r == 0 {
-                        TcpTransport::rank0(listener.expect("rank 0 owns it"), world, ring, opts.clone())?
+                        let l = listener.ok_or_else(|| {
+                            DistError::config("rank 0 rendezvous listener already claimed")
+                        })?;
+                        TcpTransport::rank0(l, world, ring, opts.clone())?
                     } else {
                         TcpTransport::worker(r, world, addr, ring, opts.clone())?
                     };
@@ -275,7 +451,7 @@ pub fn run_tcp_world(
                         spec.local_shards(),
                         opts.backoff,
                     )?;
-                    train_rank(engine, spec, &comm, global_stream)
+                    train_rank_ctx(engine, spec, &comm, global_stream, ctx)
                 })
             })
             .collect();
@@ -288,4 +464,170 @@ pub fn run_tcp_world(
             .collect();
     });
     results
+}
+
+// ------------------------------------------------------- supervision
+
+/// Which thread-world harness a supervised run drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorldKind {
+    /// In-memory fake transport (deterministic fault scripts).
+    Fake,
+    /// Real loopback TCP (full rendezvous + wire protocol).
+    Tcp,
+}
+
+/// What a supervised world hands back: the successful incarnation's
+/// per-rank results plus what the recovery cost.
+pub struct SupervisedRun {
+    pub ranks: Vec<RankRun>,
+    pub recovery: RecoveryStats,
+}
+
+/// Run a thread world under the supervisor: launch incarnations until
+/// one completes, resuming each relaunch from the newest durable
+/// checkpoint in `store`. `scripts` (transport fault schedules) apply
+/// to incarnation 0 only — relaunches run on clean transports, while
+/// *rank* deaths recur per [`RankSpec::die_script`].
+///
+/// The recovered run's final parameters are bitwise-identical to a
+/// fault-free run of the same spec: every incarnation replays the same
+/// derived stream from its resume step, and checkpoint round-trips are
+/// bit-exact.
+pub fn run_supervised_world(
+    engine: &Engine,
+    specs: &[RankSpec],
+    kind: WorldKind,
+    opts: &CommOpts,
+    sup: &SupervisorOpts,
+    store: Arc<dyn Storage>,
+    ckpt_every: usize,
+    global_stream: &[Batch],
+    scripts: Vec<FaultScript>,
+) -> Result<SupervisedRun> {
+    let world = specs.len();
+    if world == 0 {
+        return Err(anyhow!("supervised world needs at least one rank"));
+    }
+    if scripts.len() != world {
+        return Err(anyhow!(
+            "{} fault scripts for a world of {world} ranks",
+            scripts.len()
+        ));
+    }
+    let (ranks, recovery) = supervisor::supervise("dist world", sup, |gen| {
+        let gen_scripts = if gen == 0 {
+            scripts.clone()
+        } else {
+            vec![FaultScript::clean(); world]
+        };
+        run_incarnation(
+            engine, specs, kind, opts, sup, &store, ckpt_every, global_stream, gen_scripts, gen,
+        )
+    })?;
+    Ok(SupervisedRun { ranks, recovery })
+}
+
+/// Launch one incarnation of the world and report its verdict. The
+/// world runner itself always terminates — every receive runs against
+/// a wire deadline and a failing rank broadcasts `Abort` — so this
+/// runs it inline and classifies afterwards.
+#[allow(clippy::too_many_arguments)]
+fn run_incarnation(
+    engine: &Engine,
+    specs: &[RankSpec],
+    kind: WorldKind,
+    opts: &CommOpts,
+    sup: &SupervisorOpts,
+    store: &Arc<dyn Storage>,
+    ckpt_every: usize,
+    global_stream: &[Batch],
+    scripts: Vec<FaultScript>,
+    gen: u32,
+) -> super::DistResult<Incarnation<Vec<RankRun>>> {
+    let world = specs.len();
+    let (mut monitor, tx) = HeartbeatMonitor::new(world, gen, sup.liveness);
+    let ctxs: Vec<RankCtx> = (0..world)
+        .map(|r| RankCtx {
+            store: Some(store.clone()),
+            ckpt_every,
+            beat: Some(HeartbeatTx::channel(tx.clone(), r as u32, gen)),
+            gen,
+        })
+        .collect();
+    drop(tx);
+    let opts = opts.with_generation(gen);
+    let results = match kind {
+        WorldKind::Fake => {
+            run_fake_world_ctx(engine, specs, scripts, opts, global_stream, &ctxs)
+        }
+        WorldKind::Tcp => run_tcp_world_ctx(engine, specs, opts, global_stream, &ctxs),
+    };
+    monitor.drain()?;
+    if results.iter().all(|r| r.is_ok()) {
+        let ranks = results.into_iter().map(|r| r.expect("checked ok")).collect();
+        return Ok(Incarnation::Done(ranks));
+    }
+    let (cause, detail) = classify(&results, &monitor);
+    let durable = latest_durable_step(&**store)?;
+    let lost_steps = monitor.max_step().saturating_sub(durable);
+    Ok(Incarnation::Failed { cause, detail, lost_steps })
+}
+
+/// Classify a failed incarnation from its per-rank results plus the
+/// heartbeat monitor. Precedence: a typed [`DistError`] from any rank
+/// (lowest rank wins — in a cascade every survivor carries an abort
+/// echo, so the rank index names a witness, not necessarily the
+/// culprit; the detail string carries the culprit's message), then a
+/// panicked rank thread, then heartbeat silence.
+fn classify(
+    results: &[Result<RankRun>],
+    monitor: &HeartbeatMonitor,
+) -> (FailureCause, String) {
+    for (r, res) in results.iter().enumerate() {
+        if let Err(e) = res {
+            if let Some(d) = e.downcast_ref::<DistError>() {
+                return (FailureCause::RankError { rank: r, kind: d.kind }, format!("{e:#}"));
+            }
+        }
+    }
+    for (r, res) in results.iter().enumerate() {
+        if let Err(e) = res {
+            let msg = format!("{e:#}");
+            if msg.contains("panicked") {
+                return (FailureCause::RankDied { rank: r }, msg);
+            }
+        }
+    }
+    if let Some(&r) = monitor.dead_ranks(std::time::Instant::now()).first() {
+        return (
+            FailureCause::HeartbeatTimeout { rank: r },
+            format!("rank {r} silent past the {}ms deadline", monitor.policy().deadline_ms()),
+        );
+    }
+    let (r, e) = results
+        .iter()
+        .enumerate()
+        .find_map(|(r, res)| res.as_ref().err().map(|e| (r, e)))
+        .expect("classify only runs on failed incarnations");
+    (FailureCause::RankDied { rank: r }, format!("{e:#}"))
+}
+
+/// The optimizer step the newest durable checkpoint captures (0 when
+/// the store has none yet) — parsed from the `ck-{steps:08}.bin` key,
+/// falling back to decoding the checkpoint's metadata. Shared by the
+/// thread-world supervisor above and the process-mode launcher
+/// (`train --dist-supervise`) for their lost-progress accounting.
+pub fn latest_durable_step(store: &dyn Storage) -> super::DistResult<u64> {
+    let resolved = checkpoint::resolve_latest(store)
+        .map_err(|e| DistError::permanent(format!("resolving latest checkpoint: {e:#}")))?;
+    let Some((key, bytes)) = resolved else { return Ok(0) };
+    if let Some(digits) = key.strip_prefix("ck-").and_then(|k| k.strip_suffix(".bin")) {
+        if let Ok(step) = digits.parse::<u64>() {
+            return Ok(step);
+        }
+    }
+    let ck = checkpoint::load_full_bytes(&bytes)
+        .map_err(|e| DistError::permanent(format!("decoding checkpoint `{key}`: {e:#}")))?;
+    Ok(ck.meta.steps_done)
 }

@@ -64,8 +64,23 @@ impl FakeNet {
         scripts: Vec<FaultScript>,
         opts: CommOpts,
     ) -> (FakeNet, Vec<FakeEndpoint>) {
+        let gens = vec![opts.generation; world];
+        FakeNet::world_with_gens(world, scripts, opts, &gens)
+    }
+
+    /// [`world`](Self::world) with a per-rank incarnation override —
+    /// the zombie-rank scenario: a rank still stamped with an old
+    /// generation coexists with a freshly restarted world, and its
+    /// frames must be dropped at the wire layer, not folded.
+    pub fn world_with_gens(
+        world: usize,
+        scripts: Vec<FaultScript>,
+        opts: CommOpts,
+        gens: &[u32],
+    ) -> (FakeNet, Vec<FakeEndpoint>) {
         assert!(world >= 1);
         assert_eq!(scripts.len(), world, "one fault script per rank");
+        assert_eq!(gens.len(), world, "one incarnation per rank");
         let alive: Arc<Vec<AtomicBool>> =
             Arc::new((0..world).map(|_| AtomicBool::new(true)).collect());
 
@@ -110,6 +125,7 @@ impl FakeNet {
                 world,
                 alive: alive.clone(),
                 read_timeout_ms: opts.read_timeout_ms,
+                gen: gens[r],
                 script,
                 sends: Mutex::new(0),
                 rng: Mutex::new(rng),
@@ -140,6 +156,9 @@ pub struct FakeEndpoint {
     world: usize,
     alive: Arc<Vec<AtomicBool>>,
     read_timeout_ms: u64,
+    /// Incarnation stamp for sends + acceptance filter for receives
+    /// (see `CommOpts::generation`).
+    gen: u32,
     script: FaultScript,
     sends: Mutex<u64>,
     rng: Mutex<Rng>,
@@ -183,7 +202,7 @@ impl FakeEndpoint {
         if self.script.fail_sends.contains(&n) {
             return Err(DistError::transient(format!("scripted send drop (attempt {n})")));
         }
-        let mut bytes = wire::encode(frame);
+        let mut bytes = wire::encode_with_gen(frame, self.gen);
         if self.script.torn_sends.contains(&n) {
             let frac = {
                 let mut rng = self.rng.lock().unwrap();
@@ -216,7 +235,26 @@ impl FakeEndpoint {
         let rx = rx.lock().unwrap();
         loop {
             match rx.recv_timeout(Duration::from_millis(5)) {
-                Ok(bytes) => return wire::decode_exact(&bytes).map_err(|e| e.into_dist()),
+                Ok(bytes) => {
+                    let f = wire::decode_exact(&bytes).map_err(|e| e.into_dist())?;
+                    // Same incarnation filter as the TCP links: stale
+                    // frames drop, future frames mean we are the zombie.
+                    match f.gen.cmp(&self.gen) {
+                        std::cmp::Ordering::Equal => return Ok(f),
+                        std::cmp::Ordering::Less => {
+                            super::transport::note_stale_frame(&f, self.gen);
+                            continue;
+                        }
+                        std::cmp::Ordering::Greater => {
+                            return Err(DistError::wire(format!(
+                                "{} frame from future incarnation {} (this world is incarnation {})",
+                                f.kind.name(),
+                                f.gen,
+                                self.gen
+                            )));
+                        }
+                    }
+                }
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(DistError::peer_closed(format!("rank {from} hung up")));
                 }
@@ -361,6 +399,30 @@ mod tests {
         assert_eq!(err.kind, DistErrorKind::Permanent);
         let err = eps[1].send_hub(0, &Frame::bare(FrameKind::Done, 1, 2)).unwrap_err();
         assert_eq!(err.kind, DistErrorKind::Permanent);
+    }
+
+    #[test]
+    fn stale_incarnation_frames_are_dropped_not_folded() {
+        // Rank 1 is a zombie from incarnation 0; rank 0 lives in
+        // incarnation 1. The zombie's frame must be silently dropped —
+        // rank 0 times out rather than accepting it.
+        let scripts = vec![FaultScript::clean(), FaultScript::clean()];
+        let (_net, eps) = FakeNet::world_with_gens(2, scripts, fast(), &[1, 0]);
+        eps[1].send_hub(0, &Frame::bare(FrameKind::Done, 1, 3)).unwrap();
+        let err = eps[0].recv_hub(1).unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Timeout, "{err}");
+    }
+
+    #[test]
+    fn future_incarnation_frame_is_a_wire_error() {
+        // Reversed: rank 0 is the zombie (gen 0) and receives a frame
+        // from the fresh incarnation 1 — it must learn it is stale.
+        let scripts = vec![FaultScript::clean(), FaultScript::clean()];
+        let (_net, eps) = FakeNet::world_with_gens(2, scripts, fast(), &[0, 1]);
+        eps[1].send_hub(0, &Frame::bare(FrameKind::Done, 1, 3)).unwrap();
+        let err = eps[0].recv_hub(1).unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Wire, "{err}");
+        assert!(err.msg.contains("future incarnation"), "{err}");
     }
 
     #[test]

@@ -35,6 +35,10 @@
 //!   the `dist-worker` subcommand, the equivalence tests and the
 //!   `train-bench --dist` rows, plus thread-world harnesses over both
 //!   transports.
+//! * [`supervisor`] — elastic lifecycle on top of the driver:
+//!   heartbeat liveness, failure classification, incarnation
+//!   generations stamped into every frame, and bounded-budget world
+//!   restarts that resume bitwise-exactly from durable checkpoints.
 //!
 //! ## Why the network hop cannot change the numbers
 //!
@@ -61,15 +65,21 @@
 pub mod collective;
 pub mod driver;
 pub mod fake;
+pub mod supervisor;
 pub mod transport;
 pub mod wire;
 
 pub use collective::{DistComm, GlobalStep};
-pub use driver::{run_fake_world, run_tcp_world, train_rank, RankRun, RankSpec};
+pub use driver::{
+    latest_durable_step, run_fake_world, run_supervised_world, run_tcp_world, train_rank,
+    train_rank_ctx, RankCtx, RankRun, RankSpec, ScheduledDeath, SupervisedRun, WorldKind,
+};
 pub use fake::{FakeNet, FaultScript};
+pub use supervisor::{
+    supervise, FailureCause, HeartbeatMonitor, HeartbeatTx, Incarnation, LivenessPolicy,
+    RecoveryStats, SupervisorOpts,
+};
 pub use transport::{CommOpts, DistTransport, TcpTransport};
-
-use crate::rng::Rng;
 
 // ------------------------------------------------------------- errors
 
@@ -157,79 +167,27 @@ pub type DistResult<T> = Result<T, DistError>;
 
 // ------------------------------------------------------------ backoff
 
-/// Capped exponential backoff with deterministic jitter — the same
-/// shape as `storage::RetryPolicy` (`min(cap, base·2^attempt) ·
-/// (0.5 + 0.5u)`), reused for peer connect loops and transient send
-/// faults so distributed retries behave exactly like storage retries.
-#[derive(Debug, Clone)]
-pub struct Backoff {
-    /// Total attempts including the first (≥ 1).
-    pub max_attempts: u32,
-    pub base_ms: f64,
-    pub cap_ms: f64,
-    /// Seed of the jitter stream (deterministic per peer loop).
-    pub seed: u64,
-}
+/// Capped exponential backoff with deterministic jitter — the shared
+/// [`util::backoff`](crate::util::backoff) policy (`min(cap,
+/// base·2^attempt) · (0.5 + 0.5u)`), reused for peer connect loops,
+/// transient send faults and the supervisor's restart budget so
+/// distributed retries behave exactly like storage retries. The
+/// comm-flavoured defaults live on [`Backoff::COMM`]
+/// (= `Backoff::default()`).
+pub use crate::util::backoff::{Backoff, Retrier};
 
-impl Default for Backoff {
-    fn default() -> Self {
-        Backoff { max_attempts: 5, base_ms: 2.0, cap_ms: 100.0, seed: 0xD157_BACC }
-    }
-}
+use crate::util::backoff::RetryableError;
 
-impl Backoff {
-    /// Zero-delay policy for tests: `n` attempts, no sleeping.
-    pub fn instant(n: u32) -> Self {
-        Backoff { max_attempts: n.max(1), base_ms: 0.0, cap_ms: 0.0, seed: 0 }
+impl RetryableError for DistError {
+    fn transient(&self) -> bool {
+        self.retryable()
     }
 
-    /// Jittered delay before retry number `attempt` (0-based), given a
-    /// uniform sample `u ∈ [0, 1)`.
-    pub fn delay_ms(&self, attempt: u32, u: f64) -> f64 {
-        let exp = self.base_ms * (1u64 << attempt.min(32)) as f64;
-        exp.min(self.cap_ms) * (0.5 + 0.5 * u)
-    }
-}
-
-/// A [`Backoff`] plus its jitter stream: retries `Transient` errors
-/// with capped jittered sleeps and converts exhaustion into a
-/// `Permanent` error naming the attempt count.
-pub struct Retrier {
-    policy: Backoff,
-    rng: Rng,
-}
-
-impl Retrier {
-    pub fn new(policy: Backoff) -> Self {
-        let rng = Rng::new(policy.seed);
-        Retrier { policy, rng }
-    }
-
-    pub fn run<T>(
-        &mut self,
-        what: &str,
-        mut f: impl FnMut() -> DistResult<T>,
-    ) -> DistResult<T> {
-        let max = self.policy.max_attempts.max(1);
-        for attempt in 0..max {
-            match f() {
-                Ok(v) => return Ok(v),
-                Err(e) if e.retryable() && attempt + 1 < max => {
-                    let ms = self.policy.delay_ms(attempt, self.rng.f64());
-                    if ms > 0.0 {
-                        std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
-                    }
-                }
-                Err(e) if e.retryable() => {
-                    return Err(DistError::permanent(format!(
-                        "{what}: retries exhausted after {max} attempts: {}",
-                        e.msg
-                    )));
-                }
-                Err(e) => return Err(e),
-            }
-        }
-        unreachable!("loop returns on the last attempt")
+    fn exhausted(what: &str, attempts: u32, last: &Self) -> Self {
+        DistError::permanent(format!(
+            "{what}: retries exhausted after {attempts} attempts: {}",
+            last.msg
+        ))
     }
 }
 

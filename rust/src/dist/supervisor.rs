@@ -1,0 +1,683 @@
+//! Elastic world supervision: heartbeat liveness, failure
+//! classification, and the bounded restart budget behind
+//! `driver::run_supervised_world` and `train --dist-supervise`.
+//!
+//! The supervisor owns the world lifecycle. Each launch of the N ranks
+//! is one **incarnation**, numbered by a generation counter that is
+//! stamped into every wire frame ([`wire::Frame::gen`]) so traffic
+//! from a dead incarnation's zombies is dropped at the transport
+//! layer. While an incarnation runs, every rank emits a periodic
+//! [`FrameKind::Heartbeat`] beacon — a real wire frame, decoded by the
+//! [`HeartbeatMonitor`] through the same codec the collective uses —
+//! and the supervisor classifies anything that goes wrong into a
+//! [`FailureCause`]:
+//!
+//! ```text
+//!        +-----------------------------------------------------+
+//!        |  incarnation g: rank 0 .. rank N-1  (frames gen=g)  |
+//!        +-----------------------------------------------------+
+//!          | beats           | typed DistError / vanished rank
+//!          v                 v
+//!        HeartbeatMonitor   classify ──► FailureCause
+//!                                 |
+//!                 teardown (Abort broadcast / kill) ──► relaunch
+//!                                 |
+//!                 incarnation g+1 resumes from storage `latest`
+//! ```
+//!
+//! Relaunches resume from the durable `latest`-pointer checkpoint and
+//! fast-forward the deterministic batch stream, so the recovered
+//! trajectory is **bitwise-identical** to a fault-free run (the
+//! argument lives in `docs/ARCHITECTURE.md`; the proof is
+//! `rust/tests/chaos_recovery.rs`). The restart budget is capped
+//! exponential backoff over the shared [`util::backoff`] policy; when
+//! it is exhausted the last failure surfaces as one typed `Permanent`
+//! error — never a hang.
+//!
+//! [`util::backoff`]: crate::util::backoff
+
+use std::io::Write as _;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+use crate::metrics::Registry;
+use crate::rng::Rng;
+use crate::util::backoff::{sleep_ms, Backoff};
+
+use super::transport::CommOpts;
+use super::wire::{self, Frame, FrameKind};
+use super::{DistError, DistErrorKind, DistResult};
+
+// ----------------------------------------------------------- liveness
+
+/// Heartbeat liveness policy: a rank beats once per optimizer step (at
+/// least every `heartbeat_ms` of expected progress), and is declared
+/// dead after `missed_max` consecutive missed beats — a deadline of
+/// `heartbeat_ms · missed_max`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LivenessPolicy {
+    /// Expected beat interval, milliseconds (≥ 1).
+    pub heartbeat_ms: u64,
+    /// Beats missed before a rank is declared dead (≥ 1).
+    pub missed_max: u32,
+}
+
+impl LivenessPolicy {
+    pub fn new(heartbeat_ms: u64, missed_max: u32) -> Self {
+        LivenessPolicy { heartbeat_ms: heartbeat_ms.max(1), missed_max: missed_max.max(1) }
+    }
+
+    /// Derive from the transport deadlines: beat at a quarter of the
+    /// read timeout, declare dead after four misses — so the liveness
+    /// deadline coincides with the wire deadline, and the supervisor
+    /// never declares a rank dead that the collective still trusts.
+    pub fn from_comm(opts: &CommOpts) -> Self {
+        LivenessPolicy::new((opts.read_timeout_ms / 4).max(1), 4)
+    }
+
+    /// Silence tolerated before a rank is declared dead, milliseconds.
+    pub fn deadline_ms(&self) -> u64 {
+        self.heartbeat_ms.saturating_mul(self.missed_max as u64)
+    }
+
+    /// How many whole beats a silence of `elapsed_ms` has missed.
+    pub fn missed(&self, elapsed_ms: u64) -> u32 {
+        (elapsed_ms / self.heartbeat_ms).min(u32::MAX as u64) as u32
+    }
+
+    /// Whether a silence of `elapsed_ms` exceeds the deadline.
+    pub fn is_dead(&self, elapsed_ms: u64) -> bool {
+        elapsed_ms >= self.deadline_ms()
+    }
+}
+
+impl Default for LivenessPolicy {
+    fn default() -> Self {
+        LivenessPolicy::from_comm(&CommOpts::default())
+    }
+}
+
+// ---------------------------------------------------------- heartbeat
+
+/// Where a rank's heartbeat frames go: an in-process channel (thread
+/// worlds) or this process's stdout as `DIST-HB <hex>` lines (worker
+/// processes — the launcher decodes them off the child's pipe).
+#[derive(Clone)]
+enum Sink {
+    Channel(Sender<Vec<u8>>),
+    Stdout,
+}
+
+/// A rank's handle for emitting heartbeats. Beats are full wire frames
+/// ([`Frame::heartbeat`]) so the monitor exercises the real codec and
+/// the stale-incarnation filter applies to liveness traffic too.
+#[derive(Clone)]
+pub struct HeartbeatTx {
+    sink: Sink,
+    rank: u32,
+    gen: u32,
+}
+
+impl HeartbeatTx {
+    /// Beats into an in-process channel (thread worlds).
+    pub fn channel(tx: Sender<Vec<u8>>, rank: u32, gen: u32) -> Self {
+        HeartbeatTx { sink: Sink::Channel(tx), rank, gen }
+    }
+
+    /// Beats onto stdout as `DIST-HB <hex>` lines (worker processes).
+    pub fn stdout(rank: u32, gen: u32) -> Self {
+        HeartbeatTx { sink: Sink::Stdout, rank, gen }
+    }
+
+    /// Emit one beat: "alive, `step` optimizer steps completed". Never
+    /// fails — a vanished supervisor must not kill a healthy rank.
+    pub fn beat(&self, step: u64) {
+        let bytes = wire::encode(&Frame::heartbeat(self.rank, step, self.gen));
+        match &self.sink {
+            Sink::Channel(tx) => {
+                let _ = tx.send(bytes);
+            }
+            Sink::Stdout => {
+                let mut out = std::io::stdout().lock();
+                let _ = writeln!(out, "DIST-HB {}", to_hex(&bytes));
+                let _ = out.flush();
+            }
+        }
+    }
+}
+
+/// Lowercase hex of `bytes` (heartbeats cross the child's stdout pipe
+/// as text lines).
+pub fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Inverse of [`to_hex`]; `None` on odd length or non-hex bytes.
+pub fn from_hex(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let digits = s.as_bytes();
+    let mut out = Vec::with_capacity(s.len() / 2);
+    for pair in digits.chunks_exact(2) {
+        let hi = (pair[0] as char).to_digit(16)?;
+        let lo = (pair[1] as char).to_digit(16)?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Some(out)
+}
+
+/// The supervisor's view of one incarnation's liveness: last beat time
+/// and highest completed step per rank, with the same stale/future
+/// generation filter the data links apply.
+pub struct HeartbeatMonitor {
+    rx: Option<Receiver<Vec<u8>>>,
+    policy: LivenessPolicy,
+    gen: u32,
+    origin: Instant,
+    last_beat: Vec<Instant>,
+    last_step: Vec<u64>,
+    beats: Vec<u64>,
+    stale: u64,
+}
+
+impl HeartbeatMonitor {
+    /// A monitor for `world` ranks of incarnation `gen`, plus the
+    /// sender side to clone into per-rank [`HeartbeatTx::channel`]s.
+    pub fn new(world: usize, gen: u32, policy: LivenessPolicy) -> (Self, Sender<Vec<u8>>) {
+        let (tx, rx) = channel();
+        let mut m = HeartbeatMonitor::detached(world, gen, policy);
+        m.rx = Some(rx);
+        (m, tx)
+    }
+
+    /// A monitor without a channel — beats are fed explicitly via
+    /// [`note_bytes`](Self::note_bytes) (the process-mode launcher
+    /// parses `DIST-HB` lines off child pipes; unit tests inject
+    /// frames directly).
+    pub fn detached(world: usize, gen: u32, policy: LivenessPolicy) -> Self {
+        let now = Instant::now();
+        HeartbeatMonitor {
+            rx: None,
+            policy,
+            gen,
+            origin: now,
+            last_beat: vec![now; world],
+            last_step: vec![0; world],
+            beats: vec![0; world],
+            stale: 0,
+        }
+    }
+
+    pub fn policy(&self) -> &LivenessPolicy {
+        &self.policy
+    }
+
+    /// Feed one encoded frame observed at `now`. `Ok(true)` if the
+    /// beat was accepted, `Ok(false)` if dropped as stale; malformed
+    /// bytes, wrong kinds, unknown ranks and future incarnations are
+    /// typed errors.
+    pub fn note_bytes(&mut self, bytes: &[u8], now: Instant) -> DistResult<bool> {
+        let f = wire::decode_exact(bytes).map_err(|e| e.into_dist())?;
+        self.note(f, now)
+    }
+
+    /// [`note_bytes`](Self::note_bytes) for an already-decoded frame.
+    pub fn note(&mut self, f: Frame, now: Instant) -> DistResult<bool> {
+        if f.kind != FrameKind::Heartbeat {
+            return Err(DistError::wire(format!(
+                "heartbeat monitor fed a {} frame",
+                f.kind.name()
+            )));
+        }
+        match f.gen.cmp(&self.gen) {
+            std::cmp::Ordering::Less => {
+                self.stale += 1;
+                super::transport::note_stale_frame(&f, self.gen);
+                return Ok(false);
+            }
+            std::cmp::Ordering::Greater => {
+                return Err(DistError::wire(format!(
+                    "heartbeat from future incarnation {} (monitoring incarnation {})",
+                    f.gen, self.gen
+                )));
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        let r = f.rank as usize;
+        if r >= self.last_beat.len() {
+            return Err(DistError::config(format!(
+                "heartbeat from rank {r}, world is {}",
+                self.last_beat.len()
+            )));
+        }
+        self.last_beat[r] = now;
+        self.last_step[r] = self.last_step[r].max(f.step);
+        self.beats[r] += 1;
+        Ok(true)
+    }
+
+    /// Drain everything queued on the channel (non-blocking).
+    pub fn drain(&mut self) -> DistResult<()> {
+        loop {
+            let bytes = match &self.rx {
+                Some(rx) => match rx.try_recv() {
+                    Ok(b) => b,
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return Ok(()),
+                },
+                None => return Ok(()),
+            };
+            self.note_bytes(&bytes, Instant::now())?;
+        }
+    }
+
+    /// Ranks silent past the liveness deadline as of `now` (silence is
+    /// measured from incarnation start for ranks that never beat).
+    pub fn dead_ranks(&self, now: Instant) -> Vec<usize> {
+        self.last_beat
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                self.policy.is_dead(now.saturating_duration_since(**t).as_millis() as u64)
+            })
+            .map(|(r, _)| r)
+            .collect()
+    }
+
+    /// Whether rank `r` has beaten at least once this incarnation.
+    /// Process-mode launchers gate the timeout on this: a rank that
+    /// never beat is still building its engine/corpus, and gets a
+    /// longer launch grace before silence counts against it.
+    pub fn has_beaten(&self, r: usize) -> bool {
+        self.beats.get(r).copied().unwrap_or(0) > 0
+    }
+
+    /// Highest optimizer step any rank reported completing.
+    pub fn max_step(&self) -> u64 {
+        self.last_step.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Stale-incarnation beats dropped so far.
+    pub fn stale_beats(&self) -> u64 {
+        self.stale
+    }
+
+    /// Milliseconds since this monitor (= this incarnation) started.
+    pub fn age_ms(&self, now: Instant) -> u64 {
+        now.saturating_duration_since(self.origin).as_millis() as u64
+    }
+}
+
+// ------------------------------------------------------------ failure
+
+/// Why an incarnation died — the four detection paths.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FailureCause {
+    /// A rank's loop surfaced a typed [`DistError`] (includes a
+    /// poisoned link: the wire layer reports it as `PeerClosed`/`Wire`
+    /// and the survivor carries it here).
+    RankError { rank: usize, kind: DistErrorKind },
+    /// A rank vanished without a typed error (thread panic, or a
+    /// process that died without status — the launcher maps a nonzero
+    /// exit here with `ProcessExit`).
+    RankDied { rank: usize },
+    /// A child process exited with a nonzero status (process mode).
+    ProcessExit { rank: usize, code: i32 },
+    /// No heartbeat within the liveness deadline.
+    HeartbeatTimeout { rank: usize },
+}
+
+impl FailureCause {
+    /// Stable label for the `cause` metric dimension.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FailureCause::RankError { .. } => "rank-error",
+            FailureCause::RankDied { .. } => "rank-died",
+            FailureCause::ProcessExit { .. } => "process-exit",
+            FailureCause::HeartbeatTimeout { .. } => "heartbeat-timeout",
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        match self {
+            FailureCause::RankError { rank, .. }
+            | FailureCause::RankDied { rank }
+            | FailureCause::ProcessExit { rank, .. }
+            | FailureCause::HeartbeatTimeout { rank } => *rank,
+        }
+    }
+}
+
+impl std::fmt::Display for FailureCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FailureCause::RankError { rank, kind } => {
+                write!(f, "rank {rank} failed ({kind:?})")
+            }
+            FailureCause::RankDied { rank } => write!(f, "rank {rank} vanished"),
+            FailureCause::ProcessExit { rank, code } => {
+                write!(f, "rank {rank} process exited with code {code}")
+            }
+            FailureCause::HeartbeatTimeout { rank } => {
+                write!(f, "rank {rank} missed its heartbeat deadline")
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- supervisor
+
+/// Restart-budget policy for a supervised world.
+#[derive(Debug, Clone)]
+pub struct SupervisorOpts {
+    /// Relaunches allowed after the initial incarnation. 0 = fail on
+    /// the first incarnation's failure (supervision off in all but
+    /// bookkeeping).
+    pub max_restarts: u32,
+    /// Backoff between relaunches (attempt r = restart r, 0-based).
+    /// `max_attempts` is ignored — the budget is `max_restarts`.
+    pub backoff: Backoff,
+    /// Liveness policy monitors run under.
+    pub liveness: LivenessPolicy,
+}
+
+impl Default for SupervisorOpts {
+    fn default() -> Self {
+        SupervisorOpts {
+            max_restarts: 3,
+            backoff: Backoff { max_attempts: 4, base_ms: 50.0, cap_ms: 2_000.0, seed: 0x5EED_5AFE },
+            liveness: LivenessPolicy::default(),
+        }
+    }
+}
+
+impl SupervisorOpts {
+    /// No backoff sleeps, tight liveness — for fault-injection tests.
+    pub fn fast(max_restarts: u32) -> Self {
+        SupervisorOpts {
+            max_restarts,
+            backoff: Backoff::instant(max_restarts + 1),
+            liveness: LivenessPolicy::new(50, 4),
+        }
+    }
+}
+
+/// What supervision cost, across all incarnations of one run.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryStats {
+    /// Relaunches performed (≤ `max_restarts`).
+    pub restarts: u32,
+    /// `(incarnation, description)` per classified failure.
+    pub failures: Vec<(u32, String)>,
+    /// Optimizer steps of lost progress re-run after restarts (work
+    /// completed past the checkpoint each relaunch resumed from).
+    pub lost_steps: u64,
+    /// Wall-clock added by failures: failed incarnations + backoff.
+    pub recovery_ms: f64,
+}
+
+/// One incarnation's verdict, as reported by the launch closure.
+pub enum Incarnation<T> {
+    /// The world ran to completion.
+    Done(T),
+    /// The world died; `lost_steps` is the progress beyond the
+    /// checkpoint the next incarnation will resume from.
+    Failed { cause: FailureCause, detail: String, lost_steps: u64 },
+}
+
+/// Histogram bounds for recovery wall-time (ms).
+const RECOVERY_MS_BOUNDS: &[f64] =
+    &[10.0, 50.0, 100.0, 250.0, 500.0, 1_000.0, 2_500.0, 5_000.0, 10_000.0, 30_000.0];
+
+/// Histogram bounds for lost optimizer steps per failure.
+const LOST_STEPS_BOUNDS: &[f64] = &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// Record one classified failure in the metrics registry.
+pub fn record_failure(cause: &FailureCause, lost_steps: u64) {
+    let m = Registry::global();
+    m.counter(
+        "dist_supervisor_failures_total",
+        "World failures detected by the supervisor, by cause",
+        &[("cause", cause.label())],
+    )
+    .inc();
+    m.histogram(
+        "dist_supervisor_lost_steps",
+        "Optimizer steps of progress lost (re-run) per detected failure",
+        &[],
+        LOST_STEPS_BOUNDS,
+    )
+    .observe(lost_steps as f64);
+}
+
+/// Record one relaunch in the metrics registry.
+pub fn record_restart(recovery_ms: f64) {
+    let m = Registry::global();
+    m.counter("dist_supervisor_restarts_total", "World relaunches performed", &[]).inc();
+    m.histogram(
+        "dist_supervisor_recovery_ms",
+        "Wall-clock per recovery: failed incarnation + backoff, milliseconds",
+        &[],
+        RECOVERY_MS_BOUNDS,
+    )
+    .observe(recovery_ms);
+}
+
+/// The supervision loop shared by the thread-world driver
+/// (`driver::run_supervised_world`) and the process-mode launcher
+/// (`train --dist-supervise`): run incarnations `0..=max_restarts`
+/// until one completes, with capped-exponential backoff between
+/// relaunches. `run(gen)` launches incarnation `gen` and reports its
+/// verdict; an `Err` from `run` is an unrecoverable launch/config
+/// failure and propagates immediately without burning the budget.
+///
+/// Exhaustion is a typed `Permanent` error naming the budget and the
+/// last failure — by construction this returns, never hangs: every
+/// incarnation's receives run against wire deadlines, and the budget
+/// is finite.
+pub fn supervise<T>(
+    what: &str,
+    opts: &SupervisorOpts,
+    mut run: impl FnMut(u32) -> DistResult<Incarnation<T>>,
+) -> DistResult<(T, RecoveryStats)> {
+    let mut stats = RecoveryStats::default();
+    let mut rng = Rng::new(opts.backoff.seed);
+    let mut last: Option<String> = None;
+    for gen in 0..=opts.max_restarts {
+        let t0 = Instant::now();
+        match run(gen)? {
+            Incarnation::Done(v) => return Ok((v, stats)),
+            Incarnation::Failed { cause, detail, lost_steps } => {
+                let failed_ms = t0.elapsed().as_secs_f64() * 1e3;
+                record_failure(&cause, lost_steps);
+                stats.lost_steps += lost_steps;
+                let desc = if detail.is_empty() {
+                    cause.to_string()
+                } else {
+                    format!("{cause}: {detail}")
+                };
+                stats.failures.push((gen, desc.clone()));
+                last = Some(desc);
+                if gen < opts.max_restarts {
+                    let backoff_ms = opts.backoff.delay_ms(gen, rng.f64());
+                    let recovery = failed_ms + backoff_ms;
+                    stats.recovery_ms += recovery;
+                    record_restart(recovery);
+                    stats.restarts += 1;
+                    sleep_ms(backoff_ms);
+                } else {
+                    stats.recovery_ms += failed_ms;
+                }
+            }
+        }
+    }
+    let last = last.expect("budget loop ran at least one incarnation");
+    Err(DistError::permanent(format!(
+        "{what}: restart budget exhausted after {} incarnation(s) (max restarts {}); \
+         last failure: {last}",
+        opts.max_restarts + 1,
+        opts.max_restarts,
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn liveness_deadline_derives_from_comm_opts() {
+        let opts = CommOpts { read_timeout_ms: 8_000, ..CommOpts::default() };
+        let p = LivenessPolicy::from_comm(&opts);
+        assert_eq!(p.heartbeat_ms, 2_000);
+        assert_eq!(p.missed_max, 4);
+        assert_eq!(p.deadline_ms(), opts.read_timeout_ms);
+    }
+
+    #[test]
+    fn missed_beat_counting_and_death() {
+        let p = LivenessPolicy::new(100, 3);
+        assert_eq!(p.deadline_ms(), 300);
+        assert_eq!(p.missed(0), 0);
+        assert_eq!(p.missed(99), 0);
+        assert_eq!(p.missed(100), 1);
+        assert_eq!(p.missed(250), 2);
+        assert!(!p.is_dead(299));
+        assert!(p.is_dead(300));
+        // Degenerate configs clamp instead of dividing by zero.
+        let z = LivenessPolicy::new(0, 0);
+        assert_eq!((z.heartbeat_ms, z.missed_max), (1, 1));
+    }
+
+    #[test]
+    fn monitor_tracks_beats_and_declares_silence_dead() {
+        let (mut m, tx) = HeartbeatMonitor::new(2, 0, LivenessPolicy::new(10, 2));
+        let t0 = Instant::now();
+        HeartbeatTx::channel(tx.clone(), 0, 0).beat(4);
+        HeartbeatTx::channel(tx, 1, 0).beat(6);
+        m.drain().unwrap();
+        assert_eq!(m.max_step(), 6);
+        assert!(m.dead_ranks(t0).is_empty());
+        // 25ms of silence = 2 missed beats at 10ms → both dead.
+        let later = t0 + Duration::from_millis(25);
+        assert_eq!(m.dead_ranks(later), vec![0, 1]);
+    }
+
+    #[test]
+    fn monitor_rejects_stale_and_future_incarnations() {
+        let mut m = HeartbeatMonitor::detached(2, 3, LivenessPolicy::new(10, 2));
+        let now = Instant::now();
+        // Stale beat: dropped, counted, does not refresh liveness.
+        let stale = wire::encode(&Frame::heartbeat(1, 9, 2));
+        assert_eq!(m.note_bytes(&stale, now).unwrap(), false);
+        assert_eq!(m.stale_beats(), 1);
+        assert_eq!(m.max_step(), 0, "stale steps must not count as progress");
+        // Current-incarnation beat: accepted.
+        let live = wire::encode(&Frame::heartbeat(1, 9, 3));
+        assert_eq!(m.note_bytes(&live, now).unwrap(), true);
+        assert_eq!(m.max_step(), 9);
+        // Future incarnation: we are the zombie — typed error.
+        let future = wire::encode(&Frame::heartbeat(0, 1, 4));
+        let err = m.note_bytes(&future, now).unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Wire, "{err}");
+        // Wrong kind and unknown rank are errors too.
+        let wrong = wire::encode(&Frame::bare(FrameKind::Done, 0, 1));
+        assert!(m.note_bytes(&wrong, now).is_err());
+        let oob = wire::encode(&Frame::heartbeat(7, 1, 3));
+        assert_eq!(m.note_bytes(&oob, now).unwrap_err().kind, DistErrorKind::Config);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let bytes = wire::encode(&Frame::heartbeat(2, 77, 5));
+        let hex = to_hex(&bytes);
+        assert_eq!(from_hex(&hex).unwrap(), bytes);
+        assert!(from_hex("abc").is_none(), "odd length");
+        assert!(from_hex("zz").is_none(), "non-hex");
+        assert_eq!(from_hex("").unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn supervise_returns_first_success_without_restarts() {
+        let opts = SupervisorOpts::fast(3);
+        let (v, stats) =
+            supervise("w", &opts, |gen| Ok(Incarnation::Done(gen))).unwrap();
+        assert_eq!(v, 0);
+        assert_eq!(stats.restarts, 0);
+        assert!(stats.failures.is_empty());
+    }
+
+    #[test]
+    fn supervise_retries_until_success_and_counts_losses() {
+        let opts = SupervisorOpts::fast(3);
+        let (v, stats) = supervise("w", &opts, |gen| {
+            if gen < 2 {
+                Ok(Incarnation::Failed {
+                    cause: FailureCause::RankError {
+                        rank: 1,
+                        kind: DistErrorKind::Permanent,
+                    },
+                    detail: format!("scripted kill in incarnation {gen}"),
+                    lost_steps: 3,
+                })
+            } else {
+                Ok(Incarnation::Done(gen))
+            }
+        })
+        .unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(stats.restarts, 2);
+        assert_eq!(stats.lost_steps, 6);
+        assert_eq!(stats.failures.len(), 2);
+    }
+
+    #[test]
+    fn supervise_exhaustion_is_typed_permanent_naming_budget() {
+        let opts = SupervisorOpts::fast(2);
+        let t0 = Instant::now();
+        let err = supervise("world", &opts, |gen| {
+            Ok(Incarnation::Failed {
+                cause: FailureCause::HeartbeatTimeout { rank: 0 },
+                detail: format!("incarnation {gen}"),
+                lost_steps: 0,
+            })
+        })
+        .map(|_: ((), RecoveryStats)| ())
+        .unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Permanent);
+        assert!(err.msg.contains("restart budget exhausted after 3 incarnation(s)"), "{}", err.msg);
+        assert!(err.msg.contains("missed its heartbeat deadline"), "{}", err.msg);
+        assert!(t0.elapsed() < Duration::from_secs(60), "exhaustion must be fast, never a hang");
+    }
+
+    #[test]
+    fn supervise_propagates_config_errors_without_burning_budget() {
+        let opts = SupervisorOpts::fast(5);
+        let mut calls = 0u32;
+        let err = supervise("w", &opts, |_gen| -> DistResult<Incarnation<()>> {
+            calls += 1;
+            Err(DistError::config("bad topology"))
+        })
+        .map(|_| ())
+        .unwrap_err();
+        assert_eq!(err.kind, DistErrorKind::Config);
+        assert_eq!(calls, 1, "config errors must not be retried");
+    }
+
+    #[test]
+    fn failure_cause_labels_are_stable() {
+        assert_eq!(FailureCause::RankDied { rank: 1 }.label(), "rank-died");
+        assert_eq!(
+            FailureCause::RankError { rank: 0, kind: DistErrorKind::PeerClosed }.label(),
+            "rank-error"
+        );
+        assert_eq!(FailureCause::ProcessExit { rank: 2, code: 3 }.label(), "process-exit");
+        assert_eq!(FailureCause::HeartbeatTimeout { rank: 0 }.label(), "heartbeat-timeout");
+        assert_eq!(FailureCause::ProcessExit { rank: 2, code: 3 }.rank(), 2);
+    }
+}

@@ -30,11 +30,23 @@ pub struct CommOpts {
     pub connect_timeout_ms: u64,
     /// Backoff policy for connect retries / transient send faults.
     pub backoff: Backoff,
+    /// World incarnation this endpoint belongs to. Every frame sent is
+    /// stamped with it; frames from *older* incarnations are silently
+    /// dropped on receive (a zombie rank from before a supervised
+    /// restart must not feed a stale partial into the fresh fold) and
+    /// frames from *future* incarnations are a wire error (they mean
+    /// the supervisor restarted without us — we are the zombie).
+    pub generation: u32,
 }
 
 impl Default for CommOpts {
     fn default() -> Self {
-        CommOpts { read_timeout_ms: 10_000, connect_timeout_ms: 10_000, backoff: Backoff::default() }
+        CommOpts {
+            read_timeout_ms: 10_000,
+            connect_timeout_ms: 10_000,
+            backoff: Backoff::default(),
+            generation: 0,
+        }
     }
 }
 
@@ -42,7 +54,18 @@ impl CommOpts {
     /// Short deadlines for fault-injection tests: failures should
     /// surface in well under a second.
     pub fn fast() -> Self {
-        CommOpts { read_timeout_ms: 2_000, connect_timeout_ms: 2_000, backoff: Backoff::instant(3) }
+        CommOpts {
+            read_timeout_ms: 2_000,
+            connect_timeout_ms: 2_000,
+            backoff: Backoff::instant(3),
+            generation: 0,
+        }
+    }
+
+    /// The same options re-stamped for incarnation `gen` (supervised
+    /// relaunches reuse one policy across generations).
+    pub fn with_generation(&self, gen: u32) -> Self {
+        CommOpts { generation: gen, ..self.clone() }
     }
 }
 
@@ -125,8 +148,8 @@ fn read_frame(stream: &mut TcpStream, deadline: Instant) -> DistResult<Frame> {
     wire::decode_exact(&whole).map_err(|e| e.into_dist())
 }
 
-fn write_frame(stream: &mut TcpStream, frame: &Frame) -> DistResult<()> {
-    let bytes = wire::encode(frame);
+fn write_frame(stream: &mut TcpStream, frame: &Frame, gen: u32) -> DistResult<()> {
+    let bytes = wire::encode_with_gen(frame, gen);
     stream.write_all(&bytes).map_err(|e| {
         if e.kind() == std::io::ErrorKind::BrokenPipe
             || e.kind() == std::io::ErrorKind::ConnectionReset
@@ -145,10 +168,13 @@ fn write_frame(stream: &mut TcpStream, frame: &Frame) -> DistResult<()> {
 
 /// A bidirectional link: cloned read/write halves of one TcpStream,
 /// each behind its own lock so one thread can send while another
-/// receives (the ring does exactly that every round).
+/// receives (the ring does exactly that every round). The link carries
+/// its incarnation: sends are stamped with it and receives enforce it
+/// (see [`CommOpts::generation`]).
 struct Link {
     rd: Mutex<TcpStream>,
     wr: Mutex<TcpStream>,
+    gen: u32,
 }
 
 impl Link {
@@ -165,22 +191,55 @@ impl Link {
                 CommOpts::default().read_timeout_ms,
             )))
             .map_err(|e| DistError::permanent(format!("set_write_timeout: {e}")))?;
-        let _ = opts;
         let rd = stream
             .try_clone()
             .map_err(|e| DistError::permanent(format!("stream clone: {e}")))?;
-        Ok(Link { rd: Mutex::new(rd), wr: Mutex::new(stream) })
+        Ok(Link { rd: Mutex::new(rd), wr: Mutex::new(stream), gen: opts.generation })
     }
 
     fn send(&self, frame: &Frame) -> DistResult<()> {
         let mut s = self.wr.lock().unwrap();
-        write_frame(&mut s, frame)
+        write_frame(&mut s, frame, self.gen)
     }
 
     fn recv(&self, timeout: Duration) -> DistResult<Frame> {
         let mut s = self.rd.lock().unwrap();
-        read_frame(&mut s, Instant::now() + timeout)
+        let deadline = Instant::now() + timeout;
+        // Drop stale-incarnation frames until the deadline: a zombie's
+        // leftover traffic must neither corrupt the fold nor kill the
+        // fresh world. A *newer* generation, by contrast, means *we*
+        // are the zombie — surface it.
+        loop {
+            let f = read_frame(&mut s, deadline)?;
+            match f.gen.cmp(&self.gen) {
+                std::cmp::Ordering::Equal => return Ok(f),
+                std::cmp::Ordering::Less => {
+                    note_stale_frame(&f, self.gen);
+                }
+                std::cmp::Ordering::Greater => {
+                    return Err(DistError::wire(format!(
+                        "{} frame from future incarnation {} (this world is incarnation {})",
+                        f.kind.name(),
+                        f.gen,
+                        self.gen
+                    )));
+                }
+            }
+        }
     }
+}
+
+/// Count a dropped stale-incarnation frame (observable in the metrics
+/// registry as `dist_stale_frames_total`).
+pub(crate) fn note_stale_frame(f: &Frame, live_gen: u32) {
+    crate::metrics::registry::Registry::global()
+        .counter(
+            "dist_stale_frames_total",
+            "Frames from older world incarnations dropped at the wire layer",
+            &[],
+        )
+        .inc();
+    let _ = (f, live_gen);
 }
 
 /// Accept one connection before `deadline` (nonblocking poll loop —
@@ -554,6 +613,43 @@ mod tests {
                 let _ = tx.send(());
                 std::thread::sleep(Duration::from_millis(600));
                 drop(t);
+            });
+            r0.join().unwrap();
+        });
+    }
+
+    /// A zombie worker stamped with an older incarnation cannot get a
+    /// frame accepted by a fresh rank 0: its Hello is dropped at the
+    /// wire layer and the rendezvous times out instead of folding
+    /// stale state.
+    #[test]
+    fn stale_incarnation_peer_is_rejected_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut fresh = CommOpts::fast();
+        fresh.read_timeout_ms = 300;
+        fresh.connect_timeout_ms = 600;
+        let fresh = fresh.with_generation(1);
+        let stale = fresh.with_generation(0);
+        std::thread::scope(|scope| {
+            let r0 = scope.spawn(move || {
+                let err = TcpTransport::rank0(listener, 2, false, fresh).unwrap_err();
+                assert_eq!(err.kind, crate::dist::DistErrorKind::Timeout, "{err}");
+            });
+            scope.spawn(move || {
+                // The worker's Hello carries gen 0; rank 0 (gen 1)
+                // must drop it. The worker then times out waiting for
+                // a Roster that never comes.
+                let err = TcpTransport::worker(1, 2, addr, false, stale).unwrap_err();
+                assert!(
+                    matches!(
+                        err.kind,
+                        crate::dist::DistErrorKind::Timeout
+                            | crate::dist::DistErrorKind::PeerClosed
+                            | crate::dist::DistErrorKind::Wire
+                    ),
+                    "{err}"
+                );
             });
             r0.join().unwrap();
         });

@@ -8,16 +8,22 @@
 //! Layout (all integers little-endian):
 //!
 //! ```text
-//! +----------+---------+------+--------+--------+----------+-------+---------+----------+
-//! | magic  8 | len u32 | kind | rank   | step   | bucket   | dtype | payload | crc u32  |
-//! |          |         | u8   | u32    | u64    | u32      | u8    | len-18  |          |
-//! +----------+---------+------+--------+--------+----------+-------+---------+----------+
-//! |<------------------------------ checksummed ----------------------------->|
+//! +----------+---------+------+------+--------+--------+-------+---------+---------+---------+
+//! | magic  8 | len u32 | kind | rank | step   | bucket | dtype | gen u32 | payload | crc u32 |
+//! |          |         | u8   | u32  | u64    | u32    | u8    |         | len-22  |         |
+//! +----------+---------+------+------+--------+--------+-------+---------+---------+---------+
+//! |<-------------------------------- checksummed ------------------------------->|
 //! ```
 //!
 //! `dtype` tags the element encoding of Grad/Param payloads
 //! ([`SlabDtype::code`]: f32 = 0, f16 = 1, bf16 = 2) so 16-bit
 //! precisions ship half the segment bytes; non-tensor frames carry 0.
+//!
+//! `gen` is the world's **incarnation counter**: the supervisor stamps
+//! every frame of incarnation `g` with `gen = g`, and receivers drop
+//! frames from earlier incarnations (see `transport`), so a zombie
+//! rank surviving a restart can never feed a stale partial into a
+//! fresh world's fold.
 //!
 //! `len` counts the body (kind..payload). The checksum is FNV-1a over
 //! *everything* before it — magic, length prefix and body — so any
@@ -32,12 +38,13 @@ use crate::tensor::half::{self, SlabDtype};
 
 /// Protocol magic + version. Bump the trailing digit on any layout
 /// change so mismatched builds fail loudly at the first frame.
-/// v2 added the per-frame payload dtype byte.
-pub const MAGIC: [u8; 8] = *b"HYNMTDW2";
+/// v2 added the per-frame payload dtype byte; v3 the incarnation
+/// counter (`gen`) and the Heartbeat kind.
+pub const MAGIC: [u8; 8] = *b"HYNMTDW3";
 
 /// Fixed body header: kind u8 + rank u32 + step u64 + bucket u32 +
-/// dtype u8.
-pub const BODY_HEADER: usize = 1 + 4 + 8 + 4 + 1;
+/// dtype u8 + gen u32.
+pub const BODY_HEADER: usize = 1 + 4 + 8 + 4 + 1 + 4;
 
 /// Upper bound on a frame body. The largest legitimate payload is one
 /// parameter bucket (`DEFAULT_BUCKET_BYTES` = 256 KiB); 256 MiB leaves
@@ -68,6 +75,10 @@ pub enum FrameKind {
     /// A peer hit a step error; payload is its UTF-8 message. Receivers
     /// convert this to a Permanent error immediately.
     Abort,
+    /// Periodic liveness beacon: "rank `rank` of incarnation `gen` is
+    /// alive and has completed `step` steps". No payload; consumed by
+    /// the world supervisor, never by the collective fold.
+    Heartbeat,
 }
 
 impl FrameKind {
@@ -81,6 +92,7 @@ impl FrameKind {
             FrameKind::Meta => 6,
             FrameKind::Done => 7,
             FrameKind::Abort => 8,
+            FrameKind::Heartbeat => 9,
         }
     }
 
@@ -94,6 +106,7 @@ impl FrameKind {
             6 => FrameKind::Meta,
             7 => FrameKind::Done,
             8 => FrameKind::Abort,
+            9 => FrameKind::Heartbeat,
             _ => return None,
         })
     }
@@ -108,6 +121,7 @@ impl FrameKind {
             FrameKind::Meta => "meta",
             FrameKind::Done => "done",
             FrameKind::Abort => "abort",
+            FrameKind::Heartbeat => "heartbeat",
         }
     }
 }
@@ -125,12 +139,16 @@ pub struct Frame {
     /// Element encoding of Grad/Param payloads; F32 for everything
     /// else.
     pub dtype: SlabDtype,
+    /// World incarnation that produced this frame. Constructors default
+    /// to 0; the transport stamps the live generation on send
+    /// ([`encode_with_gen`]) so call sites never thread it by hand.
+    pub gen: u32,
     pub payload: Vec<u8>,
 }
 
 impl Frame {
     pub fn new(kind: FrameKind, rank: u32, step: u64, bucket: u32, payload: Vec<u8>) -> Self {
-        Frame { kind, rank, step, bucket, dtype: SlabDtype::F32, payload }
+        Frame { kind, rank, step, bucket, dtype: SlabDtype::F32, gen: 0, payload }
     }
 
     /// A tensor-segment frame whose payload is encoded at `dtype`.
@@ -142,12 +160,20 @@ impl Frame {
         dtype: SlabDtype,
         payload: Vec<u8>,
     ) -> Self {
-        Frame { kind, rank, step, bucket, dtype, payload }
+        Frame { kind, rank, step, bucket, dtype, gen: 0, payload }
     }
 
     /// Frames with no payload (Done, RingHello, …).
     pub fn bare(kind: FrameKind, rank: u32, step: u64) -> Self {
         Frame::new(kind, rank, step, 0, Vec::new())
+    }
+
+    /// A liveness beacon from `rank` of incarnation `gen`, having
+    /// completed `step` steps.
+    pub fn heartbeat(rank: u32, step: u64, gen: u32) -> Self {
+        let mut f = Frame::bare(FrameKind::Heartbeat, rank, step);
+        f.gen = gen;
+        f
     }
 }
 
@@ -211,8 +237,16 @@ pub fn fnv1a32(bytes: &[u8]) -> u32 {
     h
 }
 
-/// Encode a frame to its on-wire bytes.
+/// Encode a frame to its on-wire bytes, using the frame's own `gen`.
 pub fn encode(f: &Frame) -> Vec<u8> {
+    encode_with_gen(f, f.gen)
+}
+
+/// Encode a frame stamped with incarnation `gen`, overriding the
+/// frame's own field. This is the transport's send path: frames are
+/// built generation-agnostic and stamped at the wire, without cloning
+/// the (possibly bucket-sized) payload just to set one u32.
+pub fn encode_with_gen(f: &Frame, gen: u32) -> Vec<u8> {
     let body_len = BODY_HEADER + f.payload.len();
     let mut out = Vec::with_capacity(8 + 4 + body_len + 4);
     out.extend_from_slice(&MAGIC);
@@ -222,6 +256,7 @@ pub fn encode(f: &Frame) -> Vec<u8> {
     out.extend_from_slice(&f.step.to_le_bytes());
     out.extend_from_slice(&f.bucket.to_le_bytes());
     out.push(f.dtype.code());
+    out.extend_from_slice(&gen.to_le_bytes());
     out.extend_from_slice(&f.payload);
     let crc = fnv1a32(&out);
     out.extend_from_slice(&crc.to_le_bytes());
@@ -275,8 +310,9 @@ pub fn decode(buf: &[u8]) -> Result<(Frame, usize), WireError> {
     let step = rd_u64(&body[5..13]);
     let bucket = rd_u32(&body[13..17]);
     let dtype = SlabDtype::from_code(body[17]).ok_or(WireError::BadDtype(body[17]))?;
+    let gen = rd_u32(&body[18..22]);
     let payload = body[BODY_HEADER..].to_vec();
-    Ok((Frame { kind, rank, step, bucket, dtype, payload }, total))
+    Ok((Frame { kind, rank, step, bucket, dtype, gen, payload }, total))
 }
 
 /// Read exactly one frame from a byte stream (used by the TCP
@@ -565,6 +601,25 @@ mod tests {
         let crc = fnv1a32(&bytes[..n - 4]);
         bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
         assert_eq!(decode(&bytes).unwrap_err(), WireError::BadDtype(7));
+    }
+
+    #[test]
+    fn generation_stamp_roundtrips_and_overrides() {
+        // Constructors default to incarnation 0 …
+        let f = sample();
+        assert_eq!(f.gen, 0);
+        assert_eq!(decode_exact(&encode(&f)).unwrap().gen, 0);
+        // … the transport stamps the live generation without touching
+        // the frame …
+        let g = decode_exact(&encode_with_gen(&f, 7)).unwrap();
+        assert_eq!(g.gen, 7);
+        assert_eq!((g.kind, g.rank, g.step, g.payload), (f.kind, f.rank, f.step, f.payload));
+        // … and a frame carrying its own gen round-trips through the
+        // plain encoder.
+        let hb = Frame::heartbeat(2, 41, 3);
+        let d = decode_exact(&encode(&hb)).unwrap();
+        assert_eq!((d.kind, d.rank, d.step, d.gen), (FrameKind::Heartbeat, 2, 41, 3));
+        assert!(d.payload.is_empty());
     }
 
     #[test]

@@ -106,12 +106,26 @@ COMMANDS
              S; surviving ranks must fail with a typed step-boundary
              error, never hang)] [--dist-timeout-ms T (peer read/connect
              timeout, default 10000)]
+             [--dist-supervise (elastic mode, requires --ckpt-dir: the
+             launcher monitors per-rank heartbeats, tears the world down
+             on a failure and relaunches a fresh incarnation that
+             resumes bitwise-exactly from the newest durable
+             checkpoint)] [--max-restarts N (relaunch budget, default 3;
+             exhaustion is a typed error, never a hang)]
+             [--heartbeat-ms T (beat interval; a rank silent for 4
+             beats is declared dead; default dist-timeout-ms / 4)]
   train-bench  [--model tiny] [--steps N] [--replicas R] [--accum K]
              [--strategy S] [--sentences N] [--sequential] [--bucket-kib N]
              [--checkpoint-every N (default 2; async-checkpoint cost is
              part of the sweep: checkpoint_stall_ms ~ 0 is the claim)]
              [--dist N (adds r{R}.dist{N}.{ps,replicated} rows: an
              N-rank in-process world per collective mode)]
+             [--chaos (with --dist N: adds r1.dist{N}.{mode}.chaos rows
+             — a supervised world with a scripted rank kill, recovered
+             from durable checkpoints; gates the recovered params
+             bitwise against the fault-free run and reports
+             restarts/recovery_ms/lost_steps; also dumps supervisor
+             counters to results/metrics_train.prom)]
              [--precision f32,bf16 (comma list; adds 16-bit rows — keyed
              r{R}.accum{K}.{f16,bf16} with bytes_per_step and
              overflow_skips columns — next to the f32 sweep; 16-bit rows
@@ -316,7 +330,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     trainer.set_pipeline(replicas, accum);
     if let Some(dir) = args.get("ckpt-dir") {
         let every = args.usize("checkpoint-every", 25)?.max(1);
-        let store = Retrying::new(LocalDir::new(dir)?, RetryPolicy::default());
+        let store = Retrying::new(LocalDir::new(dir)?, RetryPolicy::STORAGE);
         trainer.enable_async_checkpoint(Arc::new(store), every);
         println!("async checkpointing to {dir}/ every {every} steps (latest-pointer protocol)");
     }
@@ -326,7 +340,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             // A checkpoint *directory*: resolve its `latest` pointer to
             // the newest durable checkpoint — torn/unreferenced objects
             // from a crashed writer are never considered.
-            let store = Retrying::new(LocalDir::new(p)?, RetryPolicy::default());
+            let store = Retrying::new(LocalDir::new(p)?, RetryPolicy::STORAGE);
             let key = trainer.resume_latest(&store)?.ok_or_else(|| {
                 anyhow!("--resume {path}: directory has no published checkpoint")
             })?;
@@ -417,6 +431,9 @@ fn cmd_train_dist(args: &Args, world: usize) -> Result<()> {
     // Validate the mode up front — better a flag error here than one
     // replicated N times from the children.
     let mode: DistMode = args.str_or("dist-mode", "ps").parse()?;
+    if args.get("dist-supervise").is_some() {
+        return cmd_train_dist_supervised(args, world, mode);
+    }
     let exe = std::env::current_exe().context("resolve current executable")?;
     let forward: Vec<(String, String)> = args
         .flags
@@ -515,6 +532,262 @@ fn pump_lines(rank: usize, rd: Box<dyn std::io::Read + Send>) {
     }
 }
 
+/// [`pump_lines`], but `DIST-HB <hex>` heartbeat lines are decoded and
+/// forwarded to the supervisor's monitor channel instead of printed.
+fn pump_lines_supervised(
+    rank: usize,
+    rd: Box<dyn std::io::Read + Send>,
+    beats: std::sync::mpsc::Sender<Vec<u8>>,
+) {
+    use std::io::BufRead;
+    for line in std::io::BufReader::new(rd).lines().map_while(|l| l.ok()) {
+        match line.strip_prefix("DIST-HB ") {
+            Some(hex) => {
+                if let Some(bytes) = hybridnmt::dist::supervisor::from_hex(hex.trim()) {
+                    let _ = beats.send(bytes);
+                }
+            }
+            None => println!("[rank {rank}] {line}"),
+        }
+    }
+}
+
+/// `train --dist N --dist-supervise`: the elastic process-mode
+/// launcher. Each incarnation spawns the N `dist-worker` processes
+/// with its generation (`--dist-gen`), monitors their `DIST-HB`
+/// heartbeat lines and exit statuses, and on a failure kills the
+/// survivors and relaunches — the next incarnation's workers resume
+/// from the newest durable checkpoint in `--ckpt-dir`, replaying the
+/// derived batch stream so the final parameters are bitwise-identical
+/// to a fault-free run. The restart budget (`--max-restarts`) turns a
+/// repeatedly-dying world into one typed error, never a hang.
+fn cmd_train_dist_supervised(args: &Args, world: usize, mode: DistMode) -> Result<()> {
+    use hybridnmt::dist::{supervise, LivenessPolicy, SupervisorOpts};
+
+    let ckpt_dir = args
+        .get("ckpt-dir")
+        .ok_or_else(|| {
+            anyhow!(
+                "--dist-supervise requires --ckpt-dir DIR: relaunched worlds resume from \
+                 its durable `latest` checkpoint"
+            )
+        })?
+        .to_string();
+    let max_restarts = args.usize("max-restarts", 3)? as u32;
+    let tmo = args.usize("dist-timeout-ms", 10_000)?.max(1) as u64;
+    let heartbeat_ms = args.usize("heartbeat-ms", (tmo / 4).max(1) as usize)?.max(1) as u64;
+    let liveness = LivenessPolicy::new(heartbeat_ms, 4);
+    let sup = SupervisorOpts { max_restarts, liveness, ..SupervisorOpts::default() };
+    let store = Retrying::new(LocalDir::new(&ckpt_dir)?, RetryPolicy::STORAGE);
+    let exe = std::env::current_exe().context("resolve current executable")?;
+    let forward: Vec<(String, String)> = args
+        .flags
+        .iter()
+        .filter(|(k, _)| !matches!(k.as_str(), "dist-addr" | "dist-rank" | "dist-gen"))
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect();
+
+    println!(
+        "supervised launch: {world} ranks over loopback TCP ({} mode), heartbeat \
+         {heartbeat_ms} ms (deadline {} ms), restart budget {max_restarts}, durable \
+         checkpoints in {ckpt_dir}/",
+        mode.key(),
+        liveness.deadline_ms()
+    );
+    let ((), recovery) = supervise("train --dist", &sup, |gen| {
+        run_process_incarnation(&exe, &forward, world, gen, &liveness, &store)
+    })?;
+    if recovery.restarts > 0 {
+        println!(
+            "recovered: {} restart(s), {} lost step(s) re-run, {:.0} ms recovery wall-clock",
+            recovery.restarts, recovery.lost_steps, recovery.recovery_ms
+        );
+        for (g, d) in &recovery.failures {
+            println!("  incarnation {g}: {d}");
+        }
+    }
+    println!(
+        "all {world} ranks finished ({} mode) under supervision; every rank holds the \
+         same parameters the fault-free run would have produced",
+        mode.key()
+    );
+    Ok(())
+}
+
+/// Launch and monitor one process-world incarnation; see
+/// [`cmd_train_dist_supervised`]. Failures the budget can absorb come
+/// back as `Incarnation::Failed`; launch/config problems (rank 0 dead
+/// before its rendezvous bind) are hard errors.
+fn run_process_incarnation(
+    exe: &std::path::Path,
+    forward: &[(String, String)],
+    world: usize,
+    gen: u32,
+    liveness: &hybridnmt::dist::LivenessPolicy,
+    store: &dyn hybridnmt::storage::Storage,
+) -> hybridnmt::dist::DistResult<hybridnmt::dist::Incarnation<()>> {
+    use hybridnmt::dist::{latest_durable_step, DistError, FailureCause, HeartbeatMonitor, Incarnation};
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+
+    let perm = |what: &str, e: &dyn std::fmt::Display| DistError::permanent(format!("{what}: {e}"));
+    let spawn = |rank: usize, addr: Option<&str>| -> Result<std::process::Child, DistError> {
+        let mut c = Command::new(exe);
+        c.arg("dist-worker");
+        for (k, v) in forward {
+            c.arg(format!("--{k}")).arg(v);
+        }
+        c.arg("--dist-rank").arg(rank.to_string());
+        c.arg("--dist-gen").arg(gen.to_string());
+        if let Some(a) = addr {
+            c.arg("--dist-addr").arg(a);
+        }
+        c.stdout(Stdio::piped()).stderr(Stdio::piped());
+        c.spawn().map_err(|e| perm(&format!("spawn rank {rank}"), &e))
+    };
+
+    println!("[supervisor] launching incarnation {gen} ({world} ranks)");
+    let mut monitor = HeartbeatMonitor::detached(world, gen, *liveness);
+    let (beat_tx, beat_rx) = std::sync::mpsc::channel::<Vec<u8>>();
+
+    let mut rank0 = spawn(0, None)?;
+    let mut r0_out = std::io::BufReader::new(rank0.stdout.take().expect("stdout piped"));
+    let mut addr = None;
+    let mut line = String::new();
+    while addr.is_none() {
+        line.clear();
+        if r0_out.read_line(&mut line).map_err(|e| perm("read rank 0 stdout", &e))? == 0 {
+            break;
+        }
+        match line.trim().strip_prefix("DIST-LISTEN ") {
+            Some(a) => addr = Some(a.to_string()),
+            None => print!("[rank 0] {line}"),
+        }
+    }
+    let addr = match addr {
+        Some(a) => a,
+        None => {
+            // Dead before the rendezvous bind: nothing a relaunch can
+            // fix (bad flags, bad model dir) — fail the whole run.
+            let st = rank0.wait().map_err(|e| perm("reap rank 0", &e))?;
+            let mut err = String::new();
+            if let Some(mut e) = rank0.stderr.take() {
+                use std::io::Read;
+                let _ = e.read_to_string(&mut err);
+            }
+            return Err(DistError::permanent(format!(
+                "rank 0 exited ({st}) before DIST-LISTEN:\n{err}"
+            )));
+        }
+    };
+
+    let mut procs: Vec<(usize, std::process::Child)> = vec![(0, rank0)];
+    for r in 1..world {
+        match spawn(r, Some(&addr)) {
+            Ok(c) => procs.push((r, c)),
+            Err(e) => {
+                for (_, child) in procs.iter_mut() {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                return Err(e);
+            }
+        }
+    }
+
+    let mut exit: Option<(usize, i32)> = None;
+    let mut hb_timeout: Option<usize> = None;
+    let mut finished = vec![false; world];
+    let scope_result: Result<(), DistError> = std::thread::scope(|scope| {
+        let tx0 = beat_tx.clone();
+        scope.spawn(move || pump_lines_supervised(0, Box::new(r0_out), tx0));
+        for (rank, child) in procs.iter_mut() {
+            let rank = *rank;
+            if let Some(out) = child.stdout.take() {
+                let tx = beat_tx.clone();
+                scope.spawn(move || pump_lines_supervised(rank, Box::new(out), tx));
+            }
+            if let Some(err) = child.stderr.take() {
+                scope.spawn(move || pump_lines(rank, Box::new(err)));
+            }
+        }
+        drop(beat_tx);
+        loop {
+            while let Ok(bytes) = beat_rx.try_recv() {
+                monitor
+                    .note_bytes(&bytes, std::time::Instant::now())
+                    .map_err(|e| perm("heartbeat stream", &e))?;
+            }
+            let mut all_done = true;
+            for (rank, child) in procs.iter_mut() {
+                if finished[*rank] {
+                    continue;
+                }
+                match child.try_wait() {
+                    Ok(Some(st)) => {
+                        finished[*rank] = true;
+                        if !st.success() && exit.is_none() {
+                            exit = Some((*rank, st.code().unwrap_or(-1)));
+                        }
+                    }
+                    Ok(None) => all_done = false,
+                    Err(e) => return Err(perm(&format!("poll rank {rank}"), &e)),
+                }
+            }
+            if all_done || exit.is_some() {
+                break;
+            }
+            let now = std::time::Instant::now();
+            // Silence only counts once a rank has beaten (before that it
+            // is still building its engine/corpus); a rank that never
+            // beats at all is caught by a 10×-deadline launch grace.
+            hb_timeout = monitor.dead_ranks(now).into_iter().find(|&r| {
+                !finished[r]
+                    && (monitor.has_beaten(r)
+                        || monitor.age_ms(now) > 10 * liveness.deadline_ms())
+            });
+            if hb_timeout.is_some() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        // Teardown: anything still running is killed — the relaunch
+        // must never race a half-dead predecessor (its frames carry the
+        // old generation and are dropped at the wire anyway).
+        for (rank, child) in procs.iter_mut() {
+            if !finished[*rank] {
+                let _ = child.kill();
+                let _ = child.wait();
+                finished[*rank] = true;
+            }
+        }
+        Ok(())
+    });
+    scope_result?;
+
+    let lost = || -> hybridnmt::dist::DistResult<u64> {
+        Ok(monitor.max_step().saturating_sub(latest_durable_step(store)?))
+    };
+    if let Some(r) = hb_timeout {
+        return Ok(Incarnation::Failed {
+            cause: FailureCause::HeartbeatTimeout { rank: r },
+            detail: format!(
+                "incarnation {gen}: rank {r} silent past the {} ms deadline, world killed",
+                liveness.deadline_ms()
+            ),
+            lost_steps: lost()?,
+        });
+    }
+    if let Some((r, code)) = exit {
+        return Ok(Incarnation::Failed {
+            cause: FailureCause::ProcessExit { rank: r, code },
+            detail: format!("incarnation {gen}: rank {r} process exited with code {code}"),
+            lost_steps: lost()?,
+        });
+    }
+    Ok(Incarnation::Done(()))
+}
+
 /// Parse `--dist-die RANK@STEP` (that rank hard-exits just before the
 /// 1-based step).
 fn parse_dist_die(v: &str) -> Result<(usize, u64)> {
@@ -542,7 +815,16 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
     let mode: DistMode = args.str_or("dist-mode", "ps").parse()?;
     let ring = mode == DistMode::Replicated;
     let tmo = args.usize("dist-timeout-ms", 10_000)?.max(1) as u64;
-    let opts = CommOpts { read_timeout_ms: tmo, connect_timeout_ms: tmo, ..CommOpts::default() };
+    // The incarnation generation (supervised relaunches): stamped into
+    // every frame this rank sends, so zombies from a dead incarnation
+    // are dropped at the wire layer of the fresh world.
+    let gen = args.usize("dist-gen", 0)? as u32;
+    let opts = CommOpts {
+        read_timeout_ms: tmo,
+        connect_timeout_ms: tmo,
+        generation: gen,
+        ..CommOpts::default()
+    };
 
     // Rank 0 publishes its rendezvous address *before* the (slow)
     // engine/corpus build so the launcher can start the workers; every
@@ -594,12 +876,29 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
     };
     let comm = DistComm::new(Box::new(transport), mode, local, opts.backoff.clone())?;
     println!(
-        "rank {rank}/{world} up ({} mode): {steps} steps, {replicas} replicas x {accum} accum, \
-         global batch {}",
+        "rank {rank}/{world} up ({} mode, incarnation {gen}): {steps} steps, {replicas} \
+         replicas x {accum} accum, global batch {}",
         mode.key(),
         world * local * exp.model.batch
     );
-    let run = hybridnmt::dist::train_rank(&engine, &spec, &comm, &stream)?;
+    // Supervised-run context: durable checkpoints (rank 0 publishes,
+    // every rank resumes — valid because params are bitwise-identical
+    // across ranks) and per-step stdout heartbeats for the launcher.
+    let mut ctx = hybridnmt::dist::RankCtx { gen, ..Default::default() };
+    if let Some(dir) = args.get("ckpt-dir") {
+        let every = args.usize("checkpoint-every", 25)?.max(1);
+        let store: Arc<dyn hybridnmt::storage::Storage> =
+            Arc::new(Retrying::new(LocalDir::new(dir)?, RetryPolicy::STORAGE));
+        ctx.store = Some(store);
+        ctx.ckpt_every = every;
+        if rank == 0 {
+            println!("rank 0 checkpoints to {dir}/ every {every} steps (latest-pointer protocol)");
+        }
+    }
+    if args.get("dist-supervise").is_some() {
+        ctx.beat = Some(hybridnmt::dist::HeartbeatTx::stdout(rank as u32, gen));
+    }
+    let run = hybridnmt::dist::train_rank_ctx(&engine, &spec, &comm, &stream, &ctx)?;
     let last = run.stats.last();
     println!(
         "rank {rank} done: {} steps, final loss/tok {:.6}, ppl {:.3}",
@@ -698,7 +997,7 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                     .join(format!("hynmt_train_bench_ckpt_r{replicas}_a{accum}_{label}"));
                 let _ = std::fs::remove_dir_all(&ck_dir);
                 trainer.enable_async_checkpoint(
-                    Arc::new(Retrying::new(LocalDir::new(&ck_dir)?, RetryPolicy::default())),
+                    Arc::new(Retrying::new(LocalDir::new(&ck_dir)?, RetryPolicy::STORAGE)),
                     ckpt_every,
                 );
 
@@ -809,6 +1108,10 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                     precision: prec,
                     bytes_per_step: grad_bytes as f64 / sn,
                     overflow_skips: ovf_skips,
+                    chaos: false,
+                    restarts: 0,
+                    recovery_ms: 0.0,
+                    lost_steps: 0,
                 });
             }
         }
@@ -891,6 +1194,10 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
                 precision: SlabDtype::F32,
                 bytes_per_step: stats.iter().map(|s| s.grad_bytes).sum::<u64>() as f64 / sn,
                 overflow_skips: stats.iter().filter(|s| s.overflow_skipped).count() as u64,
+                chaos: false,
+                restarts: 0,
+                recovery_ms: 0.0,
+                lost_steps: 0,
             });
         }
         if first_losses.len() == 2 && first_losses[0].to_bits() != first_losses[1].to_bits() {
@@ -901,6 +1208,144 @@ fn cmd_train_bench(args: &Args) -> Result<()> {
             ));
         }
         println!("dist modes agree bitwise on the first-step loss ({dist_world} ranks)");
+    }
+    // Supervised chaos rows: per collective mode, a world with a
+    // scripted rank kill runs under the elastic supervisor (durable
+    // checkpoints every step, restart budget 3) and its recovered
+    // final parameters gate bitwise against a fault-free world on the
+    // identical stream — the recovery-cost columns quantify what the
+    // equivalence cost.
+    if args.get("chaos").is_some() {
+        use hybridnmt::dist::{
+            run_supervised_world, FaultScript, RankSpec, ScheduledDeath, SupervisorOpts,
+            WorldKind,
+        };
+        if dist_world < 2 {
+            return Err(anyhow!("--chaos needs --dist N with N >= 2"));
+        }
+        for mode in [DistMode::Ps, DistMode::Replicated] {
+            let mut batcher = report::make_batcher(&exp, &corpus)?;
+            let spec0 = {
+                let mut s = RankSpec::new(exp.clone(), mode, 1, 1, steps);
+                s.sequential = args.get("sequential").is_some();
+                s.bucket_bytes = Some(bucket_bytes);
+                s
+            };
+            let local = spec0.local_shards();
+            let stream: Vec<_> =
+                (0..steps * dist_world * local).map(|_| batcher.next_train()).collect();
+            // Fault-free reference world: the params the recovered run
+            // must reproduce bit for bit.
+            let clean = hybridnmt::dist::run_fake_world(
+                &engine,
+                &vec![spec0.clone(); dist_world],
+                vec![FaultScript::clean(); dist_world],
+                CommOpts::fast(),
+                &stream,
+            );
+            let mut ref_params = None;
+            for (r, run) in clean.into_iter().enumerate() {
+                let run =
+                    run.map_err(|e| anyhow!("chaos reference rank {r} ({}): {e:#}", mode.key()))?;
+                if r == 0 {
+                    ref_params = Some(run.params);
+                }
+            }
+            let ref_params = ref_params.expect("world >= 2 always has a rank 0");
+            // The chaos world: rank 1 soft-dies just before step 2 of
+            // the initial incarnation; the supervisor relaunches from
+            // the newest durable checkpoint.
+            let mut specs = vec![spec0; dist_world];
+            specs[1].die_script =
+                vec![ScheduledDeath { gen: 0, step: (steps as u64).min(2), hard: false }];
+            let ck_dir =
+                std::env::temp_dir().join(format!("hynmt_train_bench_chaos_{}", mode.key()));
+            let _ = std::fs::remove_dir_all(&ck_dir);
+            let store: Arc<dyn hybridnmt::storage::Storage> =
+                Arc::new(Retrying::new(LocalDir::new(&ck_dir)?, RetryPolicy::STORAGE));
+            let t0 = std::time::Instant::now();
+            let out = run_supervised_world(
+                &engine,
+                &specs,
+                WorldKind::Fake,
+                &CommOpts::fast(),
+                &SupervisorOpts::fast(3),
+                store,
+                1,
+                &stream,
+                vec![FaultScript::clean(); dist_world],
+            )?;
+            let wall = t0.elapsed().as_secs_f64();
+            let _ = std::fs::remove_dir_all(&ck_dir);
+            for (name, t) in &ref_params {
+                let g = out.ranks[0]
+                    .params
+                    .get(name)
+                    .ok_or_else(|| anyhow!("chaos run missing param `{name}`"))?;
+                let same = t.data().len() == g.data().len()
+                    && t.data().iter().zip(g.data()).all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same {
+                    return Err(anyhow!(
+                        "chaos recovery diverged: param `{name}` differs bitwise from the \
+                         fault-free run ({} mode)",
+                        mode.key()
+                    ));
+                }
+            }
+            let rec = &out.recovery;
+            println!(
+                "chaos {dist_world} [{}]: {} restart(s), {:.0} ms recovery, {} lost step(s) \
+                 re-run; recovered params bitwise-equal to the fault-free run",
+                mode.key(),
+                rec.restarts,
+                rec.recovery_ms,
+                rec.lost_steps
+            );
+            let stats = &out.ranks[0].stats;
+            let sn = steps as f64;
+            let reduce_s: f64 = stats.iter().map(|s| s.reduce_seconds).sum();
+            let overlap_s: f64 = stats.iter().map(|s| s.reduce_overlap_seconds).sum();
+            rows.push(report::TrainBenchRow {
+                replicas: 1,
+                accum: 1,
+                flat: true,
+                steps,
+                global_batch: dist_world * exp.model.batch,
+                step_s: wall / sn,
+                reduce_s: reduce_s / sn,
+                overlap_pct: if reduce_s > 0.0 { 100.0 * overlap_s / reduce_s } else { 0.0 },
+                apply_s: stats.iter().map(|s| s.apply_seconds).sum::<f64>() / sn,
+                stall_s: 0.0,
+                src_tok_per_s: per_sec(
+                    stats.iter().map(|s| s.src_tokens).sum::<f64>() * dist_world as f64,
+                    wall,
+                ),
+                loss_per_tok: stats.last().map(|s| s.loss_per_tok).unwrap_or(f64::NAN),
+                uploads_per_step: 0.0,
+                allocs_per_step: stats.iter().map(|s| s.allocs).sum::<u64>() as f64 / sn,
+                ckpt_stall_s: 0.0,
+                ckpt_bytes_per_s: 0.0,
+                dist_world,
+                dist_mode: mode.key().to_string(),
+                precision: SlabDtype::F32,
+                bytes_per_step: stats.iter().map(|s| s.grad_bytes).sum::<u64>() as f64 / sn,
+                overflow_skips: 0,
+                chaos: true,
+                restarts: rec.restarts,
+                recovery_ms: rec.recovery_ms,
+                lost_steps: rec.lost_steps,
+            });
+        }
+        // The supervisor's counters/histograms, for scrape-side
+        // alerting parity with the serve-side dump. A separate file so
+        // serve-bench's results/metrics.prom is never clobbered.
+        std::fs::create_dir_all("results").ok();
+        write_file_atomic(
+            std::path::Path::new("results/metrics_train.prom"),
+            hybridnmt::metrics::Registry::global().render().as_bytes(),
+        )
+        .context("write results/metrics_train.prom")?;
+        println!("wrote results/metrics_train.prom (dist_supervisor_* recovery counters)");
     }
     print!("\n{}", report::train_table(&rows));
     println!("wrote BENCH_train.json");
@@ -1104,6 +1549,7 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         queue_capacity: args.usize("queue", 256)?,
         max_wait_ms: args.str_or("max-wait-ms", "5.0").parse().with_context(|| "--max-wait-ms")?,
         bucket_width: args.usize("bucket-width", 4)?,
+        panic_replica_at: None,
     };
 
     let tenants = args.usize("tenants", 1)?;

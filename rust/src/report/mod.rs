@@ -1080,6 +1080,18 @@ pub struct TrainBenchRow {
     /// Optimizer steps skipped by the dynamic loss scaler (overflow in
     /// the folded gradient); always 0 for f32 rows.
     pub overflow_skips: u64,
+    /// Supervised chaos row: the world ran under the elastic
+    /// supervisor with scripted rank kills. Keyed with a `.chaos`
+    /// suffix and carrying the three recovery columns below.
+    pub chaos: bool,
+    /// World relaunches the supervisor performed for this row.
+    pub restarts: u32,
+    /// Wall-clock the failures cost (failed incarnations + restart
+    /// backoff), milliseconds.
+    pub recovery_ms: f64,
+    /// Optimizer steps of progress re-run after restarts (work beyond
+    /// the checkpoint each relaunch resumed from).
+    pub lost_steps: u64,
 }
 
 /// Render the training-throughput sweep — replicas × accumulation vs
@@ -1098,16 +1110,17 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
     .unwrap();
     writeln!(
         out,
-        "{:<9} {:>6} {:>10} {:>7} {:>7}  {:>9} {:>9} {:>5} {:>9} {:>9} {:>9}  {:>10} {:>9} {:>9} {:>9} {:>10} {:>9} {:>4}",
+        "{:<9} {:>6} {:>10} {:>7} {:>7}  {:>9} {:>9} {:>5} {:>9} {:>9} {:>9}  {:>10} {:>9} {:>9} {:>9} {:>10} {:>9} {:>4} {:>4} {:>8} {:>5}",
         "replicas", "accum", "mode", "steps", "gbatch", "step ms", "reduce ms", "ovl%",
         "apply ms", "stall ms", "ck-st ms", "src tok/s", "loss/tok", "uploads", "allocs",
-        "ckpt MB/s", "grad kB", "ovf"
+        "ckpt MB/s", "grad kB", "ovf", "rst", "recov ms", "lost"
     )
     .unwrap();
     let mut csv = String::from(
         "replicas,accum,mode,steps,global_batch,step_ms,reduce_ms,overlap_pct,apply_ms,\
          stall_ms,checkpoint_stall_ms,src_tok_per_s,loss_per_tok,uploads_per_step,\
-         allocs_per_step,checkpoint_bytes_per_s,precision,bytes_per_step,overflow_skips\n",
+         allocs_per_step,checkpoint_bytes_per_s,precision,bytes_per_step,overflow_skips,\
+         restarts,recovery_ms,lost_steps\n",
     );
     let mut bench: BTreeMap<String, Json> = BTreeMap::new();
     for r in rows {
@@ -1124,10 +1137,13 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
         if r.precision != SlabDtype::F32 {
             mode = format!("{mode}/{}", r.precision);
         }
+        if r.chaos {
+            mode = format!("{mode}+ch");
+        }
         writeln!(
             out,
             "{:<9} {:>6} {:>10} {:>7} {:>7}  {:>9.1} {:>9.1} {:>5.1} {:>9.1} {:>9.1} {:>9.2}  \
-             {:>10.1} {:>9.3} {:>9.1} {:>9.0} {:>10.1} {:>9.1} {:>4}",
+             {:>10.1} {:>9.3} {:>9.1} {:>9.0} {:>10.1} {:>9.1} {:>4} {:>4} {:>8.1} {:>5}",
             r.replicas,
             r.accum,
             mode,
@@ -1146,11 +1162,14 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             r.ckpt_bytes_per_s / 1e6,
             r.bytes_per_step / 1e3,
             r.overflow_skips,
+            r.restarts,
+            r.recovery_ms,
+            r.lost_steps,
         )
         .unwrap();
         writeln!(
             csv,
-            "{},{},{},{},{},{:.3},{:.3},{:.2},{:.3},{:.3},{:.4},{:.2},{:.5},{:.1},{:.1},{:.0},{},{:.0},{}",
+            "{},{},{},{},{},{:.3},{:.3},{:.2},{:.3},{:.3},{:.4},{:.2},{:.5},{:.1},{:.1},{:.0},{},{:.0},{},{},{:.1},{}",
             r.replicas,
             r.accum,
             mode,
@@ -1170,6 +1189,9 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             r.precision,
             r.bytes_per_step,
             r.overflow_skips,
+            r.restarts,
+            r.recovery_ms,
+            r.lost_steps,
         )
         .unwrap();
         // Flat rows keep the historical prefix; map-reference rows get
@@ -1187,6 +1209,12 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             // to them under a dtype suffix so sweeps across precisions
             // accumulate instead of clobbering.
             key = format!("{key}.{}", r.precision);
+        }
+        if r.chaos {
+            // Supervised chaos rows sit next to their clean siblings;
+            // the suffix is what opts them into the recovery-column
+            // schema check in scripts/verify.sh.
+            key = format!("{key}.chaos");
         }
         for (suffix, v) in [
             ("tok_per_s", r.src_tok_per_s),
@@ -1206,6 +1234,15 @@ pub fn train_table(rows: &[TrainBenchRow]) -> String {
             ("overflow_skips", r.overflow_skips as f64),
         ] {
             bench.insert(format!("{key}.{suffix}"), Json::Num(v));
+        }
+        if r.chaos {
+            for (suffix, v) in [
+                ("restarts", r.restarts as f64),
+                ("recovery_ms", r.recovery_ms),
+                ("lost_steps", r.lost_steps as f64),
+            ] {
+                bench.insert(format!("{key}.{suffix}"), Json::Num(v));
+            }
         }
     }
     if let (Some(base), Some(best)) = (

@@ -62,6 +62,11 @@ pub struct ServeOptions {
     pub max_wait_ms: f64,
     /// Source-length bucket granularity of the coalescer, in tokens.
     pub bucket_width: usize,
+    /// Fault-injection hook: the replica that picks up the Nth
+    /// dispatched group (1-based) panics mid-decode. The regression
+    /// tests use it to prove a replica-thread panic surfaces as a
+    /// clean typed error + drain, never a scope-poisoning abort.
+    pub panic_replica_at: Option<u64>,
 }
 
 impl Default for ServeOptions {
@@ -71,6 +76,7 @@ impl Default for ServeOptions {
             queue_capacity: 256,
             max_wait_ms: 5.0,
             bucket_width: 4,
+            panic_replica_at: None,
         }
     }
 }
@@ -181,6 +187,10 @@ struct Shared {
     rejected: AtomicU64,
     invalid: AtomicU64,
     stolen: AtomicU64,
+    /// Groups picked up by any replica (feeds `panic_at`).
+    picked: AtomicU64,
+    /// See [`ServeOptions::panic_replica_at`].
+    panic_at: Option<u64>,
     failed: AtomicBool,
     error: Mutex<Option<anyhow::Error>>,
 }
@@ -370,6 +380,10 @@ fn run_replica(shared: &Shared, r: usize, decoder: &BatchDecoder, cfg: &BeamConf
         if stolen {
             shared.stolen.fetch_add(1, Ordering::Relaxed);
         }
+        let picked = shared.picked.fetch_add(1, Ordering::Relaxed) + 1;
+        if shared.panic_at == Some(picked) {
+            panic!("injected replica panic (group {picked})");
+        }
         let t_pick = shared.now_s();
         let srcs: Vec<Vec<i32>> = group.reqs.iter().map(|p| p.src.clone()).collect();
         let steps0 = decoder.decode_steps();
@@ -467,6 +481,8 @@ pub fn run_server<R>(
         rejected: AtomicU64::new(0),
         invalid: AtomicU64::new(0),
         stolen: AtomicU64::new(0),
+        picked: AtomicU64::new(0),
+        panic_at: opts.panic_replica_at,
         failed: AtomicBool::new(false),
         error: Mutex::new(None),
     };
@@ -474,9 +490,33 @@ pub fn run_server<R>(
     let driver_out = std::thread::scope(|s| {
         let sh = &shared;
         let co = Coalescer::new(capacity, opts.bucket_width, opts.max_wait_ms.max(0.0) / 1e3);
-        s.spawn(move || run_coalescer(sh, co));
+        // Worker threads are panic-hardened: a panic in the coalescer
+        // or a replica becomes the run's typed error (first-error-wins
+        // via `fail`) and a clean drain — an unwinding scoped thread
+        // would otherwise abort the whole process at scope join.
+        s.spawn(move || {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_coalescer(sh, co)
+            }));
+            if let Err(p) = out {
+                sh.fail(anyhow!(
+                    "coalescer thread panicked: {}",
+                    crate::util::panic_message(&*p)
+                ));
+            }
+        });
         for (r, dec) in decoders.iter().enumerate() {
-            s.spawn(move || run_replica(sh, r, dec, cfg));
+            s.spawn(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_replica(sh, r, dec, cfg)
+                }));
+                if let Err(p) = out {
+                    sh.fail(anyhow!(
+                        "replica {r} thread panicked: {}",
+                        crate::util::panic_message(&*p)
+                    ));
+                }
+            });
         }
         let _close = CloseGuard(sh);
         driver(&ServerHandle { shared: sh })
@@ -1066,9 +1106,31 @@ pub fn run_tenant_server<'r, R>(
     let driver_out = std::thread::scope(|s| {
         let sh = &shared;
         let co = MtCoalescer::new(capacity, opts.bucket_width, opts.max_wait_ms.max(0.0) / 1e3);
-        s.spawn(move || run_mt_coalescer(sh, co));
-        for _ in 0..replicas {
-            s.spawn(move || run_mt_replica(sh, engine, input_feeding, cfg));
+        // Same panic hardening as the single-tenant scheduler: a
+        // worker panic is a typed error + drain, never a process abort.
+        s.spawn(move || {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_mt_coalescer(sh, co)
+            }));
+            if let Err(p) = out {
+                sh.fail(anyhow!(
+                    "tenant coalescer thread panicked: {}",
+                    crate::util::panic_message(&*p)
+                ));
+            }
+        });
+        for r in 0..replicas {
+            s.spawn(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_mt_replica(sh, engine, input_feeding, cfg)
+                }));
+                if let Err(p) = out {
+                    sh.fail(anyhow!(
+                        "tenant replica {r} thread panicked: {}",
+                        crate::util::panic_message(&*p)
+                    ));
+                }
+            });
         }
         let _close = MtCloseGuard(sh);
         driver(&TenantServerHandle { shared: sh })

@@ -10,53 +10,37 @@
 //! transient error into a `Permanent` one with the attempt count in the
 //! message, which the training thread surfaces as a clean `Err` at the
 //! next step boundary.
+//!
+//! The backoff *math* (formula, jitter stream, preview) lives in the
+//! shared [`util::backoff`](crate::util::backoff) module — the same
+//! policy type the distributed layer dials and the world supervisor
+//! restarts with. This wrapper only keeps what is storage-specific:
+//! the per-operation stats counters and a jitter stream shared across
+//! concurrent operations behind a mutex (operations themselves are
+//! never serialized — the lock is held only for the draw).
 
 use std::sync::Mutex;
-use std::time::Duration;
 
 use crate::rng::Rng;
+use crate::util::backoff::{sleep_ms, Backoff, RetryableError};
 
 use super::{Result, Storage, StorageError};
 
-/// Backoff configuration for [`Retrying`].
-#[derive(Debug, Clone, Copy)]
-pub struct RetryPolicy {
-    /// Total attempts per operation (first try + retries). Minimum 1.
-    pub max_attempts: u32,
-    /// Backoff before the first retry, milliseconds.
-    pub base_ms: f64,
-    /// Ceiling on any single backoff, milliseconds.
-    pub cap_ms: f64,
-    /// Seed for the jitter stream.
-    pub seed: u64,
-}
+/// Backoff configuration for [`Retrying`] — the shared policy type.
+/// Construct storage-flavoured defaults with [`Backoff::STORAGE`]
+/// (`RetryPolicy::STORAGE` at this alias).
+pub type RetryPolicy = Backoff;
 
-impl Default for RetryPolicy {
-    fn default() -> Self {
-        RetryPolicy { max_attempts: 4, base_ms: 5.0, cap_ms: 250.0, seed: 0x5e7f_11aa }
-    }
-}
-
-impl RetryPolicy {
-    /// A policy that never sleeps — for tests exercising many faults.
-    pub fn instant(max_attempts: u32) -> Self {
-        RetryPolicy { max_attempts, base_ms: 0.0, cap_ms: 0.0, seed: 0 }
+impl RetryableError for StorageError {
+    fn transient(&self) -> bool {
+        self.retryable()
     }
 
-    /// The backoff before retry `attempt` (0-based) given jitter draw
-    /// `u ∈ [0,1)`: capped exponential, jittered into `[0.5x, 1.0x)`.
-    pub fn backoff_ms(&self, attempt: u32, u: f64) -> f64 {
-        let exp = self.base_ms * (2.0f64).powi(attempt.min(30) as i32);
-        exp.min(self.cap_ms) * (0.5 + 0.5 * u)
-    }
-
-    /// The full deterministic backoff schedule (one entry per possible
-    /// retry), as a fresh wrapper would sleep it. Inspection hook.
-    pub fn preview_ms(&self) -> Vec<f64> {
-        let mut rng = Rng::new(self.seed);
-        (0..self.max_attempts.saturating_sub(1))
-            .map(|a| self.backoff_ms(a, rng.f64()))
-            .collect()
+    fn exhausted(what: &str, attempts: u32, last: &Self) -> Self {
+        StorageError::permanent(format!(
+            "{what}: retries exhausted after {attempts} attempts; last error: {}",
+            last.msg
+        ))
     }
 }
 
@@ -107,22 +91,17 @@ impl<S: Storage> Retrying<S> {
                 }
                 Err(e) if e.retryable() && attempt + 1 < max => {
                     let u = self.rng.lock().unwrap().f64();
-                    let ms = self.policy.backoff_ms(attempt, u);
+                    let ms = self.policy.delay_ms(attempt, u);
                     {
                         let mut st = self.stats.lock().unwrap();
                         st.retries += 1;
                         st.slept_ms += ms;
                     }
-                    if ms > 0.0 {
-                        std::thread::sleep(Duration::from_micros((ms * 1000.0) as u64));
-                    }
+                    sleep_ms(ms);
                     attempt += 1;
                 }
                 Err(e) if e.retryable() => {
-                    return Err(StorageError::permanent(format!(
-                        "{what}: retries exhausted after {max} attempts; last error: {}",
-                        e.msg
-                    )));
+                    return Err(StorageError::exhausted(what, max, &e));
                 }
                 Err(e) => return Err(e),
             }
@@ -166,6 +145,13 @@ mod tests {
         }
         // Deterministic: same policy, same schedule.
         assert_eq!(p.preview_ms(), sched);
+    }
+
+    #[test]
+    fn storage_default_policy_is_preserved_by_unification() {
+        let p = RetryPolicy::STORAGE;
+        assert_eq!((p.max_attempts, p.base_ms, p.cap_ms), (4, 5.0, 250.0));
+        assert_eq!(p.seed, 0x5e7f_11aa);
     }
 
     #[test]

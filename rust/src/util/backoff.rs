@@ -1,0 +1,280 @@
+//! One capped-exponential backoff policy for every retry loop in the
+//! tree.
+//!
+//! The storage layer (`storage::retry::Retrying`) and the distributed
+//! layer (`dist`'s dial/collective retries, the world supervisor's
+//! restart budget) all wait the same way: before retry `attempt`
+//! (0-based) they sleep
+//!
+//! ```text
+//!   min(cap_ms, base_ms · 2^attempt) · (0.5 + 0.5·u)      u ∈ [0,1)
+//! ```
+//!
+//! milliseconds, where `u` is drawn from a [`rng::Rng`](crate::rng::Rng)
+//! stream seeded by the policy — so a fault-injection test replays the
+//! exact same schedule every run, and two subsystems retrying at once
+//! (seeded differently) never thundering-herd in phase. This module is
+//! the single home of that formula; the per-layer wrappers
+//! ([`Retrier`] here, `storage::retry::Retrying` over there) only
+//! decide *what counts as transient* and *how exhaustion is worded*,
+//! via the [`RetryableError`] trait.
+//!
+//! Each layer keeps its historical defaults ([`Backoff::COMM`] for
+//! sockets, [`Backoff::STORAGE`] for object stores): comm retries are
+//! short and eager because a dial races a peer's bind; storage retries
+//! are slower because a flaky disk wants breathing room.
+
+use std::time::Duration;
+
+use crate::rng::Rng;
+
+/// Capped-exponential backoff policy with deterministic jitter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Backoff {
+    /// Total attempts (first try + retries). Minimum 1.
+    pub max_attempts: u32,
+    /// Backoff before the first retry, milliseconds.
+    pub base_ms: f64,
+    /// Ceiling on any single backoff, milliseconds.
+    pub cap_ms: f64,
+    /// Seed for the jitter stream.
+    pub seed: u64,
+}
+
+impl Backoff {
+    /// Historical `dist` defaults: eager, short, for socket dials and
+    /// in-flight collective retries.
+    pub const COMM: Backoff =
+        Backoff { max_attempts: 5, base_ms: 2.0, cap_ms: 100.0, seed: 0xD157_BACC };
+
+    /// Historical `storage` defaults: fewer, slower, for flaky object
+    /// stores where hammering only makes things worse.
+    pub const STORAGE: Backoff =
+        Backoff { max_attempts: 4, base_ms: 5.0, cap_ms: 250.0, seed: 0x5e7f_11aa };
+
+    /// A policy that never sleeps — for tests exercising many faults.
+    pub fn instant(max_attempts: u32) -> Self {
+        Backoff { max_attempts: max_attempts.max(1), base_ms: 0.0, cap_ms: 0.0, seed: 0 }
+    }
+
+    /// The backoff before retry `attempt` (0-based) given jitter draw
+    /// `u ∈ [0,1)`: capped exponential, jittered into `[0.5x, 1.0x)`.
+    ///
+    /// The exponent clamps at 30 so the uncapped term stays finite for
+    /// absurd attempt counts (`dial`'s deadline loop runs with
+    /// `max_attempts = u32::MAX`); any real `cap_ms` clamps the value
+    /// long before the exponent does.
+    pub fn delay_ms(&self, attempt: u32, u: f64) -> f64 {
+        let exp = self.base_ms * (2.0f64).powi(attempt.min(30) as i32);
+        exp.min(self.cap_ms) * (0.5 + 0.5 * u)
+    }
+
+    /// The full deterministic backoff schedule (one entry per possible
+    /// retry), as a fresh retrier would sleep it. Inspection hook.
+    pub fn preview_ms(&self) -> Vec<f64> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.max_attempts.saturating_sub(1))
+            .map(|a| self.delay_ms(a, rng.f64()))
+            .collect()
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff::COMM
+    }
+}
+
+/// What a retry loop needs to know about an error type: whether this
+/// failure is worth another attempt, and how to word the terminal
+/// error once the budget is gone. Implemented by `DistError` and
+/// `StorageError`; each keeps its historical exhaustion phrasing so
+/// existing operators' log greps keep matching.
+pub trait RetryableError: Sized {
+    /// `true` iff another attempt could plausibly succeed.
+    fn transient(&self) -> bool;
+
+    /// Terminal error wrapping the last transient failure after
+    /// `attempts` total attempts at operation `what`.
+    fn exhausted(what: &str, attempts: u32, last: &Self) -> Self;
+}
+
+/// Stateful retry driver: owns the jitter stream so consecutive `run`s
+/// continue one deterministic schedule.
+#[derive(Debug)]
+pub struct Retrier {
+    policy: Backoff,
+    rng: Rng,
+}
+
+impl Retrier {
+    pub fn new(policy: Backoff) -> Self {
+        let rng = Rng::new(policy.seed);
+        Retrier { policy, rng }
+    }
+
+    pub fn policy(&self) -> &Backoff {
+        &self.policy
+    }
+
+    /// Draw the next jittered delay for retry `attempt` from this
+    /// retrier's stream, advancing it.
+    pub fn next_delay_ms(&mut self, attempt: u32) -> f64 {
+        let u = self.rng.f64();
+        self.policy.delay_ms(attempt, u)
+    }
+
+    /// Run `op` until it succeeds, fails permanently, or exhausts the
+    /// attempt budget. Only errors whose [`RetryableError::transient`]
+    /// is `true` are retried; exhaustion converts the last transient
+    /// error via [`RetryableError::exhausted`].
+    pub fn run<T, E: RetryableError>(
+        &mut self,
+        what: &str,
+        mut op: impl FnMut() -> Result<T, E>,
+    ) -> Result<T, E> {
+        self.run_observed(what, &mut op, |_ms| {})
+    }
+
+    /// [`Retrier::run`] with a per-sleep observer (`on_sleep(ms)` fires
+    /// before each backoff sleep) so callers can keep stats without a
+    /// second code path.
+    pub fn run_observed<T, E: RetryableError>(
+        &mut self,
+        what: &str,
+        op: &mut impl FnMut() -> Result<T, E>,
+        mut on_sleep: impl FnMut(f64),
+    ) -> Result<T, E> {
+        let max = self.policy.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) if e.transient() && attempt + 1 < max => {
+                    let ms = self.next_delay_ms(attempt);
+                    on_sleep(ms);
+                    sleep_ms(ms);
+                    attempt += 1;
+                }
+                Err(e) if e.transient() => return Err(E::exhausted(what, max, &e)),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// Sleep a fractional-millisecond delay at microsecond resolution (the
+/// granularity every retry loop in the tree historically used).
+pub fn sleep_ms(ms: f64) {
+    if ms > 0.0 {
+        std::thread::sleep(Duration::from_micros((ms * 1000.0) as u64));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Backoff, Retrier, RetryableError};
+
+    /// Minimal error for exercising the generic loop without dragging
+    /// in a real subsystem.
+    #[derive(Debug, PartialEq)]
+    enum E {
+        Soft(&'static str),
+        Hard(String),
+    }
+
+    impl RetryableError for E {
+        fn transient(&self) -> bool {
+            matches!(self, E::Soft(_))
+        }
+        fn exhausted(what: &str, attempts: u32, last: &Self) -> Self {
+            let msg = match last {
+                E::Soft(m) => *m,
+                E::Hard(m) => m.as_str(),
+            };
+            E::Hard(format!("{what}: gave up after {attempts}: {msg}"))
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_capped_and_jittered() {
+        let p = Backoff { max_attempts: 8, base_ms: 10.0, cap_ms: 60.0, seed: 3 };
+        let sched = p.preview_ms();
+        assert_eq!(sched.len(), 7);
+        for (a, &ms) in sched.iter().enumerate() {
+            let uncapped = 10.0 * (2.0f64).powi(a as i32);
+            assert!(ms <= 60.0, "retry {a} slept {ms}ms > cap");
+            assert!(ms >= 0.5 * uncapped.min(60.0), "retry {a} slept {ms}ms, under half");
+        }
+        assert_eq!(p.preview_ms(), sched, "same seed, same schedule");
+        let other = Backoff { seed: 4, ..p };
+        assert_ne!(other.preview_ms(), sched, "different seed, different jitter");
+    }
+
+    #[test]
+    fn delay_survives_huge_attempt_counts() {
+        let p = Backoff { max_attempts: u32::MAX, base_ms: 2.0, cap_ms: 100.0, seed: 1 };
+        for attempt in [0, 10, 31, 64, u32::MAX - 1] {
+            let ms = p.delay_ms(attempt, 0.999);
+            assert!(ms.is_finite() && ms <= 100.0, "attempt {attempt} → {ms}");
+        }
+    }
+
+    #[test]
+    fn retrier_retries_soft_until_success() {
+        let mut r = Retrier::new(Backoff::instant(5));
+        let mut calls = 0;
+        let out: Result<u32, E> = r.run("op", || {
+            calls += 1;
+            if calls < 3 { Err(E::Soft("flake")) } else { Ok(7) }
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retrier_exhaustion_routes_through_trait() {
+        let mut r = Retrier::new(Backoff::instant(3));
+        let out: Result<(), E> = r.run("op", || Err(E::Soft("still down")));
+        assert_eq!(out.unwrap_err(), E::Hard("op: gave up after 3: still down".into()));
+    }
+
+    #[test]
+    fn retrier_never_retries_hard_errors() {
+        let mut r = Retrier::new(Backoff::instant(5));
+        let mut calls = 0;
+        let out: Result<(), E> = r.run("op", || {
+            calls += 1;
+            Err(E::Hard("fatal".into()))
+        });
+        assert_eq!(out.unwrap_err(), E::Hard("fatal".into()));
+        assert_eq!(calls, 1, "hard errors must surface on the first attempt");
+    }
+
+    #[test]
+    fn observer_sees_every_sleep() {
+        let mut r = Retrier::new(Backoff::instant(4));
+        let mut slept = 0u32;
+        let out: Result<(), E> =
+            r.run_observed("op", &mut || Err(E::Soft("down")), |_ms| slept += 1);
+        assert!(out.is_err());
+        assert_eq!(slept, 3, "4 attempts = 3 sleeps");
+    }
+
+    #[test]
+    fn layer_defaults_are_distinct_and_preserved() {
+        assert_eq!(Backoff::default(), Backoff::COMM);
+        assert_eq!(Backoff::COMM.max_attempts, 5);
+        assert_eq!((Backoff::COMM.base_ms, Backoff::COMM.cap_ms), (2.0, 100.0));
+        assert_eq!(Backoff::STORAGE.max_attempts, 4);
+        assert_eq!((Backoff::STORAGE.base_ms, Backoff::STORAGE.cap_ms), (5.0, 250.0));
+        assert_ne!(Backoff::COMM.seed, Backoff::STORAGE.seed, "jitter streams must differ");
+    }
+
+    #[test]
+    fn instant_policy_never_sleeps() {
+        let p = Backoff::instant(3);
+        assert_eq!(p.preview_ms(), vec![0.0, 0.0]);
+        assert_eq!(Backoff::instant(0).max_attempts, 1, "floor at one attempt");
+    }
+}

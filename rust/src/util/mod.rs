@@ -1,6 +1,7 @@
 //! Dependency-free utility substrates (the environment builds fully
 //! offline, so JSON et al. are implemented here rather than imported).
 
+pub mod backoff;
 pub mod json;
 
 /// Guarded per-second rate: `count / secs` with a tiny floor on the

@@ -1,0 +1,339 @@
+//! Elastic-recovery chaos suite (requires `make artifacts`).
+//!
+//! The supervised-world claim on top of `dist_equivalence.rs`: when
+//! ranks are killed mid-run — once or repeatedly, over the fake
+//! transport or real loopback TCP, in either collective mode — the
+//! supervisor detects the failure, relaunches the world, resumes from
+//! the newest durable checkpoint, and the recovered run's final
+//! parameters are **bitwise-identical** to a fault-free single-process
+//! run over the same global shard stream. And when the restart budget
+//! runs out, the caller gets a typed error promptly — never a hang.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hybridnmt::config::{
+    DataConfig, Experiment, HwConfig, ModelDims, Strategy, TrainConfig,
+};
+use hybridnmt::data::vocab::{BOS, EOS, PAD};
+use hybridnmt::dist::{
+    run_supervised_world, CommOpts, DistError, DistErrorKind, DistMode, FaultScript, RankSpec,
+    ScheduledDeath, SupervisorOpts, WorldKind,
+};
+use hybridnmt::metrics::Registry;
+use hybridnmt::parallel::Batch;
+use hybridnmt::rng::Rng;
+use hybridnmt::runtime::Engine;
+use hybridnmt::storage::{FaultPlan, FaultyMem};
+use hybridnmt::tensor::{ITensor, Tensor};
+use hybridnmt::train::Trainer;
+
+const BUCKET: usize = 32 * 1024;
+
+fn engine() -> Engine {
+    Engine::load("artifacts", "tiny").expect("run `make artifacts` first")
+}
+
+/// Same deterministic batch generator as tests/dist_equivalence.rs —
+/// the stream must be identical so the bitwise claim crosses suites.
+fn random_batch(d: &ModelDims, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (b, m, n) = (d.batch, d.max_src, d.max_tgt);
+    let mut src = vec![PAD; b * m];
+    let mut srclen = vec![0i32; b];
+    let mut tgt_in = vec![PAD; b * n];
+    let mut tgt_out = vec![PAD; b * n];
+    let mut tmask = vec![0.0f32; b * n];
+    for bi in 0..b {
+        let sl = rng.range(2, m + 1);
+        srclen[bi] = sl as i32;
+        for t in 0..sl {
+            src[bi * m + t] = rng.range(4, d.vocab) as i32;
+        }
+        let tl = rng.range(1, n);
+        tgt_in[bi * n] = BOS;
+        for t in 0..tl {
+            let tok = rng.range(4, d.vocab) as i32;
+            tgt_in[bi * n + t + 1] = tok;
+            tgt_out[bi * n + t] = tok;
+        }
+        tgt_out[bi * n + tl] = EOS;
+        for t in 0..=tl {
+            tmask[bi * n + t] = 1.0;
+        }
+    }
+    Batch {
+        src: ITensor::new(vec![b, m], src),
+        srclen: ITensor::new(vec![b], srclen),
+        tgt_in: ITensor::new(vec![b, n], tgt_in),
+        tgt_out: ITensor::new(vec![b, n], tgt_out),
+        tmask: Tensor::new(vec![b, n], tmask),
+    }
+}
+
+fn test_exp(e: &Engine) -> Experiment {
+    Experiment {
+        model: e.dims().clone(),
+        strategy: Strategy::Hybrid,
+        hw: HwConfig::default(),
+        train: TrainConfig {
+            seed: 3,
+            steps: 4,
+            eval_interval: 100,
+            decay_interval: 2,
+            ..Default::default()
+        },
+        data: DataConfig::wmt14_sim(600),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn pool(e: &Engine, n: usize) -> Vec<Batch> {
+    (0..n).map(|i| random_batch(e.dims(), 9000 + i as u64)).collect()
+}
+
+/// Fault-free single-process reference over the same stream.
+fn single_process(e: &Engine, pool: &[Batch], steps: usize, shards: usize) -> BTreeMap<String, Tensor> {
+    let exp = test_exp(e);
+    let mut tr = Trainer::new(e, &exp).unwrap();
+    tr.set_bucket_bytes(BUCKET);
+    tr.set_pipeline(shards, 1);
+    for s in 0..steps {
+        tr.train_step_micro(&pool[s * shards..(s + 1) * shards])
+            .unwrap_or_else(|err| panic!("reference {shards}-shard step {s}: {err:#}"));
+    }
+    tr.params().clone()
+}
+
+fn dist_spec(e: &Engine, mode: DistMode, steps: usize) -> RankSpec {
+    let mut s = RankSpec::new(test_exp(e), mode, 1, 1, steps);
+    s.bucket_bytes = Some(BUCKET);
+    s
+}
+
+fn fresh_store() -> Arc<FaultyMem> {
+    Arc::new(FaultyMem::new(FaultPlan::none()))
+}
+
+fn assert_params_bitwise(label: &str, a: &BTreeMap<String, Tensor>, b: &BTreeMap<String, Tensor>) {
+    assert_eq!(a.len(), b.len(), "{label}: param count");
+    for (name, x) in a {
+        let y = b.get(name).unwrap_or_else(|| panic!("{label}: missing `{name}`"));
+        assert_eq!(x.shape(), y.shape(), "{label}: `{name}` shape");
+        for (i, (u, v)) in x.data().iter().zip(y.data()).enumerate() {
+            assert!(
+                u.to_bits() == v.to_bits(),
+                "{label}: `{name}`[{i}] {u} != {v} (bitwise)"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------ soft kills
+
+/// A single soft kill of rank 1 under the fake-transport supervisor:
+/// exactly one restart, and every rank of the recovered world lands on
+/// the single-process bits. The recovery counters land in the
+/// process-wide Prometheus registry.
+#[test]
+fn fake_ps_soft_kill_recovers_bitwise() {
+    let e = engine();
+    let procs = 2;
+    let steps = 4;
+    let p = pool(&e, steps * procs);
+    let reference = single_process(&e, &p, steps, procs);
+    let mut specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Ps, steps)).collect();
+    specs[1].die_script = vec![ScheduledDeath { gen: 0, step: 2, hard: false }];
+    let run = run_supervised_world(
+        &e,
+        &specs,
+        WorldKind::Fake,
+        &CommOpts::fast(),
+        &SupervisorOpts::fast(3),
+        fresh_store(),
+        1,
+        &p,
+        vec![FaultScript::clean(); procs],
+    )
+    .unwrap_or_else(|err| panic!("supervised ps world: {err:#}"));
+    assert_eq!(run.recovery.restarts, 1, "one kill, one restart");
+    assert_eq!(run.recovery.failures.len(), 1);
+    assert!(
+        run.recovery.failures[0].1.contains("dist-die"),
+        "failure detail should name the kill: {}",
+        run.recovery.failures[0].1
+    );
+    assert_eq!(run.ranks.len(), procs);
+    for (r, rank) in run.ranks.iter().enumerate() {
+        assert_params_bitwise(&format!("recovered ps rank {r}"), &reference, &rank.params);
+    }
+    let prom = Registry::global().render();
+    for counter in ["dist_supervisor_restarts_total", "dist_supervisor_failures_total"] {
+        assert!(prom.contains(counter), "registry must export `{counter}`:\n{prom}");
+    }
+}
+
+/// Two kills across consecutive incarnations (rank 1 in gen 0, rank 0
+/// in gen 1) in replicated mode: two restarts, still bitwise — every
+/// incarnation resumes from the durable frontier and replays the same
+/// derived stream.
+#[test]
+fn fake_replicated_repeated_kills_recover_bitwise() {
+    let e = engine();
+    let procs = 2;
+    let steps = 4;
+    let p = pool(&e, steps * procs);
+    let reference = single_process(&e, &p, steps, procs);
+    let mut specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Replicated, steps)).collect();
+    specs[1].die_script = vec![ScheduledDeath { gen: 0, step: 2, hard: false }];
+    specs[0].die_script = vec![ScheduledDeath { gen: 1, step: 3, hard: false }];
+    let run = run_supervised_world(
+        &e,
+        &specs,
+        WorldKind::Fake,
+        &CommOpts::fast(),
+        &SupervisorOpts::fast(3),
+        fresh_store(),
+        1,
+        &p,
+        vec![FaultScript::clean(); procs],
+    )
+    .unwrap_or_else(|err| panic!("supervised replicated world: {err:#}"));
+    assert_eq!(run.recovery.restarts, 2, "two kills, two restarts");
+    for (r, rank) in run.ranks.iter().enumerate() {
+        assert_params_bitwise(
+            &format!("repeated-kill replicated rank {r}"),
+            &reference,
+            &rank.params,
+        );
+    }
+}
+
+/// The same single-kill drill over real loopback TCP, both collective
+/// modes: the relaunch rebinds a fresh rendezvous, resumes from the
+/// durable checkpoint, and lands on the reference bits.
+#[test]
+fn tcp_soft_kill_recovers_bitwise_both_modes() {
+    let e = engine();
+    let procs = 2;
+    let steps = 3;
+    for mode in [DistMode::Ps, DistMode::Replicated] {
+        let p = pool(&e, steps * procs);
+        let reference = single_process(&e, &p, steps, procs);
+        let mut specs: Vec<RankSpec> =
+            (0..procs).map(|_| dist_spec(&e, mode, steps)).collect();
+        specs[1].die_script = vec![ScheduledDeath { gen: 0, step: 2, hard: false }];
+        let run = run_supervised_world(
+            &e,
+            &specs,
+            WorldKind::Tcp,
+            &CommOpts::fast(),
+            &SupervisorOpts::fast(3),
+            fresh_store(),
+            1,
+            &p,
+            vec![FaultScript::clean(); procs],
+        )
+        .unwrap_or_else(|err| panic!("supervised tcp {mode:?} world: {err:#}"));
+        assert_eq!(run.recovery.restarts, 1, "{mode:?}: one kill, one restart");
+        for (r, rank) in run.ranks.iter().enumerate() {
+            assert_params_bitwise(&format!("tcp {mode:?} rank {r}"), &reference, &rank.params);
+        }
+    }
+}
+
+// ------------------------------------------------- poisoned links
+
+/// A rank that drops dead mid-send (no abort courtesy — the fake's
+/// `kill_at_send`) poisons its links; the supervisor must still
+/// classify the wreck, relaunch on clean transports, and recover to
+/// the reference bits.
+#[test]
+fn poisoned_link_death_recovers_bitwise() {
+    let e = engine();
+    let procs = 2;
+    let steps = 3;
+    let p = pool(&e, steps * procs);
+    let reference = single_process(&e, &p, steps, procs);
+    let specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Ps, steps)).collect();
+    let mut scripts = vec![FaultScript::clean(); procs];
+    scripts[1].kill_at_send = Some(2);
+    let t0 = Instant::now();
+    let run = run_supervised_world(
+        &e,
+        &specs,
+        WorldKind::Fake,
+        &CommOpts::fast(),
+        &SupervisorOpts::fast(3),
+        fresh_store(),
+        1,
+        &p,
+        scripts,
+    )
+    .unwrap_or_else(|err| panic!("supervised poisoned-link world: {err:#}"));
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "mid-send death must be detected and recovered promptly"
+    );
+    // Transport scripts apply to incarnation 0 only, so exactly one
+    // restart suffices.
+    assert_eq!(run.recovery.restarts, 1);
+    for (r, rank) in run.ranks.iter().enumerate() {
+        assert_params_bitwise(&format!("poisoned-link rank {r}"), &reference, &rank.params);
+    }
+}
+
+// ----------------------------------------------- budget exhaustion
+
+/// A rank that dies in every incarnation exhausts the restart budget:
+/// the caller gets a typed Permanent error naming the budget and the
+/// last failure — within seconds, never a hang.
+#[test]
+fn restart_budget_exhaustion_is_typed_and_fast() {
+    let e = engine();
+    let procs = 2;
+    let steps = 3;
+    let p = pool(&e, steps * procs);
+    let mut specs: Vec<RankSpec> =
+        (0..procs).map(|_| dist_spec(&e, DistMode::Ps, steps)).collect();
+    // Kill rank 1 before its first step of every incarnation the
+    // budget allows (gens 0..=2 for max_restarts = 2).
+    specs[1].die_script = (0..3)
+        .map(|gen| ScheduledDeath { gen, step: 1, hard: false })
+        .collect();
+    let t0 = Instant::now();
+    let err = run_supervised_world(
+        &e,
+        &specs,
+        WorldKind::Fake,
+        &CommOpts::fast(),
+        &SupervisorOpts::fast(2),
+        fresh_store(),
+        1,
+        &p,
+        vec![FaultScript::clean(); procs],
+    )
+    .expect_err("a rank dying every incarnation must exhaust the budget");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "budget exhaustion must resolve fast, not hang"
+    );
+    let d = err
+        .downcast_ref::<DistError>()
+        .unwrap_or_else(|| panic!("exhaustion must be a typed DistError: {err:#}"));
+    assert_eq!(d.kind, DistErrorKind::Permanent);
+    assert!(
+        d.msg.contains("restart budget exhausted"),
+        "error must name the budget: {}",
+        d.msg
+    );
+    assert!(
+        d.msg.contains("dist-die"),
+        "error must carry the last failure's detail: {}",
+        d.msg
+    );
+}

@@ -182,7 +182,7 @@ fn transient_faults_retry_to_a_clean_final_checkpoint() {
             torn_writes: vec![3],
             ..FaultPlan::none()
         }),
-        RetryPolicy::default(),
+        RetryPolicy::STORAGE,
     ));
     let mut tr = Trainer::new(&e, &exp).unwrap();
     tr.enable_async_checkpoint(store.clone(), 1);

@@ -189,6 +189,47 @@ fn queue_full_sheds_cleanly() {
     assert_eq!(stats.completed, 0);
 }
 
+/// Hardening: a panic inside a replica thread must surface as
+/// `run_server`'s typed error carrying the panic payload — a clean
+/// drain and a readable message, never a process abort (an unwinding
+/// scoped thread would otherwise take down the whole test binary) and
+/// never a hang.
+#[test]
+fn replica_panic_surfaces_as_typed_error_not_abort() {
+    let e = engine();
+    let d = e.dims().clone();
+    let params = random_params(&d, 21);
+    let bank = ParamBank::new();
+    let pool = random_srcs(&d, 4, 31);
+    let c = cfg(1, d.max_tgt);
+    let opts = ServeOptions {
+        replicas: 2,
+        queue_capacity: 64,
+        panic_replica_at: Some(1),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let err = run_server(&e, &params, &bank, false, &c, &opts, |h| {
+        for (i, s) in pool.iter().enumerate() {
+            // The injected panic may close submissions mid-burst; that
+            // shutdown race is exactly what the drain must tolerate.
+            let _ = h.submit(i as u64, s.clone());
+        }
+        Ok(())
+    })
+    .expect_err("an injected replica panic must fail the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("panicked"), "error must name the panic: {msg}");
+    assert!(
+        msg.contains("injected replica panic"),
+        "panic payload must survive into the typed error: {msg}"
+    );
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(60),
+        "a replica panic must drain promptly, not hang"
+    );
+}
+
 /// The serving benchmark artifact: `serve_table` must emit a
 /// `BENCH_serve.json` whose rows carry p50/p95/p99 latency, batch-fill
 /// ratio and sustained sentences/sec as finite numbers.

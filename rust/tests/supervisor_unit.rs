@@ -1,0 +1,173 @@
+//! Engine-free unit/property tests for the elastic-training plumbing:
+//! the shared backoff policy, heartbeat liveness math, generation
+//! filtering on the beacon channel, and the supervision loop's budget
+//! arithmetic. No artifacts, no model, no sockets — these must run
+//! anywhere `cargo test` runs.
+
+use std::time::{Duration, Instant};
+
+use hybridnmt::dist::supervisor::{from_hex, to_hex};
+use hybridnmt::dist::wire::{encode, Frame};
+use hybridnmt::dist::{
+    supervise, Backoff, DistError, DistErrorKind, FailureCause, HeartbeatMonitor, HeartbeatTx,
+    Incarnation, LivenessPolicy, SupervisorOpts,
+};
+
+// ------------------------------------------------------------ backoff
+
+/// The unified policy is deterministic in (attempt, u) and capped:
+/// delays never exceed `cap_ms` and never go below `base/2` jitter.
+#[test]
+fn backoff_is_deterministic_capped_and_monotone_in_u() {
+    let b = Backoff { max_attempts: 10, base_ms: 20.0, cap_ms: 160.0, seed: 7 };
+    for attempt in 0..10 {
+        let lo = b.delay_ms(attempt, 0.0);
+        let hi = b.delay_ms(attempt, 1.0);
+        assert_eq!(lo, b.delay_ms(attempt, 0.0), "deterministic");
+        assert!(lo <= hi, "jitter is monotone in u");
+        assert!(hi <= 160.0, "attempt {attempt}: {hi} over the cap");
+        assert!(lo >= 10.0, "attempt {attempt}: {lo} under base/2");
+    }
+    // Exponential until the cap bites: 20, 40, 80, 160, 160, ...
+    assert_eq!(b.delay_ms(0, 1.0), 20.0);
+    assert_eq!(b.delay_ms(1, 1.0), 40.0);
+    assert_eq!(b.delay_ms(2, 1.0), 80.0);
+    assert_eq!(b.delay_ms(3, 1.0), 160.0);
+    assert_eq!(b.delay_ms(9, 1.0), 160.0);
+}
+
+#[test]
+fn backoff_presets_are_sane() {
+    assert!(Backoff::COMM.max_attempts >= 1);
+    assert!(Backoff::STORAGE.max_attempts >= 1);
+    let i = Backoff::instant(5);
+    assert_eq!(i.max_attempts, 5);
+    assert_eq!(i.delay_ms(3, 1.0), 0.0, "instant policy never sleeps");
+}
+
+// ----------------------------------------------------------- liveness
+
+#[test]
+fn liveness_policy_counts_missed_beats() {
+    let p = LivenessPolicy::new(50, 4);
+    assert_eq!(p.deadline_ms(), 200);
+    assert_eq!(p.missed(49), 0);
+    assert_eq!(p.missed(50), 1);
+    assert_eq!(p.missed(199), 3);
+    assert!(!p.is_dead(199));
+    assert!(p.is_dead(200));
+}
+
+/// Beacon round-trip through the channel sink: what the monitor reads
+/// back is the rank/step it was given, silence past the deadline is
+/// reported per rank, and a beat resets the clock.
+#[test]
+fn heartbeat_channel_roundtrip_and_death_detection() {
+    let policy = LivenessPolicy::new(10, 2);
+    let mut m = HeartbeatMonitor::detached(2, 0, policy);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t0 = Instant::now();
+    HeartbeatTx::channel(tx.clone(), 0, 0).beat(3);
+    HeartbeatTx::channel(tx, 1, 0).beat(7);
+    for bytes in rx.try_iter() {
+        assert!(m.note_bytes(&bytes, t0).unwrap(), "fresh beats must be accepted");
+    }
+    assert!(m.has_beaten(0) && m.has_beaten(1));
+    assert_eq!(m.max_step(), 7);
+    assert!(m.dead_ranks(t0).is_empty(), "fresh beats: nobody dead");
+    let late = t0 + Duration::from_millis(policy.deadline_ms() + 1);
+    assert_eq!(m.dead_ranks(late), vec![0, 1], "silence kills both");
+}
+
+/// Generation filtering: a beacon from a dead incarnation is dropped
+/// (counted, not delivered), one from a *future* incarnation is a
+/// protocol error — the supervisor must never see time run backwards.
+#[test]
+fn stale_and_future_generation_beats_are_filtered() {
+    let mut m = HeartbeatMonitor::detached(1, 2, LivenessPolicy::new(10, 2));
+    let now = Instant::now();
+    let beat = |gen: u32, step: u64| encode(&Frame::heartbeat(0, step, gen));
+    assert!(!m.note_bytes(&beat(1, 5), now).unwrap(), "stale gen: dropped");
+    assert!(m.note_bytes(&beat(2, 6), now).unwrap(), "current gen: delivered");
+    let err = m.note_bytes(&beat(3, 7), now).unwrap_err();
+    assert_eq!(err.kind, DistErrorKind::Wire, "future gen is a protocol error");
+    assert_eq!(m.stale_beats(), 1);
+    assert_eq!(m.max_step(), 6, "stale step 5 and future step 7 must not count");
+    // Garbage and non-heartbeat frames are typed errors, not panics.
+    assert!(m.note_bytes(b"not a frame", now).is_err());
+    let oob = encode(&Frame::heartbeat(9, 1, 2));
+    assert_eq!(m.note_bytes(&oob, now).unwrap_err().kind, DistErrorKind::Config);
+}
+
+#[test]
+fn hex_roundtrip_and_rejection() {
+    let bytes = vec![0u8, 1, 0xab, 0xff, 42];
+    assert_eq!(from_hex(&to_hex(&bytes)).unwrap(), bytes);
+    assert!(from_hex("abc").is_none(), "odd length");
+    assert!(from_hex("zz").is_none(), "non-hex digits");
+    assert_eq!(from_hex("").unwrap(), Vec::<u8>::new());
+}
+
+// --------------------------------------------------------- supervise
+
+/// The budget loop: two failing incarnations then success → two
+/// restarts, failures recorded per generation, value returned.
+#[test]
+fn supervise_retries_until_done_and_accounts_failures() {
+    let sup = SupervisorOpts::fast(3);
+    let (v, stats) = supervise("unit", &sup, |gen| {
+        Ok(if gen < 2 {
+            Incarnation::Failed {
+                cause: FailureCause::RankDied { rank: 1 },
+                detail: format!("scripted failure in gen {gen}"),
+                lost_steps: 2,
+            }
+        } else {
+            Incarnation::Done(gen)
+        })
+    })
+    .unwrap();
+    assert_eq!(v, 2, "succeeded on the third incarnation");
+    assert_eq!(stats.restarts, 2);
+    assert_eq!(stats.lost_steps, 4);
+    assert_eq!(stats.failures.len(), 2);
+    assert!(stats.failures[1].1.contains("gen 1"));
+}
+
+/// Exhaustion: every incarnation fails → typed Permanent naming the
+/// budget and the last failure, promptly (instant backoff).
+#[test]
+fn supervise_exhaustion_is_typed_permanent_and_fast() {
+    let sup = SupervisorOpts::fast(2);
+    let t0 = Instant::now();
+    let mut launches = 0u32;
+    let err = supervise("unit", &sup, |_gen| {
+        launches += 1;
+        Ok(Incarnation::<()>::Failed {
+            cause: FailureCause::HeartbeatTimeout { rank: 0 },
+            detail: "silent".into(),
+            lost_steps: 0,
+        })
+    })
+    .unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(60), "exhaustion must not hang");
+    assert_eq!(launches, 3, "max_restarts 2 = 3 incarnations");
+    assert_eq!(err.kind, DistErrorKind::Permanent);
+    assert!(err.msg.contains("restart budget exhausted"), "{}", err.msg);
+    assert!(err.msg.contains("missed its heartbeat deadline"), "{}", err.msg);
+}
+
+/// An `Err` from the launcher (config/environment trouble, not a rank
+/// failure) propagates immediately without burning the budget.
+#[test]
+fn supervise_propagates_launch_errors_without_retrying() {
+    let sup = SupervisorOpts::fast(5);
+    let mut launches = 0u32;
+    let err = supervise("unit", &sup, |_gen| -> Result<Incarnation<()>, DistError> {
+        launches += 1;
+        Err(DistError::config("bad topology"))
+    })
+    .unwrap_err();
+    assert_eq!(launches, 1, "config errors must not be retried");
+    assert_eq!(err.kind, DistErrorKind::Config);
+}

@@ -85,22 +85,43 @@ if path.endswith("BENCH_train.json"):
     if not prefixes:
         raise SystemExit(f"{path}: no train rows")
     # Distributed rows (train-bench --dist) have their own fixed key
-    # shape: r<replicas>.dist<world>.<ps|replicated>. Anything else
-    # containing ".dist" is a malformed row, not a new convention.
-    dist_re = re.compile(r"^r\d+\.dist\d+\.(ps|replicated)$")
+    # shape: r<replicas>.dist<world>.<ps|replicated>, optionally with a
+    # .f16/.bf16 dtype suffix and/or a .chaos suffix (train-bench
+    # --chaos: the world ran under the elastic supervisor with scripted
+    # rank kills). Anything else containing ".dist" is a malformed row,
+    # not a new convention.
+    dist_re = re.compile(
+        r"^r\d+\.dist\d+\.(ps|replicated)(\.(f16|bf16))?(\.chaos)?$")
+    # Chaos rows must additionally price their recovery: relaunches
+    # performed, wall-clock added by failures + backoff, and optimizer
+    # steps of lost progress re-run after resume. A chaos row without
+    # them is a supervised run that stopped reporting what it cost.
+    chaos_required = ["restarts", "recovery_ms", "lost_steps"]
     for p in sorted(prefixes):
         if ".dist" in p and not dist_re.match(p):
             raise SystemExit(f"{path}: malformed dist row `{p}` "
-                             "(want r<R>.dist<N>.<ps|replicated>)")
-        missing = [s for s in required if f"{p}.{s}" not in data]
+                             "(want r<R>.dist<N>.<ps|replicated>"
+                             "[.<f16|bf16>][.chaos])")
+        if p.endswith(".chaos") and ".dist" not in p:
+            raise SystemExit(f"{path}: chaos row `{p}` outside a dist "
+                             "world (supervision is a dist feature)")
+        row_required = list(required)
+        if p.endswith(".chaos"):
+            row_required += chaos_required
+        missing = [s for s in row_required if f"{p}.{s}" not in data]
         if missing:
             raise SystemExit(f"{path}: row `{p}` missing {missing}")
         if data[f"{p}.precision"] not in (0, 1, 2):
             raise SystemExit(f"{path}: row `{p}` has precision "
                              f"{data[f'{p}.precision']} (want 0=f32, 1=f16, "
                              "2=bf16)")
+        if p.endswith(".chaos") and data[f"{p}.restarts"] < 0:
+            raise SystemExit(f"{path}: chaos row `{p}` has negative "
+                             "restarts")
     dist_rows = sum(1 for p in prefixes if ".dist" in p)
-    print(f"  {path}: train schema OK ({len(prefixes)} rows, {dist_rows} dist)")
+    chaos_rows = sum(1 for p in prefixes if p.endswith(".chaos"))
+    print(f"  {path}: train schema OK ({len(prefixes)} rows, "
+          f"{dist_rows} dist, {chaos_rows} chaos)")
 if path.endswith("BENCH_decode.json"):
     # Decode-bench rows: single.beam<B> (reference path),
     # batch<N>.devices<D>.beam<B> (f32 batched) and
@@ -198,6 +219,23 @@ if [ -e results/metrics.prom ]; then
     fi
 else
     echo "  (no results/metrics.prom yet — run serve-load --tenants or the tenant_serving tests)"
+fi
+
+echo "== Prometheus dump sanity (results/metrics_train.prom)"
+if [ -e results/metrics_train.prom ]; then
+    # Written by train-bench --chaos: the supervisor's recovery
+    # counters must survive into the dump alongside the per-rank
+    # training counters.
+    if python3 scripts/check_prom.py results/metrics_train.prom \
+        dist_supervisor_restarts_total dist_supervisor_failures_total \
+        dist_supervisor_recovery_ms dist_supervisor_lost_steps \
+        dist_steps_total; then
+        :
+    else
+        fail=1
+    fi
+else
+    echo "  (no results/metrics_train.prom yet — run train-bench --dist N --chaos)"
 fi
 
 if [ "$fail" != "0" ]; then
